@@ -1,0 +1,252 @@
+//! End-to-end driver: the paper's full computational-science workflow
+//! (§2.1) on a realistic scratch population, across BOTH deployments —
+//! the calibrated WAN simulation and the real-TCP protocol stack — with
+//! the AOT (PJRT) digest artifacts on the transfer path.
+//!
+//! Workflow: 1) develop code at home, 2) mount at the site and build it,
+//! 3) stage input data, 4) "run the simulation" (reads inputs, writes raw
+//! output into a *localized* dir), 5) analyze (scan outputs, write a
+//! summary), 6) summary lands back home, 7) raw output never crosses the
+//! WAN. Headline metrics are printed at each stage; EXPERIMENTS.md §E2E
+//! records a reference run.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example e2e_teragrid
+//! ```
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use xufs::auth::{Authenticator, KeyPair};
+use xufs::baselines::{Scp, Tgcp};
+use xufs::client::{OpenFlags, Vfs, XufsClient};
+use xufs::config::XufsConfig;
+use xufs::coordinator::net::{TcpLink, TcpServer};
+use xufs::coordinator::SimWorld;
+use xufs::homefs::FileStore;
+use xufs::metrics::{names, Metrics};
+use xufs::runtime::DigestEngine;
+use xufs::server::FileServer;
+use xufs::simnet::{RealClock, SimClock, VirtualTime, Wan};
+use xufs::util::stats;
+use xufs::util::Rng;
+use xufs::vdisk::DiskModel;
+use xufs::workload::{buildtree, largefile, sizedist};
+
+const MIB: u64 = 1 << 20;
+
+fn main() {
+    println!("=== XUFS end-to-end: TeraGrid workflow ===\n");
+    phase_sim();
+    phase_tcp();
+    println!("\n=== e2e complete ===");
+}
+
+/// Phase 1: the full workflow on the calibrated WAN model (simulated
+/// seconds match the paper's testbed scale).
+fn phase_sim() {
+    println!("--- phase 1: simulated 32 ms / 30 Gbps WAN (virtual time) ---");
+    let mut cfg = XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() };
+    cfg.cache.localized_dirs = vec!["/home/sci/runs".into()];
+    let mut world = SimWorld::new(cfg.clone());
+    println!(
+        "digest engine: {}",
+        if world.engine.is_pjrt() { "PJRT (AOT artifacts)" } else { "native fallback" }
+    );
+
+    // 1) develop at home: the source tree + input data live on the laptop
+    let spec = buildtree::BuildSpec::default();
+    world.home(|s| {
+        buildtree::generate_tree(s.home_mut(), "/home/sci/code", &spec, 7).unwrap();
+        let input = largefile::text_content(64 << 20, 96, 11);
+        s.home_mut().mkdir_p("/home/sci/data", VirtualTime::ZERO).unwrap();
+        s.home_mut().write("/home/sci/data/input.dat", &input, VirtualTime::ZERO).unwrap();
+    });
+
+    // 2) mount at the site and build
+    let mut c = world.mount("/home/sci").expect("mount");
+    let t0 = c.now();
+    let build = buildtree::build(&mut c, "/home/sci/code", &spec).unwrap();
+    println!(
+        "build      : {} sources compiled in {:.1}s (prefetched {} small files)",
+        build.sources_compiled,
+        build.secs,
+        c.metrics().counter(names::PREFETCH_FILES)
+    );
+
+    // 3) stage input: first read pulls it into cache space, striped
+    let t1 = c.now();
+    let n = c.scan_file("/home/sci/data/input.dat", MIB as usize).unwrap();
+    println!(
+        "stage input: {} in {:.1}s (striped cold fetch)",
+        stats::human_bytes(n),
+        c.now().saturating_sub(t1).as_secs()
+    );
+
+    // 4) the "simulation": re-reads input (cache-local), writes raw
+    //    output into the localized dir — it must never cross the WAN
+    let t2 = c.now();
+    let mut rng = Rng::new(13);
+    c.scan_file("/home/sci/data/input.dat", MIB as usize).unwrap();
+    let mut raw = vec![0u8; (128 << 20) as usize];
+    rng.fill_bytes(&mut raw);
+    c.write_file("/home/sci/runs/raw_000.bin", &raw, MIB as usize).unwrap();
+    println!(
+        "simulate   : read input warm + wrote {} raw output in {:.1}s (localized)",
+        stats::human_bytes(raw.len() as u64),
+        c.now().saturating_sub(t2).as_secs()
+    );
+
+    // 5) analysis: scan the raw output locally, write a small summary
+    let t3 = c.now();
+    let (lines, _) = largefile::wc_l(&mut c, "/home/sci/runs/raw_000.bin", MIB as usize).unwrap();
+    let summary = format!("raw lines: {lines}\nenergy: -42.7\n");
+    c.write_file("/home/sci/data/summary.txt", summary.as_bytes(), 4096).unwrap();
+    println!("analyze    : scanned raw output + wrote summary in {:.1}s", c.now().saturating_sub(t3).as_secs());
+
+    // 6) the summary landed at home; 7) the raw output did not
+    let (summary_home, raw_home) = world.home(|s| {
+        (
+            s.home().exists("/home/sci/data/summary.txt"),
+            s.home().exists("/home/sci/runs/raw_000.bin"),
+        )
+    });
+    assert!(summary_home && !raw_home);
+    println!("result     : summary at home: {summary_home}; raw at home: {raw_home} (correct)");
+
+    let wan = world.wan.stats();
+    println!(
+        "WAN totals : {} moved, {} rpcs; workflow wall (virtual): {:.1}s",
+        stats::human_bytes(wan.bytes),
+        wan.rpcs,
+        c.now().saturating_sub(t0).as_secs()
+    );
+
+    // what the pre-XUFS workflow would have cost: SCP the inputs + code
+    // down and the summary back
+    let clock = Arc::new(SimClock::new());
+    let wan2 = Arc::new(Wan::new(cfg.wan.clone(), (*clock).clone()));
+    let scp = Scp::new(wan2.clone(), clock.clone(), DiskModel::new(cfg.disk.cache_bps, cfg.disk.cache_op_s), XufsConfig::scp_cipher_bps());
+    let scp_secs = scp.copy(64 << 20);
+    let tgcp = Tgcp::new(wan2, clock, DiskModel::new(cfg.disk.cache_bps, cfg.disk.cache_op_s), cfg.stripe.clone());
+    let tgcp_secs = tgcp.copy(64 << 20);
+    println!("baseline   : staging the 64 MiB input alone = {scp_secs:.0}s via SCP, {tgcp_secs:.1}s via TGCP");
+
+    // Table-1-shaped scratch population sanity: the site sees the paper's
+    // byte skew (big files dominate bytes)
+    let sizes = sizedist::generate_sizes(&sizedist::SizeDistParams { scale: 0.0005 }, 3);
+    let census = sizedist::census(&sizes);
+    let m1 = &census.rows[5];
+    println!(
+        "population : {} files, {:.1} GB generated; >1M files carry {:.1}% of bytes (paper: 98.5%)",
+        census.total_files, census.total_gb, m1.byte_pct
+    );
+}
+
+/// Phase 2: the identical client/server logic over real TCP sockets —
+/// USSH handshake, striped range fetches, push callbacks, crash recovery —
+/// with real wall-clock latency/throughput numbers.
+fn phase_tcp() {
+    println!("\n--- phase 2: real TCP on localhost (wall-clock) ---");
+    let metrics = Metrics::new();
+    let engine = Arc::new(
+        DigestEngine::from_artifacts("artifacts", metrics.clone())
+            .unwrap_or_else(|_| DigestEngine::native(metrics.clone())),
+    );
+    let mut rng = Rng::new(99);
+    let pair = KeyPair::generate(&mut rng, VirtualTime::ZERO, 3600.0);
+
+    // the user's personal file server
+    let mut home = FileStore::default();
+    home.mkdir_p("/home/sci", VirtualTime::ZERO).unwrap();
+    let mut payload = vec![0u8; (32 * MIB) as usize];
+    rng.fill_bytes(&mut payload);
+    home.write("/home/sci/big.bin", &payload, VirtualTime::ZERO).unwrap();
+    for i in 0..20 {
+        home.write(&format!("/home/sci/small{i:02}.txt"), format!("note {i}\n").as_bytes(), VirtualTime::ZERO)
+            .unwrap();
+    }
+    let server = Arc::new(Mutex::new(FileServer::new(
+        home,
+        DiskModel::new(1e12, 0.0), // real I/O is real; no modeled delay
+        engine.clone(),
+        64 * 1024,
+        30.0,
+        metrics.clone(),
+    )));
+    let auth = Arc::new(Mutex::new(Authenticator::new(pair.clone(), 5)));
+    let tcp = TcpServer::spawn(server.clone(), auth, metrics.clone()).expect("bind");
+    println!("server     : listening on {}", tcp.addr);
+
+    let cfg = XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() };
+    let link = TcpLink::connect(tcp.addr, pair.clone(), cfg.clone(), 1, "/home/sci", metrics.clone())
+        .expect("connect");
+    let clock = Arc::new(RealClock::new());
+    let mut client = XufsClient::new(link, cfg.clone(), engine.clone(), clock, "/home/sci", metrics.clone());
+
+    // striped fetch throughput (12 real connections)
+    let w0 = Instant::now();
+    let n = client.scan_file("/home/sci/big.bin", MIB as usize).unwrap();
+    let cold = w0.elapsed().as_secs_f64();
+    println!(
+        "cold fetch : {} over {} stripes in {:.3}s  ({:.0} MiB/s, digest-verified)",
+        stats::human_bytes(n),
+        cfg.stripe.max_stripes,
+        cold,
+        stats::mib_per_sec(n, cold)
+    );
+    let w1 = Instant::now();
+    client.scan_file("/home/sci/big.bin", MIB as usize).unwrap();
+    println!("warm read  : {:.3}s (cache-local)", w1.elapsed().as_secs_f64());
+
+    // small-op latency distribution over the real socket
+    let mut lat = Vec::new();
+    for i in 0..20 {
+        let w = Instant::now();
+        client.scan_file(&format!("/home/sci/small{i:02}.txt"), 4096).unwrap();
+        lat.push(w.elapsed().as_secs_f64() * 1e3);
+    }
+    println!(
+        "small files: 20 fetched; latency p50 {:.2} ms, p99 {:.2} ms",
+        stats::percentile(&lat, 50.0),
+        stats::percentile(&lat, 99.0)
+    );
+
+    // write-back over the real protocol + cross-check at the server
+    client.write_file("/home/sci/from_site.txt", b"written via TCP link", 4096).unwrap();
+    let ok = server.lock().unwrap().home().read("/home/sci/from_site.txt").unwrap() == b"written via TCP link";
+    println!("writeback  : applied at the server over TCP: {ok}");
+
+    // push-mode callback: a home-side edit invalidates the cached copy
+    server
+        .lock()
+        .unwrap()
+        .local_write("/home/sci/small00.txt", b"changed under you\n", VirtualTime::from_secs(1.0))
+        .unwrap();
+    std::thread::sleep(std::time::Duration::from_millis(100)); // callback pump
+    let fd = client.open("/home/sci/small00.txt", OpenFlags::rdonly()).unwrap();
+    let fresh = client.read(fd, 64).unwrap();
+    client.close(fd).unwrap();
+    println!(
+        "callback   : push invalidation delivered; reopen sees {:?}",
+        String::from_utf8_lossy(&fresh).trim()
+    );
+
+    // crash recovery over TCP: queue ops offline-style, recover, replay
+    let snapshot = client.cache_store_snapshot();
+    drop(client);
+    let link2 = TcpLink::connect(tcp.addr, pair, cfg.clone(), 2, "/home/sci", metrics.clone()).unwrap();
+    let (c2, corrupt) = XufsClient::recover(
+        link2,
+        cfg,
+        engine,
+        Arc::new(RealClock::new()),
+        "/home/sci",
+        snapshot,
+        metrics.clone(),
+    );
+    println!("recovery   : client rebuilt from cache space (corrupt entries: {corrupt}, queue: {})", c2.queue_len());
+    drop(c2);
+
+    println!("metrics    : {}", metrics.to_json());
+}

@@ -1,0 +1,111 @@
+"""AOT compile path: lower the L2 graphs to HLO text for the rust runtime.
+
+Run once by ``make artifacts``::
+
+    cd python && python -m compile.aot --out ../artifacts/model.hlo.txt
+
+Emits one HLO text file per (kind, B, N, stripes) variant plus a
+``manifest.json`` the rust runtime uses to pick the right artifact for a
+transfer's block geometry.
+
+Interchange format is **HLO text**, NOT ``serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate links) rejects with
+``proto.id() <= INT_MAX``. The text parser reassigns ids and round-trips
+cleanly — see /opt/xla-example/README.md and gen_hlo.py.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.ref import make_weights  # noqa: F401  (re-exported for tests)
+
+# Block geometry variants shipped to the rust runtime. N is int32 lanes per
+# block: 16384 lanes = 64 KiB, the paper's stripe block size. B is blocks per
+# plan invocation; the rust side loops whole files through the largest
+# variant that fits and finishes the tail with the small one.
+VARIANTS = [
+    # (kind, B, N, stripes)
+    ("plan", 64, 16384, 12),
+    ("plan", 16, 16384, 12),
+    ("plan", 16, 1024, 12),   # 4 KiB blocks: metadata/small-file delta path
+    ("digest", 64, 16384, 0),
+    ("digest", 16, 16384, 0),
+    ("digest", 16, 1024, 0),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_variant(kind: str, b: int, n: int, stripes: int) -> str:
+    i32 = jnp.int32
+    blocks = jax.ShapeDtypeStruct((b, n), i32)
+    weights = jax.ShapeDtypeStruct((n,), i32)
+    if kind == "plan":
+        old = jax.ShapeDtypeStruct((b,), i32)
+        bbytes = jax.ShapeDtypeStruct((b,), i32)
+        fn = functools.partial(model.transfer_plan, num_stripes=stripes)
+        lowered = jax.jit(fn).lower(blocks, old, weights, bbytes)
+    elif kind == "digest":
+        lowered = jax.jit(model.digest_only).lower(blocks, weights)
+    else:
+        raise ValueError(f"unknown kind {kind!r}")
+    return to_hlo_text(lowered)
+
+
+def variant_name(kind: str, b: int, n: int, stripes: int) -> str:
+    return f"{kind}_{b}x{n}" + (f"_s{stripes}" if kind == "plan" else "")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/model.hlo.txt",
+                    help="path of the default artifact; variants + manifest "
+                         "are written next to it")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = {"digest_base": 1_000_003, "variants": []}
+    default_text = None
+    for kind, b, n, stripes in VARIANTS:
+        name = variant_name(kind, b, n, stripes)
+        text = lower_variant(kind, b, n, stripes)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["variants"].append({
+            "name": name, "file": f"{name}.hlo.txt", "kind": kind,
+            "blocks": b, "lanes": n, "stripes": stripes,
+        })
+        print(f"wrote {path} ({len(text)} chars)")
+        if default_text is None:
+            default_text = text
+
+    # The Makefile's stamp artifact: the largest plan variant.
+    with open(args.out, "w") as f:
+        f.write(default_text)
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out} and manifest.json ({len(manifest['variants'])} variants)")
+
+
+if __name__ == "__main__":
+    main()

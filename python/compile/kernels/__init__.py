@@ -1,0 +1,1 @@
+from . import checksum, ref  # noqa: F401

@@ -1,0 +1,119 @@
+"""Layer-1 Pallas kernels for the XUFS transfer data plane.
+
+Two kernels:
+
+* ``block_digest`` — per-block weighted polynomial checksum over int32 lanes,
+  tiled along the block axis with ``BlockSpec`` so each grid step streams one
+  ``(BLOCK_B, N)`` tile HBM->VMEM, does a broadcast-multiply + lane reduction
+  on the VPU, and writes ``BLOCK_B`` digests back.
+* ``dirty_mask`` — elementwise digest compare producing the 0/1 dirty vector.
+
+TPU adaptation notes (DESIGN.md §Hardware-Adaptation): this is
+reduction/elementwise work, so the target unit is the VPU, not the MXU; the
+tiling choice is therefore about VMEM residency of the block tile, not MXU
+systolic shape. VMEM per grid step = BLOCK_B*N*4 B (tile) + N*4 B (weights)
++ BLOCK_B*4 B (digests) — kept around ~2 MiB.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO which both jax-CPU (tests)
+and the rust PJRT client (runtime) execute. Structure, not interpret-mode
+wallclock, is what we optimize (see EXPERIMENTS.md §Perf L1).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import MIX_MUL
+
+# Default block-axis tile. 128 blocks x 4096 lanes x 4 B = 2 MiB per tile:
+# fits VMEM (~16 MiB) with headroom for double-buffering the HBM stream.
+DEFAULT_BLOCK_B = 128
+
+
+def _digest_kernel(blocks_ref, weights_ref, out_ref):
+    """One grid step: digest BLOCK_B blocks resident in VMEM.
+
+    blocks_ref : int32[BLOCK_B, N] tile in VMEM
+    weights_ref: int32[N]          (same for every step; pallas keeps it hot)
+    out_ref    : int32[BLOCK_B]
+    """
+    tile = blocks_ref[...]
+    w = weights_ref[...]
+    # Broadcast multiply + lane-axis reduction: VPU multiply-accumulate.
+    raw = jnp.sum(tile * w[None, :], axis=1, dtype=jnp.int32)
+    mixed = raw * jnp.int32(MIX_MUL)
+    mixed = mixed ^ jnp.right_shift(mixed, 15)
+    out_ref[...] = mixed.astype(jnp.int32)
+
+
+def block_digest(blocks: jnp.ndarray, weights: jnp.ndarray,
+                 block_b: int | None = None) -> jnp.ndarray:
+    """Pallas per-block digest. blocks int32[B, N], weights int32[N] -> int32[B].
+
+    ``block_b`` overrides the block-axis tile (must divide B); the default is
+    min(B, DEFAULT_BLOCK_B).
+    """
+    b, n = blocks.shape
+    assert weights.shape == (n,), (weights.shape, n)
+    if block_b is None:
+        block_b = min(b, DEFAULT_BLOCK_B)
+    if b % block_b != 0:
+        # Fall back to a single tile for ragged small inputs; callers on the
+        # hot path always pass power-of-two B.
+        block_b = b
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _digest_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(blocks, weights)
+
+
+def _dirty_kernel(new_ref, old_ref, out_ref):
+    out_ref[...] = (new_ref[...] != old_ref[...]).astype(jnp.int32)
+
+
+def dirty_mask(digests: jnp.ndarray, old_digests: jnp.ndarray) -> jnp.ndarray:
+    """Pallas elementwise digest compare. int32[B] x int32[B] -> int32[B]."""
+    (b,) = digests.shape
+    assert old_digests.shape == (b,)
+    return pl.pallas_call(
+        _dirty_kernel,
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=True,
+    )(digests, old_digests)
+
+
+@functools.lru_cache(maxsize=None)
+def vmem_estimate(block_b: int, n: int) -> dict:
+    """Static VMEM/roofline estimate for a digest tile (DESIGN.md §Perf L1).
+
+    Not a measurement — interpret mode runs on CPU numpy — but the number the
+    design is sized against: tile + weights + digests resident per grid step.
+    """
+    tile = block_b * n * 4
+    weights = n * 4
+    out = block_b * 4
+    total = tile + weights + out
+    # VPU work: 1 multiply + 1 add per lane (MAC), plus O(B) finalization.
+    macs = block_b * n
+    # HBM traffic: the tile is read once; weights stay resident.
+    hbm_bytes = tile + out
+    return {
+        "vmem_bytes": total,
+        "vmem_frac_of_16mib": total / (16 * 1024 * 1024),
+        "macs_per_step": macs,
+        "hbm_bytes_per_step": hbm_bytes,
+        "arith_intensity_macs_per_byte": macs / hbm_bytes,
+    }

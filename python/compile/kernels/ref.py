@@ -1,0 +1,95 @@
+"""Pure-jnp reference oracles for the XUFS data-plane kernels.
+
+These are the CORE correctness signal for the Pallas kernels in
+``checksum.py``: pytest (``python/tests/``) asserts bit-exact agreement
+between the Pallas implementations and these references across shapes and
+dtypes (hypothesis-driven sweeps).
+
+All digest arithmetic is wrapping int32 — XLA integer ops wrap on overflow,
+which matches the Rust native fallback (``rust/src/runtime/native.rs``)
+bit-for-bit. That bit-exactness is itself asserted by shared test vectors
+(see ``python/tests/test_vectors.py`` and rust ``runtime::native`` tests).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+# Polynomial base for the weighted block digest. Chosen odd (invertible mod
+# 2^32) so the weight sequence w^i never collapses to 0 and single-lane
+# corruptions always flip the digest.
+DIGEST_BASE = 1_000_003
+
+# Finalization multiplier (0x9E3779B9 — golden-ratio avalanche constant —
+# as a signed int32, since XLA int32 lanes are signed).
+MIX_MUL = -1_640_531_527
+
+
+def make_weights(n: int, base: int = DIGEST_BASE) -> np.ndarray:
+    """w[i] = base**i (mod 2**32), viewed as int32.
+
+    Precomputed host-side (numpy uint64 loop) and fed to the kernel as an
+    operand: computing w^i inside the kernel would serialize the lane
+    dimension; as an operand it is a broadcast multiply.
+    """
+    w = np.empty((n,), dtype=np.uint32)
+    acc = np.uint64(1)
+    b = np.uint64(base)
+    mask = np.uint64(0xFFFFFFFF)
+    for i in range(n):
+        w[i] = np.uint32(acc & mask)
+        acc = (acc * b) & mask
+    return w.view(np.int32)
+
+
+def block_digest_ref(blocks: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Reference digest: d[j] = mix(sum_i blocks[j, i] * w[i]).
+
+    blocks : int32[B, N]   (file content widened to int32 lanes)
+    weights: int32[N]
+    returns: int32[B]
+    """
+    raw = jnp.sum(blocks * weights[None, :], axis=1, dtype=jnp.int32)
+    # Finalization: one multiplicative avalanche round + xor-shift-right, all
+    # in wrapping int32. Keeps near-identical blocks from yielding
+    # near-identical digests (matters for the dirty-mask compare downstream).
+    mixed = raw * jnp.int32(MIX_MUL)
+    # arithmetic shift (signed) — mirrored exactly by the rust fallback
+    mixed = mixed ^ jnp.right_shift(mixed, 15)
+    return mixed.astype(jnp.int32)
+
+
+def dirty_mask_ref(digests: jnp.ndarray, old_digests: jnp.ndarray) -> jnp.ndarray:
+    """dirty[j] = 1 iff the block's digest differs from the cached digest."""
+    return (digests != old_digests).astype(jnp.int32)
+
+
+def stripe_plan_ref(dirty: jnp.ndarray, block_bytes: jnp.ndarray, num_stripes: int) -> jnp.ndarray:
+    """Balanced stripe assignment over dirty blocks.
+
+    Blocks are assigned to stripes by the running prefix of dirty bytes so
+    each stripe carries ~equal payload. Clean blocks get stripe -1 (not
+    shipped). Deterministic and branch-free (cumsum + integer divide) so it
+    lowers into the same fused HLO module as the digest kernel.
+
+    dirty       : int32[B] (0/1)
+    block_bytes : int32[B] bytes in each block (last block may be short)
+    returns     : int32[B] stripe index in [0, num_stripes) or -1
+    """
+    payload = dirty * block_bytes
+    total = jnp.sum(payload)
+    # prefix sum of payload *before* each block
+    before = jnp.cumsum(payload) - payload
+    # ceil-divide total into num_stripes equal spans; guard total == 0
+    span = jnp.maximum((total + num_stripes - 1) // num_stripes, 1)
+    stripe = jnp.minimum(before // span, num_stripes - 1).astype(jnp.int32)
+    return jnp.where(dirty == 1, stripe, jnp.int32(-1))
+
+
+def transfer_plan_ref(blocks, old_digests, weights, block_bytes, num_stripes: int):
+    """Full reference pipeline (digest -> dirty -> stripe plan)."""
+    d = block_digest_ref(blocks, weights)
+    dirty = dirty_mask_ref(d, old_digests)
+    plan = stripe_plan_ref(dirty, block_bytes, num_stripes)
+    return d, dirty, plan

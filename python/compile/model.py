@@ -1,0 +1,58 @@
+"""Layer-2 JAX model: the XUFS transfer-plan compute graph.
+
+``transfer_plan`` is the function the rust coordinator executes on the hot
+path (via its AOT-compiled HLO artifact): given the int32 lanes of a file's
+blocks, the digests cached from the last sync, and the digest weights, it
+returns
+
+  digests   int32[B] — fresh per-block integrity digests (L1 Pallas kernel)
+  dirty     int32[B] — 1 where the block changed since the cached digest
+  stripe_id int32[B] — balanced stripe assignment for dirty blocks, -1 clean
+
+The stripe planning stays in plain jnp (cumsum + divide): it is O(B) scalar
+work that XLA fuses with the dirty-mask; putting it in Pallas would buy
+nothing and cost a second kernel launch.
+
+Everything here runs at build time only — ``aot.py`` lowers ``transfer_plan``
+once per (B, N, num_stripes) variant to HLO text in ``artifacts/``.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels import checksum
+
+
+def transfer_plan(blocks: jnp.ndarray,
+                  old_digests: jnp.ndarray,
+                  weights: jnp.ndarray,
+                  block_bytes: jnp.ndarray,
+                  *,
+                  num_stripes: int = 12):
+    """Digest -> dirty -> balanced stripe plan. See module docstring.
+
+    blocks      : int32[B, N]
+    old_digests : int32[B]
+    weights     : int32[N]  (make_weights(N); constant per block geometry)
+    block_bytes : int32[B]  actual bytes per block (last block may be short)
+    """
+    digests = checksum.block_digest(blocks, weights)
+    dirty = checksum.dirty_mask(digests, old_digests)
+
+    payload = dirty * block_bytes
+    total = jnp.sum(payload)
+    before = jnp.cumsum(payload) - payload
+    span = jnp.maximum((total + num_stripes - 1) // num_stripes, 1)
+    stripe = jnp.minimum(before // span, num_stripes - 1).astype(jnp.int32)
+    stripe_id = jnp.where(dirty == 1, stripe, jnp.int32(-1))
+    return digests, dirty, stripe_id
+
+
+def digest_only(blocks: jnp.ndarray, weights: jnp.ndarray):
+    """Digest-only variant: integrity verification of a fetched file.
+
+    Used by the rust transfer engine to verify striped fetches (no cached
+    digests exist yet, so there is no dirty/stripe stage to fuse).
+    """
+    return (checksum.block_digest(blocks, weights),)

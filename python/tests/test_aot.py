@@ -1,0 +1,77 @@
+"""AOT lowering: HLO text artifacts have the expected interface contract.
+
+The rust runtime parses these artifacts with xla_extension 0.5.1's HLO text
+parser; these tests pin the properties that contract depends on (parameter
+count/order, ENTRY signature, int32 shapes, tuple result) without needing
+the rust toolchain.
+"""
+
+import json
+import re
+
+import pytest
+
+from compile import aot
+
+
+@pytest.fixture(scope="module")
+def plan_hlo():
+    return aot.lower_variant("plan", 16, 1024, 12)
+
+
+@pytest.fixture(scope="module")
+def digest_hlo():
+    return aot.lower_variant("digest", 16, 1024, 0)
+
+
+def entry_line(hlo: str) -> str:
+    """The entry_computation_layout on the HloModule header line carries the
+    signature (the ENTRY line itself is just a name)."""
+    first = hlo.splitlines()[0]
+    assert first.startswith("HloModule") and "entry_computation_layout" in first
+    return first
+
+
+def test_plan_entry_signature(plan_hlo):
+    line = entry_line(plan_hlo)
+    # 4 params: blocks[16,1024], old[16], weights[1024], block_bytes[16]
+    assert "s32[16,1024]" in line
+    assert line.count("s32[16]") >= 2
+    assert "s32[1024]" in line
+    # tuple of 3 results
+    assert re.search(r"->\s*\(s32\[16\].*s32\[16\].*s32\[16\]", line), line
+
+
+def test_digest_entry_signature(digest_hlo):
+    line = entry_line(digest_hlo)
+    assert "s32[16,1024]" in line and "s32[1024]" in line
+    assert re.search(r"->\s*\(s32\[16\]", line), line
+
+
+def test_no_custom_calls(plan_hlo, digest_hlo):
+    """interpret=True must lower to plain HLO — a Mosaic custom-call would
+    be unexecutable on the CPU PJRT client the rust runtime uses."""
+    for hlo in (plan_hlo, digest_hlo):
+        assert "custom-call" not in hlo, "found custom-call in lowered HLO"
+
+
+def test_variant_names_unique():
+    names = [aot.variant_name(*v) for v in aot.VARIANTS]
+    assert len(names) == len(set(names))
+
+
+def test_manifest_roundtrip(tmp_path):
+    """End-to-end: main() writes parseable artifacts + manifest."""
+    import sys
+    from unittest import mock
+    out = tmp_path / "model.hlo.txt"
+    argv = ["aot", "--out", str(out)]
+    with mock.patch.object(sys, "argv", argv):
+        aot.main()
+    manifest = json.loads((tmp_path / "manifest.json").read_text())
+    assert manifest["digest_base"] == 1_000_003
+    assert len(manifest["variants"]) == len(aot.VARIANTS)
+    for v in manifest["variants"]:
+        text = (tmp_path / v["file"]).read_text()
+        assert text.startswith("HloModule"), v["file"]
+        assert out.exists()

@@ -1,0 +1,110 @@
+"""Pallas kernel vs pure-jnp reference: the core L1 correctness signal.
+
+Hypothesis sweeps shapes and contents; every comparison is bit-exact
+(integer arithmetic — no tolerance).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import checksum, ref
+
+
+def rand_blocks(rng: np.random.Generator, b: int, n: int) -> np.ndarray:
+    return rng.integers(-(2**31), 2**31, size=(b, n), dtype=np.int64).astype(np.int32)
+
+
+@pytest.mark.parametrize("b,n", [(1, 1), (1, 128), (4, 64), (16, 1024),
+                                 (64, 256), (128, 32), (3, 17), (7, 129)])
+def test_digest_matches_ref(b, n):
+    rng = np.random.default_rng(b * 1000 + n)
+    blocks = rand_blocks(rng, b, n)
+    w = ref.make_weights(n)
+    got = checksum.block_digest(jnp.asarray(blocks), jnp.asarray(w))
+    want = ref.block_digest_ref(jnp.asarray(blocks), jnp.asarray(w))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(b=st.integers(1, 48), n=st.integers(1, 300), seed=st.integers(0, 2**31 - 1))
+def test_digest_matches_ref_hypothesis(b, n, seed):
+    rng = np.random.default_rng(seed)
+    blocks = rand_blocks(rng, b, n)
+    w = ref.make_weights(n)
+    got = checksum.block_digest(jnp.asarray(blocks), jnp.asarray(w))
+    want = ref.block_digest_ref(jnp.asarray(blocks), jnp.asarray(w))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 64), seed=st.integers(0, 2**31 - 1))
+def test_dirty_mask_matches_ref(b, seed):
+    rng = np.random.default_rng(seed)
+    new = rng.integers(-(2**31), 2**31, size=(b,), dtype=np.int64).astype(np.int32)
+    old = new.copy()
+    flip = rng.random(b) < 0.3
+    old[flip] ^= 1
+    got = checksum.dirty_mask(jnp.asarray(new), jnp.asarray(old))
+    want = ref.dirty_mask_ref(jnp.asarray(new), jnp.asarray(old))
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+    np.testing.assert_array_equal(np.array(got), flip.astype(np.int32))
+
+
+def test_digest_sensitive_to_single_lane():
+    """Flipping any single lane must flip the block digest (integrity)."""
+    rng = np.random.default_rng(7)
+    b, n = 4, 64
+    blocks = rand_blocks(rng, b, n)
+    w = ref.make_weights(n)
+    base = np.array(checksum.block_digest(jnp.asarray(blocks), jnp.asarray(w)))
+    for _ in range(20):
+        j = rng.integers(0, b)
+        i = rng.integers(0, n)
+        mutated = blocks.copy()
+        mutated[j, i] ^= np.int32(1 << int(rng.integers(0, 31)))
+        d = np.array(checksum.block_digest(jnp.asarray(mutated), jnp.asarray(w)))
+        assert d[j] != base[j], f"digest missed corruption at ({j},{i})"
+        # other blocks unaffected
+        others = np.arange(b) != j
+        np.testing.assert_array_equal(d[others], base[others])
+
+
+def test_digest_order_sensitive():
+    """Swapping two lanes must change the digest (positional weights)."""
+    n = 16
+    w = ref.make_weights(n)
+    a = np.arange(1, n + 1, dtype=np.int32)[None, :]
+    swapped = a.copy()
+    swapped[0, 0], swapped[0, 5] = swapped[0, 5], swapped[0, 0]
+    d0 = np.array(checksum.block_digest(jnp.asarray(a), jnp.asarray(w)))
+    d1 = np.array(checksum.block_digest(jnp.asarray(swapped), jnp.asarray(w)))
+    assert d0[0] != d1[0]
+
+
+@pytest.mark.parametrize("block_b", [1, 2, 4, 8])
+def test_digest_tiling_invariant(block_b):
+    """Result must not depend on the BlockSpec tile size."""
+    rng = np.random.default_rng(99)
+    b, n = 8, 128
+    blocks = rand_blocks(rng, b, n)
+    w = ref.make_weights(n)
+    want = ref.block_digest_ref(jnp.asarray(blocks), jnp.asarray(w))
+    got = checksum.block_digest(jnp.asarray(blocks), jnp.asarray(w), block_b=block_b)
+    np.testing.assert_array_equal(np.array(got), np.array(want))
+
+
+def test_weights_deterministic_and_nonzero():
+    w = ref.make_weights(4096)
+    w2 = ref.make_weights(4096)
+    np.testing.assert_array_equal(w, w2)
+    assert w[0] == 1
+    # odd base => all weights odd => never zero
+    assert (np.array(w, dtype=np.int64) % 2 == 1).all()
+
+
+def test_vmem_estimate_within_budget():
+    est = checksum.vmem_estimate(checksum.DEFAULT_BLOCK_B, 16384)
+    assert est["vmem_bytes"] < 16 * 1024 * 1024 * 0.6, est
+    assert est["arith_intensity_macs_per_byte"] > 0.2

@@ -1,0 +1,109 @@
+"""L2 transfer-plan graph: shape contracts and stripe-plan invariants."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import ref
+
+
+def run_plan(blocks, old, w, bbytes, stripes=12):
+    d, dirty, plan = model.transfer_plan(
+        jnp.asarray(blocks), jnp.asarray(old), jnp.asarray(w),
+        jnp.asarray(bbytes), num_stripes=stripes)
+    return np.array(d), np.array(dirty), np.array(plan)
+
+
+def mk(b, n, seed=0):
+    rng = np.random.default_rng(seed)
+    blocks = rng.integers(-(2**31), 2**31, size=(b, n), dtype=np.int64).astype(np.int32)
+    w = ref.make_weights(n)
+    bbytes = np.full((b,), n * 4, dtype=np.int32)
+    return rng, blocks, w, bbytes
+
+
+def test_all_clean_no_stripes():
+    _, blocks, w, bbytes = mk(16, 64)
+    d = np.array(ref.block_digest_ref(jnp.asarray(blocks), jnp.asarray(w)))
+    d2, dirty, plan = run_plan(blocks, d, w, bbytes)
+    np.testing.assert_array_equal(d2, d)
+    assert (dirty == 0).all()
+    assert (plan == -1).all()
+
+
+def test_all_dirty_balanced():
+    b = 48
+    _, blocks, w, bbytes = mk(b, 32, seed=3)
+    old = np.zeros((b,), dtype=np.int32)  # everything differs
+    _, dirty, plan = run_plan(blocks, old, w, bbytes, stripes=12)
+    assert (dirty == 1).all()
+    assert plan.min() >= 0 and plan.max() <= 11
+    # balanced: every stripe carries b/12 = 4 equal-size blocks
+    counts = np.bincount(plan, minlength=12)
+    assert counts.max() - counts.min() <= 1, counts
+
+
+@settings(max_examples=20, deadline=None)
+@given(b=st.integers(1, 64), stripes=st.integers(1, 12),
+       seed=st.integers(0, 2**31 - 1))
+def test_plan_invariants(b, stripes, seed):
+    rng, blocks, w, bbytes = mk(b, 16, seed=seed)
+    old = np.array(ref.block_digest_ref(jnp.asarray(blocks), jnp.asarray(w)))
+    flip = rng.random(b) < 0.4
+    old[flip] ^= 1
+    _, dirty, plan = run_plan(blocks, old, w, bbytes, stripes=stripes)
+    # dirty exactly where flipped
+    np.testing.assert_array_equal(dirty, flip.astype(np.int32))
+    # clean blocks unassigned; dirty blocks assigned within range
+    assert (plan[dirty == 0] == -1).all()
+    assert ((plan[dirty == 1] >= 0) & (plan[dirty == 1] < stripes)).all()
+    # stripe ids are non-decreasing over dirty blocks (prefix-sum assignment)
+    dp = plan[dirty == 1]
+    assert (np.diff(dp) >= 0).all()
+
+
+def test_plan_matches_ref_pipeline():
+    b, n = 32, 128
+    rng, blocks, w, bbytes = mk(b, n, seed=11)
+    old = np.array(ref.block_digest_ref(jnp.asarray(blocks), jnp.asarray(w)))
+    old[::3] += 7
+    want = ref.transfer_plan_ref(jnp.asarray(blocks), jnp.asarray(old),
+                                 jnp.asarray(w), jnp.asarray(bbytes), 12)
+    got = run_plan(blocks, old, w, bbytes, stripes=12)
+    for g, wnt in zip(got, want):
+        np.testing.assert_array_equal(g, np.array(wnt))
+
+
+def test_short_tail_block_weighting():
+    """A short final block (fewer bytes) shifts stripe spans accordingly."""
+    b = 8
+    _, blocks, w, _ = mk(b, 16, seed=5)
+    bbytes = np.full((b,), 64, dtype=np.int32)
+    bbytes[-1] = 4  # short tail
+    old = np.zeros((b,), dtype=np.int32)
+    _, dirty, plan = run_plan(blocks, old, w, bbytes, stripes=2)
+    assert (dirty == 1).all()
+    # total payload = 7*64+4 = 452, span = 226 -> first 4 blocks (256 > 226
+    # boundary after block 3) split roughly half/half
+    assert plan[0] == 0 and plan[-1] == 1
+
+
+def test_digest_only_variant():
+    b, n = 16, 64
+    _, blocks, w, _ = mk(b, n, seed=21)
+    (d,) = model.digest_only(jnp.asarray(blocks), jnp.asarray(w))
+    want = ref.block_digest_ref(jnp.asarray(blocks), jnp.asarray(w))
+    np.testing.assert_array_equal(np.array(d), np.array(want))
+
+
+@pytest.mark.parametrize("stripes", [1, 2, 12])
+def test_single_dirty_block_goes_to_stripe_zero(stripes):
+    b = 16
+    _, blocks, w, bbytes = mk(b, 16, seed=8)
+    old = np.array(ref.block_digest_ref(jnp.asarray(blocks), jnp.asarray(w)))
+    old[9] ^= 1
+    _, dirty, plan = run_plan(blocks, old, w, bbytes, stripes=stripes)
+    assert dirty.sum() == 1
+    assert plan[9] == 0

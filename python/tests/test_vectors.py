@@ -1,0 +1,48 @@
+"""Golden cross-language test vectors.
+
+The SAME vectors are asserted by the rust native fallback
+(``rust/src/runtime/native.rs`` unit tests). If either side drifts, the
+bit-exact HLO<->native equivalence the transfer engine relies on is broken.
+Keep the constants in sync with the rust test (they are generated from
+``ref.py`` and frozen here).
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile.kernels import ref
+
+GOLDEN_B, GOLDEN_N = 4, 8
+
+# blocks[j][i] = (j*1000003 + i*7 + 1) mod 2^32, viewed as int32
+GOLDEN_WEIGHTS = [1, 1000003, -721379959, 583896283,
+                  1525764945, -429739981, 272515929, 1071616587]
+GOLDEN_DIGESTS = [19047297, 1229507876, 1855012728, 644638899]
+
+
+def golden_blocks() -> np.ndarray:
+    return np.array(
+        [[(j * 1000003 + i * 7 + 1) & 0xFFFFFFFF for i in range(GOLDEN_N)]
+         for j in range(GOLDEN_B)],
+        dtype=np.uint32,
+    ).view(np.int32)
+
+
+def test_golden_weights():
+    w = ref.make_weights(GOLDEN_N)
+    assert [int(x) for x in w] == GOLDEN_WEIGHTS
+
+
+def test_golden_digests():
+    blocks = golden_blocks()
+    w = ref.make_weights(GOLDEN_N)
+    d = ref.block_digest_ref(jnp.asarray(blocks), jnp.asarray(w))
+    assert [int(x) for x in np.array(d)] == GOLDEN_DIGESTS
+
+
+def test_golden_digests_pallas():
+    from compile.kernels import checksum
+    blocks = golden_blocks()
+    w = ref.make_weights(GOLDEN_N)
+    d = checksum.block_digest(jnp.asarray(blocks), jnp.asarray(w))
+    assert [int(x) for x in np.array(d)] == GOLDEN_DIGESTS

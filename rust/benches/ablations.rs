@@ -1,0 +1,20 @@
+//! Ablations over the design choices DESIGN.md §3 calls out: stripe
+//! count, parallel pre-fetch, digest delta writeback, callback vs
+//! check-on-open consistency, and sync vs async writeback.
+
+use xufs::bench::{
+    run_ablation_consistency, run_ablation_delta, run_ablation_prefetch, run_ablation_stripes,
+    run_ablation_writeback,
+};
+use xufs::config::XufsConfig;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let cfg = XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() };
+    let gib: u64 = if quick { 128 << 20 } else { 1 << 30 };
+    run_ablation_stripes(&cfg, gib).print();
+    run_ablation_prefetch(&cfg).print();
+    run_ablation_delta(&cfg, if quick { 16 } else { 64 }).print();
+    run_ablation_consistency(&cfg, 3).print();
+    run_ablation_writeback(&cfg).print();
+}

@@ -1,0 +1,14 @@
+//! Regenerates Figures 2 and 3: IOzone write/read throughput (1 MiB to
+//! 1 GiB, close included) on XUFS vs GPFS-WAN vs local GPFS over the
+//! calibrated WAN model. `QUICK=1` limits the size sweep.
+
+use xufs::bench::run_fig2_fig3;
+use xufs::config::XufsConfig;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let cfg = XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() };
+    let (write_t, read_t) = run_fig2_fig3(&cfg, quick);
+    write_t.print();
+    read_t.print();
+}

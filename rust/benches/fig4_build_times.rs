@@ -1,0 +1,11 @@
+//! Regenerates Figure 4: clean-make times of the 24-file / ~12 kLoC /
+//! 5-subdir C tree over 5 consecutive runs on XUFS, GPFS-WAN and the
+//! local parallel FS.
+
+use xufs::bench::run_fig4;
+use xufs::config::XufsConfig;
+
+fn main() {
+    let cfg = XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() };
+    run_fig4(&cfg, 5).print();
+}

@@ -1,0 +1,15 @@
+//! Regenerates Figure 5 (five consecutive `wc -l` runs on a 1 GiB file)
+//! and Table 2 (XUFS access vs TGCP / SCP copies). `QUICK=1` shrinks the
+//! file to 256 MiB.
+
+use xufs::bench::run_fig5_table2;
+use xufs::config::XufsConfig;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let gib: u64 = if quick { 256 << 20 } else { 1 << 30 };
+    let cfg = XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() };
+    let (fig5, table2) = run_fig5_table2(&cfg, 5, gib);
+    fig5.print();
+    table2.print();
+}

@@ -1,0 +1,8 @@
+//! Regenerates Table 1: the cumulative file-size distribution of the TACC
+//! scratch census (143,190 files / 864 GB) from the calibrated mixture.
+
+use xufs::bench::run_table1;
+
+fn main() {
+    run_table1(1).print();
+}

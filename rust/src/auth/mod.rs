@@ -1,0 +1,202 @@
+//! USSH security framework (paper §3.2).
+//!
+//! When the user logs into a site, USSH generates a short-lived secret
+//! `<key, phrase>` pair, starts the personal file server, and plants the
+//! pair in the remote session environment. Every subsequent TCP connection
+//! authenticates with an **encrypted challenge string**: the server sends
+//! a random nonce, the client proves knowledge of the phrase with
+//! HMAC-SHA256(phrase, nonce ‖ key-id), and the server verifies in
+//! constant time. Nonces are single-use (replay defense); pairs expire.
+
+use hmac::{Hmac, Mac};
+use sha2::Sha256;
+
+use crate::simnet::VirtualTime;
+use crate::util::Rng;
+
+type HmacSha256 = Hmac<Sha256>;
+
+/// A short-lived `<key, phrase>` credential (paper: generated per login).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct KeyPair {
+    /// Public identifier presented in AuthHello.
+    pub key_id: String,
+    /// Secret phrase; never crosses the wire.
+    pub phrase: [u8; 32],
+    /// Expiry; servers refuse expired pairs.
+    pub expires: VirtualTime,
+}
+
+impl KeyPair {
+    /// Generate a fresh pair valid for `ttl_s` seconds from `now`.
+    pub fn generate(rng: &mut Rng, now: VirtualTime, ttl_s: f64) -> KeyPair {
+        let mut phrase = [0u8; 32];
+        rng.fill_bytes(&mut phrase);
+        KeyPair { key_id: format!("ussh-{}", rng.alnum(16)), phrase, expires: now.add_secs(ttl_s) }
+    }
+}
+
+/// Compute the client-side proof for a challenge.
+pub fn prove(phrase: &[u8; 32], key_id: &str, nonce: &[u8]) -> Vec<u8> {
+    let mut mac = HmacSha256::new_from_slice(phrase).expect("hmac accepts any key length");
+    mac.update(nonce);
+    mac.update(key_id.as_bytes());
+    mac.finalize().into_bytes().to_vec()
+}
+
+/// Constant-time proof verification.
+pub fn verify(phrase: &[u8; 32], key_id: &str, nonce: &[u8], proof: &[u8]) -> bool {
+    let mut mac = HmacSha256::new_from_slice(phrase).expect("hmac accepts any key length");
+    mac.update(nonce);
+    mac.update(key_id.as_bytes());
+    mac.verify_slice(proof).is_ok()
+}
+
+/// Server-side authenticator: issues single-use challenges and validates
+/// proofs against the registered key pair.
+#[derive(Debug)]
+pub struct Authenticator {
+    pair: KeyPair,
+    rng: Rng,
+    /// Outstanding nonces (single-use).
+    pending: Vec<Vec<u8>>,
+    next_session: u64,
+}
+
+impl Authenticator {
+    pub fn new(pair: KeyPair, seed: u64) -> Self {
+        Authenticator { pair, rng: Rng::new(seed), pending: Vec::new(), next_session: 1 }
+    }
+
+    pub fn key_id(&self) -> &str {
+        &self.pair.key_id
+    }
+
+    /// Step 1: issue a 32-byte nonce for `key_id` (any id gets a nonce so
+    /// probing can't distinguish valid ids).
+    pub fn challenge(&mut self, _key_id: &str) -> Vec<u8> {
+        let mut nonce = vec![0u8; 32];
+        self.rng.fill_bytes(&mut nonce);
+        self.pending.push(nonce.clone());
+        nonce
+    }
+
+    /// Step 2: validate the proof. Consumes the nonce whether or not the
+    /// proof verifies (single-use). Returns a session id on success.
+    pub fn verify_proof(&mut self, key_id: &str, proof: &[u8], now: VirtualTime) -> Option<u64> {
+        if now > self.pair.expires || key_id != self.pair.key_id {
+            // still consume one pending nonce to keep behaviour uniform
+            self.pending.pop();
+            return None;
+        }
+        // find the nonce this proof matches; remove it regardless
+        let mut matched = None;
+        for (i, nonce) in self.pending.iter().enumerate() {
+            if verify(&self.pair.phrase, key_id, nonce, proof) {
+                matched = Some(i);
+                break;
+            }
+        }
+        match matched {
+            Some(i) => {
+                self.pending.remove(i);
+                let s = self.next_session;
+                self.next_session += 1;
+                Some(s)
+            }
+            None => {
+                self.pending.pop();
+                None
+            }
+        }
+    }
+
+    /// Number of outstanding challenges (test/diagnostic).
+    pub fn pending_challenges(&self) -> usize {
+        self.pending.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pair() -> KeyPair {
+        let mut rng = Rng::new(1);
+        KeyPair::generate(&mut rng, VirtualTime::ZERO, 3600.0)
+    }
+
+    #[test]
+    fn happy_path() {
+        let p = pair();
+        let mut auth = Authenticator::new(p.clone(), 2);
+        let nonce = auth.challenge(&p.key_id);
+        let proof = prove(&p.phrase, &p.key_id, &nonce);
+        let session = auth.verify_proof(&p.key_id, &proof, VirtualTime::from_secs(1.0));
+        assert!(session.is_some());
+        assert_eq!(auth.pending_challenges(), 0);
+    }
+
+    #[test]
+    fn wrong_phrase_rejected() {
+        let p = pair();
+        let mut auth = Authenticator::new(p.clone(), 2);
+        let nonce = auth.challenge(&p.key_id);
+        let mut bad = p.phrase;
+        bad[0] ^= 1;
+        let proof = prove(&bad, &p.key_id, &nonce);
+        assert!(auth.verify_proof(&p.key_id, &proof, VirtualTime::from_secs(1.0)).is_none());
+    }
+
+    #[test]
+    fn wrong_key_id_rejected() {
+        let p = pair();
+        let mut auth = Authenticator::new(p.clone(), 2);
+        let nonce = auth.challenge("ussh-intruder");
+        let proof = prove(&p.phrase, "ussh-intruder", &nonce);
+        assert!(auth.verify_proof("ussh-intruder", &proof, VirtualTime::from_secs(1.0)).is_none());
+    }
+
+    #[test]
+    fn nonce_single_use() {
+        let p = pair();
+        let mut auth = Authenticator::new(p.clone(), 2);
+        let nonce = auth.challenge(&p.key_id);
+        let proof = prove(&p.phrase, &p.key_id, &nonce);
+        assert!(auth.verify_proof(&p.key_id, &proof, VirtualTime::from_secs(1.0)).is_some());
+        // replaying the same proof fails: nonce was consumed
+        assert!(auth.verify_proof(&p.key_id, &proof, VirtualTime::from_secs(1.0)).is_none());
+    }
+
+    #[test]
+    fn expired_pair_rejected() {
+        let p = pair(); // ttl 3600s
+        let mut auth = Authenticator::new(p.clone(), 2);
+        let nonce = auth.challenge(&p.key_id);
+        let proof = prove(&p.phrase, &p.key_id, &nonce);
+        assert!(auth.verify_proof(&p.key_id, &proof, VirtualTime::from_secs(4000.0)).is_none());
+    }
+
+    #[test]
+    fn sessions_unique() {
+        let p = pair();
+        let mut auth = Authenticator::new(p.clone(), 2);
+        let mut sessions = Vec::new();
+        for _ in 0..3 {
+            let nonce = auth.challenge(&p.key_id);
+            let proof = prove(&p.phrase, &p.key_id, &nonce);
+            sessions.push(auth.verify_proof(&p.key_id, &proof, VirtualTime::ZERO).unwrap());
+        }
+        sessions.dedup();
+        assert_eq!(sessions.len(), 3);
+    }
+
+    #[test]
+    fn distinct_pairs_distinct_ids() {
+        let mut rng = Rng::new(5);
+        let a = KeyPair::generate(&mut rng, VirtualTime::ZERO, 10.0);
+        let b = KeyPair::generate(&mut rng, VirtualTime::ZERO, 10.0);
+        assert_ne!(a.key_id, b.key_id);
+        assert_ne!(a.phrase, b.phrase);
+    }
+}

@@ -1,0 +1,236 @@
+//! Local parallel-FS baseline: direct access to a site file system (the
+//! "local GPFS" series in Figs. 4–5). No WAN anywhere — this is the
+//! upper bound every distributed system chases.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::client::{Fd, OpenFlags, Vfs};
+use crate::homefs::{FileStore, FsError};
+use crate::proto::{LockKind, WireAttr};
+use crate::simnet::{Clock, VirtualTime};
+use crate::util::path as vpath;
+use crate::vdisk::DiskModel;
+
+#[derive(Debug)]
+struct OpenFile {
+    path: String,
+    pos: u64,
+    flags: OpenFlags,
+}
+
+/// A [`Vfs`] straight onto a [`FileStore`] + [`DiskModel`].
+pub struct LocalFs {
+    pub fs: FileStore,
+    disk: DiskModel,
+    clock: Arc<dyn Clock>,
+    fds: HashMap<u64, OpenFile>,
+    locks: HashMap<String, (u64, LockKind)>,
+    next_fd: u64,
+    cwd: String,
+}
+
+impl LocalFs {
+    pub fn new(fs: FileStore, disk: DiskModel, clock: Arc<dyn Clock>) -> Self {
+        LocalFs { fs, disk, clock, fds: HashMap::new(), locks: HashMap::new(), next_fd: 3, cwd: "/".into() }
+    }
+
+    fn abs(&self, path: &str) -> String {
+        vpath::join(&self.cwd, path)
+    }
+}
+
+impl Vfs for LocalFs {
+    fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd, FsError> {
+        let p = self.abs(path);
+        let now = self.clock.now();
+        self.disk.op(self.clock.as_ref());
+        if !self.fs.exists(&p) {
+            if !flags.create {
+                return Err(FsError::NotFound(p));
+            }
+            self.fs.mkdir_p(&vpath::parent(&p), now)?;
+            self.fs.create(&p, now)?;
+        } else if flags.truncate {
+            self.fs.truncate(&p, 0, now)?;
+        }
+        let pos = if flags.append { self.fs.stat(&p)?.size } else { 0 };
+        let fd = self.next_fd;
+        self.next_fd += 1;
+        self.fds.insert(fd, OpenFile { path: p, pos, flags });
+        Ok(Fd(fd))
+    }
+
+    fn read(&mut self, fd: Fd, len: usize) -> Result<Vec<u8>, FsError> {
+        let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
+        let data = self.fs.read_at(&f.path, f.pos, len)?.to_vec();
+        self.disk.io(self.clock.as_ref(), data.len() as u64);
+        self.fds.get_mut(&fd.0).unwrap().pos += data.len() as u64;
+        Ok(data)
+    }
+
+    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize, FsError> {
+        let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
+        if !f.flags.write {
+            return Err(FsError::Perm("fd not open for writing".into()));
+        }
+        let (path, pos) = (f.path.clone(), f.pos);
+        let now = self.clock.now();
+        self.fs.write_at(&path, pos, data, now)?;
+        self.disk.io(self.clock.as_ref(), data.len() as u64);
+        self.fds.get_mut(&fd.0).unwrap().pos += data.len() as u64;
+        Ok(data.len())
+    }
+
+    fn seek(&mut self, fd: Fd, pos: u64) -> Result<(), FsError> {
+        self.fds.get_mut(&fd.0).ok_or(FsError::BadHandle)?.pos = pos;
+        Ok(())
+    }
+
+    fn close(&mut self, fd: Fd) -> Result<(), FsError> {
+        let f = self.fds.remove(&fd.0).ok_or(FsError::BadHandle)?;
+        self.locks.retain(|_, (lfd, _)| *lfd != fd.0);
+        self.disk.op(self.clock.as_ref());
+        let _ = f;
+        Ok(())
+    }
+
+    fn stat(&mut self, path: &str) -> Result<WireAttr, FsError> {
+        let p = self.abs(path);
+        self.disk.op(self.clock.as_ref());
+        Ok(WireAttr::from_attr(&self.fs.stat(&p)?))
+    }
+
+    fn readdir(&mut self, path: &str) -> Result<Vec<(String, WireAttr)>, FsError> {
+        let p = self.abs(path);
+        self.disk.op(self.clock.as_ref());
+        Ok(self
+            .fs
+            .readdir(&p)?
+            .into_iter()
+            .map(|(n, a)| (n, WireAttr::from_attr(&a)))
+            .collect())
+    }
+
+    fn chdir(&mut self, path: &str) -> Result<(), FsError> {
+        let p = self.abs(path);
+        self.disk.op(self.clock.as_ref());
+        match self.fs.stat(&p)?.kind {
+            crate::homefs::NodeKind::Dir => {
+                self.cwd = p;
+                Ok(())
+            }
+            _ => Err(FsError::NotADir(p)),
+        }
+    }
+
+    fn mkdir(&mut self, path: &str) -> Result<(), FsError> {
+        let p = self.abs(path);
+        let now = self.clock.now();
+        self.disk.op(self.clock.as_ref());
+        self.fs.mkdir_p(&p, now).map(|_| ())
+    }
+
+    fn unlink(&mut self, path: &str) -> Result<(), FsError> {
+        let p = self.abs(path);
+        let now = self.clock.now();
+        self.disk.op(self.clock.as_ref());
+        self.fs.unlink(&p, now)
+    }
+
+    fn rename(&mut self, from: &str, to: &str) -> Result<(), FsError> {
+        let (f, t) = (self.abs(from), self.abs(to));
+        let now = self.clock.now();
+        self.disk.op(self.clock.as_ref());
+        self.fs.rename(&f, &t, now)
+    }
+
+    fn truncate(&mut self, path: &str, size: u64) -> Result<(), FsError> {
+        let p = self.abs(path);
+        let now = self.clock.now();
+        self.disk.op(self.clock.as_ref());
+        self.fs.truncate(&p, size, now)
+    }
+
+    fn lock(&mut self, fd: Fd, kind: LockKind) -> Result<(), FsError> {
+        let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
+        let path = f.path.clone();
+        if let Some((ofd, okind)) = self.locks.get(&path) {
+            let compatible = *ofd == fd.0
+                || (matches!(okind, LockKind::Shared) && matches!(kind, LockKind::Shared));
+            if !compatible {
+                return Err(FsError::LockConflict(path));
+            }
+        }
+        self.locks.insert(path, (fd.0, kind));
+        Ok(())
+    }
+
+    fn unlock(&mut self, fd: Fd) -> Result<(), FsError> {
+        self.locks.retain(|_, (lfd, _)| *lfd != fd.0);
+        Ok(())
+    }
+
+    fn fsync(&mut self) -> Result<(), FsError> {
+        Ok(())
+    }
+
+    fn now(&self) -> VirtualTime {
+        self.clock.now()
+    }
+
+    fn think(&mut self, secs: f64) {
+        self.clock.advance_secs(secs);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::SimClock;
+
+    fn local() -> LocalFs {
+        let clock = Arc::new(SimClock::new());
+        LocalFs::new(FileStore::default(), DiskModel::new(400.0e6, 0.002), clock)
+    }
+
+    #[test]
+    fn write_read_roundtrip() {
+        let mut l = local();
+        l.write_file("/a/b.txt", b"hello", 4).unwrap();
+        assert_eq!(l.scan_file("/a/b.txt", 2).unwrap(), 5);
+        assert_eq!(l.stat("/a/b.txt").unwrap().size, 5);
+    }
+
+    #[test]
+    fn timing_is_local_speed() {
+        let mut l = local();
+        l.write_file("/big", &vec![0u8; 100 << 20], 1 << 20).unwrap();
+        let t0 = l.now();
+        l.scan_file("/big", 1 << 20).unwrap();
+        let dt = l.now().saturating_sub(t0).as_secs();
+        // 100 MiB at 400 MB/s + per-op costs: well under a second
+        assert!(dt < 1.0, "dt={dt}");
+    }
+
+    #[test]
+    fn locks_conflict_locally() {
+        let mut l = local();
+        l.write_file("/f", b"x", 4).unwrap();
+        let fd1 = l.open("/f", OpenFlags::rdwr()).unwrap();
+        let fd2 = l.open("/f", OpenFlags::rdwr()).unwrap();
+        l.lock(fd1, LockKind::Exclusive).unwrap();
+        assert!(matches!(l.lock(fd2, LockKind::Exclusive), Err(FsError::LockConflict(_))));
+        l.close(fd1).unwrap();
+        l.lock(fd2, LockKind::Exclusive).unwrap();
+    }
+
+    #[test]
+    fn chdir_relative_paths() {
+        let mut l = local();
+        l.mkdir("/w/src").unwrap();
+        l.chdir("/w/src").unwrap();
+        l.write_file("main.c", b"int main;", 64).unwrap();
+        assert!(l.fs.exists("/w/src/main.c"));
+    }
+}

@@ -1,0 +1,16 @@
+//! Comparators from the paper's evaluation (§4): the GPFS-WAN distributed
+//! parallel file system, a plain local parallel FS, an NFS-style
+//! check-on-open client (consistency-protocol ablation), and the TGCP /
+//! SCP copy commands of Table 2. All file systems implement the same
+//! [`Vfs`] the workloads drive, over the same WAN/disk models as XUFS —
+//! only the protocol behaviour differs (DESIGN.md §2).
+
+mod gpfswan;
+mod localfs;
+mod nfs;
+mod copytools;
+
+pub use copytools::{Scp, Tgcp};
+pub use gpfswan::{GpfsWan, GpfsWanParams};
+pub use localfs::LocalFs;
+pub use nfs::NfsClient;

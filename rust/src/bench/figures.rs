@@ -1,0 +1,505 @@
+//! One driver per paper table/figure (DESIGN.md §4 experiment index).
+
+use std::sync::Arc;
+
+use crate::baselines::{GpfsWan, GpfsWanParams, LocalFs, NfsClient, Scp, Tgcp};
+use crate::bench::report::{rate, secs, Table};
+use crate::client::{Vfs, WritebackMode, XufsClient};
+use crate::config::XufsConfig;
+use crate::coordinator::{SimLink, SimWorld};
+use crate::homefs::FileStore;
+use crate::metrics::names;
+use crate::simnet::{SimClock, VirtualTime, Wan};
+use crate::vdisk::DiskModel;
+use crate::workload::{buildtree, iozone, largefile, sizedist};
+
+const MIB: u64 = 1 << 20;
+
+fn cache_disk(cfg: &XufsConfig) -> DiskModel {
+    DiskModel::new(cfg.disk.cache_bps, cfg.disk.cache_op_s)
+}
+
+/// Fresh XUFS deployment with `files` pre-populated at the home space
+/// under /home/u.
+fn xufs_world(cfg: &XufsConfig, files: &[(&str, Vec<u8>)]) -> (SimWorld, XufsClient<SimLink>) {
+    let mut w = SimWorld::new(cfg.clone());
+    w.home(|s| {
+        s.home_mut().mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+        for (p, data) in files {
+            s.home_mut().mkdir_p(&crate::util::path::parent(p), VirtualTime::ZERO).unwrap();
+            s.home_mut().write(p, data, VirtualTime::ZERO).unwrap();
+        }
+    });
+    let c = w.mount("/home/u").expect("mount");
+    (w, c)
+}
+
+fn gpfs_world(cfg: &XufsConfig, files: &[(&str, Vec<u8>)]) -> GpfsWan {
+    let clock = Arc::new(SimClock::new());
+    let mut fs = FileStore::default();
+    fs.mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+    for (p, data) in files {
+        fs.mkdir_p(&crate::util::path::parent(p), VirtualTime::ZERO).unwrap();
+        fs.write(p, data, VirtualTime::ZERO).unwrap();
+    }
+    let _ = cfg;
+    GpfsWan::new(fs, GpfsWanParams::default(), clock)
+}
+
+fn local_world(cfg: &XufsConfig, files: &[(&str, Vec<u8>)]) -> LocalFs {
+    let clock = Arc::new(SimClock::new());
+    let mut fs = FileStore::default();
+    fs.mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+    for (p, data) in files {
+        fs.mkdir_p(&crate::util::path::parent(p), VirtualTime::ZERO).unwrap();
+        fs.write(p, data, VirtualTime::ZERO).unwrap();
+    }
+    LocalFs::new(fs, cache_disk(cfg), clock)
+}
+
+// ---------------------------------------------------------------------
+// Table 1
+// ---------------------------------------------------------------------
+
+/// Regenerate Table 1 from the calibrated population model.
+pub fn run_table1(seed: u64) -> Table {
+    let sizes = sizedist::generate_sizes(&sizedist::SizeDistParams::default(), seed);
+    let c = sizedist::census(&sizes);
+    let mut t = Table::new(
+        "Table 1 — cumulative file-size distribution (TACC scratch census)",
+        &["Size", "Files", "Files% ", "GB", "Bytes%", "paper files", "paper GB"],
+    );
+    for (row, (_, _, pf, pgb)) in c.rows.iter().zip(sizedist::PAPER_TABLE1.iter()) {
+        t.row(vec![
+            row.label.clone(),
+            row.files.to_string(),
+            format!("{:.2}%", row.file_pct),
+            format!("{:.1}", row.gigabytes),
+            format!("{:.2}%", row.byte_pct),
+            pf.to_string(),
+            format!("{pgb:.1}"),
+        ]);
+    }
+    t.row(vec![
+        "Total".into(),
+        c.total_files.to_string(),
+        "100%".into(),
+        format!("{:.1}", c.total_gb),
+        "100%".into(),
+        sizedist::PAPER_TOTAL_FILES.to_string(),
+        format!("{:.1}", sizedist::PAPER_TOTAL_GB),
+    ]);
+    let m1 = &c.rows[5];
+    t.note(format!(
+        "headline skew: >1M files = {:.2}% of files, {:.2}% of bytes (paper: 9%, 98.49%)",
+        m1.file_pct, m1.byte_pct
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figures 2 & 3 — IOzone write/read throughput
+// ---------------------------------------------------------------------
+
+/// Sizes from 1 MiB to 1 GiB (the paper's range).
+pub fn iozone_sizes(quick: bool) -> Vec<u64> {
+    if quick {
+        vec![MIB, 4 * MIB, 16 * MIB, 64 * MIB, 256 * MIB]
+    } else {
+        vec![MIB, 2 * MIB, 4 * MIB, 8 * MIB, 16 * MIB, 32 * MIB, 64 * MIB, 128 * MIB, 256 * MIB, 512 * MIB, 1024 * MIB]
+    }
+}
+
+/// Figures 2 (write) and 3 (read): throughput incl. close for XUFS,
+/// GPFS-WAN and the local parallel FS.
+pub fn run_fig2_fig3(cfg: &XufsConfig, quick: bool) -> (Table, Table) {
+    let mut wt = Table::new(
+        "Figure 2 — IOzone write throughput, close included (MiB/s)",
+        &["size", "XUFS", "GPFS-WAN", "local GPFS"],
+    );
+    let mut rt = Table::new(
+        "Figure 3 — IOzone read throughput (MiB/s)",
+        &["size", "XUFS", "GPFS-WAN", "local GPFS"],
+    );
+    for &size in &iozone_sizes(quick) {
+        // XUFS: write then read in the mounted name space
+        let (_w, mut xc) = xufs_world(cfg, &[]);
+        let xw = iozone::write_test(&mut xc, "/home/u/io.dat", size, cfg.seed).unwrap();
+        let xr = iozone::read_test(&mut xc, "/home/u/io.dat").unwrap();
+
+        let mut g = gpfs_world(cfg, &[]);
+        let gw = iozone::write_test(&mut g, "/home/u/io.dat", size, cfg.seed).unwrap();
+        let gr = iozone::read_test(&mut g, "/home/u/io.dat").unwrap();
+
+        let mut l = local_world(cfg, &[]);
+        let lw = iozone::write_test(&mut l, "/home/u/io.dat", size, cfg.seed).unwrap();
+        let lr = iozone::read_test(&mut l, "/home/u/io.dat").unwrap();
+
+        let label = format!("{} MiB", size / MIB);
+        wt.row(vec![label.clone(), rate(xw.mib_per_sec), rate(gw.mib_per_sec), rate(lw.mib_per_sec)]);
+        rt.row(vec![label, rate(xr.mib_per_sec), rate(gr.mib_per_sec), rate(lr.mib_per_sec)]);
+    }
+    wt.note("paper shape: GPFS-WAN ≫ XUFS at 1 MiB (page-pool absorb); comparable above");
+    rt.note("paper shape: XUFS wins for >1 MiB — reads come from the local cache FS");
+    (wt, rt)
+}
+
+// ---------------------------------------------------------------------
+// Figure 4 — source build times
+// ---------------------------------------------------------------------
+
+/// Figure 4: clean-make times for 5 consecutive runs on each system.
+pub fn run_fig4(cfg: &XufsConfig, runs: usize) -> Table {
+    let spec = buildtree::BuildSpec::default();
+    let mut home = FileStore::default();
+    buildtree::generate_tree(&mut home, "/home/u/src", &spec, cfg.seed).unwrap();
+    let tree: Vec<(String, Vec<u8>)> = home
+        .walk("/home/u/src")
+        .unwrap()
+        .into_iter()
+        .filter(|(_, a)| a.kind == crate::homefs::NodeKind::File)
+        .map(|(p, _)| {
+            let data = home.read(&p).unwrap().to_vec();
+            (p, data)
+        })
+        .collect();
+    let as_refs: Vec<(&str, Vec<u8>)> = tree.iter().map(|(p, d)| (p.as_str(), d.clone())).collect();
+
+    let mut t = Table::new(
+        "Figure 4 — build times over consecutive runs (seconds)",
+        &["run", "XUFS", "GPFS-WAN", "local GPFS"],
+    );
+
+    let (_w, mut xc) = xufs_world(cfg, &as_refs);
+    let mut g = gpfs_world(cfg, &as_refs);
+    let mut l = local_world(cfg, &as_refs);
+    let mut series = Vec::new();
+    for run in 1..=runs {
+        let xs = buildtree::build(&mut xc, "/home/u/src", &spec).unwrap();
+        buildtree::clean(&mut xc, "/home/u/src").unwrap();
+        let gs = buildtree::build(&mut g, "/home/u/src", &spec).unwrap();
+        buildtree::clean(&mut g, "/home/u/src").unwrap();
+        let ls = buildtree::build(&mut l, "/home/u/src", &spec).unwrap();
+        buildtree::clean(&mut l, "/home/u/src").unwrap();
+        series.push((xs.secs, gs.secs, ls.secs));
+        t.row(vec![run.to_string(), secs(xs.secs), secs(gs.secs), secs(ls.secs)]);
+    }
+    let wins = series.iter().filter(|(x, g, _)| x < g).count();
+    t.note(format!(
+        "paper shape: XUFS mostly outperforms GPFS-WAN (aggressive parallel pre-fetch); here XUFS wins {wins}/{runs} runs"
+    ));
+    t.note("local GPFS is the floor in every run");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figure 5 + Table 2 — 1 GiB `wc -l`
+// ---------------------------------------------------------------------
+
+/// Figure 5: `wc -l` on a 1 GiB file, 5 consecutive runs per system.
+/// Table 2: the XUFS access time vs TGCP and SCP copy times.
+pub fn run_fig5_table2(cfg: &XufsConfig, runs: usize, gib: u64) -> (Table, Table) {
+    let content = largefile::text_content(gib as usize, 80, cfg.seed);
+    let files = [("/home/u/big.txt", content.clone())];
+
+    let mut fig5 = Table::new(
+        "Figure 5 — `wc -l` on a 1 GiB file, consecutive runs (seconds)",
+        &["run", "XUFS", "GPFS-WAN", "local GPFS"],
+    );
+
+    let (_w, mut xc) = xufs_world(cfg, &files);
+    let mut g = gpfs_world(cfg, &files);
+    let mut l = local_world(cfg, &files);
+    let mut xufs_first = 0.0;
+    let mut gpfs_times = Vec::new();
+    for run in 1..=runs {
+        let (_, xs) = largefile::wc_l(&mut xc, "/home/u/big.txt", MIB as usize).unwrap();
+        let (_, gs) = largefile::wc_l(&mut g, "/home/u/big.txt", MIB as usize).unwrap();
+        let (_, ls) = largefile::wc_l(&mut l, "/home/u/big.txt", MIB as usize).unwrap();
+        if run == 1 {
+            xufs_first = xs;
+        }
+        gpfs_times.push(gs);
+        fig5.row(vec![run.to_string(), secs(xs), secs(gs), secs(ls)]);
+    }
+    fig5.note("paper shape: XUFS ≈60 s first run (cold fetch into cache), then seconds; GPFS-WAN flat ≈33 s");
+
+    // Table 2: copy tools on a fresh WAN
+    let clock = Arc::new(SimClock::new());
+    let wan = Arc::new(Wan::new(cfg.wan.clone(), (*clock).clone()));
+    let tgcp = Tgcp::new(wan.clone(), clock.clone(), cache_disk(cfg), cfg.stripe.clone());
+    let tgcp_secs = tgcp.copy(gib);
+    let scp = Scp::new(wan, clock, cache_disk(cfg), XufsConfig::scp_cipher_bps());
+    let scp_secs = scp.copy(gib);
+
+    let mut t2 = Table::new(
+        "Table 2 — mean time to access a 1 GiB file across the WAN (seconds)",
+        &["XUFS (wc -l, cold)", "TGCP (copy)", "SCP (copy)", "paper XUFS", "paper TGCP", "paper SCP"],
+    );
+    t2.row(vec![
+        secs(xufs_first),
+        secs(tgcp_secs),
+        secs(scp_secs),
+        "57".into(),
+        "49".into(),
+        "2100".into(),
+    ]);
+    t2.note(format!(
+        "shape: TGCP slightly ahead of XUFS (ratio {:.2}, paper 0.86); SCP ~{:.0}x slower than XUFS (paper ~37x)",
+        tgcp_secs / xufs_first.max(1e-9),
+        scp_secs / xufs_first.max(1e-9)
+    ));
+    let _ = gpfs_times;
+    (fig5, t2)
+}
+
+// ---------------------------------------------------------------------
+// Ablations (design choices from DESIGN.md §3)
+// ---------------------------------------------------------------------
+
+/// Stripe-count sweep: cold 1 GiB fetch time vs number of stripes.
+pub fn run_ablation_stripes(cfg: &XufsConfig, gib: u64) -> Table {
+    let mut t = Table::new(
+        "Ablation — stripe count vs cold 1 GiB fetch (seconds)",
+        &["stripes", "fetch secs", "speedup vs 1"],
+    );
+    let content = vec![0x55u8; gib as usize];
+    let mut base = 0.0;
+    for stripes in [1usize, 2, 4, 8, 12, 16] {
+        let mut c2 = cfg.clone();
+        c2.stripe.max_stripes = stripes;
+        let (_w, mut xc) = xufs_world(&c2, &[("/home/u/big.dat", content.clone())]);
+        let t0 = xc.now();
+        xc.scan_file("/home/u/big.dat", MIB as usize).unwrap();
+        let dt = xc.now().saturating_sub(t0).as_secs();
+        if stripes == 1 {
+            base = dt;
+        }
+        t.row(vec![stripes.to_string(), secs(dt), format!("{:.1}x", base / dt)]);
+    }
+    t.note("speedup saturates once per-stream caps stop binding (paper picked 12)");
+    t
+}
+
+/// Pre-fetch on/off: first-build time + WAN round trips.
+pub fn run_ablation_prefetch(cfg: &XufsConfig) -> Table {
+    let spec = buildtree::BuildSpec::default();
+    let mut t = Table::new(
+        "Ablation — parallel small-file pre-fetch (first clean make)",
+        &["prefetch", "build secs", "WAN rpcs", "files prefetched"],
+    );
+    for enabled in [true, false] {
+        let mut c2 = cfg.clone();
+        c2.stripe.prefetch_enabled = enabled;
+        let mut home = FileStore::default();
+        buildtree::generate_tree(&mut home, "/home/u/src", &spec, c2.seed).unwrap();
+        let tree: Vec<(String, Vec<u8>)> = home
+            .walk("/home/u/src")
+            .unwrap()
+            .into_iter()
+            .filter(|(_, a)| a.kind == crate::homefs::NodeKind::File)
+            .map(|(p, _)| {
+                let d = home.read(&p).unwrap().to_vec();
+                (p, d)
+            })
+            .collect();
+        let refs: Vec<(&str, Vec<u8>)> = tree.iter().map(|(p, d)| (p.as_str(), d.clone())).collect();
+        let (w, mut xc) = xufs_world(&c2, &refs);
+        let stats = buildtree::build(&mut xc, "/home/u/src", &spec).unwrap();
+        t.row(vec![
+            enabled.to_string(),
+            secs(stats.secs),
+            w.wan.stats().rpcs.to_string(),
+            xc.metrics().counter(names::PREFETCH_FILES).to_string(),
+        ]);
+    }
+    t.note("the paper credits its Fig. 4 win to this pre-fetch (§4.2)");
+    t
+}
+
+/// Delta writeback on/off: edit one block of a large cached file, close.
+pub fn run_ablation_delta(cfg: &XufsConfig, file_mib: u64) -> Table {
+    let mut t = Table::new(
+        "Ablation — digest delta writeback (1-block edit of a cached file)",
+        &["delta", "close+flush secs", "bytes shipped", "bytes saved"],
+    );
+    let size = file_mib * MIB;
+    for enabled in [true, false] {
+        let mut c2 = cfg.clone();
+        c2.stripe.delta_writeback = enabled;
+        let content = vec![0xA7u8; size as usize];
+        let (_w, mut xc) = xufs_world(&c2, &[("/home/u/data.bin", content)]);
+        // cache it (cold fetch)
+        xc.scan_file("/home/u/data.bin", MIB as usize).unwrap();
+        // edit a single 64 KiB block in place
+        let t0 = xc.now();
+        let fd = xc.open("/home/u/data.bin", crate::client::OpenFlags::rdwr()).unwrap();
+        xc.seek(fd, 128 * 1024).unwrap();
+        xc.write(fd, &vec![0x11u8; 64 * 1024]).unwrap();
+        xc.close(fd).unwrap();
+        let dt = xc.now().saturating_sub(t0).as_secs();
+        t.row(vec![
+            enabled.to_string(),
+            secs(dt),
+            xc.metrics().counter(names::WRITEBACK_BYTES).to_string(),
+            xc.metrics().counter(names::WRITEBACK_BYTES_SAVED).to_string(),
+        ]);
+    }
+    t.note("delta plan computed by the AOT digest engine (PJRT artifact when present)");
+    t
+}
+
+/// Callback consistency vs NFS-style check-on-open: repeated builds.
+pub fn run_ablation_consistency(cfg: &XufsConfig, runs: usize) -> Table {
+    let spec = buildtree::BuildSpec::default();
+    let mut home = FileStore::default();
+    buildtree::generate_tree(&mut home, "/home/u/src", &spec, cfg.seed).unwrap();
+    let tree: Vec<(String, Vec<u8>)> = home
+        .walk("/home/u/src")
+        .unwrap()
+        .into_iter()
+        .filter(|(_, a)| a.kind == crate::homefs::NodeKind::File)
+        .map(|(p, _)| {
+            let d = home.read(&p).unwrap().to_vec();
+            (p, d)
+        })
+        .collect();
+    let refs: Vec<(&str, Vec<u8>)> = tree.iter().map(|(p, d)| (p.as_str(), d.clone())).collect();
+
+    // XUFS (callbacks)
+    let (w, mut xc) = xufs_world(cfg, &refs);
+    let mut x_total = 0.0;
+    for _ in 0..runs {
+        let s = buildtree::build(&mut xc, "/home/u/src", &spec).unwrap();
+        buildtree::clean(&mut xc, "/home/u/src").unwrap();
+        x_total += s.secs;
+    }
+    let x_rpcs = w.wan.stats().rpcs;
+
+    // NFS-style (check on open)
+    let clock = Arc::new(SimClock::new());
+    let wan = Arc::new(Wan::new(cfg.wan.clone(), (*clock).clone()));
+    let mut nfs = NfsClient::new(home.clone(), clock, wan.clone(), cache_disk(cfg), cfg.stripe.max_stripes);
+    let mut n_total = 0.0;
+    for _ in 0..runs {
+        let s = buildtree::build(&mut nfs, "/home/u/src", &spec).unwrap();
+        buildtree::clean(&mut nfs, "/home/u/src").unwrap();
+        n_total += s.secs;
+    }
+
+    let mut t = Table::new(
+        "Ablation — callback consistency vs NFS check-on-open",
+        &["protocol", "total secs", "WAN rpcs", "revalidation rpcs"],
+    );
+    t.row(vec!["XUFS callbacks".into(), secs(x_total), x_rpcs.to_string(), "0".into()]);
+    t.row(vec![
+        "check-on-open".into(),
+        secs(n_total),
+        wan.stats().rpcs.to_string(),
+        nfs.revalidation_rpcs.to_string(),
+    ]);
+    t.note("cached copies are assumed current unless notified (AFS-2 style, paper §5)");
+    t
+}
+
+/// Sync-on-close vs async queue flushing.
+pub fn run_ablation_writeback(cfg: &XufsConfig) -> Table {
+    let spec = buildtree::BuildSpec::default();
+    let mut t = Table::new(
+        "Ablation — writeback mode (clean make incl. final sync)",
+        &["mode", "build secs", "final fsync secs"],
+    );
+    for mode in [WritebackMode::SyncOnClose, WritebackMode::Async] {
+        let mut home = FileStore::default();
+        buildtree::generate_tree(&mut home, "/home/u/src", &spec, cfg.seed).unwrap();
+        let tree: Vec<(String, Vec<u8>)> = home
+            .walk("/home/u/src")
+            .unwrap()
+            .into_iter()
+            .filter(|(_, a)| a.kind == crate::homefs::NodeKind::File)
+            .map(|(p, _)| {
+                let d = home.read(&p).unwrap().to_vec();
+                (p, d)
+            })
+            .collect();
+        let refs: Vec<(&str, Vec<u8>)> = tree.iter().map(|(p, d)| (p.as_str(), d.clone())).collect();
+        let (_w, mut xc) = xufs_world(cfg, &refs);
+        xc.writeback = mode;
+        xc.async_flush_threshold = usize::MAX;
+        let stats = buildtree::build(&mut xc, "/home/u/src", &spec).unwrap();
+        let t0 = xc.now();
+        xc.fsync().unwrap();
+        let fsync_s = xc.now().saturating_sub(t0).as_secs();
+        let label = match mode {
+            WritebackMode::SyncOnClose => "sync-on-close",
+            WritebackMode::Async => "async queue",
+        };
+        t.row(vec![label.into(), secs(stats.secs), secs(fsync_s)]);
+    }
+    t.note("paper §3.1: no file op blocks on the network — async mode shows the latency-hiding headroom");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> XufsConfig {
+        XufsConfig::default()
+    }
+
+    #[test]
+    fn table1_regenerates() {
+        let t = run_table1(1);
+        assert_eq!(t.rows.len(), 9); // 8 cut points + total
+    }
+
+    #[test]
+    fn fig2_fig3_shapes_hold_quick() {
+        let (wt, rt) = run_fig2_fig3(&cfg(), true);
+        // row 0 is 1 MiB: GPFS write beats XUFS write
+        let x1w: f64 = wt.rows[0][1].parse().unwrap();
+        let g1w: f64 = wt.rows[0][2].parse().unwrap();
+        assert!(g1w > 2.0 * x1w, "1 MiB write: GPFS {g1w} vs XUFS {x1w}");
+        // reads above 1 MiB: XUFS wins (cache-local)
+        for row in &rt.rows[1..] {
+            let x: f64 = row[1].parse().unwrap();
+            let g: f64 = row[2].parse().unwrap();
+            assert!(x > g, "read row {row:?}");
+        }
+        // large writes comparable: within 3x either way at 256 MiB
+        let last = &wt.rows[wt.rows.len() - 1];
+        let xw: f64 = last[1].parse().unwrap();
+        let gw: f64 = last[2].parse().unwrap();
+        assert!(xw * 3.0 > gw && gw * 3.0 > xw, "large write {last:?}");
+    }
+
+    #[test]
+    fn fig5_shape_holds_small() {
+        // 128 MiB stand-in (must exceed the GPFS page pool so its curve
+        // stays flat); the bench binary runs the paper's full 1 GiB
+        let (fig5, _t2) = run_fig5_table2(&cfg(), 3, 128 * MIB);
+        let first_x: f64 = fig5.rows[0][1].parse().unwrap();
+        let warm_x: f64 = fig5.rows[1][1].parse().unwrap();
+        let g1: f64 = fig5.rows[0][2].parse().unwrap();
+        let g2: f64 = fig5.rows[1][2].parse().unwrap();
+        assert!(first_x > 5.0 * warm_x, "XUFS warm drop: {first_x} -> {warm_x}");
+        assert!((g1 - g2).abs() / g1 < 0.25, "GPFS flat: {g1} vs {g2}");
+    }
+
+    #[test]
+    fn ablation_stripes_monotone() {
+        let t = run_ablation_stripes(&cfg(), 32 * MIB);
+        let s1: f64 = t.rows[0][1].parse().unwrap();
+        let s12: f64 = t.rows[4][1].parse().unwrap();
+        assert!(s1 / s12 > 6.0, "striping speedup {s1}/{s12}");
+    }
+
+    #[test]
+    fn ablation_delta_saves_bytes() {
+        let t = run_ablation_delta(&cfg(), 16);
+        let shipped_on: u64 = t.rows[0][2].parse().unwrap();
+        let shipped_off: u64 = t.rows[1][2].parse().unwrap();
+        assert!(shipped_on * 10 < shipped_off, "delta {shipped_on} vs full {shipped_off}");
+    }
+}

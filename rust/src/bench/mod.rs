@@ -1,0 +1,14 @@
+//! Experiment drivers: one function per paper table/figure, shared by the
+//! `rust/benches/*` binaries and the CLI's `xufs bench` subcommand. Every
+//! driver returns [`report::Table`]s whose rows mirror what the paper
+//! plots, with the paper's own numbers attached as notes for side-by-side
+//! comparison (EXPERIMENTS.md records both).
+
+pub mod figures;
+pub mod report;
+
+pub use figures::{
+    run_ablation_consistency, run_ablation_delta, run_ablation_prefetch, run_ablation_stripes,
+    run_ablation_writeback, run_fig2_fig3, run_fig4, run_fig5_table2, run_table1,
+};
+pub use report::Table;

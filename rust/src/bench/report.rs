@@ -1,0 +1,143 @@
+//! Bench report formatting: fixed-width tables on stdout plus a JSON
+//! sidecar line per table (machine-readable, picked up by EXPERIMENTS.md
+//! tooling).
+
+use crate::util::Json;
+
+/// A printable results table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Free-form notes printed under the table (paper reference values,
+    /// shape checks).
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Self {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.headers.len(), "row arity");
+        self.rows.push(cells);
+        self
+    }
+
+    pub fn note(&mut self, note: impl Into<String>) -> &mut Self {
+        self.notes.push(note.into());
+        self
+    }
+
+    fn widths(&self) -> Vec<usize> {
+        let mut w: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                w[i] = w[i].max(c.len());
+            }
+        }
+        w
+    }
+
+    /// Render to stdout.
+    pub fn print(&self) {
+        let w = self.widths();
+        let line = |sep: &str| {
+            w.iter().map(|n| "-".repeat(n + 2)).collect::<Vec<_>>().join(sep)
+        };
+        println!("\n== {} ==", self.title);
+        println!("+{}+", line("+"));
+        let fmt_row = |cells: &[String]| {
+            let body = cells
+                .iter()
+                .zip(&w)
+                .map(|(c, n)| format!(" {c:>width$} ", width = n))
+                .collect::<Vec<_>>()
+                .join("|");
+            format!("|{body}|")
+        };
+        println!("{}", fmt_row(&self.headers));
+        println!("+{}+", line("+"));
+        for row in &self.rows {
+            println!("{}", fmt_row(row));
+        }
+        println!("+{}+", line("+"));
+        for n in &self.notes {
+            println!("  note: {n}");
+        }
+        println!("  json: {}", self.to_json());
+    }
+
+    /// Machine-readable form.
+    pub fn to_json(&self) -> Json {
+        let headers: Vec<Json> = self.headers.iter().map(|h| Json::Str(h.clone())).collect();
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|r| Json::Arr(r.iter().map(|c| Json::Str(c.clone())).collect()))
+            .collect();
+        Json::obj()
+            .set("title", self.title.clone())
+            .set("headers", Json::Arr(headers))
+            .set("rows", Json::Arr(rows))
+    }
+}
+
+/// Format seconds with bench-appropriate precision.
+pub fn secs(s: f64) -> String {
+    if s >= 100.0 {
+        format!("{s:.0}")
+    } else if s >= 1.0 {
+        format!("{s:.1}")
+    } else {
+        format!("{s:.3}")
+    }
+}
+
+/// Format a MiB/s rate.
+pub fn rate(r: f64) -> String {
+    if r >= 100.0 {
+        format!("{r:.0}")
+    } else {
+        format!("{r:.1}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_roundtrip() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.note("hello");
+        let j = t.to_json();
+        assert_eq!(j.get("title").unwrap().as_str(), Some("Demo"));
+        assert_eq!(j.get("rows").unwrap().as_arr().unwrap().len(), 1);
+        t.print(); // shouldn't panic
+    }
+
+    #[test]
+    #[should_panic(expected = "row arity")]
+    fn arity_checked() {
+        let mut t = Table::new("Demo", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(secs(123.4), "123");
+        assert_eq!(secs(12.34), "12.3");
+        assert_eq!(secs(0.1234), "0.123");
+        assert_eq!(rate(123.4), "123");
+        assert_eq!(rate(12.34), "12.3");
+    }
+}

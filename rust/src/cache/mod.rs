@@ -1,0 +1,549 @@
+//! Client cache space (paper §3.1).
+//!
+//! When a remote name space is mounted, a private cache space is created on
+//! the client host — at TeraGrid sites, on the parallel-FS work partition.
+//! XUFS recreates remote directories entirely in cache space: placeholder
+//! entries plus **hidden attribute files** holding each entry's attributes
+//! (so `stat()` never touches the WAN), file content fetched whole on first
+//! `open()`, writes aggregated in **shadow files** flushed on `close()`
+//! (last-close-wins), and **localized directories** whose contents never
+//! leave the client.
+//!
+//! The cache space is itself a [`FileStore`] (the on-disk layout the paper
+//! describes), plus an in-memory index rebuilt from those hidden files
+//! after a client crash — [`CacheSpace::recover`] is exactly that rebuild.
+
+use std::collections::HashMap;
+
+use crate::homefs::{FileStore, FsError, FsResult, NodeKind};
+use crate::proto::WireAttr;
+use crate::simnet::VirtualTime;
+use crate::util::path as vpath;
+use crate::util::Json;
+
+/// Consistency state of a cached entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EntryState {
+    /// Content matches `version` at the home space (as far as callbacks
+    /// have told us).
+    Clean,
+    /// Locally modified; flush queued in the meta-operation queue.
+    Dirty,
+    /// Callback invalidated it; must re-fetch before next open.
+    Invalid,
+    /// Attributes cached (from directory materialization) but content
+    /// never fetched — the "initial empty file entry" of the paper.
+    AttrOnly,
+}
+
+impl EntryState {
+    fn as_str(self) -> &'static str {
+        match self {
+            EntryState::Clean => "clean",
+            EntryState::Dirty => "dirty",
+            EntryState::Invalid => "invalid",
+            EntryState::AttrOnly => "attronly",
+        }
+    }
+
+    fn parse(s: &str) -> Option<Self> {
+        Some(match s {
+            "clean" => EntryState::Clean,
+            "dirty" => EntryState::Dirty,
+            "invalid" => EntryState::Invalid,
+            "attronly" => EntryState::AttrOnly,
+            _ => return None,
+        })
+    }
+}
+
+/// Index record for one cached home-space path.
+#[derive(Debug, Clone)]
+pub struct CacheEntry {
+    pub state: EntryState,
+    /// Home-space version the cached content corresponds to.
+    pub version: u64,
+    /// Per-block digests of the cached content (delta-writeback base).
+    pub digests: Vec<i32>,
+    /// Cached attributes (size/kind/mtime as of `version`).
+    pub attr: WireAttr,
+    /// Last access (LRU eviction).
+    pub last_used: VirtualTime,
+}
+
+/// A directory whose entries have been materialized.
+#[derive(Debug, Clone, Default)]
+pub struct DirState {
+    pub complete: bool,
+    pub prefetched: bool,
+}
+
+/// The cache space: on-disk layout + index.
+#[derive(Debug)]
+pub struct CacheSpace {
+    /// Cache contents, keyed by *home-space path* (1:1 layout).
+    fs: FileStore,
+    entries: HashMap<String, CacheEntry>,
+    dirs: HashMap<String, DirState>,
+    localized: Vec<String>,
+    capacity: u64,
+}
+
+impl CacheSpace {
+    pub fn new(capacity: u64, localized: Vec<String>) -> Self {
+        CacheSpace {
+            fs: FileStore::default(),
+            entries: HashMap::new(),
+            dirs: HashMap::new(),
+            localized: localized.into_iter().map(|d| vpath::normalize(&d)).collect(),
+            capacity,
+        }
+    }
+
+    /// Is `path` inside a localized directory (content never shipped home)?
+    pub fn is_localized(&self, path: &str) -> bool {
+        self.localized.iter().any(|d| vpath::is_under(path, d))
+    }
+
+    pub fn localized_dirs(&self) -> &[String] {
+        &self.localized
+    }
+
+    pub fn store(&self) -> &FileStore {
+        &self.fs
+    }
+
+    pub fn store_mut(&mut self) -> &mut FileStore {
+        &mut self.fs
+    }
+
+    pub fn entry(&self, path: &str) -> Option<&CacheEntry> {
+        self.entries.get(&vpath::normalize(path))
+    }
+
+    pub fn entry_mut(&mut self, path: &str) -> Option<&mut CacheEntry> {
+        self.entries.get_mut(&vpath::normalize(path))
+    }
+
+    pub fn dir_state(&self, path: &str) -> Option<&DirState> {
+        self.dirs.get(&vpath::normalize(path))
+    }
+
+    pub fn set_dir_prefetched(&mut self, path: &str) {
+        self.dirs.entry(vpath::normalize(path)).or_default().prefetched = true;
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.fs.used_bytes()
+    }
+
+    pub fn entry_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Record a materialized directory: create the directory in cache
+    /// space, placeholder entries and hidden attribute files.
+    pub fn materialize_dir(
+        &mut self,
+        dir: &str,
+        entries: &[(String, WireAttr)],
+        now: VirtualTime,
+    ) -> FsResult<()> {
+        let dir_n = vpath::normalize(dir);
+        self.fs.mkdir_p(&dir_n, now)?;
+        for (name, attr) in entries {
+            let p = vpath::join(&dir_n, name);
+            match attr.kind {
+                NodeKind::Dir => {
+                    self.fs.mkdir_p(&p, now)?;
+                }
+                NodeKind::File => {
+                    if !self.fs.exists(&p) {
+                        self.fs.create(&p, now)?;
+                    }
+                }
+            }
+            let (state, version, digests) = match self.entries.get(&p) {
+                // don't clobber content we already hold
+                Some(e) if e.state != EntryState::AttrOnly => {
+                    (e.state, e.version, e.digests.clone())
+                }
+                _ => (EntryState::AttrOnly, attr.version, Vec::new()),
+            };
+            self.entries.insert(
+                p.clone(),
+                CacheEntry { state, version, digests, attr: attr.clone(), last_used: now },
+            );
+            self.sync_attr_file(&p, now)?;
+        }
+        self.dirs.entry(dir_n).or_default().complete = true;
+        Ok(())
+    }
+
+    /// Paper §3.1: attributes live in hidden files alongside the entries.
+    /// Kept in sync on every state change so crash recovery sees the truth.
+    fn sync_attr_file(&mut self, path: &str, now: VirtualTime) -> FsResult<()> {
+        let p = vpath::normalize(path);
+        let Some(e) = self.entries.get(&p) else { return Ok(()) };
+        let json = Json::obj()
+            .set("kind", if e.attr.kind == NodeKind::Dir { "dir" } else { "file" })
+            .set("size", e.attr.size)
+            .set("mtime_ns", e.attr.mtime_ns)
+            .set("mode", e.attr.mode as u64)
+            .set("version", e.version)
+            .set("state", e.state.as_str())
+            .set("digests", Json::Arr(e.digests.iter().map(|&d| Json::Num(d as f64)).collect()));
+        let dir = vpath::parent(&p);
+        let name = vpath::basename(&p);
+        let apath = vpath::join(&dir, &vpath::attr_file_name(&name));
+        self.fs.mkdir_p(&dir, now)?;
+        self.fs.write(&apath, json.to_string().as_bytes(), now)
+    }
+
+    /// Install fetched content as a clean cached copy.
+    pub fn install(
+        &mut self,
+        path: &str,
+        data: &[u8],
+        version: u64,
+        digests: Vec<i32>,
+        attr: WireAttr,
+        now: VirtualTime,
+    ) -> FsResult<()> {
+        let p = vpath::normalize(path);
+        self.fs.mkdir_p(&vpath::parent(&p), now)?;
+        self.fs.write(&p, data, now)?;
+        self.entries.insert(
+            p.clone(),
+            CacheEntry { state: EntryState::Clean, version, digests, attr, last_used: now },
+        );
+        self.sync_attr_file(&p, now)?;
+        self.maybe_evict(&p, now);
+        Ok(())
+    }
+
+    /// Record a local modification (shadow-file flush): content already
+    /// written to the cache store by the caller.
+    pub fn mark_dirty(&mut self, path: &str, digests: Vec<i32>, now: VirtualTime) -> FsResult<()> {
+        let p = vpath::normalize(path);
+        let attr = self.fs.stat(&p)?;
+        let wire = WireAttr::from_attr(&attr);
+        let version = self.entries.get(&p).map(|e| e.version).unwrap_or(0);
+        self.entries.insert(
+            p.clone(),
+            CacheEntry { state: EntryState::Dirty, version, digests, attr: wire, last_used: now },
+        );
+        self.sync_attr_file(&p, now)
+    }
+
+    /// Flush acknowledged by the server: entry is clean at `new_version`.
+    pub fn mark_flushed(&mut self, path: &str, new_version: u64, now: VirtualTime) -> FsResult<()> {
+        let p = vpath::normalize(path);
+        if let Some(e) = self.entries.get_mut(&p) {
+            e.state = EntryState::Clean;
+            e.version = new_version;
+            e.attr.version = new_version;
+            e.last_used = now;
+        }
+        self.sync_attr_file(&p, now)
+    }
+
+    /// Callback invalidation: mark stale (content kept for disconnected
+    /// reads, but the next open must re-fetch). Dirty entries stay dirty —
+    /// last-close-wins means our queued flush will overwrite anyway.
+    pub fn invalidate(&mut self, path: &str, now: VirtualTime) -> bool {
+        let p = vpath::normalize(path);
+        // a changed entry also invalidates the materialized parent listing
+        self.dirs.remove(&vpath::parent(&p));
+        match self.entries.get_mut(&p) {
+            Some(e) if e.state != EntryState::Dirty => {
+                e.state = EntryState::Invalid;
+                let _ = self.sync_attr_file(&p, now);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Home-space removal: drop the cached copy entirely.
+    pub fn remove(&mut self, path: &str, now: VirtualTime) {
+        let p = vpath::normalize(path);
+        self.dirs.remove(&vpath::parent(&p));
+        self.dirs.remove(&p);
+        self.entries.remove(&p);
+        let _ = self.fs.unlink(&p, now);
+        let dir = vpath::parent(&p);
+        let name = vpath::basename(&p);
+        let _ = self.fs.unlink(&vpath::join(&dir, &vpath::attr_file_name(&name)), now);
+    }
+
+    /// After a callback-channel reconnect the client may have missed
+    /// invalidations: distrust every clean entry (AttrOnly entries are
+    /// revalidated on open anyway).
+    pub fn suspect_all_clean(&mut self, now: VirtualTime) -> usize {
+        let keys: Vec<String> = self
+            .entries
+            .iter()
+            .filter(|(_, e)| e.state == EntryState::Clean)
+            .map(|(k, _)| k.clone())
+            .collect();
+        let n = keys.len();
+        for k in keys {
+            if let Some(e) = self.entries.get_mut(&k) {
+                e.state = EntryState::Invalid;
+            }
+            let _ = self.sync_attr_file(&k, now);
+        }
+        n
+    }
+
+    pub fn touch(&mut self, path: &str, now: VirtualTime) {
+        if let Some(e) = self.entries.get_mut(&vpath::normalize(path)) {
+            e.last_used = now;
+        }
+    }
+
+    /// LRU eviction of *clean* content when over capacity. Never evicts
+    /// dirty entries (their flush hasn't been acknowledged), localized
+    /// files, or the entry just installed.
+    fn maybe_evict(&mut self, keep: &str, now: VirtualTime) {
+        while self.fs.used_bytes() > self.capacity {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(p, e)| {
+                    e.state == EntryState::Clean
+                        && p.as_str() != keep
+                        && !self.is_localized(p)
+                        && self.fs.stat(p).map(|a| a.size > 0).unwrap_or(false)
+                })
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(p, _)| p.clone());
+            let Some(victim) = victim else { break };
+            let _ = self.fs.truncate(&victim, 0, now);
+            if let Some(e) = self.entries.get_mut(&victim) {
+                e.state = EntryState::AttrOnly;
+                e.digests.clear();
+            }
+            let _ = self.sync_attr_file(&victim, now);
+        }
+    }
+
+    /// Rebuild the index from the hidden attribute files — the client
+    /// crash-recovery path (the on-disk cache space survived the crash).
+    pub fn recover(fs: FileStore, capacity: u64, localized: Vec<String>, now: VirtualTime) -> Self {
+        let mut cache = CacheSpace {
+            fs,
+            entries: HashMap::new(),
+            dirs: HashMap::new(),
+            localized: localized.into_iter().map(|d| vpath::normalize(&d)).collect(),
+            capacity,
+        };
+        let walked = cache.fs.walk("/").unwrap_or_default();
+        for (path, _attr) in walked {
+            let name = vpath::basename(&path);
+            let Some(entry_name) = name.strip_prefix(".xufs.attr.") else { continue };
+            let dir = vpath::parent(&path);
+            let entry_path = vpath::join(&dir, entry_name);
+            let Ok(raw) = cache.fs.read(&path) else { continue };
+            let Ok(json) = Json::parse(&String::from_utf8_lossy(raw)) else { continue };
+            let kind = if json.get("kind").and_then(|k| k.as_str()) == Some("dir") {
+                NodeKind::Dir
+            } else {
+                NodeKind::File
+            };
+            let state = json
+                .get("state")
+                .and_then(|s| s.as_str())
+                .and_then(EntryState::parse)
+                .unwrap_or(EntryState::AttrOnly);
+            let digests: Vec<i32> = json
+                .get("digests")
+                .and_then(|d| d.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_i64()).map(|x| x as i32).collect())
+                .unwrap_or_default();
+            let attr = WireAttr {
+                kind,
+                size: json.get("size").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+                mtime_ns: json.get("mtime_ns").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+                mode: json.get("mode").and_then(|v| v.as_i64()).unwrap_or(0o600) as u32,
+                version: json.get("version").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
+            };
+            cache.entries.insert(
+                entry_path,
+                CacheEntry { state, version: attr.version, digests, attr, last_used: now },
+            );
+        }
+        cache
+    }
+
+    /// Readdir served from cache, hiding `.xufs.*` metadata.
+    pub fn readdir(&self, dir: &str) -> Result<Vec<(String, WireAttr)>, FsError> {
+        let dir_n = vpath::normalize(dir);
+        let mut out = Vec::new();
+        for (name, _attr) in self.fs.readdir(&dir_n)? {
+            if vpath::is_hidden_meta(&name) {
+                continue;
+            }
+            let p = vpath::join(&dir_n, &name);
+            let wire = match self.entries.get(&p) {
+                Some(e) => e.attr.clone(),
+                None => WireAttr::from_attr(&self.fs.stat(&p)?),
+            };
+            out.push((name, wire));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> VirtualTime {
+        VirtualTime::from_secs(s)
+    }
+
+    fn wattr(size: u64, version: u64, kind: NodeKind) -> WireAttr {
+        WireAttr { kind, size, mtime_ns: 0, mode: 0o600, version }
+    }
+
+    fn cache() -> CacheSpace {
+        CacheSpace::new(u64::MAX, vec!["/scratch/out".into()])
+    }
+
+    #[test]
+    fn materialize_creates_placeholders_and_attr_files() {
+        let mut c = cache();
+        c.materialize_dir(
+            "/home/u",
+            &[
+                ("a.txt".into(), wattr(100, 3, NodeKind::File)),
+                ("sub".into(), wattr(0, 1, NodeKind::Dir)),
+            ],
+            t(1.0),
+        )
+        .unwrap();
+        // placeholder file is empty (content not fetched)
+        assert_eq!(c.store().stat("/home/u/a.txt").unwrap().size, 0);
+        // but the cached attr reports the real size (stat from hidden file)
+        assert_eq!(c.entry("/home/u/a.txt").unwrap().attr.size, 100);
+        assert_eq!(c.entry("/home/u/a.txt").unwrap().state, EntryState::AttrOnly);
+        assert!(c.store().exists("/home/u/.xufs.attr.a.txt"));
+        assert!(c.dir_state("/home/u").unwrap().complete);
+        // readdir hides metadata files
+        let names: Vec<String> = c.readdir("/home/u").unwrap().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a.txt", "sub"]);
+    }
+
+    #[test]
+    fn install_then_invalidate_then_remove() {
+        let mut c = cache();
+        c.install("/home/u/f", b"data", 5, vec![1, 2], wattr(4, 5, NodeKind::File), t(1.0)).unwrap();
+        assert_eq!(c.entry("/home/u/f").unwrap().state, EntryState::Clean);
+        assert_eq!(c.store().read("/home/u/f").unwrap(), b"data");
+        assert!(c.invalidate("/home/u/f", t(2.0)));
+        assert_eq!(c.entry("/home/u/f").unwrap().state, EntryState::Invalid);
+        // content retained for disconnected reads
+        assert_eq!(c.store().read("/home/u/f").unwrap(), b"data");
+        c.remove("/home/u/f", t(3.0));
+        assert!(c.entry("/home/u/f").is_none());
+        assert!(!c.store().exists("/home/u/f"));
+        assert!(!c.store().exists("/home/u/.xufs.attr.f"));
+    }
+
+    #[test]
+    fn dirty_entries_resist_invalidation() {
+        let mut c = cache();
+        c.install("/f", b"v1", 1, vec![], wattr(2, 1, NodeKind::File), t(1.0)).unwrap();
+        c.store_mut().write("/f", b"local edit", t(2.0)).unwrap();
+        c.mark_dirty("/f", vec![9], t(2.0)).unwrap();
+        // last-close-wins: our queued flush will overwrite the home copy
+        assert!(!c.invalidate("/f", t(3.0)));
+        assert_eq!(c.entry("/f").unwrap().state, EntryState::Dirty);
+        c.mark_flushed("/f", 7, t(4.0)).unwrap();
+        let e = c.entry("/f").unwrap();
+        assert_eq!(e.state, EntryState::Clean);
+        assert_eq!(e.version, 7);
+    }
+
+    #[test]
+    fn localized_paths() {
+        let c = cache();
+        assert!(c.is_localized("/scratch/out/run1/data.bin"));
+        assert!(c.is_localized("/scratch/out"));
+        assert!(!c.is_localized("/scratch/outside"));
+        assert!(!c.is_localized("/home/u/f"));
+    }
+
+    #[test]
+    fn eviction_lru_spares_dirty() {
+        let mut c = CacheSpace::new(1900, vec![]);
+        c.install("/old", &[1u8; 400], 1, vec![], wattr(400, 1, NodeKind::File), t(1.0)).unwrap();
+        c.install("/dirty", &[2u8; 400], 1, vec![], wattr(400, 1, NodeKind::File), t(2.0)).unwrap();
+        c.store_mut().write("/dirty", &[3u8; 400], t(2.5)).unwrap();
+        c.mark_dirty("/dirty", vec![], t(2.5)).unwrap();
+        // this install pushes over capacity; /old (LRU clean) is truncated
+        c.install("/new", &[4u8; 900], 1, vec![], wattr(900, 1, NodeKind::File), t(3.0)).unwrap();
+        assert_eq!(c.entry("/old").unwrap().state, EntryState::AttrOnly);
+        assert_eq!(c.store().stat("/old").unwrap().size, 0);
+        assert_eq!(c.entry("/dirty").unwrap().state, EntryState::Dirty);
+        assert_eq!(c.store().read("/dirty").unwrap(), &[3u8; 400]);
+    }
+
+    #[test]
+    fn crash_recovery_rebuilds_index_from_hidden_files() {
+        let mut c = cache();
+        c.materialize_dir("/home/u", &[("a".into(), wattr(10, 2, NodeKind::File))], t(1.0)).unwrap();
+        c.install("/home/u/b", b"content", 4, vec![11, 22], wattr(7, 4, NodeKind::File), t(2.0))
+            .unwrap();
+        c.store_mut().write("/home/u/c", b"dirty stuff", t(3.0)).unwrap();
+        c.mark_dirty("/home/u/c", vec![33], t(3.0)).unwrap();
+
+        // "crash": drop the in-memory index, keep the on-disk store
+        let disk = c.fs.clone();
+        let r = CacheSpace::recover(disk, u64::MAX, vec![], t(10.0));
+        assert_eq!(r.entry("/home/u/a").unwrap().state, EntryState::AttrOnly);
+        let b = r.entry("/home/u/b").unwrap();
+        assert_eq!(b.state, EntryState::Clean);
+        assert_eq!(b.version, 4);
+        assert_eq!(b.digests, vec![11, 22]);
+        let cc = r.entry("/home/u/c").unwrap();
+        assert_eq!(cc.state, EntryState::Dirty);
+        assert_eq!(cc.digests, vec![33]);
+        // content survived
+        assert_eq!(r.store().read("/home/u/b").unwrap(), b"content");
+    }
+
+    #[test]
+    fn suspect_all_clean_after_reconnect() {
+        let mut c = cache();
+        c.install("/a", b"1", 1, vec![], wattr(1, 1, NodeKind::File), t(1.0)).unwrap();
+        c.install("/b", b"2", 1, vec![], wattr(1, 1, NodeKind::File), t(1.0)).unwrap();
+        c.store_mut().write("/b", b"x", t(2.0)).unwrap();
+        c.mark_dirty("/b", vec![], t(2.0)).unwrap();
+        assert_eq!(c.suspect_all_clean(t(3.0)), 1);
+        assert_eq!(c.entry("/a").unwrap().state, EntryState::Invalid);
+        assert_eq!(c.entry("/b").unwrap().state, EntryState::Dirty);
+    }
+
+    #[test]
+    fn invalidate_drops_parent_dir_completeness() {
+        let mut c = cache();
+        c.materialize_dir("/d", &[("f".into(), wattr(1, 1, NodeKind::File))], t(1.0)).unwrap();
+        assert!(c.dir_state("/d").unwrap().complete);
+        c.install("/d/f", b"x", 1, vec![], wattr(1, 1, NodeKind::File), t(2.0)).unwrap();
+        c.invalidate("/d/f", t(3.0));
+        assert!(c.dir_state("/d").is_none(), "listing must be re-fetched");
+    }
+
+    #[test]
+    fn rematerialize_preserves_cached_content_state() {
+        let mut c = cache();
+        c.install("/d/f", b"cached", 3, vec![5], wattr(6, 3, NodeKind::File), t(1.0)).unwrap();
+        c.materialize_dir("/d", &[("f".into(), wattr(6, 3, NodeKind::File))], t(2.0)).unwrap();
+        let e = c.entry("/d/f").unwrap();
+        assert_eq!(e.state, EntryState::Clean, "re-listing must not forget content");
+        assert_eq!(e.digests, vec![5]);
+    }
+}

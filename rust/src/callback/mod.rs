@@ -1,0 +1,150 @@
+//! Notification callback channel (paper §3.1).
+//!
+//! Cache consistency with the home space is maintained by the notification
+//! callback manager: the client registers with the file server over a
+//! persistent channel; any change at the home space invalidates the cached
+//! copy. This module provides the shared channel both transports use: in
+//! the simulated deployment the server pushes events directly into the
+//! channel; over TCP a pump thread feeds it from the socket. The client
+//! drains it at every op boundary (the interposed calls are the natural
+//! poll points) and the coordinator's background loop.
+//!
+//! Disconnection semantics (AFS-2 style, paper §3.1 + §5): while the
+//! channel is down the client keeps serving cached files (availability
+//! during outages); on reconnect it must *re-register* and treat cached
+//! entries as suspect until revalidated, since callbacks may have been
+//! lost — the channel tracks a `generation` that bumps on every reconnect
+//! so the client can tell.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+use crate::proto::NotifyEvent;
+
+#[derive(Debug, Default)]
+struct Inner {
+    queue: VecDeque<NotifyEvent>,
+    connected: bool,
+    generation: u64,
+    /// Events dropped while disconnected (diagnostic; the client cannot
+    /// see these, which is exactly why reconnect implies revalidation).
+    dropped: u64,
+}
+
+/// Shared callback channel endpoint.
+#[derive(Debug, Clone, Default)]
+pub struct NotifyChannel {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl NotifyChannel {
+    pub fn new() -> Self {
+        let ch = NotifyChannel::default();
+        ch.inner.lock().unwrap().connected = true;
+        ch
+    }
+
+    /// Server side: push an event. Events sent while the channel is down
+    /// are lost (counted), like TCP data to a dead peer.
+    pub fn push(&self, ev: NotifyEvent) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        if g.connected {
+            g.queue.push_back(ev);
+            true
+        } else {
+            g.dropped += 1;
+            false
+        }
+    }
+
+    /// Client side: drain pending events.
+    pub fn drain(&self) -> Vec<NotifyEvent> {
+        let mut g = self.inner.lock().unwrap();
+        g.queue.drain(..).collect()
+    }
+
+    /// Sever the channel (network outage / server crash). Pending
+    /// undelivered events are discarded — they were in flight.
+    pub fn disconnect(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.connected = false;
+        g.queue.clear();
+    }
+
+    /// Re-establish the channel; bumps the generation so the client knows
+    /// callbacks may have been missed.
+    pub fn reconnect(&self) -> u64 {
+        let mut g = self.inner.lock().unwrap();
+        g.connected = true;
+        g.generation += 1;
+        g.generation
+    }
+
+    pub fn is_connected(&self) -> bool {
+        self.inner.lock().unwrap().connected
+    }
+
+    pub fn generation(&self) -> u64 {
+        self.inner.lock().unwrap().generation
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.inner.lock().unwrap().dropped
+    }
+
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inval(p: &str) -> NotifyEvent {
+        NotifyEvent::Invalidate { path: p.into(), new_version: 2 }
+    }
+
+    #[test]
+    fn push_drain_fifo() {
+        let ch = NotifyChannel::new();
+        assert!(ch.push(inval("/a")));
+        assert!(ch.push(inval("/b")));
+        let evs = ch.drain();
+        assert_eq!(evs.len(), 2);
+        assert_eq!(evs[0], inval("/a"));
+        assert!(ch.drain().is_empty());
+    }
+
+    #[test]
+    fn disconnected_drops_events() {
+        let ch = NotifyChannel::new();
+        ch.push(inval("/in-flight"));
+        ch.disconnect();
+        // in-flight event was lost with the connection
+        assert_eq!(ch.pending(), 0);
+        assert!(!ch.push(inval("/lost")));
+        assert_eq!(ch.dropped(), 1);
+        assert!(ch.drain().is_empty());
+    }
+
+    #[test]
+    fn reconnect_bumps_generation() {
+        let ch = NotifyChannel::new();
+        assert_eq!(ch.generation(), 0);
+        ch.disconnect();
+        assert!(!ch.is_connected());
+        let g = ch.reconnect();
+        assert_eq!(g, 1);
+        assert!(ch.is_connected());
+        assert!(ch.push(inval("/again")));
+    }
+
+    #[test]
+    fn shared_between_clones() {
+        let ch = NotifyChannel::new();
+        let server_side = ch.clone();
+        server_side.push(NotifyEvent::ServerRestart);
+        assert_eq!(ch.drain(), vec![NotifyEvent::ServerRestart]);
+    }
+}

@@ -1,0 +1,47 @@
+//! The client side of XUFS: the [`Vfs`] interface (stand-in for the
+//! `libxufs.so` libc interposition — every interposed call has a 1:1
+//! method here), the [`ServerLink`] transport abstraction, and the
+//! [`XufsClient`] implementation.
+
+mod vfs;
+mod xufs;
+
+pub use vfs::{Fd, OpenFlags, Vfs};
+pub use xufs::{WritebackMode, XufsClient};
+
+use crate::homefs::FsError;
+use crate::proto::{FileImage, MetaOp, NotifyEvent, Request, Response};
+
+/// Transport to the user's file server. Two implementations:
+/// `coordinator::sim::SimLink` (modeled WAN, virtual clock) and
+/// `coordinator::net::TcpLink` (real sockets, USSH handshake).
+pub trait ServerLink {
+    /// One request/response RPC on the control connection.
+    fn rpc(&mut self, req: Request) -> Result<Response, FsError>;
+
+    /// Whole-file striped fetch (paper §3.3). Accounts transfer time.
+    fn fetch(&mut self, path: &str) -> Result<FileImage, FsError>;
+
+    /// Parallel pre-fetch of small files (paths + sizes). Accounts the
+    /// batched transfer time; files that failed are simply absent.
+    fn prefetch(&mut self, files: &[(String, u64)]) -> Vec<FileImage>;
+
+    /// Ship one meta-op (striped when the payload is large).
+    fn ship(&mut self, seq: u64, op: &MetaOp) -> Result<Response, FsError>;
+
+    /// Drain pending change notifications from the callback channel.
+    fn drain_notifications(&mut self) -> Vec<NotifyEvent>;
+
+    /// Callback-channel generation: bumps on every reconnect, telling the
+    /// client that callbacks may have been missed.
+    fn channel_generation(&self) -> u64;
+
+    fn is_connected(&self) -> bool;
+
+    /// Re-establish the connection + callback channel; returns the new
+    /// channel generation.
+    fn reconnect(&mut self) -> Result<u64, FsError>;
+
+    /// Stable client identity (used for lock ownership + idempotent replay).
+    fn client_id(&self) -> u64;
+}

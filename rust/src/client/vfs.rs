@@ -1,0 +1,121 @@
+//! The virtual file-system interface.
+//!
+//! In the paper this surface is `libxufs.so`: interposed libc calls
+//! (`open`, `read`, `write`, `close`, `stat`, `opendir`, …) redirected to
+//! cache-space copies. Applications in this reproduction (workloads,
+//! examples, baselines) are written against this trait instead — the
+//! paper's contribution is what happens *behind* the interposition, and
+//! each interposed call maps 1:1 onto a method here (DESIGN.md §2).
+
+use crate::homefs::FsError;
+use crate::proto::{LockKind, WireAttr};
+use crate::simnet::VirtualTime;
+
+/// File descriptor handle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Fd(pub u64);
+
+/// Open flags (the subset the workloads exercise).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct OpenFlags {
+    pub read: bool,
+    pub write: bool,
+    pub create: bool,
+    pub truncate: bool,
+    pub append: bool,
+}
+
+impl OpenFlags {
+    /// `O_RDONLY`
+    pub fn rdonly() -> Self {
+        OpenFlags { read: true, ..Default::default() }
+    }
+
+    /// `O_WRONLY | O_CREAT | O_TRUNC`
+    pub fn wronly_create() -> Self {
+        OpenFlags { write: true, create: true, truncate: true, ..Default::default() }
+    }
+
+    /// `O_RDWR`
+    pub fn rdwr() -> Self {
+        OpenFlags { read: true, write: true, ..Default::default() }
+    }
+
+    /// `O_WRONLY | O_APPEND`
+    pub fn append() -> Self {
+        OpenFlags { write: true, append: true, ..Default::default() }
+    }
+}
+
+/// The interposed file-system interface.
+pub trait Vfs {
+    fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd, FsError>;
+    /// Sequential read at the fd's position; returns <= `len` bytes
+    /// (empty at EOF).
+    fn read(&mut self, fd: Fd, len: usize) -> Result<Vec<u8>, FsError>;
+    /// Sequential write at the fd's position.
+    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize, FsError>;
+    fn seek(&mut self, fd: Fd, pos: u64) -> Result<(), FsError>;
+    fn close(&mut self, fd: Fd) -> Result<(), FsError>;
+
+    fn stat(&mut self, path: &str) -> Result<WireAttr, FsError>;
+    fn readdir(&mut self, path: &str) -> Result<Vec<(String, WireAttr)>, FsError>;
+    fn chdir(&mut self, path: &str) -> Result<(), FsError>;
+    fn mkdir(&mut self, path: &str) -> Result<(), FsError>;
+    fn unlink(&mut self, path: &str) -> Result<(), FsError>;
+    fn rename(&mut self, from: &str, to: &str) -> Result<(), FsError>;
+    fn truncate(&mut self, path: &str, size: u64) -> Result<(), FsError>;
+
+    fn lock(&mut self, fd: Fd, kind: LockKind) -> Result<(), FsError>;
+    fn unlock(&mut self, fd: Fd) -> Result<(), FsError>;
+
+    /// Force pending write-backs to the authoritative store.
+    fn fsync(&mut self) -> Result<(), FsError>;
+
+    /// Current (virtual) time — workloads measure durations with this.
+    fn now(&self) -> VirtualTime;
+
+    /// Application CPU time passing on the same clock (e.g. compile time
+    /// in the build workload). Simulated clocks jump; real clocks sleep.
+    fn think(&mut self, _secs: f64) {}
+
+    /// Convenience: read a whole file sequentially in `chunk`-byte reads
+    /// (the `wc -l` access pattern of §4.3). Returns total bytes read.
+    fn scan_file(&mut self, path: &str, chunk: usize) -> Result<u64, FsError> {
+        let fd = self.open(path, OpenFlags::rdonly())?;
+        let mut total = 0u64;
+        loop {
+            let buf = self.read(fd, chunk)?;
+            if buf.is_empty() {
+                break;
+            }
+            total += buf.len() as u64;
+        }
+        self.close(fd)?;
+        Ok(total)
+    }
+
+    /// Convenience: create/replace a file with `data` (open-write-close,
+    /// the IOzone write pattern — close cost included).
+    fn write_file(&mut self, path: &str, data: &[u8], chunk: usize) -> Result<(), FsError> {
+        let fd = self.open(path, OpenFlags::wronly_create())?;
+        for c in data.chunks(chunk.max(1)) {
+            self.write(fd, c)?;
+        }
+        self.close(fd)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flag_constructors() {
+        assert!(OpenFlags::rdonly().read && !OpenFlags::rdonly().write);
+        let w = OpenFlags::wronly_create();
+        assert!(w.write && w.create && w.truncate && !w.read);
+        assert!(OpenFlags::rdwr().read && OpenFlags::rdwr().write);
+        assert!(OpenFlags::append().append);
+    }
+}

@@ -1,0 +1,828 @@
+//! The XUFS client: whole-file caching, shadow-file writes, meta-op queue,
+//! callback consistency, lock leases, striped fetch + parallel pre-fetch.
+//! This is `libxufs.so` + sync manager + notification callback manager +
+//! lease manager of Figure 1, over a pluggable [`ServerLink`].
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::cache::{CacheSpace, EntryState};
+use crate::client::vfs::{Fd, OpenFlags, Vfs};
+use crate::client::ServerLink;
+use crate::config::XufsConfig;
+use crate::homefs::{FsError, NodeKind};
+use crate::lease::LeaseManager;
+use crate::metaq::MetaQueue;
+use crate::metrics::{names, Metrics};
+use crate::proto::{LockKind, MetaOp, NotifyEvent, Request, Response, WireAttr};
+use crate::runtime::DigestEngine;
+use crate::simnet::{Clock, VirtualTime};
+use crate::transfer;
+use crate::util::path as vpath;
+use crate::vdisk::DiskModel;
+
+/// When queued meta-ops are shipped to the server.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WritebackMode {
+    /// Ship on every close (the measured behaviour in §4.1, where close
+    /// cost includes the cache flush).
+    SyncOnClose,
+    /// Accumulate; ship on `fsync`/unmount or when the queue grows past a
+    /// threshold. (Paper's "no file operation blocks on a remote call";
+    /// ablation `writeback_mode`.)
+    Async,
+}
+
+#[derive(Debug)]
+struct OpenFile {
+    path: String,
+    pos: u64,
+    flags: OpenFlags,
+    /// Shadow-file path in the cache store, present for write handles.
+    shadow: Option<String>,
+    wrote: bool,
+    localized: bool,
+}
+
+/// The XUFS client. One per mount (paper: a private user-space server and
+/// name space per user).
+pub struct XufsClient<L: ServerLink> {
+    link: L,
+    cache: CacheSpace,
+    queue: MetaQueue,
+    lease: LeaseManager,
+    engine: Arc<DigestEngine>,
+    clock: Arc<dyn Clock>,
+    cache_disk: DiskModel,
+    cfg: XufsConfig,
+    fds: HashMap<u64, OpenFile>,
+    fd_locks: HashMap<u64, u64>, // fd -> lease token (remote locks)
+    local_locks: HashMap<String, (u64, LockKind)>, // localized-dir locks (fd, kind)
+    next_fd: u64,
+    cwd: String,
+    mount_root: String,
+    metrics: Metrics,
+    last_gen: u64,
+    pub writeback: WritebackMode,
+    /// Async mode ships the queue once this many ops accumulate.
+    pub async_flush_threshold: usize,
+}
+
+impl<L: ServerLink> XufsClient<L> {
+    /// Build a client over an established (authenticated, callback-
+    /// registered) link. `mount_root` is the home-space subtree imported.
+    pub fn new(
+        link: L,
+        cfg: XufsConfig,
+        engine: Arc<DigestEngine>,
+        clock: Arc<dyn Clock>,
+        mount_root: &str,
+        metrics: Metrics,
+    ) -> Self {
+        let root = vpath::normalize(mount_root);
+        let cache = CacheSpace::new(cfg.cache.capacity, cfg.cache.localized_dirs.clone());
+        let lease = LeaseManager::new(cfg.lease.duration_s, cfg.lease.renew_fraction);
+        let cache_disk = DiskModel::new(cfg.disk.cache_bps, cfg.disk.cache_op_s);
+        let gen = link.channel_generation();
+        XufsClient {
+            link,
+            cache,
+            queue: MetaQueue::new(),
+            lease,
+            engine,
+            clock,
+            cache_disk,
+            cfg,
+            fds: HashMap::new(),
+            fd_locks: HashMap::new(),
+            local_locks: HashMap::new(),
+            next_fd: 3,
+            cwd: root.clone(),
+            mount_root: root,
+            metrics,
+            last_gen: gen,
+            writeback: WritebackMode::SyncOnClose,
+            async_flush_threshold: 64,
+        }
+    }
+
+    /// Rebuild a client from a surviving cache space after a client crash
+    /// (the `xufs sync` recovery tool): recovers the cache index from the
+    /// hidden attribute files and the meta-op queue from its persisted
+    /// entries, then replays the queue.
+    pub fn recover(
+        link: L,
+        cfg: XufsConfig,
+        engine: Arc<DigestEngine>,
+        clock: Arc<dyn Clock>,
+        mount_root: &str,
+        cache_store: crate::homefs::FileStore,
+        metrics: Metrics,
+    ) -> (Self, usize) {
+        let now = clock.now();
+        let cache = CacheSpace::recover(
+            cache_store,
+            cfg.cache.capacity,
+            cfg.cache.localized_dirs.clone(),
+            now,
+        );
+        let (queue, corrupt) = MetaQueue::recover(cache.store());
+        let mut c = Self::new(link, cfg, engine, clock, mount_root, metrics);
+        c.cache = cache;
+        c.queue = queue;
+        c.metrics.add(names::METAQ_REPLAYS, c.queue.len() as u64);
+        // replay what the crash left behind
+        let _ = c.flush_queue();
+        (c, corrupt)
+    }
+
+    pub fn cache(&self) -> &CacheSpace {
+        &self.cache
+    }
+
+    /// The surviving on-disk cache state (for crash simulations: clone
+    /// this, drop the client, then `recover`).
+    pub fn cache_store_snapshot(&self) -> crate::homefs::FileStore {
+        self.cache.store().clone()
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn link(&self) -> &L {
+        &self.link
+    }
+
+    pub fn link_mut(&mut self) -> &mut L {
+        &mut self.link
+    }
+
+    pub fn metrics(&self) -> &Metrics {
+        &self.metrics
+    }
+
+    pub fn mount_root(&self) -> &str {
+        &self.mount_root
+    }
+
+    fn abs(&self, path: &str) -> String {
+        vpath::join(&self.cwd, path)
+    }
+
+    // ---------------------------------------------------------------
+    // consistency: notifications, reconnect, lease housekeeping
+    // ---------------------------------------------------------------
+
+    /// Process callback notifications + lease renewals. Called at every
+    /// op boundary (the interposed calls are the poll points) and by the
+    /// coordinator's background tick.
+    pub fn tick(&mut self) {
+        let now = self.clock.now();
+        // reconnect detection: a new channel generation means callbacks
+        // may have been lost while we were away -> distrust clean entries
+        let gen = self.link.channel_generation();
+        if gen != self.last_gen {
+            self.last_gen = gen;
+            let n = self.cache.suspect_all_clean(now);
+            self.metrics.add(names::CACHE_INVALIDATIONS, n as u64);
+            let _ = self.link.rpc(Request::RegisterCallback {
+                root: self.mount_root.clone(),
+                client_id: self.link.client_id(),
+            });
+            // push any queued (possibly disconnected-time) mutations
+            let _ = self.flush_queue();
+        }
+        for ev in self.link.drain_notifications() {
+            match ev {
+                NotifyEvent::Invalidate { path, new_version } => {
+                    let stale = self
+                        .cache
+                        .entry(&path)
+                        .map(|e| e.version < new_version)
+                        .unwrap_or(false);
+                    if stale && self.cache.invalidate(&path, now) {
+                        self.metrics.incr(names::CACHE_INVALIDATIONS);
+                    }
+                }
+                NotifyEvent::Removed { path } => {
+                    self.cache.remove(&path, now);
+                    self.metrics.incr(names::CACHE_INVALIDATIONS);
+                }
+                NotifyEvent::ServerRestart => {
+                    let n = self.cache.suspect_all_clean(now);
+                    self.metrics.add(names::CACHE_INVALIDATIONS, n as u64);
+                    let _ = self.link.rpc(Request::RegisterCallback {
+                        root: self.mount_root.clone(),
+                        client_id: self.link.client_id(),
+                    });
+                }
+            }
+        }
+        // lease renewals due
+        self.lease.drop_expired(now);
+        for token in self.lease.due_for_renewal(now) {
+            match self.link.rpc(Request::LockRenew { token, owner: self.link.client_id() }) {
+                Ok(Response::LockGranted { lease_ns, .. }) => {
+                    self.metrics.incr(names::LEASE_RENEWALS);
+                    self.lease.renewed(token, now.add_secs(lease_ns as f64 / 1e9));
+                }
+                _ => self.lease.released(token),
+            }
+        }
+    }
+
+    /// Ship the pending meta-op queue to the server. Stops (keeping the
+    /// remainder queued) on disconnection. Returns ops shipped.
+    pub fn flush_queue(&mut self) -> Result<usize, FsError> {
+        let now = self.clock.now();
+        let mut shipped = 0;
+        // ops are MOVED out for shipping (no payload clone — §Perf L3 #3)
+        // and restored on disconnection; the persisted entry stays on
+        // disk until the server acknowledges.
+        while let Some((seq, op)) = self.queue.take_front() {
+            match self.link.ship(seq, &op) {
+                Ok(Response::Applied { new_version, .. }) => {
+                    match &op {
+                        MetaOp::WriteFull { path, .. } | MetaOp::WriteDelta { path, .. } => {
+                            self.cache.mark_flushed(path, new_version, now)?;
+                        }
+                        MetaOp::Create { path } | MetaOp::Truncate { path, .. } => {
+                            let _ = self.cache.mark_flushed(path, new_version, now);
+                        }
+                        _ => {}
+                    }
+                    if matches!(op, MetaOp::WriteFull { .. } | MetaOp::WriteDelta { .. }) {
+                        self.metrics.incr(names::WRITEBACK_FILES);
+                        self.metrics.add(names::WRITEBACK_BYTES, op.wire_bytes());
+                    }
+                    self.queue.ack(self.cache.store_mut(), seq, now)?;
+                    shipped += 1;
+                }
+                Ok(Response::Err { code: 116, .. }) => {
+                    // stale delta base: demote to a full write and retry
+                    if let MetaOp::WriteDelta { path, .. } = &op {
+                        let data = self.cache.store().read(path)?.to_vec();
+                        let digests = self.engine.digests(&data, self.cfg.stripe.min_block as usize);
+                        let full = MetaOp::WriteFull { path: path.clone(), data, digests };
+                        self.queue.push_front(seq, full.clone());
+                        self.queue.replace(self.cache.store_mut(), seq, full, now)?;
+                        continue;
+                    }
+                    return Err(FsError::Protocol("stale non-delta op".into()));
+                }
+                Ok(Response::Err { code, msg }) => {
+                    // the home-space op failed semantically (e.g. the user
+                    // removed the parent dir at home). Drop the op — the
+                    // cache keeps the local truth; surfaced via metrics.
+                    self.metrics.incr("metaq.apply_errors");
+                    let _ = (code, msg);
+                    self.queue.ack(self.cache.store_mut(), seq, now)?;
+                }
+                Ok(_) => {
+                    self.queue.push_front(seq, op);
+                    return Err(FsError::Protocol("unexpected apply response".into()));
+                }
+                Err(FsError::Disconnected) => {
+                    self.queue.push_front(seq, op);
+                    return Ok(shipped);
+                }
+                Err(e) => {
+                    self.queue.push_front(seq, op);
+                    return Err(e);
+                }
+            }
+        }
+        Ok(shipped)
+    }
+
+    fn enqueue(&mut self, op: MetaOp) -> Result<(), FsError> {
+        let now = self.clock.now();
+        self.queue.append(self.cache.store_mut(), op, now)?;
+        self.metrics.incr(names::METAQ_APPENDS);
+        match self.writeback {
+            WritebackMode::SyncOnClose => {
+                let _ = self.flush_queue()?;
+            }
+            WritebackMode::Async => {
+                if self.queue.len() >= self.async_flush_threshold {
+                    let _ = self.flush_queue()?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------
+    // namespace materialization + prefetch
+    // ---------------------------------------------------------------
+
+    /// Ensure a directory's entries are materialized in cache space
+    /// (paper: first `opendir()` downloads the entries + attributes).
+    fn ensure_dir(&mut self, dir: &str) -> Result<(), FsError> {
+        let now = self.clock.now();
+        if self.cache.is_localized(dir) {
+            self.cache.store_mut().mkdir_p(dir, now)?;
+            return Ok(());
+        }
+        if self.cache.dir_state(dir).map(|d| d.complete).unwrap_or(false) {
+            self.cache_disk.op(self.clock.as_ref());
+            return Ok(());
+        }
+        match self.link.rpc(Request::ReadDir { path: dir.to_string() })? {
+            Response::Dir { entries } => {
+                let pairs: Vec<(String, WireAttr)> =
+                    entries.into_iter().map(|e| (e.name, e.attr)).collect();
+                let now = self.clock.now();
+                self.cache.materialize_dir(dir, &pairs, now)?;
+                // writing the placeholder + attr files costs cache-disk ops
+                self.cache_disk.op(self.clock.as_ref());
+                Ok(())
+            }
+            Response::Err { code: 2, msg } => Err(FsError::NotFound(msg)),
+            Response::Err { code: 20, msg } => Err(FsError::NotADir(msg)),
+            r => Err(FsError::Protocol(format!("unexpected readdir response {r:?}"))),
+        }
+    }
+
+    /// Parallel pre-fetch of small files in `dir` (paper §3.3: every time
+    /// the user or application first changes into a mounted directory).
+    fn prefetch_dir(&mut self, dir: &str) -> Result<(), FsError> {
+        if !self.cfg.stripe.prefetch_enabled
+            || self.cache.dir_state(dir).map(|d| d.prefetched).unwrap_or(false)
+        {
+            return Ok(());
+        }
+        let limit = self.cfg.stripe.prefetch_max_size;
+        let mut want: Vec<(String, u64)> = Vec::new();
+        for (name, attr) in self.cache.readdir(dir)? {
+            if attr.kind != NodeKind::File || attr.size > limit {
+                continue;
+            }
+            let p = vpath::join(dir, &name);
+            if matches!(
+                self.cache.entry(&p).map(|e| e.state),
+                Some(EntryState::AttrOnly) | Some(EntryState::Invalid)
+            ) {
+                want.push((p, attr.size));
+            }
+        }
+        if !want.is_empty() {
+            let images = self.link.prefetch(&want);
+            let now = self.clock.now();
+            let mut bytes = 0u64;
+            for image in images {
+                transfer::verify_image(&self.engine, &image, self.cfg.stripe.min_block as usize, &self.metrics)?;
+                bytes += image.data.len() as u64;
+                let attr = WireAttr {
+                    kind: NodeKind::File,
+                    size: image.data.len() as u64,
+                    mtime_ns: now.0,
+                    mode: 0o600,
+                    version: image.version,
+                };
+                self.metrics.incr(names::PREFETCH_FILES);
+                self.cache.install(&image.path, &image.data, image.version, image.digests.clone(), attr, now)?;
+            }
+            // writing the prefetched files into cache space
+            self.cache_disk.io(self.clock.as_ref(), bytes);
+        }
+        self.cache.set_dir_prefetched(dir);
+        Ok(())
+    }
+
+    /// Fetch a file whole into cache (paper: first `open()` downloads it).
+    fn fetch_file(&mut self, path: &str) -> Result<(), FsError> {
+        self.metrics.incr(names::CACHE_MISSES);
+        let image = self.link.fetch(path)?;
+        transfer::verify_image(&self.engine, &image, self.cfg.stripe.min_block as usize, &self.metrics)?;
+        // integrity verification is client CPU on the transfer path
+        self.clock.advance_secs(image.data.len() as f64 / self.cfg.disk.digest_cpu_bps);
+        let now = self.clock.now();
+        let attr = WireAttr {
+            kind: NodeKind::File,
+            size: image.data.len() as u64,
+            mtime_ns: now.0,
+            mode: 0o600,
+            version: image.version,
+        };
+        self.metrics.incr(names::FETCH_FILES);
+        self.metrics.add(names::FETCH_BYTES, image.data.len() as u64);
+        // write the cached copy to the cache-space parallel FS
+        self.cache_disk.io(self.clock.as_ref(), image.data.len() as u64);
+        self.cache.install(path, &image.data, image.version, image.digests.clone(), attr, now)?;
+        Ok(())
+    }
+
+    /// Is the cached copy usable for an open right now?
+    fn content_usable(&self, path: &str) -> bool {
+        match self.cache.entry(path) {
+            Some(e) => match e.state {
+                EntryState::Clean | EntryState::Dirty => true,
+                EntryState::Invalid | EntryState::AttrOnly => false,
+            },
+            None => false,
+        }
+    }
+}
+
+impl<L: ServerLink> Vfs for XufsClient<L> {
+    fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd, FsError> {
+        self.tick();
+        let t0 = self.clock.now();
+        let p = self.abs(path);
+        let now = self.clock.now();
+        let localized = self.cache.is_localized(&p);
+
+        if localized {
+            // localized files live purely in cache space
+            if !self.cache.store().exists(&p) {
+                if !flags.create {
+                    return Err(FsError::NotFound(p));
+                }
+                self.cache.store_mut().mkdir_p(&vpath::parent(&p), now)?;
+                self.cache.store_mut().create(&p, now)?;
+            } else if flags.truncate {
+                self.cache.store_mut().truncate(&p, 0, now)?;
+            }
+            self.cache_disk.op(self.clock.as_ref());
+        } else if self.content_usable(&p) {
+            self.metrics.incr(names::CACHE_HITS);
+            self.cache.touch(&p, now);
+            if flags.truncate {
+                self.cache.store_mut().truncate(&p, 0, now)?;
+            }
+            self.cache_disk.op(self.clock.as_ref());
+        } else if flags.write && flags.truncate {
+            // O_TRUNC write: the old content is irrelevant (last-close-
+            // wins), so no WAN round trip is needed — the file starts
+            // empty locally and a Create (idempotent at the server) is
+            // queued so the entry exists at home even before the close
+            // flush. This is also what lets disconnected creation work.
+            self.cache.store_mut().mkdir_p(&vpath::parent(&p), now)?;
+            self.cache.store_mut().write(&p, &[], now)?;
+            self.cache.mark_dirty(&p, Vec::new(), now)?;
+            self.enqueue(MetaOp::Create { path: p.clone() })?;
+            self.cache_disk.op(self.clock.as_ref());
+        } else {
+            // need the authoritative copy (or to create one)
+            let exists_remotely = match self.cache.entry(&p) {
+                Some(_) => true,
+                None => {
+                    // unknown: if the parent listing is complete, absence
+                    // is a reliable negative; otherwise ask the server
+                    let parent = vpath::parent(&p);
+                    if self.cache.dir_state(&parent).map(|d| d.complete).unwrap_or(false) {
+                        false
+                    } else {
+                        match self.link.rpc(Request::Stat { path: p.clone() }) {
+                            Ok(Response::Attr { .. }) => true,
+                            Ok(Response::Err { code: 2, .. }) => false,
+                            Ok(r) => {
+                                return Err(FsError::Protocol(format!("unexpected stat response {r:?}")))
+                            }
+                            // offline with nothing cached and creation not
+                            // requested: fail disconnected; with O_CREAT we
+                            // can proceed optimistically (queued Create)
+                            Err(FsError::Disconnected) if flags.create => false,
+                            Err(e) => return Err(e),
+                        }
+                    }
+                }
+            };
+            if exists_remotely {
+                match self.fetch_file(&p) {
+                    Ok(()) => {}
+                    Err(FsError::Disconnected) => {
+                        // disconnected operation: serve the stale cached
+                        // copy if we still hold the content
+                        let has_content =
+                            self.cache.store().stat(&p).map(|a| a.size > 0).unwrap_or(false)
+                                || self.cache.entry(&p).map(|e| e.attr.size == 0).unwrap_or(false);
+                        if !has_content {
+                            return Err(FsError::Disconnected);
+                        }
+                    }
+                    Err(e) => return Err(e),
+                }
+            } else {
+                if !flags.create {
+                    return Err(FsError::NotFound(p));
+                }
+                // brand-new file: created locally, Create queued
+                self.cache.store_mut().mkdir_p(&vpath::parent(&p), now)?;
+                if !self.cache.store().exists(&p) {
+                    self.cache.store_mut().create(&p, now)?;
+                }
+                self.cache.mark_dirty(&p, Vec::new(), now)?;
+                self.enqueue(MetaOp::Create { path: p.clone() })?;
+            }
+            self.cache_disk.op(self.clock.as_ref());
+        }
+
+        let shadow = if flags.write {
+            // writes land in a shadow file (paper §3.1); it starts as a
+            // copy of the current content so read-after-write via the
+            // same fd is coherent, and the close flush is the aggregate
+            let name = vpath::shadow_file_name(&vpath::basename(&p), self.next_fd);
+            let spath = vpath::join(&vpath::parent(&p), &name);
+            let now = self.clock.now();
+            let content = if flags.truncate {
+                Vec::new()
+            } else {
+                self.cache.store().read(&p).map(|d| d.to_vec()).unwrap_or_default()
+            };
+            self.cache.store_mut().write(&spath, &content, now)?;
+            Some(spath)
+        } else {
+            None
+        };
+
+        let fd = self.next_fd;
+        self.next_fd += 1;
+        let pos = if flags.append {
+            self.cache.store().stat(&p).map(|a| a.size).unwrap_or(0)
+        } else {
+            0
+        };
+        self.fds.insert(fd, OpenFile { path: p, pos, flags, shadow, wrote: false, localized });
+        self.metrics.observe(names::OP_LATENCY, self.clock.now().saturating_sub(t0).as_secs());
+        Ok(Fd(fd))
+    }
+
+    fn read(&mut self, fd: Fd, len: usize) -> Result<Vec<u8>, FsError> {
+        let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
+        if !f.flags.read && !f.flags.write {
+            return Err(FsError::Perm("fd not open for reading".into()));
+        }
+        let src = f.shadow.clone().unwrap_or_else(|| f.path.clone());
+        let pos = f.pos;
+        let data = self.cache.store().read_at(&src, pos, len)?.to_vec();
+        self.cache_disk.io(self.clock.as_ref(), data.len() as u64);
+        if let Some(f) = self.fds.get_mut(&fd.0) {
+            f.pos += data.len() as u64;
+        }
+        Ok(data)
+    }
+
+    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize, FsError> {
+        let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
+        if !f.flags.write {
+            return Err(FsError::Perm("fd not open for writing".into()));
+        }
+        let shadow = f.shadow.clone().ok_or(FsError::BadHandle)?;
+        let pos = f.pos;
+        let now = self.clock.now();
+        self.cache.store_mut().write_at(&shadow, pos, data, now)?;
+        self.cache_disk.io(self.clock.as_ref(), data.len() as u64);
+        if let Some(f) = self.fds.get_mut(&fd.0) {
+            f.pos += data.len() as u64;
+            f.wrote = true;
+        }
+        Ok(data.len())
+    }
+
+    fn seek(&mut self, fd: Fd, pos: u64) -> Result<(), FsError> {
+        let f = self.fds.get_mut(&fd.0).ok_or(FsError::BadHandle)?;
+        f.pos = pos;
+        Ok(())
+    }
+
+    fn close(&mut self, fd: Fd) -> Result<(), FsError> {
+        let t0 = self.clock.now();
+        let f = self.fds.remove(&fd.0).ok_or(FsError::BadHandle)?;
+        // release any lock held through this fd
+        if let Some(token) = self.fd_locks.remove(&fd.0) {
+            let _ = self.link.rpc(Request::LockRelease { token, owner: self.link.client_id() });
+            self.lease.released(token);
+        }
+        self.local_locks.retain(|_, (lfd, _)| *lfd != fd.0);
+
+        let now = self.clock.now();
+        if let Some(shadow) = f.shadow {
+            if f.wrote {
+                // the aggregated shadow content becomes the cache copy
+                let content = self.cache.store().read(&shadow)?.to_vec();
+                self.cache.store_mut().write(&f.path, &content, now)?;
+                self.cache_disk.io(self.clock.as_ref(), content.len() as u64);
+                if f.localized {
+                    // stays local; nothing queued (paper: localized dirs)
+                } else {
+                    let base = self.cache.entry(&f.path).map(|e| (e.version, e.digests.clone()));
+                    let (base_version, old_digests) = base.unwrap_or((0, Vec::new()));
+                    // delta/digest planning is client CPU on the close path
+                    self.clock.advance_secs(content.len() as f64 / self.cfg.disk.digest_cpu_bps);
+                    let (op, digests) = transfer::build_writeback(
+                        &self.engine,
+                        &self.cfg.stripe,
+                        &f.path,
+                        &content,
+                        base_version,
+                        &old_digests,
+                        self.cfg.stripe.min_block as usize,
+                        &self.metrics,
+                    );
+                    self.cache.mark_dirty(&f.path, digests, now)?;
+                    self.enqueue(op)?;
+                }
+            }
+            let _ = self.cache.store_mut().unlink(&shadow, now);
+        }
+        self.metrics.observe(names::OP_LATENCY, self.clock.now().saturating_sub(t0).as_secs());
+        Ok(())
+    }
+
+    fn stat(&mut self, path: &str) -> Result<WireAttr, FsError> {
+        self.tick();
+        let p = self.abs(path);
+        if self.cache.is_localized(&p) {
+            let a = self.cache.store().stat(&p)?;
+            self.cache_disk.op(self.clock.as_ref());
+            return Ok(WireAttr::from_attr(&a));
+        }
+        // paper: stat() is served from the hidden attribute files
+        if let Some(e) = self.cache.entry(&p) {
+            if e.state != EntryState::Invalid {
+                let attr = e.attr.clone();
+                self.cache_disk.op(self.clock.as_ref());
+                return Ok(attr);
+            }
+        }
+        let parent = vpath::parent(&p);
+        if self.cache.dir_state(&parent).map(|d| d.complete).unwrap_or(false)
+            && self.cache.entry(&p).is_none()
+        {
+            return Err(FsError::NotFound(p));
+        }
+        match self.link.rpc(Request::Stat { path: p.clone() })? {
+            Response::Attr { attr } => {
+                // refresh the cached attributes
+                if let Some(e) = self.cache.entry_mut(&p) {
+                    e.attr = attr.clone();
+                }
+                Ok(attr)
+            }
+            Response::Err { code: 2, msg } => Err(FsError::NotFound(msg)),
+            r => Err(FsError::Protocol(format!("unexpected stat response {r:?}"))),
+        }
+    }
+
+    fn readdir(&mut self, path: &str) -> Result<Vec<(String, WireAttr)>, FsError> {
+        self.tick();
+        let p = self.abs(path);
+        if self.cache.is_localized(&p) {
+            self.cache_disk.op(self.clock.as_ref());
+            return self.cache.readdir(&p);
+        }
+        self.ensure_dir(&p)?;
+        self.cache_disk.op(self.clock.as_ref());
+        self.cache.readdir(&p)
+    }
+
+    fn chdir(&mut self, path: &str) -> Result<(), FsError> {
+        self.tick();
+        let p = self.abs(path);
+        if !self.cache.is_localized(&p) {
+            self.ensure_dir(&p)?;
+            // paper §3.3: pre-fetch small files on first chdir
+            self.prefetch_dir(&p)?;
+        } else {
+            let now = self.clock.now();
+            self.cache.store_mut().mkdir_p(&p, now)?;
+        }
+        self.cwd = p;
+        Ok(())
+    }
+
+    fn mkdir(&mut self, path: &str) -> Result<(), FsError> {
+        self.tick();
+        let p = self.abs(path);
+        let now = self.clock.now();
+        self.cache.store_mut().mkdir_p(&p, now)?;
+        self.cache_disk.op(self.clock.as_ref());
+        if !self.cache.is_localized(&p) {
+            self.enqueue(MetaOp::Mkdir { path: p })?;
+        }
+        Ok(())
+    }
+
+    fn unlink(&mut self, path: &str) -> Result<(), FsError> {
+        self.tick();
+        let p = self.abs(path);
+        let now = self.clock.now();
+        self.cache.remove(&p, now);
+        self.cache_disk.op(self.clock.as_ref());
+        if !self.cache.is_localized(&p) {
+            self.enqueue(MetaOp::Unlink { path: p })?;
+        }
+        Ok(())
+    }
+
+    fn rename(&mut self, from: &str, to: &str) -> Result<(), FsError> {
+        self.tick();
+        let f = self.abs(from);
+        let t = self.abs(to);
+        let now = self.clock.now();
+        // move the cached copy (content + index) locally
+        if self.cache.store().exists(&f) {
+            let _ = self.cache.store_mut().rename(&f, &t, now);
+        }
+        let entry = self.cache.entry(&f).cloned();
+        self.cache.remove(&f, now);
+        if let Some(e) = entry {
+            if e.state == EntryState::Clean || e.state == EntryState::Dirty {
+                // keep content state under the new name
+                let data = self.cache.store().read(&t).map(|d| d.to_vec()).unwrap_or_default();
+                self.cache.install(&t, &data, e.version, e.digests, e.attr, now)?;
+            }
+        }
+        self.cache_disk.op(self.clock.as_ref());
+        match (self.cache.is_localized(&f), self.cache.is_localized(&t)) {
+            (false, false) => self.enqueue(MetaOp::Rename { from: f, to: t })?,
+            (true, true) => {}
+            // crossing the localized boundary: materialize as unlink+write
+            (false, true) => self.enqueue(MetaOp::Unlink { path: f })?,
+            (true, false) => {
+                let data = self.cache.store().read(&t).map(|d| d.to_vec()).unwrap_or_default();
+                let digests = self.engine.digests(&data, self.cfg.stripe.min_block as usize);
+                self.cache.mark_dirty(&t, digests.clone(), now)?;
+                self.enqueue(MetaOp::WriteFull { path: t, data, digests })?;
+            }
+        }
+        Ok(())
+    }
+
+    fn truncate(&mut self, path: &str, size: u64) -> Result<(), FsError> {
+        self.tick();
+        let p = self.abs(path);
+        let now = self.clock.now();
+        if !self.content_usable(&p) && !self.cache.is_localized(&p) && size > 0 {
+            self.fetch_file(&p)?;
+        }
+        if !self.cache.store().exists(&p) {
+            self.cache.store_mut().mkdir_p(&vpath::parent(&p), now)?;
+            self.cache.store_mut().create(&p, now)?;
+        }
+        self.cache.store_mut().truncate(&p, size, now)?;
+        self.cache_disk.op(self.clock.as_ref());
+        if !self.cache.is_localized(&p) {
+            let data = self.cache.store().read(&p)?.to_vec();
+            let digests = self.engine.digests(&data, self.cfg.stripe.min_block as usize);
+            self.cache.mark_dirty(&p, digests, now)?;
+            self.enqueue(MetaOp::Truncate { path: p, size })?;
+        }
+        Ok(())
+    }
+
+    fn lock(&mut self, fd: Fd, kind: LockKind) -> Result<(), FsError> {
+        self.tick();
+        let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
+        let path = f.path.clone();
+        if f.localized {
+            // paper: localized directories use the cache-space FS locks
+            let conflicting = self.local_locks.get(&path).map(|(ofd, okind)| {
+                *ofd != fd.0 && !(matches!(okind, LockKind::Shared) && matches!(kind, LockKind::Shared))
+            });
+            if conflicting == Some(true) {
+                return Err(FsError::LockConflict(path));
+            }
+            self.local_locks.insert(path, (fd.0, kind));
+            return Ok(());
+        }
+        match self.link.rpc(Request::LockAcquire { path: path.clone(), kind, owner: self.link.client_id() })? {
+            Response::LockGranted { token, lease_ns } => {
+                let now = self.clock.now();
+                self.lease.granted(token, &path, kind, now.add_secs(lease_ns as f64 / 1e9));
+                self.fd_locks.insert(fd.0, token);
+                Ok(())
+            }
+            Response::LockDenied { holder } => {
+                Err(FsError::LockConflict(format!("{path} held by client {holder}")))
+            }
+            r => Err(FsError::Protocol(format!("unexpected lock response {r:?}"))),
+        }
+    }
+
+    fn unlock(&mut self, fd: Fd) -> Result<(), FsError> {
+        if let Some(token) = self.fd_locks.remove(&fd.0) {
+            let _ = self.link.rpc(Request::LockRelease { token, owner: self.link.client_id() })?;
+            self.lease.released(token);
+        }
+        self.local_locks.retain(|_, (lfd, _)| *lfd != fd.0);
+        Ok(())
+    }
+
+    fn fsync(&mut self) -> Result<(), FsError> {
+        self.tick();
+        self.flush_queue()?;
+        Ok(())
+    }
+
+    fn now(&self) -> VirtualTime {
+        self.clock.now()
+    }
+
+    fn think(&mut self, secs: f64) {
+        self.clock.advance_secs(secs);
+    }
+}

@@ -1,0 +1,254 @@
+//! Configuration system.
+//!
+//! Typed config structs for every subsystem plus a TOML-subset parser
+//! (`[section]`, `key = value` with strings/ints/floats/bools) so
+//! deployments are driven by a config file (`xufs.toml`) rather than code.
+//! Defaults reproduce the paper's testbed calibration (DESIGN.md §5).
+
+mod toml;
+
+pub use toml::{TomlDoc, TomlError, TomlValue};
+
+/// Bytes per stripe block (paper §3.3: minimum 64 KiB block size).
+pub const STRIPE_BLOCK: u64 = 64 * 1024;
+
+/// WAN link model parameters (DESIGN.md §5 calibration).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WanConfig {
+    /// Round-trip time between client site and home space, seconds.
+    pub rtt_s: f64,
+    /// Per-TCP-stream throughput cap, bytes/sec (window/RTT bound;
+    /// 64 KiB window / 32 ms = 2 MiB/s — 2005-era default TCP tuning).
+    pub per_stream_bps: f64,
+    /// Aggregate link capacity, bytes/sec (TeraGrid: 30 Gbps).
+    pub agg_bps: f64,
+    /// Round trips consumed by connection setup + auth handshake.
+    pub setup_rtts: f64,
+    /// Extra RTTs lost to TCP slow-start ramp on a fresh connection.
+    pub slow_start_rtts: f64,
+}
+
+impl Default for WanConfig {
+    fn default() -> Self {
+        WanConfig {
+            rtt_s: 0.032,
+            per_stream_bps: 2.0 * 1024.0 * 1024.0,
+            agg_bps: 30.0e9 / 8.0,
+            setup_rtts: 3.0,
+            slow_start_rtts: 4.0,
+        }
+    }
+}
+
+/// Striped-transfer engine parameters (paper §3.3).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StripeConfig {
+    /// Maximum parallel TCP stripes per transfer (paper: 12).
+    pub max_stripes: usize,
+    /// Minimum bytes per stripe block (paper: 64 KiB).
+    pub min_block: u64,
+    /// Threshold above which transfers are striped (paper: 64 KiB).
+    pub stripe_threshold: u64,
+    /// Parallel pre-fetch threads for small files (paper: 12).
+    pub prefetch_threads: usize,
+    /// Pre-fetch files smaller than this on first chdir (paper: 64 KiB).
+    pub prefetch_max_size: u64,
+    /// Enable pre-fetching at all (ablation toggle).
+    pub prefetch_enabled: bool,
+    /// Ship only digest-dirty blocks on writeback (delta writeback; see
+    /// DESIGN.md §3 — the runtime/PJRT-planned optimization).
+    pub delta_writeback: bool,
+}
+
+impl Default for StripeConfig {
+    fn default() -> Self {
+        StripeConfig {
+            max_stripes: 12,
+            min_block: STRIPE_BLOCK,
+            stripe_threshold: STRIPE_BLOCK,
+            prefetch_threads: 12,
+            prefetch_max_size: STRIPE_BLOCK,
+            prefetch_enabled: true,
+            delta_writeback: true,
+        }
+    }
+}
+
+/// Client cache-space parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CacheConfig {
+    /// Capacity of the cache space in bytes (TeraGrid work partitions are
+    /// huge; default 1 TiB so eviction is rare, as the paper assumes).
+    pub capacity: u64,
+    /// Directories whose new files stay local and are never shipped home
+    /// (paper's *localized directories*).
+    pub localized_dirs: Vec<String>,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig { capacity: 1 << 40, localized_dirs: Vec::new() }
+    }
+}
+
+/// Lease manager parameters (paper §3.1: leases prevent orphaned locks).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LeaseConfig {
+    /// Lease duration granted by the server, seconds.
+    pub duration_s: f64,
+    /// Client renews after this fraction of the lease has elapsed.
+    pub renew_fraction: f64,
+}
+
+impl Default for LeaseConfig {
+    fn default() -> Self {
+        LeaseConfig { duration_s: 30.0, renew_fraction: 0.5 }
+    }
+}
+
+/// Disk / parallel-FS models for each side (DESIGN.md §5).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiskConfig {
+    /// Sequential bandwidth of the cache-space parallel FS, bytes/sec.
+    pub cache_bps: f64,
+    /// Per-operation cost of the cache-space FS, seconds.
+    pub cache_op_s: f64,
+    /// Sequential bandwidth of the home-space disk, bytes/sec.
+    pub home_bps: f64,
+    /// Per-operation cost of the home-space disk, seconds.
+    pub home_op_s: f64,
+    /// Client CPU digest/verification throughput, bytes/sec (2005-era
+    /// checksum rate; charged on fetch verification and writeback
+    /// planning).
+    pub digest_cpu_bps: f64,
+}
+
+impl Default for DiskConfig {
+    fn default() -> Self {
+        DiskConfig {
+            cache_bps: 400.0 * 1024.0 * 1024.0,
+            cache_op_s: 0.002,
+            home_bps: 200.0 * 1024.0 * 1024.0,
+            home_op_s: 0.002,
+            digest_cpu_bps: 300.0 * 1024.0 * 1024.0,
+        }
+    }
+}
+
+/// Everything the coordinator needs to stand up a deployment.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct XufsConfig {
+    pub wan: WanConfig,
+    pub stripe: StripeConfig,
+    pub cache: CacheConfig,
+    pub lease: LeaseConfig,
+    pub disk: DiskConfig,
+    /// Directory holding AOT HLO artifacts (empty => native digest engine).
+    pub artifacts_dir: String,
+    /// Deterministic seed for workloads / jitter.
+    pub seed: u64,
+}
+
+impl XufsConfig {
+    /// Parse a TOML-subset config file's contents over the defaults.
+    /// Unknown keys are rejected (typo safety).
+    pub fn from_toml(text: &str) -> Result<XufsConfig, TomlError> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = XufsConfig::default();
+        for (section, key, value) in doc.entries() {
+            let full = if section.is_empty() { key.to_string() } else { format!("{section}.{key}") };
+            match full.as_str() {
+                "wan.rtt_ms" => cfg.wan.rtt_s = value.as_f64()? / 1e3,
+                "wan.per_stream_mibps" => cfg.wan.per_stream_bps = value.as_f64()? * 1024.0 * 1024.0,
+                "wan.agg_gbps" => cfg.wan.agg_bps = value.as_f64()? * 1e9 / 8.0,
+                "wan.setup_rtts" => cfg.wan.setup_rtts = value.as_f64()?,
+                "wan.slow_start_rtts" => cfg.wan.slow_start_rtts = value.as_f64()?,
+                "stripe.max_stripes" => cfg.stripe.max_stripes = value.as_usize()?,
+                "stripe.min_block_kib" => cfg.stripe.min_block = value.as_u64()? * 1024,
+                "stripe.stripe_threshold_kib" => cfg.stripe.stripe_threshold = value.as_u64()? * 1024,
+                "stripe.prefetch_threads" => cfg.stripe.prefetch_threads = value.as_usize()?,
+                "stripe.prefetch_max_size_kib" => cfg.stripe.prefetch_max_size = value.as_u64()? * 1024,
+                "stripe.prefetch_enabled" => cfg.stripe.prefetch_enabled = value.as_bool()?,
+                "stripe.delta_writeback" => cfg.stripe.delta_writeback = value.as_bool()?,
+                "cache.capacity_gib" => cfg.cache.capacity = value.as_u64()? << 30,
+                "cache.localized_dirs" => {
+                    cfg.cache.localized_dirs =
+                        value.as_str()?.split(':').filter(|s| !s.is_empty()).map(String::from).collect()
+                }
+                "lease.duration_s" => cfg.lease.duration_s = value.as_f64()?,
+                "lease.renew_fraction" => cfg.lease.renew_fraction = value.as_f64()?,
+                "disk.cache_mibps" => cfg.disk.cache_bps = value.as_f64()? * 1024.0 * 1024.0,
+                "disk.cache_op_ms" => cfg.disk.cache_op_s = value.as_f64()? / 1e3,
+                "disk.home_mibps" => cfg.disk.home_bps = value.as_f64()? * 1024.0 * 1024.0,
+                "disk.home_op_ms" => cfg.disk.home_op_s = value.as_f64()? / 1e3,
+                "disk.digest_cpu_mibps" => cfg.disk.digest_cpu_bps = value.as_f64()? * 1024.0 * 1024.0,
+                "artifacts_dir" => cfg.artifacts_dir = value.as_str()?.to_string(),
+                "seed" => cfg.seed = value.as_u64()?,
+                other => {
+                    return Err(TomlError::new(0, &format!("unknown config key `{other}`")));
+                }
+            }
+        }
+        Ok(cfg)
+    }
+
+    /// GPFS-WAN-era SCP model: single stream, cipher-rate bound.
+    pub fn scp_cipher_bps() -> f64 {
+        0.5 * 1024.0 * 1024.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_design_calibration() {
+        let c = XufsConfig::default();
+        assert_eq!(c.stripe.max_stripes, 12);
+        assert_eq!(c.stripe.min_block, 64 * 1024);
+        assert_eq!(c.stripe.prefetch_threads, 12);
+        assert!((c.wan.rtt_s - 0.032).abs() < 1e-12);
+        assert!((c.wan.per_stream_bps - 2.0 * 1024.0 * 1024.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn parse_overrides() {
+        let text = r#"
+seed = 7
+artifacts_dir = "artifacts"
+
+[wan]
+rtt_ms = 60
+per_stream_mibps = 4.0
+
+[stripe]
+max_stripes = 8
+prefetch_enabled = false
+
+[cache]
+localized_dirs = "/scratch/out:/scratch/tmp"
+"#;
+        let c = XufsConfig::from_toml(text).unwrap();
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.artifacts_dir, "artifacts");
+        assert!((c.wan.rtt_s - 0.060).abs() < 1e-12);
+        assert_eq!(c.stripe.max_stripes, 8);
+        assert!(!c.stripe.prefetch_enabled);
+        assert_eq!(c.cache.localized_dirs, vec!["/scratch/out", "/scratch/tmp"]);
+        // untouched keys keep defaults
+        assert!(c.stripe.delta_writeback);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(XufsConfig::from_toml("[wan]\nrtt = 5\n").is_err());
+        assert!(XufsConfig::from_toml("nonsense = 1\n").is_err());
+    }
+
+    #[test]
+    fn type_errors_rejected() {
+        assert!(XufsConfig::from_toml("[stripe]\nmax_stripes = \"twelve\"\n").is_err());
+        assert!(XufsConfig::from_toml("[stripe]\nprefetch_enabled = 3\n").is_err());
+    }
+}

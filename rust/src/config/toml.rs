@@ -1,0 +1,208 @@
+//! TOML-subset parser: `[section]` headers and `key = value` pairs with
+//! string / integer / float / boolean values, `#` comments, blank lines.
+//! Sufficient for `xufs.toml`; arrays/tables-of-tables are out of scope.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str, TomlError> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(TomlError::new(0, &format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64, TomlError> {
+        match self {
+            TomlValue::Int(i) => Ok(*i as f64),
+            TomlValue::Float(f) => Ok(*f),
+            other => Err(TomlError::new(0, &format!("expected number, got {other:?}"))),
+        }
+    }
+
+    pub fn as_u64(&self) -> Result<u64, TomlError> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as u64),
+            other => Err(TomlError::new(0, &format!("expected non-negative integer, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize, TomlError> {
+        self.as_u64().map(|v| v as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool, TomlError> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(TomlError::new(0, &format!("expected bool, got {other:?}"))),
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl TomlError {
+    pub fn new(line: usize, msg: &str) -> Self {
+        TomlError { line, msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "toml error (line {}): {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// A parsed document: ordered `(section, key, value)` triples.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    entries: Vec<(String, String, TomlValue)>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<TomlDoc, TomlError> {
+        let mut doc = TomlDoc::default();
+        let mut section = String::new();
+        for (idx, raw) in text.lines().enumerate() {
+            let lineno = idx + 1;
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| TomlError::new(lineno, "unterminated section header"))?;
+                if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '.') {
+                    return Err(TomlError::new(lineno, "bad section name"));
+                }
+                section = name.to_string();
+                continue;
+            }
+            let eq = line
+                .find('=')
+                .ok_or_else(|| TomlError::new(lineno, "expected `key = value`"))?;
+            let key = line[..eq].trim();
+            if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return Err(TomlError::new(lineno, "bad key"));
+            }
+            let value = parse_value(line[eq + 1..].trim(), lineno)?;
+            doc.entries.push((section.clone(), key.to_string(), value));
+        }
+        Ok(doc)
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = (&str, &str, &TomlValue)> {
+        self.entries.iter().map(|(s, k, v)| (s.as_str(), k.as_str(), v))
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&TomlValue> {
+        self.entries
+            .iter()
+            .rev() // last assignment wins
+            .find(|(s, k, _)| s == section && k == key)
+            .map(|(_, _, v)| v)
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // `#` starts a comment unless inside a quoted string
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(text: &str, lineno: usize) -> Result<TomlValue, TomlError> {
+    if text.is_empty() {
+        return Err(TomlError::new(lineno, "missing value"));
+    }
+    if let Some(rest) = text.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .ok_or_else(|| TomlError::new(lineno, "unterminated string"))?;
+        if inner.contains('"') {
+            return Err(TomlError::new(lineno, "embedded quote in string"));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    match text {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = text.parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    if let Ok(f) = text.parse::<f64>() {
+        return Ok(TomlValue::Float(f));
+    }
+    Err(TomlError::new(lineno, &format!("unparseable value `{text}`")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[a]\nx = 2.5\ny = \"s\"\nz = true\n[b.c]\nw = -3 # comment\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top"), Some(&TomlValue::Int(1)));
+        assert_eq!(doc.get("a", "x"), Some(&TomlValue::Float(2.5)));
+        assert_eq!(doc.get("a", "y"), Some(&TomlValue::Str("s".into())));
+        assert_eq!(doc.get("a", "z"), Some(&TomlValue::Bool(true)));
+        assert_eq!(doc.get("b.c", "w"), Some(&TomlValue::Int(-3)));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = TomlDoc::parse("# whole line\n\nk = \"a#b\" # trailing\n").unwrap();
+        assert_eq!(doc.get("", "k"), Some(&TomlValue::Str("a#b".into())));
+    }
+
+    #[test]
+    fn last_assignment_wins() {
+        let doc = TomlDoc::parse("k = 1\nk = 2\n").unwrap();
+        assert_eq!(doc.get("", "k"), Some(&TomlValue::Int(2)));
+    }
+
+    #[test]
+    fn errors() {
+        assert!(TomlDoc::parse("[unterminated\n").is_err());
+        assert!(TomlDoc::parse("novalue =\n").is_err());
+        assert!(TomlDoc::parse("bad key = 1\n").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated\n").is_err());
+        assert!(TomlDoc::parse("k = what\n").is_err());
+    }
+
+    #[test]
+    fn value_conversions() {
+        assert_eq!(TomlValue::Int(5).as_f64().unwrap(), 5.0);
+        assert_eq!(TomlValue::Int(5).as_u64().unwrap(), 5);
+        assert!(TomlValue::Int(-5).as_u64().is_err());
+        assert!(TomlValue::Str("x".into()).as_f64().is_err());
+        assert!(TomlValue::Bool(true).as_bool().unwrap());
+    }
+}

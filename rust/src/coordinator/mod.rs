@@ -1,0 +1,17 @@
+//! Deployment coordinator.
+//!
+//! Wires client, server, transport, clock and digest engine into a running
+//! deployment. Two transports:
+//!
+//! * [`sim`] — the WAN-model deployment (virtual clock, deterministic):
+//!   all benches run here, reporting simulated seconds calibrated to the
+//!   paper's testbed (DESIGN.md §5).
+//! * [`net`] — real TCP sockets on localhost with the full USSH
+//!   challenge-response handshake, striped fetch connections and a
+//!   callback pump thread: integration tests and the e2e example run the
+//!   identical client/server logic over actual sockets.
+
+pub mod net;
+pub mod sim;
+
+pub use sim::{SimLink, SimWorld};

@@ -1,0 +1,515 @@
+//! Real-TCP deployment: the same [`FileServer`] / [`XufsClient`] logic over
+//! actual sockets on localhost, with the full USSH challenge-response
+//! handshake per connection, genuinely parallel striped range-fetches, and
+//! a push-mode callback channel fed by a pump thread. Used by integration
+//! tests and the e2e example to prove the protocol works outside the
+//! simulator.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::auth::{self, Authenticator, KeyPair};
+use crate::callback::NotifyChannel;
+use crate::client::ServerLink;
+use crate::config::XufsConfig;
+use crate::homefs::FsError;
+use crate::metrics::{names, Metrics};
+use crate::proto::{self, FileImage, MetaOp, NotifyEvent, Request, Response};
+use crate::server::FileServer;
+use crate::simnet::{Clock, RealClock};
+use crate::transfer;
+
+// ---------------------------------------------------------------------
+// framing
+// ---------------------------------------------------------------------
+
+fn write_frame(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+    stream.write_all(&proto::frame(body))
+}
+
+fn read_frame(stream: &mut TcpStream) -> std::io::Result<Vec<u8>> {
+    let mut len_buf = [0u8; 4];
+    stream.read_exact(&mut len_buf)?;
+    let len = u32::from_le_bytes(len_buf) as usize;
+    if len > proto::MAX_FRAME {
+        return Err(std::io::Error::new(std::io::ErrorKind::InvalidData, "frame too large"));
+    }
+    let mut body = vec![0u8; len];
+    stream.read_exact(&mut body)?;
+    Ok(body)
+}
+
+fn io_err(e: std::io::Error) -> FsError {
+    let _ = e;
+    FsError::Disconnected
+}
+
+// ---------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------
+
+/// Handle to a running TCP front-end for a [`FileServer`].
+pub struct TcpServer {
+    pub addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind on an ephemeral localhost port and serve until dropped.
+    pub fn spawn(
+        server: Arc<Mutex<FileServer>>,
+        authenticator: Arc<Mutex<Authenticator>>,
+        metrics: Metrics,
+    ) -> std::io::Result<TcpServer> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        let addr = listener.local_addr()?;
+        listener.set_nonblocking(true)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept_thread = std::thread::spawn(move || {
+            let clock = RealClock::new();
+            let mut conn_threads: Vec<JoinHandle<()>> = Vec::new();
+            while !stop2.load(Ordering::SeqCst) {
+                match listener.accept() {
+                    Ok((stream, _)) => {
+                        let server = server.clone();
+                        let authenticator = authenticator.clone();
+                        let metrics = metrics.clone();
+                        let clock = clock.clone();
+                        let stop3 = stop2.clone();
+                        conn_threads.push(std::thread::spawn(move || {
+                            let _ = serve_connection(stream, server, authenticator, metrics, clock, stop3);
+                        }));
+                    }
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(2));
+                    }
+                    Err(_) => break,
+                }
+            }
+            for t in conn_threads {
+                let _ = t.join();
+            }
+        });
+        Ok(TcpServer { addr, stop, accept_thread: Some(accept_thread) })
+    }
+
+    pub fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+/// Server side of the USSH challenge-response handshake; returns the
+/// authenticated session id.
+fn server_handshake(
+    stream: &mut TcpStream,
+    authenticator: &Arc<Mutex<Authenticator>>,
+    metrics: &Metrics,
+    clock: &RealClock,
+) -> std::io::Result<Option<u64>> {
+    let hello = read_frame(stream)?;
+    let Ok(Request::AuthHello { key_id }) = Request::decode(&hello) else {
+        return Ok(None);
+    };
+    let nonce = authenticator.lock().unwrap().challenge(&key_id);
+    write_frame(stream, &Response::Challenge { nonce }.encode())?;
+    let proof_msg = read_frame(stream)?;
+    let Ok(Request::AuthProof { key_id, proof }) = Request::decode(&proof_msg) else {
+        return Ok(None);
+    };
+    let session = authenticator.lock().unwrap().verify_proof(&key_id, &proof, clock.now());
+    match session {
+        Some(s) => {
+            write_frame(stream, &Response::AuthOk { session: s }.encode())?;
+            Ok(Some(s))
+        }
+        None => {
+            metrics.incr(names::AUTH_FAILURES);
+            write_frame(stream, &Response::AuthFail.encode())?;
+            Ok(None)
+        }
+    }
+}
+
+fn serve_connection(
+    mut stream: TcpStream,
+    server: Arc<Mutex<FileServer>>,
+    authenticator: Arc<Mutex<Authenticator>>,
+    metrics: Metrics,
+    clock: RealClock,
+    stop: Arc<AtomicBool>,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true).ok();
+    let Some(session) = server_handshake(&mut stream, &authenticator, &metrics, &clock)? else {
+        return Ok(());
+    };
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let body = match read_frame(&mut stream) {
+            Ok(b) => b,
+            Err(_) => return Ok(()), // peer went away
+        };
+        let req = match Request::decode(&body) {
+            Ok(r) => r,
+            Err(e) => {
+                write_frame(&mut stream, &Response::Err { code: 71, msg: e.to_string() }.encode())?;
+                continue;
+            }
+        };
+        // A RegisterCallback converts this connection into the push-mode
+        // callback channel: attach a fresh channel and pump events out.
+        if let Request::RegisterCallback { root, client_id } = &req {
+            let channel = NotifyChannel::new();
+            let resp = {
+                let mut s = server.lock().unwrap();
+                s.attach_channel(*client_id, channel.clone());
+                s.handle(
+                    *client_id,
+                    Request::RegisterCallback { root: root.clone(), client_id: *client_id },
+                    clock.now(),
+                )
+            };
+            write_frame(&mut stream, &resp.encode())?;
+            // push mode until the peer hangs up
+            loop {
+                if stop.load(Ordering::SeqCst) || !channel.is_connected() {
+                    return Ok(());
+                }
+                for ev in channel.drain() {
+                    if write_frame(&mut stream, &ev.encode()).is_err() {
+                        channel.disconnect();
+                        return Ok(());
+                    }
+                }
+                std::thread::sleep(Duration::from_millis(2));
+            }
+        }
+        let resp = server.lock().unwrap().handle(session, req, clock.now());
+        write_frame(&mut stream, &resp.encode())?;
+    }
+}
+
+// ---------------------------------------------------------------------
+// client link
+// ---------------------------------------------------------------------
+
+/// Client side of the USSH handshake on a fresh connection.
+fn client_handshake(stream: &mut TcpStream, pair: &KeyPair) -> Result<(), FsError> {
+    write_frame(stream, &Request::AuthHello { key_id: pair.key_id.clone() }.encode())
+        .map_err(io_err)?;
+    let resp = Response::decode(&read_frame(stream).map_err(io_err)?)
+        .map_err(|e| FsError::Protocol(e.to_string()))?;
+    let Response::Challenge { nonce } = resp else {
+        return Err(FsError::Protocol("expected challenge".into()));
+    };
+    let proof = auth::prove(&pair.phrase, &pair.key_id, &nonce);
+    write_frame(stream, &Request::AuthProof { key_id: pair.key_id.clone(), proof }.encode())
+        .map_err(io_err)?;
+    match Response::decode(&read_frame(stream).map_err(io_err)?)
+        .map_err(|e| FsError::Protocol(e.to_string()))?
+    {
+        Response::AuthOk { .. } => Ok(()),
+        Response::AuthFail => Err(FsError::Perm("USSH authentication failed".into())),
+        r => Err(FsError::Protocol(format!("unexpected auth response {r:?}"))),
+    }
+}
+
+fn dial(addr: std::net::SocketAddr, pair: &KeyPair) -> Result<TcpStream, FsError> {
+    let mut stream = TcpStream::connect(addr).map_err(io_err)?;
+    stream.set_nodelay(true).ok();
+    client_handshake(&mut stream, pair)?;
+    Ok(stream)
+}
+
+/// Real-TCP [`ServerLink`]: an authenticated control connection, parallel
+/// stripe connections for range fetches, and a callback reader thread
+/// feeding a local [`NotifyChannel`].
+pub struct TcpLink {
+    addr: std::net::SocketAddr,
+    pair: KeyPair,
+    cfg: XufsConfig,
+    control: Option<TcpStream>,
+    channel: NotifyChannel,
+    callback_thread: Option<JoinHandle<()>>,
+    callback_stop: Arc<AtomicBool>,
+    client_id: u64,
+    root: String,
+    metrics: Metrics,
+}
+
+impl TcpLink {
+    /// Dial, authenticate, and register the callback channel.
+    pub fn connect(
+        addr: std::net::SocketAddr,
+        pair: KeyPair,
+        cfg: XufsConfig,
+        client_id: u64,
+        root: &str,
+        metrics: Metrics,
+    ) -> Result<TcpLink, FsError> {
+        let mut link = TcpLink {
+            addr,
+            pair,
+            cfg,
+            control: None,
+            channel: NotifyChannel::new(),
+            callback_thread: None,
+            callback_stop: Arc::new(AtomicBool::new(false)),
+            client_id,
+            root: root.to_string(),
+            metrics,
+        };
+        link.establish()?;
+        Ok(link)
+    }
+
+    fn establish(&mut self) -> Result<(), FsError> {
+        self.teardown_callback();
+        self.control = Some(dial(self.addr, &self.pair)?);
+        // callback connection: authenticate, register, then read pushes
+        let mut cb = dial(self.addr, &self.pair)?;
+        write_frame(
+            &mut cb,
+            &Request::RegisterCallback { root: self.root.clone(), client_id: self.client_id }.encode(),
+        )
+        .map_err(io_err)?;
+        match Response::decode(&read_frame(&mut cb).map_err(io_err)?)
+            .map_err(|e| FsError::Protocol(e.to_string()))?
+        {
+            Response::CallbackRegistered => {}
+            r => return Err(FsError::Protocol(format!("callback registration failed: {r:?}"))),
+        }
+        let channel = self.channel.clone();
+        let stop = Arc::new(AtomicBool::new(false));
+        self.callback_stop = stop.clone();
+        cb.set_read_timeout(Some(Duration::from_millis(20))).ok();
+        self.callback_thread = Some(std::thread::spawn(move || loop {
+            if stop.load(Ordering::SeqCst) {
+                return;
+            }
+            match read_frame(&mut cb) {
+                Ok(body) => {
+                    if let Ok(ev) = NotifyEvent::decode(&body) {
+                        channel.push(ev);
+                    }
+                }
+                Err(e)
+                    if e.kind() == std::io::ErrorKind::WouldBlock
+                        || e.kind() == std::io::ErrorKind::TimedOut => {}
+                Err(_) => {
+                    channel.disconnect();
+                    return;
+                }
+            }
+        }));
+        Ok(())
+    }
+
+    fn teardown_callback(&mut self) {
+        self.callback_stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.callback_thread.take() {
+            let _ = t.join();
+        }
+    }
+
+    fn control_rpc(&mut self, req: &Request) -> Result<Response, FsError> {
+        let stream = self.control.as_mut().ok_or(FsError::Disconnected)?;
+        if write_frame(stream, &req.encode()).is_err() {
+            self.control = None;
+            return Err(FsError::Disconnected);
+        }
+        match read_frame(stream) {
+            Ok(body) => Response::decode(&body).map_err(|e| FsError::Protocol(e.to_string())),
+            Err(_) => {
+                self.control = None;
+                Err(FsError::Disconnected)
+            }
+        }
+    }
+}
+
+impl Drop for TcpLink {
+    fn drop(&mut self) {
+        self.teardown_callback();
+    }
+}
+
+fn response_to_fs_err(r: Response) -> FsError {
+    match r {
+        Response::Err { code: 2, msg } => FsError::NotFound(msg),
+        Response::Err { code: 21, msg } => FsError::IsADir(msg),
+        Response::Err { code: 111, .. } => FsError::Disconnected,
+        Response::Err { code: 116, msg } => FsError::Stale(msg),
+        r => FsError::Protocol(format!("unexpected response {r:?}")),
+    }
+}
+
+impl ServerLink for TcpLink {
+    fn rpc(&mut self, req: Request) -> Result<Response, FsError> {
+        // Callback registration rides the DEDICATED callback connection
+        // (a RegisterCallback frame converts its connection into the
+        // push channel server-side). `establish`/`reconnect` already
+        // performed it, so the client's re-register tick is satisfied
+        // locally — sending it down the control connection would convert
+        // that connection into a push channel and hang every later RPC.
+        if matches!(req, Request::RegisterCallback { .. }) {
+            return if self.channel.is_connected() {
+                Ok(Response::CallbackRegistered)
+            } else {
+                Err(FsError::Disconnected)
+            };
+        }
+        self.metrics.add(names::WAN_RPCS, 1);
+        self.control_rpc(&req)
+    }
+
+    fn fetch(&mut self, path: &str) -> Result<FileImage, FsError> {
+        // step 1: metadata + digests on the control connection
+        let meta = self.control_rpc(&Request::FetchMeta { path: path.to_string() })?;
+        let Response::FileMeta { version, size, digests } = meta else {
+            return Err(response_to_fs_err(meta));
+        };
+        let stripes = transfer::stripes_for(size, &self.cfg.stripe);
+        if stripes <= 1 {
+            let r = self.control_rpc(&Request::FetchRange {
+                path: path.to_string(),
+                offset: 0,
+                len: size,
+                expect_version: version,
+            })?;
+            let Response::Range { data, .. } = r else { return Err(response_to_fs_err(r)) };
+            self.metrics.add(names::WAN_BYTES_RX, data.len() as u64);
+            return Ok(FileImage { path: path.to_string(), version, data, digests });
+        }
+        // step 2: genuinely parallel range fetches, one authenticated
+        // connection per stripe (paper §3.3)
+        let share = size.div_ceil(stripes as u64);
+        let mut handles = Vec::new();
+        for i in 0..stripes {
+            let offset = i as u64 * share;
+            let len = share.min(size.saturating_sub(offset));
+            if len == 0 {
+                break;
+            }
+            let addr = self.addr;
+            let pair = self.pair.clone();
+            let path = path.to_string();
+            handles.push(std::thread::spawn(move || -> Result<(u64, Vec<u8>), FsError> {
+                let mut conn = dial(addr, &pair)?;
+                write_frame(
+                    &mut conn,
+                    &Request::FetchRange { path, offset, len, expect_version: version }.encode(),
+                )
+                .map_err(io_err)?;
+                let resp = Response::decode(&read_frame(&mut conn).map_err(io_err)?)
+                    .map_err(|e| FsError::Protocol(e.to_string()))?;
+                match resp {
+                    Response::Range { data, .. } => Ok((offset, data)),
+                    r => Err(response_to_fs_err(r)),
+                }
+            }));
+        }
+        let mut data = vec![0u8; size as usize];
+        for h in handles {
+            let (offset, chunk) =
+                h.join().map_err(|_| FsError::Protocol("stripe thread panicked".into()))??;
+            data[offset as usize..offset as usize + chunk.len()].copy_from_slice(&chunk);
+        }
+        self.metrics.add(names::WAN_BYTES_RX, data.len() as u64);
+        Ok(FileImage { path: path.to_string(), version, data, digests })
+    }
+
+    fn prefetch(&mut self, files: &[(String, u64)]) -> Vec<FileImage> {
+        // pre-fetch worker pool: `prefetch_threads` connections pulling
+        // whole small files in parallel
+        let threads = self.cfg.stripe.prefetch_threads.max(1).min(files.len().max(1));
+        let work = Arc::new(Mutex::new(files.to_vec()));
+        let results = Arc::new(Mutex::new(Vec::new()));
+        let mut handles = Vec::new();
+        for _ in 0..threads {
+            let work = work.clone();
+            let results = results.clone();
+            let addr = self.addr;
+            let pair = self.pair.clone();
+            handles.push(std::thread::spawn(move || {
+                let Ok(mut conn) = dial(addr, &pair) else { return };
+                loop {
+                    let item = work.lock().unwrap().pop();
+                    let Some((path, _size)) = item else { return };
+                    let req = Request::FetchMeta { path: path.clone() };
+                    if write_frame(&mut conn, &req.encode()).is_err() {
+                        return;
+                    }
+                    let Ok(frame) = read_frame(&mut conn) else { return };
+                    let Ok(Response::FileMeta { version, size, digests }) = Response::decode(&frame)
+                    else {
+                        continue;
+                    };
+                    let req = Request::FetchRange {
+                        path: path.clone(),
+                        offset: 0,
+                        len: size,
+                        expect_version: version,
+                    };
+                    if write_frame(&mut conn, &req.encode()).is_err() {
+                        return;
+                    }
+                    let Ok(frame) = read_frame(&mut conn) else { return };
+                    if let Ok(Response::Range { data, .. }) = Response::decode(&frame) {
+                        results.lock().unwrap().push(FileImage { path, version, data, digests });
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            let _ = h.join();
+        }
+        let out = std::mem::take(&mut *results.lock().unwrap());
+        self.metrics
+            .add(names::WAN_BYTES_RX, out.iter().map(|i| i.data.len() as u64).sum());
+        out
+    }
+
+    fn ship(&mut self, seq: u64, op: &MetaOp) -> Result<Response, FsError> {
+        self.metrics.add(names::WAN_BYTES_TX, op.wire_bytes());
+        self.control_rpc(&Request::Apply { seq, op: op.clone() })
+    }
+
+    fn drain_notifications(&mut self) -> Vec<NotifyEvent> {
+        self.channel.drain()
+    }
+
+    fn channel_generation(&self) -> u64 {
+        self.channel.generation()
+    }
+
+    fn is_connected(&self) -> bool {
+        self.control.is_some() && self.channel.is_connected()
+    }
+
+    fn reconnect(&mut self) -> Result<u64, FsError> {
+        self.channel.reconnect();
+        self.establish()?;
+        Ok(self.channel.generation())
+    }
+
+    fn client_id(&self) -> u64 {
+        self.client_id
+    }
+}

@@ -1,0 +1,561 @@
+//! Simulated deployment: client <-> server over the analytic WAN model,
+//! against a shared virtual clock.
+
+use std::sync::{Arc, Mutex};
+
+use crate::auth::{self, Authenticator, KeyPair};
+use crate::callback::NotifyChannel;
+use crate::client::{ServerLink, XufsClient};
+use crate::config::XufsConfig;
+use crate::homefs::{FileStore, FsError};
+use crate::metrics::{names, Metrics};
+use crate::proto::{FileImage, MetaOp, NotifyEvent, Request, Response};
+use crate::runtime::DigestEngine;
+use crate::server::FileServer;
+use crate::simnet::{Clock, SimClock, TransferKind, Wan};
+use crate::transfer;
+use crate::vdisk::DiskModel;
+
+/// The simulated deployment: one home-space server, any number of mounted
+/// clients, one WAN.
+pub struct SimWorld {
+    pub clock: SimClock,
+    pub wan: Arc<Wan>,
+    pub server: Arc<Mutex<FileServer>>,
+    pub auth: Arc<Mutex<Authenticator>>,
+    pub engine: Arc<DigestEngine>,
+    pub cfg: XufsConfig,
+    pub metrics: Metrics,
+    pair: KeyPair,
+    next_client: u64,
+}
+
+impl SimWorld {
+    /// Stand up a deployment from config. The home space starts empty;
+    /// populate it via `home()` or the workload generators.
+    pub fn new(cfg: XufsConfig) -> Self {
+        let clock = SimClock::new();
+        let metrics = Metrics::new();
+        let wan = Arc::new(Wan::new(cfg.wan.clone(), clock.clone()));
+        let engine = Arc::new(
+            DigestEngine::from_artifacts(&cfg.artifacts_dir, metrics.clone())
+                .unwrap_or_else(|_| DigestEngine::native(metrics.clone())),
+        );
+        let mut rng = crate::util::Rng::new(cfg.seed ^ 0x5353_4855); // "USSH"
+        let pair = KeyPair::generate(&mut rng, clock.now(), 12.0 * 3600.0);
+        let home_disk = DiskModel::new(cfg.disk.home_bps, cfg.disk.home_op_s);
+        let server = FileServer::new(
+            FileStore::default(),
+            home_disk,
+            engine.clone(),
+            cfg.stripe.min_block as usize,
+            cfg.lease.duration_s,
+            metrics.clone(),
+        );
+        SimWorld {
+            clock,
+            wan,
+            server: Arc::new(Mutex::new(server)),
+            auth: Arc::new(Mutex::new(Authenticator::new(pair.clone(), cfg.seed ^ 0xA0A0))),
+            engine,
+            cfg,
+            metrics,
+            pair,
+            next_client: 1,
+        }
+    }
+
+    /// Direct access to the home space (pre-populating workloads, and the
+    /// "user edits a file at home" side of consistency tests).
+    pub fn home<R>(&self, f: impl FnOnce(&mut FileServer) -> R) -> R {
+        f(&mut self.server.lock().unwrap())
+    }
+
+    /// USSH login + mount: authenticate, open the control + callback
+    /// channels, register the callback, return a mounted client.
+    pub fn mount(&mut self, root: &str) -> Result<XufsClient<SimLink>, FsError> {
+        let client_id = self.next_client;
+        self.next_client += 1;
+        let mut link = SimLink {
+            server: self.server.clone(),
+            auth: self.auth.clone(),
+            wan: self.wan.clone(),
+            clock: self.clock.clone(),
+            channel: NotifyChannel::new(),
+            cfg: self.cfg.clone(),
+            metrics: self.metrics.clone(),
+            pair: self.pair.clone(),
+            client_id,
+            net_up: true,
+            session: None,
+            root: root.to_string(),
+        };
+        link.connect()?;
+        Ok(XufsClient::new(
+            link,
+            self.cfg.clone(),
+            self.engine.clone(),
+            Arc::new(self.clock.clone()),
+            root,
+            self.metrics.clone(),
+        ))
+    }
+
+    /// Simulate a server crash (process dies; home disk survives).
+    pub fn server_crash(&self) {
+        self.server.lock().unwrap().crash();
+    }
+
+    /// Server restarted (paper: by crontab).
+    pub fn server_restart(&self) {
+        self.server.lock().unwrap().restart();
+    }
+
+    /// Housekeeping tick (lease expiry, as the server's background thread).
+    pub fn server_tick(&self) {
+        let now = self.clock.now();
+        self.server.lock().unwrap().expire_leases(now);
+    }
+}
+
+/// Simulated transport: direct calls into the shared server, with WAN time
+/// accounted against the virtual clock, plus auth + callback channel.
+pub struct SimLink {
+    server: Arc<Mutex<FileServer>>,
+    auth: Arc<Mutex<Authenticator>>,
+    wan: Arc<Wan>,
+    clock: SimClock,
+    channel: NotifyChannel,
+    cfg: XufsConfig,
+    metrics: Metrics,
+    pair: KeyPair,
+    client_id: u64,
+    /// Simulated client-side network state (false = cable pulled).
+    net_up: bool,
+    session: Option<u64>,
+    root: String,
+}
+
+impl SimLink {
+    /// Establish control + callback channels: TCP setup, USSH
+    /// challenge-response, callback registration.
+    fn connect(&mut self) -> Result<(), FsError> {
+        if !self.net_up || !self.server.lock().unwrap().is_up() {
+            return Err(FsError::Disconnected);
+        }
+        // control connection + callback connection setup
+        self.wan.connect(&self.clock);
+        self.wan.connect(&self.clock);
+        // challenge-response (2 RPCs)
+        let nonce = {
+            let mut a = self.auth.lock().unwrap();
+            a.challenge(&self.pair.key_id)
+        };
+        self.wan.rpc(&self.clock, 64, 96);
+        let proof = auth::prove(&self.pair.phrase, &self.pair.key_id, &nonce);
+        let session = {
+            let mut a = self.auth.lock().unwrap();
+            a.verify_proof(&self.pair.key_id, &proof, self.clock.now())
+        };
+        self.wan.rpc(&self.clock, 96, 32);
+        let Some(session) = session else {
+            self.metrics.incr(names::AUTH_FAILURES);
+            return Err(FsError::Perm("USSH authentication failed".into()));
+        };
+        self.session = Some(session);
+        // attach + register the callback channel
+        {
+            let mut s = self.server.lock().unwrap();
+            s.attach_channel(self.client_id, self.channel.clone());
+            s.handle(
+                self.client_id,
+                Request::RegisterCallback { root: self.root.clone(), client_id: self.client_id },
+                self.clock.now(),
+            );
+        }
+        self.wan.rpc(&self.clock, 64, 16);
+        Ok(())
+    }
+
+    /// Pull the (virtual) network cable.
+    pub fn set_network(&mut self, up: bool) {
+        self.net_up = up;
+        if !up {
+            self.channel.disconnect();
+            self.session = None;
+        }
+    }
+
+    pub fn channel(&self) -> &NotifyChannel {
+        &self.channel
+    }
+
+    fn check_up(&self) -> Result<(), FsError> {
+        if !self.net_up || self.session.is_none() {
+            return Err(FsError::Disconnected);
+        }
+        if !self.server.lock().unwrap().is_up() {
+            return Err(FsError::Disconnected);
+        }
+        Ok(())
+    }
+}
+
+impl ServerLink for SimLink {
+    fn rpc(&mut self, req: Request) -> Result<Response, FsError> {
+        self.check_up()?;
+        let req_bytes = req.wire_bytes();
+        let resp = {
+            let mut s = self.server.lock().unwrap();
+            // server-side disk op for metadata service
+            s.disk.op(&self.clock);
+            s.handle(self.client_id, req, self.clock.now())
+        };
+        self.wan.rpc(&self.clock, req_bytes, resp.wire_bytes());
+        self.metrics.add(names::WAN_RPCS, 1);
+        Ok(resp)
+    }
+
+    fn fetch(&mut self, path: &str) -> Result<FileImage, FsError> {
+        self.check_up()?;
+        let resp = {
+            let mut s = self.server.lock().unwrap();
+            let r = s.handle(self.client_id, Request::Fetch { path: path.to_string() }, self.clock.now());
+            if let Response::File { image } = &r {
+                // server reads the file off its disk
+                s.disk.io(&self.clock, image.data.len() as u64);
+            }
+            r
+        };
+        match resp {
+            Response::File { image } => {
+                let stripes = transfer::stripes_for(image.data.len() as u64, &self.cfg.stripe);
+                self.wan.transfer(
+                    &self.clock,
+                    image.data.len() as u64 + 256,
+                    stripes,
+                    TransferKind::NewConnections,
+                );
+                self.metrics.add(names::WAN_BYTES_RX, image.data.len() as u64);
+                Ok(image)
+            }
+            Response::Err { code: 2, msg } => Err(FsError::NotFound(msg)),
+            Response::Err { code: 21, msg } => Err(FsError::IsADir(msg)),
+            Response::Err { code: 111, .. } => Err(FsError::Disconnected),
+            r => Err(FsError::Protocol(format!("unexpected fetch response {r:?}"))),
+        }
+    }
+
+    fn prefetch(&mut self, files: &[(String, u64)]) -> Vec<FileImage> {
+        if self.check_up().is_err() {
+            return Vec::new();
+        }
+        let mut images = Vec::with_capacity(files.len());
+        let mut sizes = Vec::with_capacity(files.len());
+        {
+            let mut s = self.server.lock().unwrap();
+            for (path, _size) in files {
+                if let Response::File { image } =
+                    s.handle(self.client_id, Request::Fetch { path: path.clone() }, self.clock.now())
+                {
+                    sizes.push(image.data.len() as u64 + 256);
+                    images.push(image);
+                }
+            }
+            // server disk: sequential read of all prefetched bytes
+            let total: u64 = images.iter().map(|i| i.data.len() as u64).sum();
+            s.disk.io(&self.clock, total);
+        }
+        // the 12 prefetch threads fetch in parallel waves
+        self.wan.batch_fetch(&self.clock, &sizes, self.cfg.stripe.prefetch_threads);
+        self.metrics.add(names::WAN_BYTES_RX, sizes.iter().sum::<u64>());
+        images
+    }
+
+    fn ship(&mut self, seq: u64, op: &MetaOp) -> Result<Response, FsError> {
+        self.check_up()?;
+        let bytes = op.wire_bytes();
+        if bytes <= self.cfg.stripe.stripe_threshold {
+            // small meta-ops drain over the persistent control connection
+            // (1 RTT) — the queue's normal path
+            self.wan.rpc(&self.clock, bytes, 64);
+        } else {
+            // large payloads open striped data connections (§3.3)
+            let stripes = transfer::stripes_for(bytes, &self.cfg.stripe);
+            self.wan.transfer(&self.clock, bytes, stripes, TransferKind::NewConnections);
+        }
+        self.metrics.add(names::WAN_BYTES_TX, bytes);
+        let resp = {
+            let mut s = self.server.lock().unwrap();
+            // server writes the payload to its disk
+            s.disk.io(&self.clock, bytes);
+            s.handle(self.client_id, Request::Apply { seq, op: op.clone() }, self.clock.now())
+        };
+        if matches!(resp, Response::Err { code: 111, .. }) {
+            return Err(FsError::Disconnected);
+        }
+        Ok(resp)
+    }
+
+    fn drain_notifications(&mut self) -> Vec<NotifyEvent> {
+        self.channel.drain()
+    }
+
+    fn channel_generation(&self) -> u64 {
+        self.channel.generation()
+    }
+
+    fn is_connected(&self) -> bool {
+        self.net_up
+            && self.session.is_some()
+            && self.channel.is_connected()
+            && self.server.lock().unwrap().is_up()
+    }
+
+    fn reconnect(&mut self) -> Result<u64, FsError> {
+        if !self.net_up {
+            return Err(FsError::Disconnected);
+        }
+        self.channel.reconnect();
+        self.connect()?;
+        Ok(self.channel.generation())
+    }
+
+    fn client_id(&self) -> u64 {
+        self.client_id
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::client::{OpenFlags, Vfs};
+    use crate::simnet::VirtualTime;
+
+    fn world_with_home() -> SimWorld {
+        let mut cfg = XufsConfig::default();
+        cfg.cache.localized_dirs = vec!["/home/u/localout".into()];
+        let w = SimWorld::new(cfg);
+        w.home(|s| {
+            let now = VirtualTime::ZERO;
+            s.home_mut().mkdir_p("/home/u/proj", now).unwrap();
+            s.home_mut().write("/home/u/proj/main.c", b"int main() { return 0; }\n", now).unwrap();
+            s.home_mut().write("/home/u/proj/README", b"docs\n", now).unwrap();
+            s.home_mut().write("/home/u/data.bin", &vec![0xAAu8; 300_000], now).unwrap();
+        });
+        w
+    }
+
+    #[test]
+    fn mount_read_roundtrip() {
+        let mut w = world_with_home();
+        let mut c = w.mount("/home/u").unwrap();
+        let data = {
+            let fd = c.open("/home/u/proj/main.c", OpenFlags::rdonly()).unwrap();
+            let d = c.read(fd, 1024).unwrap();
+            c.close(fd).unwrap();
+            d
+        };
+        assert_eq!(data, b"int main() { return 0; }\n");
+        assert_eq!(c.metrics().counter(names::CACHE_MISSES), 1);
+        // second open is a cache hit and much faster
+        let t0 = c.now();
+        let n = c.scan_file("/home/u/proj/main.c", 1024).unwrap();
+        assert_eq!(n, 25);
+        assert_eq!(c.metrics().counter(names::CACHE_HITS), 1);
+        let dt = c.now().saturating_sub(t0).as_secs();
+        assert!(dt < 0.1, "cached read should not touch the WAN ({dt}s)");
+    }
+
+    #[test]
+    fn write_flushes_to_home_on_close() {
+        let mut w = world_with_home();
+        let mut c = w.mount("/home/u").unwrap();
+        c.write_file("/home/u/proj/new.txt", b"created at site", 4096).unwrap();
+        let home = w.home(|s| s.home().read("/home/u/proj/new.txt").unwrap().to_vec());
+        assert_eq!(home, b"created at site");
+        assert_eq!(c.queue_len(), 0, "sync-on-close drains the queue");
+    }
+
+    #[test]
+    fn big_fetch_takes_striped_wan_time() {
+        let mut w = world_with_home();
+        w.home(|s| {
+            s.home_mut().write("/home/u/big.dat", &vec![7u8; 100 << 20], VirtualTime::ZERO).unwrap()
+        });
+        let mut c = w.mount("/home/u").unwrap();
+        let t0 = c.now();
+        let n = c.scan_file("/home/u/big.dat", 1 << 20).unwrap();
+        assert_eq!(n, 100 << 20);
+        let dt = c.now().saturating_sub(t0).as_secs();
+        // 100 MiB over 12 x 2 MiB/s ~ 4.3s + overheads; local would be ~0.3s
+        assert!(dt > 3.5 && dt < 8.0, "dt={dt}");
+        // warm scan afterwards is local
+        let t1 = c.now();
+        c.scan_file("/home/u/big.dat", 1 << 20).unwrap();
+        let dt2 = c.now().saturating_sub(t1).as_secs();
+        assert!(dt2 < 0.5, "dt2={dt2}");
+    }
+
+    #[test]
+    fn cross_client_invalidation() {
+        let mut w = world_with_home();
+        let mut a = w.mount("/home/u").unwrap();
+        let mut b = w.mount("/home/u").unwrap();
+        // both cache the file
+        a.scan_file("/home/u/proj/README", 1024).unwrap();
+        b.scan_file("/home/u/proj/README", 1024).unwrap();
+        // a updates it; b must see the new content on next open
+        a.write_file("/home/u/proj/README", b"updated docs\n", 1024).unwrap();
+        let mut buf = Vec::new();
+        let fd = b.open("/home/u/proj/README", OpenFlags::rdonly()).unwrap();
+        loop {
+            let chunk = b.read(fd, 64).unwrap();
+            if chunk.is_empty() {
+                break;
+            }
+            buf.extend(chunk);
+        }
+        b.close(fd).unwrap();
+        assert_eq!(buf, b"updated docs\n");
+    }
+
+    #[test]
+    fn local_home_edit_invalidates_site_cache() {
+        let mut w = world_with_home();
+        let mut c = w.mount("/home/u").unwrap();
+        c.scan_file("/home/u/proj/README", 1024).unwrap();
+        w.home(|s| s.local_write("/home/u/proj/README", b"edited on laptop\n", VirtualTime::from_secs(5.0)).unwrap());
+        let fd = c.open("/home/u/proj/README", OpenFlags::rdonly()).unwrap();
+        let d = c.read(fd, 64).unwrap();
+        c.close(fd).unwrap();
+        assert_eq!(d, b"edited on laptop\n");
+    }
+
+    #[test]
+    fn disconnected_reads_cached_write_queues() {
+        let mut w = world_with_home();
+        let mut c = w.mount("/home/u").unwrap();
+        c.scan_file("/home/u/proj/main.c", 1024).unwrap();
+        c.link_mut().set_network(false);
+        // cached file still readable during the outage
+        let n = c.scan_file("/home/u/proj/main.c", 1024).unwrap();
+        assert_eq!(n, 25);
+        // uncached file is unreachable
+        assert!(matches!(
+            c.open("/home/u/data.bin", OpenFlags::rdonly()),
+            Err(FsError::Disconnected)
+        ));
+        // writes succeed locally and queue
+        c.write_file("/home/u/proj/offline.txt", b"queued", 1024).unwrap();
+        assert!(c.queue_len() > 0);
+        let missing = w.home(|s| s.home().exists("/home/u/proj/offline.txt"));
+        assert!(!missing, "not at home yet");
+        // reconnect: queue drains, file lands at home
+        c.link_mut().set_network(true);
+        c.link_mut().reconnect().unwrap();
+        c.fsync().unwrap();
+        assert_eq!(c.queue_len(), 0);
+        assert!(w.home(|s| s.home().exists("/home/u/proj/offline.txt")));
+    }
+
+    #[test]
+    fn localized_dir_files_never_reach_home() {
+        let mut w = world_with_home();
+        let mut c = w.mount("/home/u").unwrap();
+        c.chdir("/home/u/localout").unwrap();
+        c.write_file("/home/u/localout/raw_output.dat", &[1u8; 100_000], 4096).unwrap();
+        let n = c.scan_file("/home/u/localout/raw_output.dat", 4096).unwrap();
+        assert_eq!(n, 100_000);
+        assert!(!w.home(|s| s.home().exists("/home/u/localout/raw_output.dat")));
+        assert_eq!(c.queue_len(), 0);
+    }
+
+    #[test]
+    fn stat_served_from_attr_cache_without_wan() {
+        let mut w = world_with_home();
+        let mut c = w.mount("/home/u").unwrap();
+        c.readdir("/home/u/proj").unwrap();
+        let rpcs_before = w.wan.stats().rpcs;
+        let a = c.stat("/home/u/proj/main.c").unwrap();
+        assert_eq!(a.size, 25);
+        assert_eq!(w.wan.stats().rpcs, rpcs_before, "stat must be WAN-free");
+        // negative lookups from a complete listing are also local
+        assert!(matches!(c.stat("/home/u/proj/nope"), Err(FsError::NotFound(_))));
+        assert_eq!(w.wan.stats().rpcs, rpcs_before);
+    }
+
+    #[test]
+    fn prefetch_pulls_small_files_on_chdir() {
+        let mut w = world_with_home();
+        let mut c = w.mount("/home/u").unwrap();
+        c.chdir("/home/u/proj").unwrap();
+        assert_eq!(c.metrics().counter(names::PREFETCH_FILES), 2);
+        // opening them is now WAN-free
+        let rpcs = w.wan.stats().rpcs;
+        c.scan_file("/home/u/proj/main.c", 1024).unwrap();
+        c.scan_file("/home/u/proj/README", 1024).unwrap();
+        assert_eq!(w.wan.stats().rpcs, rpcs);
+        assert_eq!(c.metrics().counter(names::CACHE_MISSES), 0);
+    }
+
+    #[test]
+    fn server_crash_and_restart_recovers_consistency() {
+        let mut w = world_with_home();
+        let mut c = w.mount("/home/u").unwrap();
+        c.scan_file("/home/u/proj/main.c", 1024).unwrap();
+        w.server_crash();
+        // cached read still works (disconnected operation)
+        assert_eq!(c.scan_file("/home/u/proj/main.c", 1024).unwrap(), 25);
+        w.server_restart();
+        c.link_mut().reconnect().unwrap();
+        // after reconnect the client revalidates and keeps working
+        assert_eq!(c.scan_file("/home/u/proj/main.c", 1024).unwrap(), 25);
+        c.write_file("/home/u/proj/after.txt", b"ok", 64).unwrap();
+        assert!(w.home(|s| s.home().exists("/home/u/proj/after.txt")));
+    }
+
+    #[test]
+    fn client_crash_recovery_replays_queue() {
+        let mut w = world_with_home();
+        let mut c = w.mount("/home/u").unwrap();
+        c.writeback = crate::client::WritebackMode::Async;
+        c.write_file("/home/u/proj/wip.txt", b"work in progress", 1024).unwrap();
+        assert!(c.queue_len() > 0, "async mode leaves ops queued");
+        assert!(!w.home(|s| s.home().exists("/home/u/proj/wip.txt")));
+        // crash the client; cache space (parallel FS) survives
+        let surviving_store = c.cache_store_snapshot();
+        drop(c);
+
+        let mut w2_link_world = w; // same world/server
+        let cfg = w2_link_world.cfg.clone();
+        let engine = w2_link_world.engine.clone();
+        let clock = Arc::new(w2_link_world.clock.clone());
+        let metrics = w2_link_world.metrics.clone();
+        let link = {
+            // a fresh USSH login
+            let mut l = SimLink {
+                server: w2_link_world.server.clone(),
+                auth: w2_link_world.auth.clone(),
+                wan: w2_link_world.wan.clone(),
+                clock: w2_link_world.clock.clone(),
+                channel: NotifyChannel::new(),
+                cfg: cfg.clone(),
+                metrics: metrics.clone(),
+                pair: w2_link_world.pair.clone(),
+                client_id: 99,
+                net_up: true,
+                session: None,
+                root: "/home/u".into(),
+            };
+            l.connect().unwrap();
+            l
+        };
+        let (c2, corrupt) =
+            XufsClient::recover(link, cfg, engine, clock, "/home/u", surviving_store, metrics);
+        assert_eq!(corrupt, 0);
+        assert_eq!(c2.queue_len(), 0, "recovery replays the persisted queue");
+        let home = w2_link_world.home(|s| s.home().read("/home/u/proj/wip.txt").unwrap().to_vec());
+        assert_eq!(home, b"work in progress");
+    }
+}

@@ -1,0 +1,16 @@
+//! In-memory file store substrate.
+//!
+//! One implementation serves three roles in the deployment (DESIGN.md §3):
+//! the **home space** behind the user's XUFS file server, the **cache
+//! space** contents on the client side, and the server-side store of the
+//! GPFS-WAN baseline. It is a real file system core — inode table,
+//! hierarchical directories, path resolution, rename/unlink semantics,
+//! per-file versions (the cache-consistency token) — with deterministic
+//! behaviour and no host-FS dependence.
+
+mod store;
+
+pub use store::{Attr, FileStore, FsError, Ino, NodeKind};
+
+/// Result alias for file-store operations.
+pub type FsResult<T> = Result<T, FsError>;

@@ -1,0 +1,603 @@
+//! The inode-based file store (see `homefs/mod.rs`).
+
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+
+use crate::simnet::VirtualTime;
+use crate::util::path as vpath;
+
+/// Inode number.
+pub type Ino = u64;
+
+/// Errors mirroring the POSIX cases the interposed libc calls surface.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum FsError {
+    #[error("no such file or directory: {0}")]
+    NotFound(String),
+    #[error("not a directory: {0}")]
+    NotADir(String),
+    #[error("is a directory: {0}")]
+    IsADir(String),
+    #[error("file exists: {0}")]
+    Exists(String),
+    #[error("directory not empty: {0}")]
+    NotEmpty(String),
+    #[error("bad file handle")]
+    BadHandle,
+    #[error("no space left on device")]
+    NoSpace,
+    #[error("invalid argument: {0}")]
+    Invalid(String),
+    #[error("operation would block (disconnected)")]
+    Disconnected,
+    #[error("permission denied: {0}")]
+    Perm(String),
+    #[error("stale cache entry: {0}")]
+    Stale(String),
+    #[error("lock held by another client: {0}")]
+    LockConflict(String),
+    #[error("protocol error: {0}")]
+    Protocol(String),
+}
+
+/// What a directory entry points at.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeKind {
+    File,
+    Dir,
+}
+
+impl fmt::Display for NodeKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            NodeKind::File => write!(f, "file"),
+            NodeKind::Dir => write!(f, "dir"),
+        }
+    }
+}
+
+/// Stat attributes. `version` bumps on every content or attribute change
+/// and is the token the callback-consistency protocol compares.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Attr {
+    pub ino: Ino,
+    pub kind: NodeKind,
+    pub size: u64,
+    pub mtime: VirtualTime,
+    pub mode: u32,
+    pub version: u64,
+}
+
+#[derive(Debug, Clone)]
+enum Node {
+    File { data: Vec<u8> },
+    Dir { entries: BTreeMap<String, Ino> },
+}
+
+#[derive(Debug, Clone)]
+struct Inode {
+    node: Node,
+    mtime: VirtualTime,
+    mode: u32,
+    version: u64,
+}
+
+impl Inode {
+    fn kind(&self) -> NodeKind {
+        match self.node {
+            Node::File { .. } => NodeKind::File,
+            Node::Dir { .. } => NodeKind::Dir,
+        }
+    }
+
+    fn size(&self) -> u64 {
+        match &self.node {
+            Node::File { data } => data.len() as u64,
+            Node::Dir { entries } => entries.len() as u64,
+        }
+    }
+}
+
+/// The store. All paths are virtual (`util::path`), normalized internally.
+#[derive(Debug, Clone)]
+pub struct FileStore {
+    inodes: HashMap<Ino, Inode>,
+    next_ino: Ino,
+    root: Ino,
+    used: u64,
+    capacity: u64,
+}
+
+pub const DEFAULT_FILE_MODE: u32 = 0o600;
+pub const DEFAULT_DIR_MODE: u32 = 0o700;
+
+impl Default for FileStore {
+    fn default() -> Self {
+        Self::new(u64::MAX)
+    }
+}
+
+impl FileStore {
+    pub fn new(capacity: u64) -> Self {
+        let mut inodes = HashMap::new();
+        inodes.insert(
+            1,
+            Inode {
+                node: Node::Dir { entries: BTreeMap::new() },
+                mtime: VirtualTime::ZERO,
+                mode: DEFAULT_DIR_MODE,
+                version: 1,
+            },
+        );
+        FileStore { inodes, next_ino: 2, root: 1, used: 0, capacity }
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.used
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.capacity
+    }
+
+    fn alloc(&mut self, node: Node, mtime: VirtualTime, mode: u32) -> Ino {
+        let ino = self.next_ino;
+        self.next_ino += 1;
+        self.inodes.insert(ino, Inode { node, mtime, mode, version: 1 });
+        ino
+    }
+
+    /// Resolve a path to an inode.
+    pub fn resolve(&self, path: &str) -> Result<Ino, FsError> {
+        let mut cur = self.root;
+        for comp in vpath::components(path) {
+            let inode = &self.inodes[&cur];
+            match &inode.node {
+                Node::Dir { entries } => {
+                    cur = *entries.get(&comp).ok_or_else(|| FsError::NotFound(path.to_string()))?;
+                }
+                Node::File { .. } => return Err(FsError::NotADir(path.to_string())),
+            }
+        }
+        Ok(cur)
+    }
+
+    pub fn exists(&self, path: &str) -> bool {
+        self.resolve(path).is_ok()
+    }
+
+    fn resolve_parent(&self, path: &str) -> Result<(Ino, String), FsError> {
+        let p = vpath::normalize(path);
+        if p == "/" {
+            return Err(FsError::Invalid("root has no parent".into()));
+        }
+        let parent = self.resolve(&vpath::parent(&p))?;
+        if self.inodes[&parent].kind() != NodeKind::Dir {
+            return Err(FsError::NotADir(vpath::parent(&p)));
+        }
+        Ok((parent, vpath::basename(&p)))
+    }
+
+    /// Stat by path.
+    pub fn stat(&self, path: &str) -> Result<Attr, FsError> {
+        let ino = self.resolve(path)?;
+        Ok(self.stat_ino(ino))
+    }
+
+    pub fn stat_ino(&self, ino: Ino) -> Attr {
+        let i = &self.inodes[&ino];
+        Attr { ino, kind: i.kind(), size: i.size(), mtime: i.mtime, mode: i.mode, version: i.version }
+    }
+
+    /// Create an empty file. Fails if it exists.
+    pub fn create(&mut self, path: &str, now: VirtualTime) -> Result<Ino, FsError> {
+        let (parent, name) = self.resolve_parent(path)?;
+        if self.dir_entries(parent)?.contains_key(&name) {
+            return Err(FsError::Exists(path.to_string()));
+        }
+        let ino = self.alloc(Node::File { data: Vec::new() }, now, DEFAULT_FILE_MODE);
+        self.link(parent, &name, ino, now)?;
+        Ok(ino)
+    }
+
+    /// Create a directory. Fails if it exists.
+    pub fn mkdir(&mut self, path: &str, now: VirtualTime) -> Result<Ino, FsError> {
+        let (parent, name) = self.resolve_parent(path)?;
+        if self.dir_entries(parent)?.contains_key(&name) {
+            return Err(FsError::Exists(path.to_string()));
+        }
+        let ino = self.alloc(Node::Dir { entries: BTreeMap::new() }, now, DEFAULT_DIR_MODE);
+        self.link(parent, &name, ino, now)?;
+        Ok(ino)
+    }
+
+    /// `mkdir -p`.
+    pub fn mkdir_p(&mut self, path: &str, now: VirtualTime) -> Result<Ino, FsError> {
+        let mut cur = "/".to_string();
+        let mut ino = self.root;
+        for comp in vpath::components(path) {
+            cur = vpath::join(&cur, &comp);
+            ino = match self.resolve(&cur) {
+                Ok(i) => {
+                    if self.inodes[&i].kind() != NodeKind::Dir {
+                        return Err(FsError::NotADir(cur));
+                    }
+                    i
+                }
+                Err(FsError::NotFound(_)) => self.mkdir(&cur, now)?,
+                Err(e) => return Err(e),
+            };
+        }
+        Ok(ino)
+    }
+
+    fn dir_entries(&self, ino: Ino) -> Result<&BTreeMap<String, Ino>, FsError> {
+        match &self.inodes.get(&ino).ok_or(FsError::BadHandle)?.node {
+            Node::Dir { entries } => Ok(entries),
+            Node::File { .. } => Err(FsError::NotADir(format!("ino {ino}"))),
+        }
+    }
+
+    fn link(&mut self, parent: Ino, name: &str, child: Ino, now: VirtualTime) -> Result<(), FsError> {
+        match &mut self.inodes.get_mut(&parent).ok_or(FsError::BadHandle)?.node {
+            Node::Dir { entries } => {
+                entries.insert(name.to_string(), child);
+            }
+            Node::File { .. } => return Err(FsError::NotADir(name.to_string())),
+        }
+        let p = self.inodes.get_mut(&parent).unwrap();
+        p.mtime = now;
+        p.version += 1;
+        Ok(())
+    }
+
+    /// List a directory (sorted names + attrs).
+    pub fn readdir(&self, path: &str) -> Result<Vec<(String, Attr)>, FsError> {
+        let ino = self.resolve(path)?;
+        let entries = self.dir_entries(ino)?;
+        Ok(entries.iter().map(|(n, &i)| (n.clone(), self.stat_ino(i))).collect())
+    }
+
+    /// Full file contents.
+    pub fn read(&self, path: &str) -> Result<&[u8], FsError> {
+        let ino = self.resolve(path)?;
+        match &self.inodes[&ino].node {
+            Node::File { data } => Ok(data),
+            Node::Dir { .. } => Err(FsError::IsADir(path.to_string())),
+        }
+    }
+
+    /// Ranged read; clamped to EOF.
+    pub fn read_at(&self, path: &str, offset: u64, len: usize) -> Result<&[u8], FsError> {
+        let data = self.read(path)?;
+        let start = (offset as usize).min(data.len());
+        let end = (start + len).min(data.len());
+        Ok(&data[start..end])
+    }
+
+    /// Replace file contents entirely (creating the file if absent).
+    pub fn write(&mut self, path: &str, content: &[u8], now: VirtualTime) -> Result<(), FsError> {
+        if self.resolve(path).is_err() {
+            self.create(path, now)?;
+        }
+        let ino = self.resolve(path)?;
+        let old = self.inodes[&ino].size();
+        let new = content.len() as u64;
+        self.charge(old, new)?;
+        let inode = self.inodes.get_mut(&ino).unwrap();
+        match &mut inode.node {
+            Node::File { data } => {
+                data.clear();
+                data.extend_from_slice(content);
+            }
+            Node::Dir { .. } => return Err(FsError::IsADir(path.to_string())),
+        }
+        inode.mtime = now;
+        inode.version += 1;
+        Ok(())
+    }
+
+    /// Ranged write (extends the file as needed).
+    pub fn write_at(&mut self, path: &str, offset: u64, buf: &[u8], now: VirtualTime) -> Result<(), FsError> {
+        let ino = self.resolve(path)?;
+        let old = self.inodes[&ino].size();
+        let end = offset + buf.len() as u64;
+        let new = old.max(end);
+        self.charge(old, new)?;
+        let inode = self.inodes.get_mut(&ino).unwrap();
+        match &mut inode.node {
+            Node::File { data } => {
+                if data.len() < end as usize {
+                    data.resize(end as usize, 0);
+                }
+                data[offset as usize..end as usize].copy_from_slice(buf);
+            }
+            Node::Dir { .. } => return Err(FsError::IsADir(path.to_string())),
+        }
+        inode.mtime = now;
+        inode.version += 1;
+        Ok(())
+    }
+
+    /// Truncate/extend to `size`.
+    pub fn truncate(&mut self, path: &str, size: u64, now: VirtualTime) -> Result<(), FsError> {
+        let ino = self.resolve(path)?;
+        let old = self.inodes[&ino].size();
+        self.charge(old, size)?;
+        let inode = self.inodes.get_mut(&ino).unwrap();
+        match &mut inode.node {
+            Node::File { data } => data.resize(size as usize, 0),
+            Node::Dir { .. } => return Err(FsError::IsADir(path.to_string())),
+        }
+        inode.mtime = now;
+        inode.version += 1;
+        Ok(())
+    }
+
+    fn charge(&mut self, old: u64, new: u64) -> Result<(), FsError> {
+        let next = self.used - old + new;
+        if next > self.capacity {
+            return Err(FsError::NoSpace);
+        }
+        self.used = next;
+        Ok(())
+    }
+
+    /// chmod.
+    pub fn set_mode(&mut self, path: &str, mode: u32, now: VirtualTime) -> Result<(), FsError> {
+        let ino = self.resolve(path)?;
+        let inode = self.inodes.get_mut(&ino).unwrap();
+        inode.mode = mode;
+        inode.mtime = now;
+        inode.version += 1;
+        Ok(())
+    }
+
+    /// Remove a file.
+    pub fn unlink(&mut self, path: &str, now: VirtualTime) -> Result<(), FsError> {
+        let ino = self.resolve(path)?;
+        if self.inodes[&ino].kind() == NodeKind::Dir {
+            return Err(FsError::IsADir(path.to_string()));
+        }
+        let (parent, name) = self.resolve_parent(path)?;
+        let size = self.inodes[&ino].size();
+        if let Node::Dir { entries } = &mut self.inodes.get_mut(&parent).unwrap().node {
+            entries.remove(&name);
+        }
+        let p = self.inodes.get_mut(&parent).unwrap();
+        p.mtime = now;
+        p.version += 1;
+        self.inodes.remove(&ino);
+        self.used -= size;
+        Ok(())
+    }
+
+    /// Remove an empty directory.
+    pub fn rmdir(&mut self, path: &str, now: VirtualTime) -> Result<(), FsError> {
+        let ino = self.resolve(path)?;
+        match &self.inodes[&ino].node {
+            Node::Dir { entries } if !entries.is_empty() => {
+                return Err(FsError::NotEmpty(path.to_string()))
+            }
+            Node::Dir { .. } => {}
+            Node::File { .. } => return Err(FsError::NotADir(path.to_string())),
+        }
+        if ino == self.root {
+            return Err(FsError::Invalid("cannot remove root".into()));
+        }
+        let (parent, name) = self.resolve_parent(path)?;
+        if let Node::Dir { entries } = &mut self.inodes.get_mut(&parent).unwrap().node {
+            entries.remove(&name);
+        }
+        let p = self.inodes.get_mut(&parent).unwrap();
+        p.mtime = now;
+        p.version += 1;
+        self.inodes.remove(&ino);
+        Ok(())
+    }
+
+    /// Rename (file or directory). POSIX-style: replaces an existing file
+    /// target; fails on non-empty directory target; refuses to move a
+    /// directory under itself.
+    pub fn rename(&mut self, from: &str, to: &str, now: VirtualTime) -> Result<(), FsError> {
+        let from_n = vpath::normalize(from);
+        let to_n = vpath::normalize(to);
+        let ino = self.resolve(&from_n)?;
+        if self.inodes[&ino].kind() == NodeKind::Dir && vpath::is_under(&to_n, &from_n) {
+            return Err(FsError::Invalid("cannot move directory under itself".into()));
+        }
+        if let Ok(existing) = self.resolve(&to_n) {
+            match self.inodes[&existing].kind() {
+                NodeKind::File => self.unlink(&to_n, now)?,
+                NodeKind::Dir => {
+                    if !self.dir_entries(existing)?.is_empty() {
+                        return Err(FsError::NotEmpty(to_n));
+                    }
+                    self.rmdir(&to_n, now)?;
+                }
+            }
+        }
+        let (old_parent, old_name) = self.resolve_parent(&from_n)?;
+        let (new_parent, new_name) = self.resolve_parent(&to_n)?;
+        if let Node::Dir { entries } = &mut self.inodes.get_mut(&old_parent).unwrap().node {
+            entries.remove(&old_name);
+        }
+        let op = self.inodes.get_mut(&old_parent).unwrap();
+        op.mtime = now;
+        op.version += 1;
+        self.link(new_parent, &new_name, ino, now)?;
+        Ok(())
+    }
+
+    /// Depth-first walk of all paths under `root` (files and dirs),
+    /// normalized, sorted within each directory.
+    pub fn walk(&self, root: &str) -> Result<Vec<(String, Attr)>, FsError> {
+        let root_n = vpath::normalize(root);
+        let ino = self.resolve(&root_n)?;
+        let mut out = Vec::new();
+        let mut stack = vec![(root_n.clone(), ino)];
+        while let Some((path, ino)) = stack.pop() {
+            let inode = &self.inodes[&ino];
+            if path != root_n {
+                out.push((path.clone(), self.stat_ino(ino)));
+            }
+            if let Node::Dir { entries } = &inode.node {
+                // push in reverse so iteration order is sorted
+                for (name, &child) in entries.iter().rev() {
+                    stack.push((vpath::join(&path, name), child));
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> VirtualTime {
+        VirtualTime::from_secs(s)
+    }
+
+    #[test]
+    fn create_write_read() {
+        let mut fs = FileStore::default();
+        fs.mkdir_p("/home/user", t(1.0)).unwrap();
+        fs.write("/home/user/a.txt", b"hello", t(2.0)).unwrap();
+        assert_eq!(fs.read("/home/user/a.txt").unwrap(), b"hello");
+        let a = fs.stat("/home/user/a.txt").unwrap();
+        assert_eq!(a.size, 5);
+        assert_eq!(a.kind, NodeKind::File);
+        assert_eq!(fs.used_bytes(), 5);
+    }
+
+    #[test]
+    fn versions_bump_on_change() {
+        let mut fs = FileStore::default();
+        fs.write("/f", b"1", t(1.0)).unwrap();
+        let v1 = fs.stat("/f").unwrap().version;
+        fs.write("/f", b"22", t(2.0)).unwrap();
+        let v2 = fs.stat("/f").unwrap().version;
+        assert!(v2 > v1);
+        fs.set_mode("/f", 0o644, t(3.0)).unwrap();
+        assert!(fs.stat("/f").unwrap().version > v2);
+    }
+
+    #[test]
+    fn parent_dir_version_bumps_on_link_unlink() {
+        let mut fs = FileStore::default();
+        fs.mkdir("/d", t(1.0)).unwrap();
+        let v1 = fs.stat("/d").unwrap().version;
+        fs.create("/d/x", t(2.0)).unwrap();
+        let v2 = fs.stat("/d").unwrap().version;
+        assert!(v2 > v1);
+        fs.unlink("/d/x", t(3.0)).unwrap();
+        assert!(fs.stat("/d").unwrap().version > v2);
+    }
+
+    #[test]
+    fn write_at_extends() {
+        let mut fs = FileStore::default();
+        fs.create("/f", t(0.0)).unwrap();
+        fs.write_at("/f", 4, b"abcd", t(1.0)).unwrap();
+        assert_eq!(fs.read("/f").unwrap(), b"\0\0\0\0abcd");
+        fs.write_at("/f", 0, b"zz", t(2.0)).unwrap();
+        assert_eq!(fs.read("/f").unwrap(), b"zz\0\0abcd");
+        assert_eq!(fs.used_bytes(), 8);
+    }
+
+    #[test]
+    fn read_at_clamps() {
+        let mut fs = FileStore::default();
+        fs.write("/f", b"0123456789", t(0.0)).unwrap();
+        assert_eq!(fs.read_at("/f", 8, 10).unwrap(), b"89");
+        assert_eq!(fs.read_at("/f", 20, 10).unwrap(), b"");
+    }
+
+    #[test]
+    fn truncate_both_ways() {
+        let mut fs = FileStore::default();
+        fs.write("/f", b"0123456789", t(0.0)).unwrap();
+        fs.truncate("/f", 4, t(1.0)).unwrap();
+        assert_eq!(fs.read("/f").unwrap(), b"0123");
+        fs.truncate("/f", 6, t(2.0)).unwrap();
+        assert_eq!(fs.read("/f").unwrap(), b"0123\0\0");
+        assert_eq!(fs.used_bytes(), 6);
+    }
+
+    #[test]
+    fn unlink_and_rmdir() {
+        let mut fs = FileStore::default();
+        fs.mkdir("/d", t(0.0)).unwrap();
+        fs.write("/d/f", b"xyz", t(0.0)).unwrap();
+        assert_eq!(fs.rmdir("/d", t(0.5)), Err(FsError::NotEmpty("/d".into())));
+        fs.unlink("/d/f", t(1.0)).unwrap();
+        assert_eq!(fs.used_bytes(), 0);
+        fs.rmdir("/d", t(2.0)).unwrap();
+        assert!(!fs.exists("/d"));
+    }
+
+    #[test]
+    fn rename_file_replaces_target() {
+        let mut fs = FileStore::default();
+        fs.write("/a", b"aaa", t(0.0)).unwrap();
+        fs.write("/b", b"b", t(0.0)).unwrap();
+        fs.rename("/a", "/b", t(1.0)).unwrap();
+        assert!(!fs.exists("/a"));
+        assert_eq!(fs.read("/b").unwrap(), b"aaa");
+        assert_eq!(fs.used_bytes(), 3);
+    }
+
+    #[test]
+    fn rename_dir_moves_subtree() {
+        let mut fs = FileStore::default();
+        fs.mkdir_p("/a/b", t(0.0)).unwrap();
+        fs.write("/a/b/f", b"1", t(0.0)).unwrap();
+        fs.mkdir("/c", t(0.0)).unwrap();
+        fs.rename("/a/b", "/c/b", t(1.0)).unwrap();
+        assert_eq!(fs.read("/c/b/f").unwrap(), b"1");
+        assert!(!fs.exists("/a/b"));
+    }
+
+    #[test]
+    fn rename_into_self_rejected() {
+        let mut fs = FileStore::default();
+        fs.mkdir_p("/a/b", t(0.0)).unwrap();
+        assert!(matches!(fs.rename("/a", "/a/b/c", t(1.0)), Err(FsError::Invalid(_))));
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut fs = FileStore::new(10);
+        fs.write("/f", b"0123456789", t(0.0)).unwrap();
+        assert_eq!(fs.write("/g", b"x", t(1.0)), Err(FsError::NoSpace));
+        // rewriting smaller frees space
+        fs.write("/f", b"01234", t(2.0)).unwrap();
+        fs.write("/g", b"x", t(3.0)).unwrap();
+    }
+
+    #[test]
+    fn readdir_sorted_and_walk() {
+        let mut fs = FileStore::default();
+        fs.mkdir_p("/r/sub", t(0.0)).unwrap();
+        fs.write("/r/b.txt", b"b", t(0.0)).unwrap();
+        fs.write("/r/a.txt", b"a", t(0.0)).unwrap();
+        fs.write("/r/sub/c.txt", b"c", t(0.0)).unwrap();
+        let names: Vec<String> = fs.readdir("/r").unwrap().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["a.txt", "b.txt", "sub"]);
+        let walked: Vec<String> = fs.walk("/r").unwrap().into_iter().map(|(p, _)| p).collect();
+        assert_eq!(walked, vec!["/r/a.txt", "/r/b.txt", "/r/sub", "/r/sub/c.txt"]);
+    }
+
+    #[test]
+    fn resolve_errors() {
+        let mut fs = FileStore::default();
+        fs.write("/f", b"x", t(0.0)).unwrap();
+        assert!(matches!(fs.stat("/missing"), Err(FsError::NotFound(_))));
+        assert!(matches!(fs.readdir("/f"), Err(FsError::NotADir(_))));
+        assert!(matches!(fs.read("/"), Err(FsError::IsADir(_))));
+        assert!(matches!(fs.mkdir("/f/sub", t(1.0)), Err(FsError::NotADir(_))));
+        assert!(matches!(fs.create("/f", t(1.0)), Err(FsError::Exists(_))));
+    }
+}

@@ -1,0 +1,290 @@
+//! Lock leases (paper §3.1).
+//!
+//! File locking operations — except for files in *localized directories* —
+//! are forwarded to the file server through the lease manager. The server
+//! grants locks with a bounded lease; the client-side [`LeaseManager`]
+//! renews held leases before they lapse, and the server-side [`LockTable`]
+//! expires leases that stop being renewed (orphaned locks after a client
+//! crash or disconnection).
+
+use std::collections::HashMap;
+
+use crate::proto::LockKind;
+use crate::simnet::VirtualTime;
+
+/// A granted lock on the server.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LockRec {
+    pub token: u64,
+    pub path: String,
+    pub kind: LockKind,
+    pub owner: u64,
+    pub expires: VirtualTime,
+}
+
+/// Outcome of an acquire attempt.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Acquire {
+    Granted { token: u64, lease: VirtualTime },
+    Denied { holder: u64 },
+}
+
+/// Server-side lock table with lease expiry.
+#[derive(Debug, Default)]
+pub struct LockTable {
+    locks: HashMap<u64, LockRec>,
+    next_token: u64,
+    lease_s: f64,
+}
+
+impl LockTable {
+    pub fn new(lease_s: f64) -> Self {
+        LockTable { locks: HashMap::new(), next_token: 1, lease_s }
+    }
+
+    pub fn lease_secs(&self) -> f64 {
+        self.lease_s
+    }
+
+    fn conflicts(&self, path: &str, kind: LockKind, owner: u64, now: VirtualTime) -> Option<u64> {
+        self.locks.values().find_map(|l| {
+            if l.path != path || l.expires <= now || l.owner == owner {
+                return None;
+            }
+            match (l.kind, kind) {
+                (LockKind::Shared, LockKind::Shared) => None,
+                _ => Some(l.owner),
+            }
+        })
+    }
+
+    /// Try to acquire; shared locks coexist, exclusive locks conflict with
+    /// everything held by *other* owners. Expired locks never conflict.
+    pub fn acquire(&mut self, path: &str, kind: LockKind, owner: u64, now: VirtualTime) -> Acquire {
+        if let Some(holder) = self.conflicts(path, kind, owner, now) {
+            return Acquire::Denied { holder };
+        }
+        let token = self.next_token;
+        self.next_token += 1;
+        let expires = now.add_secs(self.lease_s);
+        self.locks.insert(token, LockRec { token, path: path.to_string(), kind, owner, expires });
+        Acquire::Granted { token, lease: expires }
+    }
+
+    /// Renew a lease (owner must match). Returns the new expiry.
+    pub fn renew(&mut self, token: u64, owner: u64, now: VirtualTime) -> Option<VirtualTime> {
+        let lease_s = self.lease_s;
+        let l = self.locks.get_mut(&token)?;
+        if l.owner != owner || l.expires <= now {
+            return None;
+        }
+        l.expires = now.add_secs(lease_s);
+        Some(l.expires)
+    }
+
+    /// Release (owner must match).
+    pub fn release(&mut self, token: u64, owner: u64) -> bool {
+        match self.locks.get(&token) {
+            Some(l) if l.owner == owner => {
+                self.locks.remove(&token);
+                true
+            }
+            _ => false,
+        }
+    }
+
+    /// Drop expired leases; returns how many were evicted (orphans).
+    pub fn expire(&mut self, now: VirtualTime) -> usize {
+        let before = self.locks.len();
+        self.locks.retain(|_, l| l.expires > now);
+        before - self.locks.len()
+    }
+
+    /// Active (unexpired) locks on a path.
+    pub fn holders(&self, path: &str, now: VirtualTime) -> Vec<&LockRec> {
+        self.locks.values().filter(|l| l.path == path && l.expires > now).collect()
+    }
+
+    /// Drop every lock owned by `owner` (client unmount / crash cleanup).
+    pub fn release_owner(&mut self, owner: u64) -> usize {
+        let before = self.locks.len();
+        self.locks.retain(|_, l| l.owner != owner);
+        before - self.locks.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.locks.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.locks.is_empty()
+    }
+}
+
+/// One lease held by the client.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HeldLease {
+    pub token: u64,
+    pub path: String,
+    pub kind: LockKind,
+    pub expires: VirtualTime,
+}
+
+/// Client-side lease bookkeeping: which remote locks we hold and which are
+/// due for renewal. The client calls [`LeaseManager::due_for_renewal`] at
+/// op boundaries (its "periodic renewal") and sends `LockRenew` for each.
+#[derive(Debug, Default)]
+pub struct LeaseManager {
+    held: HashMap<u64, HeldLease>,
+    renew_fraction: f64,
+    lease_s: f64,
+}
+
+impl LeaseManager {
+    pub fn new(lease_s: f64, renew_fraction: f64) -> Self {
+        LeaseManager { held: HashMap::new(), renew_fraction, lease_s }
+    }
+
+    pub fn granted(&mut self, token: u64, path: &str, kind: LockKind, expires: VirtualTime) {
+        self.held.insert(token, HeldLease { token, path: path.to_string(), kind, expires });
+    }
+
+    pub fn renewed(&mut self, token: u64, expires: VirtualTime) {
+        if let Some(l) = self.held.get_mut(&token) {
+            l.expires = expires;
+        }
+    }
+
+    pub fn released(&mut self, token: u64) {
+        self.held.remove(&token);
+    }
+
+    /// Tokens past the renewal point: remaining lease below
+    /// `(1 - renew_fraction)` of the full lease.
+    pub fn due_for_renewal(&self, now: VirtualTime) -> Vec<u64> {
+        let threshold = self.lease_s * (1.0 - self.renew_fraction);
+        self.held
+            .values()
+            .filter(|l| l.expires.saturating_sub(now).as_secs() <= threshold)
+            .map(|l| l.token)
+            .collect()
+    }
+
+    /// Leases that already lapsed (e.g. while disconnected) — the client
+    /// must treat these locks as lost.
+    pub fn expired(&self, now: VirtualTime) -> Vec<u64> {
+        self.held.values().filter(|l| l.expires <= now).map(|l| l.token).collect()
+    }
+
+    pub fn drop_expired(&mut self, now: VirtualTime) -> usize {
+        let before = self.held.len();
+        self.held.retain(|_, l| l.expires > now);
+        before - self.held.len()
+    }
+
+    pub fn token_for(&self, path: &str) -> Option<u64> {
+        self.held.values().find(|l| l.path == path).map(|l| l.token)
+    }
+
+    pub fn len(&self) -> usize {
+        self.held.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.held.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn t(s: f64) -> VirtualTime {
+        VirtualTime::from_secs(s)
+    }
+
+    #[test]
+    fn exclusive_conflicts() {
+        let mut lt = LockTable::new(30.0);
+        let a = lt.acquire("/f", LockKind::Exclusive, 1, t(0.0));
+        assert!(matches!(a, Acquire::Granted { .. }));
+        assert_eq!(lt.acquire("/f", LockKind::Exclusive, 2, t(1.0)), Acquire::Denied { holder: 1 });
+        assert_eq!(lt.acquire("/f", LockKind::Shared, 2, t(1.0)), Acquire::Denied { holder: 1 });
+        assert!(matches!(lt.acquire("/g", LockKind::Exclusive, 2, t(1.0)), Acquire::Granted { .. }));
+    }
+
+    #[test]
+    fn shared_locks_coexist_but_block_exclusive() {
+        let mut lt = LockTable::new(30.0);
+        assert!(matches!(lt.acquire("/f", LockKind::Shared, 1, t(0.0)), Acquire::Granted { .. }));
+        assert!(matches!(lt.acquire("/f", LockKind::Shared, 2, t(0.0)), Acquire::Granted { .. }));
+        assert!(matches!(lt.acquire("/f", LockKind::Exclusive, 3, t(0.0)), Acquire::Denied { .. }));
+        assert_eq!(lt.holders("/f", t(0.0)).len(), 2);
+    }
+
+    #[test]
+    fn lease_expiry_frees_orphans() {
+        let mut lt = LockTable::new(30.0);
+        let Acquire::Granted { token, .. } = lt.acquire("/f", LockKind::Exclusive, 1, t(0.0)) else {
+            panic!()
+        };
+        // crashed client never renews; after the lease lapses another
+        // client gets the lock
+        assert!(matches!(lt.acquire("/f", LockKind::Exclusive, 2, t(31.0)), Acquire::Granted { .. }));
+        assert_eq!(lt.expire(t(31.0)), 1);
+        assert!(lt.renew(token, 1, t(31.0)).is_none());
+    }
+
+    #[test]
+    fn renew_extends() {
+        let mut lt = LockTable::new(30.0);
+        let Acquire::Granted { token, .. } = lt.acquire("/f", LockKind::Exclusive, 1, t(0.0)) else {
+            panic!()
+        };
+        let e = lt.renew(token, 1, t(20.0)).unwrap();
+        assert_eq!(e, t(50.0));
+        assert!(lt.renew(token, 9, t(21.0)).is_none());
+        assert!(!lt.release(token, 9));
+        assert!(lt.release(token, 1));
+        assert!(lt.is_empty());
+    }
+
+    #[test]
+    fn release_owner_cleanup() {
+        let mut lt = LockTable::new(30.0);
+        lt.acquire("/a", LockKind::Shared, 1, t(0.0));
+        lt.acquire("/b", LockKind::Shared, 1, t(0.0));
+        lt.acquire("/c", LockKind::Shared, 2, t(0.0));
+        assert_eq!(lt.release_owner(1), 2);
+        assert_eq!(lt.len(), 1);
+    }
+
+    #[test]
+    fn same_owner_reacquire_not_self_conflicting() {
+        let mut lt = LockTable::new(30.0);
+        lt.acquire("/f", LockKind::Exclusive, 1, t(0.0));
+        assert!(matches!(lt.acquire("/f", LockKind::Exclusive, 1, t(1.0)), Acquire::Granted { .. }));
+    }
+
+    #[test]
+    fn manager_renewal_schedule() {
+        let mut lm = LeaseManager::new(30.0, 0.5);
+        lm.granted(7, "/f", LockKind::Exclusive, t(30.0));
+        assert!(lm.due_for_renewal(t(0.0)).is_empty());
+        assert_eq!(lm.due_for_renewal(t(16.0)), vec![7]);
+        lm.renewed(7, t(46.0));
+        assert!(lm.due_for_renewal(t(16.0)).is_empty());
+        assert!(lm.expired(t(50.0)).contains(&7));
+        assert_eq!(lm.drop_expired(t(50.0)), 1);
+        assert!(lm.is_empty());
+    }
+
+    #[test]
+    fn manager_token_lookup() {
+        let mut lm = LeaseManager::new(30.0, 0.5);
+        lm.granted(3, "/x", LockKind::Shared, t(30.0));
+        assert_eq!(lm.token_for("/x"), Some(3));
+        lm.released(3);
+        assert_eq!(lm.token_for("/x"), None);
+    }
+}

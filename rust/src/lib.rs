@@ -1,0 +1,39 @@
+//! # XUFS — a wide-area distributed file system for HPC infrastructures
+//!
+//! Production-quality reproduction of *“A Distributed File System for a
+//! Wide-Area High Performance Computing Infrastructure”* (E. Walker, 2010):
+//! private distributed name spaces with whole-file on-disk caching, a
+//! persisted meta-operation queue, callback cache consistency, lock
+//! leases, striped WAN transfers and parallel small-file pre-fetching —
+//! plus the GPFS-WAN / NFS / SCP / TGCP baselines and the paper's full
+//! evaluation harness.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for
+//! paper-vs-measured results. Layer map:
+//!
+//! * **L3 (this crate)** — coordinator: client, server, cache, transfer,
+//!   consistency, recovery, baselines, benches.
+//! * **L2/L1 (python/, build-time only)** — JAX transfer-plan graph and
+//!   Pallas digest kernels, AOT-lowered to `artifacts/*.hlo.txt` and
+//!   executed by [`runtime`] via PJRT.
+
+pub mod auth;
+pub mod baselines;
+pub mod bench;
+pub mod cache;
+pub mod callback;
+pub mod client;
+pub mod config;
+pub mod coordinator;
+pub mod homefs;
+pub mod lease;
+pub mod metaq;
+pub mod metrics;
+pub mod proto;
+pub mod runtime;
+pub mod server;
+pub mod simnet;
+pub mod transfer;
+pub mod util;
+pub mod vdisk;
+pub mod workload;

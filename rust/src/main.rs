@@ -1,0 +1,297 @@
+//! `xufs` — the leader binary: serve a home space over TCP, run the
+//! paper's benchmarks, regenerate the census, or self-test a deployment.
+//!
+//! ```text
+//! xufs selftest                      quick end-to-end smoke (sim world)
+//! xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|ablations|all
+//! xufs census [--seed N]             regenerate Table 1
+//! xufs serve [--config xufs.toml]    real TCP file server (demo home space)
+//! xufs config                        print the default config as TOML keys
+//! ```
+
+use std::sync::{Arc, Mutex};
+
+use xufs::auth::{Authenticator, KeyPair};
+use xufs::bench;
+use xufs::client::{ServerLink, Vfs};
+use xufs::config::XufsConfig;
+use xufs::coordinator::net::TcpServer;
+use xufs::coordinator::SimWorld;
+use xufs::homefs::FileStore;
+use xufs::metrics::Metrics;
+use xufs::runtime::DigestEngine;
+use xufs::server::FileServer;
+use xufs::simnet::VirtualTime;
+use xufs::util::Rng;
+use xufs::vdisk::DiskModel;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let cmd = args.first().map(String::as_str).unwrap_or("help");
+    let flag = |name: &str| args.iter().any(|a| a == name);
+    let opt = |name: &str| {
+        args.iter()
+            .position(|a| a == name)
+            .and_then(|i| args.get(i + 1))
+            .cloned()
+    };
+
+    let cfg = match opt("--config") {
+        Some(path) => match std::fs::read_to_string(&path) {
+            Ok(text) => match XufsConfig::from_toml(&text) {
+                Ok(mut c) => {
+                    if c.artifacts_dir.is_empty() {
+                        c.artifacts_dir = "artifacts".into();
+                    }
+                    c
+                }
+                Err(e) => {
+                    eprintln!("bad config {path}: {e}");
+                    std::process::exit(2);
+                }
+            },
+            Err(e) => {
+                eprintln!("cannot read {path}: {e}");
+                std::process::exit(2);
+            }
+        },
+        None => XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() },
+    };
+
+    match cmd {
+        "selftest" => selftest(cfg),
+        "bench" => run_bench(cfg, args.get(1).map(String::as_str).unwrap_or("all"), flag("--quick")),
+        "census" => {
+            let seed = opt("--seed").and_then(|s| s.parse().ok()).unwrap_or(1);
+            bench::run_table1(seed).print();
+        }
+        "serve" => serve(cfg),
+        "perf" => perf(cfg),
+        "config" => print_config(),
+        _ => {
+            println!("{HELP}");
+        }
+    }
+}
+
+const HELP: &str = "\
+xufs — wide-area distributed file system (XUFS reproduction)
+
+USAGE:
+  xufs selftest                      end-to-end smoke test (sim world)
+  xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|ablations|all
+  xufs census [--seed N]             regenerate the Table 1 census
+  xufs serve [--config xufs.toml]    run the TCP file server (demo home)
+  xufs perf                          hot-path microbenchmarks (wall-clock)
+  xufs config                        print accepted config keys
+";
+
+fn selftest(cfg: XufsConfig) {
+    let mut world = SimWorld::new(cfg);
+    println!(
+        "digest engine: {}",
+        if world.engine.is_pjrt() { "PJRT artifacts" } else { "native" }
+    );
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+        s.home_mut().write("/home/u/hello.txt", b"selftest content", VirtualTime::ZERO).unwrap();
+    });
+    let mut c = world.mount("/home/u").expect("mount");
+    assert_eq!(c.scan_file("/home/u/hello.txt", 4096).unwrap(), 16);
+    c.write_file("/home/u/out.txt", b"written back", 4096).unwrap();
+    assert!(world.home(|s| s.home().exists("/home/u/out.txt")));
+    world.home(|s| s.local_write("/home/u/hello.txt", b"changed", VirtualTime::from_secs(5.0)).unwrap());
+    assert_eq!(c.scan_file("/home/u/hello.txt", 4096).unwrap(), 7);
+    c.link_mut().set_network(false);
+    assert!(c.scan_file("/home/u/hello.txt", 4096).is_ok());
+    c.link_mut().set_network(true);
+    c.link_mut().reconnect().unwrap();
+    c.fsync().unwrap();
+    println!("selftest OK  (metrics: {})", c.metrics().to_json());
+}
+
+fn run_bench(cfg: XufsConfig, which: &str, quick: bool) {
+    match which {
+        "table1" => bench::run_table1(cfg.seed.max(1)).print(),
+        "fig2" | "fig3" => {
+            let (w, r) = bench::run_fig2_fig3(&cfg, quick);
+            if which == "fig2" {
+                w.print()
+            } else {
+                r.print()
+            }
+        }
+        "fig4" => bench::run_fig4(&cfg, 5).print(),
+        "fig5" | "table2" => {
+            let gib = if quick { 256 << 20 } else { 1u64 << 30 };
+            let (f, t) = bench::run_fig5_table2(&cfg, 5, gib);
+            if which == "fig5" {
+                f.print()
+            } else {
+                t.print()
+            }
+        }
+        "ablations" => {
+            let gib = if quick { 128u64 << 20 } else { 1 << 30 };
+            bench::run_ablation_stripes(&cfg, gib).print();
+            bench::run_ablation_prefetch(&cfg).print();
+            bench::run_ablation_delta(&cfg, if quick { 16 } else { 64 }).print();
+            bench::run_ablation_consistency(&cfg, 3).print();
+            bench::run_ablation_writeback(&cfg).print();
+        }
+        "all" => {
+            bench::run_table1(cfg.seed.max(1)).print();
+            let (w, r) = bench::run_fig2_fig3(&cfg, quick);
+            w.print();
+            r.print();
+            bench::run_fig4(&cfg, 5).print();
+            let gib = if quick { 256 << 20 } else { 1u64 << 30 };
+            let (f, t) = bench::run_fig5_table2(&cfg, 5, gib);
+            f.print();
+            t.print();
+        }
+        other => {
+            eprintln!("unknown experiment `{other}`");
+            println!("{HELP}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn serve(cfg: XufsConfig) {
+    let metrics = Metrics::new();
+    let engine = Arc::new(
+        DigestEngine::from_artifacts(&cfg.artifacts_dir, metrics.clone())
+            .unwrap_or_else(|_| DigestEngine::native(metrics.clone())),
+    );
+    let mut rng = Rng::new(cfg.seed ^ 0x5345_5256);
+    let pair = KeyPair::generate(&mut rng, VirtualTime::ZERO, 12.0 * 3600.0);
+    let mut home = FileStore::default();
+    home.mkdir_p("/home/demo", VirtualTime::ZERO).unwrap();
+    home.write("/home/demo/README", b"served by xufs\n", VirtualTime::ZERO).unwrap();
+    let server = Arc::new(Mutex::new(FileServer::new(
+        home,
+        DiskModel::new(cfg.disk.home_bps, cfg.disk.home_op_s),
+        engine,
+        cfg.stripe.min_block as usize,
+        cfg.lease.duration_s,
+        metrics,
+    )));
+    let auth = Arc::new(Mutex::new(Authenticator::new(pair.clone(), cfg.seed)));
+    let tcp = TcpServer::spawn(server, auth, Metrics::new()).expect("bind");
+    println!("xufs file server on {}", tcp.addr);
+    println!("key id : {}", pair.key_id);
+    println!(
+        "phrase : {}",
+        pair.phrase.iter().map(|b| format!("{b:02x}")).collect::<String>()
+    );
+    println!("(ctrl-c to stop)");
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+/// Microbenchmarks of the L3 hot paths in REAL wall-clock time (the sim
+/// clock is analytic; what costs real CPU is digesting, copying and queue
+/// persistence). Used by the EXPERIMENTS.md §Perf before/after log.
+fn perf(cfg: XufsConfig) {
+    use std::time::Instant;
+    use xufs::client::Vfs as _;
+    let mb = |bytes: u64, secs: f64| bytes as f64 / (1024.0 * 1024.0) / secs.max(1e-12);
+    let size: u64 = 256 << 20;
+    let mut rng = Rng::new(7);
+    let mut data = vec![0u8; size as usize];
+    rng.fill_bytes(&mut data);
+
+    // native digest throughput
+    let native = DigestEngine::native(Metrics::new());
+    let w = Instant::now();
+    let d = native.digests(&data, 65536);
+    let t_native = w.elapsed().as_secs_f64();
+    println!("digest/native  : {:7.0} MiB/s  ({} blocks in {:.3}s)", mb(size, t_native), d.len(), t_native);
+
+    // pjrt digest throughput (if artifacts are present)
+    if let Ok(pjrt) = DigestEngine::from_artifacts(&cfg.artifacts_dir, Metrics::new()) {
+        if pjrt.is_pjrt() {
+            let w = Instant::now();
+            let d2 = pjrt.digests_via_pjrt(&data, 65536).unwrap();
+            let t = w.elapsed().as_secs_f64();
+            assert_eq!(d, d2);
+            println!("digest/pjrt    : {:7.0} MiB/s  (bit-identical to native)", mb(size, t));
+        }
+    }
+
+    // delta plan (digest + dirty + stripe) throughput
+    let w = Instant::now();
+    let plan = native.plan(&data, &d, 65536, 12);
+    let t_plan = w.elapsed().as_secs_f64();
+    println!("plan/native    : {:7.0} MiB/s  ({} dirty)", mb(size, t_plan), plan.dirty_blocks());
+
+    // end-to-end client write path (open+write+close+flush), wall time
+    let mut world = SimWorld::new(cfg.clone());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+    });
+    let mut c = world.mount("/home/u").expect("mount");
+    let w = Instant::now();
+    c.write_file("/home/u/big.dat", &data, 1 << 20).unwrap();
+    let t_write = w.elapsed().as_secs_f64();
+    println!("write path     : {:7.0} MiB/s wall  (sim {:.1}s)", mb(size, t_write), c.now().as_secs());
+
+    // end-to-end cold fetch path (server digest + transfer + verify + install)
+    let mut world2 = SimWorld::new(cfg);
+    world2.home(|s| {
+        s.home_mut().mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+        s.home_mut().write("/home/u/big.dat", &data, VirtualTime::ZERO).unwrap();
+    });
+    let mut c2 = world2.mount("/home/u").expect("mount");
+    let w = Instant::now();
+    c2.scan_file("/home/u/big.dat", 1 << 20).unwrap();
+    let t_fetch = w.elapsed().as_secs_f64();
+    println!("fetch path     : {:7.0} MiB/s wall", mb(size, t_fetch));
+
+    // warm read path
+    let w = Instant::now();
+    c2.scan_file("/home/u/big.dat", 1 << 20).unwrap();
+    let t_warm = w.elapsed().as_secs_f64();
+    println!("warm read path : {:7.0} MiB/s wall", mb(size, t_warm));
+}
+
+fn print_config() {
+    println!(
+        "# xufs.toml — all keys optional; defaults reproduce the paper's testbed
+seed = 0
+artifacts_dir = \"artifacts\"
+
+[wan]
+rtt_ms = 32
+per_stream_mibps = 2.0
+agg_gbps = 30
+setup_rtts = 3
+slow_start_rtts = 4
+
+[stripe]
+max_stripes = 12
+min_block_kib = 64
+stripe_threshold_kib = 64
+prefetch_threads = 12
+prefetch_max_size_kib = 64
+prefetch_enabled = true
+delta_writeback = true
+
+[cache]
+capacity_gib = 1024
+localized_dirs = \"/home/u/scratch:/home/u/runs\"
+
+[lease]
+duration_s = 30
+renew_fraction = 0.5
+
+[disk]
+cache_mibps = 400
+cache_op_ms = 2
+home_mibps = 200
+home_op_ms = 2
+digest_cpu_mibps = 300"
+    );
+}

@@ -1,0 +1,337 @@
+//! Persisted meta-operation queue (paper §3.1).
+//!
+//! "System calls that modify a file (or directory) in a XUFS partition
+//! return when the local cache copy is updated, and the operation is
+//! appended to a persisted meta-operation queue. No file (or directory)
+//! operation blocks on a remote network call."
+//!
+//! Ops are persisted into the cache space's file store under
+//! `/.xufs/queue/<seq>` (binary-encoded), so they survive a client crash;
+//! the `xufs sync` command-line tool replays them after recovery
+//! ([`MetaQueue::recover`] + the client's flush path). Sequence numbers
+//! are monotonic per client and make server-side application idempotent.
+
+use crate::homefs::{FileStore, FsResult};
+use crate::proto::{Decoder, Encoder, MetaOp};
+use crate::simnet::VirtualTime;
+
+/// Directory inside the cache space holding the persisted queue.
+pub const QUEUE_DIR: &str = "/.xufs/queue";
+
+/// WriteFull payloads at or above this size are persisted BY REFERENCE:
+/// the aggregated content already lives in the cache store at the op's
+/// path (the close wrote it there before enqueueing), so the queue entry
+/// only records path+digests and recovery rebuilds the full write from
+/// the surviving cache copy. Avoids doubling cache-space usage and a full
+/// payload memcpy per close (EXPERIMENTS.md §Perf L3 #3). Recovery after
+/// further local closes still yields the correct final home state —
+/// last-close-wins means the *latest* cache content is what must land.
+pub const SPILL_THRESHOLD: usize = 256 * 1024;
+
+fn persist_bytes(op: &MetaOp) -> Vec<u8> {
+    let mut e = Encoder::new();
+    match op {
+        MetaOp::WriteFull { path, data, digests } if data.len() >= SPILL_THRESHOLD => {
+            e.u8(1); // by-reference entry
+            e.str(path);
+            e.i32_slice(digests);
+        }
+        _ => {
+            e.u8(0); // inline entry
+            op.encode_into(&mut e);
+        }
+    }
+    e.into_bytes()
+}
+
+fn recover_entry(store: &FileStore, bytes: &[u8]) -> Option<MetaOp> {
+    let mut d = Decoder::new(bytes);
+    match d.u8().ok()? {
+        0 => {
+            let op = MetaOp::decode_from(&mut d).ok()?;
+            d.expect_end().ok()?;
+            Some(op)
+        }
+        1 => {
+            let path = d.str().ok()?;
+            let digests = d.i32_vec().ok()?;
+            d.expect_end().ok()?;
+            let data = store.read(&path).ok()?.to_vec();
+            Some(MetaOp::WriteFull { path, data, digests })
+        }
+        _ => None,
+    }
+}
+
+/// The persisted queue. Holds an in-memory view; every mutation is written
+/// through to the backing store immediately.
+#[derive(Debug)]
+pub struct MetaQueue {
+    pending: Vec<(u64, MetaOp)>,
+    next_seq: u64,
+}
+
+fn entry_path(seq: u64) -> String {
+    format!("{QUEUE_DIR}/{seq:020}")
+}
+
+impl MetaQueue {
+    pub fn new() -> Self {
+        MetaQueue { pending: Vec::new(), next_seq: 1 }
+    }
+
+    /// Append an op: persists to `store` then records it in memory.
+    /// Returns the assigned sequence number.
+    pub fn append(&mut self, store: &mut FileStore, op: MetaOp, now: VirtualTime) -> FsResult<u64> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        store.mkdir_p(QUEUE_DIR, now)?;
+        store.write(&entry_path(seq), &persist_bytes(&op), now)?;
+        self.pending.push((seq, op));
+        Ok(seq)
+    }
+
+    /// Ops awaiting replay, in order.
+    pub fn pending(&self) -> &[(u64, MetaOp)] {
+        &self.pending
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Total WAN payload of the pending ops.
+    pub fn pending_bytes(&self) -> u64 {
+        self.pending.iter().map(|(_, op)| op.wire_bytes()).sum()
+    }
+
+    /// Remove the front op for shipping (disk entry stays until `ack`;
+    /// on failure `push_front` restores it). Avoids cloning large
+    /// payloads on the flush path.
+    pub fn take_front(&mut self) -> Option<(u64, MetaOp)> {
+        if self.pending.is_empty() {
+            None
+        } else {
+            Some(self.pending.remove(0))
+        }
+    }
+
+    /// Put an unshipped op back at the front (disconnection mid-flush).
+    pub fn push_front(&mut self, seq: u64, op: MetaOp) {
+        self.pending.insert(0, (seq, op));
+    }
+
+    /// Server acknowledged `seq`: drop it from memory and disk.
+    pub fn ack(&mut self, store: &mut FileStore, seq: u64, now: VirtualTime) -> FsResult<()> {
+        self.pending.retain(|(s, _)| *s != seq);
+        let _ = store.unlink(&entry_path(seq), now); // absent on re-ack: fine
+        Ok(())
+    }
+
+    /// Replace a pending op in place (e.g. delta flush demoted to a full
+    /// flush after the server reported a stale base). Keeps the same seq
+    /// ordering; persists the new encoding.
+    pub fn replace(
+        &mut self,
+        store: &mut FileStore,
+        seq: u64,
+        op: MetaOp,
+        now: VirtualTime,
+    ) -> FsResult<bool> {
+        for (s, o) in &mut self.pending {
+            if *s == seq {
+                store.write(&entry_path(seq), &persist_bytes(&op), now)?;
+                *o = op;
+                return Ok(true);
+            }
+        }
+        Ok(false)
+    }
+
+    /// Rebuild the queue from the persisted entries after a client crash.
+    /// Corrupt entries are skipped (counted), matching the recovery tool's
+    /// best-effort semantics.
+    pub fn recover(store: &FileStore) -> (Self, usize) {
+        let mut pending = Vec::new();
+        let mut corrupt = 0;
+        let mut max_seq = 0;
+        if let Ok(entries) = store.readdir(QUEUE_DIR) {
+            for (name, _) in entries {
+                let Ok(seq) = name.parse::<u64>() else {
+                    corrupt += 1;
+                    continue;
+                };
+                match store.read(&entry_path(seq)).ok().map(|b| b.to_vec()).and_then(|b| recover_entry(store, &b)) {
+                    Some(op) => {
+                        pending.push((seq, op));
+                        max_seq = max_seq.max(seq);
+                    }
+                    None => corrupt += 1,
+                }
+            }
+        }
+        pending.sort_by_key(|(s, _)| *s);
+        // next_seq continues after everything ever persisted, so replayed
+        // and new ops can't collide
+        (MetaQueue { pending, next_seq: max_seq + 1 }, corrupt)
+    }
+}
+
+impl Default for MetaQueue {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::homefs::FileStore;
+
+    fn t(s: f64) -> VirtualTime {
+        VirtualTime::from_secs(s)
+    }
+
+    fn op(path: &str) -> MetaOp {
+        MetaOp::WriteFull { path: path.into(), data: b"x".to_vec(), digests: vec![1] }
+    }
+
+    #[test]
+    fn append_assigns_monotonic_seqs_and_persists() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        let s1 = q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        let s2 = q.append(&mut store, MetaOp::Unlink { path: "/b".into() }, t(2.0)).unwrap();
+        assert!(s2 > s1);
+        assert_eq!(q.len(), 2);
+        assert!(store.exists(&entry_path(s1)));
+        assert!(store.exists(&entry_path(s2)));
+        assert!(q.pending_bytes() > 0);
+    }
+
+    #[test]
+    fn ack_removes_from_memory_and_disk() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        let s1 = q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        let s2 = q.append(&mut store, op("/b"), t(1.0)).unwrap();
+        q.ack(&mut store, s1, t(2.0)).unwrap();
+        assert_eq!(q.len(), 1);
+        assert!(!store.exists(&entry_path(s1)));
+        assert!(store.exists(&entry_path(s2)));
+    }
+
+    #[test]
+    fn recovery_restores_order_and_continues_seqs() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        let s1 = q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        q.append(&mut store, op("/b"), t(1.0)).unwrap();
+        let s3 = q.append(&mut store, MetaOp::Mkdir { path: "/d".into() }, t(1.0)).unwrap();
+        q.ack(&mut store, s1, t(2.0)).unwrap();
+
+        // crash: drop q, recover from store
+        let (mut r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(corrupt, 0);
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.pending()[0].1.path(), "/b");
+        assert_eq!(r.pending()[1].1, MetaOp::Mkdir { path: "/d".into() });
+        // new appends continue past the recovered max
+        let s4 = r.append(&mut store, op("/e"), t(3.0)).unwrap();
+        assert!(s4 > s3);
+    }
+
+    #[test]
+    fn recovery_skips_corrupt_entries() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        // corrupt one persisted entry + an unparseable name
+        store.write(&entry_path(2), b"garbage", t(1.5)).unwrap();
+        store.write(&format!("{QUEUE_DIR}/not-a-seq"), b"junk", t(1.5)).unwrap();
+        let (r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(r.len(), 1);
+        assert_eq!(corrupt, 2);
+    }
+
+    #[test]
+    fn replace_preserves_seq() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        let s = q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        let full = MetaOp::WriteFull { path: "/a".into(), data: vec![9; 100], digests: vec![] };
+        assert!(q.replace(&mut store, s, full.clone(), t(2.0)).unwrap());
+        assert_eq!(q.pending()[0], (s, full.clone()));
+        // persisted encoding updated too
+        let (r, _) = MetaQueue::recover(&store);
+        assert_eq!(r.pending()[0].1, full);
+        assert!(!q.replace(&mut store, 999, op("/x"), t(3.0)).unwrap());
+    }
+
+    #[test]
+    fn large_writefull_spills_by_reference() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        // the close path writes the content to the cache store first...
+        let content = vec![0xCDu8; SPILL_THRESHOLD * 2];
+        store.write("/big.bin", &content, t(0.5)).unwrap();
+        let used_before = store.used_bytes();
+        // ...then enqueues the full write
+        let op_big = MetaOp::WriteFull { path: "/big.bin".into(), data: content.clone(), digests: vec![7, 8] };
+        let seq = q.append(&mut store, op_big.clone(), t(1.0)).unwrap();
+        // the persisted entry is tiny (by-reference), not another 512 KiB
+        let entry = store.read(&entry_path(seq)).unwrap();
+        assert!(entry.len() < 256, "spilled entry is {} bytes", entry.len());
+        assert!(store.used_bytes() < used_before + 1024);
+        // crash + recovery rebuilds the full op from the cache copy
+        let (r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(corrupt, 0);
+        assert_eq!(r.pending()[0].1, op_big);
+    }
+
+    #[test]
+    fn spilled_entry_recovers_latest_cache_content() {
+        // a second close before the flush updates the cache copy; recovery
+        // must ship the LATEST content (last-close-wins)
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        let v1 = vec![1u8; SPILL_THRESHOLD];
+        store.write("/f", &v1, t(0.5)).unwrap();
+        q.append(&mut store, MetaOp::WriteFull { path: "/f".into(), data: v1, digests: vec![] }, t(1.0))
+            .unwrap();
+        let v2 = vec![2u8; SPILL_THRESHOLD];
+        store.write("/f", &v2, t(2.0)).unwrap();
+        let (r, _) = MetaQueue::recover(&store);
+        match &r.pending()[0].1 {
+            MetaOp::WriteFull { data, .. } => assert_eq!(data, &v2),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn take_front_push_front_roundtrip() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        let s1 = q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        q.append(&mut store, op("/b"), t(1.0)).unwrap();
+        let (seq, o) = q.take_front().unwrap();
+        assert_eq!(seq, s1);
+        assert_eq!(q.len(), 1);
+        q.push_front(seq, o);
+        assert_eq!(q.pending()[0].0, s1);
+        assert_eq!(q.len(), 2);
+        assert!(MetaQueue::new().take_front().is_none());
+    }
+
+    #[test]
+    fn empty_recovery() {
+        let store = FileStore::default();
+        let (q, corrupt) = MetaQueue::recover(&store);
+        assert!(q.is_empty());
+        assert_eq!(corrupt, 0);
+    }
+}

@@ -1,0 +1,184 @@
+//! Metrics registry: counters, gauges and latency histograms for every
+//! subsystem. The registry is cheap to clone (Arc) so server, client and
+//! transfer engine can share one sink; benches snapshot it for reports.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::util::stats::Histogram;
+use crate::util::Json;
+
+#[derive(Debug, Default)]
+struct Inner {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+/// Shared metrics sink.
+#[derive(Debug, Clone, Default)]
+pub struct Metrics {
+    inner: Arc<Mutex<Inner>>,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Increment a counter by `n`.
+    pub fn add(&self, name: &str, n: u64) {
+        let mut g = self.inner.lock().unwrap();
+        *g.counters.entry(name.to_string()).or_insert(0) += n;
+    }
+
+    /// Increment a counter by 1.
+    pub fn incr(&self, name: &str) {
+        self.add(name, 1);
+    }
+
+    pub fn counter(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn set_gauge(&self, name: &str, v: f64) {
+        self.inner.lock().unwrap().gauges.insert(name.to_string(), v);
+    }
+
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().gauges.get(name).copied()
+    }
+
+    /// Record a latency sample (seconds) into a named histogram
+    /// (exponential buckets 1 µs … ~1100 s).
+    pub fn observe(&self, name: &str, secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.histograms
+            .entry(name.to_string())
+            .or_insert_with(|| Histogram::exponential(1e-6, 2.0, 31))
+            .record(secs);
+    }
+
+    pub fn histogram_mean(&self, name: &str) -> Option<f64> {
+        self.inner.lock().unwrap().histograms.get(name).map(|h| h.mean())
+    }
+
+    pub fn histogram_count(&self, name: &str) -> u64 {
+        self.inner.lock().unwrap().histograms.get(name).map(|h| h.count()).unwrap_or(0)
+    }
+
+    /// Reset everything (between bench runs).
+    pub fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.counters.clear();
+        g.gauges.clear();
+        g.histograms.clear();
+    }
+
+    /// Snapshot as JSON (for bench reports / the CLI `--metrics` flag).
+    pub fn to_json(&self) -> Json {
+        let g = self.inner.lock().unwrap();
+        let mut counters = Json::obj();
+        for (k, v) in &g.counters {
+            counters = counters.set(k, *v);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &g.gauges {
+            gauges = gauges.set(k, *v);
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &g.histograms {
+            hists = hists.set(
+                k,
+                Json::obj()
+                    .set("count", h.count())
+                    .set("mean_s", h.mean())
+                    .set("p50_s", h.quantile(0.5))
+                    .set("p99_s", h.quantile(0.99)),
+            );
+        }
+        Json::obj().set("counters", counters).set("gauges", gauges).set("histograms", hists)
+    }
+}
+
+/// Well-known metric names (typo safety — use these constants, not ad-hoc
+/// strings, from subsystem code).
+pub mod names {
+    pub const WAN_BYTES_TX: &str = "wan.bytes_tx";
+    pub const WAN_BYTES_RX: &str = "wan.bytes_rx";
+    pub const WAN_RPCS: &str = "wan.rpcs";
+    pub const WAN_CONNECTS: &str = "wan.connects";
+    pub const CACHE_HITS: &str = "cache.hits";
+    pub const CACHE_MISSES: &str = "cache.misses";
+    pub const CACHE_INVALIDATIONS: &str = "cache.invalidations";
+    pub const CACHE_EVICTIONS: &str = "cache.evictions";
+    pub const FETCH_FILES: &str = "transfer.fetch_files";
+    pub const FETCH_BYTES: &str = "transfer.fetch_bytes";
+    pub const PREFETCH_FILES: &str = "transfer.prefetch_files";
+    pub const WRITEBACK_FILES: &str = "transfer.writeback_files";
+    pub const WRITEBACK_BYTES: &str = "transfer.writeback_bytes";
+    pub const WRITEBACK_BYTES_SAVED: &str = "transfer.writeback_bytes_saved";
+    pub const DIGEST_BLOCKS: &str = "runtime.digest_blocks";
+    pub const DIGEST_CALLS: &str = "runtime.digest_calls";
+    pub const METAQ_APPENDS: &str = "metaq.appends";
+    pub const METAQ_REPLAYS: &str = "metaq.replays";
+    pub const LEASE_RENEWALS: &str = "lease.renewals";
+    pub const LEASE_EXPIRED: &str = "lease.expired";
+    pub const CALLBACKS_SENT: &str = "server.callbacks_sent";
+    pub const AUTH_FAILURES: &str = "server.auth_failures";
+    pub const OP_LATENCY: &str = "vfs.op_latency";
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.add("a", 4);
+        assert_eq!(m.counter("a"), 5);
+        assert_eq!(m.counter("missing"), 0);
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let m = Metrics::new();
+        let m2 = m.clone();
+        m2.incr("x");
+        assert_eq!(m.counter("x"), 1);
+    }
+
+    #[test]
+    fn gauges_and_histograms() {
+        let m = Metrics::new();
+        m.set_gauge("g", 2.5);
+        assert_eq!(m.gauge("g"), Some(2.5));
+        m.observe("lat", 0.010);
+        m.observe("lat", 0.020);
+        assert_eq!(m.histogram_count("lat"), 2);
+        let mean = m.histogram_mean("lat").unwrap();
+        assert!((mean - 0.015).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reset_clears() {
+        let m = Metrics::new();
+        m.incr("a");
+        m.observe("h", 1.0);
+        m.reset();
+        assert_eq!(m.counter("a"), 0);
+        assert_eq!(m.histogram_count("h"), 0);
+    }
+
+    #[test]
+    fn json_snapshot() {
+        let m = Metrics::new();
+        m.incr(names::CACHE_HITS);
+        m.observe(names::OP_LATENCY, 0.001);
+        let j = m.to_json();
+        assert_eq!(j.get("counters").unwrap().get(names::CACHE_HITS).unwrap().as_i64(), Some(1));
+        assert!(j.get("histograms").unwrap().get(names::OP_LATENCY).is_some());
+    }
+}

@@ -1,0 +1,273 @@
+//! Binary codec primitives: tagged, varint-lengthed, little-endian.
+
+use std::fmt;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ProtoError(pub String);
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "protocol decode error: {}", self.0)
+    }
+}
+impl std::error::Error for ProtoError {}
+
+fn err(msg: &str) -> ProtoError {
+    ProtoError(msg.to_string())
+}
+
+/// Append-only encoder.
+#[derive(Debug, Default)]
+pub struct Encoder {
+    buf: Vec<u8>,
+}
+
+impl Encoder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn u8(&mut self, v: u8) -> &mut Self {
+        self.buf.push(v);
+        self
+    }
+
+    pub fn bool(&mut self, v: bool) -> &mut Self {
+        self.u8(v as u8)
+    }
+
+    /// LEB128 varint (used for all lengths and most integers).
+    pub fn varint(&mut self, mut v: u64) -> &mut Self {
+        loop {
+            let byte = (v & 0x7F) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return self;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    pub fn u32(&mut self, v: u32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn i32(&mut self, v: i32) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn u64(&mut self, v: u64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn f64(&mut self, v: f64) -> &mut Self {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+        self
+    }
+
+    pub fn bytes(&mut self, v: &[u8]) -> &mut Self {
+        self.varint(v.len() as u64);
+        self.buf.extend_from_slice(v);
+        self
+    }
+
+    pub fn str(&mut self, v: &str) -> &mut Self {
+        self.bytes(v.as_bytes())
+    }
+
+    pub fn i32_slice(&mut self, v: &[i32]) -> &mut Self {
+        self.varint(v.len() as u64);
+        for &x in v {
+            self.i32(x);
+        }
+        self
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+}
+
+/// Cursor-based decoder.
+#[derive(Debug)]
+pub struct Decoder<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Decoder<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Decoder { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn finished(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], ProtoError> {
+        if self.remaining() < n {
+            return Err(err("short buffer"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ProtoError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> Result<bool, ProtoError> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            v => Err(err(&format!("bad bool {v}"))),
+        }
+    }
+
+    pub fn varint(&mut self) -> Result<u64, ProtoError> {
+        let mut v = 0u64;
+        let mut shift = 0;
+        loop {
+            let byte = self.u8()?;
+            if shift >= 64 {
+                return Err(err("varint overflow"));
+            }
+            v |= ((byte & 0x7F) as u64) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn u32(&mut self) -> Result<u32, ProtoError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn i32(&mut self) -> Result<i32, ProtoError> {
+        Ok(i32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, ProtoError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, ProtoError> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn bytes(&mut self) -> Result<&'a [u8], ProtoError> {
+        let n = self.varint()? as usize;
+        if n > super::MAX_FRAME {
+            return Err(err("length exceeds MAX_FRAME"));
+        }
+        self.take(n)
+    }
+
+    pub fn str(&mut self) -> Result<String, ProtoError> {
+        let b = self.bytes()?;
+        String::from_utf8(b.to_vec()).map_err(|_| err("invalid utf-8"))
+    }
+
+    pub fn i32_vec(&mut self) -> Result<Vec<i32>, ProtoError> {
+        let n = self.varint()? as usize;
+        if n * 4 > self.remaining() {
+            return Err(err("i32 vec longer than buffer"));
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.i32()?);
+        }
+        Ok(v)
+    }
+
+    pub fn expect_end(&self) -> Result<(), ProtoError> {
+        if self.finished() {
+            Ok(())
+        } else {
+            Err(err("trailing bytes"))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_roundtrip() {
+        let mut e = Encoder::new();
+        e.u8(7).bool(true).u32(0xDEADBEEF).i32(-5).u64(u64::MAX).f64(1.5);
+        let b = e.into_bytes();
+        let mut d = Decoder::new(&b);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.u32().unwrap(), 0xDEADBEEF);
+        assert_eq!(d.i32().unwrap(), -5);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert_eq!(d.f64().unwrap(), 1.5);
+        d.expect_end().unwrap();
+    }
+
+    #[test]
+    fn varint_edges() {
+        for v in [0u64, 1, 127, 128, 300, u32::MAX as u64, u64::MAX] {
+            let mut e = Encoder::new();
+            e.varint(v);
+            let b = e.into_bytes();
+            assert_eq!(Decoder::new(&b).varint().unwrap(), v);
+        }
+    }
+
+    #[test]
+    fn bytes_and_strings() {
+        let mut e = Encoder::new();
+        e.bytes(b"").str("héllo").i32_slice(&[1, -2, 3]);
+        let b = e.into_bytes();
+        let mut d = Decoder::new(&b);
+        assert_eq!(d.bytes().unwrap(), b"");
+        assert_eq!(d.str().unwrap(), "héllo");
+        assert_eq!(d.i32_vec().unwrap(), vec![1, -2, 3]);
+    }
+
+    #[test]
+    fn short_buffer_errors() {
+        let mut d = Decoder::new(&[0x96]); // unterminated varint
+        assert!(d.varint().is_err());
+        let mut d = Decoder::new(&[5, b'a']); // length 5, 1 byte present
+        assert!(d.bytes().is_err());
+        let mut d = Decoder::new(&[2]); // bad bool
+        assert!(d.bool().is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_detected() {
+        let mut e = Encoder::new();
+        e.u8(1).u8(2);
+        let b = e.into_bytes();
+        let mut d = Decoder::new(&b);
+        d.u8().unwrap();
+        assert!(d.expect_end().is_err());
+    }
+
+    #[test]
+    fn hostile_length_rejected() {
+        let mut e = Encoder::new();
+        e.varint(u64::MAX); // absurd length claim
+        let b = e.into_bytes();
+        assert!(Decoder::new(&b).bytes().is_err());
+    }
+}

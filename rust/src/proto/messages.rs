@@ -1,0 +1,632 @@
+//! Protocol message types and their codec implementations.
+
+use crate::homefs::{Attr, NodeKind};
+use crate::proto::codec::{Decoder, Encoder, ProtoError};
+use crate::simnet::VirtualTime;
+
+/// Attributes on the wire (mirrors `homefs::Attr`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WireAttr {
+    pub kind: NodeKind,
+    pub size: u64,
+    pub mtime_ns: u64,
+    pub mode: u32,
+    pub version: u64,
+}
+
+impl WireAttr {
+    pub fn from_attr(a: &Attr) -> Self {
+        WireAttr { kind: a.kind, size: a.size, mtime_ns: a.mtime.0, mode: a.mode, version: a.version }
+    }
+
+    pub fn mtime(&self) -> VirtualTime {
+        VirtualTime(self.mtime_ns)
+    }
+
+    fn encode(&self, e: &mut Encoder) {
+        e.u8(match self.kind {
+            NodeKind::File => 0,
+            NodeKind::Dir => 1,
+        });
+        e.u64(self.size).u64(self.mtime_ns).u32(self.mode).u64(self.version);
+    }
+
+    fn decode(d: &mut Decoder) -> Result<Self, ProtoError> {
+        let kind = match d.u8()? {
+            0 => NodeKind::File,
+            1 => NodeKind::Dir,
+            v => return Err(ProtoError(format!("bad node kind {v}"))),
+        };
+        Ok(WireAttr { kind, size: d.u64()?, mtime_ns: d.u64()?, mode: d.u32()?, version: d.u64()? })
+    }
+}
+
+/// One directory entry as the server reports it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DirEntry {
+    pub name: String,
+    pub attr: WireAttr,
+}
+
+/// A whole-file image as fetched from the server: content plus the version
+/// it corresponds to and per-block digests for integrity/delta writeback.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FileImage {
+    pub path: String,
+    pub version: u64,
+    pub data: Vec<u8>,
+    pub digests: Vec<i32>,
+}
+
+/// Lock kinds (fcntl-style).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LockKind {
+    Shared,
+    Exclusive,
+}
+
+/// Mutating operations recorded in the client's persisted meta-operation
+/// queue and replayed to the server (paper §3.1). `WriteFull` carries the
+/// aggregated shadow-file content; `WriteDelta` only digest-dirty blocks.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetaOp {
+    Mkdir { path: String },
+    Rmdir { path: String },
+    Create { path: String },
+    Unlink { path: String },
+    Rename { from: String, to: String },
+    Truncate { path: String, size: u64 },
+    SetMode { path: String, mode: u32 },
+    WriteFull { path: String, data: Vec<u8>, digests: Vec<i32> },
+    WriteDelta {
+        path: String,
+        total_size: u64,
+        base_version: u64,
+        blocks: Vec<(u32, Vec<u8>)>,
+        digests: Vec<i32>,
+    },
+}
+
+impl MetaOp {
+    /// The home-space path this op targets (rename reports its source).
+    pub fn path(&self) -> &str {
+        match self {
+            MetaOp::Mkdir { path }
+            | MetaOp::Rmdir { path }
+            | MetaOp::Create { path }
+            | MetaOp::Unlink { path }
+            | MetaOp::Truncate { path, .. }
+            | MetaOp::SetMode { path, .. }
+            | MetaOp::WriteFull { path, .. }
+            | MetaOp::WriteDelta { path, .. } => path,
+            MetaOp::Rename { from, .. } => from,
+        }
+    }
+
+    /// Payload bytes that must cross the WAN for this op (message body
+    /// plus a fixed header allowance).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            MetaOp::WriteFull { data, .. } => data.len() as u64 + 64,
+            MetaOp::WriteDelta { blocks, .. } => {
+                blocks.iter().map(|(_, b)| b.len() as u64 + 8).sum::<u64>() + 64
+            }
+            _ => 64,
+        }
+    }
+
+    pub fn encode_into(&self, e: &mut Encoder) {
+        match self {
+            MetaOp::Mkdir { path } => {
+                e.u8(0).str(path);
+            }
+            MetaOp::Rmdir { path } => {
+                e.u8(1).str(path);
+            }
+            MetaOp::Create { path } => {
+                e.u8(2).str(path);
+            }
+            MetaOp::Unlink { path } => {
+                e.u8(3).str(path);
+            }
+            MetaOp::Rename { from, to } => {
+                e.u8(4).str(from).str(to);
+            }
+            MetaOp::Truncate { path, size } => {
+                e.u8(5).str(path).u64(*size);
+            }
+            MetaOp::SetMode { path, mode } => {
+                e.u8(6).str(path).u32(*mode);
+            }
+            MetaOp::WriteFull { path, data, digests } => {
+                e.u8(7).str(path).bytes(data).i32_slice(digests);
+            }
+            MetaOp::WriteDelta { path, total_size, base_version, blocks, digests } => {
+                e.u8(8).str(path).u64(*total_size).u64(*base_version);
+                e.varint(blocks.len() as u64);
+                for (idx, data) in blocks {
+                    e.u32(*idx).bytes(data);
+                }
+                e.i32_slice(digests);
+            }
+        }
+    }
+
+    pub fn decode_from(d: &mut Decoder) -> Result<Self, ProtoError> {
+        Ok(match d.u8()? {
+            0 => MetaOp::Mkdir { path: d.str()? },
+            1 => MetaOp::Rmdir { path: d.str()? },
+            2 => MetaOp::Create { path: d.str()? },
+            3 => MetaOp::Unlink { path: d.str()? },
+            4 => MetaOp::Rename { from: d.str()?, to: d.str()? },
+            5 => MetaOp::Truncate { path: d.str()?, size: d.u64()? },
+            6 => MetaOp::SetMode { path: d.str()?, mode: d.u32()? },
+            7 => MetaOp::WriteFull {
+                path: d.str()?,
+                data: d.bytes()?.to_vec(),
+                digests: d.i32_vec()?,
+            },
+            8 => {
+                let path = d.str()?;
+                let total_size = d.u64()?;
+                let base_version = d.u64()?;
+                let n = d.varint()? as usize;
+                let mut blocks = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    let idx = d.u32()?;
+                    blocks.push((idx, d.bytes()?.to_vec()));
+                }
+                MetaOp::WriteDelta { path, total_size, base_version, blocks, digests: d.i32_vec()? }
+            }
+            t => return Err(ProtoError(format!("bad MetaOp tag {t}"))),
+        })
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        self.encode_into(&mut e);
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        let mut d = Decoder::new(buf);
+        let op = Self::decode_from(&mut d)?;
+        d.expect_end()?;
+        Ok(op)
+    }
+}
+
+fn lock_kind_tag(k: LockKind) -> u8 {
+    match k {
+        LockKind::Shared => 0,
+        LockKind::Exclusive => 1,
+    }
+}
+
+fn lock_kind_from(tag: u8) -> Result<LockKind, ProtoError> {
+    match tag {
+        0 => Ok(LockKind::Shared),
+        1 => Ok(LockKind::Exclusive),
+        v => Err(ProtoError(format!("bad lock kind {v}"))),
+    }
+}
+
+/// Client->server requests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Request {
+    /// Challenge-response step 1: ask for a challenge.
+    AuthHello { key_id: String },
+    /// Challenge-response step 2: HMAC(phrase, challenge).
+    AuthProof { key_id: String, proof: Vec<u8> },
+    Stat { path: String },
+    ReadDir { path: String },
+    /// Whole-file fetch; the transfer engine stripes >64 KiB payloads.
+    Fetch { path: String },
+    /// Fetch metadata + per-block digests (first step of a real striped
+    /// fetch over TCP: stripes then pull ranges with `FetchRange`).
+    FetchMeta { path: String },
+    /// Fetch a byte range; fails with a stale error if the file's version
+    /// no longer matches `expect_version` (torn-fetch protection).
+    FetchRange { path: String, offset: u64, len: u64, expect_version: u64 },
+    /// Apply one queued meta-operation (client-assigned sequence number
+    /// makes replay idempotent).
+    Apply { seq: u64, op: MetaOp },
+    /// Register for change callbacks under a subtree.
+    RegisterCallback { root: String, client_id: u64 },
+    LockAcquire { path: String, kind: LockKind, owner: u64 },
+    LockRenew { token: u64, owner: u64 },
+    LockRelease { token: u64, owner: u64 },
+    Ping,
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            Request::AuthHello { key_id } => {
+                e.u8(0).str(key_id);
+            }
+            Request::AuthProof { key_id, proof } => {
+                e.u8(1).str(key_id).bytes(proof);
+            }
+            Request::Stat { path } => {
+                e.u8(2).str(path);
+            }
+            Request::ReadDir { path } => {
+                e.u8(3).str(path);
+            }
+            Request::Fetch { path } => {
+                e.u8(4).str(path);
+            }
+            Request::FetchMeta { path } => {
+                e.u8(11).str(path);
+            }
+            Request::FetchRange { path, offset, len, expect_version } => {
+                e.u8(12).str(path).u64(*offset).u64(*len).u64(*expect_version);
+            }
+            Request::Apply { seq, op } => {
+                e.u8(5).u64(*seq);
+                op.encode_into(&mut e);
+            }
+            Request::RegisterCallback { root, client_id } => {
+                e.u8(6).str(root).u64(*client_id);
+            }
+            Request::LockAcquire { path, kind, owner } => {
+                e.u8(7).str(path).u8(lock_kind_tag(*kind)).u64(*owner);
+            }
+            Request::LockRenew { token, owner } => {
+                e.u8(8).u64(*token).u64(*owner);
+            }
+            Request::LockRelease { token, owner } => {
+                e.u8(9).u64(*token).u64(*owner);
+            }
+            Request::Ping => {
+                e.u8(10);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        let mut d = Decoder::new(buf);
+        let req = match d.u8()? {
+            0 => Request::AuthHello { key_id: d.str()? },
+            1 => Request::AuthProof { key_id: d.str()?, proof: d.bytes()?.to_vec() },
+            2 => Request::Stat { path: d.str()? },
+            3 => Request::ReadDir { path: d.str()? },
+            4 => Request::Fetch { path: d.str()? },
+            5 => Request::Apply { seq: d.u64()?, op: MetaOp::decode_from(&mut d)? },
+            6 => Request::RegisterCallback { root: d.str()?, client_id: d.u64()? },
+            7 => Request::LockAcquire {
+                path: d.str()?,
+                kind: lock_kind_from(d.u8()?)?,
+                owner: d.u64()?,
+            },
+            8 => Request::LockRenew { token: d.u64()?, owner: d.u64()? },
+            9 => Request::LockRelease { token: d.u64()?, owner: d.u64()? },
+            10 => Request::Ping,
+            11 => Request::FetchMeta { path: d.str()? },
+            12 => Request::FetchRange {
+                path: d.str()?,
+                offset: d.u64()?,
+                len: d.u64()?,
+                expect_version: d.u64()?,
+            },
+            t => return Err(ProtoError(format!("bad Request tag {t}"))),
+        };
+        d.expect_end()?;
+        Ok(req)
+    }
+
+    /// Approximate wire size for the WAN model.
+    pub fn wire_bytes(&self) -> u64 {
+        self.encode().len() as u64 + 16
+    }
+}
+
+/// Server->client responses.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Response {
+    Challenge { nonce: Vec<u8> },
+    AuthOk { session: u64 },
+    AuthFail,
+    Attr { attr: WireAttr },
+    Dir { entries: Vec<DirEntry> },
+    File { image: FileImage },
+    Applied { seq: u64, new_version: u64 },
+    CallbackRegistered,
+    LockGranted { token: u64, lease_ns: u64 },
+    LockDenied { holder: u64 },
+    Released,
+    Pong,
+    Err { code: u32, msg: String },
+    /// Metadata + digests for a striped range fetch.
+    FileMeta { version: u64, size: u64, digests: Vec<i32> },
+    /// One range of file content at `version`.
+    Range { version: u64, data: Vec<u8> },
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            Response::Challenge { nonce } => {
+                e.u8(0).bytes(nonce);
+            }
+            Response::AuthOk { session } => {
+                e.u8(1).u64(*session);
+            }
+            Response::AuthFail => {
+                e.u8(2);
+            }
+            Response::Attr { attr } => {
+                e.u8(3);
+                attr.encode(&mut e);
+            }
+            Response::Dir { entries } => {
+                e.u8(4).varint(entries.len() as u64);
+                for ent in entries {
+                    e.str(&ent.name);
+                    ent.attr.encode(&mut e);
+                }
+            }
+            Response::File { image } => {
+                e.u8(5).str(&image.path).u64(image.version).bytes(&image.data);
+                e.i32_slice(&image.digests);
+            }
+            Response::Applied { seq, new_version } => {
+                e.u8(6).u64(*seq).u64(*new_version);
+            }
+            Response::CallbackRegistered => {
+                e.u8(7);
+            }
+            Response::LockGranted { token, lease_ns } => {
+                e.u8(8).u64(*token).u64(*lease_ns);
+            }
+            Response::LockDenied { holder } => {
+                e.u8(9).u64(*holder);
+            }
+            Response::Released => {
+                e.u8(10);
+            }
+            Response::Pong => {
+                e.u8(11);
+            }
+            Response::Err { code, msg } => {
+                e.u8(12).u32(*code).str(msg);
+            }
+            Response::FileMeta { version, size, digests } => {
+                e.u8(13).u64(*version).u64(*size).i32_slice(digests);
+            }
+            Response::Range { version, data } => {
+                e.u8(14).u64(*version).bytes(data);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        let mut d = Decoder::new(buf);
+        let resp = match d.u8()? {
+            0 => Response::Challenge { nonce: d.bytes()?.to_vec() },
+            1 => Response::AuthOk { session: d.u64()? },
+            2 => Response::AuthFail,
+            3 => Response::Attr { attr: WireAttr::decode(&mut d)? },
+            4 => {
+                let n = d.varint()? as usize;
+                let mut entries = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    let name = d.str()?;
+                    entries.push(DirEntry { name, attr: WireAttr::decode(&mut d)? });
+                }
+                Response::Dir { entries }
+            }
+            5 => Response::File {
+                image: FileImage {
+                    path: d.str()?,
+                    version: d.u64()?,
+                    data: d.bytes()?.to_vec(),
+                    digests: d.i32_vec()?,
+                },
+            },
+            6 => Response::Applied { seq: d.u64()?, new_version: d.u64()? },
+            7 => Response::CallbackRegistered,
+            8 => Response::LockGranted { token: d.u64()?, lease_ns: d.u64()? },
+            9 => Response::LockDenied { holder: d.u64()? },
+            10 => Response::Released,
+            11 => Response::Pong,
+            12 => Response::Err { code: d.u32()?, msg: d.str()? },
+            13 => Response::FileMeta { version: d.u64()?, size: d.u64()?, digests: d.i32_vec()? },
+            14 => Response::Range { version: d.u64()?, data: d.bytes()?.to_vec() },
+            t => return Err(ProtoError(format!("bad Response tag {t}"))),
+        };
+        d.expect_end()?;
+        Ok(resp)
+    }
+
+    /// Approximate wire size for the WAN model.
+    pub fn wire_bytes(&self) -> u64 {
+        self.encode().len() as u64 + 16
+    }
+}
+
+/// Change notifications pushed over the callback channel (server->client).
+#[derive(Debug, Clone, PartialEq)]
+pub enum NotifyEvent {
+    /// Path content/attrs changed at the home space; cached copy invalid.
+    Invalidate { path: String, new_version: u64 },
+    /// Path removed at the home space.
+    Removed { path: String },
+    /// Server restarting: client must re-register its callback.
+    ServerRestart,
+}
+
+impl NotifyEvent {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        match self {
+            NotifyEvent::Invalidate { path, new_version } => {
+                e.u8(0).str(path).u64(*new_version);
+            }
+            NotifyEvent::Removed { path } => {
+                e.u8(1).str(path);
+            }
+            NotifyEvent::ServerRestart => {
+                e.u8(2);
+            }
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        let mut d = Decoder::new(buf);
+        let ev = match d.u8()? {
+            0 => NotifyEvent::Invalidate { path: d.str()?, new_version: d.u64()? },
+            1 => NotifyEvent::Removed { path: d.str()? },
+            2 => NotifyEvent::ServerRestart,
+            t => return Err(ProtoError(format!("bad NotifyEvent tag {t}"))),
+        };
+        d.expect_end()?;
+        Ok(ev)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn attr() -> WireAttr {
+        WireAttr { kind: NodeKind::File, size: 1234, mtime_ns: 5_000_000, mode: 0o600, version: 7 }
+    }
+
+    #[test]
+    fn request_roundtrip_all_variants() {
+        let reqs = vec![
+            Request::AuthHello { key_id: "k1".into() },
+            Request::AuthProof { key_id: "k1".into(), proof: vec![1, 2, 3] },
+            Request::Stat { path: "/a/b".into() },
+            Request::ReadDir { path: "/a".into() },
+            Request::Fetch { path: "/a/big.dat".into() },
+            Request::Apply { seq: 9, op: MetaOp::Mkdir { path: "/x".into() } },
+            Request::RegisterCallback { root: "/a".into(), client_id: 3 },
+            Request::LockAcquire { path: "/f".into(), kind: LockKind::Exclusive, owner: 5 },
+            Request::LockRenew { token: 11, owner: 5 },
+            Request::LockRelease { token: 11, owner: 5 },
+            Request::Ping,
+            Request::FetchMeta { path: "/a/big.dat".into() },
+            Request::FetchRange { path: "/a/big.dat".into(), offset: 65536, len: 65536, expect_version: 4 },
+        ];
+        for r in reqs {
+            let b = r.encode();
+            assert_eq!(Request::decode(&b).unwrap(), r, "{r:?}");
+            assert!(r.wire_bytes() >= b.len() as u64);
+        }
+    }
+
+    #[test]
+    fn response_roundtrip_all_variants() {
+        let resps = vec![
+            Response::Challenge { nonce: vec![9; 32] },
+            Response::AuthOk { session: 77 },
+            Response::AuthFail,
+            Response::Attr { attr: attr() },
+            Response::Dir {
+                entries: vec![
+                    DirEntry { name: "f1".into(), attr: attr() },
+                    DirEntry { name: "sub".into(), attr: WireAttr { kind: NodeKind::Dir, ..attr() } },
+                ],
+            },
+            Response::File {
+                image: FileImage {
+                    path: "/a".into(),
+                    version: 3,
+                    data: vec![0xAB; 100],
+                    digests: vec![1, -2],
+                },
+            },
+            Response::Applied { seq: 4, new_version: 8 },
+            Response::CallbackRegistered,
+            Response::LockGranted { token: 6, lease_ns: 30_000_000_000 },
+            Response::LockDenied { holder: 2 },
+            Response::Released,
+            Response::Pong,
+            Response::Err { code: 2, msg: "no such file".into() },
+            Response::FileMeta { version: 9, size: 1 << 20, digests: vec![3, -4, 5] },
+            Response::Range { version: 9, data: vec![0x7F; 333] },
+        ];
+        for r in resps {
+            let b = r.encode();
+            assert_eq!(Response::decode(&b).unwrap(), r, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn metaop_roundtrip_all_variants() {
+        let ops = vec![
+            MetaOp::Mkdir { path: "/d".into() },
+            MetaOp::Rmdir { path: "/d".into() },
+            MetaOp::Create { path: "/f".into() },
+            MetaOp::Unlink { path: "/f".into() },
+            MetaOp::Rename { from: "/a".into(), to: "/b".into() },
+            MetaOp::Truncate { path: "/f".into(), size: 42 },
+            MetaOp::SetMode { path: "/f".into(), mode: 0o644 },
+            MetaOp::WriteFull { path: "/f".into(), data: vec![7; 9], digests: vec![5] },
+            MetaOp::WriteDelta {
+                path: "/f".into(),
+                total_size: 200,
+                base_version: 3,
+                blocks: vec![(0, vec![1; 64]), (2, vec![2; 8])],
+                digests: vec![10, 20, 30],
+            },
+        ];
+        for op in ops {
+            let b = op.encode();
+            assert_eq!(MetaOp::decode(&b).unwrap(), op, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn notify_roundtrip() {
+        for ev in [
+            NotifyEvent::Invalidate { path: "/f".into(), new_version: 9 },
+            NotifyEvent::Removed { path: "/g".into() },
+            NotifyEvent::ServerRestart,
+        ] {
+            let b = ev.encode();
+            assert_eq!(NotifyEvent::decode(&b).unwrap(), ev);
+        }
+    }
+
+    #[test]
+    fn corrupted_messages_rejected() {
+        let mut b = Request::Stat { path: "/a".into() }.encode();
+        b[0] = 0xFF;
+        assert!(Request::decode(&b).is_err());
+        let b = Response::Pong.encode();
+        assert!(Response::decode(&b[..0]).is_err());
+        let mut b = Response::AuthOk { session: 1 }.encode();
+        b.push(0); // trailing byte
+        assert!(Response::decode(&b).is_err());
+    }
+
+    #[test]
+    fn metaop_wire_bytes_accounting() {
+        let full = MetaOp::WriteFull { path: "/f".into(), data: vec![0; 1000], digests: vec![] };
+        assert_eq!(full.wire_bytes(), 1064);
+        let delta = MetaOp::WriteDelta {
+            path: "/f".into(),
+            total_size: 0,
+            base_version: 0,
+            blocks: vec![(0, vec![0; 100])],
+            digests: vec![],
+        };
+        assert_eq!(delta.wire_bytes(), 172);
+        assert_eq!(MetaOp::Mkdir { path: "/d".into() }.wire_bytes(), 64);
+    }
+
+    #[test]
+    fn metaop_path_helper() {
+        assert_eq!(MetaOp::Rename { from: "/a".into(), to: "/b".into() }.path(), "/a");
+        assert_eq!(MetaOp::Unlink { path: "/x".into() }.path(), "/x");
+    }
+}

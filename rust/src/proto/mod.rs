@@ -1,0 +1,39 @@
+//! XUFS wire protocol.
+//!
+//! Every client<->server interaction — auth handshake, namespace reads,
+//! striped fetches, meta-operation replay, callback registration, lock
+//! leases — is a typed [`Request`]/[`Response`] pair with a hand-rolled
+//! binary codec (the offline crate set has no serde). The same messages
+//! flow over both transports: the simulated WAN (function call + modeled
+//! delay) and real TCP (length-prefixed frames, `coordinator::net`).
+
+mod codec;
+mod messages;
+
+pub use codec::{Decoder, Encoder, ProtoError};
+pub use messages::{
+    DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, Request, Response, WireAttr,
+};
+
+/// Frame a message body with a u32-LE length prefix (TCP transport).
+pub fn frame(body: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(body.len() + 4);
+    out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+    out.extend_from_slice(body);
+    out
+}
+
+/// Maximum accepted frame (64 MiB + slack): bounds a malicious peer.
+pub const MAX_FRAME: usize = 64 * 1024 * 1024 + 4096;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn frame_roundtrip() {
+        let f = frame(b"abc");
+        assert_eq!(&f[..4], &3u32.to_le_bytes());
+        assert_eq!(&f[4..], b"abc");
+    }
+}

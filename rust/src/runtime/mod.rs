@@ -1,0 +1,411 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts produced by
+//! `python/compile/aot.py` and executes the transfer-plan / digest graphs
+//! on the request path (python is never involved at runtime).
+//!
+//! The engine picks, per transfer, the largest artifact variant whose
+//! block geometry fits, loops full chunks through it, and finishes ragged
+//! tails with the bit-identical [`native`] implementation (cross-checked
+//! by tests and golden vectors). With no artifacts directory the engine is
+//! fully native — same results, no PJRT dependency at runtime.
+
+pub mod native;
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::metrics::{names, Metrics};
+use crate::util::Json;
+
+/// Result of planning a delta writeback for one file.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferPlan {
+    pub digests: Vec<i32>,
+    pub dirty: Vec<bool>,
+    /// Stripe id per block (-1 for clean blocks).
+    pub stripe: Vec<i32>,
+}
+
+impl TransferPlan {
+    pub fn dirty_blocks(&self) -> usize {
+        self.dirty.iter().filter(|&&d| d).count()
+    }
+}
+
+/// One loaded HLO artifact.
+struct Variant {
+    kind: String,
+    blocks: usize,
+    lanes: usize,
+    stripes: usize,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Digest/plan engine: PJRT-backed when artifacts are present, native
+/// otherwise. Thread-safe (`execute` is serialized per engine).
+pub struct DigestEngine {
+    pjrt: Option<Pjrt>,
+    weights: Mutex<HashMap<usize, Vec<i32>>>,
+    metrics: Metrics,
+}
+
+struct Pjrt {
+    _client: xla::PjRtClient,
+    variants: Vec<Variant>,
+    /// PJRT executions are serialized; the CPU client is not re-entrant
+    /// under concurrent `execute` from multiple threads.
+    gate: Mutex<()>,
+}
+
+// SAFETY: the `xla` crate wraps the PJRT C API in `Rc` + raw pointers, so
+// its types are neither Send nor Sync by default. All `Rc` handles in this
+// engine (the client and every loaded executable that references it) are
+// owned *together* inside this one struct — no `Rc` clone ever escapes it —
+// so moving the struct between threads moves every reference count holder
+// at once. Cross-thread *use* is serialized by `gate`, which every
+// `execute` path locks first; the PJRT CPU client itself is thread-safe
+// under serialized access.
+unsafe impl Send for Pjrt {}
+unsafe impl Sync for Pjrt {}
+
+impl std::fmt::Debug for DigestEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DigestEngine")
+            .field("backend", &if self.pjrt.is_some() { "pjrt" } else { "native" })
+            .finish()
+    }
+}
+
+impl DigestEngine {
+    /// Native-only engine.
+    pub fn native(metrics: Metrics) -> Self {
+        DigestEngine { pjrt: None, weights: Mutex::new(HashMap::new()), metrics }
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.json`; falls back to
+    /// native (with a warning) when the directory or manifest is missing.
+    pub fn from_artifacts(dir: &str, metrics: Metrics) -> Result<Self> {
+        let manifest_path = Path::new(dir).join("manifest.json");
+        if !manifest_path.exists() {
+            return Ok(Self::native(metrics));
+        }
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?}"))?;
+        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut variants = Vec::new();
+        for v in manifest
+            .get("variants")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest.json: missing variants"))?
+        {
+            let file = v.get("file").and_then(|f| f.as_str()).ok_or_else(|| anyhow!("variant missing file"))?;
+            let path = Path::new(dir).join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
+            variants.push(Variant {
+                kind: v.get("kind").and_then(|k| k.as_str()).unwrap_or("").to_string(),
+                blocks: v.get("blocks").and_then(|b| b.as_i64()).unwrap_or(0) as usize,
+                lanes: v.get("lanes").and_then(|l| l.as_i64()).unwrap_or(0) as usize,
+                stripes: v.get("stripes").and_then(|s| s.as_i64()).unwrap_or(0) as usize,
+                exe,
+            });
+        }
+        // biggest variants first so chunking prefers them
+        variants.sort_by(|a, b| b.blocks.cmp(&a.blocks));
+        Ok(DigestEngine {
+            pjrt: Some(Pjrt { _client: client, variants, gate: Mutex::new(()) }),
+            weights: Mutex::new(HashMap::new()),
+            metrics,
+        })
+    }
+
+    pub fn is_pjrt(&self) -> bool {
+        self.pjrt.is_some()
+    }
+
+    fn weights_for(&self, lanes: usize) -> Vec<i32> {
+        let mut g = self.weights.lock().unwrap();
+        g.entry(lanes).or_insert_with(|| native::make_weights(lanes)).clone()
+    }
+
+    /// Per-block digests of `data` with `block_bytes` blocks.
+    ///
+    /// Bulk digests run on the native engine: it is bit-identical to the
+    /// HLO artifacts (pinned by golden vectors + `tests/pjrt_runtime.rs`)
+    /// and ~6x faster than interpret-lowered HLO on the CPU PJRT client
+    /// (EXPERIMENTS.md §Perf L3 #2). The PJRT path stays on the request
+    /// path through [`Self::plan`]'s fused variants and is directly
+    /// callable via [`Self::digests_via_pjrt`].
+    pub fn digests(&self, data: &[u8], block_bytes: usize) -> Vec<i32> {
+        let lanes = block_bytes / 4;
+        let weights = self.weights_for(lanes);
+        let n_blocks = if data.is_empty() { 1 } else { data.len().div_ceil(block_bytes) };
+        self.metrics.incr(names::DIGEST_CALLS);
+        self.metrics.add(names::DIGEST_BLOCKS, n_blocks as u64);
+        native::digest_blocks(data, block_bytes, &weights)
+    }
+
+    /// Digest through the AOT PJRT artifacts (None without artifacts or
+    /// on an execution error). Bit-identical to [`Self::digests`].
+    pub fn digests_via_pjrt(&self, data: &[u8], block_bytes: usize) -> Option<Vec<i32>> {
+        let pjrt = self.pjrt.as_ref()?;
+        let lanes = block_bytes / 4;
+        let weights = self.weights_for(lanes);
+        let n_blocks = if data.is_empty() { 1 } else { data.len().div_ceil(block_bytes) };
+        self.metrics.incr(names::DIGEST_CALLS);
+        self.metrics.add(names::DIGEST_BLOCKS, n_blocks as u64);
+        self.digests_pjrt(pjrt, data, block_bytes, lanes, n_blocks, &weights)
+    }
+
+    /// Chunk full variant-sized groups of blocks through PJRT; do the
+    /// ragged tail natively. Returns None (caller falls back to native)
+    /// only on an execution error.
+    fn digests_pjrt(
+        &self,
+        pjrt: &Pjrt,
+        data: &[u8],
+        block_bytes: usize,
+        lanes: usize,
+        n_blocks: usize,
+        weights: &[i32],
+    ) -> Option<Vec<i32>> {
+        let mut out = Vec::with_capacity(n_blocks);
+        let mut block = 0usize;
+        while block < n_blocks {
+            let remaining = n_blocks - block;
+            let var = pjrt
+                .variants
+                .iter()
+                .find(|v| v.kind == "digest" && v.lanes == lanes && v.blocks <= remaining);
+            let Some(var) = var else {
+                // no fitting variant: finish the tail natively
+                let start = block * block_bytes;
+                let tail = &data[start.min(data.len())..];
+                out.extend(native::digest_blocks(tail, block_bytes, weights).into_iter().take(remaining));
+                // digest_blocks on empty tail yields 1 zero-block digest;
+                // pad out if the remaining count is larger (all-zero blocks)
+                while out.len() < n_blocks {
+                    let zero = native::digest_lanes(&vec![0i32; lanes], weights);
+                    out.push(zero);
+                }
+                return Some(out);
+            };
+            let chunk_bytes = var.blocks * block_bytes;
+            let start = block * block_bytes;
+            let end = (start + chunk_bytes).min(data.len());
+            let mut lanes_buf = vec![0i32; var.blocks * lanes];
+            let chunk = &data[start.min(data.len())..end];
+            for (i, four) in chunk.chunks(4).enumerate() {
+                let mut b = [0u8; 4];
+                b[..four.len()].copy_from_slice(four);
+                lanes_buf[i] = i32::from_le_bytes(b);
+            }
+            let result = self.exec_digest(pjrt, var, &lanes_buf, weights);
+            match result {
+                Ok(d) => out.extend(d),
+                Err(_) => return None,
+            }
+            block += var.blocks;
+        }
+        out.truncate(n_blocks);
+        Some(out)
+    }
+
+    fn exec_digest(
+        &self,
+        pjrt: &Pjrt,
+        var: &Variant,
+        lanes_buf: &[i32],
+        weights: &[i32],
+    ) -> Result<Vec<i32>> {
+        let _g = pjrt.gate.lock().unwrap();
+        let blocks_lit = xla::Literal::vec1(lanes_buf)
+            .reshape(&[var.blocks as i64, var.lanes as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let weights_lit = xla::Literal::vec1(&weights[..var.lanes]);
+        let bufs = var
+            .exe
+            .execute::<xla::Literal>(&[blocks_lit, weights_lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let tuple = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        let first = tuple.into_iter().next().ok_or_else(|| anyhow!("empty result tuple"))?;
+        first.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Full transfer plan: digests + dirty mask vs `old_digests` + a
+    /// balanced stripe assignment over `num_stripes`.
+    pub fn plan(
+        &self,
+        data: &[u8],
+        old_digests: &[i32],
+        block_bytes: usize,
+        num_stripes: usize,
+    ) -> TransferPlan {
+        // The HLO "plan" variants fuse digest+dirty+stripe for fixed-size
+        // chunks; chunking the *stripe* stage would change the balanced
+        // assignment semantics (the cumsum must span the whole file), so
+        // the engine always computes digests (PJRT-accelerated) and then
+        // derives dirty+stripes over the full block vector natively —
+        // identical maths, whole-file scope. The fused plan artifacts are
+        // still exercised directly by `exec_plan_variant` (tests + the
+        // single-chunk fast path below).
+        if let Some(pjrt) = &self.pjrt {
+            let lanes = block_bytes / 4;
+            let n_blocks = if data.is_empty() { 1 } else { data.len().div_ceil(block_bytes) };
+            if let Some(var) = pjrt.variants.iter().find(|v| {
+                v.kind == "plan" && v.lanes == lanes && v.blocks == n_blocks && v.stripes == num_stripes
+            }) {
+                let weights = self.weights_for(lanes);
+                if let Ok(plan) = self.exec_plan_variant(pjrt, var, data, old_digests, block_bytes, &weights)
+                {
+                    self.metrics.incr(names::DIGEST_CALLS);
+                    self.metrics.add(names::DIGEST_BLOCKS, n_blocks as u64);
+                    return plan;
+                }
+            }
+        }
+        let digests = self.digests(data, block_bytes);
+        let mut dirty = native::dirty_mask(&digests, old_digests);
+        // if the file shrank, old digests past the new end don't name
+        // shippable blocks — the shrink travels via WriteDelta.total_size
+        dirty.truncate(digests.len());
+        let block_sizes = block_byte_sizes(data.len(), block_bytes, digests.len());
+        let stripe = native::stripe_plan(&dirty, &block_sizes, num_stripes);
+        TransferPlan { digests, dirty, stripe }
+    }
+
+    /// Execute a fused plan artifact for an exactly-matching geometry.
+    fn exec_plan_variant(
+        &self,
+        pjrt: &Pjrt,
+        var: &Variant,
+        data: &[u8],
+        old_digests: &[i32],
+        block_bytes: usize,
+        weights: &[i32],
+    ) -> Result<TransferPlan> {
+        let _g = pjrt.gate.lock().unwrap();
+        let mut lanes_buf = vec![0i32; var.blocks * var.lanes];
+        for (i, four) in data.chunks(4).enumerate() {
+            let mut b = [0u8; 4];
+            b[..four.len()].copy_from_slice(four);
+            lanes_buf[i] = i32::from_le_bytes(b);
+        }
+        let mut old = old_digests.to_vec();
+        old.resize(var.blocks, 0);
+        let sizes: Vec<i32> = block_byte_sizes(data.len(), block_bytes, var.blocks)
+            .into_iter()
+            .map(|s| s as i32)
+            .collect();
+
+        let blocks_lit = xla::Literal::vec1(&lanes_buf)
+            .reshape(&[var.blocks as i64, var.lanes as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let old_lit = xla::Literal::vec1(&old);
+        let weights_lit = xla::Literal::vec1(&weights[..var.lanes]);
+        let sizes_lit = xla::Literal::vec1(&sizes);
+        let bufs = var
+            .exe
+            .execute::<xla::Literal>(&[blocks_lit, old_lit, weights_lit, sizes_lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?;
+        let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        let mut tuple = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+        if tuple.len() != 3 {
+            return Err(anyhow!("plan artifact returned {} outputs", tuple.len()));
+        }
+        let stripe = tuple.pop().unwrap().to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        let dirty_i = tuple.pop().unwrap().to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        let digests = tuple.pop().unwrap().to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok(TransferPlan { digests, dirty: dirty_i.into_iter().map(|d| d != 0).collect(), stripe })
+    }
+}
+
+/// Actual byte count of each block (the last real block may be short;
+/// padded plan blocks get 0 bytes so they never affect striping).
+pub fn block_byte_sizes(data_len: usize, block_bytes: usize, n_blocks: usize) -> Vec<u32> {
+    (0..n_blocks)
+        .map(|i| {
+            let start = i * block_bytes;
+            let end = (start + block_bytes).min(data_len);
+            end.saturating_sub(start) as u32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    fn native_engine() -> DigestEngine {
+        DigestEngine::native(Metrics::new())
+    }
+
+    #[test]
+    fn native_digests_deterministic() {
+        let e = native_engine();
+        let mut rng = Rng::new(3);
+        let mut data = vec![0u8; 200_000];
+        rng.fill_bytes(&mut data);
+        let a = e.digests(&data, 65536);
+        let b = e.digests(&data, 65536);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4); // ceil(200000 / 65536)
+    }
+
+    #[test]
+    fn plan_flags_changed_blocks() {
+        let e = native_engine();
+        let mut rng = Rng::new(4);
+        let mut data = vec![0u8; 300_000];
+        rng.fill_bytes(&mut data);
+        let old = e.digests(&data, 65536);
+        data[70_000] ^= 0xFF; // block 1
+        data[200_000] ^= 0xFF; // block 3
+        let plan = e.plan(&data, &old, 65536, 12);
+        assert_eq!(plan.dirty, vec![false, true, false, true, false]);
+        assert_eq!(plan.dirty_blocks(), 2);
+        assert_eq!(plan.stripe[0], -1);
+        assert!(plan.stripe[1] >= 0 && plan.stripe[3] >= 0);
+    }
+
+    #[test]
+    fn plan_empty_old_digests_all_dirty() {
+        let e = native_engine();
+        let data = vec![1u8; 100_000];
+        let plan = e.plan(&data, &[], 65536, 12);
+        assert!(plan.dirty.iter().all(|&d| d));
+    }
+
+    #[test]
+    fn block_sizes_tail() {
+        assert_eq!(block_byte_sizes(200_000, 65536, 5), vec![65536, 65536, 65536, 3392, 0]);
+        assert_eq!(block_byte_sizes(0, 65536, 1), vec![0]);
+    }
+
+    #[test]
+    fn metrics_counted() {
+        let m = Metrics::new();
+        let e = DigestEngine::native(m.clone());
+        e.digests(&[1, 2, 3], 1024);
+        assert_eq!(m.counter(names::DIGEST_CALLS), 1);
+        assert_eq!(m.counter(names::DIGEST_BLOCKS), 1);
+    }
+
+    #[test]
+    fn missing_artifacts_dir_falls_back_to_native() {
+        let e = DigestEngine::from_artifacts("/nonexistent/dir", Metrics::new()).unwrap();
+        assert!(!e.is_pjrt());
+    }
+
+    // PJRT-backed equivalence tests live in rust/tests/pjrt_runtime.rs
+    // (they need the artifacts/ directory built by `make artifacts`).
+}

@@ -1,0 +1,252 @@
+//! Native (pure-rust) digest engine — bit-identical to the Pallas/HLO
+//! pipeline in `python/compile/`.
+//!
+//! Exists for two reasons: (1) the transfer engine must work when AOT
+//! artifacts are absent, (2) tests cross-check the PJRT path against this
+//! implementation, which is itself pinned by golden vectors shared with
+//! `python/tests/test_vectors.py`.
+
+/// Polynomial base for weights (== `ref.DIGEST_BASE`).
+pub const DIGEST_BASE: u32 = 1_000_003;
+
+/// Finalization multiplier (== `ref.MIX_MUL`, 0x9E3779B9 as i32).
+pub const MIX_MUL: i32 = -1_640_531_527;
+
+/// Int32 lanes per 64 KiB stripe block.
+pub const LANES_64K: usize = 16384;
+
+/// w[i] = DIGEST_BASE^i mod 2^32, as i32 (== `ref.make_weights`).
+pub fn make_weights(n: usize) -> Vec<i32> {
+    let mut w = Vec::with_capacity(n);
+    let mut acc: u32 = 1;
+    for _ in 0..n {
+        w.push(acc as i32);
+        acc = acc.wrapping_mul(DIGEST_BASE);
+    }
+    w
+}
+
+/// Digest one block of int32 lanes (== `ref.block_digest_ref` row).
+pub fn digest_lanes(lanes: &[i32], weights: &[i32]) -> i32 {
+    debug_assert!(lanes.len() <= weights.len());
+    let mut raw: i32 = 0;
+    for (x, w) in lanes.iter().zip(weights) {
+        raw = raw.wrapping_add(x.wrapping_mul(*w));
+    }
+    let mixed = raw.wrapping_mul(MIX_MUL);
+    // jnp.right_shift on int32 is arithmetic — rust's `>>` on i32 matches.
+    mixed ^ (mixed >> 15)
+}
+
+/// Widen little-endian bytes to int32 lanes, zero-padding the tail —
+/// exactly how the rust side feeds file content to the HLO artifacts.
+pub fn bytes_to_lanes(bytes: &[u8], lanes: usize) -> Vec<i32> {
+    let mut out = vec![0i32; lanes];
+    for (i, chunk) in bytes.chunks(4).enumerate().take(lanes) {
+        let mut b = [0u8; 4];
+        b[..chunk.len()].copy_from_slice(chunk);
+        out[i] = i32::from_le_bytes(b);
+    }
+    out
+}
+
+/// Per-block digests of a byte buffer with `block_bytes`-sized blocks
+/// (last block zero-padded). Returns one digest per block; empty content
+/// yields a single digest of the zero block.
+///
+/// Hot path (EXPERIMENTS.md §Perf L3 #1): full blocks are digested
+/// straight off the byte buffer in 4-lane unrolled strides — no per-block
+/// lane `Vec` — which lets LLVM vectorize the wrapping i32 MACs. Only the
+/// ragged tail goes through the padded scalar path.
+pub fn digest_blocks(data: &[u8], block_bytes: usize, weights: &[i32]) -> Vec<i32> {
+    let lanes = block_bytes / 4;
+    debug_assert!(weights.len() >= lanes);
+    if data.is_empty() {
+        return vec![digest_lanes(&vec![0i32; lanes], weights)];
+    }
+    let mut out = Vec::with_capacity(data.len().div_ceil(block_bytes));
+    let mut chunks = data.chunks_exact(block_bytes);
+    for chunk in &mut chunks {
+        out.push(digest_full_block(chunk, &weights[..lanes]));
+    }
+    let rem = chunks.remainder();
+    if !rem.is_empty() {
+        let l = bytes_to_lanes(rem, lanes);
+        out.push(digest_lanes(&l, weights));
+    }
+    out
+}
+
+/// Digest one full (`lanes.len() * 4`-byte) block directly from bytes.
+#[inline]
+fn digest_full_block(chunk: &[u8], weights: &[i32]) -> i32 {
+    debug_assert_eq!(chunk.len(), weights.len() * 4);
+    let mut acc = [0i32; 4];
+    let mut i = 0usize;
+    let n = weights.len();
+    while i + 4 <= n {
+        // 4 independent accumulators break the dependence chain so the
+        // wrapping mul-adds vectorize
+        for k in 0..4 {
+            let b = i + k;
+            let v = i32::from_le_bytes([
+                chunk[4 * b],
+                chunk[4 * b + 1],
+                chunk[4 * b + 2],
+                chunk[4 * b + 3],
+            ]);
+            acc[k] = acc[k].wrapping_add(v.wrapping_mul(weights[b]));
+        }
+        i += 4;
+    }
+    let mut raw = acc[0].wrapping_add(acc[1]).wrapping_add(acc[2]).wrapping_add(acc[3]);
+    while i < n {
+        let v = i32::from_le_bytes([
+            chunk[4 * i],
+            chunk[4 * i + 1],
+            chunk[4 * i + 2],
+            chunk[4 * i + 3],
+        ]);
+        raw = raw.wrapping_add(v.wrapping_mul(weights[i]));
+        i += 1;
+    }
+    let mixed = raw.wrapping_mul(MIX_MUL);
+    mixed ^ (mixed >> 15)
+}
+
+/// Dirty mask (== `ref.dirty_mask_ref`): new vs old digests; if lengths
+/// differ, the extra/missing blocks are dirty.
+pub fn dirty_mask(new: &[i32], old: &[i32]) -> Vec<bool> {
+    let n = new.len().max(old.len());
+    (0..n)
+        .map(|i| match (new.get(i), old.get(i)) {
+            (Some(a), Some(b)) => a != b,
+            _ => true,
+        })
+        .collect()
+}
+
+/// Balanced stripe plan (== `ref.stripe_plan_ref`): cumsum of dirty
+/// payload split into `num_stripes` equal spans; clean blocks get -1.
+pub fn stripe_plan(dirty: &[bool], block_bytes: &[u32], num_stripes: usize) -> Vec<i32> {
+    debug_assert_eq!(dirty.len(), block_bytes.len());
+    let stripes = num_stripes.max(1) as i64;
+    let payload: Vec<i64> =
+        dirty.iter().zip(block_bytes).map(|(&d, &b)| if d { b as i64 } else { 0 }).collect();
+    let total: i64 = payload.iter().sum();
+    let span = ((total + stripes - 1) / stripes).max(1);
+    let mut before: i64 = 0;
+    payload
+        .iter()
+        .zip(dirty)
+        .map(|(&p, &d)| {
+            let s = ((before / span).min(stripes - 1)) as i32;
+            before += p;
+            if d {
+                s
+            } else {
+                -1
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Golden vectors shared with python/tests/test_vectors.py — generated
+    // from ref.py and frozen on both sides.
+    const GOLDEN_N: usize = 8;
+    const GOLDEN_WEIGHTS: [i32; 8] =
+        [1, 1000003, -721379959, 583896283, 1525764945, -429739981, 272515929, 1071616587];
+    const GOLDEN_DIGESTS: [i32; 4] = [19047297, 1229507876, 1855012728, 644638899];
+
+    fn golden_block(j: u32) -> Vec<i32> {
+        (0..GOLDEN_N as u32).map(|i| (j.wrapping_mul(1000003) + i * 7 + 1) as i32).collect()
+    }
+
+    #[test]
+    fn golden_weights_match_python() {
+        assert_eq!(make_weights(GOLDEN_N), GOLDEN_WEIGHTS);
+    }
+
+    #[test]
+    fn golden_digests_match_python() {
+        let w = make_weights(GOLDEN_N);
+        for (j, want) in GOLDEN_DIGESTS.iter().enumerate() {
+            assert_eq!(digest_lanes(&golden_block(j as u32), &w), *want, "block {j}");
+        }
+    }
+
+    #[test]
+    fn bytes_to_lanes_le_and_padding() {
+        let lanes = bytes_to_lanes(&[1, 0, 0, 0, 0xFF, 0xFF, 0xFF, 0xFF, 7], 4);
+        assert_eq!(lanes, vec![1, -1, 7, 0]);
+    }
+
+    #[test]
+    fn digest_blocks_chunks_and_pads() {
+        let w = make_weights(4);
+        let data = [1u8; 20]; // 16-byte blocks -> 2 blocks, second padded
+        let d = digest_blocks(&data, 16, &w);
+        assert_eq!(d.len(), 2);
+        // a full block of 0x01010101 differs from the padded 4-byte tail
+        assert_ne!(d[0], d[1]);
+        // deterministic
+        assert_eq!(d, digest_blocks(&data, 16, &w));
+        // empty content: one zero-block digest
+        assert_eq!(digest_blocks(&[], 16, &w).len(), 1);
+    }
+
+    #[test]
+    fn single_bit_corruption_detected() {
+        let w = make_weights(LANES_64K);
+        let mut data = vec![0x5Au8; 192 * 1024];
+        let base = digest_blocks(&data, 64 * 1024, &w);
+        data[70_000] ^= 0x10; // inside block 1
+        let got = digest_blocks(&data, 64 * 1024, &w);
+        assert_eq!(base[0], got[0]);
+        assert_ne!(base[1], got[1]);
+        assert_eq!(base[2], got[2]);
+    }
+
+    #[test]
+    fn dirty_mask_length_mismatch_is_dirty() {
+        assert_eq!(dirty_mask(&[1, 2, 3], &[1, 9, 3]), vec![false, true, false]);
+        assert_eq!(dirty_mask(&[1, 2], &[1]), vec![false, true]);
+        assert_eq!(dirty_mask(&[1], &[1, 2]), vec![false, true]);
+    }
+
+    #[test]
+    fn stripe_plan_matches_reference_semantics() {
+        // mirrors python test_short_tail_block_weighting
+        let dirty = vec![true; 8];
+        let mut bytes = vec![64u32; 8];
+        bytes[7] = 4;
+        let plan = stripe_plan(&dirty, &bytes, 2);
+        assert_eq!(plan[0], 0);
+        assert_eq!(plan[7], 1);
+        // clean blocks unassigned
+        let plan2 = stripe_plan(&[false, true], &[64, 64], 12);
+        assert_eq!(plan2, vec![-1, 0]);
+    }
+
+    #[test]
+    fn stripe_plan_balanced_counts() {
+        let dirty = vec![true; 48];
+        let bytes = vec![1024u32; 48];
+        let plan = stripe_plan(&dirty, &bytes, 12);
+        let mut counts = [0; 12];
+        for p in plan {
+            counts[p as usize] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 4), "{counts:?}");
+    }
+
+    #[test]
+    fn all_clean_plan_is_empty() {
+        let plan = stripe_plan(&[false; 4], &[64; 4], 12);
+        assert!(plan.iter().all(|&p| p == -1));
+    }
+}

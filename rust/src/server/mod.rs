@@ -1,0 +1,656 @@
+//! The XUFS user-space file server (paper §3.1–3.2).
+//!
+//! Runs on (or beside) the user's personal system, exporting the home
+//! space to client sites. Transport-agnostic: [`FileServer::handle`] maps
+//! one authenticated request to one response; the simulated deployment
+//! calls it directly with modeled WAN delay, the TCP deployment
+//! (`coordinator::net`) calls it from connection threads after the USSH
+//! challenge-response handshake.
+//!
+//! Responsibilities:
+//! * serve namespace reads (stat/readdir) and whole-file fetches with
+//!   per-block digests for integrity + later delta writeback;
+//! * apply replayed meta-operations **idempotently** (per-client sequence
+//!   numbers — a crashed client can replay its whole queue safely);
+//! * fan out change notifications to registered callback channels
+//!   (skipping the originating client, whose copy is already current);
+//! * grant lock leases via [`lease::LockTable`] and expire orphans;
+//! * simulate crash/restart (the paper restarts the server from crontab).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::callback::NotifyChannel;
+use crate::homefs::{FileStore, FsError};
+use crate::lease::{Acquire, LockTable};
+use crate::metrics::{names, Metrics};
+use crate::proto::{DirEntry, FileImage, MetaOp, NotifyEvent, Request, Response, WireAttr};
+use crate::runtime::DigestEngine;
+use crate::simnet::VirtualTime;
+use crate::util::path as vpath;
+use crate::vdisk::DiskModel;
+
+/// One registered callback (client + subtree root + channel).
+#[derive(Debug)]
+struct CallbackReg {
+    client_id: u64,
+    root: String,
+    channel: NotifyChannel,
+}
+
+/// The user-space file server.
+pub struct FileServer {
+    fs: FileStore,
+    pub disk: DiskModel,
+    engine: Arc<DigestEngine>,
+    block_bytes: usize,
+    locks: LockTable,
+    callbacks: Vec<CallbackReg>,
+    /// Highest applied meta-op sequence per client (idempotent replay).
+    applied: HashMap<u64, u64>,
+    /// Digest cache: path -> (version, digests). Fetches of unchanged
+    /// files skip recomputation (hot-path optimization, EXPERIMENTS §Perf).
+    digest_cache: HashMap<String, (u64, Vec<i32>)>,
+    /// Callback channel per client (attached by the transport at connect).
+    channel_map: HashMap<u64, NotifyChannel>,
+    metrics: Metrics,
+    up: bool,
+}
+
+impl std::fmt::Debug for FileServer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FileServer")
+            .field("up", &self.up)
+            .field("callbacks", &self.callbacks.len())
+            .field("locks", &self.locks.len())
+            .finish()
+    }
+}
+
+fn err_resp(e: &FsError) -> Response {
+    let code = match e {
+        FsError::NotFound(_) => 2,
+        FsError::NotADir(_) => 20,
+        FsError::IsADir(_) => 21,
+        FsError::Exists(_) => 17,
+        FsError::NotEmpty(_) => 39,
+        FsError::NoSpace => 28,
+        FsError::Stale(_) => 116,
+        _ => 5,
+    };
+    Response::Err { code, msg: e.to_string() }
+}
+
+impl FileServer {
+    pub fn new(
+        fs: FileStore,
+        disk: DiskModel,
+        engine: Arc<DigestEngine>,
+        block_bytes: usize,
+        lease_s: f64,
+        metrics: Metrics,
+    ) -> Self {
+        FileServer {
+            fs,
+            disk,
+            engine,
+            block_bytes,
+            locks: LockTable::new(lease_s),
+            callbacks: Vec::new(),
+            applied: HashMap::new(),
+            digest_cache: HashMap::new(),
+            channel_map: HashMap::new(),
+            metrics,
+            up: true,
+        }
+    }
+
+    /// Direct (trusted) access to the home space — used by tests, the
+    /// workload generators that pre-populate the home space, and by
+    /// "local edits" that simulate the user touching files at home.
+    pub fn home_mut(&mut self) -> &mut FileStore {
+        &mut self.fs
+    }
+
+    pub fn home(&self) -> &FileStore {
+        &self.fs
+    }
+
+    pub fn is_up(&self) -> bool {
+        self.up
+    }
+
+    pub fn block_bytes(&self) -> usize {
+        self.block_bytes
+    }
+
+    /// Crash the server process: callback registrations and the in-memory
+    /// lock table die with it; the home space (on disk) survives.
+    pub fn crash(&mut self) {
+        self.up = false;
+        for reg in &self.callbacks {
+            reg.channel.disconnect();
+        }
+        self.callbacks.clear();
+        self.locks = LockTable::new(self.locks.lease_secs());
+        self.applied.clear();
+    }
+
+    /// Restart (the paper uses a crontab job). Clients must re-register
+    /// callbacks and re-acquire locks.
+    pub fn restart(&mut self) {
+        self.up = true;
+    }
+
+    /// A change made *at the home space directly* (the user editing a file
+    /// on their workstation). Bumps the store and fans out invalidations
+    /// to every registered client.
+    pub fn local_write(&mut self, path: &str, data: &[u8], now: VirtualTime) -> Result<(), FsError> {
+        self.fs.write(path, data, now)?;
+        self.digest_cache.remove(&vpath::normalize(path));
+        let version = self.fs.stat(path).map(|a| a.version).unwrap_or(0);
+        self.notify_change(path, version, None);
+        Ok(())
+    }
+
+    pub fn local_unlink(&mut self, path: &str, now: VirtualTime) -> Result<(), FsError> {
+        self.fs.unlink(path, now)?;
+        self.digest_cache.remove(&vpath::normalize(path));
+        self.notify_removed(path, None);
+        Ok(())
+    }
+
+    fn notify_change(&mut self, path: &str, new_version: u64, originator: Option<u64>) {
+        let p = vpath::normalize(path);
+        for reg in &self.callbacks {
+            if Some(reg.client_id) == originator {
+                continue;
+            }
+            if vpath::is_under(&p, &reg.root) && reg.channel.push(NotifyEvent::Invalidate {
+                path: p.clone(),
+                new_version,
+            }) {
+                self.metrics.incr(names::CALLBACKS_SENT);
+            }
+        }
+    }
+
+    fn notify_removed(&mut self, path: &str, originator: Option<u64>) {
+        let p = vpath::normalize(path);
+        for reg in &self.callbacks {
+            if Some(reg.client_id) == originator {
+                continue;
+            }
+            if vpath::is_under(&p, &reg.root)
+                && reg.channel.push(NotifyEvent::Removed { path: p.clone() })
+            {
+                self.metrics.incr(names::CALLBACKS_SENT);
+            }
+        }
+    }
+
+    /// Expire orphaned lock leases (invoked by the coordinator's
+    /// housekeeping tick and before conflicting acquires).
+    pub fn expire_leases(&mut self, now: VirtualTime) -> usize {
+        let n = self.locks.expire(now);
+        if n > 0 {
+            self.metrics.add(names::LEASE_EXPIRED, n as u64);
+        }
+        n
+    }
+
+    fn digests_for(&mut self, path: &str, version: u64) -> Vec<i32> {
+        let key = vpath::normalize(path);
+        if let Some((v, d)) = self.digest_cache.get(&key) {
+            if *v == version {
+                return d.clone();
+            }
+        }
+        let data = self.fs.read(&key).map(|d| d.to_vec()).unwrap_or_default();
+        let digests = self.engine.digests(&data, self.block_bytes);
+        self.digest_cache.insert(key, (version, digests.clone()));
+        digests
+    }
+
+    /// Handle one authenticated request from `client_id`.
+    pub fn handle(&mut self, client_id: u64, req: Request, now: VirtualTime) -> Response {
+        if !self.up {
+            return Response::Err { code: 111, msg: "connection refused (server down)".into() };
+        }
+        match req {
+            Request::AuthHello { .. } | Request::AuthProof { .. } => Response::Err {
+                code: 1,
+                msg: "auth is handled by the transport handshake".into(),
+            },
+            Request::Ping => Response::Pong,
+            Request::Stat { path } => match self.fs.stat(&path) {
+                Ok(a) => Response::Attr { attr: WireAttr::from_attr(&a) },
+                Err(e) => err_resp(&e),
+            },
+            Request::ReadDir { path } => match self.fs.readdir(&path) {
+                Ok(entries) => Response::Dir {
+                    entries: entries
+                        .into_iter()
+                        .map(|(name, a)| DirEntry { name, attr: WireAttr::from_attr(&a) })
+                        .collect(),
+                },
+                Err(e) => err_resp(&e),
+            },
+            Request::Fetch { path } => match self.fs.stat(&path) {
+                Ok(a) => {
+                    let digests = self.digests_for(&path, a.version);
+                    let data = self.fs.read(&path).map(|d| d.to_vec()).unwrap_or_default();
+                    Response::File {
+                        image: FileImage {
+                            path: vpath::normalize(&path),
+                            version: a.version,
+                            data,
+                            digests,
+                        },
+                    }
+                }
+                Err(e) => err_resp(&e),
+            },
+            Request::FetchMeta { path } => match self.fs.stat(&path) {
+                Ok(a) => {
+                    let digests = self.digests_for(&path, a.version);
+                    Response::FileMeta { version: a.version, size: a.size, digests }
+                }
+                Err(e) => err_resp(&e),
+            },
+            Request::FetchRange { path, offset, len, expect_version } => {
+                match self.fs.stat(&path) {
+                    Ok(a) if a.version != expect_version => err_resp(&FsError::Stale(format!(
+                        "{path} changed during striped fetch (v{} != v{expect_version})",
+                        a.version
+                    ))),
+                    Ok(_) => match self.fs.read_at(&path, offset, len as usize) {
+                        Ok(data) => Response::Range { version: expect_version, data: data.to_vec() },
+                        Err(e) => err_resp(&e),
+                    },
+                    Err(e) => err_resp(&e),
+                }
+            }
+            Request::RegisterCallback { root, client_id: cid } => {
+                // replace any prior registration for this client+root
+                self.callbacks.retain(|r| !(r.client_id == cid && r.root == root));
+                let channel = self.channel_for(cid).unwrap_or_default();
+                self.callbacks.push(CallbackReg {
+                    client_id: cid,
+                    root: vpath::normalize(&root),
+                    channel,
+                });
+                Response::CallbackRegistered
+            }
+            Request::Apply { seq, op } => self.apply(client_id, seq, op, now),
+            Request::LockAcquire { path, kind, owner } => {
+                self.expire_leases(now);
+                match self.locks.acquire(&vpath::normalize(&path), kind, owner, now) {
+                    Acquire::Granted { token, lease } => Response::LockGranted {
+                        token,
+                        lease_ns: lease.saturating_sub(now).0,
+                    },
+                    Acquire::Denied { holder } => Response::LockDenied { holder },
+                }
+            }
+            Request::LockRenew { token, owner } => match self.locks.renew(token, owner, now) {
+                Some(expires) => {
+                    self.metrics.incr(names::LEASE_RENEWALS);
+                    Response::LockGranted { token, lease_ns: expires.saturating_sub(now).0 }
+                }
+                None => Response::Err { code: 77, msg: "lease lost".into() },
+            },
+            Request::LockRelease { token, owner } => {
+                if self.locks.release(token, owner) {
+                    Response::Released
+                } else {
+                    Response::Err { code: 77, msg: "no such lock".into() }
+                }
+            }
+        }
+    }
+
+    /// Attach (or create) the callback channel for a client. The transport
+    /// owns the other end.
+    pub fn attach_channel(&mut self, client_id: u64, channel: NotifyChannel) {
+        for reg in &mut self.callbacks {
+            if reg.client_id == client_id {
+                reg.channel = channel.clone();
+            }
+        }
+        // keep a registration-less attachment so RegisterCallback can find it
+        self.channel_map.insert(client_id, channel);
+    }
+
+    fn channel_for(&self, client_id: u64) -> Option<NotifyChannel> {
+        self.channel_map.get(&client_id).cloned()
+    }
+
+    fn apply(&mut self, client_id: u64, seq: u64, op: MetaOp, now: VirtualTime) -> Response {
+        let last = self.applied.get(&client_id).copied().unwrap_or(0);
+        if seq <= last {
+            // replayed duplicate: already applied — answer success again
+            let version = self.fs.stat(op.path()).map(|a| a.version).unwrap_or(0);
+            return Response::Applied { seq, new_version: version };
+        }
+        let result: Result<Vec<(String, bool)>, FsError> = match &op {
+            MetaOp::Mkdir { path } => self.fs.mkdir_p(path, now).map(|_| vec![(path.clone(), false)]),
+            MetaOp::Rmdir { path } => self.fs.rmdir(path, now).map(|_| vec![(path.clone(), true)]),
+            MetaOp::Create { path } => {
+                let r = match self.fs.create(path, now) {
+                    Ok(_) => Ok(()),
+                    Err(FsError::Exists(_)) => Ok(()), // create is idempotent
+                    Err(e) => Err(e),
+                };
+                r.map(|_| vec![(path.clone(), false)])
+            }
+            MetaOp::Unlink { path } => self.fs.unlink(path, now).map(|_| vec![(path.clone(), true)]),
+            MetaOp::Rename { from, to } => self
+                .fs
+                .rename(from, to, now)
+                .map(|_| vec![(from.clone(), true), (to.clone(), false)]),
+            MetaOp::Truncate { path, size } => {
+                self.fs.truncate(path, *size, now).map(|_| vec![(path.clone(), false)])
+            }
+            MetaOp::SetMode { path, mode } => {
+                self.fs.set_mode(path, *mode, now).map(|_| vec![(path.clone(), false)])
+            }
+            MetaOp::WriteFull { path, data, digests } => {
+                let r = self.fs.write(path, data, now);
+                if r.is_ok() && !digests.is_empty() {
+                    let v = self.fs.stat(path).map(|a| a.version).unwrap_or(0);
+                    self.digest_cache.insert(vpath::normalize(path), (v, digests.clone()));
+                }
+                r.map(|_| vec![(path.clone(), false)])
+            }
+            MetaOp::WriteDelta { path, total_size, base_version, blocks, digests } => {
+                self.apply_delta(path, *total_size, *base_version, blocks, digests, now)
+                    .map(|_| vec![(path.clone(), false)])
+            }
+        };
+        match result {
+            Ok(touched) => {
+                self.applied.insert(client_id, seq);
+                let version = self.fs.stat(op.path()).map(|a| a.version).unwrap_or(0);
+                for (path, removed) in touched {
+                    if removed {
+                        self.digest_cache.remove(&vpath::normalize(&path));
+                        self.notify_removed(&path, Some(client_id));
+                    } else {
+                        let v = self.fs.stat(&path).map(|a| a.version).unwrap_or(version);
+                        self.notify_change(&path, v, Some(client_id));
+                    }
+                }
+                Response::Applied { seq, new_version: version }
+            }
+            Err(e) => err_resp(&e),
+        }
+    }
+
+    /// Apply a delta writeback: only valid against the exact base version
+    /// the client diffed from; otherwise the client must fall back to a
+    /// full write (the server's copy changed concurrently).
+    fn apply_delta(
+        &mut self,
+        path: &str,
+        total_size: u64,
+        base_version: u64,
+        blocks: &[(u32, Vec<u8>)],
+        digests: &[i32],
+        now: VirtualTime,
+    ) -> Result<(), FsError> {
+        let attr = self.fs.stat(path)?;
+        if attr.version != base_version {
+            return Err(FsError::Stale(format!(
+                "delta base version {base_version} != server version {}",
+                attr.version
+            )));
+        }
+        let mut data = self.fs.read(path)?.to_vec();
+        data.resize(total_size as usize, 0);
+        for (idx, payload) in blocks {
+            let start = *idx as usize * self.block_bytes;
+            let end = (start + payload.len()).min(data.len());
+            if start > data.len() {
+                return Err(FsError::Invalid(format!("delta block {idx} beyond file size")));
+            }
+            data[start..end].copy_from_slice(&payload[..end - start]);
+        }
+        self.fs.write(path, &data, now)?;
+        if !digests.is_empty() {
+            let v = self.fs.stat(path).map(|a| a.version).unwrap_or(0);
+            self.digest_cache.insert(vpath::normalize(path), (v, digests.to_vec()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::LockKind;
+
+    fn t(s: f64) -> VirtualTime {
+        VirtualTime::from_secs(s)
+    }
+
+    fn server() -> FileServer {
+        let mut fs = FileStore::default();
+        fs.mkdir_p("/home/user", t(0.0)).unwrap();
+        fs.write("/home/user/a.txt", b"hello world", t(0.0)).unwrap();
+        fs.write("/home/user/b.dat", &[7u8; 200_000], t(0.0)).unwrap();
+        FileServer::new(
+            fs,
+            DiskModel::new(200.0e6, 0.002),
+            Arc::new(DigestEngine::native(Metrics::new())),
+            65536,
+            30.0,
+            Metrics::new(),
+        )
+    }
+
+    #[test]
+    fn stat_and_readdir() {
+        let mut s = server();
+        match s.handle(1, Request::Stat { path: "/home/user/a.txt".into() }, t(1.0)) {
+            Response::Attr { attr } => assert_eq!(attr.size, 11),
+            r => panic!("{r:?}"),
+        }
+        match s.handle(1, Request::ReadDir { path: "/home/user".into() }, t(1.0)) {
+            Response::Dir { entries } => {
+                assert_eq!(entries.len(), 2);
+                assert_eq!(entries[0].name, "a.txt");
+            }
+            r => panic!("{r:?}"),
+        }
+        match s.handle(1, Request::Stat { path: "/missing".into() }, t(1.0)) {
+            Response::Err { code, .. } => assert_eq!(code, 2),
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn fetch_includes_verifiable_digests() {
+        let mut s = server();
+        match s.handle(1, Request::Fetch { path: "/home/user/b.dat".into() }, t(1.0)) {
+            Response::File { image } => {
+                assert_eq!(image.data.len(), 200_000);
+                assert_eq!(image.digests.len(), 4); // ceil(200000/65536)
+                let engine = DigestEngine::native(Metrics::new());
+                assert_eq!(engine.digests(&image.data, 65536), image.digests);
+            }
+            r => panic!("{r:?}"),
+        }
+    }
+
+    #[test]
+    fn digest_cache_reused_until_version_changes() {
+        let mut s = server();
+        s.handle(1, Request::Fetch { path: "/home/user/a.txt".into() }, t(1.0));
+        let m = Metrics::new();
+        let e = Arc::new(DigestEngine::native(m.clone()));
+        s.engine = e;
+        // same version: cache hit, engine not consulted
+        s.handle(1, Request::Fetch { path: "/home/user/a.txt".into() }, t(2.0));
+        assert_eq!(m.counter(names::DIGEST_CALLS), 0);
+        s.local_write("/home/user/a.txt", b"changed", t(3.0)).unwrap();
+        s.handle(1, Request::Fetch { path: "/home/user/a.txt".into() }, t(4.0));
+        assert_eq!(m.counter(names::DIGEST_CALLS), 1);
+    }
+
+    #[test]
+    fn apply_is_idempotent_per_client() {
+        let mut s = server();
+        let op = MetaOp::WriteFull { path: "/home/user/new".into(), data: b"v1".to_vec(), digests: vec![] };
+        let r1 = s.handle(1, Request::Apply { seq: 1, op: op.clone() }, t(1.0));
+        assert!(matches!(r1, Response::Applied { seq: 1, .. }));
+        let v1 = s.home().stat("/home/user/new").unwrap().version;
+        // replay of the same seq must not bump the version
+        let r2 = s.handle(1, Request::Apply { seq: 1, op }, t(2.0));
+        assert!(matches!(r2, Response::Applied { seq: 1, .. }));
+        assert_eq!(s.home().stat("/home/user/new").unwrap().version, v1);
+    }
+
+    #[test]
+    fn apply_notifies_other_clients_not_originator() {
+        let mut s = server();
+        let ch1 = NotifyChannel::new();
+        let ch2 = NotifyChannel::new();
+        s.attach_channel(1, ch1.clone());
+        s.attach_channel(2, ch2.clone());
+        s.handle(1, Request::RegisterCallback { root: "/home/user".into(), client_id: 1 }, t(0.0));
+        s.handle(2, Request::RegisterCallback { root: "/home/user".into(), client_id: 2 }, t(0.0));
+        let op = MetaOp::WriteFull { path: "/home/user/a.txt".into(), data: b"x".to_vec(), digests: vec![] };
+        s.handle(1, Request::Apply { seq: 1, op }, t(1.0));
+        assert_eq!(ch1.pending(), 0, "originator must not be invalidated");
+        let evs = ch2.drain();
+        assert_eq!(evs.len(), 1);
+        assert!(matches!(&evs[0], NotifyEvent::Invalidate { path, .. } if path == "/home/user/a.txt"));
+    }
+
+    #[test]
+    fn local_write_invalidates_everyone() {
+        let mut s = server();
+        let ch = NotifyChannel::new();
+        s.attach_channel(1, ch.clone());
+        s.handle(1, Request::RegisterCallback { root: "/home/user".into(), client_id: 1 }, t(0.0));
+        s.local_write("/home/user/a.txt", b"edited at home", t(1.0)).unwrap();
+        assert_eq!(ch.pending(), 1);
+        s.local_unlink("/home/user/a.txt", t(2.0)).unwrap();
+        let evs = ch.drain();
+        assert!(matches!(&evs[1], NotifyEvent::Removed { path } if path == "/home/user/a.txt"));
+    }
+
+    #[test]
+    fn delta_against_stale_base_rejected() {
+        let mut s = server();
+        let base = s.home().stat("/home/user/b.dat").unwrap().version;
+        s.local_write("/home/user/b.dat", &[9u8; 100], t(1.0)).unwrap();
+        let r = s.handle(
+            1,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteDelta {
+                    path: "/home/user/b.dat".into(),
+                    total_size: 100,
+                    base_version: base,
+                    blocks: vec![(0, vec![1; 64])],
+                    digests: vec![],
+                },
+            },
+            t(2.0),
+        );
+        assert!(matches!(r, Response::Err { code: 116, .. }), "{r:?}");
+    }
+
+    #[test]
+    fn delta_applies_blocks() {
+        let mut s = server();
+        let base = s.home().stat("/home/user/b.dat").unwrap().version;
+        let mut expect = s.home().read("/home/user/b.dat").unwrap().to_vec();
+        let blk = vec![0xABu8; 65536];
+        expect[65536..131072].copy_from_slice(&blk);
+        let r = s.handle(
+            1,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteDelta {
+                    path: "/home/user/b.dat".into(),
+                    total_size: 200_000,
+                    base_version: base,
+                    blocks: vec![(1, blk)],
+                    digests: vec![],
+                },
+            },
+            t(2.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        assert_eq!(s.home().read("/home/user/b.dat").unwrap(), &expect[..]);
+    }
+
+    #[test]
+    fn crash_refuses_and_restart_recovers() {
+        let mut s = server();
+        let ch = NotifyChannel::new();
+        s.attach_channel(1, ch.clone());
+        s.handle(1, Request::RegisterCallback { root: "/".into(), client_id: 1 }, t(0.0));
+        s.handle(1, Request::LockAcquire { path: "/home/user/a.txt".into(), kind: LockKind::Exclusive, owner: 1 }, t(0.0));
+        s.crash();
+        assert!(!ch.is_connected());
+        assert!(matches!(s.handle(1, Request::Ping, t(1.0)), Response::Err { code: 111, .. }));
+        s.restart();
+        assert!(matches!(s.handle(1, Request::Ping, t(2.0)), Response::Pong));
+        // lock table was lost in the crash: a new owner can acquire
+        let r = s.handle(
+            2,
+            Request::LockAcquire { path: "/home/user/a.txt".into(), kind: LockKind::Exclusive, owner: 2 },
+            t(3.0),
+        );
+        assert!(matches!(r, Response::LockGranted { .. }));
+    }
+
+    #[test]
+    fn lock_lifecycle_over_protocol() {
+        let mut s = server();
+        let r = s.handle(
+            1,
+            Request::LockAcquire { path: "/f".into(), kind: LockKind::Exclusive, owner: 10 },
+            t(0.0),
+        );
+        let Response::LockGranted { token, lease_ns } = r else { panic!("{r:?}") };
+        assert_eq!(lease_ns, 30_000_000_000);
+        assert!(matches!(
+            s.handle(2, Request::LockAcquire { path: "/f".into(), kind: LockKind::Shared, owner: 11 }, t(1.0)),
+            Response::LockDenied { holder: 10 }
+        ));
+        assert!(matches!(
+            s.handle(1, Request::LockRenew { token, owner: 10 }, t(10.0)),
+            Response::LockGranted { .. }
+        ));
+        assert!(matches!(s.handle(1, Request::LockRelease { token, owner: 10 }, t(11.0)), Response::Released));
+        assert!(matches!(
+            s.handle(2, Request::LockAcquire { path: "/f".into(), kind: LockKind::Shared, owner: 11 }, t(12.0)),
+            Response::LockGranted { .. }
+        ));
+    }
+
+    #[test]
+    fn rename_notifies_both_paths() {
+        let mut s = server();
+        let ch = NotifyChannel::new();
+        s.attach_channel(2, ch.clone());
+        s.handle(2, Request::RegisterCallback { root: "/home/user".into(), client_id: 2 }, t(0.0));
+        s.handle(
+            1,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::Rename { from: "/home/user/a.txt".into(), to: "/home/user/c.txt".into() },
+            },
+            t(1.0),
+        );
+        let evs = ch.drain();
+        assert_eq!(evs.len(), 2);
+        assert!(matches!(&evs[0], NotifyEvent::Removed { path } if path == "/home/user/a.txt"));
+        assert!(matches!(&evs[1], NotifyEvent::Invalidate { path, .. } if path == "/home/user/c.txt"));
+    }
+}

@@ -1,0 +1,143 @@
+//! Virtual and real clocks behind one trait.
+//!
+//! The simulated deployment advances a [`SimClock`] analytically; the
+//! real-TCP deployment (integration tests, e2e example) uses [`RealClock`].
+//! All timestamps are [`VirtualTime`] nanoseconds so the two are
+//! interchangeable throughout the client/server/lease code.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Nanoseconds since deployment start.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct VirtualTime(pub u64);
+
+impl VirtualTime {
+    pub const ZERO: VirtualTime = VirtualTime(0);
+
+    pub fn from_secs(s: f64) -> Self {
+        VirtualTime((s.max(0.0) * 1e9).round() as u64)
+    }
+
+    pub fn as_secs(self) -> f64 {
+        self.0 as f64 / 1e9
+    }
+
+    pub fn saturating_sub(self, other: VirtualTime) -> VirtualTime {
+        VirtualTime(self.0.saturating_sub(other.0))
+    }
+
+    pub fn add_secs(self, s: f64) -> VirtualTime {
+        VirtualTime(self.0 + (s.max(0.0) * 1e9).round() as u64)
+    }
+}
+
+/// A clock the deployment reads and (if simulated) advances.
+pub trait Clock: Send + Sync {
+    fn now(&self) -> VirtualTime;
+    /// Advance by `secs`. Real clocks sleep; sim clocks jump.
+    fn advance_secs(&self, secs: f64);
+}
+
+/// Shared virtual clock: advancing is O(1), reads are atomic.
+#[derive(Debug, Clone, Default)]
+pub struct SimClock {
+    ns: Arc<AtomicU64>,
+}
+
+impl SimClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Move the clock to `t` if `t` is later (used when joining parallel
+    /// analytic activities: the end time is the max of the branches).
+    pub fn advance_to(&self, t: VirtualTime) {
+        self.ns.fetch_max(t.0, Ordering::SeqCst);
+    }
+}
+
+impl Clock for SimClock {
+    fn now(&self) -> VirtualTime {
+        VirtualTime(self.ns.load(Ordering::SeqCst))
+    }
+
+    fn advance_secs(&self, secs: f64) {
+        self.ns.fetch_add((secs.max(0.0) * 1e9).round() as u64, Ordering::SeqCst);
+    }
+}
+
+/// Wall-clock implementation for the real-TCP deployment.
+#[derive(Debug, Clone)]
+pub struct RealClock {
+    start: Instant,
+}
+
+impl Default for RealClock {
+    fn default() -> Self {
+        RealClock { start: Instant::now() }
+    }
+}
+
+impl RealClock {
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Clock for RealClock {
+    fn now(&self) -> VirtualTime {
+        VirtualTime(self.start.elapsed().as_nanos() as u64)
+    }
+
+    fn advance_secs(&self, secs: f64) {
+        std::thread::sleep(std::time::Duration::from_secs_f64(secs.max(0.0)));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_time_conversions() {
+        let t = VirtualTime::from_secs(1.25);
+        assert_eq!(t.0, 1_250_000_000);
+        assert!((t.as_secs() - 1.25).abs() < 1e-12);
+        assert_eq!(t.add_secs(0.75).as_secs(), 2.0);
+        assert_eq!(VirtualTime::from_secs(-1.0), VirtualTime::ZERO);
+    }
+
+    #[test]
+    fn sim_clock_advance_to_is_monotonic() {
+        let c = SimClock::new();
+        c.advance_to(VirtualTime::from_secs(5.0));
+        c.advance_to(VirtualTime::from_secs(3.0)); // earlier: no-op
+        assert_eq!(c.now().as_secs(), 5.0);
+    }
+
+    #[test]
+    fn shared_between_clones() {
+        let c = SimClock::new();
+        let c2 = c.clone();
+        c2.advance_secs(2.0);
+        assert_eq!(c.now().as_secs(), 2.0);
+    }
+
+    #[test]
+    fn real_clock_monotonic() {
+        let c = RealClock::new();
+        let a = c.now();
+        let b = c.now();
+        assert!(b >= a);
+    }
+
+    #[test]
+    fn saturating_sub() {
+        let a = VirtualTime::from_secs(1.0);
+        let b = VirtualTime::from_secs(2.0);
+        assert_eq!(a.saturating_sub(b), VirtualTime::ZERO);
+        assert_eq!(b.saturating_sub(a).as_secs(), 1.0);
+    }
+}

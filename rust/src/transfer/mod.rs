@@ -1,0 +1,247 @@
+//! Striped-transfer engine helpers (paper §3.3).
+//!
+//! "All data transfers in XUFS over 64 Kbytes are striped across multiple
+//! TCP connections. XUFS uses up to 12 stripes with a minimum 64 kilobytes
+//! block size each … [and] spawn[s] multiple (12 by default) parallel
+//! threads for pre-fetching files smaller than 64 kilobytes."
+//!
+//! This module holds the transport-independent pieces: stripe-count
+//! policy, integrity verification of fetched images against their
+//! per-block digests (via the AOT digest engine), and construction of the
+//! writeback op (full vs digest-delta) from a [`TransferPlan`].
+
+use std::sync::Arc;
+
+use crate::config::StripeConfig;
+use crate::homefs::FsError;
+use crate::metrics::{names, Metrics};
+use crate::proto::{FileImage, MetaOp};
+use crate::runtime::DigestEngine;
+
+/// How many TCP stripes a transfer of `bytes` uses: 1 below the striping
+/// threshold, then one per `min_block`, capped at `max_stripes`.
+pub fn stripes_for(bytes: u64, cfg: &StripeConfig) -> usize {
+    if bytes <= cfg.stripe_threshold {
+        return 1;
+    }
+    let by_block = bytes.div_ceil(cfg.min_block.max(1)) as usize;
+    by_block.clamp(1, cfg.max_stripes.max(1))
+}
+
+/// Verify a fetched image end-to-end: recompute per-block digests of the
+/// received bytes and compare to the digests the server sent. A mismatch
+/// means a corrupted stripe — callers re-fetch.
+pub fn verify_image(
+    engine: &Arc<DigestEngine>,
+    image: &FileImage,
+    block_bytes: usize,
+    metrics: &Metrics,
+) -> Result<(), FsError> {
+    if image.digests.is_empty() {
+        // server sent no digests (shouldn't happen with our server, but a
+        // foreign server could) — nothing to verify against
+        return Ok(());
+    }
+    let got = engine.digests(&image.data, block_bytes);
+    if got != image.digests {
+        metrics.incr("transfer.integrity_failures");
+        return Err(FsError::Protocol(format!(
+            "integrity check failed for {} ({} blocks, {} mismatched)",
+            image.path,
+            got.len(),
+            got.iter().zip(&image.digests).filter(|(a, b)| a != b).count()
+        )));
+    }
+    Ok(())
+}
+
+/// Extract the dirty blocks named by a plan as `(block_index, bytes)`
+/// payloads for a `WriteDelta`.
+pub fn delta_blocks(data: &[u8], dirty: &[bool], block_bytes: usize) -> Vec<(u32, Vec<u8>)> {
+    dirty
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d)
+        .map(|(i, _)| {
+            let start = i * block_bytes;
+            let end = (start + block_bytes).min(data.len());
+            (i as u32, data[start.min(data.len())..end].to_vec())
+        })
+        .collect()
+}
+
+/// Decide the writeback op for a closed file: a digest-delta when the
+/// cached base digests admit one and it saves enough payload, otherwise
+/// the full aggregated content (the paper's baseline behaviour).
+#[allow(clippy::too_many_arguments)]
+pub fn build_writeback(
+    engine: &Arc<DigestEngine>,
+    cfg: &StripeConfig,
+    path: &str,
+    data: &[u8],
+    base_version: u64,
+    old_digests: &[i32],
+    block_bytes: usize,
+    metrics: &Metrics,
+) -> (MetaOp, Vec<i32>) {
+    let plan = engine.plan(data, old_digests, block_bytes, cfg.max_stripes);
+    let digests = plan.digests.clone();
+    let full_bytes = data.len() as u64;
+    let dirty_bytes: u64 = delta_bytes(&plan.dirty, data.len(), block_bytes);
+    let use_delta = cfg.delta_writeback
+        && !old_digests.is_empty()
+        && base_version > 0
+        // a delta must actually save payload to be worth the stale-base risk
+        && dirty_bytes * 2 < full_bytes.max(1);
+    if use_delta {
+        metrics.add(names::WRITEBACK_BYTES_SAVED, full_bytes.saturating_sub(dirty_bytes));
+        let blocks = delta_blocks(data, &plan.dirty, block_bytes);
+        (
+            MetaOp::WriteDelta {
+                path: path.to_string(),
+                total_size: full_bytes,
+                base_version,
+                blocks,
+                digests: digests.clone(),
+            },
+            digests,
+        )
+    } else {
+        (
+            MetaOp::WriteFull { path: path.to_string(), data: data.to_vec(), digests: digests.clone() },
+            digests,
+        )
+    }
+}
+
+fn delta_bytes(dirty: &[bool], data_len: usize, block_bytes: usize) -> u64 {
+    dirty
+        .iter()
+        .enumerate()
+        .filter(|(_, &d)| d)
+        .map(|(i, _)| {
+            let start = i * block_bytes;
+            let end = (start + block_bytes).min(data_len);
+            end.saturating_sub(start) as u64
+        })
+        .sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::StripeConfig;
+
+    fn cfg() -> StripeConfig {
+        StripeConfig::default()
+    }
+
+    fn engine() -> Arc<DigestEngine> {
+        Arc::new(DigestEngine::native(Metrics::new()))
+    }
+
+    #[test]
+    fn stripe_policy_matches_paper() {
+        let c = cfg();
+        assert_eq!(stripes_for(0, &c), 1);
+        assert_eq!(stripes_for(64 * 1024, &c), 1, "<=64 KiB not striped");
+        assert_eq!(stripes_for(64 * 1024 + 1, &c), 2);
+        assert_eq!(stripes_for(512 * 1024, &c), 8);
+        assert_eq!(stripes_for(1 << 30, &c), 12, "capped at 12");
+    }
+
+    #[test]
+    fn stripe_policy_respects_overrides() {
+        let mut c = cfg();
+        c.max_stripes = 4;
+        assert_eq!(stripes_for(1 << 30, &c), 4);
+        c.stripe_threshold = 0;
+        assert_eq!(stripes_for(1, &c), 1);
+    }
+
+    #[test]
+    fn verify_accepts_good_rejects_corrupt() {
+        let e = engine();
+        let m = Metrics::new();
+        let data = vec![0x42u8; 150_000];
+        let digests = e.digests(&data, 65536);
+        let mut image = FileImage { path: "/f".into(), version: 1, data, digests };
+        verify_image(&e, &image, 65536, &m).unwrap();
+        image.data[100_000] ^= 1;
+        let err = verify_image(&e, &image, 65536, &m).unwrap_err();
+        assert!(matches!(err, FsError::Protocol(_)));
+        assert_eq!(m.counter("transfer.integrity_failures"), 1);
+    }
+
+    #[test]
+    fn verify_skips_digestless_images() {
+        let e = engine();
+        let image = FileImage { path: "/f".into(), version: 1, data: vec![1, 2, 3], digests: vec![] };
+        verify_image(&e, &image, 65536, &Metrics::new()).unwrap();
+    }
+
+    #[test]
+    fn writeback_small_change_uses_delta() {
+        let e = engine();
+        let m = Metrics::new();
+        let mut data = vec![7u8; 1 << 20]; // 16 blocks
+        let old = e.digests(&data, 65536);
+        data[0] ^= 0xFF; // one dirty block
+        let (op, digests) = build_writeback(&e, &cfg(), "/f", &data, 3, &old, 65536, &m);
+        match op {
+            MetaOp::WriteDelta { blocks, base_version, total_size, .. } => {
+                assert_eq!(blocks.len(), 1);
+                assert_eq!(blocks[0].0, 0);
+                assert_eq!(base_version, 3);
+                assert_eq!(total_size, 1 << 20);
+            }
+            other => panic!("expected delta, got {other:?}"),
+        }
+        assert_eq!(digests, e.digests(&data, 65536));
+        assert!(m.counter(names::WRITEBACK_BYTES_SAVED) > 900_000);
+    }
+
+    #[test]
+    fn writeback_new_file_uses_full() {
+        let e = engine();
+        let data = vec![7u8; 1 << 20];
+        let (op, _) = build_writeback(&e, &cfg(), "/f", &data, 0, &[], 65536, &Metrics::new());
+        assert!(matches!(op, MetaOp::WriteFull { .. }));
+    }
+
+    #[test]
+    fn writeback_mostly_changed_uses_full() {
+        let e = engine();
+        let mut data = vec![7u8; 1 << 20];
+        let old = e.digests(&data, 65536);
+        for b in data.iter_mut() {
+            *b ^= 0xFF; // everything dirty
+        }
+        let (op, _) = build_writeback(&e, &cfg(), "/f", &data, 3, &old, 65536, &Metrics::new());
+        assert!(matches!(op, MetaOp::WriteFull { .. }));
+    }
+
+    #[test]
+    fn writeback_respects_delta_disable() {
+        let e = engine();
+        let mut c = cfg();
+        c.delta_writeback = false;
+        let mut data = vec![7u8; 1 << 20];
+        let old = e.digests(&data, 65536);
+        data[0] ^= 0xFF;
+        let (op, _) = build_writeback(&e, &c, "/f", &data, 3, &old, 65536, &Metrics::new());
+        assert!(matches!(op, MetaOp::WriteFull { .. }));
+    }
+
+    #[test]
+    fn delta_blocks_extract_right_ranges() {
+        let data: Vec<u8> = (0..200u8).collect();
+        let dirty = vec![false, true, false, true];
+        let blocks = delta_blocks(&data, &dirty, 64);
+        assert_eq!(blocks.len(), 2);
+        assert_eq!(blocks[0].0, 1);
+        assert_eq!(blocks[0].1, (64..128).map(|x| x as u8).collect::<Vec<_>>());
+        assert_eq!(blocks[1].0, 3);
+        assert_eq!(blocks[1].1, (192..200).map(|x| x as u8).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared utilities: deterministic PRNG, minimal JSON, statistics, virtual
+//! path handling, and a property-test harness (offline stand-ins for
+//! `rand`, `serde_json`, and `proptest`, which are unavailable in the
+//! vendored crate set — see DESIGN.md §7).
+
+pub mod json;
+pub mod path;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+
+pub use json::Json;
+pub use rng::Rng;

@@ -1,0 +1,152 @@
+//! Virtual path handling for the XUFS name space.
+//!
+//! XUFS paths are absolute, `/`-separated, rooted at a mount. They never
+//! touch the host file system, so `std::path` (platform-dependent) is not
+//! used; this module provides normalization, join, split and ancestry
+//! helpers with precise semantics the cache/metaq layers rely on
+//! (normalized form is the canonical cache key).
+
+/// Normalize a virtual path: collapse `//`, resolve `.` and `..`
+/// lexically, ensure a single leading `/`, strip trailing `/` (except root).
+pub fn normalize(path: &str) -> String {
+    let mut parts: Vec<&str> = Vec::new();
+    for seg in path.split('/') {
+        match seg {
+            "" | "." => {}
+            ".." => {
+                parts.pop();
+            }
+            s => parts.push(s),
+        }
+    }
+    if parts.is_empty() {
+        "/".to_string()
+    } else {
+        format!("/{}", parts.join("/"))
+    }
+}
+
+/// Join a base path and a (possibly relative) component, then normalize.
+pub fn join(base: &str, rel: &str) -> String {
+    if rel.starts_with('/') {
+        normalize(rel)
+    } else {
+        normalize(&format!("{base}/{rel}"))
+    }
+}
+
+/// Parent directory of a normalized path (`/` has parent `/`).
+pub fn parent(path: &str) -> String {
+    let p = normalize(path);
+    match p.rfind('/') {
+        Some(0) | None => "/".to_string(),
+        Some(i) => p[..i].to_string(),
+    }
+}
+
+/// Final component of a normalized path (empty for root).
+pub fn basename(path: &str) -> String {
+    let p = normalize(path);
+    if p == "/" {
+        String::new()
+    } else {
+        p.rsplit('/').next().unwrap_or("").to_string()
+    }
+}
+
+/// Iterate the components of a normalized path.
+pub fn components(path: &str) -> Vec<String> {
+    let p = normalize(path);
+    if p == "/" {
+        vec![]
+    } else {
+        p[1..].split('/').map(|s| s.to_string()).collect()
+    }
+}
+
+/// True if `ancestor` is `descendant` or a path prefix of it
+/// (component-wise, so `/a/b` is NOT under `/a/bc`).
+pub fn is_under(descendant: &str, ancestor: &str) -> bool {
+    let d = normalize(descendant);
+    let a = normalize(ancestor);
+    if a == "/" {
+        return true;
+    }
+    d == a || d.starts_with(&format!("{a}/"))
+}
+
+/// Hidden attribute-file name XUFS stores next to each directory entry
+/// (paper §3.1: "stores the directory entry attributes in hidden files
+/// alongside the initial empty file entries").
+pub fn attr_file_name(entry: &str) -> String {
+    format!(".xufs.attr.{entry}")
+}
+
+/// True if the name is XUFS cache metadata (hidden from readdir).
+pub fn is_hidden_meta(name: &str) -> bool {
+    name.starts_with(".xufs.")
+}
+
+/// Shadow-file name for an open write handle (paper §3.1: writes land in an
+/// internal shadow file, flushed on close).
+pub fn shadow_file_name(entry: &str, handle: u64) -> String {
+    format!(".xufs.shadow.{handle}.{entry}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_cases() {
+        assert_eq!(normalize("/a/b/c"), "/a/b/c");
+        assert_eq!(normalize("a/b"), "/a/b");
+        assert_eq!(normalize("/a//b/"), "/a/b");
+        assert_eq!(normalize("/a/./b"), "/a/b");
+        assert_eq!(normalize("/a/../b"), "/b");
+        assert_eq!(normalize("/../.."), "/");
+        assert_eq!(normalize(""), "/");
+        assert_eq!(normalize("/"), "/");
+    }
+
+    #[test]
+    fn join_cases() {
+        assert_eq!(join("/a/b", "c"), "/a/b/c");
+        assert_eq!(join("/a/b", "/x"), "/x");
+        assert_eq!(join("/a/b", "../c"), "/a/c");
+        assert_eq!(join("/", "x"), "/x");
+    }
+
+    #[test]
+    fn parent_basename() {
+        assert_eq!(parent("/a/b/c"), "/a/b");
+        assert_eq!(parent("/a"), "/");
+        assert_eq!(parent("/"), "/");
+        assert_eq!(basename("/a/b/c"), "c");
+        assert_eq!(basename("/"), "");
+    }
+
+    #[test]
+    fn components_split() {
+        assert_eq!(components("/a/b"), vec!["a", "b"]);
+        assert!(components("/").is_empty());
+    }
+
+    #[test]
+    fn under() {
+        assert!(is_under("/a/b/c", "/a/b"));
+        assert!(is_under("/a/b", "/a/b"));
+        assert!(!is_under("/a/bc", "/a/b"));
+        assert!(is_under("/anything", "/"));
+        assert!(!is_under("/a", "/a/b"));
+    }
+
+    #[test]
+    fn meta_names() {
+        assert_eq!(attr_file_name("f.c"), ".xufs.attr.f.c");
+        assert!(is_hidden_meta(".xufs.attr.f.c"));
+        assert!(is_hidden_meta(".xufs.shadow.3.f.c"));
+        assert!(!is_hidden_meta(".hidden"));
+        assert_eq!(shadow_file_name("f.c", 3), ".xufs.shadow.3.f.c");
+    }
+}

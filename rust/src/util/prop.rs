@@ -1,0 +1,130 @@
+//! A miniature property-testing harness.
+//!
+//! `proptest` is not in the offline crate set, so coordinator invariants are
+//! checked with this harness instead: run a predicate over many seeded
+//! random cases; on failure, retry with progressively simpler size hints
+//! (a lightweight stand-in for shrinking) and report the *seed* so the case
+//! is exactly reproducible.
+//!
+//! ```ignore
+//! prop::check(256, |rng, size| {
+//!     let n = rng.range(1, size as u64) as usize;
+//!     /* build a case of complexity n, return Err(msg) on violation */
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Outcome of a single property case.
+pub type CaseResult = Result<(), String>;
+
+/// Run `cases` seeded cases of property `f`. `f` receives a fresh RNG and a
+/// size hint that grows from small to large across the run (so early cases
+/// are naturally "shrunk"). Panics with the failing seed + message.
+pub fn check<F>(cases: usize, mut f: F)
+where
+    F: FnMut(&mut Rng, usize) -> CaseResult,
+{
+    check_seeded(0xDEAD_BEEF, cases, &mut f);
+}
+
+/// As [`check`] but with an explicit base seed (to pin a reproduction).
+pub fn check_seeded<F>(base_seed: u64, cases: usize, f: &mut F)
+where
+    F: FnMut(&mut Rng, usize) -> CaseResult,
+{
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        // size ramps 1..=64 over the run; later cases are bigger
+        let size = 1 + (case * 64) / cases.max(1);
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = f(&mut rng, size) {
+            // "shrink": replay the same seed at smaller size hints and report
+            // the smallest size that still fails.
+            let mut min_fail = size;
+            for s in (1..size).rev() {
+                let mut r2 = Rng::new(seed);
+                if f(&mut r2, s).is_err() {
+                    min_fail = s;
+                } else {
+                    break;
+                }
+            }
+            panic!(
+                "property failed (case {case}, seed {seed:#x}, size {size}, min failing size {min_fail}): {msg}"
+            );
+        }
+    }
+}
+
+/// Assert-like helper producing the Err(String) the harness expects.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !($cond) {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !($cond) {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+/// Assert two values are equal, reporting both on failure.
+#[macro_export]
+macro_rules! prop_assert_eq {
+    ($a:expr, $b:expr) => {{
+        let (a, b) = (&$a, &$b);
+        if a != b {
+            return Err(format!(
+                "{} != {} ({:?} vs {:?})",
+                stringify!($a),
+                stringify!($b),
+                a,
+                b
+            ));
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0;
+        check(50, |rng, size| {
+            n += 1;
+            let x = rng.range(0, size as u64);
+            prop_assert!(x <= size as u64);
+            Ok(())
+        });
+        assert_eq!(n, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        check(50, |rng, _| {
+            let x = rng.below(100);
+            prop_assert!(x < 90, "x={x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn size_hint_ramps() {
+        let mut sizes = Vec::new();
+        check(64, |_, size| {
+            sizes.push(size);
+            Ok(())
+        });
+        assert!(sizes.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*sizes.first().unwrap(), 1);
+        assert!(*sizes.last().unwrap() >= 60);
+    }
+}

@@ -1,0 +1,204 @@
+//! Small statistics helpers used by benches and metrics: mean, stddev,
+//! percentiles, throughput formatting, and a fixed-boundary histogram.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Sample standard deviation (0.0 for n < 2).
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on the sorted copy. `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+pub fn min(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::INFINITY, f64::min)
+}
+
+pub fn max(xs: &[f64]) -> f64 {
+    xs.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+}
+
+/// Human-readable byte size ("1.5 GiB").
+pub fn human_bytes(b: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u < UNITS.len() - 1 {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Human-readable duration from seconds ("2m03s", "57.0s", "1.2ms").
+pub fn human_secs(s: f64) -> String {
+    if s >= 60.0 {
+        let m = (s / 60.0).floor();
+        format!("{}m{:04.1}s", m as u64, s - m * 60.0)
+    } else if s >= 1.0 {
+        format!("{s:.1}s")
+    } else if s >= 1e-3 {
+        format!("{:.1}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+/// Throughput in MiB/s given bytes and seconds.
+pub fn mib_per_sec(bytes: u64, secs: f64) -> f64 {
+    if secs <= 0.0 {
+        return 0.0;
+    }
+    bytes as f64 / (1024.0 * 1024.0) / secs
+}
+
+/// Fixed-boundary histogram (used by metrics for latency distributions).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    total: u64,
+    sum: f64,
+}
+
+impl Histogram {
+    /// `bounds` are upper edges (ascending); an overflow bucket is implicit.
+    pub fn new(bounds: Vec<f64>) -> Self {
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], total: 0, sum: 0.0 }
+    }
+
+    /// Exponential boundaries `start * factor^i` for `n` buckets.
+    pub fn exponential(start: f64, factor: f64, n: usize) -> Self {
+        let mut b = Vec::with_capacity(n);
+        let mut v = start;
+        for _ in 0..n {
+            b.push(v);
+            v *= factor;
+        }
+        Self::new(b)
+    }
+
+    pub fn record(&mut self, x: f64) {
+        let idx = self.bounds.partition_point(|&b| b < x);
+        self.counts[idx] += 1;
+        self.total += 1;
+        self.sum += x;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.sum / self.total as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() {
+                    self.bounds[i]
+                } else {
+                    *self.bounds.last().unwrap_or(&0.0)
+                };
+            }
+        }
+        *self.bounds.last().unwrap_or(&0.0)
+    }
+
+    pub fn buckets(&self) -> impl Iterator<Item = (f64, u64)> + '_ {
+        self.bounds.iter().copied().zip(self.counts.iter().copied())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.138089935).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(stddev(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&xs, 50.0) - 50.5).abs() < 1e-9);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-9);
+        assert!((percentile(&xs, 100.0) - 100.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn humanize() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.50 KiB");
+        assert_eq!(human_bytes(1 << 30), "1.00 GiB");
+        assert_eq!(human_secs(125.0), "2m05.0s");
+        assert_eq!(human_secs(57.0), "57.0s");
+        assert_eq!(human_secs(0.0012), "1.2ms");
+    }
+
+    #[test]
+    fn throughput() {
+        assert!((mib_per_sec(1 << 20, 1.0) - 1.0).abs() < 1e-12);
+        assert_eq!(mib_per_sec(100, 0.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_basics() {
+        let mut h = Histogram::exponential(1.0, 2.0, 8); // 1,2,4,...,128
+        for x in [0.5, 1.5, 3.0, 100.0, 1000.0] {
+            h.record(x);
+        }
+        assert_eq!(h.count(), 5);
+        assert!(h.mean() > 0.0);
+        assert!(h.quantile(0.5) >= 1.0);
+        let total: u64 = h.buckets().map(|(_, c)| c).sum();
+        assert_eq!(total + 1, 5); // one value in the overflow bucket
+    }
+}

@@ -1,0 +1,98 @@
+//! Disk timing models.
+//!
+//! Two storage tiers appear in the paper's testbed: site parallel file
+//! systems (GPFS scratch — used as the XUFS *cache space* and as the
+//! "local GPFS" series in Figs. 4–5) and the home-space disk behind the
+//! user's file server. Both are modeled analytically: a per-operation cost
+//! (metadata / seek / RPC inside the FS) plus streaming bandwidth.
+
+use crate::simnet::{Clock, VirtualTime};
+
+/// Analytic disk/FS timing model.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiskModel {
+    /// Sequential streaming bandwidth, bytes/sec.
+    pub bps: f64,
+    /// Fixed per-operation cost (open/stat/create/...), seconds.
+    pub op_s: f64,
+}
+
+impl DiskModel {
+    pub fn new(bps: f64, op_s: f64) -> Self {
+        DiskModel { bps, op_s }
+    }
+
+    /// A parallel FS (GPFS-like): `servers` stripes aggregate bandwidth,
+    /// with slightly higher per-op cost (distributed metadata/token work).
+    pub fn parallel(per_server_bps: f64, servers: usize, op_s: f64) -> Self {
+        DiskModel { bps: per_server_bps * servers.max(1) as f64, op_s }
+    }
+
+    /// Duration of a pure metadata operation.
+    pub fn op_secs(&self) -> f64 {
+        self.op_s
+    }
+
+    /// Duration of a sequential transfer of `bytes` (plus one op cost).
+    pub fn io_secs(&self, bytes: u64) -> f64 {
+        self.op_s + bytes as f64 / self.bps
+    }
+
+    /// Account a metadata op against a clock.
+    pub fn op(&self, clock: &dyn Clock) -> f64 {
+        clock.advance_secs(self.op_s);
+        self.op_s
+    }
+
+    /// Account a data transfer against a clock.
+    pub fn io(&self, clock: &dyn Clock, bytes: u64) -> f64 {
+        let t = self.io_secs(bytes);
+        clock.advance_secs(t);
+        t
+    }
+
+    /// Completion time of an async write started now (used by the metaq
+    /// flush horizon bookkeeping).
+    pub fn io_done_at(&self, now: VirtualTime, bytes: u64) -> VirtualTime {
+        now.add_secs(self.io_secs(bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::simnet::SimClock;
+
+    #[test]
+    fn io_time_is_op_plus_stream() {
+        let d = DiskModel::new(100.0 * 1024.0 * 1024.0, 0.002);
+        let t = d.io_secs(100 * 1024 * 1024);
+        assert!((t - 1.002).abs() < 1e-9, "t={t}");
+        assert_eq!(d.op_secs(), 0.002);
+    }
+
+    #[test]
+    fn parallel_fs_aggregates() {
+        let d = DiskModel::parallel(100.0e6, 4, 0.003);
+        assert_eq!(d.bps, 400.0e6);
+        let single = DiskModel::new(100.0e6, 0.003);
+        assert!(d.io_secs(1 << 30) < single.io_secs(1 << 30) / 3.0);
+    }
+
+    #[test]
+    fn clock_accounting() {
+        let c = SimClock::new();
+        let d = DiskModel::new(1.0e6, 0.001);
+        d.op(&c);
+        d.io(&c, 1_000_000);
+        assert!((c.now().as_secs() - (0.001 + 0.001 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn done_at_horizon() {
+        let d = DiskModel::new(1.0e6, 0.0);
+        let t0 = VirtualTime::from_secs(10.0);
+        let done = d.io_done_at(t0, 2_000_000);
+        assert!((done.as_secs() - 12.0).abs() < 1e-9);
+    }
+}

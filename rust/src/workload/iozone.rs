@@ -1,0 +1,98 @@
+//! IOzone-style sequential read/write throughput (paper §4.1).
+//!
+//! "We ran the benchmark for a range of file sizes from 1 MB to 1 GB, and
+//! we also included the time of the close operation in all our
+//! measurements to include the cost of cache flushes."
+
+use crate::client::{OpenFlags, Vfs};
+use crate::homefs::FsError;
+use crate::util::stats::mib_per_sec;
+use crate::util::Rng;
+
+/// One IOzone measurement.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IozoneResult {
+    pub file_bytes: u64,
+    pub secs: f64,
+    pub mib_per_sec: f64,
+}
+
+/// IOzone record size (the default 64 KiB transfer unit... IOzone uses a
+/// range; we use 1 MiB records like the paper-era runs on large files).
+pub const RECORD: usize = 1 << 20;
+
+/// Sequential write of `bytes` (open O_CREAT|O_TRUNC, write records,
+/// close). The close is INCLUDED — it carries the cache-flush cost.
+pub fn write_test<V: Vfs>(vfs: &mut V, path: &str, bytes: u64, seed: u64) -> Result<IozoneResult, FsError> {
+    let mut rng = Rng::new(seed);
+    let mut record = vec![0u8; RECORD.min(bytes as usize).max(1)];
+    rng.fill_bytes(&mut record);
+    let t0 = vfs.now();
+    let fd = vfs.open(path, OpenFlags::wronly_create())?;
+    let mut written = 0u64;
+    while written < bytes {
+        let n = ((bytes - written) as usize).min(record.len());
+        vfs.write(fd, &record[..n])?;
+        written += n as u64;
+    }
+    vfs.close(fd)?;
+    let secs = vfs.now().saturating_sub(t0).as_secs();
+    Ok(IozoneResult { file_bytes: bytes, secs, mib_per_sec: mib_per_sec(bytes, secs) })
+}
+
+/// Sequential read of the whole file (open, read records, close).
+pub fn read_test<V: Vfs>(vfs: &mut V, path: &str) -> Result<IozoneResult, FsError> {
+    let t0 = vfs.now();
+    let fd = vfs.open(path, OpenFlags::rdonly())?;
+    let mut total = 0u64;
+    loop {
+        let buf = vfs.read(fd, RECORD)?;
+        if buf.is_empty() {
+            break;
+        }
+        total += buf.len() as u64;
+    }
+    vfs.close(fd)?;
+    let secs = vfs.now().saturating_sub(t0).as_secs();
+    Ok(IozoneResult { file_bytes: total, secs, mib_per_sec: mib_per_sec(total, secs) })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::LocalFs;
+    use crate::homefs::FileStore;
+    use crate::simnet::SimClock;
+    use crate::vdisk::DiskModel;
+    use std::sync::Arc;
+
+    fn local() -> LocalFs {
+        LocalFs::new(
+            FileStore::default(),
+            DiskModel::new(400.0 * 1024.0 * 1024.0, 0.002),
+            Arc::new(SimClock::new()),
+        )
+    }
+
+    #[test]
+    fn write_then_read_throughput() {
+        let mut l = local();
+        let w = write_test(&mut l, "/f.dat", 16 << 20, 1).unwrap();
+        assert_eq!(w.file_bytes, 16 << 20);
+        assert!(w.secs > 0.0);
+        // 400 MiB/s disk minus op costs
+        assert!(w.mib_per_sec > 200.0 && w.mib_per_sec < 400.0, "{}", w.mib_per_sec);
+        let r = read_test(&mut l, "/f.dat").unwrap();
+        assert_eq!(r.file_bytes, 16 << 20);
+        assert!(r.mib_per_sec > 200.0);
+    }
+
+    #[test]
+    fn partial_record_tail() {
+        let mut l = local();
+        let w = write_test(&mut l, "/odd.dat", (1 << 20) + 12345, 2).unwrap();
+        assert_eq!(w.file_bytes, (1 << 20) + 12345);
+        let r = read_test(&mut l, "/odd.dat").unwrap();
+        assert_eq!(r.file_bytes, (1 << 20) + 12345);
+    }
+}

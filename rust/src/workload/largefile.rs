@@ -1,0 +1,67 @@
+//! Large-file access workload (paper §4.3): `wc -l` on a 1 GiB file — an
+//! open, a sequential scan counting newlines, a close.
+
+use crate::client::{OpenFlags, Vfs};
+use crate::homefs::FsError;
+
+/// Run `wc -l` on `path`: returns (line count, elapsed seconds).
+pub fn wc_l<V: Vfs>(vfs: &mut V, path: &str, chunk: usize) -> Result<(u64, f64), FsError> {
+    let t0 = vfs.now();
+    let fd = vfs.open(path, OpenFlags::rdonly())?;
+    let mut lines = 0u64;
+    loop {
+        let buf = vfs.read(fd, chunk)?;
+        if buf.is_empty() {
+            break;
+        }
+        lines += buf.iter().filter(|&&b| b == b'\n').count() as u64;
+    }
+    vfs.close(fd)?;
+    Ok((lines, vfs.now().saturating_sub(t0).as_secs()))
+}
+
+/// Generate `bytes` of text with roughly `line_len`-byte lines.
+pub fn text_content(bytes: usize, line_len: usize, seed: u64) -> Vec<u8> {
+    let mut rng = crate::util::Rng::new(seed);
+    let mut out = Vec::with_capacity(bytes);
+    while out.len() < bytes {
+        let n = (line_len / 2 + rng.below(line_len as u64) as usize).min(bytes - out.len());
+        for _ in 0..n.saturating_sub(1) {
+            out.push(b'a' + (rng.below(26) as u8));
+        }
+        out.push(b'\n');
+    }
+    out.truncate(bytes);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::baselines::LocalFs;
+    use crate::homefs::FileStore;
+    use crate::simnet::SimClock;
+    use crate::vdisk::DiskModel;
+    use std::sync::Arc;
+
+    #[test]
+    fn counts_lines() {
+        let mut l = LocalFs::new(
+            FileStore::default(),
+            DiskModel::new(400.0e6, 0.001),
+            Arc::new(SimClock::new()),
+        );
+        l.write_file("/t.txt", b"a\nbb\nccc\n", 64).unwrap();
+        let (lines, secs) = wc_l(&mut l, "/t.txt", 4).unwrap();
+        assert_eq!(lines, 3);
+        assert!(secs > 0.0);
+    }
+
+    #[test]
+    fn text_content_shape() {
+        let t = text_content(100_000, 80, 7);
+        assert_eq!(t.len(), 100_000);
+        let lines = t.iter().filter(|&&b| b == b'\n').count();
+        assert!((800..2500).contains(&lines), "{lines}");
+    }
+}

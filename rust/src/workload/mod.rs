@@ -1,0 +1,15 @@
+//! Workload generators for the paper's evaluation (§2.3, §4): the IOzone
+//! micro-benchmark, the source-tree build, the 1 GiB `wc -l` scan, and the
+//! TACC scratch-space file-population census of Table 1. All drivers are
+//! generic over [`Vfs`] so the same workload runs unchanged on XUFS,
+//! GPFS-WAN, NFS and local-FS clients.
+
+pub mod buildtree;
+pub mod iozone;
+pub mod largefile;
+pub mod sizedist;
+
+pub use buildtree::{generate_tree, BuildSpec, BuildStats};
+pub use iozone::{read_test, write_test, IozoneResult};
+pub use largefile::wc_l;
+pub use sizedist::{census, generate_sizes, populate, Census, SizeDistParams, PAPER_TABLE1};

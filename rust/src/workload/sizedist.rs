@@ -1,0 +1,213 @@
+//! File-size population model calibrated to Table 1 of the paper: the
+//! cumulative size distribution of the 143,190 files (864.4 GB) in the
+//! TACC TeraGrid cluster's parallel-FS scratch space.
+//!
+//! The generator samples a piecewise bucket mixture whose per-bucket file
+//! counts are exact (by construction) and whose per-bucket byte totals
+//! match the paper in expectation (a power-shaped within-bucket sampler
+//! tuned to the bucket mean). `census` recomputes the paper's cumulative
+//! rows from a generated population so Table 1 can be regenerated and the
+//! benches can assert the population has the paper's byte/file skew
+//! (>1 MiB files: 9% of files, 98.49% of bytes).
+
+use crate::homefs::{FileStore, FsResult};
+use crate::simnet::VirtualTime;
+use crate::util::Rng;
+
+const MIB: f64 = 1024.0 * 1024.0;
+const GIB_DECIMAL: f64 = 1e9; // the paper reports decimal gigabytes
+
+/// One bucket of the calibrated mixture: (lo_bytes, hi_bytes, files,
+/// total_gigabytes) — derived by differencing Table 1's cumulative rows.
+const BUCKETS: [(f64, f64, u64, f64); 9] = [
+    (500.0 * MIB, 2600.0 * MIB, 130, 302.471),
+    (400.0 * MIB, 500.0 * MIB, 74, 33.474),
+    (300.0 * MIB, 400.0 * MIB, 67, 23.195),
+    (200.0 * MIB, 300.0 * MIB, 1142, 263.997),
+    (100.0 * MIB, 200.0 * MIB, 1110, 156.474),
+    (1.0 * MIB, 100.0 * MIB, 10333, 71.736),
+    (0.5 * MIB, 1.0 * MIB, 3221, 2.408),
+    (0.25 * MIB, 0.5 * MIB, 14885, 5.829),
+    (64.0, 0.25 * MIB, 112228, 4.801),
+];
+
+/// Paper's Table 1: (cut point label, bytes, cumulative files, cumulative
+/// gigabytes, file %, byte %).
+pub const PAPER_TABLE1: [(&str, f64, u64, f64); 8] = [
+    ("> 500M", 500.0 * MIB, 130, 302.471),
+    ("> 400M", 400.0 * MIB, 204, 335.945),
+    ("> 300M", 300.0 * MIB, 271, 359.140),
+    ("> 200M", 200.0 * MIB, 1413, 623.137),
+    ("> 100M", 100.0 * MIB, 2523, 779.611),
+    ("> 1M", 1.0 * MIB, 12856, 851.347),
+    ("> 0.5M", 0.5 * MIB, 16077, 853.755),
+    ("> 0.25M", 0.25 * MIB, 30962, 859.584),
+];
+
+pub const PAPER_TOTAL_FILES: u64 = 143_190;
+pub const PAPER_TOTAL_GB: f64 = 864.385;
+
+/// Generation parameters.
+#[derive(Debug, Clone)]
+pub struct SizeDistParams {
+    /// Scale factor on file counts (1.0 = the full 143k-file census;
+    /// benches use smaller scales for the populate step).
+    pub scale: f64,
+}
+
+impl Default for SizeDistParams {
+    fn default() -> Self {
+        SizeDistParams { scale: 1.0 }
+    }
+}
+
+/// Sample file sizes from the calibrated mixture.
+pub fn generate_sizes(params: &SizeDistParams, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    let mut sizes = Vec::new();
+    for &(lo, hi, files, gb) in &BUCKETS {
+        let n = ((files as f64) * params.scale).round().max(if params.scale > 0.0 { 1.0 } else { 0.0 }) as u64;
+        if n == 0 {
+            continue;
+        }
+        let mean = (gb * GIB_DECIMAL) / files as f64;
+        // size = lo + (hi-lo) * u^k with E[size] = lo + (hi-lo)/(k+1):
+        // k chosen so the bucket mean matches the paper
+        let k = ((hi - lo) / (mean - lo).max(1.0) - 1.0).max(0.02);
+        for _ in 0..n {
+            let u = rng.f64();
+            // strictly above the bucket floor so cumulative cut-point
+            // counts (`size > cut`) stay exact after u64 truncation
+            let size = (lo + 1.0) + (hi - lo - 1.0) * u.powf(k);
+            sizes.push(size.max(1.0) as u64);
+        }
+    }
+    rng.shuffle(&mut sizes);
+    sizes
+}
+
+/// A census row: files and bytes above a cut point.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CensusRow {
+    pub label: String,
+    pub cut_bytes: f64,
+    pub files: u64,
+    pub file_pct: f64,
+    pub gigabytes: f64,
+    pub byte_pct: f64,
+}
+
+/// The recomputed Table 1.
+#[derive(Debug, Clone)]
+pub struct Census {
+    pub rows: Vec<CensusRow>,
+    pub total_files: u64,
+    pub total_gb: f64,
+}
+
+/// Recompute the paper's cumulative table from a population.
+pub fn census(sizes: &[u64]) -> Census {
+    let total_files = sizes.len() as u64;
+    let total_bytes: f64 = sizes.iter().map(|&s| s as f64).sum();
+    let rows = PAPER_TABLE1
+        .iter()
+        .map(|(label, cut, _, _)| {
+            let files = sizes.iter().filter(|&&s| s as f64 > *cut).count() as u64;
+            let bytes: f64 = sizes.iter().filter(|&&s| s as f64 > *cut).map(|&s| s as f64).sum();
+            CensusRow {
+                label: label.to_string(),
+                cut_bytes: *cut,
+                files,
+                file_pct: 100.0 * files as f64 / total_files.max(1) as f64,
+                gigabytes: bytes / GIB_DECIMAL,
+                byte_pct: 100.0 * bytes / total_bytes.max(1.0),
+            }
+        })
+        .collect();
+    Census { rows, total_files, total_gb: total_bytes / GIB_DECIMAL }
+}
+
+/// Materialize a population into a file store under `root` (used by the
+/// e2e example's scratch space). Contents are zero-filled for speed; set
+/// `fill` for pseudorandom bytes.
+pub fn populate(
+    fs: &mut FileStore,
+    root: &str,
+    sizes: &[u64],
+    fill: bool,
+    seed: u64,
+) -> FsResult<()> {
+    let mut rng = Rng::new(seed);
+    let now = VirtualTime::ZERO;
+    fs.mkdir_p(root, now)?;
+    for (i, &size) in sizes.iter().enumerate() {
+        let dir = format!("{root}/job{:03}", i % 97);
+        fs.mkdir_p(&dir, now)?;
+        let mut data = vec![0u8; size as usize];
+        if fill {
+            rng.fill_bytes(&mut data);
+        }
+        fs.write(&format!("{dir}/out{i:06}.dat"), &data, now)?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_sum_to_paper_totals() {
+        let files: u64 = BUCKETS.iter().map(|b| b.2).sum();
+        let gb: f64 = BUCKETS.iter().map(|b| b.3).sum();
+        assert_eq!(files, PAPER_TOTAL_FILES);
+        assert!((gb - PAPER_TOTAL_GB).abs() < 0.01, "{gb}");
+    }
+
+    #[test]
+    fn full_scale_census_matches_paper_rows() {
+        let sizes = generate_sizes(&SizeDistParams::default(), 1);
+        assert_eq!(sizes.len() as u64, PAPER_TOTAL_FILES);
+        let c = census(&sizes);
+        for (row, (label, _, files, gb)) in c.rows.iter().zip(PAPER_TABLE1.iter()) {
+            assert_eq!(&row.label, label);
+            // counts exact by construction
+            assert_eq!(row.files, *files, "{label}");
+            // bytes within 12% per cumulative row (sampling noise)
+            let rel = (row.gigabytes - gb).abs() / gb;
+            assert!(rel < 0.12, "{label}: got {} GB want {} GB", row.gigabytes, gb);
+        }
+        // headline skew: >1 MiB files are ~9% of files, >97% of bytes
+        let m1 = &c.rows[5];
+        assert!((m1.file_pct - 9.0).abs() < 1.0, "{}", m1.file_pct);
+        assert!(m1.byte_pct > 97.0, "{}", m1.byte_pct);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let p = SizeDistParams { scale: 0.01 };
+        assert_eq!(generate_sizes(&p, 9), generate_sizes(&p, 9));
+        assert_ne!(generate_sizes(&p, 9), generate_sizes(&p, 10));
+    }
+
+    #[test]
+    fn scaled_population() {
+        let sizes = generate_sizes(&SizeDistParams { scale: 0.001 }, 3);
+        // every bucket contributes at least one file at tiny scales
+        assert!(sizes.len() >= 9);
+        let c = census(&sizes);
+        assert!(c.total_gb > 0.0);
+    }
+
+    #[test]
+    fn populate_writes_files() {
+        let mut fs = FileStore::default();
+        let sizes = vec![100, 2000, 50_000];
+        populate(&mut fs, "/scratch", &sizes, false, 1).unwrap();
+        let walked = fs.walk("/scratch").unwrap();
+        let files: Vec<_> = walked.iter().filter(|(p, _)| p.ends_with(".dat")).collect();
+        assert_eq!(files.len(), 3);
+        let total: u64 = files.iter().map(|(_, a)| a.size).sum();
+        assert_eq!(total, 52_100);
+    }
+}

@@ -1,0 +1,386 @@
+//! Property tests on the coordinator invariants (DESIGN.md §6), using the
+//! in-crate prop harness (`xufs::util::prop` — the offline stand-in for
+//! proptest). Each property runs hundreds of seeded random cases; failures
+//! report the seed.
+
+use std::sync::Arc;
+
+use xufs::client::{OpenFlags, ServerLink, Vfs, WritebackMode};
+use xufs::config::XufsConfig;
+use xufs::coordinator::SimWorld;
+use xufs::homefs::FileStore;
+use xufs::lease::{Acquire, LockTable};
+use xufs::metaq::MetaQueue;
+use xufs::metrics::Metrics;
+use xufs::proto::{LockKind, MetaOp, Request, Response};
+use xufs::runtime::{block_byte_sizes, DigestEngine};
+use xufs::simnet::VirtualTime;
+use xufs::util::{prop, Rng};
+use xufs::{prop_assert, prop_assert_eq};
+
+fn t(s: f64) -> VirtualTime {
+    VirtualTime::from_secs(s)
+}
+
+/// Random mutating op over a small path universe.
+fn random_op(rng: &mut Rng) -> MetaOp {
+    let path = format!("/home/u/f{}", rng.below(6));
+    match rng.below(6) {
+        0 => MetaOp::Mkdir { path: format!("/home/u/d{}", rng.below(3)) },
+        1 => MetaOp::Create { path },
+        2 => {
+            let mut data = vec![0u8; rng.range(1, 4096) as usize];
+            rng.fill_bytes(&mut data);
+            MetaOp::WriteFull { path, data, digests: vec![] }
+        }
+        3 => MetaOp::Truncate { path, size: rng.below(2048) },
+        4 => MetaOp::SetMode { path, mode: 0o600 | (rng.below(0o77) as u32) },
+        _ => MetaOp::Unlink { path },
+    }
+}
+
+/// Apply an op directly to a reference store, mirroring server semantics
+/// (errors ignored — the server drops semantically failing replays too).
+fn apply_ref(fs: &mut FileStore, op: &MetaOp, now: VirtualTime) {
+    let _ = match op {
+        MetaOp::Mkdir { path } => fs.mkdir_p(path, now).map(|_| ()),
+        MetaOp::Create { path } => match fs.create(path, now) {
+            Ok(_) => Ok(()),
+            Err(_) => Ok(()),
+        },
+        MetaOp::WriteFull { path, data, .. } => fs.write(path, data, now),
+        MetaOp::Truncate { path, size } => fs.truncate(path, *size, now),
+        MetaOp::SetMode { path, mode } => fs.set_mode(path, *mode, now),
+        MetaOp::Unlink { path } => fs.unlink(path, now),
+        _ => Ok(()),
+    };
+}
+
+#[test]
+fn prop_queue_replay_is_idempotent_and_ordered() {
+    // A crashed client's persisted queue, replayed (possibly with
+    // duplicate deliveries), must leave the home space exactly as an
+    // uncrashed client would have.
+    prop::check(60, |rng, size| {
+        let mut cfg = XufsConfig::default();
+        cfg.seed = rng.next_u64();
+        let mut world = SimWorld::new(cfg);
+        world.home(|s| {
+            s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        });
+        let mut reference = world.home(|s| s.home().clone());
+
+        let n_ops = 1 + rng.below(size as u64 * 2) as usize;
+        let ops: Vec<MetaOp> = (0..n_ops).map(|_| random_op(rng)).collect();
+
+        // reference: ops applied in order, once
+        for op in &ops {
+            apply_ref(&mut reference, op, t(1.0));
+        }
+
+        // system under test: queue everything, then replay with random
+        // duplicate deliveries (ship is idempotent per seq)
+        let mut client = world.mount("/home/u").map_err(|e| e.to_string())?;
+        client.writeback = WritebackMode::Async;
+        client.async_flush_threshold = usize::MAX;
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        for op in &ops {
+            q.append(&mut store, op.clone(), t(1.0)).map_err(|e| e.to_string())?;
+        }
+        for (seq, op) in q.pending().to_vec() {
+            let deliveries = 1 + rng.below(2);
+            for _ in 0..deliveries {
+                let resp = client.link_mut().ship(seq, &op).map_err(|e| e.to_string())?;
+                prop_assert!(matches!(resp, Response::Applied { .. } | Response::Err { .. }),
+                    "unexpected response {resp:?}");
+            }
+        }
+
+        // compare home spaces: same paths, same contents
+        let got = world.home(|s| s.home().clone());
+        let want_walk = reference.walk("/home/u").map_err(|e| e.to_string())?;
+        let got_walk = got.walk("/home/u").map_err(|e| e.to_string())?;
+        let wp: Vec<&String> = want_walk.iter().map(|(p, _)| p).collect();
+        let gp: Vec<&String> = got_walk.iter().map(|(p, _)| p).collect();
+        prop_assert_eq!(wp, gp);
+        for (p, a) in &want_walk {
+            if a.kind == xufs::homefs::NodeKind::File {
+                prop_assert_eq!(reference.read(p).unwrap(), got.read(p).unwrap());
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_last_close_wins() {
+    // Two clients overwrite the same file; whoever closes last defines
+    // the home-space content, regardless of open/write interleaving.
+    prop::check(40, |rng, _size| {
+        let mut world = SimWorld::new(XufsConfig::default());
+        world.home(|s| {
+            s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+            s.home_mut().write("/home/u/shared", b"orig", t(0.0)).unwrap();
+        });
+        let mut a = world.mount("/home/u").map_err(|e| e.to_string())?;
+        let mut b = world.mount("/home/u").map_err(|e| e.to_string())?;
+
+        let fa = a.open("/home/u/shared", OpenFlags::wronly_create()).map_err(|e| e.to_string())?;
+        let fb = b.open("/home/u/shared", OpenFlags::wronly_create()).map_err(|e| e.to_string())?;
+        // interleave writes randomly
+        for _ in 0..rng.range(1, 6) {
+            if rng.chance(0.5) {
+                a.write(fa, b"AAAA").map_err(|e| e.to_string())?;
+            } else {
+                b.write(fb, b"BBBB").map_err(|e| e.to_string())?;
+            }
+        }
+        a.write(fa, b"-from-a").map_err(|e| e.to_string())?;
+        b.write(fb, b"-from-b").map_err(|e| e.to_string())?;
+        // random close order — last close wins
+        let a_last = rng.chance(0.5);
+        if a_last {
+            b.close(fb).map_err(|e| e.to_string())?;
+            a.close(fa).map_err(|e| e.to_string())?;
+        } else {
+            a.close(fa).map_err(|e| e.to_string())?;
+            b.close(fb).map_err(|e| e.to_string())?;
+        }
+        let home = world.home(|s| s.home().read("/home/u/shared").unwrap().to_vec());
+        let suffix: &[u8] = if a_last { b"-from-a" } else { b"-from-b" };
+        prop_assert!(home.ends_with(suffix), "home={:?} a_last={a_last}", String::from_utf8_lossy(&home));
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_disconnected_ops_never_block_on_network() {
+    // once content is cached, reads/writes/closes during an outage
+    // succeed locally and queue their effects
+    prop::check(40, |rng, size| {
+        let mut cfg = XufsConfig::default();
+        cfg.seed = rng.next_u64();
+        let mut world = SimWorld::new(cfg);
+        let n_files = 1 + rng.below(size as u64).min(8);
+        world.home(|s| {
+            s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+            for i in 0..n_files {
+                let mut data = vec![0u8; rng.range(16, 100_000) as usize];
+                rng.fill_bytes(&mut data);
+                s.home_mut().write(&format!("/home/u/f{i}"), &data, t(0.0)).unwrap();
+            }
+        });
+        let mut c = world.mount("/home/u").map_err(|e| e.to_string())?;
+        // cache everything while online
+        for i in 0..n_files {
+            c.scan_file(&format!("/home/u/f{i}"), 65536).map_err(|e| e.to_string())?;
+        }
+        c.link_mut().set_network(false);
+        let wan_rpcs_before = world.wan.stats().rpcs;
+        // random offline ops must all succeed
+        for _ in 0..rng.range(2, 12) {
+            let i = rng.below(n_files);
+            match rng.below(3) {
+                0 => {
+                    c.scan_file(&format!("/home/u/f{i}"), 65536).map_err(|e| e.to_string())?;
+                }
+                1 => {
+                    c.write_file(&format!("/home/u/f{i}"), b"offline edit", 4096)
+                        .map_err(|e| e.to_string())?;
+                }
+                _ => {
+                    c.stat(&format!("/home/u/f{i}")).map_err(|e| e.to_string())?;
+                }
+            }
+        }
+        prop_assert_eq!(world.wan.stats().rpcs, wan_rpcs_before);
+        // reconnect drains the queue
+        c.link_mut().set_network(true);
+        c.link_mut().reconnect().map_err(|e| e.to_string())?;
+        c.fsync().map_err(|e| e.to_string())?;
+        prop_assert_eq!(c.queue_len(), 0);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_lock_table_safety() {
+    // never two concurrent exclusive holders on one path; shared locks
+    // never coexist with an exclusive one
+    prop::check(120, |rng, size| {
+        let mut lt = LockTable::new(5.0);
+        let mut now = 0.0f64;
+        let mut held: Vec<(u64, String, LockKind, u64, f64)> = Vec::new(); // token,path,kind,owner,expiry
+        for _ in 0..(size * 4).max(8) {
+            now += rng.f64() * 2.0;
+            held.retain(|h| h.4 > now);
+            let path = format!("/f{}", rng.below(3));
+            let owner = 1 + rng.below(4);
+            let kind = if rng.chance(0.5) { LockKind::Exclusive } else { LockKind::Shared };
+            match rng.below(3) {
+                0 => match lt.acquire(&path, kind, owner, t(now)) {
+                    Acquire::Granted { token, lease } => {
+                        held.push((token, path.clone(), kind, owner, lease.as_secs()));
+                    }
+                    Acquire::Denied { .. } => {}
+                },
+                1 => {
+                    if let Some(h) = held.last().cloned() {
+                        if lt.renew(h.0, h.3, t(now)).is_some() {
+                            held.last_mut().unwrap().4 = now + 5.0;
+                        }
+                    }
+                }
+                _ => {
+                    if !held.is_empty() {
+                        let i = rng.below(held.len() as u64) as usize;
+                        let h = held.remove(i);
+                        lt.release(h.0, h.3);
+                    }
+                }
+            }
+            // safety check over live (unexpired) locks per path
+            for path in ["/f0", "/f1", "/f2"] {
+                let live: Vec<_> = held
+                    .iter()
+                    .filter(|h| h.1 == path && h.4 > now)
+                    .collect();
+                let excl_owners: std::collections::BTreeSet<u64> = live
+                    .iter()
+                    .filter(|h| h.2 == LockKind::Exclusive)
+                    .map(|h| h.3)
+                    .collect();
+                prop_assert!(excl_owners.len() <= 1, "two exclusive owners on {path}: {excl_owners:?}");
+                if !excl_owners.is_empty() {
+                    let others = live
+                        .iter()
+                        .filter(|h| h.2 == LockKind::Shared && !excl_owners.contains(&h.3))
+                        .count();
+                    prop_assert!(others == 0, "shared+exclusive mix on {path}");
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_stripe_plan_invariants() {
+    let engine = DigestEngine::native(Metrics::new());
+    prop::check(150, |rng, size| {
+        let block = 4096usize;
+        let n_blocks = 1 + rng.below(size as u64 * 2) as usize;
+        let data_len = (n_blocks - 1) * block + 1 + rng.below(block as u64 - 1) as usize;
+        let mut data = vec![0u8; data_len];
+        rng.fill_bytes(&mut data);
+        let mut old = engine.digests(&data, block);
+        // flip a random subset to dirty
+        let mut expect_dirty = vec![false; old.len()];
+        for (i, d) in expect_dirty.iter_mut().enumerate() {
+            if rng.chance(0.3) {
+                old[i] ^= 1;
+                *d = true;
+            }
+        }
+        let stripes = 1 + rng.below(12) as usize;
+        let plan = engine.plan(&data, &old, block, stripes);
+        prop_assert_eq!(plan.dirty, expect_dirty);
+        // clean blocks unassigned; dirty in [0, stripes); ids non-decreasing
+        let mut last = -1i32;
+        for (i, &s) in plan.stripe.iter().enumerate() {
+            if plan.dirty[i] {
+                prop_assert!(s >= 0 && (s as usize) < stripes, "block {i} stripe {s}");
+                prop_assert!(s >= last, "stripe ids must be non-decreasing");
+                last = s;
+            } else {
+                prop_assert_eq!(s, -1);
+            }
+        }
+        // stripe payloads balanced within one block size
+        if stripes > 1 && plan.dirty_blocks() > 0 {
+            let sizes = block_byte_sizes(data_len, block, plan.digests.len());
+            let mut loads = vec![0u64; stripes];
+            for (i, &s) in plan.stripe.iter().enumerate() {
+                if s >= 0 {
+                    loads[s as usize] += sizes[i] as u64;
+                }
+            }
+            let used: Vec<u64> = loads.iter().copied().filter(|&l| l > 0).collect();
+            if used.len() > 1 {
+                let max = *used.iter().max().unwrap();
+                let min = *used.iter().min().unwrap();
+                prop_assert!(max - min <= 2 * block as u64, "unbalanced: {loads:?}");
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_codec_fuzz_never_panics_and_roundtrips() {
+    prop::check(300, |rng, size| {
+        // random garbage must decode to Err, never panic
+        let mut junk = vec![0u8; rng.below(size as u64 * 8 + 2) as usize];
+        rng.fill_bytes(&mut junk);
+        let _ = Request::decode(&junk);
+        let _ = Response::decode(&junk);
+        let _ = MetaOp::decode(&junk);
+        // random valid messages roundtrip
+        let op = random_op(rng);
+        prop_assert_eq!(MetaOp::decode(&op.encode()).unwrap(), op);
+        let req = Request::Apply { seq: rng.next_u64(), op: random_op(rng) };
+        prop_assert_eq!(Request::decode(&req.encode()).unwrap(), req);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cache_recovery_preserves_index() {
+    // CacheSpace::recover over a random populated cache reproduces the
+    // index (state machine of install/dirty/invalidate)
+    prop::check(60, |rng, size| {
+        use xufs::cache::{CacheSpace, EntryState};
+        use xufs::homefs::NodeKind;
+        use xufs::proto::WireAttr;
+        let mut c = CacheSpace::new(u64::MAX, vec![]);
+        let n = 1 + rng.below(size as u64).min(12);
+        let mut expected: Vec<(String, EntryState, u64)> = Vec::new();
+        for i in 0..n {
+            let p = format!("/home/u/f{i}");
+            let mut data = vec![0u8; rng.range(1, 5000) as usize];
+            rng.fill_bytes(&mut data);
+            let version = rng.range(1, 50);
+            let attr = WireAttr {
+                kind: NodeKind::File,
+                size: data.len() as u64,
+                mtime_ns: 0,
+                mode: 0o600,
+                version,
+            };
+            c.install(&p, &data, version, vec![i as i32], attr, t(1.0)).map_err(|e| e.to_string())?;
+            let state = match rng.below(3) {
+                0 => {
+                    c.store_mut().write(&p, b"dirty", t(2.0)).map_err(|e| e.to_string())?;
+                    c.mark_dirty(&p, vec![-1], t(2.0)).map_err(|e| e.to_string())?;
+                    EntryState::Dirty
+                }
+                1 => {
+                    c.invalidate(&p, t(2.0));
+                    EntryState::Invalid
+                }
+                _ => EntryState::Clean,
+            };
+            expected.push((p, state, version));
+        }
+        let recovered = CacheSpace::recover(c.store().clone(), u64::MAX, vec![], t(9.0));
+        for (p, state, version) in expected {
+            let e = recovered.entry(&p).ok_or(format!("lost {p}"))?;
+            prop_assert_eq!(e.state, state);
+            if state == EntryState::Clean {
+                prop_assert_eq!(e.version, version);
+            }
+        }
+        Ok(())
+    });
+}

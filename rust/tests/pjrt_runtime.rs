@@ -1,0 +1,110 @@
+//! PJRT runtime integration: the AOT HLO artifacts produced by
+//! `python/compile/aot.py` must execute via the rust PJRT client and agree
+//! **bit-for-bit** with the native digest engine (which is itself pinned
+//! by golden vectors shared with the python tests).
+//!
+//! Skipped gracefully when `artifacts/` hasn't been built yet (run
+//! `make artifacts` first); CI always builds them.
+
+use xufs::metrics::Metrics;
+use xufs::runtime::{block_byte_sizes, DigestEngine};
+use xufs::util::Rng;
+
+fn engines() -> Option<(DigestEngine, DigestEngine)> {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("artifacts/ not built; skipping PJRT tests");
+        return None;
+    }
+    let pjrt = DigestEngine::from_artifacts("artifacts", Metrics::new()).expect("load artifacts");
+    assert!(pjrt.is_pjrt(), "manifest present but PJRT engine not constructed");
+    Some((pjrt, DigestEngine::native(Metrics::new())))
+}
+
+#[test]
+fn digests_match_native_exact_variant_shapes() {
+    let Some((pjrt, native)) = engines() else { return };
+    let mut rng = Rng::new(42);
+    // exactly 64 blocks x 64 KiB: hits the big digest variant
+    let mut data = vec![0u8; 64 * 65536];
+    rng.fill_bytes(&mut data);
+    assert_eq!(pjrt.digests_via_pjrt(&data, 65536).unwrap(), native.digests(&data, 65536));
+    // exactly 16 blocks x 4 KiB: the small-block variant
+    let mut small = vec![0u8; 16 * 4096];
+    rng.fill_bytes(&mut small);
+    assert_eq!(pjrt.digests_via_pjrt(&small, 4096).unwrap(), native.digests(&small, 4096));
+}
+
+#[test]
+fn digests_match_native_ragged_sizes() {
+    let Some((pjrt, native)) = engines() else { return };
+    let mut rng = Rng::new(43);
+    for size in [0usize, 1, 4095, 65536, 65537, 700_001, 5 << 20] {
+        let mut data = vec![0u8; size];
+        rng.fill_bytes(&mut data);
+        assert_eq!(
+            pjrt.digests_via_pjrt(&data, 65536).unwrap(),
+            native.digests(&data, 65536),
+            "size {size}"
+        );
+    }
+}
+
+#[test]
+fn fused_plan_variant_matches_native() {
+    let Some((pjrt, native)) = engines() else { return };
+    let mut rng = Rng::new(44);
+    // exactly the plan_16x1024_s12 geometry: 16 blocks x 4 KiB, 12 stripes
+    let mut data = vec![0u8; 16 * 4096];
+    rng.fill_bytes(&mut data);
+    let old = native.digests(&data, 4096);
+    // dirty three blocks
+    data[0] ^= 1;
+    data[5 * 4096] ^= 1;
+    data[15 * 4096] ^= 1;
+    let p = pjrt.plan(&data, &old, 4096, 12);
+    let n = native.plan(&data, &old, 4096, 12);
+    assert_eq!(p.digests, n.digests);
+    assert_eq!(p.dirty, n.dirty);
+    assert_eq!(p.stripe, n.stripe);
+    assert_eq!(p.dirty_blocks(), 3);
+}
+
+#[test]
+fn plan_arbitrary_geometry_matches_native() {
+    let Some((pjrt, native)) = engines() else { return };
+    let mut rng = Rng::new(45);
+    let mut data = vec![0u8; 3 * 65536 + 777];
+    rng.fill_bytes(&mut data);
+    let old = native.digests(&data, 65536);
+    data[100_000] ^= 0xFF;
+    let p = pjrt.plan(&data, &old, 65536, 12);
+    let n = native.plan(&data, &old, 65536, 12);
+    assert_eq!(p, n);
+    assert_eq!(p.dirty, vec![false, true, false, false]);
+}
+
+#[test]
+fn corruption_detection_through_pjrt() {
+    let Some((pjrt, _)) = engines() else { return };
+    let mut rng = Rng::new(46);
+    let mut data = vec![0u8; 64 * 65536];
+    rng.fill_bytes(&mut data);
+    let base = pjrt.digests_via_pjrt(&data, 65536).unwrap();
+    for _ in 0..8 {
+        let byte = rng.below(data.len() as u64) as usize;
+        let bit = 1u8 << rng.below(8);
+        data[byte] ^= bit;
+        let got = pjrt.digests_via_pjrt(&data, 65536).unwrap();
+        let block = byte / 65536;
+        assert_ne!(got[block], base[block], "corruption at byte {byte} missed");
+        data[byte] ^= bit; // restore
+    }
+}
+
+#[test]
+fn block_sizes_used_by_plan_are_consistent() {
+    let sizes = block_byte_sizes(16 * 4096, 4096, 16);
+    assert!(sizes.iter().all(|&s| s == 4096));
+    let ragged = block_byte_sizes(10_000, 4096, 3);
+    assert_eq!(ragged, vec![4096, 4096, 1808]);
+}

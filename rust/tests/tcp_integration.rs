@@ -1,0 +1,248 @@
+//! Integration tests: the full XUFS stack over REAL TCP sockets — USSH
+//! challenge-response, striped range fetches, push-mode callbacks,
+//! meta-op replay and crash recovery, exactly as the e2e example runs it.
+
+use std::sync::{Arc, Mutex};
+
+use xufs::auth::{self, Authenticator, KeyPair};
+use xufs::client::{OpenFlags, ServerLink, Vfs, XufsClient};
+use xufs::config::XufsConfig;
+use xufs::coordinator::net::{TcpLink, TcpServer};
+use xufs::homefs::FileStore;
+use xufs::metrics::Metrics;
+use xufs::proto::{Request, Response};
+use xufs::runtime::DigestEngine;
+use xufs::server::FileServer;
+use xufs::simnet::{RealClock, VirtualTime};
+use xufs::util::Rng;
+use xufs::vdisk::DiskModel;
+
+struct Rig {
+    tcp: TcpServer,
+    server: Arc<Mutex<FileServer>>,
+    pair: KeyPair,
+    cfg: XufsConfig,
+    engine: Arc<DigestEngine>,
+    metrics: Metrics,
+}
+
+fn rig(files: &[(&str, Vec<u8>)]) -> Rig {
+    let metrics = Metrics::new();
+    let engine = Arc::new(DigestEngine::native(metrics.clone()));
+    let mut rng = Rng::new(1234);
+    let pair = KeyPair::generate(&mut rng, VirtualTime::ZERO, 3600.0);
+    let mut home = FileStore::default();
+    home.mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+    for (p, d) in files {
+        home.mkdir_p(&xufs::util::path::parent(p), VirtualTime::ZERO).unwrap();
+        home.write(p, d, VirtualTime::ZERO).unwrap();
+    }
+    let server = Arc::new(Mutex::new(FileServer::new(
+        home,
+        DiskModel::new(1e12, 0.0),
+        engine.clone(),
+        64 * 1024,
+        2.0, // short leases so orphan expiry is testable
+        metrics.clone(),
+    )));
+    let auth = Arc::new(Mutex::new(Authenticator::new(pair.clone(), 77)));
+    let tcp = TcpServer::spawn(server.clone(), auth, metrics.clone()).expect("bind");
+    let cfg = XufsConfig::default();
+    Rig { tcp, server, pair, cfg, engine, metrics }
+}
+
+impl Rig {
+    fn client(&self, id: u64) -> XufsClient<TcpLink> {
+        let link = TcpLink::connect(
+            self.tcp.addr,
+            self.pair.clone(),
+            self.cfg.clone(),
+            id,
+            "/home/u",
+            self.metrics.clone(),
+        )
+        .expect("connect");
+        XufsClient::new(
+            link,
+            self.cfg.clone(),
+            self.engine.clone(),
+            Arc::new(RealClock::new()),
+            "/home/u",
+            self.metrics.clone(),
+        )
+    }
+}
+
+#[test]
+fn striped_fetch_is_bit_exact() {
+    let mut rng = Rng::new(5);
+    let mut big = vec![0u8; 8 << 20];
+    rng.fill_bytes(&mut big);
+    let r = rig(&[("/home/u/big.bin", big.clone())]);
+    let mut c = r.client(1);
+    let fd = c.open("/home/u/big.bin", OpenFlags::rdonly()).unwrap();
+    let mut got = Vec::new();
+    loop {
+        let chunk = c.read(fd, 1 << 20).unwrap();
+        if chunk.is_empty() {
+            break;
+        }
+        got.extend(chunk);
+    }
+    c.close(fd).unwrap();
+    assert_eq!(got.len(), big.len());
+    assert!(got == big, "striped reassembly must be bit-exact");
+}
+
+#[test]
+fn writeback_and_cross_client_callback() {
+    let r = rig(&[("/home/u/doc.txt", b"v1".to_vec())]);
+    let mut a = r.client(1);
+    let mut b = r.client(2);
+    a.scan_file("/home/u/doc.txt", 4096).unwrap();
+    b.scan_file("/home/u/doc.txt", 4096).unwrap();
+    // a writes; the server pushes an invalidation to b
+    a.write_file("/home/u/doc.txt", b"v2 from a", 4096).unwrap();
+    // wait for the push to cross the socket
+    for _ in 0..100 {
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        b.tick();
+        if b.cache().entry("/home/u/doc.txt").map(|e| e.state) != Some(xufs::cache::EntryState::Clean) {
+            break;
+        }
+    }
+    let fd = b.open("/home/u/doc.txt", OpenFlags::rdonly()).unwrap();
+    let fresh = b.read(fd, 64).unwrap();
+    b.close(fd).unwrap();
+    assert_eq!(fresh, b"v2 from a");
+}
+
+#[test]
+fn auth_rejects_wrong_phrase() {
+    let r = rig(&[]);
+    let mut bad_pair = r.pair.clone();
+    bad_pair.phrase[0] ^= 0xFF;
+    let res = TcpLink::connect(
+        r.tcp.addr,
+        bad_pair,
+        r.cfg.clone(),
+        9,
+        "/home/u",
+        r.metrics.clone(),
+    );
+    assert!(res.is_err(), "bad phrase must be rejected");
+    // and a good client still connects fine afterwards
+    let mut c = r.client(1);
+    c.write_file("/home/u/ok.txt", b"fine", 64).unwrap();
+    assert!(r.server.lock().unwrap().home().exists("/home/u/ok.txt"));
+}
+
+#[test]
+fn challenge_response_protocol_level() {
+    // drive the raw protocol: prove() with the right phrase verifies,
+    // replaying the same proof fails (nonce single-use)
+    let mut rng = Rng::new(3);
+    let pair = KeyPair::generate(&mut rng, VirtualTime::ZERO, 60.0);
+    let mut a = Authenticator::new(pair.clone(), 4);
+    let n1 = a.challenge(&pair.key_id);
+    let proof = auth::prove(&pair.phrase, &pair.key_id, &n1);
+    assert!(a.verify_proof(&pair.key_id, &proof, VirtualTime::ZERO).is_some());
+    assert!(a.verify_proof(&pair.key_id, &proof, VirtualTime::ZERO).is_none());
+}
+
+#[test]
+fn client_crash_recovery_over_tcp() {
+    let r = rig(&[("/home/u/base.txt", b"base".to_vec())]);
+    let mut c = r.client(1);
+    c.writeback = xufs::client::WritebackMode::Async;
+    c.write_file("/home/u/wip1.txt", b"work one", 4096).unwrap();
+    c.write_file("/home/u/wip2.txt", b"work two", 4096).unwrap();
+    assert!(c.queue_len() >= 2);
+    assert!(!r.server.lock().unwrap().home().exists("/home/u/wip1.txt"));
+    let snapshot = c.cache_store_snapshot();
+    drop(c); // crash
+
+    let link = TcpLink::connect(r.tcp.addr, r.pair.clone(), r.cfg.clone(), 3, "/home/u", r.metrics.clone())
+        .unwrap();
+    let (c2, corrupt) = XufsClient::recover(
+        link,
+        r.cfg.clone(),
+        r.engine.clone(),
+        Arc::new(RealClock::new()),
+        "/home/u",
+        snapshot,
+        r.metrics.clone(),
+    );
+    assert_eq!(corrupt, 0);
+    assert_eq!(c2.queue_len(), 0, "recovery replays the queue");
+    let s = r.server.lock().unwrap();
+    assert_eq!(s.home().read("/home/u/wip1.txt").unwrap(), b"work one");
+    assert_eq!(s.home().read("/home/u/wip2.txt").unwrap(), b"work two");
+}
+
+#[test]
+fn server_restart_and_reconnect() {
+    let r = rig(&[("/home/u/f.txt", b"hello".to_vec())]);
+    let mut c = r.client(1);
+    c.scan_file("/home/u/f.txt", 4096).unwrap();
+    // server process "crashes" (state except disk lost) and restarts
+    r.server.lock().unwrap().crash();
+    r.server.lock().unwrap().restart();
+    // cached read still fine
+    assert_eq!(c.scan_file("/home/u/f.txt", 4096).unwrap(), 5);
+    // reconnect re-registers the callback channel; writes flow again
+    c.link_mut().reconnect().unwrap();
+    c.write_file("/home/u/after.txt", b"back", 4096).unwrap();
+    assert!(r.server.lock().unwrap().home().exists("/home/u/after.txt"));
+}
+
+#[test]
+fn lock_lease_conflict_and_orphan_expiry_over_tcp() {
+    let r = rig(&[("/home/u/shared.dat", vec![0u8; 128])]);
+    let mut a = r.client(1);
+    let mut b = r.client(2);
+    let fa = a.open("/home/u/shared.dat", OpenFlags::rdwr()).unwrap();
+    a.lock(fa, xufs::proto::LockKind::Exclusive).unwrap();
+    let fb = b.open("/home/u/shared.dat", OpenFlags::rdwr()).unwrap();
+    assert!(b.lock(fb, xufs::proto::LockKind::Exclusive).is_err(), "conflict expected");
+    // a "crashes" without releasing; the 2s lease lapses and b succeeds
+    drop(a);
+    std::thread::sleep(std::time::Duration::from_millis(2300));
+    b.lock(fb, xufs::proto::LockKind::Exclusive).expect("orphaned lock must expire");
+}
+
+#[test]
+fn torn_striped_fetch_detected_via_version() {
+    // a FetchRange with a stale expect_version must be refused
+    let r = rig(&[("/home/u/v.bin", vec![1u8; 256 * 1024])]);
+    let resp = r.server.lock().unwrap().handle(
+        1,
+        Request::FetchRange {
+            path: "/home/u/v.bin".into(),
+            offset: 0,
+            len: 1024,
+            expect_version: 999,
+        },
+        VirtualTime::ZERO,
+    );
+    assert!(matches!(resp, Response::Err { code: 116, .. }), "{resp:?}");
+}
+
+#[test]
+fn prefetch_over_tcp_pulls_directory() {
+    let mut files: Vec<(String, Vec<u8>)> = Vec::new();
+    for i in 0..30 {
+        files.push((format!("/home/u/src/f{i:02}.c"), format!("int x{i};\n").into_bytes()));
+    }
+    let refs: Vec<(&str, Vec<u8>)> = files.iter().map(|(p, d)| (p.as_str(), d.clone())).collect();
+    let r = rig(&refs);
+    let mut c = r.client(1);
+    c.chdir("/home/u/src").unwrap();
+    // all 30 small files prefetched over the worker pool
+    assert_eq!(c.metrics().counter(xufs::metrics::names::PREFETCH_FILES), 30);
+    // and every open afterwards is a cache hit
+    for i in 0..30 {
+        c.scan_file(&format!("/home/u/src/f{i:02}.c"), 4096).unwrap();
+    }
+    assert_eq!(c.metrics().counter(xufs::metrics::names::CACHE_MISSES), 0);
+}
