@@ -225,11 +225,12 @@ fn phase_tcp() {
         .unwrap();
     std::thread::sleep(std::time::Duration::from_millis(100)); // callback pump
     let fd = client.open("/home/sci/small00.txt", OpenFlags::rdonly()).unwrap();
-    let fresh = client.read(fd, 64).unwrap();
+    let mut fresh = [0u8; 64];
+    let n = client.read(fd, &mut fresh).unwrap();
     client.close(fd).unwrap();
     println!(
         "callback   : push invalidation delivered; reopen sees {:?}",
-        String::from_utf8_lossy(&fresh).trim()
+        String::from_utf8_lossy(&fresh[..n]).trim()
     );
 
     // crash recovery over TCP: queue ops offline-style, recover, replay

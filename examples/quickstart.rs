@@ -5,9 +5,10 @@
 //! cargo run --release --example quickstart
 //! ```
 
-use xufs::client::{OpenFlags, ServerLink, Vfs};
+use xufs::client::{MetaBatchOp, OpenFlags, ServerLink, Vfs};
 use xufs::config::XufsConfig;
 use xufs::coordinator::SimWorld;
+use xufs::metrics::names;
 use xufs::simnet::VirtualTime;
 
 fn main() {
@@ -53,26 +54,42 @@ fn main() {
     let home_copy = world.home(|s| s.home().read("/home/alice/proj/results.txt").unwrap().to_vec());
     println!("writeback  : results.txt at home == {:?}", String::from_utf8_lossy(&home_copy).trim());
 
-    // 6. the user edits a file on the laptop -> callback invalidates the
+    // 6. batched metadata (Vfs v2): N meta-ops, one compound WAN round
+    //    trip, per-op status
+    let results = client
+        .batch(&[
+            MetaBatchOp::Mkdir { path: "/home/alice/proj/figs".into() },
+            MetaBatchOp::Stat { path: "/home/alice/proj/input.dat".into() },
+            MetaBatchOp::Stat { path: "/home/alice/proj/notes.txt".into() },
+        ])
+        .unwrap();
+    println!(
+        "batch      : {} meta-ops OK, {} compound round trips so far",
+        results.iter().filter(|r| !r.is_err()).count(),
+        client.metrics().counter(names::COMPOUND_RPCS)
+    );
+
+    // 7. the user edits a file on the laptop -> callback invalidates the
     //    cached copy; next open re-fetches
     world.home(|s| {
         s.local_write("/home/alice/proj/notes.txt", b"edited at home!\n", VirtualTime::from_secs(100.0))
             .unwrap()
     });
     let fd = client.open("/home/alice/proj/notes.txt", OpenFlags::rdonly()).unwrap();
-    let fresh = client.read(fd, 64).unwrap();
+    let mut fresh = [0u8; 64];
+    let n = client.read(fd, &mut fresh).unwrap();
     client.close(fd).unwrap();
     println!(
         "callback   : cached copy invalidated, reopened -> {:?}",
-        String::from_utf8_lossy(&fresh).trim()
+        String::from_utf8_lossy(&fresh[..n]).trim()
     );
 
-    // 7. localized directories never ship home (raw simulation output)
+    // 8. localized directories never ship home (raw simulation output)
     client.write_file("/home/alice/scratch/raw_output.bin", &vec![7u8; 4 << 20], 1 << 20).unwrap();
     let at_home = world.home(|s| s.home().exists("/home/alice/scratch/raw_output.bin"));
     println!("localized  : 4 MiB raw output stayed at the site (at home: {at_home})");
 
-    // 8. disconnected operation: pull the cable, keep working
+    // 9. disconnected operation: pull the cable, keep working
     client.link_mut().set_network(false);
     let n = client.scan_file("/home/alice/proj/input.dat", 1 << 20).unwrap();
     client.write_file("/home/alice/proj/offline_note.txt", b"written offline", 4096).unwrap();

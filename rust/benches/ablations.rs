@@ -1,10 +1,11 @@
 //! Ablations over the design choices DESIGN.md §3 calls out: stripe
 //! count, parallel pre-fetch, digest delta writeback, callback vs
-//! check-on-open consistency, and sync vs async writeback.
+//! check-on-open consistency, sync vs async writeback, and compound vs
+//! per-op meta-queue flushing.
 
 use xufs::bench::{
-    run_ablation_consistency, run_ablation_delta, run_ablation_prefetch, run_ablation_stripes,
-    run_ablation_writeback,
+    run_ablation_compound, run_ablation_consistency, run_ablation_delta, run_ablation_prefetch,
+    run_ablation_stripes, run_ablation_writeback,
 };
 use xufs::config::XufsConfig;
 
@@ -17,4 +18,5 @@ fn main() {
     run_ablation_delta(&cfg, if quick { 16 } else { 64 }).print();
     run_ablation_consistency(&cfg, 3).print();
     run_ablation_writeback(&cfg).print();
+    run_ablation_compound(&cfg).print();
 }

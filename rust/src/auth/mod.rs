@@ -8,13 +8,8 @@
 //! HMAC-SHA256(phrase, nonce ‖ key-id), and the server verifies in
 //! constant time. Nonces are single-use (replay defense); pairs expire.
 
-use hmac::{Hmac, Mac};
-use sha2::Sha256;
-
 use crate::simnet::VirtualTime;
-use crate::util::Rng;
-
-type HmacSha256 = Hmac<Sha256>;
+use crate::util::{hmacsha, Rng};
 
 /// A short-lived `<key, phrase>` credential (paper: generated per login).
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -38,18 +33,13 @@ impl KeyPair {
 
 /// Compute the client-side proof for a challenge.
 pub fn prove(phrase: &[u8; 32], key_id: &str, nonce: &[u8]) -> Vec<u8> {
-    let mut mac = HmacSha256::new_from_slice(phrase).expect("hmac accepts any key length");
-    mac.update(nonce);
-    mac.update(key_id.as_bytes());
-    mac.finalize().into_bytes().to_vec()
+    hmacsha::hmac_sha256(phrase, &[nonce, key_id.as_bytes()]).to_vec()
 }
 
 /// Constant-time proof verification.
 pub fn verify(phrase: &[u8; 32], key_id: &str, nonce: &[u8], proof: &[u8]) -> bool {
-    let mut mac = HmacSha256::new_from_slice(phrase).expect("hmac accepts any key length");
-    mac.update(nonce);
-    mac.update(key_id.as_bytes());
-    mac.verify_slice(proof).is_ok()
+    let expect = hmacsha::hmac_sha256(phrase, &[nonce, key_id.as_bytes()]);
+    hmacsha::ct_eq(&expect, proof)
 }
 
 /// Server-side authenticator: issues single-use challenges and validates

@@ -159,62 +159,66 @@ impl GpfsWan {
 
 impl Vfs for GpfsWan {
     fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd, FsError> {
+        let flags = flags.validate()?;
         let p = self.abs(path);
         let now = self.clock.now();
         // metadata + token acquisition: one WAN round trip
         self.rpc();
         if !self.remote.exists(&p) {
-            if !flags.create {
+            if !flags.is_create() {
                 return Err(FsError::NotFound(p));
             }
             self.remote.mkdir_p(&vpath::parent(&p), now)?;
             self.remote.create(&p, now)?;
-        } else if flags.truncate {
+        } else if flags.is_truncate() {
             self.remote.truncate(&p, 0, now)?;
             self.page_cache.remove(&p);
         }
-        if flags.write {
+        if flags.is_write() {
             // write token revokes other cached copies: extra round trip
             self.rpc();
         }
-        let pos = if flags.append { self.remote.stat(&p)?.size } else { 0 };
+        let pos = if flags.is_append() { self.remote.stat(&p)?.size } else { 0 };
         let fd = self.next_fd;
         self.next_fd += 1;
         self.fds.insert(fd, OpenFile { path: p, pos, flags, undrained: 0 });
         Ok(Fd(fd))
     }
 
-    fn read(&mut self, fd: Fd, len: usize) -> Result<Vec<u8>, FsError> {
+    fn pread(&mut self, fd: Fd, buf: &mut [u8], off: u64) -> Result<usize, FsError> {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
-        let (path, pos) = (f.path.clone(), f.pos);
-        let data = self.timed_read(&path, pos, len)?;
-        self.fds.get_mut(&fd.0).unwrap().pos += data.len() as u64;
-        Ok(data)
+        let path = f.path.clone();
+        let data = self.timed_read(&path, off, buf.len())?;
+        buf[..data.len()].copy_from_slice(&data);
+        Ok(data.len())
     }
 
-    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize, FsError> {
+    fn pwrite(&mut self, fd: Fd, buf: &[u8], off: u64) -> Result<usize, FsError> {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
-        if !f.flags.write {
+        if !f.flags.is_write() {
             return Err(FsError::Perm("fd not open for writing".into()));
         }
-        let (path, pos, undrained) = (f.path.clone(), f.pos, f.undrained);
+        let (path, undrained) = (f.path.clone(), f.undrained);
         let now = self.clock.now();
-        self.remote.write_at(&path, pos, data, now)?;
+        self.remote.write_at(&path, off, buf, now)?;
         // write-behind: absorb at memory speed while the page pool has
         // room, then the application throttles at the drain rate
-        if undrained + (data.len() as u64) <= self.params.pagepool {
-            self.clock.advance_secs(data.len() as f64 / self.params.mem_bps);
-            self.fds.get_mut(&fd.0).unwrap().undrained += data.len() as u64;
+        if undrained + (buf.len() as u64) <= self.params.pagepool {
+            self.clock.advance_secs(buf.len() as f64 / self.params.mem_bps);
+            self.fds.get_mut(&fd.0).unwrap().undrained += buf.len() as u64;
         } else {
-            self.clock.advance_secs(data.len() as f64 / self.params.write_bps);
+            self.clock.advance_secs(buf.len() as f64 / self.params.write_bps);
         }
-        self.fds.get_mut(&fd.0).unwrap().pos += data.len() as u64;
-        Ok(data.len())
+        Ok(buf.len())
     }
 
     fn seek(&mut self, fd: Fd, pos: u64) -> Result<(), FsError> {
         self.fds.get_mut(&fd.0).ok_or(FsError::BadHandle)?.pos = pos;
         Ok(())
+    }
+
+    fn tell(&self, fd: Fd) -> Result<u64, FsError> {
+        self.fds.get(&fd.0).map(|f| f.pos).ok_or(FsError::BadHandle)
     }
 
     fn close(&mut self, fd: Fd) -> Result<(), FsError> {
@@ -226,7 +230,7 @@ impl Vfs for GpfsWan {
             self.clock.advance_secs(f.undrained as f64 / self.params.write_bps);
         }
         self.rpc(); // token release
-        if f.flags.write {
+        if f.flags.is_write() {
             if let Some(c) = self.page_cache.remove(&f.path) {
                 let freed = c.iter().filter(|&&x| x != 0).count() as u64 * self.params.block;
                 self.cached_bytes = self.cached_bytes.saturating_sub(freed);
@@ -371,12 +375,13 @@ mod tests {
     fn reread_within_open_hits_pages() {
         let mut g = gpfs_with(&[("/f", 4 << 20)]);
         let fd = g.open("/f", OpenFlags::rdonly()).unwrap();
+        let mut buf = vec![0u8; 1 << 20];
         let t0 = g.now();
-        while !g.read(fd, 1 << 20).unwrap().is_empty() {}
+        while g.read(fd, &mut buf).unwrap() > 0 {}
         let cold = g.now().saturating_sub(t0).as_secs();
         g.seek(fd, 0).unwrap();
         let t1 = g.now();
-        while !g.read(fd, 1 << 20).unwrap().is_empty() {}
+        while g.read(fd, &mut buf).unwrap() > 0 {}
         let warm = g.now().saturating_sub(t1).as_secs();
         g.close(fd).unwrap();
         assert!(warm < cold / 5.0, "warm={warm} cold={cold}");

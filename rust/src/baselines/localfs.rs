@@ -15,6 +15,7 @@ use crate::vdisk::DiskModel;
 #[derive(Debug)]
 struct OpenFile {
     path: String,
+    /// Sequential cursor backing the `read`/`write` defaults.
     pos: u64,
     flags: OpenFlags,
 }
@@ -42,49 +43,56 @@ impl LocalFs {
 
 impl Vfs for LocalFs {
     fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd, FsError> {
+        let flags = flags.validate()?;
         let p = self.abs(path);
         let now = self.clock.now();
         self.disk.op(self.clock.as_ref());
         if !self.fs.exists(&p) {
-            if !flags.create {
+            if !flags.is_create() {
                 return Err(FsError::NotFound(p));
             }
             self.fs.mkdir_p(&vpath::parent(&p), now)?;
             self.fs.create(&p, now)?;
-        } else if flags.truncate {
+        } else if flags.is_truncate() {
             self.fs.truncate(&p, 0, now)?;
         }
-        let pos = if flags.append { self.fs.stat(&p)?.size } else { 0 };
+        let pos = if flags.is_append() { self.fs.stat(&p)?.size } else { 0 };
         let fd = self.next_fd;
         self.next_fd += 1;
         self.fds.insert(fd, OpenFile { path: p, pos, flags });
         Ok(Fd(fd))
     }
 
-    fn read(&mut self, fd: Fd, len: usize) -> Result<Vec<u8>, FsError> {
+    fn pread(&mut self, fd: Fd, buf: &mut [u8], off: u64) -> Result<usize, FsError> {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
-        let data = self.fs.read_at(&f.path, f.pos, len)?.to_vec();
-        self.disk.io(self.clock.as_ref(), data.len() as u64);
-        self.fds.get_mut(&fd.0).unwrap().pos += data.len() as u64;
-        Ok(data)
+        let n = {
+            let data = self.fs.read_at(&f.path, off, buf.len())?;
+            buf[..data.len()].copy_from_slice(data);
+            data.len()
+        };
+        self.disk.io(self.clock.as_ref(), n as u64);
+        Ok(n)
     }
 
-    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize, FsError> {
+    fn pwrite(&mut self, fd: Fd, buf: &[u8], off: u64) -> Result<usize, FsError> {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
-        if !f.flags.write {
+        if !f.flags.is_write() {
             return Err(FsError::Perm("fd not open for writing".into()));
         }
-        let (path, pos) = (f.path.clone(), f.pos);
+        let path = f.path.clone();
         let now = self.clock.now();
-        self.fs.write_at(&path, pos, data, now)?;
-        self.disk.io(self.clock.as_ref(), data.len() as u64);
-        self.fds.get_mut(&fd.0).unwrap().pos += data.len() as u64;
-        Ok(data.len())
+        self.fs.write_at(&path, off, buf, now)?;
+        self.disk.io(self.clock.as_ref(), buf.len() as u64);
+        Ok(buf.len())
     }
 
     fn seek(&mut self, fd: Fd, pos: u64) -> Result<(), FsError> {
         self.fds.get_mut(&fd.0).ok_or(FsError::BadHandle)?.pos = pos;
         Ok(())
+    }
+
+    fn tell(&self, fd: Fd) -> Result<u64, FsError> {
+        self.fds.get(&fd.0).map(|f| f.pos).ok_or(FsError::BadHandle)
     }
 
     fn close(&mut self, fd: Fd) -> Result<(), FsError> {

@@ -81,12 +81,13 @@ impl NfsClient {
 
 impl Vfs for NfsClient {
     fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd, FsError> {
+        let flags = flags.validate()?;
         let p = self.abs(path);
         let now = self.clock.now();
         let remote_version = self.revalidate(&p)?;
         match remote_version {
             None => {
-                if !flags.create {
+                if !flags.is_create() {
                     return Err(FsError::NotFound(p));
                 }
                 self.remote.mkdir_p(&vpath::parent(&p), now)?;
@@ -98,7 +99,7 @@ impl Vfs for NfsClient {
             Some(v) => {
                 let cached_ok =
                     self.cache_meta.get(&p).map(|r| r.version == v).unwrap_or(false);
-                if !cached_ok && !flags.truncate {
+                if !cached_ok && !flags.is_truncate() {
                     // fetch whole file, striped
                     let data = self.remote.read(&p)?.to_vec();
                     self.wan.transfer(
@@ -111,47 +112,52 @@ impl Vfs for NfsClient {
                     self.cache.mkdir_p(&vpath::parent(&p), now)?;
                     self.cache.write(&p, &data, now)?;
                     self.cache_meta.insert(p.clone(), CacheRec { version: v });
-                } else if flags.truncate {
+                } else if flags.is_truncate() {
                     self.cache.mkdir_p(&vpath::parent(&p), now)?;
                     self.cache.write(&p, &[], now)?;
                     self.cache_meta.insert(p.clone(), CacheRec { version: v });
                 }
             }
         }
-        let pos = if flags.append { self.cache.stat(&p)?.size } else { 0 };
+        let pos = if flags.is_append() { self.cache.stat(&p)?.size } else { 0 };
         let fd = self.next_fd;
         self.next_fd += 1;
         self.fds.insert(fd, OpenFile { path: p, pos, flags, dirty: false });
         Ok(Fd(fd))
     }
 
-    fn read(&mut self, fd: Fd, len: usize) -> Result<Vec<u8>, FsError> {
+    fn pread(&mut self, fd: Fd, buf: &mut [u8], off: u64) -> Result<usize, FsError> {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
-        let (path, pos) = (f.path.clone(), f.pos);
-        let data = self.cache.read_at(&path, pos, len)?.to_vec();
-        self.disk.io(self.clock.as_ref(), data.len() as u64);
-        self.fds.get_mut(&fd.0).unwrap().pos += data.len() as u64;
-        Ok(data)
+        let path = f.path.clone();
+        let n = {
+            let data = self.cache.read_at(&path, off, buf.len())?;
+            buf[..data.len()].copy_from_slice(data);
+            data.len()
+        };
+        self.disk.io(self.clock.as_ref(), n as u64);
+        Ok(n)
     }
 
-    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize, FsError> {
+    fn pwrite(&mut self, fd: Fd, buf: &[u8], off: u64) -> Result<usize, FsError> {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
-        if !f.flags.write {
+        if !f.flags.is_write() {
             return Err(FsError::Perm("fd not open for writing".into()));
         }
-        let (path, pos) = (f.path.clone(), f.pos);
+        let path = f.path.clone();
         let now = self.clock.now();
-        self.cache.write_at(&path, pos, data, now)?;
-        self.disk.io(self.clock.as_ref(), data.len() as u64);
-        let fm = self.fds.get_mut(&fd.0).unwrap();
-        fm.pos += data.len() as u64;
-        fm.dirty = true;
-        Ok(data.len())
+        self.cache.write_at(&path, off, buf, now)?;
+        self.disk.io(self.clock.as_ref(), buf.len() as u64);
+        self.fds.get_mut(&fd.0).unwrap().dirty = true;
+        Ok(buf.len())
     }
 
     fn seek(&mut self, fd: Fd, pos: u64) -> Result<(), FsError> {
         self.fds.get_mut(&fd.0).ok_or(FsError::BadHandle)?.pos = pos;
         Ok(())
+    }
+
+    fn tell(&self, fd: Fd) -> Result<u64, FsError> {
+        self.fds.get(&fd.0).map(|f| f.pos).ok_or(FsError::BadHandle)
     }
 
     fn close(&mut self, fd: Fd) -> Result<(), FsError> {
@@ -307,9 +313,10 @@ mod tests {
         n.scan_file("/f", 1 << 20).unwrap();
         n.remote.write("/f", &vec![9u8; 1 << 20], VirtualTime::from_secs(100.0)).unwrap();
         let fd = n.open("/f", OpenFlags::rdonly()).unwrap();
-        let d = n.read(fd, 16).unwrap();
+        let mut d = [0u8; 16];
+        assert_eq!(n.read(fd, &mut d).unwrap(), 16);
         n.close(fd).unwrap();
-        assert_eq!(d, vec![9u8; 16]);
+        assert_eq!(d, [9u8; 16]);
     }
 
     #[test]

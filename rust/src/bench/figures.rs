@@ -21,7 +21,7 @@ fn cache_disk(cfg: &XufsConfig) -> DiskModel {
 
 /// Fresh XUFS deployment with `files` pre-populated at the home space
 /// under /home/u.
-fn xufs_world(cfg: &XufsConfig, files: &[(&str, Vec<u8>)]) -> (SimWorld, XufsClient<SimLink>) {
+fn xufs_world(cfg: &XufsConfig, files: &[(String, Vec<u8>)]) -> (SimWorld, XufsClient<SimLink>) {
     let mut w = SimWorld::new(cfg.clone());
     w.home(|s| {
         s.home_mut().mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
@@ -34,7 +34,7 @@ fn xufs_world(cfg: &XufsConfig, files: &[(&str, Vec<u8>)]) -> (SimWorld, XufsCli
     (w, c)
 }
 
-fn gpfs_world(cfg: &XufsConfig, files: &[(&str, Vec<u8>)]) -> GpfsWan {
+fn gpfs_world(cfg: &XufsConfig, files: &[(String, Vec<u8>)]) -> GpfsWan {
     let clock = Arc::new(SimClock::new());
     let mut fs = FileStore::default();
     fs.mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
@@ -46,7 +46,7 @@ fn gpfs_world(cfg: &XufsConfig, files: &[(&str, Vec<u8>)]) -> GpfsWan {
     GpfsWan::new(fs, GpfsWanParams::default(), clock)
 }
 
-fn local_world(cfg: &XufsConfig, files: &[(&str, Vec<u8>)]) -> LocalFs {
+fn local_world(cfg: &XufsConfig, files: &[(String, Vec<u8>)]) -> LocalFs {
     let clock = Arc::new(SimClock::new());
     let mut fs = FileStore::default();
     fs.mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
@@ -55,6 +55,23 @@ fn local_world(cfg: &XufsConfig, files: &[(&str, Vec<u8>)]) -> LocalFs {
         fs.write(p, data, VirtualTime::ZERO).unwrap();
     }
     LocalFs::new(fs, cache_disk(cfg), clock)
+}
+
+/// Generate the paper's §4.2 source tree and return its files as
+/// `(path, contents)` pairs for pre-populating a world's home space
+/// (shared by Fig. 4 and every build-workload ablation).
+fn build_tree_files(seed: u64, spec: &buildtree::BuildSpec) -> Vec<(String, Vec<u8>)> {
+    let mut home = FileStore::default();
+    buildtree::generate_tree(&mut home, "/home/u/src", spec, seed).unwrap();
+    home.walk("/home/u/src")
+        .unwrap()
+        .into_iter()
+        .filter(|(_, a)| a.kind == crate::homefs::NodeKind::File)
+        .map(|(p, _)| {
+            let data = home.read(&p).unwrap().to_vec();
+            (p, data)
+        })
+        .collect()
 }
 
 // ---------------------------------------------------------------------
@@ -151,28 +168,16 @@ pub fn run_fig2_fig3(cfg: &XufsConfig, quick: bool) -> (Table, Table) {
 /// Figure 4: clean-make times for 5 consecutive runs on each system.
 pub fn run_fig4(cfg: &XufsConfig, runs: usize) -> Table {
     let spec = buildtree::BuildSpec::default();
-    let mut home = FileStore::default();
-    buildtree::generate_tree(&mut home, "/home/u/src", &spec, cfg.seed).unwrap();
-    let tree: Vec<(String, Vec<u8>)> = home
-        .walk("/home/u/src")
-        .unwrap()
-        .into_iter()
-        .filter(|(_, a)| a.kind == crate::homefs::NodeKind::File)
-        .map(|(p, _)| {
-            let data = home.read(&p).unwrap().to_vec();
-            (p, data)
-        })
-        .collect();
-    let as_refs: Vec<(&str, Vec<u8>)> = tree.iter().map(|(p, d)| (p.as_str(), d.clone())).collect();
+    let tree = build_tree_files(cfg.seed, &spec);
 
     let mut t = Table::new(
         "Figure 4 — build times over consecutive runs (seconds)",
         &["run", "XUFS", "GPFS-WAN", "local GPFS"],
     );
 
-    let (_w, mut xc) = xufs_world(cfg, &as_refs);
-    let mut g = gpfs_world(cfg, &as_refs);
-    let mut l = local_world(cfg, &as_refs);
+    let (_w, mut xc) = xufs_world(cfg, &tree);
+    let mut g = gpfs_world(cfg, &tree);
+    let mut l = local_world(cfg, &tree);
     let mut series = Vec::new();
     for run in 1..=runs {
         let xs = buildtree::build(&mut xc, "/home/u/src", &spec).unwrap();
@@ -200,7 +205,7 @@ pub fn run_fig4(cfg: &XufsConfig, runs: usize) -> Table {
 /// Table 2: the XUFS access time vs TGCP and SCP copy times.
 pub fn run_fig5_table2(cfg: &XufsConfig, runs: usize, gib: u64) -> (Table, Table) {
     let content = largefile::text_content(gib as usize, 80, cfg.seed);
-    let files = [("/home/u/big.txt", content.clone())];
+    let files = [("/home/u/big.txt".to_string(), content)];
 
     let mut fig5 = Table::new(
         "Figure 5 — `wc -l` on a 1 GiB file, consecutive runs (seconds)",
@@ -268,7 +273,7 @@ pub fn run_ablation_stripes(cfg: &XufsConfig, gib: u64) -> Table {
     for stripes in [1usize, 2, 4, 8, 12, 16] {
         let mut c2 = cfg.clone();
         c2.stripe.max_stripes = stripes;
-        let (_w, mut xc) = xufs_world(&c2, &[("/home/u/big.dat", content.clone())]);
+        let (_w, mut xc) = xufs_world(&c2, &[("/home/u/big.dat".to_string(), content.clone())]);
         let t0 = xc.now();
         xc.scan_file("/home/u/big.dat", MIB as usize).unwrap();
         let dt = xc.now().saturating_sub(t0).as_secs();
@@ -288,23 +293,11 @@ pub fn run_ablation_prefetch(cfg: &XufsConfig) -> Table {
         "Ablation — parallel small-file pre-fetch (first clean make)",
         &["prefetch", "build secs", "WAN rpcs", "files prefetched"],
     );
+    let tree = build_tree_files(cfg.seed, &spec);
     for enabled in [true, false] {
         let mut c2 = cfg.clone();
         c2.stripe.prefetch_enabled = enabled;
-        let mut home = FileStore::default();
-        buildtree::generate_tree(&mut home, "/home/u/src", &spec, c2.seed).unwrap();
-        let tree: Vec<(String, Vec<u8>)> = home
-            .walk("/home/u/src")
-            .unwrap()
-            .into_iter()
-            .filter(|(_, a)| a.kind == crate::homefs::NodeKind::File)
-            .map(|(p, _)| {
-                let d = home.read(&p).unwrap().to_vec();
-                (p, d)
-            })
-            .collect();
-        let refs: Vec<(&str, Vec<u8>)> = tree.iter().map(|(p, d)| (p.as_str(), d.clone())).collect();
-        let (w, mut xc) = xufs_world(&c2, &refs);
+        let (w, mut xc) = xufs_world(&c2, &tree);
         let stats = buildtree::build(&mut xc, "/home/u/src", &spec).unwrap();
         t.row(vec![
             enabled.to_string(),
@@ -328,7 +321,7 @@ pub fn run_ablation_delta(cfg: &XufsConfig, file_mib: u64) -> Table {
         let mut c2 = cfg.clone();
         c2.stripe.delta_writeback = enabled;
         let content = vec![0xA7u8; size as usize];
-        let (_w, mut xc) = xufs_world(&c2, &[("/home/u/data.bin", content)]);
+        let (_w, mut xc) = xufs_world(&c2, &[("/home/u/data.bin".to_string(), content)]);
         // cache it (cold fetch)
         xc.scan_file("/home/u/data.bin", MIB as usize).unwrap();
         // edit a single 64 KiB block in place
@@ -352,22 +345,10 @@ pub fn run_ablation_delta(cfg: &XufsConfig, file_mib: u64) -> Table {
 /// Callback consistency vs NFS-style check-on-open: repeated builds.
 pub fn run_ablation_consistency(cfg: &XufsConfig, runs: usize) -> Table {
     let spec = buildtree::BuildSpec::default();
-    let mut home = FileStore::default();
-    buildtree::generate_tree(&mut home, "/home/u/src", &spec, cfg.seed).unwrap();
-    let tree: Vec<(String, Vec<u8>)> = home
-        .walk("/home/u/src")
-        .unwrap()
-        .into_iter()
-        .filter(|(_, a)| a.kind == crate::homefs::NodeKind::File)
-        .map(|(p, _)| {
-            let d = home.read(&p).unwrap().to_vec();
-            (p, d)
-        })
-        .collect();
-    let refs: Vec<(&str, Vec<u8>)> = tree.iter().map(|(p, d)| (p.as_str(), d.clone())).collect();
+    let tree = build_tree_files(cfg.seed, &spec);
 
     // XUFS (callbacks)
-    let (w, mut xc) = xufs_world(cfg, &refs);
+    let (w, mut xc) = xufs_world(cfg, &tree);
     let mut x_total = 0.0;
     for _ in 0..runs {
         let s = buildtree::build(&mut xc, "/home/u/src", &spec).unwrap();
@@ -376,10 +357,13 @@ pub fn run_ablation_consistency(cfg: &XufsConfig, runs: usize) -> Table {
     }
     let x_rpcs = w.wan.stats().rpcs;
 
-    // NFS-style (check on open)
+    // NFS-style (check on open) — same tree, regenerated as its remote
+    // authoritative store (generation is seed-deterministic)
+    let mut home = FileStore::default();
+    buildtree::generate_tree(&mut home, "/home/u/src", &spec, cfg.seed).unwrap();
     let clock = Arc::new(SimClock::new());
     let wan = Arc::new(Wan::new(cfg.wan.clone(), (*clock).clone()));
-    let mut nfs = NfsClient::new(home.clone(), clock, wan.clone(), cache_disk(cfg), cfg.stripe.max_stripes);
+    let mut nfs = NfsClient::new(home, clock, wan.clone(), cache_disk(cfg), cfg.stripe.max_stripes);
     let mut n_total = 0.0;
     for _ in 0..runs {
         let s = buildtree::build(&mut nfs, "/home/u/src", &spec).unwrap();
@@ -402,6 +386,38 @@ pub fn run_ablation_consistency(cfg: &XufsConfig, runs: usize) -> Table {
     t
 }
 
+/// Compound RPC vs per-op meta-queue flush: identical async build (§4.2)
+/// plus the final fsync on each, counting WAN round trips. The per-op
+/// mode is the pre-v2 wire behaviour (one `Request::Apply` round trip per
+/// queued op); compound ships the whole queue as one `Request::Compound`.
+pub fn run_ablation_compound(cfg: &XufsConfig) -> Table {
+    let spec = buildtree::BuildSpec::default();
+    let mut t = Table::new(
+        "Ablation — compound RPC queue flush (async clean make + final fsync)",
+        &["flush mode", "build+sync secs", "WAN rpcs", "compound rpcs", "ops batched"],
+    );
+    let tree = build_tree_files(cfg.seed, &spec);
+    for compound in [true, false] {
+        let (w, mut xc) = xufs_world(cfg, &tree);
+        xc.compound = compound;
+        xc.writeback = WritebackMode::Async;
+        xc.async_flush_threshold = usize::MAX;
+        let t0 = xc.now();
+        buildtree::build(&mut xc, "/home/u/src", &spec).unwrap();
+        xc.fsync().unwrap();
+        let dt = xc.now().saturating_sub(t0).as_secs();
+        t.row(vec![
+            if compound { "compound".into() } else { "per-op".into() },
+            secs(dt),
+            w.wan.stats().rpcs.to_string(),
+            xc.metrics().counter(names::COMPOUND_RPCS).to_string(),
+            xc.metrics().counter(names::COMPOUND_OPS).to_string(),
+        ]);
+    }
+    t.note("compound mode ships the whole meta-op queue in one Request::Compound round trip");
+    t
+}
+
 /// Sync-on-close vs async queue flushing.
 pub fn run_ablation_writeback(cfg: &XufsConfig) -> Table {
     let spec = buildtree::BuildSpec::default();
@@ -409,21 +425,9 @@ pub fn run_ablation_writeback(cfg: &XufsConfig) -> Table {
         "Ablation — writeback mode (clean make incl. final sync)",
         &["mode", "build secs", "final fsync secs"],
     );
+    let tree = build_tree_files(cfg.seed, &spec);
     for mode in [WritebackMode::SyncOnClose, WritebackMode::Async] {
-        let mut home = FileStore::default();
-        buildtree::generate_tree(&mut home, "/home/u/src", &spec, cfg.seed).unwrap();
-        let tree: Vec<(String, Vec<u8>)> = home
-            .walk("/home/u/src")
-            .unwrap()
-            .into_iter()
-            .filter(|(_, a)| a.kind == crate::homefs::NodeKind::File)
-            .map(|(p, _)| {
-                let d = home.read(&p).unwrap().to_vec();
-                (p, d)
-            })
-            .collect();
-        let refs: Vec<(&str, Vec<u8>)> = tree.iter().map(|(p, d)| (p.as_str(), d.clone())).collect();
-        let (_w, mut xc) = xufs_world(cfg, &refs);
+        let (_w, mut xc) = xufs_world(cfg, &tree);
         xc.writeback = mode;
         xc.async_flush_threshold = usize::MAX;
         let stats = buildtree::build(&mut xc, "/home/u/src", &spec).unwrap();
@@ -501,5 +505,23 @@ mod tests {
         let shipped_on: u64 = t.rows[0][2].parse().unwrap();
         let shipped_off: u64 = t.rows[1][2].parse().unwrap();
         assert!(shipped_on * 10 < shipped_off, "delta {shipped_on} vs full {shipped_off}");
+    }
+
+    #[test]
+    fn ablation_compound_cuts_round_trips() {
+        let t = run_ablation_compound(&cfg());
+        // rows: [compound, per-op]
+        let compound_rpcs: u64 = t.rows[0][2].parse().unwrap();
+        let perop_rpcs: u64 = t.rows[1][2].parse().unwrap();
+        assert!(
+            compound_rpcs < perop_rpcs,
+            "compound flush must use fewer WAN round trips ({compound_rpcs} vs {perop_rpcs})"
+        );
+        let batched: u64 = t.rows[0][4].parse().unwrap();
+        assert!(batched > 20, "the whole build queue should batch (got {batched})");
+        let compound_frames: u64 = t.rows[0][3].parse().unwrap();
+        assert!(compound_frames <= 2, "one flush ≈ one compound frame (got {compound_frames})");
+        // the per-op run must not have issued any compound frames
+        assert_eq!(t.rows[1][3], "0");
     }
 }

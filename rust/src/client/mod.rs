@@ -1,4 +1,4 @@
-//! The client side of XUFS: the [`Vfs`] interface (stand-in for the
+//! The client side of XUFS: the [`Vfs`] v2 interface (stand-in for the
 //! `libxufs.so` libc interposition — every interposed call has a 1:1
 //! method here), the [`ServerLink`] transport abstraction, and the
 //! [`XufsClient`] implementation.
@@ -6,7 +6,7 @@
 mod vfs;
 mod xufs;
 
-pub use vfs::{Fd, OpenFlags, Vfs};
+pub use vfs::{Fd, MetaBatchOp, MetaResult, OpenFlags, Vfs};
 pub use xufs::{WritebackMode, XufsClient};
 
 use crate::homefs::FsError;
@@ -28,6 +28,14 @@ pub trait ServerLink {
 
     /// Ship one meta-op (striped when the payload is large).
     fn ship(&mut self, seq: u64, op: &MetaOp) -> Result<Response, FsError>;
+
+    /// Ship a batch of queued meta-ops as ONE compound round trip
+    /// (`Request::Compound`, DESIGN.md §2.3). Returns one [`Response`]
+    /// per op, in order. `Err(Disconnected)` means nothing in the batch
+    /// was acknowledged — the caller restores the whole batch and
+    /// replays after reconnect (server-side idempotence makes the replay
+    /// safe even when the loss was reply-side).
+    fn ship_compound(&mut self, ops: &[(u64, MetaOp)]) -> Result<Vec<Response>, FsError>;
 
     /// Drain pending change notifications from the callback channel.
     fn drain_notifications(&mut self) -> Vec<NotifyEvent>;

@@ -1,11 +1,25 @@
-//! The virtual file-system interface.
+//! The virtual file-system interface (v2).
 //!
 //! In the paper this surface is `libxufs.so`: interposed libc calls
-//! (`open`, `read`, `write`, `close`, `stat`, `opendir`, …) redirected to
-//! cache-space copies. Applications in this reproduction (workloads,
+//! (`open`, `pread`, `pwrite`, `close`, `stat`, `opendir`, …) redirected
+//! to cache-space copies. Applications in this reproduction (workloads,
 //! examples, baselines) are written against this trait instead — the
 //! paper's contribution is what happens *behind* the interposition, and
 //! each interposed call maps 1:1 onto a method here (DESIGN.md §2).
+//!
+//! v2 surface (DESIGN.md §2.1):
+//! * the data-path primitives are **buffer-based positional I/O** —
+//!   [`Vfs::pread`]/[`Vfs::pwrite`] fill/drain caller-owned `&[u8]`
+//!   buffers at explicit offsets, so the hot path never allocates a
+//!   `Vec` per call and striped/zero-copy transfers stay local changes;
+//! * sequential [`Vfs::read`]/[`Vfs::write`] are **default methods** over
+//!   the per-fd cursor ([`Vfs::tell`]/[`Vfs::seek`]);
+//! * [`OpenFlags`] is a validated bitflags type — nonsensical
+//!   combinations (write-intent flags on a read-only open) are rejected
+//!   at `open`, not deep inside a client;
+//! * [`Vfs::batch`] submits a group of metadata operations with per-op
+//!   results; compound-capable clients (XUFS) ship them in one WAN round
+//!   trip (`Request::Compound`, DESIGN.md §2.3).
 
 use crate::homefs::FsError;
 use crate::proto::{LockKind, WireAttr};
@@ -15,47 +29,182 @@ use crate::simnet::VirtualTime;
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Fd(pub u64);
 
-/// Open flags (the subset the workloads exercise).
-#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
-pub struct OpenFlags {
-    pub read: bool,
-    pub write: bool,
-    pub create: bool,
-    pub truncate: bool,
-    pub append: bool,
-}
+/// Validated open flags: a bitflags set over the subset the workloads
+/// exercise. Construct via the `O_*`-shaped constants and `|`, or the
+/// libc-combination constructors; [`OpenFlags::validate`] (called by
+/// every `open`) rejects nonsense combinations up front.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct OpenFlags(u8);
 
 impl OpenFlags {
+    /// Open for reading.
+    pub const READ: OpenFlags = OpenFlags(1 << 0);
+    /// Open for writing.
+    pub const WRITE: OpenFlags = OpenFlags(1 << 1);
+    /// Create if absent (`O_CREAT`).
+    pub const CREATE: OpenFlags = OpenFlags(1 << 2);
+    /// Truncate to zero on open (`O_TRUNC`).
+    pub const TRUNCATE: OpenFlags = OpenFlags(1 << 3);
+    /// Cursor starts at EOF (`O_APPEND`).
+    pub const APPEND: OpenFlags = OpenFlags(1 << 4);
+
+    /// The empty set (invalid to open with; useful as a fold seed).
+    pub fn empty() -> Self {
+        OpenFlags(0)
+    }
+
     /// `O_RDONLY`
     pub fn rdonly() -> Self {
-        OpenFlags { read: true, ..Default::default() }
+        Self::READ
     }
 
     /// `O_WRONLY | O_CREAT | O_TRUNC`
     pub fn wronly_create() -> Self {
-        OpenFlags { write: true, create: true, truncate: true, ..Default::default() }
+        Self::WRITE | Self::CREATE | Self::TRUNCATE
     }
 
     /// `O_RDWR`
     pub fn rdwr() -> Self {
-        OpenFlags { read: true, write: true, ..Default::default() }
+        Self::READ | Self::WRITE
     }
 
     /// `O_WRONLY | O_APPEND`
     pub fn append() -> Self {
-        OpenFlags { write: true, append: true, ..Default::default() }
+        Self::WRITE | Self::APPEND
+    }
+
+    pub fn contains(self, other: OpenFlags) -> bool {
+        self.0 & other.0 == other.0
+    }
+
+    pub fn is_read(self) -> bool {
+        self.contains(Self::READ)
+    }
+
+    pub fn is_write(self) -> bool {
+        self.contains(Self::WRITE)
+    }
+
+    pub fn is_create(self) -> bool {
+        self.contains(Self::CREATE)
+    }
+
+    pub fn is_truncate(self) -> bool {
+        self.contains(Self::TRUNCATE)
+    }
+
+    pub fn is_append(self) -> bool {
+        self.contains(Self::APPEND)
+    }
+
+    /// Reject invalid combinations at `open` time (the v2 contract: no
+    /// implementor discovers bad flags deep inside its data path):
+    /// * at least one of READ/WRITE must be set;
+    /// * CREATE/TRUNCATE/APPEND are write intents — they require WRITE;
+    /// * TRUNCATE and APPEND are mutually exclusive.
+    pub fn validate(self) -> Result<OpenFlags, FsError> {
+        if !self.is_read() && !self.is_write() {
+            return Err(FsError::Invalid("open flags select neither read nor write".into()));
+        }
+        if (self.is_create() || self.is_truncate() || self.is_append()) && !self.is_write() {
+            return Err(FsError::Invalid(
+                "O_CREAT/O_TRUNC/O_APPEND require write access".into(),
+            ));
+        }
+        if self.is_truncate() && self.is_append() {
+            return Err(FsError::Invalid("O_TRUNC and O_APPEND are mutually exclusive".into()));
+        }
+        Ok(self)
     }
 }
 
-/// The interposed file-system interface.
+impl std::ops::BitOr for OpenFlags {
+    type Output = OpenFlags;
+    fn bitor(self, rhs: OpenFlags) -> OpenFlags {
+        OpenFlags(self.0 | rhs.0)
+    }
+}
+
+impl std::ops::BitOrAssign for OpenFlags {
+    fn bitor_assign(&mut self, rhs: OpenFlags) {
+        self.0 |= rhs.0;
+    }
+}
+
+/// One metadata operation submitted through [`Vfs::batch`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetaBatchOp {
+    Mkdir { path: String },
+    Unlink { path: String },
+    Rename { from: String, to: String },
+    Truncate { path: String, size: u64 },
+    Stat { path: String },
+}
+
+/// Per-op outcome of a [`Vfs::batch`] call. A batch call only fails as a
+/// whole on transport-level errors; semantic failures land here so the
+/// caller can replay exactly the ops that failed.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetaResult {
+    /// Mutation applied (or queued for write-back).
+    Done,
+    /// Stat result.
+    Attr(WireAttr),
+    /// This op failed; the rest of the batch still ran.
+    Err(FsError),
+}
+
+impl MetaResult {
+    pub fn is_err(&self) -> bool {
+        matches!(self, MetaResult::Err(_))
+    }
+
+    pub fn attr(&self) -> Option<&WireAttr> {
+        match self {
+            MetaResult::Attr(a) => Some(a),
+            _ => None,
+        }
+    }
+}
+
+impl From<Result<(), FsError>> for MetaResult {
+    fn from(r: Result<(), FsError>) -> MetaResult {
+        match r {
+            Ok(()) => MetaResult::Done,
+            Err(e) => MetaResult::Err(e),
+        }
+    }
+}
+
+/// The interposed file-system interface (v2).
+///
+/// Implementors provide the positional primitives and the per-fd cursor;
+/// sequential I/O, whole-file conveniences and (for non-compound systems)
+/// metadata batching are default methods on top.
 pub trait Vfs {
+    // ------------------------------------------------------------------
+    // required primitives
+    // ------------------------------------------------------------------
+
+    /// Open `path`. Implementations must call [`OpenFlags::validate`]
+    /// before any other work.
     fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd, FsError>;
-    /// Sequential read at the fd's position; returns <= `len` bytes
-    /// (empty at EOF).
-    fn read(&mut self, fd: Fd, len: usize) -> Result<Vec<u8>, FsError>;
-    /// Sequential write at the fd's position.
-    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize, FsError>;
+
+    /// Positional read at `off` into `buf`; returns bytes filled
+    /// (0 at/after EOF, short counts near EOF). Does not move the cursor.
+    fn pread(&mut self, fd: Fd, buf: &mut [u8], off: u64) -> Result<usize, FsError>;
+
+    /// Positional write of `buf` at `off`; returns bytes written (always
+    /// `buf.len()` on success — holes zero-fill). Does not move the
+    /// cursor.
+    fn pwrite(&mut self, fd: Fd, buf: &[u8], off: u64) -> Result<usize, FsError>;
+
+    /// Set the fd's sequential cursor.
     fn seek(&mut self, fd: Fd, pos: u64) -> Result<(), FsError>;
+
+    /// Current sequential cursor.
+    fn tell(&self, fd: Fd) -> Result<u64, FsError>;
+
     fn close(&mut self, fd: Fd) -> Result<(), FsError>;
 
     fn stat(&mut self, path: &str) -> Result<WireAttr, FsError>;
@@ -79,28 +228,90 @@ pub trait Vfs {
     /// in the build workload). Simulated clocks jump; real clocks sleep.
     fn think(&mut self, _secs: f64) {}
 
+    // ------------------------------------------------------------------
+    // sequential I/O: defaults over the per-fd cursor
+    // ------------------------------------------------------------------
+
+    /// Sequential read at the fd's cursor into `buf`; advances the cursor
+    /// by the bytes read. Returns 0 at EOF.
+    fn read(&mut self, fd: Fd, buf: &mut [u8]) -> Result<usize, FsError> {
+        let pos = self.tell(fd)?;
+        let n = self.pread(fd, buf, pos)?;
+        self.seek(fd, pos + n as u64)?;
+        Ok(n)
+    }
+
+    /// Sequential write at the fd's cursor; advances the cursor by the
+    /// bytes written.
+    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize, FsError> {
+        let pos = self.tell(fd)?;
+        let n = self.pwrite(fd, data, pos)?;
+        self.seek(fd, pos + n as u64)?;
+        Ok(n)
+    }
+
+    // ------------------------------------------------------------------
+    // batched metadata
+    // ------------------------------------------------------------------
+
+    /// Run a group of metadata ops, returning one [`MetaResult`] per op
+    /// in order. The default lowers each op onto the single-op methods
+    /// (one round trip each on remote systems); compound-capable clients
+    /// override this to ship the group in one `Request::Compound` WAN
+    /// round trip.
+    fn batch(&mut self, ops: &[MetaBatchOp]) -> Result<Vec<MetaResult>, FsError> {
+        let mut out = Vec::with_capacity(ops.len());
+        for op in ops {
+            let r = match op {
+                MetaBatchOp::Mkdir { path } => self.mkdir(path).into(),
+                MetaBatchOp::Unlink { path } => self.unlink(path).into(),
+                MetaBatchOp::Rename { from, to } => self.rename(from, to).into(),
+                MetaBatchOp::Truncate { path, size } => self.truncate(path, *size).into(),
+                MetaBatchOp::Stat { path } => match self.stat(path) {
+                    Ok(a) => MetaResult::Attr(a),
+                    Err(e) => MetaResult::Err(e),
+                },
+            };
+            out.push(r);
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // whole-file conveniences
+    // ------------------------------------------------------------------
+
     /// Convenience: read a whole file sequentially in `chunk`-byte reads
     /// (the `wc -l` access pattern of §4.3). Returns total bytes read.
+    /// The fd is closed on every path, including read errors.
     fn scan_file(&mut self, path: &str, chunk: usize) -> Result<u64, FsError> {
         let fd = self.open(path, OpenFlags::rdonly())?;
+        let mut buf = vec![0u8; chunk.max(1)];
         let mut total = 0u64;
         loop {
-            let buf = self.read(fd, chunk)?;
-            if buf.is_empty() {
-                break;
+            match self.read(fd, &mut buf) {
+                Ok(0) => break,
+                Ok(n) => total += n as u64,
+                Err(e) => {
+                    let _ = self.close(fd);
+                    return Err(e);
+                }
             }
-            total += buf.len() as u64;
         }
         self.close(fd)?;
         Ok(total)
     }
 
     /// Convenience: create/replace a file with `data` (open-write-close,
-    /// the IOzone write pattern — close cost included).
+    /// the IOzone write pattern — close cost included). The fd is closed
+    /// on every path, including write errors.
     fn write_file(&mut self, path: &str, data: &[u8], chunk: usize) -> Result<(), FsError> {
         let fd = self.open(path, OpenFlags::wronly_create())?;
         for c in data.chunks(chunk.max(1)) {
-            self.write(fd, c)?;
+            if let Err(e) = self.write(fd, c) {
+                let _ = self.close(fd);
+                return Err(e);
+            }
         }
         self.close(fd)
     }
@@ -112,10 +323,65 @@ mod tests {
 
     #[test]
     fn flag_constructors() {
-        assert!(OpenFlags::rdonly().read && !OpenFlags::rdonly().write);
+        assert!(OpenFlags::rdonly().is_read() && !OpenFlags::rdonly().is_write());
         let w = OpenFlags::wronly_create();
-        assert!(w.write && w.create && w.truncate && !w.read);
-        assert!(OpenFlags::rdwr().read && OpenFlags::rdwr().write);
-        assert!(OpenFlags::append().append);
+        assert!(w.is_write() && w.is_create() && w.is_truncate() && !w.is_read());
+        assert!(OpenFlags::rdwr().is_read() && OpenFlags::rdwr().is_write());
+        assert!(OpenFlags::append().is_append() && OpenFlags::append().is_write());
+    }
+
+    #[test]
+    fn valid_combinations_accepted() {
+        for f in [
+            OpenFlags::rdonly(),
+            OpenFlags::wronly_create(),
+            OpenFlags::rdwr(),
+            OpenFlags::append(),
+            OpenFlags::rdwr() | OpenFlags::CREATE,
+        ] {
+            assert_eq!(f.validate(), Ok(f));
+        }
+    }
+
+    #[test]
+    fn invalid_combinations_rejected() {
+        for f in [
+            OpenFlags::empty(),
+            OpenFlags::CREATE,
+            OpenFlags::READ | OpenFlags::TRUNCATE,
+            OpenFlags::READ | OpenFlags::CREATE,
+            OpenFlags::READ | OpenFlags::APPEND,
+            OpenFlags::WRITE | OpenFlags::TRUNCATE | OpenFlags::APPEND,
+        ] {
+            assert!(
+                matches!(f.validate(), Err(FsError::Invalid(_))),
+                "{f:?} should be rejected"
+            );
+        }
+    }
+
+    #[test]
+    fn bitor_accumulates() {
+        let mut f = OpenFlags::empty();
+        f |= OpenFlags::READ;
+        f |= OpenFlags::WRITE;
+        assert!(f.contains(OpenFlags::READ | OpenFlags::WRITE));
+        assert!(!f.contains(OpenFlags::APPEND));
+    }
+
+    #[test]
+    fn meta_result_from_result() {
+        assert_eq!(MetaResult::from(Ok(())), MetaResult::Done);
+        let e: MetaResult = Err::<(), _>(FsError::BadHandle).into();
+        assert!(e.is_err());
+        assert!(MetaResult::Attr(WireAttr {
+            kind: crate::homefs::NodeKind::File,
+            size: 1,
+            mtime_ns: 0,
+            mode: 0o600,
+            version: 1,
+        })
+        .attr()
+        .is_some());
     }
 }

@@ -7,14 +7,14 @@ use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::cache::{CacheSpace, EntryState};
-use crate::client::vfs::{Fd, OpenFlags, Vfs};
+use crate::client::vfs::{Fd, MetaBatchOp, MetaResult, OpenFlags, Vfs};
 use crate::client::ServerLink;
 use crate::config::XufsConfig;
 use crate::homefs::{FsError, NodeKind};
 use crate::lease::LeaseManager;
 use crate::metaq::MetaQueue;
 use crate::metrics::{names, Metrics};
-use crate::proto::{LockKind, MetaOp, NotifyEvent, Request, Response, WireAttr};
+use crate::proto::{CompoundOp, LockKind, MetaOp, NotifyEvent, Request, Response, WireAttr};
 use crate::runtime::DigestEngine;
 use crate::simnet::{Clock, VirtualTime};
 use crate::transfer;
@@ -36,12 +36,30 @@ pub enum WritebackMode {
 #[derive(Debug)]
 struct OpenFile {
     path: String,
+    /// Sequential cursor backing the `read`/`write` default methods;
+    /// `pread`/`pwrite` never touch it.
     pos: u64,
     flags: OpenFlags,
     /// Shadow-file path in the cache store, present for write handles.
     shadow: Option<String>,
     wrote: bool,
     localized: bool,
+}
+
+/// Upper bound on one compound frame's meta-op payload: stays well under
+/// the TCP transport's `MAX_FRAME` and keeps the WAN stripe model honest
+/// for bulk write-backs. A single oversized op still gets its own frame.
+const COMPOUND_MAX_BYTES: u64 = 32 * 1024 * 1024;
+
+/// Outcome of settling one compound reply against the queue.
+enum Settle {
+    /// Applied at the server; queue entry retired.
+    Acked,
+    /// Dropped (semantic server error — the cache keeps the local truth).
+    Dropped,
+    /// Stale delta demoted to a full write and re-queued under a fresh
+    /// sequence number; the next compound round ships it.
+    Requeued,
 }
 
 /// The XUFS client. One per mount (paper: a private user-space server and
@@ -66,6 +84,10 @@ pub struct XufsClient<L: ServerLink> {
     pub writeback: WritebackMode,
     /// Async mode ships the queue once this many ops accumulate.
     pub async_flush_threshold: usize,
+    /// Ship queue flushes as compound RPCs (N ops per WAN round trip,
+    /// DESIGN.md §2.3). Off = one `Request::Apply` round trip per op
+    /// (the pre-v2 behaviour, kept for the ablation bench).
+    pub compound: bool,
 }
 
 impl<L: ServerLink> XufsClient<L> {
@@ -103,6 +125,7 @@ impl<L: ServerLink> XufsClient<L> {
             last_gen: gen,
             writeback: WritebackMode::SyncOnClose,
             async_flush_threshold: 64,
+            compound: true,
         }
     }
 
@@ -232,14 +255,158 @@ impl<L: ServerLink> XufsClient<L> {
         }
     }
 
-    /// Ship the pending meta-op queue to the server. Stops (keeping the
-    /// remainder queued) on disconnection. Returns ops shipped.
+    /// Ship the pending meta-op queue to the server. With compound RPC
+    /// enabled (the default) the WHOLE queue travels as one
+    /// `Request::Compound` round trip (chunked only past a frame budget)
+    /// with per-op status; otherwise one round trip per op. Stops
+    /// (keeping the remainder queued) on disconnection. Returns ops
+    /// shipped.
     pub fn flush_queue(&mut self) -> Result<usize, FsError> {
+        if !self.compound {
+            return self.flush_queue_per_op();
+        }
+        let mut shipped = 0usize;
+        loop {
+            // ops are MOVED out for shipping (no payload clone — §Perf L3
+            // #3) and restored on failure; the persisted entry stays on
+            // disk until the server acknowledges.
+            let pending = self.queue.take_all();
+            if pending.is_empty() {
+                return Ok(shipped);
+            }
+            // split off a frame-budget prefix; the remainder goes straight
+            // back (order preserved) for the next round
+            let mut batch: Vec<(u64, MetaOp)> = Vec::new();
+            let mut rest: Vec<(u64, MetaOp)> = Vec::new();
+            let mut bytes = 0u64;
+            for (seq, op) in pending {
+                let b = op.wire_bytes();
+                if batch.is_empty() || (rest.is_empty() && bytes + b <= COMPOUND_MAX_BYTES) {
+                    bytes += b;
+                    batch.push((seq, op));
+                } else {
+                    rest.push((seq, op));
+                }
+            }
+            self.queue.push_front_all(rest);
+
+            let replies = match self.link.ship_compound(&batch) {
+                Ok(r) => r,
+                Err(e) => {
+                    // nothing acknowledged: the whole batch replays later
+                    // (idempotent per-op seqs make that safe even when
+                    // only the reply was lost)
+                    self.queue.push_front_all(batch);
+                    return if matches!(e, FsError::Disconnected) { Ok(shipped) } else { Err(e) };
+                }
+            };
+            if replies.len() != batch.len() {
+                let got = replies.len();
+                let want = batch.len();
+                self.queue.push_front_all(batch);
+                return Err(FsError::Protocol(format!(
+                    "compound reply carries {got} results for {want} ops"
+                )));
+            }
+            let mut error: Option<FsError> = None;
+            let mut leftovers: Vec<(u64, MetaOp)> = Vec::new();
+            for ((seq, op), reply) in batch.into_iter().zip(replies) {
+                if error.is_some() {
+                    // a local settle already failed: everything later is
+                    // unsettled and goes back on the queue, in order
+                    leftovers.push((seq, op));
+                    continue;
+                }
+                match self.settle_compound_op(seq, &op, reply) {
+                    Ok(Settle::Acked) => shipped += 1,
+                    Ok(Settle::Dropped | Settle::Requeued) => {}
+                    Err(e) => {
+                        error = Some(e);
+                        leftovers.push((seq, op));
+                    }
+                }
+            }
+            if let Some(e) = error {
+                self.queue.push_front_all(leftovers);
+                return Err(e);
+            }
+        }
+    }
+
+    /// Settle one compound reply against the queue/cache. `Requeued` ops
+    /// (stale deltas demoted to full writes) carry a FRESH sequence
+    /// number: later ops in the same compound may already have advanced
+    /// the server's idempotence watermark past the failed seq, which
+    /// would swallow a same-seq retry as a duplicate.
+    fn settle_compound_op(&mut self, seq: u64, op: &MetaOp, reply: Response) -> Result<Settle, FsError> {
+        let now = self.clock.now();
+        match reply {
+            Response::Applied { new_version, .. } => {
+                match op {
+                    MetaOp::WriteFull { path, .. } | MetaOp::WriteDelta { path, .. } => {
+                        self.cache.mark_flushed(path, new_version, now)?;
+                    }
+                    MetaOp::Create { path } | MetaOp::Truncate { path, .. } => {
+                        let _ = self.cache.mark_flushed(path, new_version, now);
+                    }
+                    _ => {}
+                }
+                if matches!(op, MetaOp::WriteFull { .. } | MetaOp::WriteDelta { .. }) {
+                    self.metrics.incr(names::WRITEBACK_FILES);
+                    self.metrics.add(names::WRITEBACK_BYTES, op.wire_bytes());
+                }
+                self.queue.ack(self.cache.store_mut(), seq, now)?;
+                Ok(Settle::Acked)
+            }
+            Response::Err { code: 116, .. } => {
+                let MetaOp::WriteDelta { path, .. } = op else {
+                    return Err(FsError::Protocol("stale non-delta op".into()));
+                };
+                match self.cache.store().read(path) {
+                    Ok(data) => {
+                        let data = data.to_vec();
+                        let digests = self.engine.digests(&data, self.cfg.stripe.min_block as usize);
+                        // re-queue the demoted full write (latest cache
+                        // content — last-close-wins) under a fresh seq,
+                        // PERSISTING IT BEFORE retiring the stale delta's
+                        // entry: a crash in between must leave at least
+                        // one shippable entry on disk (replaying both is
+                        // idempotent — the delta just demotes again)
+                        let full = MetaOp::WriteFull { path: path.clone(), data, digests };
+                        self.queue.append(self.cache.store_mut(), full, now)?;
+                        self.queue.ack(self.cache.store_mut(), seq, now)?;
+                        Ok(Settle::Requeued)
+                    }
+                    Err(FsError::NotFound(_)) => {
+                        // the cached copy vanished beneath the queued delta
+                        // (an unlink/rename is queued behind it): drop the
+                        // delta — the later op carries the final truth
+                        self.metrics.incr("metaq.apply_errors");
+                        self.queue.ack(self.cache.store_mut(), seq, now)?;
+                        Ok(Settle::Dropped)
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+            Response::Err { code, msg } => {
+                // the home-space op failed semantically (e.g. the user
+                // removed the parent dir at home). Drop the op — the
+                // cache keeps the local truth; surfaced via metrics.
+                self.metrics.incr("metaq.apply_errors");
+                let _ = (code, msg);
+                self.queue.ack(self.cache.store_mut(), seq, now)?;
+                Ok(Settle::Dropped)
+            }
+            r => Err(FsError::Protocol(format!("unexpected compound op reply {r:?}"))),
+        }
+    }
+
+    /// Pre-v2 flush path: one `Request::Apply` round trip per queued op.
+    /// Kept behind [`Self::compound`] = false so the `compound_rpc`
+    /// ablation can quantify what batching saves.
+    fn flush_queue_per_op(&mut self) -> Result<usize, FsError> {
         let now = self.clock.now();
         let mut shipped = 0;
-        // ops are MOVED out for shipping (no payload clone — §Perf L3 #3)
-        // and restored on disconnection; the persisted entry stays on
-        // disk until the server acknowledges.
         while let Some((seq, op)) = self.queue.take_front() {
             match self.link.ship(seq, &op) {
                 Ok(Response::Applied { new_version, .. }) => {
@@ -262,13 +429,32 @@ impl<L: ServerLink> XufsClient<L> {
                 Ok(Response::Err { code: 116, .. }) => {
                     // stale delta base: demote to a full write and retry
                     if let MetaOp::WriteDelta { path, .. } = &op {
-                        let data = self.cache.store().read(path)?.to_vec();
-                        let digests = self.engine.digests(&data, self.cfg.stripe.min_block as usize);
-                        let full = MetaOp::WriteFull { path: path.clone(), data, digests };
-                        self.queue.push_front(seq, full.clone());
-                        self.queue.replace(self.cache.store_mut(), seq, full, now)?;
-                        continue;
+                        match self.cache.store().read(path) {
+                            Ok(data) => {
+                                let data = data.to_vec();
+                                let digests =
+                                    self.engine.digests(&data, self.cfg.stripe.min_block as usize);
+                                let full = MetaOp::WriteFull { path: path.clone(), data, digests };
+                                self.queue.push_front(seq, full.clone());
+                                self.queue.replace(self.cache.store_mut(), seq, full, now)?;
+                                continue;
+                            }
+                            Err(FsError::NotFound(_)) => {
+                                // cached copy vanished beneath the queued
+                                // delta (an unlink/rename is queued behind
+                                // it): drop the delta, like the compound
+                                // path — the later op carries the truth
+                                self.metrics.incr("metaq.apply_errors");
+                                self.queue.ack(self.cache.store_mut(), seq, now)?;
+                                continue;
+                            }
+                            Err(e) => {
+                                self.queue.push_front(seq, op);
+                                return Err(e);
+                            }
+                        }
                     }
+                    self.queue.push_front(seq, op);
                     return Err(FsError::Protocol("stale non-delta op".into()));
                 }
                 Ok(Response::Err { code, msg }) => {
@@ -424,10 +610,92 @@ impl<L: ServerLink> XufsClient<L> {
             None => false,
         }
     }
+
+    /// Serve a stat from local state if possible (paper: stat() reads the
+    /// hidden attribute files). `None` means the server must be asked.
+    fn stat_local(&mut self, abs_path: &str) -> Option<MetaResult> {
+        if self.cache.is_localized(abs_path) {
+            self.cache_disk.op(self.clock.as_ref());
+            return Some(match self.cache.store().stat(abs_path) {
+                Ok(a) => MetaResult::Attr(WireAttr::from_attr(&a)),
+                Err(e) => MetaResult::Err(e),
+            });
+        }
+        let cached = self.cache.entry(abs_path).and_then(|e| {
+            if e.state != EntryState::Invalid { Some(e.attr.clone()) } else { None }
+        });
+        if let Some(attr) = cached {
+            self.cache_disk.op(self.clock.as_ref());
+            return Some(MetaResult::Attr(attr));
+        }
+        let parent = vpath::parent(abs_path);
+        if self.cache.dir_state(&parent).map(|d| d.complete).unwrap_or(false)
+            && self.cache.entry(abs_path).is_none()
+        {
+            // a complete parent listing makes absence a reliable negative
+            return Some(MetaResult::Err(FsError::NotFound(abs_path.to_string())));
+        }
+        None
+    }
+
+    /// Resolve one buffered run of cache-missing [`Vfs::batch`] stats
+    /// with a single `Request::Compound`. In sync-on-close mode the
+    /// queued mutations that PRECEDED the run flush first, so each stat
+    /// observes exactly the batch prefix before it — the sequential-
+    /// lowering semantics the trait default defines. Transport failures
+    /// fail the affected stats per-op; only protocol violations abort.
+    fn resolve_batch_stats(
+        &mut self,
+        mode: WritebackMode,
+        pending: &mut Vec<(usize, String)>,
+        out: &mut [MetaResult],
+    ) -> Result<(), FsError> {
+        if pending.is_empty() {
+            return Ok(());
+        }
+        if matches!(mode, WritebackMode::SyncOnClose) {
+            let _ = self.flush_queue()?;
+        }
+        let req = Request::Compound {
+            ops: pending.iter().map(|(_, p)| CompoundOp::Stat { path: p.clone() }).collect(),
+        };
+        match self.link.rpc(req) {
+            Ok(Response::CompoundReply { replies }) if replies.len() == pending.len() => {
+                for ((i, p), reply) in pending.drain(..).zip(replies) {
+                    out[i] = match reply {
+                        Response::Attr { attr } => {
+                            // refresh the cached attributes
+                            if let Some(e) = self.cache.entry_mut(&p) {
+                                e.attr = attr.clone();
+                            }
+                            MetaResult::Attr(attr)
+                        }
+                        Response::Err { code: 2, msg } => MetaResult::Err(FsError::NotFound(msg)),
+                        r => MetaResult::Err(FsError::Protocol(format!(
+                            "unexpected stat reply {r:?}"
+                        ))),
+                    };
+                }
+                Ok(())
+            }
+            Ok(r) => Err(FsError::Protocol(format!("unexpected compound reply {r:?}"))),
+            Err(e) => {
+                // transport failure: the batched stats fail per-op so the
+                // mutations (already shipped or queued) are not lost
+                for (i, _) in pending.drain(..) {
+                    out[i] = MetaResult::Err(e.clone());
+                }
+                Ok(())
+            }
+        }
+    }
 }
 
 impl<L: ServerLink> Vfs for XufsClient<L> {
     fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd, FsError> {
+        // v2 contract: bad flag combinations die here, not deep in the
+        // data path
+        let flags = flags.validate()?;
         self.tick();
         let t0 = self.clock.now();
         let p = self.abs(path);
@@ -437,23 +705,23 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         if localized {
             // localized files live purely in cache space
             if !self.cache.store().exists(&p) {
-                if !flags.create {
+                if !flags.is_create() {
                     return Err(FsError::NotFound(p));
                 }
                 self.cache.store_mut().mkdir_p(&vpath::parent(&p), now)?;
                 self.cache.store_mut().create(&p, now)?;
-            } else if flags.truncate {
+            } else if flags.is_truncate() {
                 self.cache.store_mut().truncate(&p, 0, now)?;
             }
             self.cache_disk.op(self.clock.as_ref());
         } else if self.content_usable(&p) {
             self.metrics.incr(names::CACHE_HITS);
             self.cache.touch(&p, now);
-            if flags.truncate {
+            if flags.is_truncate() {
                 self.cache.store_mut().truncate(&p, 0, now)?;
             }
             self.cache_disk.op(self.clock.as_ref());
-        } else if flags.write && flags.truncate {
+        } else if flags.is_write() && flags.is_truncate() {
             // O_TRUNC write: the old content is irrelevant (last-close-
             // wins), so no WAN round trip is needed — the file starts
             // empty locally and a Create (idempotent at the server) is
@@ -484,7 +752,7 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
                             // offline with nothing cached and creation not
                             // requested: fail disconnected; with O_CREAT we
                             // can proceed optimistically (queued Create)
-                            Err(FsError::Disconnected) if flags.create => false,
+                            Err(FsError::Disconnected) if flags.is_create() => false,
                             Err(e) => return Err(e),
                         }
                     }
@@ -506,7 +774,7 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
                     Err(e) => return Err(e),
                 }
             } else {
-                if !flags.create {
+                if !flags.is_create() {
                     return Err(FsError::NotFound(p));
                 }
                 // brand-new file: created locally, Create queued
@@ -520,14 +788,14 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
             self.cache_disk.op(self.clock.as_ref());
         }
 
-        let shadow = if flags.write {
+        let shadow = if flags.is_write() {
             // writes land in a shadow file (paper §3.1); it starts as a
             // copy of the current content so read-after-write via the
             // same fd is coherent, and the close flush is the aggregate
             let name = vpath::shadow_file_name(&vpath::basename(&p), self.next_fd);
             let spath = vpath::join(&vpath::parent(&p), &name);
             let now = self.clock.now();
-            let content = if flags.truncate {
+            let content = if flags.is_truncate() {
                 Vec::new()
             } else {
                 self.cache.store().read(&p).map(|d| d.to_vec()).unwrap_or_default()
@@ -540,7 +808,7 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
 
         let fd = self.next_fd;
         self.next_fd += 1;
-        let pos = if flags.append {
+        let pos = if flags.is_append() {
             self.cache.store().stat(&p).map(|a| a.size).unwrap_or(0)
         } else {
             0
@@ -550,42 +818,43 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         Ok(Fd(fd))
     }
 
-    fn read(&mut self, fd: Fd, len: usize) -> Result<Vec<u8>, FsError> {
+    fn pread(&mut self, fd: Fd, buf: &mut [u8], off: u64) -> Result<usize, FsError> {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
-        if !f.flags.read && !f.flags.write {
-            return Err(FsError::Perm("fd not open for reading".into()));
-        }
+        // write-only fds may read back their own shadow (read-your-writes
+        // coherence within the fd); the flags were validated at open
         let src = f.shadow.clone().unwrap_or_else(|| f.path.clone());
-        let pos = f.pos;
-        let data = self.cache.store().read_at(&src, pos, len)?.to_vec();
-        self.cache_disk.io(self.clock.as_ref(), data.len() as u64);
-        if let Some(f) = self.fds.get_mut(&fd.0) {
-            f.pos += data.len() as u64;
-        }
-        Ok(data)
+        let n = {
+            let data = self.cache.store().read_at(&src, off, buf.len())?;
+            buf[..data.len()].copy_from_slice(data);
+            data.len()
+        };
+        self.cache_disk.io(self.clock.as_ref(), n as u64);
+        Ok(n)
     }
 
-    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize, FsError> {
+    fn pwrite(&mut self, fd: Fd, buf: &[u8], off: u64) -> Result<usize, FsError> {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
-        if !f.flags.write {
+        if !f.flags.is_write() {
             return Err(FsError::Perm("fd not open for writing".into()));
         }
         let shadow = f.shadow.clone().ok_or(FsError::BadHandle)?;
-        let pos = f.pos;
         let now = self.clock.now();
-        self.cache.store_mut().write_at(&shadow, pos, data, now)?;
-        self.cache_disk.io(self.clock.as_ref(), data.len() as u64);
+        self.cache.store_mut().write_at(&shadow, off, buf, now)?;
+        self.cache_disk.io(self.clock.as_ref(), buf.len() as u64);
         if let Some(f) = self.fds.get_mut(&fd.0) {
-            f.pos += data.len() as u64;
             f.wrote = true;
         }
-        Ok(data.len())
+        Ok(buf.len())
     }
 
     fn seek(&mut self, fd: Fd, pos: u64) -> Result<(), FsError> {
         let f = self.fds.get_mut(&fd.0).ok_or(FsError::BadHandle)?;
         f.pos = pos;
         Ok(())
+    }
+
+    fn tell(&self, fd: Fd) -> Result<u64, FsError> {
+        self.fds.get(&fd.0).map(|f| f.pos).ok_or(FsError::BadHandle)
     }
 
     fn close(&mut self, fd: Fd) -> Result<(), FsError> {
@@ -635,24 +904,11 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
     fn stat(&mut self, path: &str) -> Result<WireAttr, FsError> {
         self.tick();
         let p = self.abs(path);
-        if self.cache.is_localized(&p) {
-            let a = self.cache.store().stat(&p)?;
-            self.cache_disk.op(self.clock.as_ref());
-            return Ok(WireAttr::from_attr(&a));
-        }
         // paper: stat() is served from the hidden attribute files
-        if let Some(e) = self.cache.entry(&p) {
-            if e.state != EntryState::Invalid {
-                let attr = e.attr.clone();
-                self.cache_disk.op(self.clock.as_ref());
-                return Ok(attr);
-            }
-        }
-        let parent = vpath::parent(&p);
-        if self.cache.dir_state(&parent).map(|d| d.complete).unwrap_or(false)
-            && self.cache.entry(&p).is_none()
-        {
-            return Err(FsError::NotFound(p));
+        match self.stat_local(&p) {
+            Some(MetaResult::Attr(a)) => return Ok(a),
+            Some(MetaResult::Err(e)) => return Err(e),
+            Some(MetaResult::Done) | None => {}
         }
         match self.link.rpc(Request::Stat { path: p.clone() })? {
             Response::Attr { attr } => {
@@ -810,6 +1066,75 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         }
         self.local_locks.retain(|_, (lfd, _)| *lfd != fd.0);
         Ok(())
+    }
+
+    /// Compound-capable batch with sequential-lowering semantics:
+    /// mutations update the cache immediately and queue their meta-ops;
+    /// each run of consecutive cache-miss stats is resolved with ONE
+    /// `Request::Compound`, after flushing exactly the mutations that
+    /// preceded it (sync-on-close mode) — so a stat observes earlier
+    /// mutations in the batch and never later ones, just like calling
+    /// the single-op methods in order, but in O(runs) round trips
+    /// instead of O(ops).
+    fn batch(&mut self, ops: &[MetaBatchOp]) -> Result<Vec<MetaResult>, FsError> {
+        self.tick();
+        // suppress per-op flushing while the batch accumulates
+        let saved_mode = self.writeback;
+        let saved_threshold = self.async_flush_threshold;
+        self.writeback = WritebackMode::Async;
+        self.async_flush_threshold = usize::MAX;
+
+        let mut out: Vec<MetaResult> = Vec::with_capacity(ops.len());
+        // (result index, absolute path) of the current run of stats the
+        // cache cannot answer
+        let mut pending_stats: Vec<(usize, String)> = Vec::new();
+        let mut result: Result<(), FsError> = Ok(());
+        for (i, op) in ops.iter().enumerate() {
+            if !matches!(op, MetaBatchOp::Stat { .. }) && !pending_stats.is_empty() {
+                // the buffered stats precede this mutation and must not
+                // observe it: resolve them now
+                if let Err(e) = self.resolve_batch_stats(saved_mode, &mut pending_stats, &mut out) {
+                    result = Err(e);
+                    break;
+                }
+            }
+            let r = match op {
+                MetaBatchOp::Mkdir { path } => self.mkdir(path).into(),
+                MetaBatchOp::Unlink { path } => self.unlink(path).into(),
+                MetaBatchOp::Rename { from, to } => self.rename(from, to).into(),
+                MetaBatchOp::Truncate { path, size } => self.truncate(path, *size).into(),
+                MetaBatchOp::Stat { path } => {
+                    let p = self.abs(path);
+                    match self.stat_local(&p) {
+                        Some(r) => r,
+                        None => {
+                            pending_stats.push((i, p));
+                            MetaResult::Done // placeholder, filled on resolve
+                        }
+                    }
+                }
+            };
+            out.push(r);
+        }
+        if result.is_ok() {
+            result = self.resolve_batch_stats(saved_mode, &mut pending_stats, &mut out);
+        }
+        self.writeback = saved_mode;
+        self.async_flush_threshold = saved_threshold;
+        result?;
+
+        // mutations after the last stat still ship (one compound)
+        match saved_mode {
+            WritebackMode::SyncOnClose => {
+                let _ = self.flush_queue()?;
+            }
+            WritebackMode::Async => {
+                if self.queue.len() >= saved_threshold {
+                    let _ = self.flush_queue()?;
+                }
+            }
+        }
+        Ok(out)
     }
 
     fn fsync(&mut self) -> Result<(), FsError> {

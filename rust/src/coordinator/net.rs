@@ -329,13 +329,20 @@ impl TcpLink {
     }
 
     fn control_rpc(&mut self, req: &Request) -> Result<Response, FsError> {
+        let body = req.encode();
+        self.control_rpc_frame(&body)
+    }
+
+    /// One request/response exchange from an already-encoded body (lets
+    /// the compound flush serialize straight from borrowed meta-ops).
+    fn control_rpc_frame(&mut self, body: &[u8]) -> Result<Response, FsError> {
         let stream = self.control.as_mut().ok_or(FsError::Disconnected)?;
-        if write_frame(stream, &req.encode()).is_err() {
+        if write_frame(stream, body).is_err() {
             self.control = None;
             return Err(FsError::Disconnected);
         }
         match read_frame(stream) {
-            Ok(body) => Response::decode(&body).map_err(|e| FsError::Protocol(e.to_string())),
+            Ok(resp) => Response::decode(&resp).map_err(|e| FsError::Protocol(e.to_string())),
             Err(_) => {
                 self.control = None;
                 Err(FsError::Disconnected)
@@ -374,6 +381,10 @@ impl ServerLink for TcpLink {
             } else {
                 Err(FsError::Disconnected)
             };
+        }
+        if let Request::Compound { ops } = &req {
+            self.metrics.incr(names::COMPOUND_RPCS);
+            self.metrics.add(names::COMPOUND_OPS, ops.len() as u64);
         }
         self.metrics.add(names::WAN_RPCS, 1);
         self.control_rpc(&req)
@@ -489,6 +500,23 @@ impl ServerLink for TcpLink {
     fn ship(&mut self, seq: u64, op: &MetaOp) -> Result<Response, FsError> {
         self.metrics.add(names::WAN_BYTES_TX, op.wire_bytes());
         self.control_rpc(&Request::Apply { seq, op: op.clone() })
+    }
+
+    fn ship_compound(&mut self, ops: &[(u64, MetaOp)]) -> Result<Vec<Response>, FsError> {
+        // encode straight from the borrowed queue entries — no payload
+        // clone on the flush path
+        let body = Request::encode_compound_applies(ops);
+        let resp = self.control_rpc_frame(&body)?;
+        // count only completed exchanges, so a disconnected attempt plus
+        // its post-reconnect retry is one frame, not two
+        self.metrics
+            .add(names::WAN_BYTES_TX, ops.iter().map(|(_, op)| op.wire_bytes()).sum());
+        self.metrics.incr(names::COMPOUND_RPCS);
+        self.metrics.add(names::COMPOUND_OPS, ops.len() as u64);
+        match resp {
+            Response::CompoundReply { replies } => Ok(replies),
+            r => Err(response_to_fs_err(r)),
+        }
     }
 
     fn drain_notifications(&mut self) -> Vec<NotifyEvent> {

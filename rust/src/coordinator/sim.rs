@@ -9,7 +9,7 @@ use crate::client::{ServerLink, XufsClient};
 use crate::config::XufsConfig;
 use crate::homefs::{FileStore, FsError};
 use crate::metrics::{names, Metrics};
-use crate::proto::{FileImage, MetaOp, NotifyEvent, Request, Response};
+use crate::proto::{CompoundOp, FileImage, MetaOp, NotifyEvent, Request, Response};
 use crate::runtime::DigestEngine;
 use crate::server::FileServer;
 use crate::simnet::{Clock, SimClock, TransferKind, Wan};
@@ -204,6 +204,10 @@ impl SimLink {
 impl ServerLink for SimLink {
     fn rpc(&mut self, req: Request) -> Result<Response, FsError> {
         self.check_up()?;
+        if let Request::Compound { ops } = &req {
+            self.metrics.incr(names::COMPOUND_RPCS);
+            self.metrics.add(names::COMPOUND_OPS, ops.len() as u64);
+        }
         let req_bytes = req.wire_bytes();
         let resp = {
             let mut s = self.server.lock().unwrap();
@@ -297,6 +301,41 @@ impl ServerLink for SimLink {
         Ok(resp)
     }
 
+    fn ship_compound(&mut self, ops: &[(u64, MetaOp)]) -> Result<Vec<Response>, FsError> {
+        self.check_up()?;
+        let payload: u64 = ops.iter().map(|(_, op)| op.wire_bytes()).sum::<u64>() + 16;
+        if payload <= self.cfg.stripe.stripe_threshold {
+            // the whole batch drains over the persistent control
+            // connection in ONE round trip — the compound win
+            self.wan.rpc(&self.clock, payload, 64 + 16 * ops.len() as u64);
+        } else {
+            // bulk write-back payloads open striped data connections
+            // (§3.3), still a single request/reply exchange
+            let stripes = transfer::stripes_for(payload, &self.cfg.stripe);
+            self.wan.transfer(&self.clock, payload, stripes, TransferKind::NewConnections);
+        }
+        self.metrics.add(names::WAN_BYTES_TX, payload);
+        self.metrics.incr(names::COMPOUND_RPCS);
+        self.metrics.add(names::COMPOUND_OPS, ops.len() as u64);
+        let resp = {
+            let mut s = self.server.lock().unwrap();
+            // server writes the aggregated payload to its disk
+            s.disk.io(&self.clock, payload);
+            let req = Request::Compound {
+                ops: ops
+                    .iter()
+                    .map(|(seq, op)| CompoundOp::Apply { seq: *seq, op: op.clone() })
+                    .collect(),
+            };
+            s.handle(self.client_id, req, self.clock.now())
+        };
+        match resp {
+            Response::CompoundReply { replies } => Ok(replies),
+            Response::Err { code: 111, .. } => Err(FsError::Disconnected),
+            r => Err(FsError::Protocol(format!("unexpected compound reply {r:?}"))),
+        }
+    }
+
     fn drain_notifications(&mut self) -> Vec<NotifyEvent> {
         self.channel.drain()
     }
@@ -352,9 +391,11 @@ mod tests {
         let mut c = w.mount("/home/u").unwrap();
         let data = {
             let fd = c.open("/home/u/proj/main.c", OpenFlags::rdonly()).unwrap();
-            let d = c.read(fd, 1024).unwrap();
+            let mut buf = vec![0u8; 1024];
+            let n = c.read(fd, &mut buf).unwrap();
             c.close(fd).unwrap();
-            d
+            buf.truncate(n);
+            buf
         };
         assert_eq!(data, b"int main() { return 0; }\n");
         assert_eq!(c.metrics().counter(names::CACHE_MISSES), 1);
@@ -408,13 +449,14 @@ mod tests {
         // a updates it; b must see the new content on next open
         a.write_file("/home/u/proj/README", b"updated docs\n", 1024).unwrap();
         let mut buf = Vec::new();
+        let mut chunk = [0u8; 64];
         let fd = b.open("/home/u/proj/README", OpenFlags::rdonly()).unwrap();
         loop {
-            let chunk = b.read(fd, 64).unwrap();
-            if chunk.is_empty() {
+            let n = b.read(fd, &mut chunk).unwrap();
+            if n == 0 {
                 break;
             }
-            buf.extend(chunk);
+            buf.extend_from_slice(&chunk[..n]);
         }
         b.close(fd).unwrap();
         assert_eq!(buf, b"updated docs\n");
@@ -427,9 +469,10 @@ mod tests {
         c.scan_file("/home/u/proj/README", 1024).unwrap();
         w.home(|s| s.local_write("/home/u/proj/README", b"edited on laptop\n", VirtualTime::from_secs(5.0)).unwrap());
         let fd = c.open("/home/u/proj/README", OpenFlags::rdonly()).unwrap();
-        let d = c.read(fd, 64).unwrap();
+        let mut buf = [0u8; 64];
+        let n = c.read(fd, &mut buf).unwrap();
         c.close(fd).unwrap();
-        assert_eq!(d, b"edited on laptop\n");
+        assert_eq!(&buf[..n], b"edited on laptop\n");
     }
 
     #[test]

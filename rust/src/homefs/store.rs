@@ -9,36 +9,53 @@ use crate::util::path as vpath;
 /// Inode number.
 pub type Ino = u64;
 
+/// Largest file the dense in-memory store will materialize: 32 GiB —
+/// an order of magnitude above the biggest simulated workload file
+/// (~2.6 GB, Table 1's top bucket) while keeping a stray `pwrite` at an
+/// absurd offset an `FsError::Invalid` instead of a process-killing
+/// allocation (the store is dense; bytes up to the write's end are
+/// really allocated).
+pub const MAX_FILE_BYTES: u64 = 32 << 30;
+
 /// Errors mirroring the POSIX cases the interposed libc calls surface.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum FsError {
-    #[error("no such file or directory: {0}")]
     NotFound(String),
-    #[error("not a directory: {0}")]
     NotADir(String),
-    #[error("is a directory: {0}")]
     IsADir(String),
-    #[error("file exists: {0}")]
     Exists(String),
-    #[error("directory not empty: {0}")]
     NotEmpty(String),
-    #[error("bad file handle")]
     BadHandle,
-    #[error("no space left on device")]
     NoSpace,
-    #[error("invalid argument: {0}")]
     Invalid(String),
-    #[error("operation would block (disconnected)")]
     Disconnected,
-    #[error("permission denied: {0}")]
     Perm(String),
-    #[error("stale cache entry: {0}")]
     Stale(String),
-    #[error("lock held by another client: {0}")]
     LockConflict(String),
-    #[error("protocol error: {0}")]
     Protocol(String),
 }
+
+impl fmt::Display for FsError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FsError::NotFound(p) => write!(f, "no such file or directory: {p}"),
+            FsError::NotADir(p) => write!(f, "not a directory: {p}"),
+            FsError::IsADir(p) => write!(f, "is a directory: {p}"),
+            FsError::Exists(p) => write!(f, "file exists: {p}"),
+            FsError::NotEmpty(p) => write!(f, "directory not empty: {p}"),
+            FsError::BadHandle => write!(f, "bad file handle"),
+            FsError::NoSpace => write!(f, "no space left on device"),
+            FsError::Invalid(m) => write!(f, "invalid argument: {m}"),
+            FsError::Disconnected => write!(f, "operation would block (disconnected)"),
+            FsError::Perm(m) => write!(f, "permission denied: {m}"),
+            FsError::Stale(m) => write!(f, "stale cache entry: {m}"),
+            FsError::LockConflict(m) => write!(f, "lock held by another client: {m}"),
+            FsError::Protocol(m) => write!(f, "protocol error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FsError {}
 
 /// What a directory entry points at.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -297,11 +314,16 @@ impl FileStore {
         Ok(())
     }
 
-    /// Ranged write (extends the file as needed).
+    /// Ranged write (extends the file as needed). Offsets that cannot be
+    /// materialized in the dense in-memory store are rejected, not
+    /// panicked on — `pwrite` exposes arbitrary caller offsets (v2 Vfs).
     pub fn write_at(&mut self, path: &str, offset: u64, buf: &[u8], now: VirtualTime) -> Result<(), FsError> {
         let ino = self.resolve(path)?;
         let old = self.inodes[&ino].size();
-        let end = offset + buf.len() as u64;
+        let end = offset
+            .checked_add(buf.len() as u64)
+            .filter(|&e| e <= MAX_FILE_BYTES && usize::try_from(e).is_ok())
+            .ok_or_else(|| FsError::Invalid(format!("write_at offset {offset} out of range")))?;
         let new = old.max(end);
         self.charge(old, new)?;
         let inode = self.inodes.get_mut(&ino).unwrap();
@@ -322,6 +344,9 @@ impl FileStore {
     /// Truncate/extend to `size`.
     pub fn truncate(&mut self, path: &str, size: u64, now: VirtualTime) -> Result<(), FsError> {
         let ino = self.resolve(path)?;
+        if size > MAX_FILE_BYTES {
+            return Err(FsError::Invalid(format!("truncate size {size} out of range")));
+        }
         let old = self.inodes[&ino].size();
         self.charge(old, size)?;
         let inode = self.inodes.get_mut(&ino).unwrap();
@@ -505,6 +530,29 @@ mod tests {
         fs.write_at("/f", 0, b"zz", t(2.0)).unwrap();
         assert_eq!(fs.read("/f").unwrap(), b"zz\0\0abcd");
         assert_eq!(fs.used_bytes(), 8);
+    }
+
+    #[test]
+    fn write_at_absurd_offset_errors_not_panics() {
+        let mut fs = FileStore::default();
+        fs.create("/f", t(0.0)).unwrap();
+        // u64 overflow (offset + len wraps) must surface as an error
+        assert!(matches!(
+            fs.write_at("/f", u64::MAX, b"x", t(1.0)),
+            Err(FsError::Invalid(_))
+        ));
+        // a non-overflowing but unmaterializable offset too (empty buf)
+        assert!(matches!(
+            fs.write_at("/f", MAX_FILE_BYTES + 1, b"", t(1.0)),
+            Err(FsError::Invalid(_))
+        ));
+        // truncate is bounded the same way
+        assert!(matches!(
+            fs.truncate("/f", MAX_FILE_BYTES + 1, t(1.0)),
+            Err(FsError::Invalid(_))
+        ));
+        // the file is untouched
+        assert_eq!(fs.read("/f").unwrap(), b"");
     }
 
     #[test]

@@ -8,14 +8,20 @@
 //! plus the GPFS-WAN / NFS / SCP / TGCP baselines and the paper's full
 //! evaluation harness.
 //!
-//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for
-//! paper-vs-measured results. Layer map:
+//! See `DESIGN.md` (repo root) for the architecture. Layer map:
 //!
 //! * **L3 (this crate)** — coordinator: client, server, cache, transfer,
 //!   consistency, recovery, baselines, benches.
 //! * **L2/L1 (python/, build-time only)** — JAX transfer-plan graph and
 //!   Pallas digest kernels, AOT-lowered to `artifacts/*.hlo.txt` and
-//!   executed by [`runtime`] via PJRT.
+//!   executed by [`runtime`] via PJRT (behind the `pjrt` cargo feature;
+//!   the default build uses the bit-identical native engine).
+//!
+//! The client surface is the **Vfs v2** contract (DESIGN.md §2):
+//! buffer-based positional I/O (`pread`/`pwrite`) with sequential
+//! defaults, validated [`client::OpenFlags`], and compound metadata
+//! batching — the meta-op queue flushes as one `Request::Compound` WAN
+//! round trip instead of one round trip per op.
 
 pub mod auth;
 pub mod baselines;

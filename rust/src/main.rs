@@ -138,6 +138,7 @@ fn run_bench(cfg: XufsConfig, which: &str, quick: bool) {
             bench::run_ablation_delta(&cfg, if quick { 16 } else { 64 }).print();
             bench::run_ablation_consistency(&cfg, 3).print();
             bench::run_ablation_writeback(&cfg).print();
+            bench::run_ablation_compound(&cfg).print();
         }
         "all" => {
             bench::run_table1(cfg.seed.max(1)).print();

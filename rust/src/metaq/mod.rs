@@ -125,6 +125,20 @@ impl MetaQueue {
         self.pending.insert(0, (seq, op));
     }
 
+    /// Move out EVERY pending op for a compound flush (one WAN round trip
+    /// for the whole queue). Disk entries stay until `ack`; on failure
+    /// [`Self::push_front_all`] restores the batch.
+    pub fn take_all(&mut self) -> Vec<(u64, MetaOp)> {
+        std::mem::take(&mut self.pending)
+    }
+
+    /// Restore a batch of unshipped ops (in order) at the queue front
+    /// (disconnection mid-compound).
+    pub fn push_front_all(&mut self, mut ops: Vec<(u64, MetaOp)>) {
+        ops.append(&mut self.pending);
+        self.pending = ops;
+    }
+
     /// Server acknowledged `seq`: drop it from memory and disk.
     pub fn ack(&mut self, store: &mut FileStore, seq: u64, now: VirtualTime) -> FsResult<()> {
         self.pending.retain(|(s, _)| *s != seq);
@@ -325,6 +339,24 @@ mod tests {
         assert_eq!(q.pending()[0].0, s1);
         assert_eq!(q.len(), 2);
         assert!(MetaQueue::new().take_front().is_none());
+    }
+
+    #[test]
+    fn take_all_push_front_all_roundtrip() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        let s1 = q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        let s2 = q.append(&mut store, op("/b"), t(1.0)).unwrap();
+        let batch = q.take_all();
+        assert_eq!(batch.len(), 2);
+        assert!(q.is_empty());
+        // disk entries survive the take (crash-safety until ack)
+        assert!(store.exists(&entry_path(s1)));
+        // append while a batch is in flight, then restore: order holds
+        let s3 = q.append(&mut store, op("/c"), t(2.0)).unwrap();
+        q.push_front_all(batch);
+        let seqs: Vec<u64> = q.pending().iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![s1, s2, s3]);
     }
 
     #[test]

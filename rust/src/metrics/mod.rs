@@ -108,6 +108,10 @@ pub mod names {
     pub const WAN_BYTES_RX: &str = "wan.bytes_rx";
     pub const WAN_RPCS: &str = "wan.rpcs";
     pub const WAN_CONNECTS: &str = "wan.connects";
+    /// Compound round trips issued (one per `Request::Compound`).
+    pub const COMPOUND_RPCS: &str = "wan.compound_rpcs";
+    /// Meta-ops carried inside compound round trips.
+    pub const COMPOUND_OPS: &str = "wan.compound_ops";
     pub const CACHE_HITS: &str = "cache.hits";
     pub const CACHE_MISSES: &str = "cache.misses";
     pub const CACHE_INVALIDATIONS: &str = "cache.invalidations";

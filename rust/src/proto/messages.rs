@@ -196,6 +196,50 @@ impl MetaOp {
     }
 }
 
+/// One operation inside a [`Request::Compound`] (DESIGN.md §2.3): either
+/// a queued meta-op replay (idempotent via its client sequence number) or
+/// a read-only stat. The server answers each with a full [`Response`], so
+/// partial failure is visible per op and the client replays exactly the
+/// ops that did not land.
+#[derive(Debug, Clone, PartialEq)]
+pub enum CompoundOp {
+    /// Apply one queued meta-operation (same semantics as
+    /// [`Request::Apply`]).
+    Apply { seq: u64, op: MetaOp },
+    /// Read attributes (same semantics as [`Request::Stat`]).
+    Stat { path: String },
+}
+
+impl CompoundOp {
+    fn encode_into(&self, e: &mut Encoder) {
+        match self {
+            CompoundOp::Apply { seq, op } => {
+                e.u8(0).u64(*seq);
+                op.encode_into(e);
+            }
+            CompoundOp::Stat { path } => {
+                e.u8(1).str(path);
+            }
+        }
+    }
+
+    fn decode_from(d: &mut Decoder) -> Result<Self, ProtoError> {
+        Ok(match d.u8()? {
+            0 => CompoundOp::Apply { seq: d.u64()?, op: MetaOp::decode_from(d)? },
+            1 => CompoundOp::Stat { path: d.str()? },
+            t => return Err(ProtoError(format!("bad CompoundOp tag {t}"))),
+        })
+    }
+
+    /// Payload bytes this op contributes to the compound frame.
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            CompoundOp::Apply { op, .. } => op.wire_bytes() + 8,
+            CompoundOp::Stat { .. } => 64,
+        }
+    }
+}
+
 fn lock_kind_tag(k: LockKind) -> u8 {
     match k {
         LockKind::Shared => 0,
@@ -237,6 +281,10 @@ pub enum Request {
     LockRenew { token: u64, owner: u64 },
     LockRelease { token: u64, owner: u64 },
     Ping,
+    /// Compound RPC (DESIGN.md §2.3): N metadata ops in one WAN round
+    /// trip. Answered by [`Response::CompoundReply`] with one per-op
+    /// [`Response`] in order.
+    Compound { ops: Vec<CompoundOp> },
 }
 
 impl Request {
@@ -283,6 +331,12 @@ impl Request {
             Request::Ping => {
                 e.u8(10);
             }
+            Request::Compound { ops } => {
+                e.u8(13).varint(ops.len() as u64);
+                for op in ops {
+                    op.encode_into(&mut e);
+                }
+            }
         }
         e.into_bytes()
     }
@@ -312,6 +366,14 @@ impl Request {
                 len: d.u64()?,
                 expect_version: d.u64()?,
             },
+            13 => {
+                let n = d.varint()? as usize;
+                let mut ops = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    ops.push(CompoundOp::decode_from(&mut d)?);
+                }
+                Request::Compound { ops }
+            }
             t => return Err(ProtoError(format!("bad Request tag {t}"))),
         };
         d.expect_end()?;
@@ -321,6 +383,20 @@ impl Request {
     /// Approximate wire size for the WAN model.
     pub fn wire_bytes(&self) -> u64 {
         self.encode().len() as u64 + 16
+    }
+
+    /// Encode a compound of queued meta-op replays straight from borrowed
+    /// `(seq, op)` pairs — byte-identical to building
+    /// `Request::Compound { ops: [CompoundOp::Apply…] }` and encoding it,
+    /// without cloning the (possibly multi-MiB) payloads first.
+    pub fn encode_compound_applies(ops: &[(u64, MetaOp)]) -> Vec<u8> {
+        let mut e = Encoder::new();
+        e.u8(13).varint(ops.len() as u64);
+        for (seq, op) in ops {
+            e.u8(0).u64(*seq);
+            op.encode_into(&mut e);
+        }
+        e.into_bytes()
     }
 }
 
@@ -344,6 +420,11 @@ pub enum Response {
     FileMeta { version: u64, size: u64, digests: Vec<i32> },
     /// One range of file content at `version`.
     Range { version: u64, data: Vec<u8> },
+    /// Per-op results of a [`Request::Compound`], in request order. Each
+    /// entry is the [`Response`] the matching single-op request would
+    /// have produced (`Applied`/`Attr`/`Err`), so partial failure is
+    /// visible per op.
+    CompoundReply { replies: Vec<Response> },
 }
 
 impl Response {
@@ -401,11 +482,27 @@ impl Response {
             Response::Range { version, data } => {
                 e.u8(14).u64(*version).bytes(data);
             }
+            Response::CompoundReply { replies } => {
+                // each reply is length-prefixed so decode stays simple
+                // and bounded even for nested error payloads
+                e.u8(15).varint(replies.len() as u64);
+                for r in replies {
+                    e.bytes(&r.encode());
+                }
+            }
         }
         e.into_bytes()
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        Self::decode_depth(buf, 0)
+    }
+
+    /// `depth` guards the only recursive spot (CompoundReply's inner
+    /// replies): the server never nests compounds, so a nested reply is
+    /// a protocol violation — rejecting it bounds decode stack depth
+    /// against hostile frames.
+    fn decode_depth(buf: &[u8], depth: u8) -> Result<Self, ProtoError> {
         let mut d = Decoder::new(buf);
         let resp = match d.u8()? {
             0 => Response::Challenge { nonce: d.bytes()?.to_vec() },
@@ -438,6 +535,17 @@ impl Response {
             12 => Response::Err { code: d.u32()?, msg: d.str()? },
             13 => Response::FileMeta { version: d.u64()?, size: d.u64()?, digests: d.i32_vec()? },
             14 => Response::Range { version: d.u64()?, data: d.bytes()?.to_vec() },
+            15 => {
+                if depth > 0 {
+                    return Err(ProtoError("nested CompoundReply".into()));
+                }
+                let n = d.varint()? as usize;
+                let mut replies = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    replies.push(Response::decode_depth(d.bytes()?, depth + 1)?);
+                }
+                Response::CompoundReply { replies }
+            }
             t => return Err(ProtoError(format!("bad Response tag {t}"))),
         };
         d.expect_end()?;
@@ -515,6 +623,17 @@ mod tests {
             Request::Ping,
             Request::FetchMeta { path: "/a/big.dat".into() },
             Request::FetchRange { path: "/a/big.dat".into(), offset: 65536, len: 65536, expect_version: 4 },
+            Request::Compound { ops: vec![] },
+            Request::Compound {
+                ops: vec![
+                    CompoundOp::Apply { seq: 1, op: MetaOp::Mkdir { path: "/d".into() } },
+                    CompoundOp::Apply {
+                        seq: 2,
+                        op: MetaOp::WriteFull { path: "/f".into(), data: vec![9; 40], digests: vec![3] },
+                    },
+                    CompoundOp::Stat { path: "/f".into() },
+                ],
+            },
         ];
         for r in reqs {
             let b = r.encode();
@@ -553,6 +672,14 @@ mod tests {
             Response::Err { code: 2, msg: "no such file".into() },
             Response::FileMeta { version: 9, size: 1 << 20, digests: vec![3, -4, 5] },
             Response::Range { version: 9, data: vec![0x7F; 333] },
+            Response::CompoundReply { replies: vec![] },
+            Response::CompoundReply {
+                replies: vec![
+                    Response::Applied { seq: 1, new_version: 2 },
+                    Response::Err { code: 2, msg: "no such file".into() },
+                    Response::Attr { attr: attr() },
+                ],
+            },
         ];
         for r in resps {
             let b = r.encode();
@@ -622,6 +749,65 @@ mod tests {
         };
         assert_eq!(delta.wire_bytes(), 172);
         assert_eq!(MetaOp::Mkdir { path: "/d".into() }.wire_bytes(), 64);
+    }
+
+    #[test]
+    fn encode_compound_applies_matches_owned_encoding() {
+        let ops = vec![
+            (4u64, MetaOp::Mkdir { path: "/d".into() }),
+            (5u64, MetaOp::WriteFull { path: "/f".into(), data: vec![9; 100], digests: vec![1, 2] }),
+        ];
+        let owned = Request::Compound {
+            ops: ops
+                .iter()
+                .map(|(seq, op)| CompoundOp::Apply { seq: *seq, op: op.clone() })
+                .collect(),
+        };
+        assert_eq!(Request::encode_compound_applies(&ops), owned.encode());
+    }
+
+    #[test]
+    fn compound_wire_bytes_accounting() {
+        let apply = CompoundOp::Apply {
+            seq: 1,
+            op: MetaOp::WriteFull { path: "/f".into(), data: vec![0; 1000], digests: vec![] },
+        };
+        assert_eq!(apply.wire_bytes(), 1072);
+        assert_eq!(CompoundOp::Stat { path: "/f".into() }.wire_bytes(), 64);
+    }
+
+    #[test]
+    fn corrupted_compound_rejected() {
+        let mut b = Request::Compound {
+            ops: vec![CompoundOp::Apply { seq: 1, op: MetaOp::Mkdir { path: "/d".into() } }],
+        }
+        .encode();
+        b[2] = 0xFF; // bad CompoundOp tag
+        assert!(Request::decode(&b).is_err());
+        let mut b = Response::CompoundReply { replies: vec![Response::Pong] }.encode();
+        b.truncate(b.len() - 1); // short inner reply
+        assert!(Response::decode(&b).is_err());
+    }
+
+    #[test]
+    fn nested_compound_reply_rejected_not_recursed() {
+        // a hostile peer can nest CompoundReply a few bytes per level to
+        // attack the decode stack; the codec refuses any nesting (the
+        // server never produces it), bounding recursion at depth 1
+        let mut frame = Response::Pong.encode();
+        for _ in 0..2_000 {
+            let mut e = Encoder::new();
+            e.u8(15).varint(1).bytes(&frame);
+            frame = e.into_bytes();
+        }
+        assert!(Response::decode(&frame).is_err(), "deep nest must error, not overflow");
+        // one level of nesting is equally a protocol violation...
+        let mut e = Encoder::new();
+        e.u8(15).varint(1).bytes(&Response::CompoundReply { replies: vec![] }.encode());
+        assert!(Response::decode(&e.into_bytes()).is_err());
+        // ...while a flat reply still decodes
+        let flat = Response::CompoundReply { replies: vec![Response::Pong] };
+        assert_eq!(Response::decode(&flat.encode()).unwrap(), flat);
     }
 
     #[test]

@@ -12,7 +12,7 @@ mod messages;
 
 pub use codec::{Decoder, Encoder, ProtoError};
 pub use messages::{
-    DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, Request, Response, WireAttr,
+    CompoundOp, DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, Request, Response, WireAttr,
 };
 
 /// Frame a message body with a u32-LE length prefix (TCP transport).

@@ -7,17 +7,38 @@
 //! tails with the bit-identical [`native`] implementation (cross-checked
 //! by tests and golden vectors). With no artifacts directory the engine is
 //! fully native — same results, no PJRT dependency at runtime.
+//!
+//! The PJRT execution path needs the `xla` bindings crate, which is not
+//! part of the offline crate set; it is gated behind the `pjrt` cargo
+//! feature (see `rust/Cargo.toml`). The default build is fully native and
+//! produces bit-identical digests.
 
 pub mod native;
 
 use std::collections::HashMap;
-use std::path::Path;
+use std::fmt;
 use std::sync::Mutex;
 
-use anyhow::{anyhow, Context, Result};
-
 use crate::metrics::{names, Metrics};
-use crate::util::Json;
+
+/// Runtime error: artifact loading or PJRT execution failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "runtime error: {}", self.0)
+    }
+}
+impl std::error::Error for RuntimeError {}
+
+/// Result alias for runtime operations.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+#[cfg(feature = "pjrt")]
+fn rt_err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
 
 /// Result of planning a delta writeback for one file.
 #[derive(Debug, Clone, PartialEq)]
@@ -35,6 +56,7 @@ impl TransferPlan {
 }
 
 /// One loaded HLO artifact.
+#[cfg(feature = "pjrt")]
 struct Variant {
     kind: String,
     blocks: usize,
@@ -43,14 +65,17 @@ struct Variant {
     exe: xla::PjRtLoadedExecutable,
 }
 
-/// Digest/plan engine: PJRT-backed when artifacts are present, native
-/// otherwise. Thread-safe (`execute` is serialized per engine).
+/// Digest/plan engine: PJRT-backed when artifacts are present (and the
+/// `pjrt` feature is enabled), native otherwise. Thread-safe (`execute`
+/// is serialized per engine).
 pub struct DigestEngine {
+    #[cfg(feature = "pjrt")]
     pjrt: Option<Pjrt>,
     weights: Mutex<HashMap<usize, Vec<i32>>>,
     metrics: Metrics,
 }
 
+#[cfg(feature = "pjrt")]
 struct Pjrt {
     _client: xla::PjRtClient,
     variants: Vec<Variant>,
@@ -67,13 +92,15 @@ struct Pjrt {
 // at once. Cross-thread *use* is serialized by `gate`, which every
 // `execute` path locks first; the PJRT CPU client itself is thread-safe
 // under serialized access.
+#[cfg(feature = "pjrt")]
 unsafe impl Send for Pjrt {}
+#[cfg(feature = "pjrt")]
 unsafe impl Sync for Pjrt {}
 
-impl std::fmt::Debug for DigestEngine {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+impl fmt::Debug for DigestEngine {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         f.debug_struct("DigestEngine")
-            .field("backend", &if self.pjrt.is_some() { "pjrt" } else { "native" })
+            .field("backend", &if self.is_pjrt() { "pjrt" } else { "native" })
             .finish()
     }
 }
@@ -81,34 +108,57 @@ impl std::fmt::Debug for DigestEngine {
 impl DigestEngine {
     /// Native-only engine.
     pub fn native(metrics: Metrics) -> Self {
-        DigestEngine { pjrt: None, weights: Mutex::new(HashMap::new()), metrics }
+        DigestEngine {
+            #[cfg(feature = "pjrt")]
+            pjrt: None,
+            weights: Mutex::new(HashMap::new()),
+            metrics,
+        }
     }
 
     /// Load every artifact listed in `<dir>/manifest.json`; falls back to
-    /// native (with a warning) when the directory or manifest is missing.
+    /// native when the directory or manifest is missing (or the `pjrt`
+    /// feature is disabled — the build that matters offline).
+    #[cfg(not(feature = "pjrt"))]
     pub fn from_artifacts(dir: &str, metrics: Metrics) -> Result<Self> {
+        let _ = dir;
+        Ok(Self::native(metrics))
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.json`; falls back to
+    /// native when the directory or manifest is missing.
+    #[cfg(feature = "pjrt")]
+    pub fn from_artifacts(dir: &str, metrics: Metrics) -> Result<Self> {
+        use crate::util::Json;
+        use std::path::Path;
+
         let manifest_path = Path::new(dir).join("manifest.json");
         if !manifest_path.exists() {
             return Ok(Self::native(metrics));
         }
         let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?}"))?;
-        let manifest = Json::parse(&text).map_err(|e| anyhow!("manifest.json: {e}"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+            .map_err(|e| rt_err(format!("reading {manifest_path:?}: {e}")))?;
+        let manifest = Json::parse(&text).map_err(|e| rt_err(format!("manifest.json: {e}")))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| rt_err(format!("pjrt cpu client: {e:?}")))?;
         let mut variants = Vec::new();
         for v in manifest
             .get("variants")
             .and_then(|v| v.as_arr())
-            .ok_or_else(|| anyhow!("manifest.json: missing variants"))?
+            .ok_or_else(|| rt_err("manifest.json: missing variants"))?
         {
-            let file = v.get("file").and_then(|f| f.as_str()).ok_or_else(|| anyhow!("variant missing file"))?;
+            let file = v
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| rt_err("variant missing file"))?;
             let path = Path::new(dir).join(file);
             let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                path.to_str().ok_or_else(|| rt_err("non-utf8 path"))?,
             )
-            .map_err(|e| anyhow!("loading {path:?}: {e:?}"))?;
+            .map_err(|e| rt_err(format!("loading {path:?}: {e:?}")))?;
             let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp).map_err(|e| anyhow!("compiling {file}: {e:?}"))?;
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| rt_err(format!("compiling {file}: {e:?}")))?;
             variants.push(Variant {
                 kind: v.get("kind").and_then(|k| k.as_str()).unwrap_or("").to_string(),
                 blocks: v.get("blocks").and_then(|b| b.as_i64()).unwrap_or(0) as usize,
@@ -127,7 +177,14 @@ impl DigestEngine {
     }
 
     pub fn is_pjrt(&self) -> bool {
-        self.pjrt.is_some()
+        #[cfg(feature = "pjrt")]
+        {
+            self.pjrt.is_some()
+        }
+        #[cfg(not(feature = "pjrt"))]
+        {
+            false
+        }
     }
 
     fn weights_for(&self, lanes: usize) -> Vec<i32> {
@@ -154,6 +211,14 @@ impl DigestEngine {
 
     /// Digest through the AOT PJRT artifacts (None without artifacts or
     /// on an execution error). Bit-identical to [`Self::digests`].
+    #[cfg(not(feature = "pjrt"))]
+    pub fn digests_via_pjrt(&self, _data: &[u8], _block_bytes: usize) -> Option<Vec<i32>> {
+        None
+    }
+
+    /// Digest through the AOT PJRT artifacts (None without artifacts or
+    /// on an execution error). Bit-identical to [`Self::digests`].
+    #[cfg(feature = "pjrt")]
     pub fn digests_via_pjrt(&self, data: &[u8], block_bytes: usize) -> Option<Vec<i32>> {
         let pjrt = self.pjrt.as_ref()?;
         let lanes = block_bytes / 4;
@@ -167,6 +232,7 @@ impl DigestEngine {
     /// Chunk full variant-sized groups of blocks through PJRT; do the
     /// ragged tail natively. Returns None (caller falls back to native)
     /// only on an execution error.
+    #[cfg(feature = "pjrt")]
     fn digests_pjrt(
         &self,
         pjrt: &Pjrt,
@@ -218,6 +284,7 @@ impl DigestEngine {
         Some(out)
     }
 
+    #[cfg(feature = "pjrt")]
     fn exec_digest(
         &self,
         pjrt: &Pjrt,
@@ -228,16 +295,18 @@ impl DigestEngine {
         let _g = pjrt.gate.lock().unwrap();
         let blocks_lit = xla::Literal::vec1(lanes_buf)
             .reshape(&[var.blocks as i64, var.lanes as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            .map_err(|e| rt_err(format!("reshape: {e:?}")))?;
         let weights_lit = xla::Literal::vec1(&weights[..var.lanes]);
         let bufs = var
             .exe
             .execute::<xla::Literal>(&[blocks_lit, weights_lit])
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let tuple = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
-        let first = tuple.into_iter().next().ok_or_else(|| anyhow!("empty result tuple"))?;
-        first.to_vec::<i32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            .map_err(|e| rt_err(format!("execute: {e:?}")))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| rt_err(format!("to_literal: {e:?}")))?;
+        let tuple = lit.to_tuple().map_err(|e| rt_err(format!("to_tuple: {e:?}")))?;
+        let first = tuple.into_iter().next().ok_or_else(|| rt_err("empty result tuple"))?;
+        first.to_vec::<i32>().map_err(|e| rt_err(format!("to_vec: {e:?}")))
     }
 
     /// Full transfer plan: digests + dirty mask vs `old_digests` + a
@@ -257,6 +326,7 @@ impl DigestEngine {
         // identical maths, whole-file scope. The fused plan artifacts are
         // still exercised directly by `exec_plan_variant` (tests + the
         // single-chunk fast path below).
+        #[cfg(feature = "pjrt")]
         if let Some(pjrt) = &self.pjrt {
             let lanes = block_bytes / 4;
             let n_blocks = if data.is_empty() { 1 } else { data.len().div_ceil(block_bytes) };
@@ -264,7 +334,8 @@ impl DigestEngine {
                 v.kind == "plan" && v.lanes == lanes && v.blocks == n_blocks && v.stripes == num_stripes
             }) {
                 let weights = self.weights_for(lanes);
-                if let Ok(plan) = self.exec_plan_variant(pjrt, var, data, old_digests, block_bytes, &weights)
+                if let Ok(plan) =
+                    self.exec_plan_variant(pjrt, var, data, old_digests, block_bytes, &weights)
                 {
                     self.metrics.incr(names::DIGEST_CALLS);
                     self.metrics.add(names::DIGEST_BLOCKS, n_blocks as u64);
@@ -283,6 +354,7 @@ impl DigestEngine {
     }
 
     /// Execute a fused plan artifact for an exactly-matching geometry.
+    #[cfg(feature = "pjrt")]
     fn exec_plan_variant(
         &self,
         pjrt: &Pjrt,
@@ -308,22 +380,24 @@ impl DigestEngine {
 
         let blocks_lit = xla::Literal::vec1(&lanes_buf)
             .reshape(&[var.blocks as i64, var.lanes as i64])
-            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+            .map_err(|e| rt_err(format!("reshape: {e:?}")))?;
         let old_lit = xla::Literal::vec1(&old);
         let weights_lit = xla::Literal::vec1(&weights[..var.lanes]);
         let sizes_lit = xla::Literal::vec1(&sizes);
         let bufs = var
             .exe
             .execute::<xla::Literal>(&[blocks_lit, old_lit, weights_lit, sizes_lit])
-            .map_err(|e| anyhow!("execute: {e:?}"))?;
-        let lit = bufs[0][0].to_literal_sync().map_err(|e| anyhow!("to_literal: {e:?}"))?;
-        let mut tuple = lit.to_tuple().map_err(|e| anyhow!("to_tuple: {e:?}"))?;
+            .map_err(|e| rt_err(format!("execute: {e:?}")))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| rt_err(format!("to_literal: {e:?}")))?;
+        let mut tuple = lit.to_tuple().map_err(|e| rt_err(format!("to_tuple: {e:?}")))?;
         if tuple.len() != 3 {
-            return Err(anyhow!("plan artifact returned {} outputs", tuple.len()));
+            return Err(rt_err(format!("plan artifact returned {} outputs", tuple.len())));
         }
-        let stripe = tuple.pop().unwrap().to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
-        let dirty_i = tuple.pop().unwrap().to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
-        let digests = tuple.pop().unwrap().to_vec::<i32>().map_err(|e| anyhow!("{e:?}"))?;
+        let stripe = tuple.pop().unwrap().to_vec::<i32>().map_err(|e| rt_err(format!("{e:?}")))?;
+        let dirty_i = tuple.pop().unwrap().to_vec::<i32>().map_err(|e| rt_err(format!("{e:?}")))?;
+        let digests = tuple.pop().unwrap().to_vec::<i32>().map_err(|e| rt_err(format!("{e:?}")))?;
         Ok(TransferPlan { digests, dirty: dirty_i.into_iter().map(|d| d != 0).collect(), stripe })
     }
 }
@@ -407,5 +481,6 @@ mod tests {
     }
 
     // PJRT-backed equivalence tests live in rust/tests/pjrt_runtime.rs
-    // (they need the artifacts/ directory built by `make artifacts`).
+    // (they need the artifacts/ directory built by `make artifacts` and
+    // the `pjrt` cargo feature).
 }

@@ -17,14 +17,14 @@
 //! * grant lock leases via [`lease::LockTable`] and expire orphans;
 //! * simulate crash/restart (the paper restarts the server from crontab).
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 
 use crate::callback::NotifyChannel;
 use crate::homefs::{FileStore, FsError};
 use crate::lease::{Acquire, LockTable};
 use crate::metrics::{names, Metrics};
-use crate::proto::{DirEntry, FileImage, MetaOp, NotifyEvent, Request, Response, WireAttr};
+use crate::proto::{CompoundOp, DirEntry, FileImage, MetaOp, NotifyEvent, Request, Response, WireAttr};
 use crate::runtime::DigestEngine;
 use crate::simnet::VirtualTime;
 use crate::util::path as vpath;
@@ -48,6 +48,13 @@ pub struct FileServer {
     callbacks: Vec<CallbackReg>,
     /// Highest applied meta-op sequence per client (idempotent replay).
     applied: HashMap<u64, u64>,
+    /// Seqs at or below the watermark that failed SEMANTICALLY, per
+    /// client. A compound advances the watermark past a mid-batch
+    /// failure (later ops in the frame still apply), so after a lost
+    /// reply the replay of the failed seq must be retried for real —
+    /// answering it as a duplicate would falsely ack a write that never
+    /// landed. Bounded per client (oldest evicted).
+    failed: HashMap<u64, BTreeSet<u64>>,
     /// Digest cache: path -> (version, digests). Fetches of unchanged
     /// files skip recomputation (hot-path optimization, EXPERIMENTS §Perf).
     digest_cache: HashMap<String, (u64, Vec<i32>)>,
@@ -98,6 +105,7 @@ impl FileServer {
             locks: LockTable::new(lease_s),
             callbacks: Vec::new(),
             applied: HashMap::new(),
+            failed: HashMap::new(),
             digest_cache: HashMap::new(),
             channel_map: HashMap::new(),
             metrics,
@@ -134,6 +142,7 @@ impl FileServer {
         self.callbacks.clear();
         self.locks = LockTable::new(self.locks.lease_secs());
         self.applied.clear();
+        self.failed.clear();
     }
 
     /// Restart (the paper uses a crontab job). Clients must re-register
@@ -283,6 +292,25 @@ impl FileServer {
                 Response::CallbackRegistered
             }
             Request::Apply { seq, op } => self.apply(client_id, seq, op, now),
+            Request::Compound { ops } => {
+                // one WAN round trip, N ops: each op gets the exact
+                // Response its single-op request would have produced, so
+                // the client sees partial failure per op and replays only
+                // what did not land (idempotent via per-client seqs).
+                // (Round-trip accounting lives client-side in the links —
+                // the sim deployment shares one metrics sink.)
+                let replies = ops
+                    .into_iter()
+                    .map(|op| match op {
+                        CompoundOp::Apply { seq, op } => self.apply(client_id, seq, op, now),
+                        CompoundOp::Stat { path } => match self.fs.stat(&path) {
+                            Ok(a) => Response::Attr { attr: WireAttr::from_attr(&a) },
+                            Err(e) => err_resp(&e),
+                        },
+                    })
+                    .collect();
+                Response::CompoundReply { replies }
+            }
             Request::LockAcquire { path, kind, owner } => {
                 self.expire_leases(now);
                 match self.locks.acquire(&vpath::normalize(&path), kind, owner, now) {
@@ -326,9 +354,15 @@ impl FileServer {
         self.channel_map.get(&client_id).cloned()
     }
 
+    /// Retained failed-seq records per client (tiny; evicting the oldest
+    /// only risks falsely acking a replay of a very stale failed op).
+    const MAX_FAILED_SEQS: usize = 1024;
+
     fn apply(&mut self, client_id: u64, seq: u64, op: MetaOp, now: VirtualTime) -> Response {
         let last = self.applied.get(&client_id).copied().unwrap_or(0);
-        if seq <= last {
+        let previously_failed =
+            self.failed.get(&client_id).map(|s| s.contains(&seq)).unwrap_or(false);
+        if seq <= last && !previously_failed {
             // replayed duplicate: already applied — answer success again
             let version = self.fs.stat(op.path()).map(|a| a.version).unwrap_or(0);
             return Response::Applied { seq, new_version: version };
@@ -370,7 +404,15 @@ impl FileServer {
         };
         match result {
             Ok(touched) => {
-                self.applied.insert(client_id, seq);
+                // max(): a successful retry of a previously-failed low seq
+                // must not regress the watermark
+                let wm = self.applied.entry(client_id).or_insert(0);
+                *wm = (*wm).max(seq);
+                if previously_failed {
+                    if let Some(s) = self.failed.get_mut(&client_id) {
+                        s.remove(&seq);
+                    }
+                }
                 let version = self.fs.stat(op.path()).map(|a| a.version).unwrap_or(0);
                 for (path, removed) in touched {
                     if removed {
@@ -383,7 +425,14 @@ impl FileServer {
                 }
                 Response::Applied { seq, new_version: version }
             }
-            Err(e) => err_resp(&e),
+            Err(e) => {
+                let set = self.failed.entry(client_id).or_default();
+                set.insert(seq);
+                while set.len() > Self::MAX_FAILED_SEQS {
+                    set.pop_first();
+                }
+                err_resp(&e)
+            }
         }
     }
 
@@ -509,6 +558,109 @@ mod tests {
         let r2 = s.handle(1, Request::Apply { seq: 1, op }, t(2.0));
         assert!(matches!(r2, Response::Applied { seq: 1, .. }));
         assert_eq!(s.home().stat("/home/user/new").unwrap().version, v1);
+    }
+
+    #[test]
+    fn compound_applies_in_order_with_per_op_status() {
+        let mut s = server();
+        let r = s.handle(
+            1,
+            Request::Compound {
+                ops: vec![
+                    CompoundOp::Apply { seq: 1, op: MetaOp::Mkdir { path: "/home/user/new".into() } },
+                    CompoundOp::Apply {
+                        seq: 2,
+                        op: MetaOp::WriteFull {
+                            path: "/home/user/new/f.txt".into(),
+                            data: b"compound".to_vec(),
+                            digests: vec![],
+                        },
+                    },
+                    // semantic failure mid-batch must not stop later ops
+                    CompoundOp::Apply { seq: 3, op: MetaOp::Unlink { path: "/home/user/ghost".into() } },
+                    CompoundOp::Stat { path: "/home/user/new/f.txt".into() },
+                ],
+            },
+            t(1.0),
+        );
+        let Response::CompoundReply { replies } = r else { panic!("{r:?}") };
+        assert_eq!(replies.len(), 4);
+        assert!(matches!(replies[0], Response::Applied { seq: 1, .. }));
+        assert!(matches!(replies[1], Response::Applied { seq: 2, .. }));
+        assert!(matches!(replies[2], Response::Err { code: 2, .. }));
+        assert!(matches!(&replies[3], Response::Attr { attr } if attr.size == 8));
+        assert_eq!(s.home().read("/home/user/new/f.txt").unwrap(), b"compound");
+        // a failed op does not advance the idempotence watermark past it:
+        // replaying seq 3 after fixing the cause still applies
+        s.home_mut().write("/home/user/ghost", b"x", t(2.0)).unwrap();
+        let r = s.handle(
+            1,
+            Request::Compound {
+                ops: vec![CompoundOp::Apply { seq: 3, op: MetaOp::Unlink { path: "/home/user/ghost".into() } }],
+            },
+            t(3.0),
+        );
+        let Response::CompoundReply { replies } = r else { panic!("{r:?}") };
+        assert!(matches!(replies[0], Response::Applied { seq: 3, .. }), "{replies:?}");
+        assert!(!s.home().exists("/home/user/ghost"));
+    }
+
+    #[test]
+    fn compound_replay_retries_failed_ops_not_false_acks() {
+        let mut s = server();
+        let ops = vec![
+            // fails (no such file) while the NEXT op advances the watermark
+            CompoundOp::Apply { seq: 1, op: MetaOp::Unlink { path: "/home/user/ghost".into() } },
+            CompoundOp::Apply { seq: 2, op: MetaOp::Mkdir { path: "/home/user/d2".into() } },
+        ];
+        let r = s.handle(1, Request::Compound { ops: ops.clone() }, t(1.0));
+        let Response::CompoundReply { replies } = r else { panic!("{r:?}") };
+        assert!(matches!(replies[0], Response::Err { code: 2, .. }));
+        assert!(matches!(replies[1], Response::Applied { seq: 2, .. }));
+        // the reply frame is lost; the client replays the whole compound.
+        // The failed seq must fail AGAIN — answering it as a duplicate
+        // would falsely ack a write that never landed.
+        let r = s.handle(1, Request::Compound { ops }, t(2.0));
+        let Response::CompoundReply { replies } = r else { panic!("{r:?}") };
+        assert!(matches!(replies[0], Response::Err { code: 2, .. }), "{replies:?}");
+        assert!(matches!(replies[1], Response::Applied { seq: 2, .. }));
+        // once the cause is fixed, a retry under the SAME seq applies...
+        s.home_mut().write("/home/user/ghost", b"x", t(3.0)).unwrap();
+        let r = s.handle(
+            1,
+            Request::Apply { seq: 1, op: MetaOp::Unlink { path: "/home/user/ghost".into() } },
+            t(4.0),
+        );
+        assert!(matches!(r, Response::Applied { seq: 1, .. }), "{r:?}");
+        assert!(!s.home().exists("/home/user/ghost"));
+        // ...and the watermark did not regress: seq 2 is still a duplicate
+        let before = s.home().stat("/home/user/d2").unwrap().version;
+        let r = s.handle(
+            1,
+            Request::Apply { seq: 2, op: MetaOp::Mkdir { path: "/home/user/d2".into() } },
+            t(5.0),
+        );
+        assert!(matches!(r, Response::Applied { seq: 2, .. }));
+        assert_eq!(s.home().stat("/home/user/d2").unwrap().version, before);
+    }
+
+    #[test]
+    fn compound_replay_is_idempotent() {
+        let mut s = server();
+        let ops = vec![
+            CompoundOp::Apply {
+                seq: 1,
+                op: MetaOp::WriteFull { path: "/home/user/q".into(), data: b"v".to_vec(), digests: vec![] },
+            },
+            CompoundOp::Apply { seq: 2, op: MetaOp::Mkdir { path: "/home/user/d".into() } },
+        ];
+        s.handle(1, Request::Compound { ops: ops.clone() }, t(1.0));
+        let v1 = s.home().stat("/home/user/q").unwrap().version;
+        // whole-compound replay after a lost reply: versions must not move
+        let r = s.handle(1, Request::Compound { ops }, t(2.0));
+        let Response::CompoundReply { replies } = r else { panic!("{r:?}") };
+        assert!(replies.iter().all(|r| matches!(r, Response::Applied { .. })));
+        assert_eq!(s.home().stat("/home/user/q").unwrap().version, v1);
     }
 
     #[test]

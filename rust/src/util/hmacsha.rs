@@ -1,0 +1,228 @@
+//! SHA-256 and HMAC-SHA256 (FIPS 180-4 / RFC 2104), dependency-free.
+//!
+//! The offline crate set has no `sha2`/`hmac`, so the USSH challenge-
+//! response proof ([`crate::auth`]) uses this implementation. Pinned by
+//! the FIPS/RFC known-answer vectors in the tests below.
+
+const H0: [u32; 8] = [
+    0x6a09e667, 0xbb67ae85, 0x3c6ef372, 0xa54ff53a, 0x510e527f, 0x9b05688c, 0x1f83d9ab, 0x5be0cd19,
+];
+
+const K: [u32; 64] = [
+    0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4, 0xab1c5ed5,
+    0xd807aa98, 0x12835b01, 0x243185be, 0x550c7dc3, 0x72be5d74, 0x80deb1fe, 0x9bdc06a7, 0xc19bf174,
+    0xe49b69c1, 0xefbe4786, 0x0fc19dc6, 0x240ca1cc, 0x2de92c6f, 0x4a7484aa, 0x5cb0a9dc, 0x76f988da,
+    0x983e5152, 0xa831c66d, 0xb00327c8, 0xbf597fc7, 0xc6e00bf3, 0xd5a79147, 0x06ca6351, 0x14292967,
+    0x27b70a85, 0x2e1b2138, 0x4d2c6dfc, 0x53380d13, 0x650a7354, 0x766a0abb, 0x81c2c92e, 0x92722c85,
+    0xa2bfe8a1, 0xa81a664b, 0xc24b8b70, 0xc76c51a3, 0xd192e819, 0xd6990624, 0xf40e3585, 0x106aa070,
+    0x19a4c116, 0x1e376c08, 0x2748774c, 0x34b0bcb5, 0x391c0cb3, 0x4ed8aa4a, 0x5b9cca4f, 0x682e6ff3,
+    0x748f82ee, 0x78a5636f, 0x84c87814, 0x8cc70208, 0x90befffa, 0xa4506ceb, 0xbef9a3f7, 0xc67178f2,
+];
+
+fn compress(state: &mut [u32; 8], block: &[u8]) {
+    debug_assert_eq!(block.len(), 64);
+    let mut w = [0u32; 64];
+    for (i, four) in block.chunks_exact(4).enumerate() {
+        w[i] = u32::from_be_bytes([four[0], four[1], four[2], four[3]]);
+    }
+    for i in 16..64 {
+        let s0 = w[i - 15].rotate_right(7) ^ w[i - 15].rotate_right(18) ^ (w[i - 15] >> 3);
+        let s1 = w[i - 2].rotate_right(17) ^ w[i - 2].rotate_right(19) ^ (w[i - 2] >> 10);
+        w[i] = w[i - 16]
+            .wrapping_add(s0)
+            .wrapping_add(w[i - 7])
+            .wrapping_add(s1);
+    }
+    let [mut a, mut b, mut c, mut d, mut e, mut f, mut g, mut h] = *state;
+    for i in 0..64 {
+        let s1 = e.rotate_right(6) ^ e.rotate_right(11) ^ e.rotate_right(25);
+        let ch = (e & f) ^ (!e & g);
+        let t1 = h.wrapping_add(s1).wrapping_add(ch).wrapping_add(K[i]).wrapping_add(w[i]);
+        let s0 = a.rotate_right(2) ^ a.rotate_right(13) ^ a.rotate_right(22);
+        let maj = (a & b) ^ (a & c) ^ (b & c);
+        let t2 = s0.wrapping_add(maj);
+        h = g;
+        g = f;
+        f = e;
+        e = d.wrapping_add(t1);
+        d = c;
+        c = b;
+        b = a;
+        a = t1.wrapping_add(t2);
+    }
+    state[0] = state[0].wrapping_add(a);
+    state[1] = state[1].wrapping_add(b);
+    state[2] = state[2].wrapping_add(c);
+    state[3] = state[3].wrapping_add(d);
+    state[4] = state[4].wrapping_add(e);
+    state[5] = state[5].wrapping_add(f);
+    state[6] = state[6].wrapping_add(g);
+    state[7] = state[7].wrapping_add(h);
+}
+
+/// SHA-256 over the concatenation of `parts`.
+pub fn sha256_parts(parts: &[&[u8]]) -> [u8; 32] {
+    let mut state = H0;
+    let mut buf = [0u8; 64];
+    let mut buffered = 0usize;
+    let mut total = 0u64;
+    for part in parts {
+        total += part.len() as u64;
+        let mut rest: &[u8] = part;
+        if buffered > 0 {
+            let take = rest.len().min(64 - buffered);
+            buf[buffered..buffered + take].copy_from_slice(&rest[..take]);
+            buffered += take;
+            rest = &rest[take..];
+            if buffered == 64 {
+                compress(&mut state, &buf);
+                buffered = 0;
+            }
+            if rest.is_empty() {
+                // the whole part fit in the buffer; keep it buffered
+                continue;
+            }
+            // rest is non-empty, so the buffer filled and flushed above
+            debug_assert_eq!(buffered, 0);
+        }
+        let mut chunks = rest.chunks_exact(64);
+        for block in &mut chunks {
+            compress(&mut state, block);
+        }
+        let tail = chunks.remainder();
+        buf[..tail.len()].copy_from_slice(tail);
+        buffered = tail.len();
+    }
+    // padding: 0x80, zeros, 64-bit big-endian bit length
+    let bit_len = total.wrapping_mul(8);
+    buf[buffered] = 0x80;
+    buffered += 1;
+    if buffered > 56 {
+        buf[buffered..].fill(0);
+        compress(&mut state, &buf);
+        buffered = 0;
+    }
+    buf[buffered..56].fill(0);
+    buf[56..].copy_from_slice(&bit_len.to_be_bytes());
+    compress(&mut state, &buf);
+
+    let mut out = [0u8; 32];
+    for (i, word) in state.iter().enumerate() {
+        out[i * 4..i * 4 + 4].copy_from_slice(&word.to_be_bytes());
+    }
+    out
+}
+
+/// SHA-256 of one buffer.
+pub fn sha256(data: &[u8]) -> [u8; 32] {
+    sha256_parts(&[data])
+}
+
+/// HMAC-SHA256 of the concatenation of `parts` under `key`.
+pub fn hmac_sha256(key: &[u8], parts: &[&[u8]]) -> [u8; 32] {
+    let mut k = [0u8; 64];
+    if key.len() > 64 {
+        k[..32].copy_from_slice(&sha256(key));
+    } else {
+        k[..key.len()].copy_from_slice(key);
+    }
+    let mut ipad = [0u8; 64];
+    let mut opad = [0u8; 64];
+    for i in 0..64 {
+        ipad[i] = k[i] ^ 0x36;
+        opad[i] = k[i] ^ 0x5c;
+    }
+    let mut inner_parts: Vec<&[u8]> = Vec::with_capacity(parts.len() + 1);
+    inner_parts.push(&ipad);
+    inner_parts.extend_from_slice(parts);
+    let inner = sha256_parts(&inner_parts);
+    sha256_parts(&[&opad, &inner])
+}
+
+/// Constant-time byte-slice equality (length leak only).
+pub fn ct_eq(a: &[u8], b: &[u8]) -> bool {
+    if a.len() != b.len() {
+        return false;
+    }
+    let mut diff = 0u8;
+    for (x, y) in a.iter().zip(b) {
+        diff |= x ^ y;
+    }
+    diff == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hex(bytes: &[u8]) -> String {
+        bytes.iter().map(|b| format!("{b:02x}")).collect()
+    }
+
+    #[test]
+    fn fips_known_answers() {
+        assert_eq!(
+            hex(&sha256(b"")),
+            "e3b0c44298fc1c149afbf4c8996fb92427ae41e4649b934ca495991b7852b855"
+        );
+        assert_eq!(
+            hex(&sha256(b"abc")),
+            "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+        );
+        assert_eq!(
+            hex(&sha256(b"abcdbcdecdefdefgefghfghighijhijkijkljklmklmnlmnomnopnopq")),
+            "248d6a61d20638b8e5c026930c3e6039a33ce45964ff2167f6ecedd419db06c1"
+        );
+    }
+
+    #[test]
+    fn multi_part_equals_concatenation() {
+        let whole = sha256(b"hello world, this spans several parts");
+        let parts = sha256_parts(&[b"hello ", b"world, ", b"this spans", b" several parts"]);
+        assert_eq!(whole, parts);
+        // part boundaries that straddle the 64-byte block boundary
+        let a = vec![0xABu8; 61];
+        let b = vec![0xCDu8; 130];
+        let mut cat = a.clone();
+        cat.extend_from_slice(&b);
+        assert_eq!(sha256(&cat), sha256_parts(&[&a, &b]));
+    }
+
+    #[test]
+    fn rfc4231_hmac_case1() {
+        let key = [0x0bu8; 20];
+        let mac = hmac_sha256(&key, &[b"Hi There"]);
+        assert_eq!(
+            hex(&mac),
+            "b0344c61d8db38535ca8afceaf0bf12b881dc200c9833da726e9376c2e32cff7"
+        );
+    }
+
+    #[test]
+    fn rfc4231_hmac_case2() {
+        let mac = hmac_sha256(b"Jefe", &[b"what do ya want ", b"for nothing?"]);
+        assert_eq!(
+            hex(&mac),
+            "5bdcc146bf60754e6a042426089575c75a003f089d2739839dec58b964ec3843"
+        );
+    }
+
+    #[test]
+    fn long_key_is_hashed_first() {
+        let key = vec![0xAAu8; 131];
+        // RFC 4231 test case 6
+        let mac = hmac_sha256(&key, &[b"Test Using Larger Than Block-Size Key - Hash Key First"]);
+        assert_eq!(
+            hex(&mac),
+            "60e431591ee0b67f0d8a26aacbf5b77f8e0bc6213728c5140546040f0ee37f54"
+        );
+    }
+
+    #[test]
+    fn ct_eq_basic() {
+        assert!(ct_eq(b"abc", b"abc"));
+        assert!(!ct_eq(b"abc", b"abd"));
+        assert!(!ct_eq(b"abc", b"ab"));
+        assert!(ct_eq(b"", b""));
+    }
+}

@@ -1,8 +1,9 @@
 //! Shared utilities: deterministic PRNG, minimal JSON, statistics, virtual
-//! path handling, and a property-test harness (offline stand-ins for
-//! `rand`, `serde_json`, and `proptest`, which are unavailable in the
-//! vendored crate set — see DESIGN.md §7).
+//! path handling, SHA-256/HMAC, and a property-test harness (offline
+//! stand-ins for `rand`, `serde_json`, `sha2`/`hmac`, and `proptest`,
+//! which are unavailable in the vendored crate set — see DESIGN.md §7).
 
+pub mod hmacsha;
 pub mod json;
 pub mod path;
 pub mod prop;

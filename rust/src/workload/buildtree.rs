@@ -116,15 +116,16 @@ pub fn build<V: Vfs>(vfs: &mut V, root: &str, spec: &BuildSpec) -> Result<BuildS
             // sibling header, emit object
             vfs.stat(&src)?;
             let fd = vfs.open(&src, OpenFlags::rdonly())?;
+            let mut record = vec![0u8; 64 * 1024];
             let mut bytes = 0u64;
             let mut lines = 0usize;
             loop {
-                let buf = vfs.read(fd, 64 * 1024)?;
-                if buf.is_empty() {
+                let n = vfs.read(fd, &mut record)?;
+                if n == 0 {
                     break;
                 }
-                lines += buf.iter().filter(|&&b| b == b'\n').count();
-                bytes += buf.len() as u64;
+                lines += record[..n].iter().filter(|&&b| b == b'\n').count();
+                bytes += n as u64;
             }
             vfs.close(fd)?;
             let _ = vfs.scan_file(&header, 64 * 1024)?;

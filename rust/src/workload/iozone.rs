@@ -40,17 +40,20 @@ pub fn write_test<V: Vfs>(vfs: &mut V, path: &str, bytes: u64, seed: u64) -> Res
     Ok(IozoneResult { file_bytes: bytes, secs, mib_per_sec: mib_per_sec(bytes, secs) })
 }
 
-/// Sequential read of the whole file (open, read records, close).
+/// Sequential read of the whole file (open, read records, close). The
+/// record buffer is caller-side and reused — the v2 `Vfs` contract means
+/// no per-read allocation anywhere on this path.
 pub fn read_test<V: Vfs>(vfs: &mut V, path: &str) -> Result<IozoneResult, FsError> {
+    let mut record = vec![0u8; RECORD];
     let t0 = vfs.now();
     let fd = vfs.open(path, OpenFlags::rdonly())?;
     let mut total = 0u64;
     loop {
-        let buf = vfs.read(fd, RECORD)?;
-        if buf.is_empty() {
+        let n = vfs.read(fd, &mut record)?;
+        if n == 0 {
             break;
         }
-        total += buf.len() as u64;
+        total += n as u64;
     }
     vfs.close(fd)?;
     let secs = vfs.now().saturating_sub(t0).as_secs();

@@ -4,17 +4,19 @@
 use crate::client::{OpenFlags, Vfs};
 use crate::homefs::FsError;
 
-/// Run `wc -l` on `path`: returns (line count, elapsed seconds).
+/// Run `wc -l` on `path`: returns (line count, elapsed seconds). One
+/// reused `chunk`-byte buffer — no allocation per read (v2 `Vfs`).
 pub fn wc_l<V: Vfs>(vfs: &mut V, path: &str, chunk: usize) -> Result<(u64, f64), FsError> {
+    let mut buf = vec![0u8; chunk.max(1)];
     let t0 = vfs.now();
     let fd = vfs.open(path, OpenFlags::rdonly())?;
     let mut lines = 0u64;
     loop {
-        let buf = vfs.read(fd, chunk)?;
-        if buf.is_empty() {
+        let n = vfs.read(fd, &mut buf)?;
+        if n == 0 {
             break;
         }
-        lines += buf.iter().filter(|&&b| b == b'\n').count() as u64;
+        lines += buf[..n].iter().filter(|&&b| b == b'\n').count() as u64;
     }
     vfs.close(fd)?;
     Ok((lines, vfs.now().saturating_sub(t0).as_secs()))

@@ -3,8 +3,10 @@
 //! **bit-for-bit** with the native digest engine (which is itself pinned
 //! by golden vectors shared with the python tests).
 //!
-//! Skipped gracefully when `artifacts/` hasn't been built yet (run
-//! `make artifacts` first); CI always builds them.
+//! Needs the `pjrt` cargo feature (the `xla` bindings are not in the
+//! offline crate set) and is skipped gracefully when `artifacts/` hasn't
+//! been built yet (run `make artifacts` first).
+#![cfg(feature = "pjrt")]
 
 use xufs::metrics::Metrics;
 use xufs::runtime::{block_byte_sizes, DigestEngine};

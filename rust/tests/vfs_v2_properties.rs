@@ -1,0 +1,504 @@
+//! Vfs v2 contract tests: buffer-based positional I/O must be equivalent
+//! to the sequential defaults on every implementor, open-time flag
+//! validation must reject nonsense up front, the whole-file convenience
+//! defaults must close their fd on every path, and the compound-RPC queue
+//! flush must ship K queued meta-ops in exactly ONE WAN round trip with
+//! per-op status (metrics-asserted).
+
+use std::sync::Arc;
+
+use xufs::baselines::LocalFs;
+use xufs::client::{Fd, MetaBatchOp, MetaResult, OpenFlags, ServerLink, Vfs, WritebackMode};
+use xufs::config::XufsConfig;
+use xufs::coordinator::SimWorld;
+use xufs::homefs::{FileStore, FsError};
+use xufs::metrics::names;
+use xufs::proto::{LockKind, WireAttr};
+use xufs::simnet::{SimClock, VirtualTime};
+use xufs::util::{prop, Rng};
+use xufs::vdisk::DiskModel;
+use xufs::{prop_assert, prop_assert_eq};
+
+fn t(s: f64) -> VirtualTime {
+    VirtualTime::from_secs(s)
+}
+
+fn local() -> LocalFs {
+    LocalFs::new(FileStore::default(), DiskModel::new(400.0e6, 0.002), Arc::new(SimClock::new()))
+}
+
+fn world_with_home() -> SimWorld {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+    });
+    world
+}
+
+/// The core v2 property: an interleaving of sequential writes (cursor)
+/// and positional writes (explicit offsets, incl. hole-punching past
+/// EOF) must leave the file byte-identical to a flat `Vec<u8>` model,
+/// positional reads must match model slices without moving the cursor,
+/// and a sequential scan must reproduce the model exactly.
+fn positional_matches_sequential<V: Vfs>(
+    vfs: &mut V,
+    path: &str,
+    rng: &mut Rng,
+    size: usize,
+) -> Result<(), String> {
+    let e = |e: FsError| e.to_string();
+    let mut model: Vec<u8> = Vec::new();
+    let fd = vfs.open(path, OpenFlags::wronly_create()).map_err(e)?;
+    let mut cursor = 0u64;
+    for _ in 0..(2 + size / 8) {
+        let mut chunk = vec![0u8; rng.range(1, 2048) as usize];
+        rng.fill_bytes(&mut chunk);
+        if rng.chance(0.5) {
+            // sequential write at the cursor
+            vfs.write(fd, &chunk).map_err(e)?;
+            let end = cursor as usize + chunk.len();
+            if model.len() < end {
+                model.resize(end, 0);
+            }
+            model[cursor as usize..end].copy_from_slice(&chunk);
+            cursor += chunk.len() as u64;
+            prop_assert_eq!(vfs.tell(fd).map_err(e)?, cursor);
+        } else {
+            // positional write, possibly past EOF (zero-filled hole)
+            let off = rng.below(model.len() as u64 + 1024);
+            vfs.pwrite(fd, &chunk, off).map_err(e)?;
+            let end = off as usize + chunk.len();
+            if model.len() < end {
+                model.resize(end, 0);
+            }
+            model[off as usize..end].copy_from_slice(&chunk);
+            // pwrite must not move the cursor
+            prop_assert_eq!(vfs.tell(fd).map_err(e)?, cursor);
+        }
+        if rng.chance(0.2) {
+            cursor = rng.below(model.len() as u64 + 1);
+            vfs.seek(fd, cursor).map_err(e)?;
+        }
+    }
+    vfs.close(fd).map_err(e)?;
+
+    let fd = vfs.open(path, OpenFlags::rdonly()).map_err(e)?;
+    for _ in 0..8 {
+        let off = rng.below(model.len() as u64 + 64);
+        let want_len = rng.range(1, 4096) as usize;
+        let mut buf = vec![0u8; want_len];
+        let n = vfs.pread(fd, &mut buf, off).map_err(e)?;
+        let expect: &[u8] = if (off as usize) < model.len() {
+            &model[off as usize..(off as usize + want_len).min(model.len())]
+        } else {
+            &[]
+        };
+        prop_assert_eq!(n, expect.len());
+        prop_assert!(&buf[..n] == expect, "pread mismatch at {off}");
+        // pread must not move the cursor
+        prop_assert_eq!(vfs.tell(fd).map_err(e)?, 0);
+    }
+    let mut got = Vec::new();
+    let mut buf = vec![0u8; 1000];
+    loop {
+        let n = vfs.read(fd, &mut buf).map_err(e)?;
+        if n == 0 {
+            break;
+        }
+        got.extend_from_slice(&buf[..n]);
+    }
+    prop_assert_eq!(got.len(), model.len());
+    prop_assert!(got == model, "sequential scan does not match the model");
+    vfs.close(fd).map_err(e)?;
+    Ok(())
+}
+
+#[test]
+fn prop_positional_equals_sequential_localfs() {
+    prop::check(60, |rng, size| {
+        let mut l = local();
+        positional_matches_sequential(&mut l, "/w/prop.dat", rng, size)
+    });
+}
+
+#[test]
+fn prop_positional_equals_sequential_xufs() {
+    prop::check(25, |rng, size| {
+        let mut world = world_with_home();
+        let mut c = world.mount("/home/u").map_err(|e| e.to_string())?;
+        positional_matches_sequential(&mut c, "/home/u/prop.dat", rng, size)?;
+        // the aggregated close flushed home: the home copy must equal the
+        // cache copy (write-backs survive the positional path)
+        let cache_len = c.stat("/home/u/prop.dat").map_err(|e| e.to_string())?.size;
+        let home = world.home(|s| s.home().read("/home/u/prop.dat").unwrap().to_vec());
+        prop_assert_eq!(home.len() as u64, cache_len);
+        Ok(())
+    });
+}
+
+#[test]
+fn pread_leaves_cursor_for_sequential_read() {
+    let mut l = local();
+    l.write_file("/f", b"abcdef", 16).unwrap();
+    let fd = l.open("/f", OpenFlags::rdonly()).unwrap();
+    let mut b2 = [0u8; 2];
+    assert_eq!(l.read(fd, &mut b2).unwrap(), 2);
+    assert_eq!(&b2, b"ab");
+    // positional read elsewhere...
+    assert_eq!(l.pread(fd, &mut b2, 4).unwrap(), 2);
+    assert_eq!(&b2, b"ef");
+    // ...does not disturb the sequential cursor
+    assert_eq!(l.tell(fd).unwrap(), 2);
+    assert_eq!(l.read(fd, &mut b2).unwrap(), 2);
+    assert_eq!(&b2, b"cd");
+    l.close(fd).unwrap();
+}
+
+#[test]
+fn append_flag_starts_cursor_at_eof() {
+    let mut l = local();
+    l.write_file("/log", b"one\n", 16).unwrap();
+    let fd = l.open("/log", OpenFlags::append()).unwrap();
+    assert_eq!(l.tell(fd).unwrap(), 4);
+    l.write(fd, b"two\n").unwrap();
+    l.close(fd).unwrap();
+    assert_eq!(l.fs.read("/log").unwrap(), b"one\ntwo\n");
+}
+
+#[test]
+fn invalid_flags_rejected_at_open_by_every_implementor() {
+    let bad = [
+        OpenFlags::empty(),
+        OpenFlags::READ | OpenFlags::TRUNCATE,
+        OpenFlags::READ | OpenFlags::CREATE,
+        OpenFlags::WRITE | OpenFlags::TRUNCATE | OpenFlags::APPEND,
+    ];
+    // LocalFs
+    let mut l = local();
+    l.write_file("/f", b"x", 4).unwrap();
+    for f in bad {
+        assert!(matches!(l.open("/f", f), Err(FsError::Invalid(_))), "LocalFs {f:?}");
+    }
+    // XufsClient
+    let mut world = world_with_home();
+    world.home(|s| s.home_mut().write("/home/u/f", b"x", t(0.0)).unwrap());
+    let mut c = world.mount("/home/u").unwrap();
+    for f in bad {
+        assert!(matches!(c.open("/home/u/f", f), Err(FsError::Invalid(_))), "Xufs {f:?}");
+    }
+    // GpfsWan
+    let clock = Arc::new(SimClock::new());
+    let mut fs = FileStore::default();
+    fs.write("/f", b"x", t(0.0)).unwrap();
+    let mut g = xufs::baselines::GpfsWan::new(fs.clone(), xufs::baselines::GpfsWanParams::default(), clock.clone());
+    for f in bad {
+        assert!(matches!(g.open("/f", f), Err(FsError::Invalid(_))), "Gpfs {f:?}");
+    }
+    // NfsClient
+    let wan = Arc::new(xufs::simnet::Wan::new(xufs::config::WanConfig::default(), (*clock).clone()));
+    let mut n = xufs::baselines::NfsClient::new(fs, clock, wan, DiskModel::new(400.0e6, 0.002), 1);
+    for f in bad {
+        assert!(matches!(n.open("/f", f), Err(FsError::Invalid(_))), "Nfs {f:?}");
+    }
+}
+
+#[test]
+fn compound_flush_is_single_round_trip() {
+    let mut world = world_with_home();
+    let mut c = world.mount("/home/u").unwrap();
+    c.writeback = WritebackMode::Async;
+    c.async_flush_threshold = usize::MAX;
+    for i in 0..8 {
+        c.write_file(&format!("/home/u/f{i}.dat"), b"compound payload", 4096).unwrap();
+    }
+    let k = c.queue_len();
+    assert!(k >= 16, "each file queues a Create + a WriteFull (got {k})");
+    let rpcs_before = world.wan.stats().rpcs;
+    let frames_before = c.metrics().counter(names::COMPOUND_RPCS);
+    let ops_before = c.metrics().counter(names::COMPOUND_OPS);
+    c.fsync().unwrap();
+    assert_eq!(c.queue_len(), 0);
+    assert_eq!(
+        c.metrics().counter(names::COMPOUND_RPCS),
+        frames_before + 1,
+        "K queued ops must flush as exactly one Request::Compound"
+    );
+    assert_eq!(c.metrics().counter(names::COMPOUND_OPS), ops_before + k as u64);
+    assert_eq!(
+        world.wan.stats().rpcs,
+        rpcs_before + 1,
+        "one WAN round trip for the whole queue"
+    );
+    for i in 0..8 {
+        let home = world.home(|s| s.home().read(&format!("/home/u/f{i}.dat")).unwrap().to_vec());
+        assert_eq!(home, b"compound payload");
+    }
+}
+
+#[test]
+fn compound_partial_failure_drops_only_failed_ops() {
+    let mut world = world_with_home();
+    let mut c = world.mount("/home/u").unwrap();
+    c.writeback = WritebackMode::Async;
+    c.async_flush_threshold = usize::MAX;
+    c.write_file("/home/u/good1.dat", b"ok", 4096).unwrap();
+    // /home/u/ghost does not exist at home and no Mkdir is queued for it:
+    // the server rejects this file's Create + WriteFull semantically
+    c.write_file("/home/u/ghost/bad.dat", b"nope", 4096).unwrap();
+    c.write_file("/home/u/good2.dat", b"ok too", 4096).unwrap();
+    let errors_before = c.metrics().counter("metaq.apply_errors");
+    c.fsync().unwrap();
+    assert_eq!(c.queue_len(), 0, "failed ops are dropped, not wedged");
+    assert_eq!(c.metrics().counter("metaq.apply_errors"), errors_before + 2);
+    world.home(|s| {
+        assert_eq!(s.home().read("/home/u/good1.dat").unwrap(), b"ok");
+        assert_eq!(s.home().read("/home/u/good2.dat").unwrap(), b"ok too");
+        assert!(!s.home().exists("/home/u/ghost/bad.dat"));
+    });
+    // the local cache keeps serving the local truth for the failed file
+    assert_eq!(c.scan_file("/home/u/ghost/bad.dat", 4096).unwrap(), 4);
+}
+
+#[test]
+fn compound_flush_survives_disconnection_and_replays() {
+    let mut world = world_with_home();
+    let mut c = world.mount("/home/u").unwrap();
+    c.writeback = WritebackMode::Async;
+    c.async_flush_threshold = usize::MAX;
+    for i in 0..4 {
+        c.write_file(&format!("/home/u/off{i}.txt"), b"queued", 4096).unwrap();
+    }
+    let k = c.queue_len();
+    c.link_mut().set_network(false);
+    // flush during the outage: nothing acknowledged, nothing lost
+    c.fsync().unwrap();
+    assert_eq!(c.queue_len(), k);
+    c.link_mut().set_network(true);
+    c.link_mut().reconnect().unwrap();
+    c.fsync().unwrap();
+    assert_eq!(c.queue_len(), 0);
+    for i in 0..4 {
+        assert!(world.home(|s| s.home().exists(&format!("/home/u/off{i}.txt"))));
+    }
+}
+
+#[test]
+fn batch_resolves_stats_in_one_compound_and_reports_per_op() {
+    let mut world = world_with_home();
+    world.home(|s| {
+        s.home_mut().write("/home/u/a.txt", b"alpha", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/b.txt", b"beta!!", t(0.0)).unwrap();
+    });
+    let mut c = world.mount("/home/u").unwrap();
+    let rpcs_before = world.wan.stats().rpcs;
+    let results = c
+        .batch(&[
+            MetaBatchOp::Mkdir { path: "/home/u/newdir".into() },
+            MetaBatchOp::Stat { path: "/home/u/a.txt".into() },
+            MetaBatchOp::Stat { path: "/home/u/b.txt".into() },
+            MetaBatchOp::Stat { path: "/home/u/missing.txt".into() },
+        ])
+        .unwrap();
+    assert_eq!(results.len(), 4);
+    assert_eq!(results[0], MetaResult::Done);
+    assert_eq!(results[1].attr().map(|a| a.size), Some(5));
+    assert_eq!(results[2].attr().map(|a| a.size), Some(6));
+    assert!(matches!(results[3], MetaResult::Err(FsError::NotFound(_))));
+    // one compound for the three stats + one compound flushing the mkdir:
+    // 4 meta-ops, 2 WAN round trips (v1: 4+)
+    assert_eq!(world.wan.stats().rpcs, rpcs_before + 2);
+    assert!(world.home(|s| s.home().exists("/home/u/newdir")));
+    assert_eq!(c.queue_len(), 0);
+}
+
+#[test]
+fn batch_stat_observes_earlier_mutation_in_same_batch() {
+    // sync-on-close equivalence: the batch's mutations flush before its
+    // server-side stats resolve, so "unlink then stat" inside one batch
+    // reports NotFound — same as the sequential lowering would
+    let mut world = world_with_home();
+    world.home(|s| {
+        s.home_mut().write("/home/u/doomed.txt", b"bye", t(0.0)).unwrap();
+    });
+    let mut c = world.mount("/home/u").unwrap();
+    let results = c
+        .batch(&[
+            MetaBatchOp::Unlink { path: "/home/u/doomed.txt".into() },
+            MetaBatchOp::Stat { path: "/home/u/doomed.txt".into() },
+        ])
+        .unwrap();
+    assert_eq!(results[0], MetaResult::Done);
+    assert!(
+        matches!(results[1], MetaResult::Err(FsError::NotFound(_))),
+        "stat in the same batch must see the unlink: {:?}",
+        results[1]
+    );
+    assert!(!world.home(|s| s.home().exists("/home/u/doomed.txt")));
+}
+
+#[test]
+fn batch_stat_before_mutation_sees_premutation_state() {
+    // the other direction of sequential equivalence: a stat BEFORE a
+    // mutation of the same path in the same batch must report the
+    // pre-mutation state, even though both ride compound round trips
+    let mut world = world_with_home();
+    world.home(|s| {
+        s.home_mut().write("/home/u/shrink.txt", b"original content", t(0.0)).unwrap();
+    });
+    let mut c = world.mount("/home/u").unwrap();
+    let results = c
+        .batch(&[
+            MetaBatchOp::Stat { path: "/home/u/shrink.txt".into() },
+            MetaBatchOp::Truncate { path: "/home/u/shrink.txt".into(), size: 0 },
+            MetaBatchOp::Stat { path: "/home/u/shrink.txt".into() },
+        ])
+        .unwrap();
+    assert_eq!(
+        results[0].attr().map(|a| a.size),
+        Some(16),
+        "stat before the truncate must see the original size: {:?}",
+        results[0]
+    );
+    assert_eq!(results[1], MetaResult::Done);
+    assert_eq!(
+        results[2].attr().map(|a| a.size),
+        Some(0),
+        "stat after the truncate must see the new size: {:?}",
+        results[2]
+    );
+    assert_eq!(world.home(|s| s.home().stat("/home/u/shrink.txt").unwrap().size), 0);
+}
+
+#[test]
+fn batch_default_impl_reports_per_op_results() {
+    let mut l = local();
+    l.write_file("/d/f.txt", b"seven!!", 16).unwrap();
+    let results = l
+        .batch(&[
+            MetaBatchOp::Mkdir { path: "/d/sub".into() },
+            MetaBatchOp::Stat { path: "/d/f.txt".into() },
+            MetaBatchOp::Unlink { path: "/d/nothere".into() },
+            MetaBatchOp::Rename { from: "/d/f.txt".into(), to: "/d/g.txt".into() },
+            MetaBatchOp::Truncate { path: "/d/g.txt".into(), size: 3 },
+        ])
+        .unwrap();
+    assert_eq!(results[0], MetaResult::Done);
+    assert_eq!(results[1].attr().map(|a| a.size), Some(7));
+    assert!(results[2].is_err(), "unlink of a missing file fails per-op");
+    assert_eq!(results[3], MetaResult::Done);
+    assert_eq!(results[4], MetaResult::Done);
+    assert_eq!(l.fs.read("/d/g.txt").unwrap(), b"sev");
+}
+
+// ---------------------------------------------------------------------
+// convenience defaults must close the fd on EVERY path
+// ---------------------------------------------------------------------
+
+/// Minimal failure-injecting Vfs for exercising the default methods.
+struct FailingFs {
+    next_fd: u64,
+    open_fds: Vec<u64>,
+    closed: Vec<u64>,
+    fail_read: bool,
+    fail_write: bool,
+}
+
+impl FailingFs {
+    fn new(fail_read: bool, fail_write: bool) -> Self {
+        FailingFs { next_fd: 3, open_fds: Vec::new(), closed: Vec::new(), fail_read, fail_write }
+    }
+
+    fn leaked(&self) -> usize {
+        self.open_fds.iter().filter(|fd| !self.closed.contains(fd)).count()
+    }
+}
+
+impl Vfs for FailingFs {
+    fn open(&mut self, _path: &str, flags: OpenFlags) -> Result<Fd, FsError> {
+        flags.validate()?;
+        let fd = self.next_fd;
+        self.next_fd += 1;
+        self.open_fds.push(fd);
+        Ok(Fd(fd))
+    }
+    fn pread(&mut self, _fd: Fd, buf: &mut [u8], _off: u64) -> Result<usize, FsError> {
+        if self.fail_read {
+            Err(FsError::Protocol("injected read failure".into()))
+        } else {
+            buf.fill(0);
+            Ok(0)
+        }
+    }
+    fn pwrite(&mut self, _fd: Fd, buf: &[u8], _off: u64) -> Result<usize, FsError> {
+        if self.fail_write {
+            Err(FsError::NoSpace)
+        } else {
+            Ok(buf.len())
+        }
+    }
+    fn seek(&mut self, _fd: Fd, _pos: u64) -> Result<(), FsError> {
+        Ok(())
+    }
+    fn tell(&self, _fd: Fd) -> Result<u64, FsError> {
+        Ok(0)
+    }
+    fn close(&mut self, fd: Fd) -> Result<(), FsError> {
+        self.closed.push(fd.0);
+        Ok(())
+    }
+    fn stat(&mut self, path: &str) -> Result<WireAttr, FsError> {
+        Err(FsError::NotFound(path.into()))
+    }
+    fn readdir(&mut self, path: &str) -> Result<Vec<(String, WireAttr)>, FsError> {
+        Err(FsError::NotFound(path.into()))
+    }
+    fn chdir(&mut self, _path: &str) -> Result<(), FsError> {
+        Ok(())
+    }
+    fn mkdir(&mut self, _path: &str) -> Result<(), FsError> {
+        Ok(())
+    }
+    fn unlink(&mut self, _path: &str) -> Result<(), FsError> {
+        Ok(())
+    }
+    fn rename(&mut self, _from: &str, _to: &str) -> Result<(), FsError> {
+        Ok(())
+    }
+    fn truncate(&mut self, _path: &str, _size: u64) -> Result<(), FsError> {
+        Ok(())
+    }
+    fn lock(&mut self, _fd: Fd, _kind: LockKind) -> Result<(), FsError> {
+        Ok(())
+    }
+    fn unlock(&mut self, _fd: Fd) -> Result<(), FsError> {
+        Ok(())
+    }
+    fn fsync(&mut self) -> Result<(), FsError> {
+        Ok(())
+    }
+    fn now(&self) -> VirtualTime {
+        VirtualTime::ZERO
+    }
+}
+
+#[test]
+fn scan_file_closes_fd_on_read_error() {
+    let mut f = FailingFs::new(true, false);
+    assert!(f.scan_file("/x", 64).is_err());
+    assert_eq!(f.leaked(), 0, "the fd must be closed on the error path");
+}
+
+#[test]
+fn write_file_closes_fd_on_write_error() {
+    let mut f = FailingFs::new(false, true);
+    assert!(f.write_file("/x", b"data", 2).is_err());
+    assert_eq!(f.leaked(), 0, "the fd must be closed on the error path");
+}
+
+#[test]
+fn defaults_close_fd_on_success_too() {
+    let mut f = FailingFs::new(false, false);
+    f.write_file("/x", b"data", 2).unwrap();
+    f.scan_file("/x", 64).unwrap();
+    assert_eq!(f.leaked(), 0);
+}
