@@ -1,11 +1,11 @@
 //! Ablations over the design choices DESIGN.md §3 calls out: stripe
 //! count, parallel pre-fetch, digest delta writeback, callback vs
-//! check-on-open consistency, sync vs async writeback, and compound vs
-//! per-op meta-queue flushing.
+//! check-on-open consistency, sync vs async writeback, compound vs
+//! per-op meta-queue flushing, and demand paging vs whole-file fetch.
 
 use xufs::bench::{
-    run_ablation_compound, run_ablation_consistency, run_ablation_delta, run_ablation_prefetch,
-    run_ablation_stripes, run_ablation_writeback,
+    run_ablation_compound, run_ablation_consistency, run_ablation_delta, run_ablation_paging,
+    run_ablation_prefetch, run_ablation_stripes, run_ablation_writeback,
 };
 use xufs::config::XufsConfig;
 
@@ -19,4 +19,5 @@ fn main() {
     run_ablation_consistency(&cfg, 3).print();
     run_ablation_writeback(&cfg).print();
     run_ablation_compound(&cfg).print();
+    run_ablation_paging(&cfg, gib).print();
 }

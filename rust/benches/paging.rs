@@ -1,0 +1,17 @@
+//! Paging ablation runner: prints the demand-paging vs whole-file table
+//! and regenerates `BENCH_paging.json` at the repo root — the cross-PR
+//! perf-trajectory record for the block-granular data plane.
+
+use xufs::bench::run_ablation_paging;
+use xufs::config::XufsConfig;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let gib: u64 = if quick { 128 << 20 } else { 1 << 30 };
+    let cfg = XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() };
+    let t = run_ablation_paging(&cfg, gib);
+    t.print();
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_paging.json");
+    std::fs::write(&path, format!("{}\n", t.to_json())).expect("write BENCH_paging.json");
+    println!("wrote {}", path.display());
+}

@@ -418,6 +418,78 @@ pub fn run_ablation_compound(cfg: &XufsConfig) -> Table {
     t
 }
 
+/// Demand paging vs whole-file fetch (DESIGN.md §2.4): time-to-first-byte
+/// and bytes-over-WAN on the 1 GiB `wc -l` workload, plus an early-exit
+/// variant reading only the first 1/16th of the file (`head`-style).
+pub fn run_ablation_paging(cfg: &XufsConfig, file_bytes: u64) -> Table {
+    let mut t = Table::new(
+        "Ablation — demand paging vs whole-file fetch (cold `wc -l`)",
+        &[
+            "mode",
+            "ttfb secs",
+            "full scan secs",
+            "WAN bytes (full)",
+            "early-exit secs",
+            "WAN bytes (early)",
+        ],
+    );
+    let content = largefile::text_content(file_bytes as usize, 80, cfg.seed);
+    let files = [("/home/u/big.txt".to_string(), content)];
+    let early_bytes = file_bytes / 16;
+    for paging in [true, false] {
+        // cold full scan, timing the first 1 MiB separately (TTFB)
+        let (w, mut xc) = xufs_world(cfg, &files);
+        xc.paging = paging;
+        let base_wan = w.wan.stats().bytes;
+        let t0 = xc.now();
+        let fd = xc.open("/home/u/big.txt", crate::client::OpenFlags::rdonly()).unwrap();
+        let mut buf = vec![0u8; MIB as usize];
+        let mut total = xc.read(fd, &mut buf).unwrap() as u64;
+        let ttfb = xc.now().saturating_sub(t0).as_secs();
+        loop {
+            let n = xc.read(fd, &mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            total += n as u64;
+        }
+        xc.close(fd).unwrap();
+        assert_eq!(total, file_bytes, "scan must read the whole file");
+        let full_secs = xc.now().saturating_sub(t0).as_secs();
+        let full_wan = w.wan.stats().bytes - base_wan;
+
+        // cold early-exit scan on a fresh world: read 1/16th, stop
+        let (w2, mut x2) = xufs_world(cfg, &files);
+        x2.paging = paging;
+        let base_wan = w2.wan.stats().bytes;
+        let t0 = x2.now();
+        let fd = x2.open("/home/u/big.txt", crate::client::OpenFlags::rdonly()).unwrap();
+        let mut got = 0u64;
+        while got < early_bytes {
+            let n = x2.read(fd, &mut buf).unwrap();
+            if n == 0 {
+                break;
+            }
+            got += n as u64;
+        }
+        x2.close(fd).unwrap();
+        let early_secs = x2.now().saturating_sub(t0).as_secs();
+        let early_wan = w2.wan.stats().bytes - base_wan;
+
+        t.row(vec![
+            if paging { "paging".into() } else { "whole-file".into() },
+            secs(ttfb),
+            secs(full_secs),
+            full_wan.to_string(),
+            secs(early_secs),
+            early_wan.to_string(),
+        ]);
+    }
+    t.note("paging faults only the blocks a read touches (+ readahead window); whole-file is §3.1");
+    t.note("first byte no longer waits for the whole transfer; early exits stop paying for the tail");
+    t
+}
+
 /// Sync-on-close vs async queue flushing.
 pub fn run_ablation_writeback(cfg: &XufsConfig) -> Table {
     let spec = buildtree::BuildSpec::default();
@@ -505,6 +577,78 @@ mod tests {
         let shipped_on: u64 = t.rows[0][2].parse().unwrap();
         let shipped_off: u64 = t.rows[1][2].parse().unwrap();
         assert!(shipped_on * 10 < shipped_off, "delta {shipped_on} vs full {shipped_off}");
+    }
+
+    #[test]
+    fn ablation_paging_cuts_ttfb_and_early_exit_bytes() {
+        // 64 MiB stand-in; the bench binary runs the paper's full 1 GiB
+        let t = run_ablation_paging(&cfg(), 64 * MIB);
+        // rows: [paging, whole-file]
+        let ttfb_paging: f64 = t.rows[0][1].parse().unwrap();
+        let ttfb_whole: f64 = t.rows[1][1].parse().unwrap();
+        assert!(
+            ttfb_paging * 5.0 < ttfb_whole,
+            "paging TTFB must be >=5x better ({ttfb_paging} vs {ttfb_whole})"
+        );
+        // the early-exit read moves ~1/16th of the bytes, not the file
+        let early_paging: u64 = t.rows[0][5].parse().unwrap();
+        let early_whole: u64 = t.rows[1][5].parse().unwrap();
+        assert!(
+            early_paging * 4 < early_whole,
+            "early exit must move proportionally fewer bytes ({early_paging} vs {early_whole})"
+        );
+        // the full sequential scan moves the same content either way
+        // (within protocol overheads)
+        let full_paging: u64 = t.rows[0][3].parse().unwrap();
+        let full_whole: u64 = t.rows[1][3].parse().unwrap();
+        assert!(
+            full_paging < full_whole + full_whole / 4,
+            "paging must not inflate full-scan WAN bytes ({full_paging} vs {full_whole})"
+        );
+    }
+
+    #[test]
+    fn budget_below_working_set_still_builds_correctly() {
+        // cache.budget_bytes far below the working set: the build-style
+        // workload (write then re-read) must still complete with correct
+        // bytes, dirty blocks must never be evicted, and the eviction
+        // metrics must show the budget actually bound
+        let mut c2 = cfg();
+        c2.cache.budget_bytes = 512 * 1024; // 8 blocks
+        c2.stripe.prefetch_enabled = false;
+        let files: Vec<(String, Vec<u8>)> = (0..4)
+            .map(|i| (format!("/home/u/src/in{i}.dat"), vec![i as u8 + 1; 3 * 64 * 1024]))
+            .collect();
+        let (w, mut xc) = xufs_world(&c2, &files);
+        xc.writeback = WritebackMode::Async;
+        xc.async_flush_threshold = usize::MAX;
+        // read every input (faults blocks under budget pressure), write
+        // an output per input (dirty blocks pile up unflushed)
+        for i in 0..4 {
+            let n = xc.scan_file(&format!("/home/u/src/in{i}.dat"), 64 * 1024).unwrap();
+            assert_eq!(n, 3 * 64 * 1024);
+            let out = vec![0xB0 + i as u8; 2 * 64 * 1024];
+            xc.write_file(&format!("/home/u/src/out{i}.dat"), &out, 64 * 1024).unwrap();
+        }
+        // re-read an input end-to-end: evicted blocks re-fault correctly
+        let n = xc.scan_file("/home/u/src/in0.dat", 64 * 1024).unwrap();
+        assert_eq!(n, 3 * 64 * 1024);
+        let evicted = xc.metrics().counter(names::CACHE_EVICTED_BYTES);
+        assert!(evicted > 0, "the budget must have forced evictions");
+        // dirty blocks were never evicted: the queued outputs flush whole
+        // and land at home bit-exact
+        xc.fsync().unwrap();
+        for i in 0..4 {
+            let p = format!("/home/u/src/out{i}.dat");
+            let home = w.home(|s| s.home().read(&p).unwrap().to_vec());
+            assert_eq!(home, vec![0xB0 + i as u8; 2 * 64 * 1024], "out{i} corrupted");
+        }
+        // and the inputs are still intact at home (reads never wrote back)
+        for i in 0..4 {
+            let p = format!("/home/u/src/in{i}.dat");
+            let home = w.home(|s| s.home().read(&p).unwrap().to_vec());
+            assert_eq!(home, vec![i as u8 + 1; 3 * 64 * 1024]);
+        }
     }
 
     #[test]

@@ -8,8 +8,8 @@ pub mod figures;
 pub mod report;
 
 pub use figures::{
-    run_ablation_compound, run_ablation_consistency, run_ablation_delta, run_ablation_prefetch,
-    run_ablation_stripes, run_ablation_writeback, run_fig2_fig3, run_fig4, run_fig5_table2,
-    run_table1,
+    run_ablation_compound, run_ablation_consistency, run_ablation_delta, run_ablation_paging,
+    run_ablation_prefetch, run_ablation_stripes, run_ablation_writeback, run_fig2_fig3, run_fig4,
+    run_fig5_table2, run_table1,
 };
 pub use report::Table;

@@ -12,11 +12,19 @@
 //! The cache space is itself a [`FileStore`] (the on-disk layout the paper
 //! describes), plus an in-memory index rebuilt from those hidden files
 //! after a client crash — [`CacheSpace::recover`] is exactly that rebuild.
+//!
+//! Since the block-granular data plane (DESIGN.md §2.4) the content model
+//! is no longer all-or-nothing: every entry carries a [`Residency`] map
+//! recording which stripe blocks are cached and which are locally dirty.
+//! The map is persisted in the hidden attribute files (one token char per
+//! block) and rebuilt by recovery; a `cache.budget_bytes` budget evicts
+//! least-recently-used clean blocks when resident content outgrows it.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 
 use crate::homefs::{FileStore, FsError, FsResult, NodeKind};
-use crate::proto::WireAttr;
+use crate::metrics::{names, Metrics};
+use crate::proto::{BlockExtent, WireAttr};
 use crate::simnet::VirtualTime;
 use crate::util::path as vpath;
 use crate::util::Json;
@@ -57,6 +65,181 @@ impl EntryState {
     }
 }
 
+/// Per-entry residency map: which stripe blocks of the entry are cached,
+/// which are locally dirty, and when each was last touched (the LRU input
+/// for budgeted block eviction). Dirty implies present.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Residency {
+    present: Vec<bool>,
+    dirty: Vec<bool>,
+    stamp: Vec<VirtualTime>,
+}
+
+impl Residency {
+    /// An all-absent map over `blocks` blocks.
+    pub fn new(blocks: usize) -> Self {
+        Residency {
+            present: vec![false; blocks],
+            dirty: vec![false; blocks],
+            stamp: vec![VirtualTime::ZERO; blocks],
+        }
+    }
+
+    /// A fully-present clean map (whole-file install).
+    pub fn full(blocks: usize, now: VirtualTime) -> Self {
+        Residency {
+            present: vec![true; blocks],
+            dirty: vec![false; blocks],
+            stamp: vec![now; blocks],
+        }
+    }
+
+    /// A fully-present, fully-dirty map (whole-file local modification).
+    pub fn full_dirty(blocks: usize, now: VirtualTime) -> Self {
+        Residency {
+            present: vec![true; blocks],
+            dirty: vec![true; blocks],
+            stamp: vec![now; blocks],
+        }
+    }
+
+    pub fn blocks(&self) -> usize {
+        self.present.len()
+    }
+
+    pub fn present_blocks(&self) -> usize {
+        self.present.iter().filter(|&&p| p).count()
+    }
+
+    pub fn dirty_blocks(&self) -> usize {
+        self.dirty.iter().filter(|&&d| d).count()
+    }
+
+    pub fn is_present(&self, i: usize) -> bool {
+        self.present.get(i).copied().unwrap_or(false)
+    }
+
+    pub fn is_dirty(&self, i: usize) -> bool {
+        self.dirty.get(i).copied().unwrap_or(false)
+    }
+
+    pub fn stamp(&self, i: usize) -> VirtualTime {
+        self.stamp.get(i).copied().unwrap_or(VirtualTime::ZERO)
+    }
+
+    /// Grow or shrink the map to `blocks` (new blocks start absent).
+    pub fn resize(&mut self, blocks: usize) {
+        self.present.resize(blocks, false);
+        self.dirty.resize(blocks, false);
+        self.stamp.resize(blocks, VirtualTime::ZERO);
+    }
+
+    /// Drop every block (capacity eviction / content reset).
+    pub fn clear(&mut self) {
+        self.present.fill(false);
+        self.dirty.fill(false);
+        self.stamp.fill(VirtualTime::ZERO);
+    }
+
+    pub fn mark_present(&mut self, i: usize, now: VirtualTime) {
+        if i >= self.present.len() {
+            self.resize(i + 1);
+        }
+        self.present[i] = true;
+        self.stamp[i] = now;
+    }
+
+    pub fn mark_dirty(&mut self, i: usize, now: VirtualTime) {
+        self.mark_present(i, now);
+        self.dirty[i] = true;
+    }
+
+    /// Flush acknowledged: every dirty block is now clean at home.
+    pub fn clear_dirty(&mut self) {
+        self.dirty.fill(false);
+    }
+
+    /// Evict one block (caller guarantees it is clean).
+    pub fn evict(&mut self, i: usize) {
+        if i < self.present.len() {
+            self.present[i] = false;
+            self.stamp[i] = VirtualTime::ZERO;
+        }
+    }
+
+    /// Refresh the LRU stamps of blocks `[first, last)`.
+    pub fn touch_range(&mut self, first: usize, last: usize, now: VirtualTime) {
+        for i in first..last.min(self.stamp.len()) {
+            self.stamp[i] = now;
+        }
+    }
+
+    /// Contiguous runs of absent blocks inside `[first, last)`, as
+    /// `(start_block, count)` pairs — the extents a paged read must fault.
+    pub fn missing_extents(&self, first: u64, last: u64) -> Vec<(u64, u64)> {
+        let mut out: Vec<(u64, u64)> = Vec::new();
+        for i in first..last {
+            if self.is_present(i as usize) {
+                continue;
+            }
+            match out.last_mut() {
+                Some((start, count)) if *start + *count == i => *count += 1,
+                _ => out.push((i, 1)),
+            }
+        }
+        out
+    }
+
+    /// Bytes a present block `i` occupies, given the entry size.
+    pub fn block_len(i: usize, size: u64, block_bytes: u64) -> u64 {
+        size.saturating_sub(i as u64 * block_bytes).min(block_bytes)
+    }
+
+    /// Total bytes of resident content.
+    pub fn resident_bytes(&self, size: u64, block_bytes: u64) -> u64 {
+        self.present
+            .iter()
+            .enumerate()
+            .filter(|(_, &p)| p)
+            .map(|(i, _)| Self::block_len(i, size, block_bytes))
+            .sum()
+    }
+
+    /// Persisted token: one char per block — `.` absent, `c` clean, `d`
+    /// dirty.
+    pub fn encode(&self) -> String {
+        (0..self.blocks())
+            .map(|i| {
+                if self.is_dirty(i) {
+                    'd'
+                } else if self.is_present(i) {
+                    'c'
+                } else {
+                    '.'
+                }
+            })
+            .collect()
+    }
+
+    /// Parse a persisted token; `None` on any unknown char (the caller
+    /// demotes the entry rather than trusting a corrupt map).
+    pub fn parse(token: &str) -> Option<Residency> {
+        let mut r = Residency::new(token.len());
+        for (i, ch) in token.chars().enumerate() {
+            match ch {
+                '.' => {}
+                'c' => r.present[i] = true,
+                'd' => {
+                    r.present[i] = true;
+                    r.dirty[i] = true;
+                }
+                _ => return None,
+            }
+        }
+        Some(r)
+    }
+}
+
 /// Index record for one cached home-space path.
 #[derive(Debug, Clone)]
 pub struct CacheEntry {
@@ -69,6 +252,8 @@ pub struct CacheEntry {
     pub attr: WireAttr,
     /// Last access (LRU eviction).
     pub last_used: VirtualTime,
+    /// Which blocks of the content are cached / dirty (DESIGN.md §2.4).
+    pub residency: Residency,
 }
 
 /// A directory whose entries have been materialized.
@@ -87,6 +272,10 @@ pub struct CacheSpace {
     dirs: HashMap<String, DirState>,
     localized: Vec<String>,
     capacity: u64,
+    /// Stripe-block size the residency maps are gridded on.
+    block_bytes: u64,
+    /// Resident-content budget for LRU block eviction (0 = unbudgeted).
+    budget: u64,
 }
 
 impl CacheSpace {
@@ -97,7 +286,31 @@ impl CacheSpace {
             dirs: HashMap::new(),
             localized: localized.into_iter().map(|d| vpath::normalize(&d)).collect(),
             capacity,
+            block_bytes: crate::config::STRIPE_BLOCK,
+            budget: 0,
         }
+    }
+
+    /// Configure the paged data plane: the residency block size and the
+    /// resident-content budget (`cache.budget_bytes`; 0 = unbudgeted).
+    pub fn set_paging(&mut self, block_bytes: u64, budget_bytes: u64) {
+        self.block_bytes = block_bytes.max(1);
+        self.budget = budget_bytes;
+    }
+
+    pub fn block_bytes(&self) -> u64 {
+        self.block_bytes
+    }
+
+    /// Blocks a file of `size` bytes spans on the residency grid.
+    pub fn blocks_for(&self, size: u64) -> usize {
+        size.div_ceil(self.block_bytes.max(1)) as usize
+    }
+
+    /// Total bytes of resident cached content across all entries.
+    pub fn resident_bytes(&self) -> u64 {
+        let bb = self.block_bytes.max(1);
+        self.entries.values().map(|e| e.residency.resident_bytes(e.attr.size, bb)).sum()
     }
 
     /// Is `path` inside a localized directory (content never shipped home)?
@@ -163,16 +376,26 @@ impl CacheSpace {
                     }
                 }
             }
-            let (state, version, digests) = match self.entries.get(&p) {
+            let (state, version, digests, residency) = match self.entries.get(&p) {
                 // don't clobber content we already hold
                 Some(e) if e.state != EntryState::AttrOnly => {
-                    (e.state, e.version, e.digests.clone())
+                    (e.state, e.version, e.digests.clone(), e.residency.clone())
                 }
-                _ => (EntryState::AttrOnly, attr.version, Vec::new()),
+                _ => {
+                    let residency = Residency::new(self.blocks_for(attr.size));
+                    (EntryState::AttrOnly, attr.version, Vec::new(), residency)
+                }
             };
             self.entries.insert(
                 p.clone(),
-                CacheEntry { state, version, digests, attr: attr.clone(), last_used: now },
+                CacheEntry {
+                    state,
+                    version,
+                    digests,
+                    attr: attr.clone(),
+                    last_used: now,
+                    residency,
+                },
             );
             self.sync_attr_file(&p, now)?;
         }
@@ -192,6 +415,7 @@ impl CacheSpace {
             .set("mode", e.attr.mode as u64)
             .set("version", e.version)
             .set("state", e.state.as_str())
+            .set("residency", e.residency.encode())
             .set("digests", Json::Arr(e.digests.iter().map(|&d| Json::Num(d as f64)).collect()));
         let dir = vpath::parent(&p);
         let name = vpath::basename(&p);
@@ -213,13 +437,174 @@ impl CacheSpace {
         let p = vpath::normalize(path);
         self.fs.mkdir_p(&vpath::parent(&p), now)?;
         self.fs.write(&p, data, now)?;
+        let residency = Residency::full(self.blocks_for(data.len() as u64), now);
         self.entries.insert(
             p.clone(),
-            CacheEntry { state: EntryState::Clean, version, digests, attr, last_used: now },
+            CacheEntry {
+                state: EntryState::Clean,
+                version,
+                digests,
+                attr,
+                last_used: now,
+                residency,
+            },
         );
         self.sync_attr_file(&p, now)?;
         self.maybe_evict(&p, now);
         Ok(())
+    }
+
+    /// Prepare an entry for paged access at the authoritative `version`
+    /// (from a `FetchMeta`): keep resident blocks when the version still
+    /// matches (revalidation after a suspected-stale period), otherwise
+    /// reset the residency map — the cached blocks are stale and every
+    /// read faults fresh ones.
+    pub fn begin_paged(
+        &mut self,
+        path: &str,
+        version: u64,
+        size: u64,
+        digests: Vec<i32>,
+        now: VirtualTime,
+    ) -> FsResult<()> {
+        let p = vpath::normalize(path);
+        self.fs.mkdir_p(&vpath::parent(&p), now)?;
+        if !self.fs.exists(&p) {
+            self.fs.create(&p, now)?;
+        }
+        let nblocks = self.blocks_for(size);
+        let reusable = self
+            .entries
+            .get(&p)
+            .map(|e| e.version == version && e.residency.blocks() == nblocks)
+            .unwrap_or(false);
+        if reusable {
+            let e = self.entries.get_mut(&p).unwrap();
+            if e.state != EntryState::Dirty {
+                e.state = EntryState::Clean;
+            }
+            e.digests = digests;
+            e.attr.size = size;
+            e.attr.version = version;
+            e.last_used = now;
+        } else {
+            let old = self.entries.remove(&p);
+            // judged on the residency map, not the state token, so dirty
+            // blocks survive even if a refresh path mislabelled the entry
+            let keeps_dirty =
+                old.as_ref().map(|e| e.residency.dirty_blocks() > 0).unwrap_or(false);
+            let (state, attr, residency) = if keeps_dirty {
+                // the home version moved under local edits: clean blocks
+                // are stale and dropped, dirty blocks survive — last-
+                // close-wins means the queued flush overwrites the home
+                // copy with them anyway
+                let e = old.unwrap();
+                let mut a = e.attr;
+                a.size = a.size.max(size);
+                a.version = version;
+                let mut r = Residency::new(self.blocks_for(a.size));
+                for i in 0..e.residency.blocks() {
+                    if e.residency.is_dirty(i) {
+                        r.mark_dirty(i, now);
+                    }
+                }
+                (EntryState::Dirty, a, r)
+            } else {
+                // stale bytes must not leak into the new block grid
+                self.fs.truncate(&p, 0, now)?;
+                let attr = match old {
+                    Some(e) => {
+                        let mut a = e.attr;
+                        a.size = size;
+                        a.version = version;
+                        a
+                    }
+                    None => {
+                        WireAttr { kind: NodeKind::File, size, mtime_ns: now.0, mode: 0o600, version }
+                    }
+                };
+                (EntryState::Clean, attr, Residency::new(nblocks))
+            };
+            self.entries.insert(
+                p.clone(),
+                CacheEntry { state, version, digests, attr, last_used: now, residency },
+            );
+        }
+        self.sync_attr_file(&p, now)
+    }
+
+    /// Install faulted blocks (a range-fetch reply) into an existing
+    /// paged entry: write the bytes at their block offsets and mark the
+    /// blocks present.
+    pub fn install_blocks(
+        &mut self,
+        path: &str,
+        extents: &[BlockExtent],
+        now: VirtualTime,
+    ) -> FsResult<()> {
+        let p = vpath::normalize(path);
+        let bb = self.block_bytes.max(1);
+        for x in extents {
+            self.fs.write_at(&p, x.index as u64 * bb, &x.data, now)?;
+        }
+        let Some(e) = self.entries.get_mut(&p) else {
+            return Err(FsError::NotFound(p));
+        };
+        for x in extents {
+            e.residency.mark_present(x.index as usize, now);
+        }
+        e.last_used = now;
+        self.sync_attr_file(&p, now)?;
+        // same capacity pressure valve as whole-file installs
+        self.maybe_evict(&p, now);
+        Ok(())
+    }
+
+    /// Record a block-granular local modification (paged close merge):
+    /// the content is already in the cache store; `blocks` are the ones
+    /// this close dirtied, `digests` the patched whole-file vector.
+    pub fn mark_dirty_blocks(
+        &mut self,
+        path: &str,
+        blocks: &[u64],
+        digests: Vec<i32>,
+        new_size: u64,
+        now: VirtualTime,
+    ) -> FsResult<()> {
+        let p = vpath::normalize(path);
+        let nblocks = self.blocks_for(new_size);
+        let Some(e) = self.entries.get_mut(&p) else {
+            return Err(FsError::NotFound(p));
+        };
+        e.state = EntryState::Dirty;
+        e.digests = digests;
+        e.attr.size = new_size;
+        e.attr.mtime_ns = now.0;
+        e.residency.resize(nblocks);
+        for &b in blocks {
+            e.residency.mark_dirty(b as usize, now);
+        }
+        e.last_used = now;
+        self.sync_attr_file(&p, now)
+    }
+
+    /// Refresh per-block LRU stamps after a paged read of `[first, last)`.
+    pub fn touch_blocks(&mut self, path: &str, first: u64, last: u64, now: VirtualTime) {
+        if let Some(e) = self.entries.get_mut(&vpath::normalize(path)) {
+            e.residency.touch_range(first as usize, last as usize, now);
+            e.last_used = now;
+        }
+    }
+
+    /// Re-register an entry's index record under a new path after its
+    /// content followed a store rename — residency, digests and state
+    /// survive the move (re-installing would mistake zero-filled
+    /// non-resident holes for cached content).
+    pub fn adopt(&mut self, path: &str, mut entry: CacheEntry, now: VirtualTime) -> FsResult<()> {
+        let p = vpath::normalize(path);
+        entry.last_used = now;
+        self.entries.insert(p.clone(), entry);
+        self.sync_attr_file(&p, now)
     }
 
     /// Record a local modification (shadow-file flush): content already
@@ -229,9 +614,17 @@ impl CacheSpace {
         let attr = self.fs.stat(&p)?;
         let wire = WireAttr::from_attr(&attr);
         let version = self.entries.get(&p).map(|e| e.version).unwrap_or(0);
+        let residency = Residency::full_dirty(self.blocks_for(wire.size), now);
         self.entries.insert(
             p.clone(),
-            CacheEntry { state: EntryState::Dirty, version, digests, attr: wire, last_used: now },
+            CacheEntry {
+                state: EntryState::Dirty,
+                version,
+                digests,
+                attr: wire,
+                last_used: now,
+                residency,
+            },
         );
         self.sync_attr_file(&p, now)
     }
@@ -244,6 +637,7 @@ impl CacheSpace {
             e.version = new_version;
             e.attr.version = new_version;
             e.last_used = now;
+            e.residency.clear_dirty();
         }
         self.sync_attr_file(&p, now)
     }
@@ -324,20 +718,104 @@ impl CacheSpace {
             if let Some(e) = self.entries.get_mut(&victim) {
                 e.state = EntryState::AttrOnly;
                 e.digests.clear();
+                e.residency.clear();
             }
             let _ = self.sync_attr_file(&victim, now);
         }
     }
 
+    /// Budgeted LRU block eviction (`cache.budget_bytes`): while resident
+    /// content exceeds the budget, evict the globally least-recently-used
+    /// *clean* blocks. Dirty blocks are never evicted (their flush is not
+    /// acknowledged), localized files never evict, and blocks stamped at
+    /// `now` (just faulted, not yet consumed) are spared so a budget
+    /// below one fault window degrades to a soft budget instead of
+    /// livelocking the read path. Entries whose last block goes are
+    /// demoted to `AttrOnly`. Returns `(blocks, bytes)` evicted.
+    ///
+    /// The budget bounds the *modeled* resident bytes: the dense
+    /// in-memory [`FileStore`] cannot hole-punch mid-file blocks, so the
+    /// backing bytes of a partially-evicted entry are only reclaimed
+    /// when the whole entry demotes (a real deployment's sparse cache
+    /// files reclaim per block). Under budget this returns after one
+    /// O(resident-blocks) scan; the sort runs only when over.
+    pub fn enforce_budget(&mut self, now: VirtualTime) -> (u64, u64) {
+        if self.budget == 0 {
+            return (0, 0);
+        }
+        let bb = self.block_bytes.max(1);
+        let mut resident = self.resident_bytes();
+        if resident <= self.budget {
+            return (0, 0);
+        }
+        let mut cands: Vec<(VirtualTime, String, usize)> = Vec::new();
+        for (p, e) in &self.entries {
+            if self.localized.iter().any(|d| vpath::is_under(p, d)) {
+                continue;
+            }
+            for i in 0..e.residency.blocks() {
+                if e.residency.is_present(i) && !e.residency.is_dirty(i) {
+                    let stamp = e.residency.stamp(i);
+                    if stamp < now {
+                        cands.push((stamp, p.clone(), i));
+                    }
+                }
+            }
+        }
+        cands.sort();
+        let mut evicted_blocks = 0u64;
+        let mut evicted_bytes = 0u64;
+        let mut demoted: Vec<String> = Vec::new();
+        let mut touched: BTreeSet<String> = BTreeSet::new();
+        for (_, p, i) in cands {
+            if resident <= self.budget {
+                break;
+            }
+            let Some(e) = self.entries.get_mut(&p) else { continue };
+            let bytes = Residency::block_len(i, e.attr.size, bb);
+            e.residency.evict(i);
+            resident = resident.saturating_sub(bytes);
+            evicted_bytes += bytes;
+            evicted_blocks += 1;
+            if e.residency.present_blocks() == 0 && e.state == EntryState::Clean {
+                e.state = EntryState::AttrOnly;
+                e.digests.clear();
+                demoted.push(p.clone());
+            }
+            touched.insert(p);
+        }
+        // fully-evicted entries free their (zero-filled) store bytes too
+        for p in demoted {
+            let _ = self.fs.truncate(&p, 0, now);
+        }
+        for p in touched {
+            let _ = self.sync_attr_file(&p, now);
+        }
+        (evicted_blocks, evicted_bytes)
+    }
+
     /// Rebuild the index from the hidden attribute files — the client
     /// crash-recovery path (the on-disk cache space survived the crash).
-    pub fn recover(fs: FileStore, capacity: u64, localized: Vec<String>, now: VirtualTime) -> Self {
+    ///
+    /// Persisted state is NOT trusted: an unknown `state` or residency
+    /// token demotes the entry to [`EntryState::Invalid`] (re-fetch
+    /// before the next open) instead of silently dropping or mis-typing
+    /// it, counted in `cache.recover_demoted`.
+    pub fn recover(
+        fs: FileStore,
+        capacity: u64,
+        localized: Vec<String>,
+        now: VirtualTime,
+        metrics: &Metrics,
+    ) -> Self {
         let mut cache = CacheSpace {
             fs,
             entries: HashMap::new(),
             dirs: HashMap::new(),
             localized: localized.into_iter().map(|d| vpath::normalize(&d)).collect(),
             capacity,
+            block_bytes: crate::config::STRIPE_BLOCK,
+            budget: 0,
         };
         let walked = cache.fs.walk("/").unwrap_or_default();
         for (path, _attr) in walked {
@@ -352,11 +830,14 @@ impl CacheSpace {
             } else {
                 NodeKind::File
             };
-            let state = json
-                .get("state")
-                .and_then(|s| s.as_str())
-                .and_then(EntryState::parse)
-                .unwrap_or(EntryState::AttrOnly);
+            let mut demoted = false;
+            let state = match json.get("state").and_then(|s| s.as_str()) {
+                None => EntryState::AttrOnly,
+                Some(s) => EntryState::parse(s).unwrap_or_else(|| {
+                    demoted = true;
+                    EntryState::Invalid
+                }),
+            };
             let digests: Vec<i32> = json
                 .get("digests")
                 .and_then(|d| d.as_arr())
@@ -369,9 +850,40 @@ impl CacheSpace {
                 mode: json.get("mode").and_then(|v| v.as_i64()).unwrap_or(0o600) as u32,
                 version: json.get("version").and_then(|v| v.as_i64()).unwrap_or(0) as u64,
             };
+            let nblocks = attr.size.div_ceil(cache.block_bytes.max(1)) as usize;
+            let residency = match json.get("residency").and_then(|r| r.as_str()) {
+                Some(token) => match Residency::parse(token) {
+                    Some(r) => r,
+                    None => {
+                        demoted = true;
+                        Residency::new(nblocks)
+                    }
+                },
+                // legacy attr file without a residency token: trust the
+                // stored bytes as the (whole-file-era) cached content
+                None => match (state, cache.fs.stat(&entry_path)) {
+                    (EntryState::Clean, Ok(a)) if a.size > 0 => Residency::full(nblocks, now),
+                    (EntryState::Dirty, Ok(_)) => Residency::full_dirty(nblocks, now),
+                    _ => Residency::new(nblocks),
+                },
+            };
+            let state = if demoted {
+                metrics.incr(names::CACHE_RECOVER_DEMOTED);
+                EntryState::Invalid
+            } else {
+                state
+            };
+            let residency = if demoted { Residency::new(nblocks) } else { residency };
             cache.entries.insert(
                 entry_path,
-                CacheEntry { state, version: attr.version, digests, attr, last_used: now },
+                CacheEntry {
+                    state,
+                    version: attr.version,
+                    digests,
+                    attr,
+                    last_used: now,
+                    residency,
+                },
             );
         }
         cache
@@ -502,7 +1014,7 @@ mod tests {
 
         // "crash": drop the in-memory index, keep the on-disk store
         let disk = c.fs.clone();
-        let r = CacheSpace::recover(disk, u64::MAX, vec![], t(10.0));
+        let r = CacheSpace::recover(disk, u64::MAX, vec![], t(10.0), &Metrics::new());
         assert_eq!(r.entry("/home/u/a").unwrap().state, EntryState::AttrOnly);
         let b = r.entry("/home/u/b").unwrap();
         assert_eq!(b.state, EntryState::Clean);
@@ -511,8 +1023,99 @@ mod tests {
         let cc = r.entry("/home/u/c").unwrap();
         assert_eq!(cc.state, EntryState::Dirty);
         assert_eq!(cc.digests, vec![33]);
-        // content survived
+        // content survived, and so did the residency maps
         assert_eq!(r.store().read("/home/u/b").unwrap(), b"content");
+        assert_eq!(b.residency.present_blocks(), 1);
+        assert_eq!(cc.residency.dirty_blocks(), 1);
+    }
+
+    #[test]
+    fn recover_demotes_unknown_tokens_to_invalid() {
+        let mut c = cache();
+        c.install("/home/u/ok", b"fine", 2, vec![5], wattr(4, 2, NodeKind::File), t(1.0)).unwrap();
+        c.install("/home/u/bad", b"data", 3, vec![6], wattr(4, 3, NodeKind::File), t(1.0)).unwrap();
+        c.install("/home/u/worse", b"data", 4, vec![7], wattr(4, 4, NodeKind::File), t(1.0)).unwrap();
+        // corrupt the persisted state string of one entry and the
+        // residency token of another
+        let mut disk = c.fs.clone();
+        let garble = |disk: &mut FileStore, apath: &str, field: &str, junk: &str| {
+            let raw = String::from_utf8_lossy(disk.read(apath).unwrap()).to_string();
+            let patched = raw.replace(field, junk);
+            assert_ne!(raw, patched, "fixture must actually corrupt {apath}");
+            disk.write(apath, patched.as_bytes(), t(5.0)).unwrap();
+        };
+        garble(&mut disk, "/home/u/.xufs.attr.bad", "\"clean\"", "\"zombie\"");
+        garble(&mut disk, "/home/u/.xufs.attr.worse", "\"residency\":\"c\"", "\"residency\":\"?\"");
+        let m = Metrics::new();
+        let r = CacheSpace::recover(disk, u64::MAX, vec![], t(9.0), &m);
+        // demoted to Invalid (re-fetch before next open), not dropped
+        assert_eq!(r.entry("/home/u/bad").unwrap().state, EntryState::Invalid);
+        assert_eq!(r.entry("/home/u/worse").unwrap().state, EntryState::Invalid);
+        assert_eq!(r.entry("/home/u/worse").unwrap().residency.present_blocks(), 0);
+        assert_eq!(m.counter(names::CACHE_RECOVER_DEMOTED), 2);
+        // the intact entry recovers untouched
+        assert_eq!(r.entry("/home/u/ok").unwrap().state, EntryState::Clean);
+    }
+
+    #[test]
+    fn residency_token_roundtrip_and_rejects_garbage() {
+        let mut r = Residency::new(5);
+        r.mark_present(1, t(1.0));
+        r.mark_dirty(3, t(2.0));
+        assert_eq!(r.encode(), ".c.d.");
+        assert_eq!(Residency::parse(".c.d."), Some(r.clone()));
+        assert_eq!(Residency::parse("x.c"), None);
+        assert_eq!(Residency::parse(""), Some(Residency::new(0)));
+        // missing extents group into contiguous runs
+        assert_eq!(r.missing_extents(0, 5), vec![(0, 1), (2, 1), (4, 1)]);
+        r.mark_present(0, t(3.0));
+        assert_eq!(r.missing_extents(0, 5), vec![(2, 1), (4, 1)]);
+        assert_eq!(r.missing_extents(0, 2), vec![]);
+    }
+
+    #[test]
+    fn budget_evicts_lru_clean_blocks_never_dirty() {
+        let mut c = cache();
+        let bb = c.block_bytes();
+        c.set_paging(bb, 3 * bb); // budget: three blocks
+        let size = 4 * bb;
+        // a fully-resident clean file of 4 blocks
+        c.install("/a", &vec![1u8; size as usize], 1, vec![], wattr(size, 1, NodeKind::File), t(1.0))
+            .unwrap();
+        // a dirty single-block file
+        c.store_mut().write("/d", &vec![2u8; bb as usize], t(2.0)).unwrap();
+        c.mark_dirty("/d", vec![], t(2.0)).unwrap();
+        // 5 blocks resident vs a 3-block budget: evict the 2 oldest clean
+        // blocks of /a; the dirty block must survive
+        c.touch_blocks("/a", 2, 4, t(3.0)); // blocks 2,3 recently used
+        let (blocks, bytes) = c.enforce_budget(t(4.0));
+        assert_eq!(blocks, 2);
+        assert_eq!(bytes, 2 * bb);
+        let a = c.entry("/a").unwrap();
+        assert!(!a.residency.is_present(0) && !a.residency.is_present(1));
+        assert!(a.residency.is_present(2) && a.residency.is_present(3));
+        assert_eq!(c.entry("/d").unwrap().residency.dirty_blocks(), 1);
+        // evicting the rest demotes /a to AttrOnly; /d is never evicted
+        c.set_paging(bb, 1);
+        let (_, bytes) = c.enforce_budget(t(5.0));
+        assert_eq!(bytes, 2 * bb);
+        assert_eq!(c.entry("/a").unwrap().state, EntryState::AttrOnly);
+        assert_eq!(c.store().stat("/a").unwrap().size, 0);
+        assert_eq!(c.entry("/d").unwrap().state, EntryState::Dirty);
+        assert_eq!(c.store().read("/d").unwrap(), &vec![2u8; bb as usize][..]);
+    }
+
+    #[test]
+    fn budget_spares_blocks_stamped_now() {
+        let mut c = cache();
+        let bb = c.block_bytes();
+        c.set_paging(bb, 1);
+        c.install("/f", &vec![7u8; bb as usize], 1, vec![], wattr(bb, 1, NodeKind::File), t(2.0))
+            .unwrap();
+        // the just-installed block is stamped at `now`: a same-tick
+        // enforcement must not evict what the reader is about to consume
+        assert_eq!(c.enforce_budget(t(2.0)), (0, 0));
+        assert_eq!(c.enforce_budget(t(3.0)), (1, bb));
     }
 
     #[test]

@@ -10,7 +10,7 @@ pub use vfs::{Fd, MetaBatchOp, MetaResult, OpenFlags, Vfs};
 pub use xufs::{WritebackMode, XufsClient};
 
 use crate::homefs::FsError;
-use crate::proto::{FileImage, MetaOp, NotifyEvent, Request, Response};
+use crate::proto::{FileImage, MetaOp, NotifyEvent, RangeImage, Request, Response};
 
 /// Transport to the user's file server. Two implementations:
 /// `coordinator::sim::SimLink` (modeled WAN, virtual clock) and
@@ -19,8 +19,19 @@ pub trait ServerLink {
     /// One request/response RPC on the control connection.
     fn rpc(&mut self, req: Request) -> Result<Response, FsError>;
 
-    /// Whole-file striped fetch (paper §3.3). Accounts transfer time.
-    fn fetch(&mut self, path: &str) -> Result<FileImage, FsError>;
+    /// Striped fetch of one byte range at a pinned version (the demand-
+    /// paging fault path, DESIGN.md §2.4; a whole file is the degenerate
+    /// full range). Returns the covering blocks with per-block digests;
+    /// fails `Stale` if the home copy moved past `expect_version`.
+    /// Stripes across data connections exactly like a whole-file
+    /// transfer of the same payload.
+    fn fetch_range(
+        &mut self,
+        path: &str,
+        offset: u64,
+        len: u64,
+        expect_version: u64,
+    ) -> Result<RangeImage, FsError>;
 
     /// Parallel pre-fetch of small files (paths + sizes). Accounts the
     /// batched transfer time; files that failed are simply absent.

@@ -1,12 +1,22 @@
-//! The XUFS client: whole-file caching, shadow-file writes, meta-op queue,
-//! callback consistency, lock leases, striped fetch + parallel pre-fetch.
-//! This is `libxufs.so` + sync manager + notification callback manager +
-//! lease manager of Figure 1, over a pluggable [`ServerLink`].
+//! The XUFS client: block-granular demand-paged caching, sparse shadow-
+//! file writes, meta-op queue, callback consistency, lock leases, striped
+//! range fetch + parallel pre-fetch. This is `libxufs.so` + sync manager
+//! + notification callback manager + lease manager of Figure 1, over a
+//! pluggable [`ServerLink`].
+//!
+//! Data plane (DESIGN.md §2.4): `open` moves METADATA only (one
+//! `FetchMeta` round trip); `pread` faults just the missing blocks of the
+//! requested range (plus a readahead window) with `fetch_range`; `pwrite`
+//! dirties blocks in a sparse shadow without fetching what it overwrites;
+//! `close` merges the dirtied blocks back and queues a block-granular
+//! writeback against the residency map. Whole-file-on-open (the paper's
+//! §3.1 behaviour) survives as the degenerate case behind
+//! `XufsClient::paging = false` for the paging ablation.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 
-use crate::cache::{CacheSpace, EntryState};
+use crate::cache::{CacheSpace, EntryState, Residency};
 use crate::client::vfs::{Fd, MetaBatchOp, MetaResult, OpenFlags, Vfs};
 use crate::client::ServerLink;
 use crate::config::XufsConfig;
@@ -33,6 +43,24 @@ pub enum WritebackMode {
     Async,
 }
 
+/// Sparse per-fd shadow (paper §3.1, block-granular since DESIGN.md
+/// §2.4): writes land in a hidden shadow file, but only the blocks a
+/// write touches are materialized — everything else reads through to the
+/// (possibly non-resident) base content, so a small write to a huge file
+/// never fetches the whole file.
+#[derive(Debug)]
+struct ShadowState {
+    /// Shadow file path in the cache store.
+    path: String,
+    /// Blocks materialized (merged base + writes) in the shadow file;
+    /// exactly the blocks this fd has dirtied.
+    blocks: BTreeSet<u64>,
+    /// Logical file size as seen through this fd.
+    size: u64,
+    /// Base content size at open (0 for O_TRUNC and brand-new files).
+    base_size: u64,
+}
+
 #[derive(Debug)]
 struct OpenFile {
     path: String,
@@ -40,8 +68,8 @@ struct OpenFile {
     /// `pread`/`pwrite` never touch it.
     pos: u64,
     flags: OpenFlags,
-    /// Shadow-file path in the cache store, present for write handles.
-    shadow: Option<String>,
+    /// Sparse shadow, present for write handles.
+    shadow: Option<ShadowState>,
     wrote: bool,
     localized: bool,
 }
@@ -88,6 +116,10 @@ pub struct XufsClient<L: ServerLink> {
     /// DESIGN.md §2.3). Off = one `Request::Apply` round trip per op
     /// (the pre-v2 behaviour, kept for the ablation bench).
     pub compound: bool,
+    /// Block-granular demand paging (DESIGN.md §2.4): `open` moves only
+    /// metadata and reads fault blocks on demand. Off = the paper's
+    /// whole-file-on-open behaviour, kept for the `paging` ablation.
+    pub paging: bool,
 }
 
 impl<L: ServerLink> XufsClient<L> {
@@ -102,7 +134,8 @@ impl<L: ServerLink> XufsClient<L> {
         metrics: Metrics,
     ) -> Self {
         let root = vpath::normalize(mount_root);
-        let cache = CacheSpace::new(cfg.cache.capacity, cfg.cache.localized_dirs.clone());
+        let mut cache = CacheSpace::new(cfg.cache.capacity, cfg.cache.localized_dirs.clone());
+        cache.set_paging(cfg.stripe.min_block, cfg.cache.budget_bytes);
         let lease = LeaseManager::new(cfg.lease.duration_s, cfg.lease.renew_fraction);
         let cache_disk = DiskModel::new(cfg.disk.cache_bps, cfg.disk.cache_op_s);
         let gen = link.channel_generation();
@@ -126,6 +159,7 @@ impl<L: ServerLink> XufsClient<L> {
             writeback: WritebackMode::SyncOnClose,
             async_flush_threshold: 64,
             compound: true,
+            paging: true,
         }
     }
 
@@ -143,12 +177,14 @@ impl<L: ServerLink> XufsClient<L> {
         metrics: Metrics,
     ) -> (Self, usize) {
         let now = clock.now();
-        let cache = CacheSpace::recover(
+        let mut cache = CacheSpace::recover(
             cache_store,
             cfg.cache.capacity,
             cfg.cache.localized_dirs.clone(),
             now,
+            &metrics,
         );
+        cache.set_paging(cfg.stripe.min_block, cfg.cache.budget_bytes);
         let (queue, corrupt) = MetaQueue::recover(cache.store());
         let mut c = Self::new(link, cfg, engine, clock, mount_root, metrics);
         c.cache = cache;
@@ -362,17 +398,14 @@ impl<L: ServerLink> XufsClient<L> {
                 let MetaOp::WriteDelta { path, .. } = op else {
                     return Err(FsError::Protocol("stale non-delta op".into()));
                 };
-                match self.cache.store().read(path) {
-                    Ok(data) => {
-                        let data = data.to_vec();
-                        let digests = self.engine.digests(&data, self.cfg.stripe.min_block as usize);
+                match self.demoted_full_write(path) {
+                    Ok(full) => {
                         // re-queue the demoted full write (latest cache
                         // content — last-close-wins) under a fresh seq,
                         // PERSISTING IT BEFORE retiring the stale delta's
                         // entry: a crash in between must leave at least
                         // one shippable entry on disk (replaying both is
                         // idempotent — the delta just demotes again)
-                        let full = MetaOp::WriteFull { path: path.clone(), data, digests };
                         self.queue.append(self.cache.store_mut(), full, now)?;
                         self.queue.ack(self.cache.store_mut(), seq, now)?;
                         Ok(Settle::Requeued)
@@ -429,12 +462,8 @@ impl<L: ServerLink> XufsClient<L> {
                 Ok(Response::Err { code: 116, .. }) => {
                     // stale delta base: demote to a full write and retry
                     if let MetaOp::WriteDelta { path, .. } = &op {
-                        match self.cache.store().read(path) {
-                            Ok(data) => {
-                                let data = data.to_vec();
-                                let digests =
-                                    self.engine.digests(&data, self.cfg.stripe.min_block as usize);
-                                let full = MetaOp::WriteFull { path: path.clone(), data, digests };
+                        match self.demoted_full_write(path) {
+                            Ok(full) => {
                                 self.queue.push_front(seq, full.clone());
                                 self.queue.replace(self.cache.store_mut(), seq, full, now)?;
                                 continue;
@@ -572,31 +601,290 @@ impl<L: ServerLink> XufsClient<L> {
             }
             // writing the prefetched files into cache space
             self.cache_disk.io(self.clock.as_ref(), bytes);
+            self.enforce_cache_budget();
         }
         self.cache.set_dir_prefetched(dir);
         Ok(())
     }
 
-    /// Fetch a file whole into cache (paper: first `open()` downloads it).
-    fn fetch_file(&mut self, path: &str) -> Result<(), FsError> {
+    /// The file's logical size: entry attributes when indexed (content
+    /// may be only partially resident), store size otherwise (localized
+    /// files live purely in the cache store).
+    fn logical_size(&self, path: &str) -> u64 {
+        match self.cache.entry(path) {
+            Some(e) => e.attr.size,
+            None => self.cache.store().stat(path).map(|a| a.size).unwrap_or(0),
+        }
+    }
+
+    /// Make sure `path` has a trusted entry for paged access: a cache hit
+    /// if the content state is usable, otherwise one `FetchMeta` round
+    /// trip — no content moves here; reads fault blocks on demand.
+    fn ensure_entry(&mut self, path: &str) -> Result<(), FsError> {
+        if self.content_usable(path) {
+            return Ok(());
+        }
         self.metrics.incr(names::CACHE_MISSES);
-        let image = self.link.fetch(path)?;
-        transfer::verify_image(&self.engine, &image, self.cfg.stripe.min_block as usize, &self.metrics)?;
-        // integrity verification is client CPU on the transfer path
-        self.clock.advance_secs(image.data.len() as f64 / self.cfg.disk.digest_cpu_bps);
-        let now = self.clock.now();
-        let attr = WireAttr {
-            kind: NodeKind::File,
-            size: image.data.len() as u64,
-            mtime_ns: now.0,
-            mode: 0o600,
-            version: image.version,
-        };
+        self.refresh_meta(path)
+    }
+
+    /// Fetch authoritative metadata (version/size/digests) and
+    /// (re)initialize the entry's block grid. Resident blocks survive
+    /// when the version is unchanged (revalidation).
+    fn refresh_meta(&mut self, path: &str) -> Result<(), FsError> {
+        match self.link.rpc(Request::FetchMeta { path: path.to_string() }) {
+            Ok(Response::FileMeta { version, size, digests }) => {
+                let now = self.clock.now();
+                self.cache.begin_paged(path, version, size, digests, now)?;
+                Ok(())
+            }
+            Ok(Response::Err { code: 2, msg }) => Err(FsError::NotFound(msg)),
+            Ok(Response::Err { code: 21, msg }) => Err(FsError::IsADir(msg)),
+            Ok(Response::Err { code: 111, .. }) => Err(FsError::Disconnected),
+            Ok(r) => Err(FsError::Protocol(format!("unexpected fetch-meta response {r:?}"))),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Fault the missing blocks of `[off, off+len)` into the cache (plus
+    /// the configured readahead window), verifying every received block
+    /// against the entry's digest vector. Retries once through a
+    /// metadata refresh when the home copy moved mid-fetch (torn-fetch
+    /// protection); locally-dirty blocks always survive the refresh
+    /// (last-close-wins).
+    fn fault_range(&mut self, path: &str, off: u64, len: u64) -> Result<(), FsError> {
+        if self.cache.is_localized(path) {
+            return Ok(());
+        }
+        let bb = self.cfg.stripe.min_block.max(1);
+        for attempt in 0..2 {
+            let Some(e) = self.cache.entry(path) else { return Ok(()) };
+            let size = e.attr.size;
+            let version = e.version;
+            if size == 0 || off >= size || len == 0 {
+                return Ok(());
+            }
+            let end = off.saturating_add(len).min(size);
+            let ra_end = end.saturating_add(self.cfg.cache.readahead_blocks * bb).min(size);
+            let missing = e.residency.missing_extents(off / bb, ra_end.div_ceil(bb));
+            if missing.is_empty() {
+                return Ok(());
+            }
+            if version == 0 {
+                // never at home (local creation): nothing to fault from
+                return Ok(());
+            }
+            let expected = self.cache.entry(path).map(|e| e.digests.clone()).unwrap_or_default();
+            let mut stale = false;
+            for (first_block, count) in missing {
+                let foff = first_block * bb;
+                let flen = (count * bb).min(size - foff);
+                match self.link.fetch_range(path, foff, flen, version) {
+                    Ok(image) => {
+                        transfer::verify_extents(
+                            &self.engine,
+                            path,
+                            &image.extents,
+                            bb as usize,
+                            &self.metrics,
+                        )?;
+                        if image
+                            .extents
+                            .iter()
+                            .any(|x| expected.get(x.index as usize) != Some(&x.digest))
+                        {
+                            // the digest grid moved: the version changed
+                            // between our FetchMeta and this range
+                            stale = true;
+                            break;
+                        }
+                        let bytes = image.bytes();
+                        // integrity verification is client CPU on the
+                        // transfer path
+                        self.clock.advance_secs(bytes as f64 / self.cfg.disk.digest_cpu_bps);
+                        // the faulted blocks land on the cache-space FS
+                        self.cache_disk.io(self.clock.as_ref(), bytes);
+                        let now = self.clock.now();
+                        self.cache.install_blocks(path, &image.extents, now)?;
+                        self.metrics.add(names::FETCH_BYTES, bytes);
+                    }
+                    Err(FsError::Stale(_)) => {
+                        stale = true;
+                        break;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+            // re-stamp the whole faulted window at the current instant so
+            // the budget enforcement below cannot evict blocks the caller
+            // is about to consume (the clock advanced between extents)
+            let now = self.clock.now();
+            self.cache.touch_blocks(path, off / bb, ra_end.div_ceil(bb), now);
+            self.enforce_cache_budget();
+            if !stale {
+                return Ok(());
+            }
+            if attempt == 0 {
+                self.metrics.incr(names::CACHE_INVALIDATIONS);
+                if let Some(e) = self.cache.entry_mut(path) {
+                    // Dirty stays Dirty: begin_paged preserves the dirty
+                    // blocks across the version refresh (last-close-wins)
+                    if e.state != EntryState::Dirty {
+                        e.state = EntryState::Invalid;
+                    }
+                }
+                self.refresh_meta(path)?;
+            }
+        }
+        Err(FsError::Stale(format!("{path} kept changing during paged fetch")))
+    }
+
+    /// Fault a file's entire content in — the degenerate whole-range
+    /// fault, used by whole-file mode, `truncate`, and the full-write
+    /// fallbacks.
+    fn ensure_full(&mut self, path: &str) -> Result<(), FsError> {
+        let size = self.logical_size(path);
+        self.fault_range(path, 0, size.max(1))
+    }
+
+    /// Fetch a file whole into cache — the paper's first-`open()`
+    /// behaviour, now a thin "fault the whole range" wrapper kept for
+    /// whole-file mode (`paging = false`) and full-content paths.
+    fn fetch_file(&mut self, path: &str) -> Result<(), FsError> {
+        self.ensure_entry(path)?;
         self.metrics.incr(names::FETCH_FILES);
-        self.metrics.add(names::FETCH_BYTES, image.data.len() as u64);
-        // write the cached copy to the cache-space parallel FS
-        self.cache_disk.io(self.clock.as_ref(), image.data.len() as u64);
-        self.cache.install(path, &image.data, image.version, image.digests.clone(), attr, now)?;
+        self.ensure_full(path)
+    }
+
+    /// Build the full-write demotion of a stale delta: the entire cache
+    /// copy of `path`, faulting any non-resident clean blocks in first
+    /// (the paged plane may hold only the dirtied ones).
+    fn demoted_full_write(&mut self, path: &str) -> Result<MetaOp, FsError> {
+        self.ensure_full(path)?;
+        let data = self.cache.store().read(path)?.to_vec();
+        let digests = self.engine.digests(&data, self.cfg.stripe.min_block as usize);
+        Ok(MetaOp::WriteFull { path: path.to_string(), data, digests })
+    }
+
+    /// Apply the `cache.budget_bytes` LRU block eviction and surface the
+    /// evicted volume in metrics.
+    fn enforce_cache_budget(&mut self) {
+        let now = self.clock.now();
+        let (blocks, bytes) = self.cache.enforce_budget(now);
+        if blocks > 0 {
+            self.metrics.add(names::CACHE_EVICTIONS, blocks);
+            self.metrics.add(names::CACHE_EVICTED_BYTES, bytes);
+        }
+    }
+
+    /// Merge a written sparse shadow back into the cache copy at close:
+    /// copy the dirtied blocks, mark them in the residency map, patch the
+    /// per-block digest vector (identical to re-digesting the whole file
+    /// — digests are per block), and queue the block-granular writeback.
+    /// This is the paper's aggregate-on-close, re-planned against the
+    /// residency map instead of a whole-file digest compare.
+    fn merge_shadow(&mut self, path: &str, sh: &ShadowState, localized: bool) -> Result<(), FsError> {
+        let bb = self.cfg.stripe.min_block.max(1);
+        let new_size = sh.size;
+        let base_blocks = sh.base_size.div_ceil(bb);
+        let total_blocks = new_size.div_ceil(bb);
+        // dirty set: every block the fd wrote, plus any wholly-new hole
+        // blocks beyond the base (their content is zeros)
+        let mut dirty: Vec<u64> = sh.blocks.iter().copied().filter(|&b| b * bb < new_size).collect();
+        for b in base_blocks..total_blocks {
+            if !sh.blocks.contains(&b) {
+                dirty.push(b);
+            }
+        }
+        dirty.sort_unstable();
+        dirty.dedup();
+
+        // decide full-vs-delta BEFORE merging, so a full write can fault
+        // the non-resident base blocks first
+        let (base_version, old_digests) = match self.cache.entry(path) {
+            Some(e) if !localized => (e.version, e.digests.clone()),
+            _ => (0, Vec::new()),
+        };
+        let dirty_bytes: u64 =
+            dirty.iter().map(|&b| Residency::block_len(b as usize, new_size, bb)).sum();
+        let use_delta = !localized
+            && self.cfg.stripe.delta_writeback
+            && base_version > 0
+            && !old_digests.is_empty()
+            // a delta must actually save payload to be worth the
+            // stale-base risk
+            && dirty_bytes * 2 < new_size.max(1);
+
+        // the dirtied blocks become the cache copy (undirtied base
+        // blocks are already there — or still non-resident, which the
+        // residency map keeps honest)
+        let mut copy_bytes = 0u64;
+        let now = self.clock.now();
+        for &b in &dirty {
+            let bstart = b * bb;
+            let blen = Residency::block_len(b as usize, new_size, bb) as usize;
+            let mut block = if sh.blocks.contains(&b) {
+                self.cache.store().read_at(&sh.path, bstart, blen)?.to_vec()
+            } else {
+                Vec::new()
+            };
+            block.resize(blen, 0); // hole tails within a block are zeros
+            self.cache.store_mut().write_at(path, bstart, &block, now)?;
+            copy_bytes += blen as u64;
+        }
+        self.cache_disk.io(self.clock.as_ref(), copy_bytes);
+
+        if localized {
+            // stays local; nothing queued (paper: localized dirs)
+            return Ok(());
+        }
+
+        // record the merged blocks in the residency map BEFORE any
+        // full-write faulting, so the fallback faults only the UNDIRTIED
+        // base blocks — never content this fd just overwrote. One
+        // fault_range call covers every gap, so its end-of-fault restamp
+        // protects the whole window from the budget eviction.
+        self.cache.mark_dirty_blocks(path, &dirty, old_digests.clone(), new_size, now)?;
+        let (op, digests) = if use_delta {
+            // patch the digest vector at the dirty indices (identical to
+            // re-digesting the whole file — digests are per block);
+            // digest planning is client CPU on the close path
+            self.clock.advance_secs(copy_bytes as f64 / self.cfg.disk.digest_cpu_bps);
+            let mut digests = old_digests;
+            digests.resize(total_blocks as usize, 0);
+            let mut blocks: Vec<(u32, Vec<u8>)> = Vec::with_capacity(dirty.len());
+            for &b in &dirty {
+                let bstart = b * bb;
+                let blen = Residency::block_len(b as usize, new_size, bb) as usize;
+                let data = self.cache.store().read_at(path, bstart, blen)?.to_vec();
+                digests[b as usize] = self.engine.digests(&data, bb as usize)[0];
+                blocks.push((b as u32, data));
+            }
+            self.metrics.add(names::WRITEBACK_BYTES_SAVED, new_size.saturating_sub(dirty_bytes));
+            let op = MetaOp::WriteDelta {
+                path: path.to_string(),
+                total_size: new_size,
+                base_version,
+                blocks,
+                digests: digests.clone(),
+            };
+            (op, digests)
+        } else {
+            // full write: fault the undirtied base blocks in, then digest
+            // the shipped content whole — a faulting refresh may have
+            // mixed in a newer base, so patching the old vector would
+            // poison the server's digest cache
+            self.fault_range(path, 0, sh.base_size)?;
+            let data = self.cache.store().read(path)?.to_vec();
+            self.clock.advance_secs(data.len() as f64 / self.cfg.disk.digest_cpu_bps);
+            let digests = self.engine.digests(&data, bb as usize);
+            let op = MetaOp::WriteFull { path: path.to_string(), data, digests: digests.clone() };
+            (op, digests)
+        };
+        let now = self.clock.now();
+        self.cache.mark_dirty_blocks(path, &dirty, digests, new_size, now)?;
+        self.enqueue(op)?;
+        self.enforce_cache_budget();
         Ok(())
     }
 
@@ -715,6 +1003,23 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
             }
             self.cache_disk.op(self.clock.as_ref());
         } else if self.content_usable(&p) {
+            // a disconnected open must stay readable to EOF: a partially-
+            // resident entry cannot promise that offline (unless O_TRUNC
+            // makes the old content irrelevant), so fail at open rather
+            // than Disconnected mid-scan on the first missing block
+            if !flags.is_truncate() && !self.link.is_connected() {
+                let fully = self
+                    .cache
+                    .entry(&p)
+                    .map(|e| {
+                        e.attr.size == 0
+                            || e.residency.present_blocks() == e.residency.blocks()
+                    })
+                    .unwrap_or(false);
+                if !fully {
+                    return Err(FsError::Disconnected);
+                }
+            }
             self.metrics.incr(names::CACHE_HITS);
             self.cache.touch(&p, now);
             if flags.is_truncate() {
@@ -759,14 +1064,27 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
                 }
             };
             if exists_remotely {
-                match self.fetch_file(&p) {
+                // paged: one FetchMeta round trip, content faults on
+                // demand. Whole-file mode (the ablation baseline) pulls
+                // everything here, like the paper's first open()
+                let r = if self.paging { self.ensure_entry(&p) } else { self.fetch_file(&p) };
+                match r {
                     Ok(()) => {}
                     Err(FsError::Disconnected) => {
                         // disconnected operation: serve the stale cached
-                        // copy if we still hold the content
-                        let has_content =
-                            self.cache.store().stat(&p).map(|a| a.size > 0).unwrap_or(false)
-                                || self.cache.entry(&p).map(|e| e.attr.size == 0).unwrap_or(false);
+                        // copy, but only when EVERY block survives
+                        // locally — a successful open must stay readable
+                        // to EOF, not fail Disconnected mid-scan on the
+                        // first non-resident block
+                        let has_content = self
+                            .cache
+                            .entry(&p)
+                            .map(|e| {
+                                e.attr.size == 0
+                                    || (e.residency.blocks() > 0
+                                        && e.residency.present_blocks() == e.residency.blocks())
+                            })
+                            .unwrap_or(false);
                         if !has_content {
                             return Err(FsError::Disconnected);
                         }
@@ -789,30 +1107,24 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         }
 
         let shadow = if flags.is_write() {
-            // writes land in a shadow file (paper §3.1); it starts as a
-            // copy of the current content so read-after-write via the
-            // same fd is coherent, and the close flush is the aggregate
+            // writes land in a SPARSE shadow (paper §3.1, block-granular
+            // since DESIGN.md §2.4): it starts empty and materializes
+            // only the blocks writes touch — reads through the fd fall
+            // back to the base content, so read-after-write stays
+            // coherent without copying (or even fetching) the base
             let name = vpath::shadow_file_name(&vpath::basename(&p), self.next_fd);
             let spath = vpath::join(&vpath::parent(&p), &name);
             let now = self.clock.now();
-            let content = if flags.is_truncate() {
-                Vec::new()
-            } else {
-                self.cache.store().read(&p).map(|d| d.to_vec()).unwrap_or_default()
-            };
-            self.cache.store_mut().write(&spath, &content, now)?;
-            Some(spath)
+            self.cache.store_mut().write(&spath, &[], now)?;
+            let base_size = if flags.is_truncate() { 0 } else { self.logical_size(&p) };
+            Some(ShadowState { path: spath, blocks: BTreeSet::new(), size: base_size, base_size })
         } else {
             None
         };
 
         let fd = self.next_fd;
         self.next_fd += 1;
-        let pos = if flags.is_append() {
-            self.cache.store().stat(&p).map(|a| a.size).unwrap_or(0)
-        } else {
-            0
-        };
+        let pos = if flags.is_append() { self.logical_size(&p) } else { 0 };
         self.fds.insert(fd, OpenFile { path: p, pos, flags, shadow, wrote: false, localized });
         self.metrics.observe(names::OP_LATENCY, self.clock.now().saturating_sub(t0).as_secs());
         Ok(Fd(fd))
@@ -820,13 +1132,69 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
 
     fn pread(&mut self, fd: Fd, buf: &mut [u8], off: u64) -> Result<usize, FsError> {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
-        // write-only fds may read back their own shadow (read-your-writes
-        // coherence within the fd); the flags were validated at open
-        let src = f.shadow.clone().unwrap_or_else(|| f.path.clone());
-        let n = {
-            let data = self.cache.store().read_at(&src, off, buf.len())?;
-            buf[..data.len()].copy_from_slice(data);
-            data.len()
+        let path = f.path.clone();
+        let localized = f.localized;
+        let bb = self.cfg.stripe.min_block.max(1);
+        // write fds read through their sparse shadow (read-your-writes
+        // coherence within the fd); read fds page the base in on demand.
+        // Snapshot only the dirty blocks overlapping this read, not the
+        // whole set.
+        let shadow = f.shadow.as_ref().map(|s| {
+            let first = off / bb;
+            let last = off.saturating_add(buf.len() as u64).div_ceil(bb) + 1;
+            let blocks: Vec<u64> = s.blocks.range(first..last).copied().collect();
+            (s.path.clone(), blocks, s.size, s.base_size)
+        });
+        let n = match shadow {
+            None => {
+                let size = self.logical_size(&path);
+                if off >= size || buf.is_empty() {
+                    0
+                } else {
+                    let n = (size - off).min(buf.len() as u64) as usize;
+                    self.fault_range(&path, off, n as u64)?;
+                    let got = {
+                        let data = self.cache.store().read_at(&path, off, n)?;
+                        buf[..data.len()].copy_from_slice(data);
+                        data.len()
+                    };
+                    if !localized {
+                        let now = self.clock.now();
+                        let last = off.saturating_add(got as u64).div_ceil(bb);
+                        self.cache.touch_blocks(&path, off / bb, last, now);
+                    }
+                    got
+                }
+            }
+            Some((spath, sblocks, ssize, base_size)) => {
+                if off >= ssize || buf.is_empty() {
+                    0
+                } else {
+                    // assemble per block: dirtied blocks from the shadow,
+                    // the rest from the (faulted-on-demand) base; holes
+                    // beyond the base read as zeros
+                    let n = (ssize - off).min(buf.len() as u64) as usize;
+                    buf[..n].fill(0);
+                    let mut done = 0usize;
+                    while done < n {
+                        let cur = off + done as u64;
+                        let b = cur / bb;
+                        let seg_end = ((b + 1) * bb).min(off + n as u64);
+                        let seg = (seg_end - cur) as usize;
+                        if sblocks.binary_search(&b).is_ok() {
+                            let data = self.cache.store().read_at(&spath, cur, seg)?;
+                            buf[done..done + data.len()].copy_from_slice(data);
+                        } else if cur < base_size {
+                            let blen = seg.min((base_size - cur) as usize);
+                            self.fault_range(&path, cur, blen as u64)?;
+                            let data = self.cache.store().read_at(&path, cur, blen)?;
+                            buf[done..done + data.len()].copy_from_slice(data);
+                        }
+                        done += seg;
+                    }
+                    n
+                }
+            }
         };
         self.cache_disk.io(self.clock.as_ref(), n as u64);
         Ok(n)
@@ -837,13 +1205,53 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         if !f.flags.is_write() {
             return Err(FsError::Perm("fd not open for writing".into()));
         }
-        let shadow = f.shadow.clone().ok_or(FsError::BadHandle)?;
-        let now = self.clock.now();
-        self.cache.store_mut().write_at(&shadow, off, buf, now)?;
-        self.cache_disk.io(self.clock.as_ref(), buf.len() as u64);
-        if let Some(f) = self.fds.get_mut(&fd.0) {
-            f.wrote = true;
+        let Some(sh) = f.shadow.as_ref() else { return Err(FsError::BadHandle) };
+        if buf.is_empty() {
+            return Ok(0);
         }
+        let path = f.path.clone();
+        let localized = f.localized;
+        let spath = sh.path.clone();
+        let base_size = sh.base_size;
+        let bb = self.cfg.stripe.min_block.max(1);
+        let first = off / bb;
+        let write_end = off + buf.len() as u64;
+        let last = write_end.div_ceil(bb);
+        // a block the write only PARTIALLY covers must merge the base
+        // content in before the write lands (the dirtied block ships
+        // whole at close); fully-covered blocks fetch nothing
+        let mut need_base: Vec<(u64, u64)> = Vec::new();
+        for b in [first, last - 1] {
+            if sh.blocks.contains(&b) {
+                continue;
+            }
+            let bstart = b * bb;
+            if bstart >= base_size {
+                continue;
+            }
+            let base_end = (bstart + bb).min(base_size);
+            if !(off <= bstart && write_end >= base_end) {
+                need_base.push((bstart, base_end - bstart));
+            }
+        }
+        need_base.dedup();
+        let now = self.clock.now();
+        for (bstart, blen) in need_base {
+            if !localized {
+                self.fault_range(&path, bstart, blen)?;
+            }
+            let data = self.cache.store().read_at(&path, bstart, blen as usize)?.to_vec();
+            self.cache.store_mut().write_at(&spath, bstart, &data, now)?;
+        }
+        self.cache.store_mut().write_at(&spath, off, buf, now)?;
+        self.cache_disk.io(self.clock.as_ref(), buf.len() as u64);
+        let f = self.fds.get_mut(&fd.0).ok_or(FsError::BadHandle)?;
+        let sh = f.shadow.as_mut().expect("write fd keeps its shadow");
+        for b in first..last {
+            sh.blocks.insert(b);
+        }
+        sh.size = sh.size.max(write_end);
+        f.wrote = true;
         Ok(buf.len())
     }
 
@@ -867,35 +1275,12 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         }
         self.local_locks.retain(|_, (lfd, _)| *lfd != fd.0);
 
-        let now = self.clock.now();
-        if let Some(shadow) = f.shadow {
+        if let Some(sh) = f.shadow {
             if f.wrote {
-                // the aggregated shadow content becomes the cache copy
-                let content = self.cache.store().read(&shadow)?.to_vec();
-                self.cache.store_mut().write(&f.path, &content, now)?;
-                self.cache_disk.io(self.clock.as_ref(), content.len() as u64);
-                if f.localized {
-                    // stays local; nothing queued (paper: localized dirs)
-                } else {
-                    let base = self.cache.entry(&f.path).map(|e| (e.version, e.digests.clone()));
-                    let (base_version, old_digests) = base.unwrap_or((0, Vec::new()));
-                    // delta/digest planning is client CPU on the close path
-                    self.clock.advance_secs(content.len() as f64 / self.cfg.disk.digest_cpu_bps);
-                    let (op, digests) = transfer::build_writeback(
-                        &self.engine,
-                        &self.cfg.stripe,
-                        &f.path,
-                        &content,
-                        base_version,
-                        &old_digests,
-                        self.cfg.stripe.min_block as usize,
-                        &self.metrics,
-                    );
-                    self.cache.mark_dirty(&f.path, digests, now)?;
-                    self.enqueue(op)?;
-                }
+                self.merge_shadow(&f.path, &sh, f.localized)?;
             }
-            let _ = self.cache.store_mut().unlink(&shadow, now);
+            let now = self.clock.now();
+            let _ = self.cache.store_mut().unlink(&sh.path, now);
         }
         self.metrics.observe(names::OP_LATENCY, self.clock.now().saturating_sub(t0).as_secs());
         Ok(())
@@ -987,9 +1372,10 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         self.cache.remove(&f, now);
         if let Some(e) = entry {
             if e.state == EntryState::Clean || e.state == EntryState::Dirty {
-                // keep content state under the new name
-                let data = self.cache.store().read(&t).map(|d| d.to_vec()).unwrap_or_default();
-                self.cache.install(&t, &data, e.version, e.digests, e.attr, now)?;
+                // keep content state — including the residency map —
+                // under the new name (re-installing would mistake
+                // zero-filled non-resident holes for cached content)
+                self.cache.adopt(&t, e, now)?;
             }
         }
         self.cache_disk.op(self.clock.as_ref());
@@ -1012,8 +1398,13 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         self.tick();
         let p = self.abs(path);
         let now = self.clock.now();
-        if !self.content_usable(&p) && !self.cache.is_localized(&p) && size > 0 {
-            self.fetch_file(&p)?;
+        if !self.cache.is_localized(&p) && size > 0 {
+            // the surviving prefix becomes locally-authoritative dirty
+            // content: it must be resident before it is re-digested
+            if !self.content_usable(&p) {
+                self.ensure_entry(&p)?;
+            }
+            self.fault_range(&p, 0, size)?;
         }
         if !self.cache.store().exists(&p) {
             self.cache.store_mut().mkdir_p(&vpath::parent(&p), now)?;

@@ -83,11 +83,26 @@ pub struct CacheConfig {
     /// Directories whose new files stay local and are never shipped home
     /// (paper's *localized directories*).
     pub localized_dirs: Vec<String>,
+    /// Budget for resident cached content, in bytes. When exceeded, the
+    /// cache evicts least-recently-used *clean* blocks (never dirty ones)
+    /// until it fits; entries whose last block goes demote to `AttrOnly`.
+    /// 0 = unbudgeted (the default — the paper assumes a huge work
+    /// partition).
+    pub budget_bytes: u64,
+    /// Demand-paging readahead window in blocks: a `pread` fault pulls
+    /// the missing blocks of the requested range plus this many blocks
+    /// beyond it (32 blocks = 2 MiB at the default 64 KiB block).
+    pub readahead_blocks: u64,
 }
 
 impl Default for CacheConfig {
     fn default() -> Self {
-        CacheConfig { capacity: 1 << 40, localized_dirs: Vec::new() }
+        CacheConfig {
+            capacity: 1 << 40,
+            localized_dirs: Vec::new(),
+            budget_bytes: 0,
+            readahead_blocks: 32,
+        }
     }
 }
 
@@ -171,6 +186,8 @@ impl XufsConfig {
                 "stripe.prefetch_enabled" => cfg.stripe.prefetch_enabled = value.as_bool()?,
                 "stripe.delta_writeback" => cfg.stripe.delta_writeback = value.as_bool()?,
                 "cache.capacity_gib" => cfg.cache.capacity = value.as_u64()? << 30,
+                "cache.budget_bytes" => cfg.cache.budget_bytes = value.as_u64()?,
+                "cache.readahead_blocks" => cfg.cache.readahead_blocks = value.as_u64()?,
                 "cache.localized_dirs" => {
                     cfg.cache.localized_dirs =
                         value.as_str()?.split(':').filter(|s| !s.is_empty()).map(String::from).collect()
@@ -238,6 +255,16 @@ localized_dirs = "/scratch/out:/scratch/tmp"
         assert_eq!(c.cache.localized_dirs, vec!["/scratch/out", "/scratch/tmp"]);
         // untouched keys keep defaults
         assert!(c.stripe.delta_writeback);
+        assert_eq!(c.cache.budget_bytes, 0);
+        assert_eq!(c.cache.readahead_blocks, 32);
+    }
+
+    #[test]
+    fn parse_paging_keys() {
+        let text = "[cache]\nbudget_bytes = 1048576\nreadahead_blocks = 8\n";
+        let c = XufsConfig::from_toml(text).unwrap();
+        assert_eq!(c.cache.budget_bytes, 1 << 20);
+        assert_eq!(c.cache.readahead_blocks, 8);
     }
 
     #[test]

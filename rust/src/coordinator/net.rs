@@ -18,7 +18,9 @@ use crate::client::ServerLink;
 use crate::config::XufsConfig;
 use crate::homefs::FsError;
 use crate::metrics::{names, Metrics};
-use crate::proto::{self, FileImage, MetaOp, NotifyEvent, Request, Response};
+use crate::proto::{
+    self, BlockExtent, FileImage, MetaOp, NotifyEvent, RangeImage, Request, Response,
+};
 use crate::server::FileServer;
 use crate::simnet::{Clock, RealClock};
 use crate::transfer;
@@ -367,6 +369,43 @@ fn response_to_fs_err(r: Response) -> FsError {
     }
 }
 
+/// Fetch the blocks covering one range over a dedicated authenticated
+/// connection (one stripe's share of a paged fetch).
+fn fetch_blocks_conn(
+    addr: std::net::SocketAddr,
+    pair: &KeyPair,
+    path: &str,
+    offset: u64,
+    len: u64,
+    expect_version: u64,
+) -> Result<Vec<BlockExtent>, FsError> {
+    let mut conn = dial(addr, pair)?;
+    let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
+    write_frame(&mut conn, &req.encode()).map_err(io_err)?;
+    let resp = Response::decode(&read_frame(&mut conn).map_err(io_err)?)
+        .map_err(|e| FsError::Protocol(e.to_string()))?;
+    match resp {
+        Response::FileBlocks { extents, .. } => Ok(extents),
+        r => Err(response_to_fs_err(r)),
+    }
+}
+
+/// Split `[offset, offset+len)` into block-aligned per-stripe shares.
+fn stripe_shares(offset: u64, len: u64, stripes: usize, bb: u64) -> Vec<(u64, u64)> {
+    let bb = bb.max(1);
+    let end = offset + len;
+    let blocks = len.div_ceil(bb);
+    let per = blocks.div_ceil(stripes.max(1) as u64).max(1) * bb;
+    let mut out = Vec::new();
+    let mut at = offset;
+    while at < end {
+        let share = per.min(end - at);
+        out.push((at, share));
+        at += share;
+    }
+    out
+}
+
 impl ServerLink for TcpLink {
     fn rpc(&mut self, req: Request) -> Result<Response, FsError> {
         // Callback registration rides the DEDICATED callback connection
@@ -390,60 +429,48 @@ impl ServerLink for TcpLink {
         self.control_rpc(&req)
     }
 
-    fn fetch(&mut self, path: &str) -> Result<FileImage, FsError> {
-        // step 1: metadata + digests on the control connection
-        let meta = self.control_rpc(&Request::FetchMeta { path: path.to_string() })?;
-        let Response::FileMeta { version, size, digests } = meta else {
-            return Err(response_to_fs_err(meta));
-        };
-        let stripes = transfer::stripes_for(size, &self.cfg.stripe);
-        if stripes <= 1 {
-            let r = self.control_rpc(&Request::FetchRange {
-                path: path.to_string(),
-                offset: 0,
-                len: size,
-                expect_version: version,
-            })?;
-            let Response::Range { data, .. } = r else { return Err(response_to_fs_err(r)) };
-            self.metrics.add(names::WAN_BYTES_RX, data.len() as u64);
-            return Ok(FileImage { path: path.to_string(), version, data, digests });
+    fn fetch_range(
+        &mut self,
+        path: &str,
+        offset: u64,
+        len: u64,
+        expect_version: u64,
+    ) -> Result<RangeImage, FsError> {
+        // block-align the range and stripe it exactly like a whole file
+        let plan = transfer::plan_range(offset, len, offset.saturating_add(len), &self.cfg.stripe);
+        let bb = self.cfg.stripe.min_block.max(1);
+        self.metrics.incr(names::RANGE_FETCHES);
+        if plan.len == 0 {
+            return Ok(RangeImage { version: expect_version, extents: Vec::new() });
         }
-        // step 2: genuinely parallel range fetches, one authenticated
-        // connection per stripe (paper §3.3)
-        let share = size.div_ceil(stripes as u64);
+        if plan.stripes <= 1 {
+            let extents =
+                fetch_blocks_conn(self.addr, &self.pair, path, plan.offset, plan.len, expect_version)?;
+            let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();
+            self.metrics.add(names::WAN_BYTES_RX, bytes);
+            return Ok(RangeImage { version: expect_version, extents });
+        }
+        // genuinely parallel range fetches, one authenticated connection
+        // per stripe (paper §3.3)
         let mut handles = Vec::new();
-        for i in 0..stripes {
-            let offset = i as u64 * share;
-            let len = share.min(size.saturating_sub(offset));
-            if len == 0 {
-                break;
-            }
+        for (soff, slen) in stripe_shares(plan.offset, plan.len, plan.stripes, bb) {
             let addr = self.addr;
             let pair = self.pair.clone();
             let path = path.to_string();
-            handles.push(std::thread::spawn(move || -> Result<(u64, Vec<u8>), FsError> {
-                let mut conn = dial(addr, &pair)?;
-                write_frame(
-                    &mut conn,
-                    &Request::FetchRange { path, offset, len, expect_version: version }.encode(),
-                )
-                .map_err(io_err)?;
-                let resp = Response::decode(&read_frame(&mut conn).map_err(io_err)?)
-                    .map_err(|e| FsError::Protocol(e.to_string()))?;
-                match resp {
-                    Response::Range { data, .. } => Ok((offset, data)),
-                    r => Err(response_to_fs_err(r)),
-                }
+            handles.push(std::thread::spawn(move || {
+                fetch_blocks_conn(addr, &pair, &path, soff, slen, expect_version)
             }));
         }
-        let mut data = vec![0u8; size as usize];
+        let mut extents: Vec<BlockExtent> = Vec::new();
         for h in handles {
-            let (offset, chunk) =
+            let chunk =
                 h.join().map_err(|_| FsError::Protocol("stripe thread panicked".into()))??;
-            data[offset as usize..offset as usize + chunk.len()].copy_from_slice(&chunk);
+            extents.extend(chunk);
         }
-        self.metrics.add(names::WAN_BYTES_RX, data.len() as u64);
-        Ok(FileImage { path: path.to_string(), version, data, digests })
+        extents.sort_by_key(|x| x.index);
+        let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();
+        self.metrics.add(names::WAN_BYTES_RX, bytes);
+        Ok(RangeImage { version: expect_version, extents })
     }
 
     fn prefetch(&mut self, files: &[(String, u64)]) -> Vec<FileImage> {
@@ -458,6 +485,7 @@ impl ServerLink for TcpLink {
             let results = results.clone();
             let addr = self.addr;
             let pair = self.pair.clone();
+            let bb = self.cfg.stripe.min_block.max(1);
             handles.push(std::thread::spawn(move || {
                 let Ok(mut conn) = dial(addr, &pair) else { return };
                 loop {
@@ -482,7 +510,12 @@ impl ServerLink for TcpLink {
                         return;
                     }
                     let Ok(frame) = read_frame(&mut conn) else { return };
-                    if let Ok(Response::Range { data, .. }) = Response::decode(&frame) {
+                    if let Ok(Response::FileBlocks { extents, .. }) = Response::decode(&frame) {
+                        let mut data = vec![0u8; size as usize];
+                        for x in &extents {
+                            let start = (x.index as u64 * bb) as usize;
+                            data[start..start + x.data.len()].copy_from_slice(&x.data);
+                        }
                         results.lock().unwrap().push(FileImage { path, version, data, digests });
                     }
                 }

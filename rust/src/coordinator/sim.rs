@@ -9,7 +9,7 @@ use crate::client::{ServerLink, XufsClient};
 use crate::config::XufsConfig;
 use crate::homefs::{FileStore, FsError};
 use crate::metrics::{names, Metrics};
-use crate::proto::{CompoundOp, FileImage, MetaOp, NotifyEvent, Request, Response};
+use crate::proto::{CompoundOp, FileImage, MetaOp, NotifyEvent, RangeImage, Request, Response};
 use crate::runtime::DigestEngine;
 use crate::server::FileServer;
 use crate::simnet::{Clock, SimClock, TransferKind, Wan};
@@ -89,6 +89,7 @@ impl SimWorld {
             net_up: true,
             session: None,
             root: root.to_string(),
+            data_conns_warm: false,
         };
         link.connect()?;
         Ok(XufsClient::new(
@@ -134,6 +135,10 @@ pub struct SimLink {
     net_up: bool,
     session: Option<u64>,
     root: String,
+    /// Striped data connections stay open between paged range fetches
+    /// (the paper's persistent transfer connections): only the first
+    /// fetch of a session pays connection setup + slow-start.
+    data_conns_warm: bool,
 }
 
 impl SimLink {
@@ -143,6 +148,7 @@ impl SimLink {
         if !self.net_up || !self.server.lock().unwrap().is_up() {
             return Err(FsError::Disconnected);
         }
+        self.data_conns_warm = false;
         // control connection + callback connection setup
         self.wan.connect(&self.clock);
         self.wan.connect(&self.clock);
@@ -183,6 +189,7 @@ impl SimLink {
         if !up {
             self.channel.disconnect();
             self.session = None;
+            self.data_conns_warm = false;
         }
     }
 
@@ -220,33 +227,46 @@ impl ServerLink for SimLink {
         Ok(resp)
     }
 
-    fn fetch(&mut self, path: &str) -> Result<FileImage, FsError> {
+    fn fetch_range(
+        &mut self,
+        path: &str,
+        offset: u64,
+        len: u64,
+        expect_version: u64,
+    ) -> Result<RangeImage, FsError> {
         self.check_up()?;
         let resp = {
             let mut s = self.server.lock().unwrap();
-            let r = s.handle(self.client_id, Request::Fetch { path: path.to_string() }, self.clock.now());
-            if let Response::File { image } = &r {
-                // server reads the file off its disk
-                s.disk.io(&self.clock, image.data.len() as u64);
+            let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
+            let r = s.handle(self.client_id, req, self.clock.now());
+            if let Response::FileBlocks { extents, .. } = &r {
+                // server reads the blocks off its disk
+                let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();
+                s.disk.io(&self.clock, bytes);
             }
             r
         };
         match resp {
-            Response::File { image } => {
-                let stripes = transfer::stripes_for(image.data.len() as u64, &self.cfg.stripe);
-                self.wan.transfer(
-                    &self.clock,
-                    image.data.len() as u64 + 256,
-                    stripes,
-                    TransferKind::NewConnections,
-                );
-                self.metrics.add(names::WAN_BYTES_RX, image.data.len() as u64);
+            Response::FileBlocks { version, extents } => {
+                let image = RangeImage { version, extents };
+                let payload = image.bytes() + 16 * image.extents.len() as u64 + 64;
+                let stripes = transfer::stripes_for(payload, &self.cfg.stripe);
+                let kind = if self.data_conns_warm {
+                    TransferKind::WarmConnections
+                } else {
+                    TransferKind::NewConnections
+                };
+                self.data_conns_warm = true;
+                self.wan.transfer(&self.clock, payload, stripes, kind);
+                self.metrics.add(names::WAN_BYTES_RX, image.bytes());
+                self.metrics.incr(names::RANGE_FETCHES);
                 Ok(image)
             }
             Response::Err { code: 2, msg } => Err(FsError::NotFound(msg)),
             Response::Err { code: 21, msg } => Err(FsError::IsADir(msg)),
+            Response::Err { code: 116, msg } => Err(FsError::Stale(msg)),
             Response::Err { code: 111, .. } => Err(FsError::Disconnected),
-            r => Err(FsError::Protocol(format!("unexpected fetch response {r:?}"))),
+            r => Err(FsError::Protocol(format!("unexpected range response {r:?}"))),
         }
     }
 
@@ -590,6 +610,7 @@ mod tests {
                 net_up: true,
                 session: None,
                 root: "/home/u".into(),
+                data_conns_warm: false,
             };
             l.connect().unwrap();
             l

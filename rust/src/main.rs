@@ -139,6 +139,7 @@ fn run_bench(cfg: XufsConfig, which: &str, quick: bool) {
             bench::run_ablation_consistency(&cfg, 3).print();
             bench::run_ablation_writeback(&cfg).print();
             bench::run_ablation_compound(&cfg).print();
+            bench::run_ablation_paging(&cfg, gib).print();
         }
         "all" => {
             bench::run_table1(cfg.seed.max(1)).print();

@@ -118,6 +118,12 @@ pub mod names {
     pub const CACHE_EVICTIONS: &str = "cache.evictions";
     pub const FETCH_FILES: &str = "transfer.fetch_files";
     pub const FETCH_BYTES: &str = "transfer.fetch_bytes";
+    /// Paged range fetches issued (demand-paging fault-ins).
+    pub const RANGE_FETCHES: &str = "transfer.range_fetches";
+    /// Bytes evicted by the budgeted LRU block eviction.
+    pub const CACHE_EVICTED_BYTES: &str = "cache.evicted_bytes";
+    /// Entries demoted to Invalid by recover on unknown persisted tokens.
+    pub const CACHE_RECOVER_DEMOTED: &str = "cache.recover_demoted";
     pub const PREFETCH_FILES: &str = "transfer.prefetch_files";
     pub const WRITEBACK_FILES: &str = "transfer.writeback_files";
     pub const WRITEBACK_BYTES: &str = "transfer.writeback_bytes";

@@ -58,6 +58,32 @@ pub struct FileImage {
     pub digests: Vec<i32>,
 }
 
+/// One block of file content in a partial fetch: its index in the file's
+/// block grid, its bytes (short only for the file's last block), and the
+/// server-side digest of exactly those bytes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BlockExtent {
+    pub index: u32,
+    pub data: Vec<u8>,
+    pub digest: i32,
+}
+
+/// A partial file image: the blocks faulted in by one range fetch, all at
+/// `version`. The whole-file [`FileImage`] is the degenerate case where
+/// the extents cover every block.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RangeImage {
+    pub version: u64,
+    pub extents: Vec<BlockExtent>,
+}
+
+impl RangeImage {
+    /// Total content bytes carried by the extents.
+    pub fn bytes(&self) -> u64 {
+        self.extents.iter().map(|x| x.data.len() as u64).sum()
+    }
+}
+
 /// Lock kinds (fcntl-style).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum LockKind {
@@ -418,8 +444,10 @@ pub enum Response {
     Err { code: u32, msg: String },
     /// Metadata + digests for a striped range fetch.
     FileMeta { version: u64, size: u64, digests: Vec<i32> },
-    /// One range of file content at `version`.
-    Range { version: u64, data: Vec<u8> },
+    /// The blocks covering one fetched range at `version` — a partial
+    /// [`FileImage`] carrying `(block_index, bytes, digest)` extents so
+    /// the client can verify and install each block independently.
+    FileBlocks { version: u64, extents: Vec<BlockExtent> },
     /// Per-op results of a [`Request::Compound`], in request order. Each
     /// entry is the [`Response`] the matching single-op request would
     /// have produced (`Applied`/`Attr`/`Err`), so partial failure is
@@ -479,8 +507,11 @@ impl Response {
             Response::FileMeta { version, size, digests } => {
                 e.u8(13).u64(*version).u64(*size).i32_slice(digests);
             }
-            Response::Range { version, data } => {
-                e.u8(14).u64(*version).bytes(data);
+            Response::FileBlocks { version, extents } => {
+                e.u8(14).u64(*version).varint(extents.len() as u64);
+                for x in extents {
+                    e.u32(x.index).bytes(&x.data).i32(x.digest);
+                }
             }
             Response::CompoundReply { replies } => {
                 // each reply is length-prefixed so decode stays simple
@@ -534,7 +565,19 @@ impl Response {
             11 => Response::Pong,
             12 => Response::Err { code: d.u32()?, msg: d.str()? },
             13 => Response::FileMeta { version: d.u64()?, size: d.u64()?, digests: d.i32_vec()? },
-            14 => Response::Range { version: d.u64()?, data: d.bytes()?.to_vec() },
+            14 => {
+                let version = d.u64()?;
+                let n = d.varint()? as usize;
+                let mut extents = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    extents.push(BlockExtent {
+                        index: d.u32()?,
+                        data: d.bytes()?.to_vec(),
+                        digest: d.i32()?,
+                    });
+                }
+                Response::FileBlocks { version, extents }
+            }
             15 => {
                 if depth > 0 {
                     return Err(ProtoError("nested CompoundReply".into()));
@@ -671,7 +714,14 @@ mod tests {
             Response::Pong,
             Response::Err { code: 2, msg: "no such file".into() },
             Response::FileMeta { version: 9, size: 1 << 20, digests: vec![3, -4, 5] },
-            Response::Range { version: 9, data: vec![0x7F; 333] },
+            Response::FileBlocks { version: 9, extents: vec![] },
+            Response::FileBlocks {
+                version: 9,
+                extents: vec![
+                    BlockExtent { index: 3, data: vec![0x7F; 333], digest: -77 },
+                    BlockExtent { index: 4, data: vec![0x11; 64], digest: 12 },
+                ],
+            },
             Response::CompoundReply { replies: vec![] },
             Response::CompoundReply {
                 replies: vec![
@@ -808,6 +858,48 @@ mod tests {
         // ...while a flat reply still decodes
         let flat = Response::CompoundReply { replies: vec![Response::Pong] };
         assert_eq!(Response::decode(&flat.encode()).unwrap(), flat);
+    }
+
+    #[test]
+    fn fetch_range_rejects_every_truncation() {
+        // the paged data plane's request: every strict prefix of the
+        // frame must decode to an error, never panic or mis-parse
+        let b = Request::FetchRange {
+            path: "/a/big.dat".into(),
+            offset: 3 << 20,
+            len: 1 << 20,
+            expect_version: 42,
+        }
+        .encode();
+        assert!(Request::decode(&b).is_ok());
+        for cut in 0..b.len() {
+            assert!(Request::decode(&b[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+    }
+
+    #[test]
+    fn file_blocks_rejects_truncation_and_corruption() {
+        let resp = Response::FileBlocks {
+            version: 7,
+            extents: vec![
+                BlockExtent { index: 0, data: vec![0xAA; 100], digest: 5 },
+                BlockExtent { index: 1, data: vec![0xBB; 50], digest: -6 },
+            ],
+        };
+        let b = resp.encode();
+        assert_eq!(Response::decode(&b).unwrap(), resp);
+        // every strict prefix is a decode error (truncated frame)
+        for cut in 0..b.len() {
+            assert!(Response::decode(&b[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+        // an absurd extent-count claim is rejected, not allocated
+        let mut e = Encoder::new();
+        e.u8(14).u64(7).varint(u64::MAX);
+        assert!(Response::decode(&e.into_bytes()).is_err());
+        // flipping the inner length prefix corrupts the frame
+        let mut bad = b.clone();
+        bad[9] = 0xFF; // extent count varint -> continuation byte
+        assert!(Response::decode(&bad).is_err());
     }
 
     #[test]

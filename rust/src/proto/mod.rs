@@ -12,7 +12,8 @@ mod messages;
 
 pub use codec::{Decoder, Encoder, ProtoError};
 pub use messages::{
-    CompoundOp, DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, Request, Response, WireAttr,
+    BlockExtent, CompoundOp, DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, RangeImage,
+    Request, Response, WireAttr,
 };
 
 /// Frame a message body with a u32-LE length prefix (TCP transport).

@@ -24,7 +24,9 @@ use crate::callback::NotifyChannel;
 use crate::homefs::{FileStore, FsError};
 use crate::lease::{Acquire, LockTable};
 use crate::metrics::{names, Metrics};
-use crate::proto::{CompoundOp, DirEntry, FileImage, MetaOp, NotifyEvent, Request, Response, WireAttr};
+use crate::proto::{
+    BlockExtent, CompoundOp, DirEntry, FileImage, MetaOp, NotifyEvent, Request, Response, WireAttr,
+};
 use crate::runtime::DigestEngine;
 use crate::simnet::VirtualTime;
 use crate::util::path as vpath;
@@ -273,10 +275,37 @@ impl FileServer {
                         "{path} changed during striped fetch (v{} != v{expect_version})",
                         a.version
                     ))),
-                    Ok(_) => match self.fs.read_at(&path, offset, len as usize) {
-                        Ok(data) => Response::Range { version: expect_version, data: data.to_vec() },
-                        Err(e) => err_resp(&e),
-                    },
+                    Ok(a) => {
+                        // serve whole blocks covering the range, each with
+                        // its digest from the digest cache, so the client
+                        // can verify and install blocks independently
+                        let bb = self.block_bytes.max(1) as u64;
+                        let digests = self.digests_for(&path, a.version);
+                        let total = a.size.div_ceil(bb);
+                        let first = (offset / bb).min(total);
+                        let last = offset.saturating_add(len).min(a.size).div_ceil(bb);
+                        let mut extents = Vec::with_capacity(last.saturating_sub(first) as usize);
+                        let mut failed = None;
+                        for b in first..last {
+                            let boff = b * bb;
+                            let blen = bb.min(a.size - boff) as usize;
+                            match self.fs.read_at(&path, boff, blen) {
+                                Ok(data) => extents.push(BlockExtent {
+                                    index: b as u32,
+                                    data: data.to_vec(),
+                                    digest: digests.get(b as usize).copied().unwrap_or(0),
+                                }),
+                                Err(e) => {
+                                    failed = Some(e);
+                                    break;
+                                }
+                            }
+                        }
+                        match failed {
+                            Some(e) => err_resp(&e),
+                            None => Response::FileBlocks { version: a.version, extents },
+                        }
+                    }
                     Err(e) => err_resp(&e),
                 }
             }
@@ -545,6 +574,66 @@ mod tests {
         s.local_write("/home/user/a.txt", b"changed", t(3.0)).unwrap();
         s.handle(1, Request::Fetch { path: "/home/user/a.txt".into() }, t(4.0));
         assert_eq!(m.counter(names::DIGEST_CALLS), 1);
+    }
+
+    #[test]
+    fn fetch_range_serves_block_extents_with_digests() {
+        let mut s = server();
+        // whole-file digests (fills the digest cache)
+        let whole = match s.handle(1, Request::Fetch { path: "/home/u/b.dat".into() }, t(1.0)) {
+            Response::File { image } => image,
+            r => panic!("{r:?}"),
+        };
+        let v = s.home().stat("/home/u/b.dat").unwrap().version;
+        // a mid-file byte range comes back as the covering blocks, each
+        // carrying the digest the whole-file fetch reported
+        let r = s.handle(
+            1,
+            Request::FetchRange {
+                path: "/home/u/b.dat".into(),
+                offset: 65536 + 10,
+                len: 65536,
+                expect_version: v,
+            },
+            t(2.0),
+        );
+        let Response::FileBlocks { version, extents } = r else { panic!("{r:?}") };
+        assert_eq!(version, v);
+        assert_eq!(extents.len(), 2); // blocks 1 and 2 cover the range
+        assert_eq!(extents[0].index, 1);
+        assert_eq!(extents[1].index, 2);
+        for x in &extents {
+            let start = x.index as usize * 65536;
+            assert_eq!(x.data, whole.data[start..start + x.data.len()]);
+            assert_eq!(x.digest, whole.digests[x.index as usize]);
+        }
+        // the tail block is short, clamped to the file size
+        let r = s.handle(
+            1,
+            Request::FetchRange {
+                path: "/home/u/b.dat".into(),
+                offset: 199_000,
+                len: 1 << 20,
+                expect_version: v,
+            },
+            t(3.0),
+        );
+        let Response::FileBlocks { extents, .. } = r else { panic!("{r:?}") };
+        assert_eq!(extents.len(), 1);
+        assert_eq!(extents[0].index, 3);
+        assert_eq!(extents[0].data.len(), 200_000 - 3 * 65536);
+        // out-of-range offsets yield an empty (not erroneous) reply
+        let r = s.handle(
+            1,
+            Request::FetchRange {
+                path: "/home/u/b.dat".into(),
+                offset: 10 << 20,
+                len: 4096,
+                expect_version: v,
+            },
+            t(4.0),
+        );
+        assert!(matches!(r, Response::FileBlocks { ref extents, .. } if extents.is_empty()), "{r:?}");
     }
 
     #[test]

@@ -15,17 +15,71 @@ use std::sync::Arc;
 use crate::config::StripeConfig;
 use crate::homefs::FsError;
 use crate::metrics::{names, Metrics};
-use crate::proto::{FileImage, MetaOp};
+use crate::proto::{BlockExtent, FileImage, MetaOp};
 use crate::runtime::DigestEngine;
 
 /// How many TCP stripes a transfer of `bytes` uses: 1 below the striping
-/// threshold, then one per `min_block`, capped at `max_stripes`.
+/// threshold, then one per `min_block`, capped at `max_stripes`. Always
+/// at least 1, even for `bytes = 0` with a zero threshold — a transfer
+/// plan must never degenerate to zero stripes.
 pub fn stripes_for(bytes: u64, cfg: &StripeConfig) -> usize {
     if bytes <= cfg.stripe_threshold {
         return 1;
     }
-    let by_block = bytes.div_ceil(cfg.min_block.max(1)) as usize;
+    let by_block = bytes.div_ceil(cfg.min_block.max(1)).max(1) as usize;
     by_block.clamp(1, cfg.max_stripes.max(1))
+}
+
+/// A block-aligned fetch extent with its stripe fan-out: the
+/// generalization of the whole-file stripe plan to an arbitrary byte
+/// range. A whole file is the degenerate case `plan_range(0, size, size)`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExtentPlan {
+    /// Block-aligned start offset.
+    pub offset: u64,
+    /// Bytes to fetch (end clamped to the file size).
+    pub len: u64,
+    /// Parallel connections the transfer stripes across.
+    pub stripes: usize,
+}
+
+/// Plan a range fetch exactly like a whole-file transfer: align the
+/// requested range outward to block boundaries (clamped to `size`), then
+/// stripe the payload by the same policy as [`stripes_for`].
+pub fn plan_range(offset: u64, len: u64, size: u64, cfg: &StripeConfig) -> ExtentPlan {
+    if offset >= size || len == 0 {
+        return ExtentPlan { offset: offset.min(size), len: 0, stripes: 1 };
+    }
+    let bb = cfg.min_block.max(1);
+    let start = (offset / bb) * bb;
+    let end = offset.saturating_add(len).min(size);
+    let end = end.div_ceil(bb).saturating_mul(bb).min(size);
+    let len = end.saturating_sub(start);
+    ExtentPlan { offset: start, len, stripes: stripes_for(len, cfg) }
+}
+
+/// Verify fetched block extents end-to-end: recompute each block's digest
+/// from the received bytes and compare to the digest the server sent. A
+/// mismatch means a corrupted stripe — callers re-fetch.
+pub fn verify_extents(
+    engine: &Arc<DigestEngine>,
+    path: &str,
+    extents: &[BlockExtent],
+    block_bytes: usize,
+    metrics: &Metrics,
+) -> Result<(), FsError> {
+    for x in extents {
+        let got = engine.digests(&x.data, block_bytes);
+        if x.data.is_empty() || x.data.len() > block_bytes || got != [x.digest] {
+            metrics.incr("transfer.integrity_failures");
+            return Err(FsError::Protocol(format!(
+                "integrity check failed for {path} block {} ({} bytes)",
+                x.index,
+                x.data.len()
+            )));
+        }
+    }
+    Ok(())
 }
 
 /// Verify a fetched image end-to-end: recompute per-block digests of the
@@ -157,6 +211,78 @@ mod tests {
         assert_eq!(stripes_for(1 << 30, &c), 4);
         c.stripe_threshold = 0;
         assert_eq!(stripes_for(1, &c), 1);
+    }
+
+    #[test]
+    fn stripe_policy_boundaries_never_zero() {
+        // threshold boundaries: exactly at the threshold stays 1 stripe,
+        // one past it stripes — and bytes = 0 is always exactly 1 stripe,
+        // even with a zero threshold (no zero-block plans)
+        let mut c = cfg();
+        for threshold in [0u64, 64 * 1024, 1 << 20] {
+            c.stripe_threshold = threshold;
+            assert_eq!(stripes_for(0, &c), 1, "threshold {threshold}");
+            assert_eq!(stripes_for(threshold, &c), 1, "threshold {threshold}");
+            assert!(stripes_for(threshold + 1, &c) >= 1, "threshold {threshold}");
+        }
+        c.stripe_threshold = 0;
+        assert_eq!(stripes_for(1, &c), 1, "1 byte is one min_block share");
+        assert_eq!(stripes_for(c.min_block + 1, &c), 2);
+        // degenerate config: zero min_block must not divide by zero
+        c.min_block = 0;
+        assert!(stripes_for(1 << 20, &c) >= 1);
+    }
+
+    #[test]
+    fn plan_range_aligns_and_stripes_like_whole_file() {
+        let c = cfg();
+        let size = 10 * 64 * 1024 + 100; // 10 full blocks + ragged tail
+        // mid-file range aligns outward to block boundaries
+        let p = plan_range(70_000, 10_000, size, &c);
+        assert_eq!(p.offset, 64 * 1024);
+        assert_eq!(p.len, 64 * 1024);
+        assert_eq!(p.stripes, 1);
+        // range crossing a boundary covers both blocks
+        let p = plan_range(64 * 1024 - 1, 2, size, &c);
+        assert_eq!(p.offset, 0);
+        assert_eq!(p.len, 2 * 64 * 1024);
+        // the whole file is the degenerate case, striped identically
+        let p = plan_range(0, size, size, &c);
+        assert_eq!((p.offset, p.len), (0, size));
+        assert_eq!(p.stripes, stripes_for(size, &c));
+        // tail range clamps to the ragged end
+        let p = plan_range(10 * 64 * 1024, 1 << 20, size, &c);
+        assert_eq!(p.offset, 10 * 64 * 1024);
+        assert_eq!(p.len, 100);
+        // fully out-of-range request degenerates to an empty plan
+        let p = plan_range(size + 5, 10, size, &c);
+        assert_eq!(p.len, 0);
+        assert_eq!(p.stripes, 1);
+    }
+
+    #[test]
+    fn verify_extents_accepts_good_rejects_corrupt() {
+        let e = engine();
+        let m = Metrics::new();
+        let data = vec![0x42u8; 200_000];
+        let digests = e.digests(&data, 65536);
+        let mut extents: Vec<BlockExtent> = (0..4)
+            .map(|i| {
+                let start = i * 65536;
+                let end = (start + 65536).min(data.len());
+                BlockExtent { index: i as u32, data: data[start..end].to_vec(), digest: digests[i] }
+            })
+            .collect();
+        verify_extents(&e, "/f", &extents, 65536, &m).unwrap();
+        // per-block digests match the whole-file digest vector exactly
+        extents[2].data[100] ^= 1;
+        let err = verify_extents(&e, "/f", &extents, 65536, &m).unwrap_err();
+        assert!(matches!(err, FsError::Protocol(_)));
+        assert_eq!(m.counter("transfer.integrity_failures"), 1);
+        // an oversized block is rejected even with a "matching" digest
+        let big = vec![0u8; 65537];
+        let bad = BlockExtent { index: 0, digest: e.digests(&big, 65537)[0], data: big };
+        assert!(verify_extents(&e, "/f", &[bad], 65536, &m).is_err());
     }
 
     #[test]

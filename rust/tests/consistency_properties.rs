@@ -373,7 +373,13 @@ fn prop_cache_recovery_preserves_index() {
             };
             expected.push((p, state, version));
         }
-        let recovered = CacheSpace::recover(c.store().clone(), u64::MAX, vec![], t(9.0));
+        let recovered = CacheSpace::recover(
+            c.store().clone(),
+            u64::MAX,
+            vec![],
+            t(9.0),
+            &xufs::metrics::Metrics::new(),
+        );
         for (p, state, version) in expected {
             let e = recovered.entry(&p).ok_or(format!("lost {p}"))?;
             prop_assert_eq!(e.state, state);

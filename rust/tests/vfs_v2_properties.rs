@@ -136,6 +136,78 @@ fn prop_positional_equals_sequential_xufs() {
     });
 }
 
+/// Block-granular data plane (DESIGN.md §2.4): paged reads must be
+/// byte-identical to the whole-file path. Random positional reads on a
+/// demand-paged client, a full sequential scan afterwards, and a
+/// whole-file-mode (`paging = false`) client must all reproduce the home
+/// content exactly, whatever block/readahead geometry the faults hit.
+#[test]
+fn prop_paged_pread_equals_whole_file_scan() {
+    prop::check(15, |rng, size| {
+        let mut cfg = XufsConfig::default();
+        // shrink the readahead so multi-fault patterns actually happen
+        cfg.cache.readahead_blocks = rng.below(3);
+        let mut world = SimWorld::new(cfg);
+        world.home(|s| {
+            s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        });
+        // content spanning several 64 KiB blocks, with a ragged tail
+        let len = 3 * 64 * 1024 + rng.below((size as u64 + 1) * 4096).min(5 * 64 * 1024) + 17;
+        let mut content = vec![0u8; len as usize];
+        rng.fill_bytes(&mut content);
+        world.home(|s| s.home_mut().write("/home/u/blob", &content, t(0.0)).unwrap());
+
+        // paged client: random preads then a sequential scan
+        let mut paged = world.mount("/home/u").map_err(|e| e.to_string())?;
+        let fd = paged.open("/home/u/blob", OpenFlags::rdonly()).map_err(|e| e.to_string())?;
+        for _ in 0..6 {
+            let off = rng.below(len + 8192);
+            let want = rng.range(1, 3 * 64 * 1024) as usize;
+            let mut buf = vec![0u8; want];
+            let n = paged.pread(fd, &mut buf, off).map_err(|e| e.to_string())?;
+            let expect: &[u8] = if (off as usize) < content.len() {
+                &content[off as usize..(off as usize + want).min(content.len())]
+            } else {
+                &[]
+            };
+            prop_assert_eq!(n, expect.len());
+            prop_assert!(&buf[..n] == expect, "paged pread mismatch at {off}");
+        }
+        let mut scanned = Vec::new();
+        let mut chunk = vec![0u8; 50_000];
+        loop {
+            let n = paged.read(fd, &mut chunk).map_err(|e| e.to_string())?;
+            if n == 0 {
+                break;
+            }
+            scanned.extend_from_slice(&chunk[..n]);
+        }
+        paged.close(fd).map_err(|e| e.to_string())?;
+        prop_assert_eq!(scanned.len(), content.len());
+        prop_assert!(scanned == content, "paged scan does not match home content");
+        prop_assert!(
+            paged.metrics().counter(names::RANGE_FETCHES) > 0,
+            "paged client must have used range fetches"
+        );
+
+        // whole-file-mode client reads the identical bytes
+        let mut whole = world.mount("/home/u").map_err(|e| e.to_string())?;
+        whole.paging = false;
+        let fd = whole.open("/home/u/blob", OpenFlags::rdonly()).map_err(|e| e.to_string())?;
+        let mut scanned = Vec::new();
+        loop {
+            let n = whole.read(fd, &mut chunk).map_err(|e| e.to_string())?;
+            if n == 0 {
+                break;
+            }
+            scanned.extend_from_slice(&chunk[..n]);
+        }
+        whole.close(fd).map_err(|e| e.to_string())?;
+        prop_assert!(scanned == content, "whole-file scan does not match home content");
+        Ok(())
+    });
+}
+
 #[test]
 fn pread_leaves_cursor_for_sequential_read() {
     let mut l = local();
