@@ -818,6 +818,18 @@ impl CacheSpace {
             budget: 0,
         };
         let walked = cache.fs.walk("/").unwrap_or_default();
+        // orphaned write-handle shadows: the client died between pwrite
+        // and close. The unmerged bytes are gone (POSIX: un-closed writes
+        // are not durable); the base entry stays intact. Leaving the
+        // shadows would leak cache-space bytes forever.
+        let orphans: Vec<String> = walked
+            .iter()
+            .filter(|(p, _)| vpath::is_shadow_file(&vpath::basename(p)))
+            .map(|(p, _)| p.clone())
+            .collect();
+        for p in &orphans {
+            let _ = cache.fs.unlink(p, now);
+        }
         for (path, _attr) in walked {
             let name = vpath::basename(&path);
             let Some(entry_name) = name.strip_prefix(".xufs.attr.") else { continue };

@@ -12,6 +12,38 @@ pub use xufs::{WritebackMode, XufsClient};
 use crate::homefs::FsError;
 use crate::proto::{FileImage, MetaOp, NotifyEvent, RangeImage, Request, Response};
 
+/// Typed transport-layer failure for the striped data plane. A stripe
+/// connection that dies mid-transfer is not the same as a server error:
+/// part of the range may already have landed, and the fetch can RESUME
+/// from the first missing block instead of restarting — which is what
+/// both the fault plane's torn transfers and real WAN hiccups need.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum LinkError {
+    /// The peer reset mid-transfer; everything already delivered (other
+    /// stripes, earlier extents) is kept, and the retry resumes at
+    /// `resumed_from_block`.
+    Interrupted { resumed_from_block: u64 },
+    /// Any other transport/server failure.
+    Fs(FsError),
+}
+
+impl From<FsError> for LinkError {
+    fn from(e: FsError) -> Self {
+        LinkError::Fs(e)
+    }
+}
+
+impl From<LinkError> for FsError {
+    fn from(e: LinkError) -> Self {
+        match e {
+            LinkError::Interrupted { resumed_from_block } => {
+                FsError::Interrupted { resumed_from_block }
+            }
+            LinkError::Fs(e) => e,
+        }
+    }
+}
+
 /// Transport to the user's file server. Two implementations:
 /// `coordinator::sim::SimLink` (modeled WAN, virtual clock) and
 /// `coordinator::net::TcpLink` (real sockets, USSH handshake).
@@ -63,4 +95,20 @@ pub trait ServerLink {
 
     /// Stable client identity (used for lock ownership + idempotent replay).
     fn client_id(&self) -> u64;
+}
+
+#[cfg(test)]
+mod link_error_tests {
+    use super::*;
+
+    #[test]
+    fn interrupted_context_survives_the_fs_error_surface() {
+        let e = LinkError::Interrupted { resumed_from_block: 7 };
+        match FsError::from(e) {
+            FsError::Interrupted { resumed_from_block } => assert_eq!(resumed_from_block, 7),
+            other => panic!("{other:?}"),
+        }
+        let back = LinkError::from(FsError::Disconnected);
+        assert_eq!(back, LinkError::Fs(FsError::Disconnected));
+    }
 }

@@ -22,7 +22,7 @@ use crate::client::ServerLink;
 use crate::config::XufsConfig;
 use crate::homefs::{FsError, NodeKind};
 use crate::lease::LeaseManager;
-use crate::metaq::MetaQueue;
+use crate::metaq::{MetaQueue, SPILL_THRESHOLD};
 use crate::metrics::{names, Metrics};
 use crate::proto::{CompoundOp, LockKind, MetaOp, NotifyEvent, Request, Response, WireAttr};
 use crate::runtime::DigestEngine;
@@ -421,6 +421,16 @@ impl<L: ServerLink> XufsClient<L> {
                     Err(e) => Err(e),
                 }
             }
+            Response::Err { code: 2, msg } => {
+                // replay-on-ghost: the op's target was unlinked (at home,
+                // or by a later queued op) while this one sat queued.
+                // Skip JUST this op — the rest of the queue must drain;
+                // erroring here would wedge every later op behind a ghost.
+                self.metrics.incr(names::METAQ_REPLAY_SKIPPED);
+                let _ = msg;
+                self.queue.ack(self.cache.store_mut(), seq, now)?;
+                Ok(Settle::Dropped)
+            }
             Response::Err { code, msg } => {
                 // the home-space op failed semantically (e.g. the user
                 // removed the parent dir at home). Drop the op — the
@@ -485,6 +495,13 @@ impl<L: ServerLink> XufsClient<L> {
                     }
                     self.queue.push_front(seq, op);
                     return Err(FsError::Protocol("stale non-delta op".into()));
+                }
+                Ok(Response::Err { code: 2, .. }) => {
+                    // replay-on-ghost: target unlinked while the op sat
+                    // queued — skip it, keep draining (see the compound
+                    // settle path)
+                    self.metrics.incr(names::METAQ_REPLAY_SKIPPED);
+                    self.queue.ack(self.cache.store_mut(), seq, now)?;
                 }
                 Ok(Response::Err { code, msg }) => {
                     // the home-space op failed semantically (e.g. the user
@@ -676,43 +693,55 @@ impl<L: ServerLink> XufsClient<L> {
             }
             let expected = self.cache.entry(path).map(|e| e.digests.clone()).unwrap_or_default();
             let mut stale = false;
-            for (first_block, count) in missing {
+            'extents: for (first_block, count) in missing {
                 let foff = first_block * bb;
                 let flen = (count * bb).min(size - foff);
-                match self.link.fetch_range(path, foff, flen, version) {
-                    Ok(image) => {
-                        transfer::verify_extents(
-                            &self.engine,
-                            path,
-                            &image.extents,
-                            bb as usize,
-                            &self.metrics,
-                        )?;
-                        if image
-                            .extents
-                            .iter()
-                            .any(|x| expected.get(x.index as usize) != Some(&x.digest))
-                        {
-                            // the digest grid moved: the version changed
-                            // between our FetchMeta and this range
-                            stale = true;
+                // a torn transfer (`Interrupted`) is transient, not
+                // fatal: blocks the link already delivered are installed,
+                // so re-requesting the extent naturally resumes from the
+                // missing remainder
+                let mut resumes = 0u32;
+                loop {
+                    match self.link.fetch_range(path, foff, flen, version) {
+                        Ok(image) => {
+                            transfer::verify_extents(
+                                &self.engine,
+                                path,
+                                &image.extents,
+                                bb as usize,
+                                &self.metrics,
+                            )?;
+                            if image
+                                .extents
+                                .iter()
+                                .any(|x| expected.get(x.index as usize) != Some(&x.digest))
+                            {
+                                // the digest grid moved: the version changed
+                                // between our FetchMeta and this range
+                                stale = true;
+                                break 'extents;
+                            }
+                            let bytes = image.bytes();
+                            // integrity verification is client CPU on the
+                            // transfer path
+                            self.clock.advance_secs(bytes as f64 / self.cfg.disk.digest_cpu_bps);
+                            // the faulted blocks land on the cache-space FS
+                            self.cache_disk.io(self.clock.as_ref(), bytes);
+                            let now = self.clock.now();
+                            self.cache.install_blocks(path, &image.extents, now)?;
+                            self.metrics.add(names::FETCH_BYTES, bytes);
                             break;
                         }
-                        let bytes = image.bytes();
-                        // integrity verification is client CPU on the
-                        // transfer path
-                        self.clock.advance_secs(bytes as f64 / self.cfg.disk.digest_cpu_bps);
-                        // the faulted blocks land on the cache-space FS
-                        self.cache_disk.io(self.clock.as_ref(), bytes);
-                        let now = self.clock.now();
-                        self.cache.install_blocks(path, &image.extents, now)?;
-                        self.metrics.add(names::FETCH_BYTES, bytes);
+                        Err(FsError::Stale(_)) => {
+                            stale = true;
+                            break 'extents;
+                        }
+                        Err(FsError::Interrupted { .. }) if resumes < 2 => {
+                            resumes += 1;
+                            self.metrics.incr(names::RESUMED_FETCHES);
+                        }
+                        Err(e) => return Err(e),
                     }
-                    Err(FsError::Stale(_)) => {
-                        stale = true;
-                        break;
-                    }
-                    Err(e) => return Err(e),
                 }
             }
             // re-stamp the whole faulted window at the current instant so
@@ -763,7 +792,10 @@ impl<L: ServerLink> XufsClient<L> {
         self.ensure_full(path)?;
         let data = self.cache.store().read(path)?.to_vec();
         let digests = self.engine.digests(&data, self.cfg.stripe.min_block as usize);
-        Ok(MetaOp::WriteFull { path: path.to_string(), data, digests })
+        // base_version 0: the faulting refresh above already folded the
+        // current home base under our dirty blocks, so the demoted write
+        // is an informed overwrite, not a blind disconnected one
+        Ok(MetaOp::WriteFull { path: path.to_string(), data, digests, base_version: 0 })
     }
 
     /// Apply the `cache.budget_bytes` LRU block eviction and surface the
@@ -807,13 +839,37 @@ impl<L: ServerLink> XufsClient<L> {
         };
         let dirty_bytes: u64 =
             dirty.iter().map(|&b| Residency::block_len(b as usize, new_size, bb)).sum();
+        let connected = self.link.is_connected();
+        // would the full-write fallback need the WAN? (any base block
+        // neither resident nor overwritten by this close)
+        let missing_base = self
+            .cache
+            .entry(path)
+            .map(|e| {
+                (0..base_blocks as usize).any(|b| {
+                    !e.residency.is_present(b) && dirty.binary_search(&(b as u64)).is_err()
+                })
+            })
+            .unwrap_or(false);
+        // OFFLINE with non-resident base blocks, a delta of the dirtied
+        // blocks is the only shippable form — a full write would have to
+        // fault the base over a dead link, and "no mutating op blocks on
+        // a remote call" (paper §3.1) outranks the stale-base risk (a
+        // stale delta demotes after reconnect, against a fresh base).
+        // CONNECTED closes use deltas as the payload optimization they
+        // are; a disconnected close of a FULLY-resident file aggregates
+        // the full content and carries the base version, so the replay
+        // can detect a conflicting home-side edit (DESIGN.md §2.5).
+        let offline_partial = !connected && missing_base;
         let use_delta = !localized
-            && self.cfg.stripe.delta_writeback
             && base_version > 0
             && !old_digests.is_empty()
-            // a delta must actually save payload to be worth the
-            // stale-base risk
-            && dirty_bytes * 2 < new_size.max(1);
+            && (offline_partial
+                || (self.cfg.stripe.delta_writeback
+                    && connected
+                    // a delta must actually save payload to be worth
+                    // the stale-base risk
+                    && dirty_bytes * 2 < new_size.max(1)));
 
         // the dirtied blocks become the cache copy (undirtied base
         // blocks are already there — or still non-resident, which the
@@ -878,7 +934,27 @@ impl<L: ServerLink> XufsClient<L> {
             let data = self.cache.store().read(path)?.to_vec();
             self.clock.advance_secs(data.len() as f64 / self.cfg.disk.digest_cpu_bps);
             let digests = self.engine.digests(&data, bb as usize);
-            let op = MetaOp::WriteFull { path: path.to_string(), data, digests: digests.clone() };
+            // a DISCONNECTED close records which home version this
+            // content was derived from: if the home copy moves past it
+            // before the replay lands, the server preserves its copy as
+            // a `.xufs-conflict-<client>-<seq>` file instead of silently losing
+            // it. Connected closes keep plain last-close-wins (the
+            // callback channel already told us about concurrent writers).
+            // Only the FIRST write of a disconnected chain carries the
+            // base: a later close for the same path supersedes our own
+            // earlier queued write — same client, totally ordered, not a
+            // conflict (and digest-equal replays never conflict anyway).
+            let chain_pending = self.queue.pending().iter().any(|(_, op)| {
+                matches!(op, MetaOp::WriteFull { .. } | MetaOp::WriteDelta { .. })
+                    && op.path() == path
+            });
+            let conflict_base = if connected || chain_pending { 0 } else { base_version };
+            let op = MetaOp::WriteFull {
+                path: path.to_string(),
+                data,
+                digests: digests.clone(),
+                base_version: conflict_base,
+            };
             (op, digests)
         };
         let now = self.clock.now();
@@ -886,6 +962,56 @@ impl<L: ServerLink> XufsClient<L> {
         self.enqueue(op)?;
         self.enforce_cache_budget();
         Ok(())
+    }
+
+    /// Re-queue a renamed dirty entry's content under its NEW name,
+    /// behind the rename op (see the rename path): the fully-resident
+    /// case ships the whole file; a partially-resident entry (a delta
+    /// close) ships exactly its dirty blocks as a delta. Either way, if
+    /// the base later proves stale the demotion now runs against `t` —
+    /// where the entry and cache copy actually live — so the dirty
+    /// blocks survive (last-close-wins) instead of ghosting.
+    fn requeue_dirty_under_new_name(
+        &mut self,
+        t: &str,
+        e: &crate::cache::CacheEntry,
+    ) -> Result<(), FsError> {
+        let bb = self.cfg.stripe.min_block.max(1);
+        let fully = e.residency.blocks() == 0
+            || e.residency.present_blocks() == e.residency.blocks();
+        if fully {
+            let data = self.cache.store().read(t)?.to_vec();
+            let digests = self.engine.digests(&data, bb as usize);
+            return self.enqueue(MetaOp::WriteFull {
+                path: t.to_string(),
+                data,
+                digests,
+                base_version: 0,
+            });
+        }
+        if e.version == 0 {
+            // never at home and not fully resident: nothing shippable
+            return Ok(());
+        }
+        let size = e.attr.size;
+        let mut blocks: Vec<(u32, Vec<u8>)> = Vec::new();
+        for b in 0..e.residency.blocks() {
+            if e.residency.is_dirty(b) {
+                let bstart = b as u64 * bb;
+                let blen = Residency::block_len(b, size, bb) as usize;
+                blocks.push((b as u32, self.cache.store().read_at(t, bstart, blen)?.to_vec()));
+            }
+        }
+        if blocks.is_empty() {
+            return Ok(());
+        }
+        self.enqueue(MetaOp::WriteDelta {
+            path: t.to_string(),
+            total_size: size,
+            base_version: e.version,
+            blocks,
+            digests: e.digests.clone(),
+        })
     }
 
     /// Is the cached copy usable for an open right now?
@@ -1380,7 +1506,30 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         }
         self.cache_disk.op(self.clock.as_ref());
         match (self.cache.is_localized(&f), self.cache.is_localized(&t)) {
-            (false, false) => self.enqueue(MetaOp::Rename { from: f, to: t })?,
+            (false, false) => {
+                // a queued write targeting the OLD name can lose its
+                // dirty bytes across the rename: a stale delta's
+                // demotion ghosts (nothing lives under `f` any more),
+                // and a spilled by-reference WriteFull record can no
+                // longer be rebuilt from the moved cache copy after a
+                // crash. Inline full writes are self-contained and
+                // replay fine before the rename — no re-queue needed.
+                let needs_requeue = self.queue.pending().iter().any(|(_, op)| match op {
+                    MetaOp::WriteDelta { path, .. } => *path == f,
+                    MetaOp::WriteFull { path, data, .. } => {
+                        *path == f && data.len() >= SPILL_THRESHOLD
+                    }
+                    _ => false,
+                });
+                self.enqueue(MetaOp::Rename { from: f, to: t.clone() })?;
+                if needs_requeue {
+                    if let Some(e) = self.cache.entry(&t).cloned() {
+                        if e.state == EntryState::Dirty {
+                            self.requeue_dirty_under_new_name(&t, &e)?;
+                        }
+                    }
+                }
+            }
             (true, true) => {}
             // crossing the localized boundary: materialize as unlink+write
             (false, true) => self.enqueue(MetaOp::Unlink { path: f })?,
@@ -1388,7 +1537,7 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
                 let data = self.cache.store().read(&t).map(|d| d.to_vec()).unwrap_or_default();
                 let digests = self.engine.digests(&data, self.cfg.stripe.min_block as usize);
                 self.cache.mark_dirty(&t, digests.clone(), now)?;
-                self.enqueue(MetaOp::WriteFull { path: t, data, digests })?;
+                self.enqueue(MetaOp::WriteFull { path: t, data, digests, base_version: 0 })?;
             }
         }
         Ok(())

@@ -121,6 +121,58 @@ impl Default for LeaseConfig {
     }
 }
 
+/// Fault-plane profile (DESIGN.md §2.5): per-interaction probabilities
+/// and schedule bounds for the seeded `simnet::FaultPlan`. Disabled (all
+/// clean) by default — the schedule explorer and chaos configs turn it
+/// on. Probabilities are per WAN interaction.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultConfig {
+    /// Master switch; `false` makes every interaction clean.
+    pub enabled: bool,
+    /// Request lost before the server sees it.
+    pub drop_request_p: f64,
+    /// Server applies the request but the reply is lost (the
+    /// idempotent-replay case).
+    pub drop_reply_p: f64,
+    /// Request delivered twice.
+    pub duplicate_p: f64,
+    /// Extra queueing delay before clean delivery.
+    pub delay_p: f64,
+    /// Upper bound on the injected delay, milliseconds.
+    pub delay_max_ms: u32,
+    /// Bulk transfer torn mid-flight (resume or `Interrupted`).
+    pub interrupt_p: f64,
+    /// A partition starts at this interaction.
+    pub partition_p: f64,
+    /// Partition length bound, in interactions.
+    pub partition_max_steps: u32,
+    /// Server process crashes at this interaction.
+    pub server_crash_p: f64,
+    /// Crashed server restarts within this many interactions.
+    pub server_crash_max_steps: u32,
+    /// The harness is asked to crash+recover a client.
+    pub client_crash_p: f64,
+}
+
+impl Default for FaultConfig {
+    fn default() -> Self {
+        FaultConfig {
+            enabled: false,
+            drop_request_p: 0.0,
+            drop_reply_p: 0.0,
+            duplicate_p: 0.0,
+            delay_p: 0.0,
+            delay_max_ms: 100,
+            interrupt_p: 0.0,
+            partition_p: 0.0,
+            partition_max_steps: 16,
+            server_crash_p: 0.0,
+            server_crash_max_steps: 24,
+            client_crash_p: 0.0,
+        }
+    }
+}
+
 /// Disk / parallel-FS models for each side (DESIGN.md §5).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DiskConfig {
@@ -158,6 +210,7 @@ pub struct XufsConfig {
     pub cache: CacheConfig,
     pub lease: LeaseConfig,
     pub disk: DiskConfig,
+    pub fault: FaultConfig,
     /// Directory holding AOT HLO artifacts (empty => native digest engine).
     pub artifacts_dir: String,
     /// Deterministic seed for workloads / jitter.
@@ -199,6 +252,20 @@ impl XufsConfig {
                 "disk.home_mibps" => cfg.disk.home_bps = value.as_f64()? * 1024.0 * 1024.0,
                 "disk.home_op_ms" => cfg.disk.home_op_s = value.as_f64()? / 1e3,
                 "disk.digest_cpu_mibps" => cfg.disk.digest_cpu_bps = value.as_f64()? * 1024.0 * 1024.0,
+                "fault.enabled" => cfg.fault.enabled = value.as_bool()?,
+                "fault.drop_request_p" => cfg.fault.drop_request_p = value.as_f64()?,
+                "fault.drop_reply_p" => cfg.fault.drop_reply_p = value.as_f64()?,
+                "fault.duplicate_p" => cfg.fault.duplicate_p = value.as_f64()?,
+                "fault.delay_p" => cfg.fault.delay_p = value.as_f64()?,
+                "fault.delay_max_ms" => cfg.fault.delay_max_ms = value.as_u64()? as u32,
+                "fault.interrupt_p" => cfg.fault.interrupt_p = value.as_f64()?,
+                "fault.partition_p" => cfg.fault.partition_p = value.as_f64()?,
+                "fault.partition_max_steps" => cfg.fault.partition_max_steps = value.as_u64()? as u32,
+                "fault.server_crash_p" => cfg.fault.server_crash_p = value.as_f64()?,
+                "fault.server_crash_max_steps" => {
+                    cfg.fault.server_crash_max_steps = value.as_u64()? as u32
+                }
+                "fault.client_crash_p" => cfg.fault.client_crash_p = value.as_f64()?,
                 "artifacts_dir" => cfg.artifacts_dir = value.as_str()?.to_string(),
                 "seed" => cfg.seed = value.as_u64()?,
                 other => {
@@ -265,6 +332,18 @@ localized_dirs = "/scratch/out:/scratch/tmp"
         let c = XufsConfig::from_toml(text).unwrap();
         assert_eq!(c.cache.budget_bytes, 1 << 20);
         assert_eq!(c.cache.readahead_blocks, 8);
+    }
+
+    #[test]
+    fn parse_fault_keys() {
+        let text = "[fault]\nenabled = true\ndrop_reply_p = 0.1\npartition_max_steps = 9\n";
+        let c = XufsConfig::from_toml(text).unwrap();
+        assert!(c.fault.enabled);
+        assert!((c.fault.drop_reply_p - 0.1).abs() < 1e-12);
+        assert_eq!(c.fault.partition_max_steps, 9);
+        // untouched fault knobs keep their (inert) defaults
+        assert_eq!(c.fault.drop_request_p, 0.0);
+        assert!(!XufsConfig::default().fault.enabled, "faults must be opt-in");
     }
 
     #[test]

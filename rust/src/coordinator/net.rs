@@ -14,7 +14,7 @@ use std::time::Duration;
 
 use crate::auth::{self, Authenticator, KeyPair};
 use crate::callback::NotifyChannel;
-use crate::client::ServerLink;
+use crate::client::{LinkError, ServerLink};
 use crate::config::XufsConfig;
 use crate::homefs::FsError;
 use crate::metrics::{names, Metrics};
@@ -371,6 +371,15 @@ fn response_to_fs_err(r: Response) -> FsError {
 
 /// Fetch the blocks covering one range over a dedicated authenticated
 /// connection (one stripe's share of a paged fetch).
+///
+/// A peer reset AFTER the connection was established is a mid-transfer
+/// interruption, not a generic failure: it comes back as the typed
+/// [`LinkError::Interrupted`] carrying this share's first block — the
+/// point the striped fetch resumes from (a share delivers in one frame,
+/// so none of ITS blocks landed; everything the other stripes delivered
+/// is kept). That retry context is what lets the caller resume instead
+/// of failing the whole striped fetch — for the fault plane's torn
+/// transfers and real WAN hiccups alike.
 fn fetch_blocks_conn(
     addr: std::net::SocketAddr,
     pair: &KeyPair,
@@ -378,15 +387,23 @@ fn fetch_blocks_conn(
     offset: u64,
     len: u64,
     expect_version: u64,
-) -> Result<Vec<BlockExtent>, FsError> {
-    let mut conn = dial(addr, pair)?;
+    block_bytes: u64,
+) -> Result<Vec<BlockExtent>, LinkError> {
+    let resume_block = offset / block_bytes.max(1);
+    // connection setup failing is an ordinary disconnect — nothing was
+    // in flight yet
+    let mut conn = dial(addr, pair).map_err(LinkError::Fs)?;
     let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
-    write_frame(&mut conn, &req.encode()).map_err(io_err)?;
-    let resp = Response::decode(&read_frame(&mut conn).map_err(io_err)?)
-        .map_err(|e| FsError::Protocol(e.to_string()))?;
+    if write_frame(&mut conn, &req.encode()).is_err() {
+        return Err(LinkError::Interrupted { resumed_from_block: resume_block });
+    }
+    let frame = read_frame(&mut conn)
+        .map_err(|_| LinkError::Interrupted { resumed_from_block: resume_block })?;
+    let resp =
+        Response::decode(&frame).map_err(|e| LinkError::Fs(FsError::Protocol(e.to_string())))?;
     match resp {
         Response::FileBlocks { extents, .. } => Ok(extents),
-        r => Err(response_to_fs_err(r)),
+        r => Err(LinkError::Fs(response_to_fs_err(r))),
     }
 }
 
@@ -443,29 +460,61 @@ impl ServerLink for TcpLink {
         if plan.len == 0 {
             return Ok(RangeImage { version: expect_version, extents: Vec::new() });
         }
-        if plan.stripes <= 1 {
-            let extents =
-                fetch_blocks_conn(self.addr, &self.pair, path, plan.offset, plan.len, expect_version)?;
-            let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();
-            self.metrics.add(names::WAN_BYTES_RX, bytes);
-            return Ok(RangeImage { version: expect_version, extents });
-        }
+        let shares = if plan.stripes <= 1 {
+            vec![(plan.offset, plan.len)]
+        } else {
+            stripe_shares(plan.offset, plan.len, plan.stripes, bb)
+        };
         // genuinely parallel range fetches, one authenticated connection
         // per stripe (paper §3.3)
-        let mut handles = Vec::new();
-        for (soff, slen) in stripe_shares(plan.offset, plan.len, plan.stripes, bb) {
-            let addr = self.addr;
-            let pair = self.pair.clone();
-            let path = path.to_string();
-            handles.push(std::thread::spawn(move || {
-                fetch_blocks_conn(addr, &pair, &path, soff, slen, expect_version)
-            }));
+        let mut results: Vec<Result<Vec<BlockExtent>, LinkError>> =
+            Vec::with_capacity(shares.len());
+        if shares.len() == 1 {
+            let (soff, slen) = shares[0];
+            results.push(fetch_blocks_conn(
+                self.addr, &self.pair, path, soff, slen, expect_version, bb,
+            ));
+        } else {
+            let mut handles = Vec::new();
+            for &(soff, slen) in &shares {
+                let addr = self.addr;
+                let pair = self.pair.clone();
+                let path = path.to_string();
+                handles.push(std::thread::spawn(move || {
+                    fetch_blocks_conn(addr, &pair, &path, soff, slen, expect_version, bb)
+                }));
+            }
+            for h in handles {
+                results.push(
+                    h.join()
+                        .map_err(|_| FsError::Protocol("stripe thread panicked".into()))?,
+                );
+            }
         }
         let mut extents: Vec<BlockExtent> = Vec::new();
-        for h in handles {
-            let chunk =
-                h.join().map_err(|_| FsError::Protocol("stripe thread panicked".into()))??;
-            extents.extend(chunk);
+        for (i, r) in results.into_iter().enumerate() {
+            match r {
+                Ok(chunk) => extents.extend(chunk),
+                Err(LinkError::Interrupted { resumed_from_block }) => {
+                    // a stripe died mid-transfer: the other stripes'
+                    // blocks are already in hand, so the fetch resumes at
+                    // this share — which delivers in ONE frame, so its
+                    // resume point is its own first block. Retry it once
+                    // over a fresh authenticated connection.
+                    let (soff, slen) = shares[i];
+                    debug_assert_eq!(resumed_from_block, soff / bb);
+                    self.metrics.incr(names::RESUMED_FETCHES);
+                    match fetch_blocks_conn(
+                        self.addr, &self.pair, path, soff, slen, expect_version, bb,
+                    ) {
+                        Ok(chunk) => extents.extend(chunk),
+                        // a second tear on the same share surfaces the
+                        // typed interruption to the caller
+                        Err(e) => return Err(FsError::from(e)),
+                    }
+                }
+                Err(e) => return Err(FsError::from(e)),
+            }
         }
         extents.sort_by_key(|x| x.index);
         let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();

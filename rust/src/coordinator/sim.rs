@@ -1,5 +1,12 @@
 //! Simulated deployment: client <-> server over the analytic WAN model,
 //! against a shared virtual clock.
+//!
+//! Every WAN interaction — RPCs, compound flushes, striped range
+//! fetches, prefetch waves, callback delivery, even connection setup —
+//! first consults the deployment's optional seeded
+//! [`FaultPlan`](crate::simnet::FaultPlan) (DESIGN.md §2.5), so a
+//! schedule can drop, duplicate, delay, tear, or partition any of them,
+//! and crash/restart the server process, deterministically from a seed.
 
 use std::sync::{Arc, Mutex};
 
@@ -12,7 +19,7 @@ use crate::metrics::{names, Metrics};
 use crate::proto::{CompoundOp, FileImage, MetaOp, NotifyEvent, RangeImage, Request, Response};
 use crate::runtime::DigestEngine;
 use crate::server::FileServer;
-use crate::simnet::{Clock, SimClock, TransferKind, Wan};
+use crate::simnet::{Clock, FaultAction, FaultPlan, SimClock, StepOutcome, TransferKind, Wan};
 use crate::transfer;
 use crate::vdisk::DiskModel;
 
@@ -28,6 +35,8 @@ pub struct SimWorld {
     pub metrics: Metrics,
     pair: KeyPair,
     next_client: u64,
+    /// Optional seeded fault plane shared by every link of this world.
+    faults: Option<Arc<Mutex<FaultPlan>>>,
 }
 
 impl SimWorld {
@@ -62,7 +71,19 @@ impl SimWorld {
             metrics,
             pair,
             next_client: 1,
+            faults: None,
         }
+    }
+
+    /// Install a seeded fault plane. Links mounted afterwards consult it
+    /// on every WAN interaction; already-mounted links can be attached
+    /// via [`SimLink::set_faults`].
+    pub fn set_fault_plan(&mut self, plan: Arc<Mutex<FaultPlan>>) {
+        self.faults = Some(plan);
+    }
+
+    pub fn fault_plan(&self) -> Option<Arc<Mutex<FaultPlan>>> {
+        self.faults.clone()
     }
 
     /// Direct access to the home space (pre-populating workloads, and the
@@ -90,6 +111,7 @@ impl SimWorld {
             session: None,
             root: root.to_string(),
             data_conns_warm: false,
+            faults: self.faults.clone(),
         };
         link.connect()?;
         Ok(XufsClient::new(
@@ -98,6 +120,50 @@ impl SimWorld {
             self.engine.clone(),
             Arc::new(self.clock.clone()),
             root,
+            self.metrics.clone(),
+        ))
+    }
+
+    /// Rebuild a crashed client from its surviving cache space (the
+    /// `xufs sync` recovery tool): fresh USSH login **under the same
+    /// client identity** (sequence numbers are per client, so replaying
+    /// ops whose replies were lost must hit the server's idempotence
+    /// watermark, not a fresh one), recover the cache index and the
+    /// durable op log, replay what the crash left behind. Returns the
+    /// client plus the count of corrupt/skipped log records.
+    pub fn mount_recovered(
+        &mut self,
+        root: &str,
+        store: &FileStore,
+        client_id: u64,
+    ) -> Result<(XufsClient<SimLink>, usize), FsError> {
+        let mut link = SimLink {
+            server: self.server.clone(),
+            auth: self.auth.clone(),
+            wan: self.wan.clone(),
+            clock: self.clock.clone(),
+            channel: NotifyChannel::new(),
+            cfg: self.cfg.clone(),
+            metrics: self.metrics.clone(),
+            pair: self.pair.clone(),
+            client_id,
+            net_up: true,
+            session: None,
+            root: root.to_string(),
+            data_conns_warm: false,
+            faults: self.faults.clone(),
+        };
+        link.connect()?;
+        // the store is cloned only once the login succeeded — retrying
+        // callers (a partition blocks the connect) pay nothing per
+        // refused attempt
+        Ok(XufsClient::recover(
+            link,
+            self.cfg.clone(),
+            self.engine.clone(),
+            Arc::new(self.clock.clone()),
+            root,
+            store.clone(),
             self.metrics.clone(),
         ))
     }
@@ -139,12 +205,59 @@ pub struct SimLink {
     /// (the paper's persistent transfer connections): only the first
     /// fetch of a session pays connection setup + slow-start.
     data_conns_warm: bool,
+    /// Optional shared fault plane consulted before every interaction.
+    faults: Option<Arc<Mutex<FaultPlan>>>,
 }
 
 impl SimLink {
+    /// Attach (or replace) the fault plane on an already-mounted link.
+    pub fn set_faults(&mut self, plan: Arc<Mutex<FaultPlan>>) {
+        self.faults = Some(plan);
+    }
+
+    /// Advance the fault plane one interaction and apply its control
+    /// side-effects (server crash/restart, partition severing the
+    /// session). Returns the outcome for the caller to act on.
+    fn fault_step(&mut self) -> StepOutcome {
+        let Some(plan) = &self.faults else { return StepOutcome::default() };
+        let out = plan.lock().unwrap().step();
+        if out.server_restart {
+            self.server.lock().unwrap().restart();
+        }
+        if out.server_crash {
+            self.server.lock().unwrap().crash();
+        }
+        if out.partitioned {
+            self.metrics.incr(names::FAULT_PARTITIONED_OPS);
+            self.sever();
+        } else if out.action.is_some() {
+            self.metrics.incr(names::FAULTS_INJECTED);
+        }
+        if let Some(FaultAction::Delay { ms }) = out.action {
+            // queueing delay before the interaction proceeds
+            self.clock.advance_secs(ms as f64 / 1e3);
+        }
+        out
+    }
+
+    /// The connection state dies (partition): in-flight callbacks are
+    /// lost with it and the session must be re-established.
+    fn sever(&mut self) {
+        self.channel.disconnect();
+        self.session = None;
+        self.data_conns_warm = false;
+    }
+
     /// Establish control + callback channels: TCP setup, USSH
-    /// challenge-response, callback registration.
+    /// challenge-response, callback registration. Connection setup is a
+    /// WAN interaction like any other: a partitioned or dropped step
+    /// fails the attempt (and advances the schedule, so retrying makes
+    /// progress toward the partition's end).
     fn connect(&mut self) -> Result<(), FsError> {
+        let out = self.fault_step();
+        if out.partitioned || matches!(out.action, Some(FaultAction::DropRequest)) {
+            return Err(FsError::Disconnected);
+        }
         if !self.net_up || !self.server.lock().unwrap().is_up() {
             return Err(FsError::Disconnected);
         }
@@ -210,12 +323,62 @@ impl SimLink {
 
 impl ServerLink for SimLink {
     fn rpc(&mut self, req: Request) -> Result<Response, FsError> {
+        let out = self.fault_step();
+        if out.partitioned {
+            return Err(FsError::Disconnected);
+        }
         self.check_up()?;
         if let Request::Compound { ops } = &req {
             self.metrics.incr(names::COMPOUND_RPCS);
             self.metrics.add(names::COMPOUND_OPS, ops.len() as u64);
         }
         let req_bytes = req.wire_bytes();
+        match out.action {
+            Some(FaultAction::DropRequest) => {
+                // lost before the server saw it; the client pays the
+                // timeout round trip
+                self.wan.rpc(&self.clock, req_bytes, 0);
+                return Err(FsError::Disconnected);
+            }
+            Some(FaultAction::DropReply) => {
+                // the server APPLIES the request; only the reply is lost.
+                // The client must treat this exactly like a drop — which
+                // is why replay has to be idempotent.
+                let mut s = self.server.lock().unwrap();
+                s.disk.op(&self.clock);
+                let _ = s.handle(self.client_id, req, self.clock.now());
+                drop(s);
+                self.wan.rpc(&self.clock, req_bytes, 0);
+                return Err(FsError::Disconnected);
+            }
+            Some(FaultAction::Duplicate) => {
+                // the request reaches the server twice; the client sees
+                // the second reply (both must be identical under
+                // idempotent handling). Lock RPCs are exempt: they ride
+                // the control connection and are never retransmitted, so
+                // network-level duplication cannot reach them — and a
+                // doubled LockAcquire would mint a second record whose
+                // orphaned token wrongly blocks other clients.
+                let duplicable = !matches!(
+                    req,
+                    Request::LockAcquire { .. }
+                        | Request::LockRenew { .. }
+                        | Request::LockRelease { .. }
+                );
+                let mut s = self.server.lock().unwrap();
+                s.disk.op(&self.clock);
+                if duplicable {
+                    let _ = s.handle(self.client_id, req.clone(), self.clock.now());
+                }
+                let resp = s.handle(self.client_id, req, self.clock.now());
+                drop(s);
+                self.wan.rpc(&self.clock, req_bytes, resp.wire_bytes());
+                self.metrics.add(names::WAN_RPCS, 1);
+                return Ok(resp);
+            }
+            // a torn bulk transfer does not apply to small control RPCs
+            Some(FaultAction::Interrupt) | Some(FaultAction::Delay { .. }) | None => {}
+        }
         let resp = {
             let mut s = self.server.lock().unwrap();
             // server-side disk op for metadata service
@@ -234,7 +397,17 @@ impl ServerLink for SimLink {
         len: u64,
         expect_version: u64,
     ) -> Result<RangeImage, FsError> {
+        let out = self.fault_step();
+        if out.partitioned {
+            return Err(FsError::Disconnected);
+        }
         self.check_up()?;
+        if matches!(out.action, Some(FaultAction::DropRequest) | Some(FaultAction::DropReply)) {
+            // a torn connection before any block crossed; a fetch has no
+            // server-side state so request- and reply-loss look alike
+            self.wan.rpc(&self.clock, 128, 0);
+            return Err(FsError::Disconnected);
+        }
         let resp = {
             let mut s = self.server.lock().unwrap();
             let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
@@ -257,7 +430,35 @@ impl ServerLink for SimLink {
                     TransferKind::NewConnections
                 };
                 self.data_conns_warm = true;
-                self.wan.transfer(&self.clock, payload, stripes, kind);
+                if matches!(out.action, Some(FaultAction::Interrupt)) && !image.extents.is_empty() {
+                    // the stripe set dies mid-transfer after roughly half
+                    // the blocks landed (an empty reply has nothing to
+                    // tear and delivers normally)
+                    let torn_at = image.extents.len() / 2;
+                    if torn_at == 0 {
+                        // nothing landed before the tear: surface the
+                        // typed interruption with the resume block
+                        let first = image.extents[0].index as u64;
+                        self.wan.rpc(&self.clock, 128, 0);
+                        return Err(FsError::Interrupted { resumed_from_block: first });
+                    }
+                    // the landed prefix crossed the WAN once; the link
+                    // resumes the remainder over fresh connections (the
+                    // resumable-fetch path real WAN hiccups also take)
+                    let torn_bytes: u64 =
+                        image.extents[..torn_at].iter().map(|x| x.data.len() as u64).sum();
+                    self.wan.transfer(&self.clock, torn_bytes.max(1), stripes, kind);
+                    let rest = payload - torn_bytes.min(payload);
+                    self.wan.transfer(
+                        &self.clock,
+                        rest.max(1),
+                        stripes,
+                        TransferKind::NewConnections,
+                    );
+                    self.metrics.incr(names::RESUMED_FETCHES);
+                } else {
+                    self.wan.transfer(&self.clock, payload, stripes, kind);
+                }
                 self.metrics.add(names::WAN_BYTES_RX, image.bytes());
                 self.metrics.incr(names::RANGE_FETCHES);
                 Ok(image)
@@ -271,6 +472,22 @@ impl ServerLink for SimLink {
     }
 
     fn prefetch(&mut self, files: &[(String, u64)]) -> Vec<FileImage> {
+        if !files.is_empty() {
+            let out = self.fault_step();
+            // prefetch is best-effort: loss-class faults yield nothing
+            // (no retry); a Delay (already charged by fault_step) or a
+            // Duplicate still delivers
+            if out.partitioned
+                || matches!(
+                    out.action,
+                    Some(FaultAction::DropRequest)
+                        | Some(FaultAction::DropReply)
+                        | Some(FaultAction::Interrupt)
+                )
+            {
+                return Vec::new();
+            }
+        }
         if self.check_up().is_err() {
             return Vec::new();
         }
@@ -297,8 +514,17 @@ impl ServerLink for SimLink {
     }
 
     fn ship(&mut self, seq: u64, op: &MetaOp) -> Result<Response, FsError> {
+        let out = self.fault_step();
+        if out.partitioned {
+            return Err(FsError::Disconnected);
+        }
         self.check_up()?;
         let bytes = op.wire_bytes();
+        if matches!(out.action, Some(FaultAction::DropRequest) | Some(FaultAction::Interrupt)) {
+            // the payload never arrives whole; nothing applied
+            self.wan.rpc(&self.clock, bytes.min(1024), 0);
+            return Err(FsError::Disconnected);
+        }
         if bytes <= self.cfg.stripe.stripe_threshold {
             // small meta-ops drain over the persistent control connection
             // (1 RTT) — the queue's normal path
@@ -313,8 +539,19 @@ impl ServerLink for SimLink {
             let mut s = self.server.lock().unwrap();
             // server writes the payload to its disk
             s.disk.io(&self.clock, bytes);
+            if matches!(out.action, Some(FaultAction::Duplicate)) {
+                let _ = s.handle(
+                    self.client_id,
+                    Request::Apply { seq, op: op.clone() },
+                    self.clock.now(),
+                );
+            }
             s.handle(self.client_id, Request::Apply { seq, op: op.clone() }, self.clock.now())
         };
+        if matches!(out.action, Some(FaultAction::DropReply)) {
+            // applied at the server; the ack never comes back
+            return Err(FsError::Disconnected);
+        }
         if matches!(resp, Response::Err { code: 111, .. }) {
             return Err(FsError::Disconnected);
         }
@@ -322,8 +559,17 @@ impl ServerLink for SimLink {
     }
 
     fn ship_compound(&mut self, ops: &[(u64, MetaOp)]) -> Result<Vec<Response>, FsError> {
+        let out = self.fault_step();
+        if out.partitioned {
+            return Err(FsError::Disconnected);
+        }
         self.check_up()?;
         let payload: u64 = ops.iter().map(|(_, op)| op.wire_bytes()).sum::<u64>() + 16;
+        if matches!(out.action, Some(FaultAction::DropRequest) | Some(FaultAction::Interrupt)) {
+            // the frame never arrives whole; NOTHING in the batch applied
+            self.wan.rpc(&self.clock, payload.min(1024), 0);
+            return Err(FsError::Disconnected);
+        }
         if payload <= self.cfg.stripe.stripe_threshold {
             // the whole batch drains over the persistent control
             // connection in ONE round trip — the compound win
@@ -347,8 +593,17 @@ impl ServerLink for SimLink {
                     .map(|(seq, op)| CompoundOp::Apply { seq: *seq, op: op.clone() })
                     .collect(),
             };
+            if matches!(out.action, Some(FaultAction::Duplicate)) {
+                let _ = s.handle(self.client_id, req.clone(), self.clock.now());
+            }
             s.handle(self.client_id, req, self.clock.now())
         };
+        if matches!(out.action, Some(FaultAction::DropReply)) {
+            // the WHOLE batch applied; the reply frame is lost. The
+            // client restores the batch and replays it — per-op seqs
+            // make that safe.
+            return Err(FsError::Disconnected);
+        }
         match resp {
             Response::CompoundReply { replies } => Ok(replies),
             Response::Err { code: 111, .. } => Err(FsError::Disconnected),
@@ -357,7 +612,37 @@ impl ServerLink for SimLink {
     }
 
     fn drain_notifications(&mut self) -> Vec<NotifyEvent> {
-        self.channel.drain()
+        let events = self.channel.drain();
+        if events.is_empty() || self.faults.is_none() {
+            return events;
+        }
+        // callback delivery is a WAN interaction too: pushes can be
+        // lost, duplicated, or die with a partition
+        let out = self.fault_step();
+        if out.partitioned {
+            // in-flight events are lost with the channel (the reconnect
+            // revalidation covers them)
+            return Vec::new();
+        }
+        match out.action {
+            Some(FaultAction::DropRequest) | Some(FaultAction::DropReply) => {
+                // a push cannot vanish from a healthy TCP channel: losing
+                // it means the connection reset. Severing here is what
+                // keeps the AFS-2 guarantee sound — the client sees a
+                // generation bump on reconnect and revalidates everything
+                // the lost callbacks covered.
+                self.sever();
+                Vec::new()
+            }
+            Some(FaultAction::Duplicate) => {
+                // the push frame is delivered twice; invalidation
+                // handling must be idempotent
+                let mut twice = events.clone();
+                twice.extend(events);
+                twice
+            }
+            _ => events,
+        }
     }
 
     fn channel_generation(&self) -> u64 {
@@ -588,38 +873,14 @@ mod tests {
         assert!(!w.home(|s| s.home().exists("/home/u/proj/wip.txt")));
         // crash the client; cache space (parallel FS) survives
         let surviving_store = c.cache_store_snapshot();
+        let client_id = c.link().client_id();
         drop(c);
 
-        let mut w2_link_world = w; // same world/server
-        let cfg = w2_link_world.cfg.clone();
-        let engine = w2_link_world.engine.clone();
-        let clock = Arc::new(w2_link_world.clock.clone());
-        let metrics = w2_link_world.metrics.clone();
-        let link = {
-            // a fresh USSH login
-            let mut l = SimLink {
-                server: w2_link_world.server.clone(),
-                auth: w2_link_world.auth.clone(),
-                wan: w2_link_world.wan.clone(),
-                clock: w2_link_world.clock.clone(),
-                channel: NotifyChannel::new(),
-                cfg: cfg.clone(),
-                metrics: metrics.clone(),
-                pair: w2_link_world.pair.clone(),
-                client_id: 99,
-                net_up: true,
-                session: None,
-                root: "/home/u".into(),
-                data_conns_warm: false,
-            };
-            l.connect().unwrap();
-            l
-        };
-        let (c2, corrupt) =
-            XufsClient::recover(link, cfg, engine, clock, "/home/u", surviving_store, metrics);
+        let mut w2 = w; // same world/server
+        let (c2, corrupt) = w2.mount_recovered("/home/u", &surviving_store, client_id).unwrap();
         assert_eq!(corrupt, 0);
         assert_eq!(c2.queue_len(), 0, "recovery replays the persisted queue");
-        let home = w2_link_world.home(|s| s.home().read("/home/u/proj/wip.txt").unwrap().to_vec());
+        let home = w2.home(|s| s.home().read("/home/u/proj/wip.txt").unwrap().to_vec());
         assert_eq!(home, b"work in progress");
     }
 }

@@ -33,6 +33,11 @@ pub enum FsError {
     Stale(String),
     LockConflict(String),
     Protocol(String),
+    /// A bulk transfer died mid-flight after part of it landed; a retry
+    /// can resume from `resumed_from_block` instead of restarting (the
+    /// typed context `client::LinkError::Interrupted` carries across the
+    /// `FsError` surface).
+    Interrupted { resumed_from_block: u64 },
 }
 
 impl fmt::Display for FsError {
@@ -51,6 +56,9 @@ impl fmt::Display for FsError {
             FsError::Stale(m) => write!(f, "stale cache entry: {m}"),
             FsError::LockConflict(m) => write!(f, "lock held by another client: {m}"),
             FsError::Protocol(m) => write!(f, "protocol error: {m}"),
+            FsError::Interrupted { resumed_from_block } => {
+                write!(f, "transfer interrupted (resumable from block {resumed_from_block})")
+            }
         }
     }
 }

@@ -1,40 +1,78 @@
-//! Persisted meta-operation queue (paper §3.1).
+//! Durable write-behind op log (paper §3.1, hardened in DESIGN.md §2.5).
 //!
 //! "System calls that modify a file (or directory) in a XUFS partition
 //! return when the local cache copy is updated, and the operation is
 //! appended to a persisted meta-operation queue. No file (or directory)
 //! operation blocks on a remote network call."
 //!
-//! Ops are persisted into the cache space's file store under
-//! `/.xufs/queue/<seq>` (binary-encoded), so they survive a client crash;
-//! the `xufs sync` command-line tool replays them after recovery
-//! ([`MetaQueue::recover`] + the client's flush path). Sequence numbers
-//! are monotonic per client and make server-side application idempotent.
+//! The queue is persisted as a single **append-only log** in the cache
+//! space (`/.xufs/oplog`). Every mutation appends one HMAC-SHA256-framed
+//! record (reusing [`crate::util::hmacsha`]) and is written through to
+//! the cache-space FS before the call returns — the model of an
+//! `O_APPEND` write followed by `fdatasync`. Three record kinds exist:
+//!
+//! ```text
+//! record := kind:u8 | seq:u64le | len:u32le | payload | hmac:[u8;32]
+//! kind   := 0 op-append   payload = encoded MetaOp (inline or by-ref)
+//!           1 ack         payload = empty (server acknowledged seq)
+//!           2 watermark   payload = empty (seq floor after compaction)
+//! hmac   := HMAC-SHA256("xufs-oplog-v1", kind || seq || payload)
+//! ```
+//!
+//! Crash-recovery scans the log front to back, verifying each frame's
+//! HMAC; the first bad frame truncates the trusted prefix (a torn tail is
+//! the expected artifact of dying mid-append — everything after it is
+//! unordered garbage). Pending ops = appends minus acks, replayed in seq
+//! order; per-client sequence numbers make server-side application
+//! idempotent, so replaying after a lost reply is safe. Acked records are
+//! garbage-collected by compaction, which rewrites the log as a watermark
+//! record (so recovered sequence numbers never regress and collide with
+//! the server's idempotence watermark) plus the still-unacked ops.
+//!
+//! Large `WriteFull` payloads are persisted BY REFERENCE: the aggregated
+//! content already lives in the cache store at the op's path (the close
+//! wrote it there before enqueueing), so the record only carries
+//! path+digests and recovery rebuilds the write from the surviving cache
+//! copy. Recovery after further local closes still yields the correct
+//! final home state — last-close-wins means the *latest* cache content
+//! is what must land.
+
+use std::collections::BTreeMap;
 
 use crate::homefs::{FileStore, FsResult};
 use crate::proto::{Decoder, Encoder, MetaOp};
 use crate::simnet::VirtualTime;
+use crate::util::hmacsha;
 
-/// Directory inside the cache space holding the persisted queue.
-pub const QUEUE_DIR: &str = "/.xufs/queue";
+/// The append-only op log inside the cache space.
+pub const OPLOG_PATH: &str = "/.xufs/oplog";
 
-/// WriteFull payloads at or above this size are persisted BY REFERENCE:
-/// the aggregated content already lives in the cache store at the op's
-/// path (the close wrote it there before enqueueing), so the queue entry
-/// only records path+digests and recovery rebuilds the full write from
-/// the surviving cache copy. Avoids doubling cache-space usage and a full
-/// payload memcpy per close (EXPERIMENTS.md §Perf L3 #3). Recovery after
-/// further local closes still yields the correct final home state —
-/// last-close-wins means the *latest* cache content is what must land.
+/// Directory holding the log (kept for tooling that lists `/.xufs`).
+pub const OPLOG_DIR: &str = "/.xufs";
+
+/// WriteFull payloads at or above this size are persisted by reference
+/// (see module docs).
 pub const SPILL_THRESHOLD: usize = 256 * 1024;
+
+/// Acks between compactions. Compaction also fires whenever the last
+/// unacked record is retired (the log collapses to one watermark record).
+pub const COMPACT_EVERY_ACKS: usize = 64;
+
+const LOG_HMAC_KEY: &[u8] = b"xufs-oplog-v1";
+const REC_OP: u8 = 0;
+const REC_ACK: u8 = 1;
+const REC_MARK: u8 = 2;
+const REC_HDR: usize = 1 + 8 + 4;
+const REC_MAC: usize = 32;
 
 fn persist_bytes(op: &MetaOp) -> Vec<u8> {
     let mut e = Encoder::new();
     match op {
-        MetaOp::WriteFull { path, data, digests } if data.len() >= SPILL_THRESHOLD => {
+        MetaOp::WriteFull { path, data, digests, base_version } if data.len() >= SPILL_THRESHOLD => {
             e.u8(1); // by-reference entry
             e.str(path);
             e.i32_slice(digests);
+            e.u64(*base_version);
         }
         _ => {
             e.u8(0); // inline entry
@@ -55,38 +93,109 @@ fn recover_entry(store: &FileStore, bytes: &[u8]) -> Option<MetaOp> {
         1 => {
             let path = d.str().ok()?;
             let digests = d.i32_vec().ok()?;
+            let base_version = d.u64().ok()?;
             d.expect_end().ok()?;
             let data = store.read(&path).ok()?.to_vec();
-            Some(MetaOp::WriteFull { path, data, digests })
+            Some(MetaOp::WriteFull { path, data, digests, base_version })
         }
         _ => None,
     }
 }
 
-/// The persisted queue. Holds an in-memory view; every mutation is written
-/// through to the backing store immediately.
+fn frame_record(kind: u8, seq: u64, payload: &[u8]) -> Vec<u8> {
+    let mut rec = Vec::with_capacity(REC_HDR + payload.len() + REC_MAC);
+    rec.push(kind);
+    rec.extend_from_slice(&seq.to_le_bytes());
+    rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    rec.extend_from_slice(payload);
+    let mac = hmacsha::hmac_sha256(LOG_HMAC_KEY, &[&[kind], &seq.to_le_bytes(), payload]);
+    rec.extend_from_slice(&mac);
+    rec
+}
+
+/// The durable queue. Holds an in-memory view; every mutation appends to
+/// the backing log before returning.
 #[derive(Debug)]
 pub struct MetaQueue {
     pending: Vec<(u64, MetaOp)>,
+    /// Encoded payload of every persisted-but-unacked op record, by seq.
+    /// This is the compaction source — it still covers ops that were
+    /// `take_*`n for shipping and not yet acked, so compacting mid-flush
+    /// can never drop an unacknowledged record from the log.
+    logged: BTreeMap<u64, Vec<u8>>,
     next_seq: u64,
-}
-
-fn entry_path(seq: u64) -> String {
-    format!("{QUEUE_DIR}/{seq:020}")
+    /// Byte offset appends go to (the trusted end of the log; a torn
+    /// tail past it is overwritten by the next append and re-truncated
+    /// by the next recovery — stale bytes cannot verify as frames).
+    log_end: u64,
+    acked_since_compact: usize,
 }
 
 impl MetaQueue {
     pub fn new() -> Self {
-        MetaQueue { pending: Vec::new(), next_seq: 1 }
+        MetaQueue {
+            pending: Vec::new(),
+            logged: BTreeMap::new(),
+            next_seq: 1,
+            log_end: 0,
+            acked_since_compact: 0,
+        }
     }
 
-    /// Append an op: persists to `store` then records it in memory.
+    fn append_record(
+        &mut self,
+        store: &mut FileStore,
+        kind: u8,
+        seq: u64,
+        payload: &[u8],
+        now: VirtualTime,
+    ) -> FsResult<()> {
+        if !store.exists(OPLOG_PATH) {
+            store.mkdir_p(OPLOG_DIR, now)?;
+            store.write(OPLOG_PATH, &[], now)?;
+            self.log_end = 0;
+        } else {
+            // bytes past the trusted end — a torn tail from a previous
+            // crash, or a foreign log under a fresh queue — are dropped
+            // before appending, so they can neither interleave behind new
+            // frames nor resurface as phantom corrupt records on the next
+            // recovery
+            let len = store.stat(OPLOG_PATH).map(|a| a.size).unwrap_or(0);
+            if len > self.log_end {
+                store.truncate(OPLOG_PATH, self.log_end, now)?;
+            }
+        }
+        let rec = frame_record(kind, seq, payload);
+        // write-through append (the model's O_APPEND + fdatasync)
+        store.write_at(OPLOG_PATH, self.log_end, &rec, now)?;
+        self.log_end += rec.len() as u64;
+        Ok(())
+    }
+
+    /// Rewrite the log as watermark + still-unacked ops, dropping acked
+    /// history. The watermark pins `next_seq` across crashes so replayed
+    /// and new ops can never collide on the server's idempotence
+    /// watermark.
+    fn compact(&mut self, store: &mut FileStore, now: VirtualTime) -> FsResult<()> {
+        let mut log = frame_record(REC_MARK, self.next_seq.saturating_sub(1), &[]);
+        for (seq, payload) in &self.logged {
+            log.extend_from_slice(&frame_record(REC_OP, *seq, payload));
+        }
+        store.mkdir_p(OPLOG_DIR, now)?;
+        store.write(OPLOG_PATH, &log, now)?;
+        self.log_end = log.len() as u64;
+        self.acked_since_compact = 0;
+        Ok(())
+    }
+
+    /// Append an op: persists to the log then records it in memory.
     /// Returns the assigned sequence number.
     pub fn append(&mut self, store: &mut FileStore, op: MetaOp, now: VirtualTime) -> FsResult<u64> {
         let seq = self.next_seq;
         self.next_seq += 1;
-        store.mkdir_p(QUEUE_DIR, now)?;
-        store.write(&entry_path(seq), &persist_bytes(&op), now)?;
+        let payload = persist_bytes(&op);
+        self.append_record(store, REC_OP, seq, &payload, now)?;
+        self.logged.insert(seq, payload);
         self.pending.push((seq, op));
         Ok(seq)
     }
@@ -109,8 +218,8 @@ impl MetaQueue {
         self.pending.iter().map(|(_, op)| op.wire_bytes()).sum()
     }
 
-    /// Remove the front op for shipping (disk entry stays until `ack`;
-    /// on failure `push_front` restores it). Avoids cloning large
+    /// Remove the front op for shipping (its log record stays until
+    /// `ack`; on failure `push_front` restores it). Avoids cloning large
     /// payloads on the flush path.
     pub fn take_front(&mut self) -> Option<(u64, MetaOp)> {
         if self.pending.is_empty() {
@@ -126,7 +235,7 @@ impl MetaQueue {
     }
 
     /// Move out EVERY pending op for a compound flush (one WAN round trip
-    /// for the whole queue). Disk entries stay until `ack`; on failure
+    /// for the whole queue). Log records stay until `ack`; on failure
     /// [`Self::push_front_all`] restores the batch.
     pub fn take_all(&mut self) -> Vec<(u64, MetaOp)> {
         std::mem::take(&mut self.pending)
@@ -139,16 +248,30 @@ impl MetaQueue {
         self.pending = ops;
     }
 
-    /// Server acknowledged `seq`: drop it from memory and disk.
+    /// Server acknowledged `seq`: append the ack record, drop the op from
+    /// memory, and compact when the log has accumulated enough retired
+    /// history (or emptied entirely).
     pub fn ack(&mut self, store: &mut FileStore, seq: u64, now: VirtualTime) -> FsResult<()> {
         self.pending.retain(|(s, _)| *s != seq);
-        let _ = store.unlink(&entry_path(seq), now); // absent on re-ack: fine
-        Ok(())
+        if self.logged.remove(&seq).is_none() {
+            // re-ack of an already-retired seq: nothing to record
+            return Ok(());
+        }
+        self.acked_since_compact += 1;
+        if self.logged.is_empty() || self.acked_since_compact >= COMPACT_EVERY_ACKS {
+            // compaction's watermark + unacked-ops rewrite encodes this
+            // ack implicitly — appending the ack frame first would be a
+            // wasted synchronous log write
+            self.compact(store, now)
+        } else {
+            self.append_record(store, REC_ACK, seq, &[], now)
+        }
     }
 
     /// Replace a pending op in place (e.g. delta flush demoted to a full
     /// flush after the server reported a stale base). Keeps the same seq
-    /// ordering; persists the new encoding.
+    /// ordering; appends the superseding record (recovery keeps the last
+    /// record per seq).
     pub fn replace(
         &mut self,
         store: &mut FileStore,
@@ -156,42 +279,103 @@ impl MetaQueue {
         op: MetaOp,
         now: VirtualTime,
     ) -> FsResult<bool> {
-        for (s, o) in &mut self.pending {
-            if *s == seq {
-                store.write(&entry_path(seq), &persist_bytes(&op), now)?;
-                *o = op;
-                return Ok(true);
-            }
-        }
-        Ok(false)
+        let Some(idx) = self.pending.iter().position(|(s, _)| *s == seq) else {
+            return Ok(false);
+        };
+        let payload = persist_bytes(&op);
+        self.append_record(store, REC_OP, seq, &payload, now)?;
+        self.logged.insert(seq, payload);
+        self.pending[idx].1 = op;
+        Ok(true)
     }
 
-    /// Rebuild the queue from the persisted entries after a client crash.
-    /// Corrupt entries are skipped (counted), matching the recovery tool's
-    /// best-effort semantics.
+    /// Rebuild the queue from the persisted log after a client crash.
+    /// Scans front to back verifying each frame's HMAC; the first bad
+    /// frame ends the trusted prefix (torn-tail truncation, counted as
+    /// one corrupt record). Frame-valid records whose payload no longer
+    /// decodes (e.g. a by-reference target unlinked before the crash)
+    /// are skipped and counted, matching the recovery tool's best-effort
+    /// semantics.
     pub fn recover(store: &FileStore) -> (Self, usize) {
-        let mut pending = Vec::new();
-        let mut corrupt = 0;
-        let mut max_seq = 0;
-        if let Ok(entries) = store.readdir(QUEUE_DIR) {
-            for (name, _) in entries {
-                let Ok(seq) = name.parse::<u64>() else {
-                    corrupt += 1;
-                    continue;
-                };
-                match store.read(&entry_path(seq)).ok().map(|b| b.to_vec()).and_then(|b| recover_entry(store, &b)) {
-                    Some(op) => {
-                        pending.push((seq, op));
-                        max_seq = max_seq.max(seq);
-                    }
-                    None => corrupt += 1,
+        let mut raw_ops: BTreeMap<u64, Vec<u8>> = BTreeMap::new();
+        let mut corrupt = 0usize;
+        let mut max_seq = 0u64;
+        let mut end = 0u64;
+        if let Ok(buf) = store.read(OPLOG_PATH) {
+            let mut at = 0usize;
+            while at < buf.len() {
+                if buf.len() - at < REC_HDR + REC_MAC {
+                    corrupt += 1; // torn header
+                    break;
                 }
+                let kind = buf[at];
+                let mut seq_bytes = [0u8; 8];
+                seq_bytes.copy_from_slice(&buf[at + 1..at + 9]);
+                let seq = u64::from_le_bytes(seq_bytes);
+                let mut len_bytes = [0u8; 4];
+                len_bytes.copy_from_slice(&buf[at + 9..at + 13]);
+                let len = u32::from_le_bytes(len_bytes) as usize;
+                let Some(frame_end) = at
+                    .checked_add(REC_HDR)
+                    .and_then(|x| x.checked_add(len))
+                    .and_then(|x| x.checked_add(REC_MAC))
+                else {
+                    corrupt += 1;
+                    break;
+                };
+                if frame_end > buf.len() {
+                    corrupt += 1; // torn payload
+                    break;
+                }
+                let payload = &buf[at + REC_HDR..at + REC_HDR + len];
+                let mac = &buf[at + REC_HDR + len..frame_end];
+                let want =
+                    hmacsha::hmac_sha256(LOG_HMAC_KEY, &[&[kind], &seq.to_le_bytes(), payload]);
+                if !hmacsha::ct_eq(mac, &want) {
+                    corrupt += 1; // tampered or torn frame: distrust the rest
+                    break;
+                }
+                match kind {
+                    REC_OP => {
+                        raw_ops.insert(seq, payload.to_vec());
+                    }
+                    REC_ACK => {
+                        raw_ops.remove(&seq);
+                    }
+                    REC_MARK => {}
+                    _ => {
+                        corrupt += 1; // unknown kind: distrust the rest
+                        break;
+                    }
+                }
+                max_seq = max_seq.max(seq);
+                at = frame_end;
+                end = at as u64;
             }
         }
-        pending.sort_by_key(|(s, _)| *s);
-        // next_seq continues after everything ever persisted, so replayed
-        // and new ops can't collide
-        (MetaQueue { pending, next_seq: max_seq + 1 }, corrupt)
+        let mut pending = Vec::new();
+        let mut logged = BTreeMap::new();
+        for (seq, payload) in raw_ops {
+            match recover_entry(store, &payload) {
+                Some(op) => {
+                    pending.push((seq, op));
+                    logged.insert(seq, payload);
+                }
+                None => corrupt += 1,
+            }
+        }
+        (
+            MetaQueue {
+                pending,
+                logged,
+                // next_seq continues after everything ever persisted, so
+                // replayed and new ops can't collide
+                next_seq: max_seq + 1,
+                log_end: end,
+                acked_since_compact: 0,
+            },
+            corrupt,
+        )
     }
 }
 
@@ -211,7 +395,11 @@ mod tests {
     }
 
     fn op(path: &str) -> MetaOp {
-        MetaOp::WriteFull { path: path.into(), data: b"x".to_vec(), digests: vec![1] }
+        MetaOp::WriteFull { path: path.into(), data: b"x".to_vec(), digests: vec![1], base_version: 0 }
+    }
+
+    fn log_len(store: &FileStore) -> usize {
+        store.read(OPLOG_PATH).map(|b| b.len()).unwrap_or(0)
     }
 
     #[test]
@@ -219,24 +407,37 @@ mod tests {
         let mut store = FileStore::default();
         let mut q = MetaQueue::new();
         let s1 = q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        let len1 = log_len(&store);
         let s2 = q.append(&mut store, MetaOp::Unlink { path: "/b".into() }, t(2.0)).unwrap();
         assert!(s2 > s1);
         assert_eq!(q.len(), 2);
-        assert!(store.exists(&entry_path(s1)));
-        assert!(store.exists(&entry_path(s2)));
+        assert!(store.exists(OPLOG_PATH));
+        assert!(log_len(&store) > len1, "every append grows the log");
         assert!(q.pending_bytes() > 0);
     }
 
     #[test]
-    fn ack_removes_from_memory_and_disk() {
+    fn ack_retires_and_empty_log_compacts_keeping_watermark() {
         let mut store = FileStore::default();
         let mut q = MetaQueue::new();
         let s1 = q.append(&mut store, op("/a"), t(1.0)).unwrap();
         let s2 = q.append(&mut store, op("/b"), t(1.0)).unwrap();
         q.ack(&mut store, s1, t(2.0)).unwrap();
         assert_eq!(q.len(), 1);
-        assert!(!store.exists(&entry_path(s1)));
-        assert!(store.exists(&entry_path(s2)));
+        let (r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(corrupt, 0);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.pending()[0].0, s2);
+        // acking the last op compacts the log down to the watermark...
+        q.ack(&mut store, s2, t(3.0)).unwrap();
+        let compacted = log_len(&store);
+        assert!(compacted < 120, "compacted log is one watermark record ({compacted} bytes)");
+        // ...which pins the sequence floor across a crash
+        let (mut r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(corrupt, 0);
+        assert!(r.is_empty());
+        let s3 = r.append(&mut store, op("/c"), t(4.0)).unwrap();
+        assert!(s3 > s2, "recovered seqs must not regress past acked history");
     }
 
     #[test]
@@ -260,16 +461,49 @@ mod tests {
     }
 
     #[test]
-    fn recovery_skips_corrupt_entries() {
+    fn torn_tail_is_truncated_not_fatal() {
         let mut store = FileStore::default();
         let mut q = MetaQueue::new();
         q.append(&mut store, op("/a"), t(1.0)).unwrap();
-        // corrupt one persisted entry + an unparseable name
-        store.write(&entry_path(2), b"garbage", t(1.5)).unwrap();
-        store.write(&format!("{QUEUE_DIR}/not-a-seq"), b"junk", t(1.5)).unwrap();
+        q.append(&mut store, op("/b"), t(1.0)).unwrap();
+        // crash mid-append: a partial third record at the tail
+        let end = log_len(&store) as u64;
+        store.write_at(OPLOG_PATH, end, &[REC_OP, 3, 0, 0], t(1.5)).unwrap();
         let (r, corrupt) = MetaQueue::recover(&store);
-        assert_eq!(r.len(), 1);
-        assert_eq!(corrupt, 2);
+        assert_eq!(corrupt, 1, "torn tail counts once");
+        assert_eq!(r.len(), 2, "records before the tear survive");
+    }
+
+    #[test]
+    fn append_after_torn_recovery_trims_the_residue() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        // crash leaves a LONG torn tail (bigger than the next record)
+        let end = log_len(&store) as u64;
+        store.write_at(OPLOG_PATH, end, &vec![0xEE; 500], t(1.5)).unwrap();
+        let (mut r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(corrupt, 1);
+        // the next append must not leave residue behind the new record:
+        // a second recovery sees a clean log, not phantom corruption
+        r.append(&mut store, op("/b"), t(2.0)).unwrap();
+        let (r2, corrupt2) = MetaQueue::recover(&store);
+        assert_eq!(corrupt2, 0, "torn residue must not resurface");
+        assert_eq!(r2.len(), 2);
+    }
+
+    #[test]
+    fn tampered_record_distrust_suffix() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        q.append(&mut store, op("/a"), t(1.0)).unwrap();
+        let flip_at = log_len(&store) as u64 - 1; // inside record 1's MAC
+        q.append(&mut store, op("/b"), t(1.0)).unwrap();
+        let byte = store.read(OPLOG_PATH).unwrap()[flip_at as usize] ^ 0xFF;
+        store.write_at(OPLOG_PATH, flip_at, &[byte], t(1.5)).unwrap();
+        let (r, corrupt) = MetaQueue::recover(&store);
+        assert!(corrupt >= 1);
+        assert_eq!(r.len(), 0, "everything at or after the bad frame is untrusted");
     }
 
     #[test]
@@ -277,10 +511,11 @@ mod tests {
         let mut store = FileStore::default();
         let mut q = MetaQueue::new();
         let s = q.append(&mut store, op("/a"), t(1.0)).unwrap();
-        let full = MetaOp::WriteFull { path: "/a".into(), data: vec![9; 100], digests: vec![] };
+        let full =
+            MetaOp::WriteFull { path: "/a".into(), data: vec![9; 100], digests: vec![], base_version: 0 };
         assert!(q.replace(&mut store, s, full.clone(), t(2.0)).unwrap());
         assert_eq!(q.pending()[0], (s, full.clone()));
-        // persisted encoding updated too
+        // the superseding record wins on recovery too
         let (r, _) = MetaQueue::recover(&store);
         assert_eq!(r.pending()[0].1, full);
         assert!(!q.replace(&mut store, 999, op("/x"), t(3.0)).unwrap());
@@ -295,11 +530,15 @@ mod tests {
         store.write("/big.bin", &content, t(0.5)).unwrap();
         let used_before = store.used_bytes();
         // ...then enqueues the full write
-        let op_big = MetaOp::WriteFull { path: "/big.bin".into(), data: content.clone(), digests: vec![7, 8] };
-        let seq = q.append(&mut store, op_big.clone(), t(1.0)).unwrap();
-        // the persisted entry is tiny (by-reference), not another 512 KiB
-        let entry = store.read(&entry_path(seq)).unwrap();
-        assert!(entry.len() < 256, "spilled entry is {} bytes", entry.len());
+        let op_big = MetaOp::WriteFull {
+            path: "/big.bin".into(),
+            data: content.clone(),
+            digests: vec![7, 8],
+            base_version: 3,
+        };
+        q.append(&mut store, op_big.clone(), t(1.0)).unwrap();
+        // the persisted record is tiny (by-reference), not another 512 KiB
+        assert!(log_len(&store) < 256, "spilled record is {} bytes", log_len(&store));
         assert!(store.used_bytes() < used_before + 1024);
         // crash + recovery rebuilds the full op from the cache copy
         let (r, corrupt) = MetaQueue::recover(&store);
@@ -315,8 +554,12 @@ mod tests {
         let mut q = MetaQueue::new();
         let v1 = vec![1u8; SPILL_THRESHOLD];
         store.write("/f", &v1, t(0.5)).unwrap();
-        q.append(&mut store, MetaOp::WriteFull { path: "/f".into(), data: v1, digests: vec![] }, t(1.0))
-            .unwrap();
+        q.append(
+            &mut store,
+            MetaOp::WriteFull { path: "/f".into(), data: v1, digests: vec![], base_version: 0 },
+            t(1.0),
+        )
+        .unwrap();
         let v2 = vec![2u8; SPILL_THRESHOLD];
         store.write("/f", &v2, t(2.0)).unwrap();
         let (r, _) = MetaQueue::recover(&store);
@@ -324,6 +567,28 @@ mod tests {
             MetaOp::WriteFull { data, .. } => assert_eq!(data, &v2),
             other => panic!("{other:?}"),
         }
+    }
+
+    #[test]
+    fn spilled_ghost_target_is_skipped_not_fatal() {
+        // by-reference record whose cache copy was unlinked before the
+        // crash: that one op is lost (counted), the rest replays
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        let big = vec![3u8; SPILL_THRESHOLD];
+        store.write("/gone", &big, t(0.5)).unwrap();
+        q.append(
+            &mut store,
+            MetaOp::WriteFull { path: "/gone".into(), data: big, digests: vec![], base_version: 0 },
+            t(1.0),
+        )
+        .unwrap();
+        q.append(&mut store, op("/kept"), t(1.0)).unwrap();
+        store.unlink("/gone", t(2.0)).unwrap();
+        let (r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(corrupt, 1);
+        assert_eq!(r.len(), 1);
+        assert_eq!(r.pending()[0].1.path(), "/kept");
     }
 
     #[test]
@@ -342,7 +607,7 @@ mod tests {
     }
 
     #[test]
-    fn take_all_push_front_all_roundtrip() {
+    fn in_flight_batch_survives_crash_until_acked() {
         let mut store = FileStore::default();
         let mut q = MetaQueue::new();
         let s1 = q.append(&mut store, op("/a"), t(1.0)).unwrap();
@@ -350,13 +615,44 @@ mod tests {
         let batch = q.take_all();
         assert_eq!(batch.len(), 2);
         assert!(q.is_empty());
-        // disk entries survive the take (crash-safety until ack)
-        assert!(store.exists(&entry_path(s1)));
+        // crash while the batch is in flight: the log still carries both
+        let (r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(corrupt, 0);
+        assert_eq!(r.len(), 2);
         // append while a batch is in flight, then restore: order holds
         let s3 = q.append(&mut store, op("/c"), t(2.0)).unwrap();
         q.push_front_all(batch);
         let seqs: Vec<u64> = q.pending().iter().map(|(s, _)| *s).collect();
         assert_eq!(seqs, vec![s1, s2, s3]);
+        // an ack mid-flight compacts without dropping the unacked records
+        q.ack(&mut store, s1, t(3.0)).unwrap();
+        let (r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(corrupt, 0);
+        let seqs: Vec<u64> = r.pending().iter().map(|(s, _)| *s).collect();
+        assert_eq!(seqs, vec![s2, s3]);
+    }
+
+    #[test]
+    fn compaction_drops_acked_history() {
+        let mut store = FileStore::default();
+        let mut q = MetaQueue::new();
+        let mut seqs = Vec::new();
+        for i in 0..(COMPACT_EVERY_ACKS + 4) {
+            seqs.push(q.append(&mut store, op(&format!("/f{i}")), t(1.0)).unwrap());
+        }
+        let grown = log_len(&store);
+        for &s in &seqs[..COMPACT_EVERY_ACKS] {
+            q.ack(&mut store, s, t(2.0)).unwrap();
+        }
+        assert!(
+            log_len(&store) < grown,
+            "compaction shrank the log ({} -> {})",
+            grown,
+            log_len(&store)
+        );
+        let (r, corrupt) = MetaQueue::recover(&store);
+        assert_eq!(corrupt, 0);
+        assert_eq!(r.len(), 4);
     }
 
     #[test]

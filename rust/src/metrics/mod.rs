@@ -132,6 +132,18 @@ pub mod names {
     pub const DIGEST_CALLS: &str = "runtime.digest_calls";
     pub const METAQ_APPENDS: &str = "metaq.appends";
     pub const METAQ_REPLAYS: &str = "metaq.replays";
+    /// Replayed ops skipped because their target vanished while the op
+    /// sat queued (unlink/rename raced the disconnected write).
+    pub const METAQ_REPLAY_SKIPPED: &str = "metaq.replay_skipped";
+    /// Faults the fault plane injected (any non-clean delivery).
+    pub const FAULTS_INJECTED: &str = "fault.injected";
+    /// Interactions refused because the link was partitioned.
+    pub const FAULT_PARTITIONED_OPS: &str = "fault.partitioned_ops";
+    /// Torn transfers that were transparently resumed mid-range.
+    pub const RESUMED_FETCHES: &str = "transfer.resumed_fetches";
+    /// Loser copies preserved as `.xufs-conflict-<client>-<seq>` files at the
+    /// home space instead of being silently overwritten.
+    pub const CONFLICT_FILES: &str = "server.conflict_files";
     pub const LEASE_RENEWALS: &str = "lease.renewals";
     pub const LEASE_EXPIRED: &str = "lease.expired";
     pub const CALLBACKS_SENT: &str = "server.callbacks_sent";

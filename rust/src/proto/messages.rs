@@ -94,6 +94,14 @@ pub enum LockKind {
 /// Mutating operations recorded in the client's persisted meta-operation
 /// queue and replayed to the server (paper §3.1). `WriteFull` carries the
 /// aggregated shadow-file content; `WriteDelta` only digest-dirty blocks.
+///
+/// `WriteFull::base_version` is the home-space version the client's
+/// content was derived from, or 0 when unknown/irrelevant. When it is
+/// non-zero and the server's copy has moved past it with *different*
+/// content (digest vectors differ), the server preserves its copy as a
+/// `<path>.xufs-conflict-<client>-<seq>` file before applying the write
+/// — last close wins, but the loser is never silently dropped
+/// (DESIGN.md §2.5).
 #[derive(Debug, Clone, PartialEq)]
 pub enum MetaOp {
     Mkdir { path: String },
@@ -103,7 +111,7 @@ pub enum MetaOp {
     Rename { from: String, to: String },
     Truncate { path: String, size: u64 },
     SetMode { path: String, mode: u32 },
-    WriteFull { path: String, data: Vec<u8>, digests: Vec<i32> },
+    WriteFull { path: String, data: Vec<u8>, digests: Vec<i32>, base_version: u64 },
     WriteDelta {
         path: String,
         total_size: u64,
@@ -164,8 +172,8 @@ impl MetaOp {
             MetaOp::SetMode { path, mode } => {
                 e.u8(6).str(path).u32(*mode);
             }
-            MetaOp::WriteFull { path, data, digests } => {
-                e.u8(7).str(path).bytes(data).i32_slice(digests);
+            MetaOp::WriteFull { path, data, digests, base_version } => {
+                e.u8(7).str(path).bytes(data).i32_slice(digests).u64(*base_version);
             }
             MetaOp::WriteDelta { path, total_size, base_version, blocks, digests } => {
                 e.u8(8).str(path).u64(*total_size).u64(*base_version);
@@ -191,6 +199,7 @@ impl MetaOp {
                 path: d.str()?,
                 data: d.bytes()?.to_vec(),
                 digests: d.i32_vec()?,
+                base_version: d.u64()?,
             },
             8 => {
                 let path = d.str()?;
@@ -672,7 +681,7 @@ mod tests {
                     CompoundOp::Apply { seq: 1, op: MetaOp::Mkdir { path: "/d".into() } },
                     CompoundOp::Apply {
                         seq: 2,
-                        op: MetaOp::WriteFull { path: "/f".into(), data: vec![9; 40], digests: vec![3] },
+                        op: MetaOp::WriteFull { path: "/f".into(), data: vec![9; 40], digests: vec![3], base_version: 0 },
                     },
                     CompoundOp::Stat { path: "/f".into() },
                 ],
@@ -747,7 +756,7 @@ mod tests {
             MetaOp::Rename { from: "/a".into(), to: "/b".into() },
             MetaOp::Truncate { path: "/f".into(), size: 42 },
             MetaOp::SetMode { path: "/f".into(), mode: 0o644 },
-            MetaOp::WriteFull { path: "/f".into(), data: vec![7; 9], digests: vec![5] },
+            MetaOp::WriteFull { path: "/f".into(), data: vec![7; 9], digests: vec![5], base_version: 7 },
             MetaOp::WriteDelta {
                 path: "/f".into(),
                 total_size: 200,
@@ -788,7 +797,7 @@ mod tests {
 
     #[test]
     fn metaop_wire_bytes_accounting() {
-        let full = MetaOp::WriteFull { path: "/f".into(), data: vec![0; 1000], digests: vec![] };
+        let full = MetaOp::WriteFull { path: "/f".into(), data: vec![0; 1000], digests: vec![], base_version: 0 };
         assert_eq!(full.wire_bytes(), 1064);
         let delta = MetaOp::WriteDelta {
             path: "/f".into(),
@@ -805,7 +814,7 @@ mod tests {
     fn encode_compound_applies_matches_owned_encoding() {
         let ops = vec![
             (4u64, MetaOp::Mkdir { path: "/d".into() }),
-            (5u64, MetaOp::WriteFull { path: "/f".into(), data: vec![9; 100], digests: vec![1, 2] }),
+            (5u64, MetaOp::WriteFull { path: "/f".into(), data: vec![9; 100], digests: vec![1, 2], base_version: 2 }),
         ];
         let owned = Request::Compound {
             ops: ops
@@ -820,7 +829,7 @@ mod tests {
     fn compound_wire_bytes_accounting() {
         let apply = CompoundOp::Apply {
             seq: 1,
-            op: MetaOp::WriteFull { path: "/f".into(), data: vec![0; 1000], digests: vec![] },
+            op: MetaOp::WriteFull { path: "/f".into(), data: vec![0; 1000], digests: vec![], base_version: 0 },
         };
         assert_eq!(apply.wire_bytes(), 1072);
         assert_eq!(CompoundOp::Stat { path: "/f".into() }.wire_bytes(), 64);

@@ -135,7 +135,13 @@ impl FileServer {
     }
 
     /// Crash the server process: callback registrations and the in-memory
-    /// lock table die with it; the home space (on disk) survives.
+    /// lock table die with it; the home space (on disk) survives — and so
+    /// does the per-client idempotence watermark (`applied`/`failed`),
+    /// which the server journals to the home disk alongside the data it
+    /// guards. A crashed-and-restarted server must answer replayed ops
+    /// as duplicates, not re-apply them: re-application would double-bump
+    /// versions and mistake a client's own earlier write for a
+    /// conflicting third-party edit (DESIGN.md §2.5).
     pub fn crash(&mut self) {
         self.up = false;
         for reg in &self.callbacks {
@@ -143,8 +149,6 @@ impl FileServer {
         }
         self.callbacks.clear();
         self.locks = LockTable::new(self.locks.lease_secs());
-        self.applied.clear();
-        self.failed.clear();
     }
 
     /// Restart (the paper uses a crontab job). Clients must re-register
@@ -418,13 +422,48 @@ impl FileServer {
             MetaOp::SetMode { path, mode } => {
                 self.fs.set_mode(path, *mode, now).map(|_| vec![(path.clone(), false)])
             }
-            MetaOp::WriteFull { path, data, digests } => {
+            MetaOp::WriteFull { path, data, digests, base_version } => {
+                let mut touched = vec![(path.clone(), false)];
+                if *base_version > 0 && !digests.is_empty() {
+                    if let Ok(attr) = self.fs.stat(path) {
+                        if attr.version != *base_version
+                            && self.digests_for(path, attr.version) != *digests
+                        {
+                            // a disconnected-time write raced a home-side
+                            // edit the client never saw: last close wins,
+                            // but the losing copy is preserved beside the
+                            // file instead of silently dropped (§2.5).
+                            // Digest-equal content is not a conflict —
+                            // nothing would be lost. The loser is COPIED
+                            // aside (not renamed): the original inode must
+                            // keep its version so the write below bumps it
+                            // monotonically — a recreated inode would
+                            // restart at a low version and other clients'
+                            // `version < new_version` invalidation gate
+                            // would dismiss the callback and serve stale.
+                            // client_id keeps names from colliding when
+                            // two clients' independent per-client seqs
+                            // conflict on the same path
+                            let conflict = format!(
+                                "{}.xufs-conflict-{client_id}-{seq}",
+                                vpath::normalize(path)
+                            );
+                            let loser = self.fs.read(path).map(|d| d.to_vec());
+                            if let Ok(loser) = loser {
+                                if self.fs.write(&conflict, &loser, now).is_ok() {
+                                    self.metrics.incr(names::CONFLICT_FILES);
+                                    touched.push((conflict, false));
+                                }
+                            }
+                        }
+                    }
+                }
                 let r = self.fs.write(path, data, now);
                 if r.is_ok() && !digests.is_empty() {
                     let v = self.fs.stat(path).map(|a| a.version).unwrap_or(0);
                     self.digest_cache.insert(vpath::normalize(path), (v, digests.clone()));
                 }
-                r.map(|_| vec![(path.clone(), false)])
+                r.map(|_| touched)
             }
             MetaOp::WriteDelta { path, total_size, base_version, blocks, digests } => {
                 self.apply_delta(path, *total_size, *base_version, blocks, digests, now)
@@ -639,7 +678,12 @@ mod tests {
     #[test]
     fn apply_is_idempotent_per_client() {
         let mut s = server();
-        let op = MetaOp::WriteFull { path: "/home/user/new".into(), data: b"v1".to_vec(), digests: vec![] };
+        let op = MetaOp::WriteFull {
+            path: "/home/user/new".into(),
+            data: b"v1".to_vec(),
+            digests: vec![],
+            base_version: 0,
+        };
         let r1 = s.handle(1, Request::Apply { seq: 1, op: op.clone() }, t(1.0));
         assert!(matches!(r1, Response::Applied { seq: 1, .. }));
         let v1 = s.home().stat("/home/user/new").unwrap().version;
@@ -663,6 +707,7 @@ mod tests {
                             path: "/home/user/new/f.txt".into(),
                             data: b"compound".to_vec(),
                             digests: vec![],
+                            base_version: 0,
                         },
                     },
                     // semantic failure mid-batch must not stop later ops
@@ -739,7 +784,12 @@ mod tests {
         let ops = vec![
             CompoundOp::Apply {
                 seq: 1,
-                op: MetaOp::WriteFull { path: "/home/user/q".into(), data: b"v".to_vec(), digests: vec![] },
+                op: MetaOp::WriteFull {
+                    path: "/home/user/q".into(),
+                    data: b"v".to_vec(),
+                    digests: vec![],
+                    base_version: 0,
+                },
             },
             CompoundOp::Apply { seq: 2, op: MetaOp::Mkdir { path: "/home/user/d".into() } },
         ];
@@ -761,7 +811,12 @@ mod tests {
         s.attach_channel(2, ch2.clone());
         s.handle(1, Request::RegisterCallback { root: "/home/user".into(), client_id: 1 }, t(0.0));
         s.handle(2, Request::RegisterCallback { root: "/home/user".into(), client_id: 2 }, t(0.0));
-        let op = MetaOp::WriteFull { path: "/home/user/a.txt".into(), data: b"x".to_vec(), digests: vec![] };
+        let op = MetaOp::WriteFull {
+            path: "/home/user/a.txt".into(),
+            data: b"x".to_vec(),
+            digests: vec![],
+            base_version: 0,
+        };
         s.handle(1, Request::Apply { seq: 1, op }, t(1.0));
         assert_eq!(ch1.pending(), 0, "originator must not be invalidated");
         let evs = ch2.drain();

@@ -1,0 +1,300 @@
+//! Deterministic fault plane (DESIGN.md §2.5).
+//!
+//! A seeded [`FaultPlan`] decides, for every WAN interaction a
+//! [`crate::client::ServerLink`] attempts, whether and how that
+//! interaction fails: packets dropped before or after the server saw
+//! them, duplicated deliveries, extra queueing delay, torn bulk
+//! transfers, multi-step partitions, and server crash/restart schedules.
+//! The plan is pure state + a seeded [`Rng`], so a failing schedule
+//! reproduces from its seed alone — the property the schedule explorer
+//! in `tests/fault_properties.rs` leans on.
+//!
+//! The plan advances one **step** per interaction attempt (including
+//! attempts that fail because of a partition, so a retrying client always
+//! makes schedule progress and every partition ends). Client crashes
+//! cannot be performed by a link, so they surface as harness events via
+//! [`FaultPlan::take_harness_events`].
+
+use crate::config::FaultConfig;
+use crate::util::Rng;
+
+/// What the fault plane does to one WAN interaction (clean delivery is
+/// `None` in [`StepOutcome::action`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// The request is lost before reaching the server (client observes a
+    /// timeout; the server never saw the op).
+    DropRequest,
+    /// The server processes the request but the reply is lost (client
+    /// observes a timeout; the op DID land — the idempotent-replay case).
+    DropReply,
+    /// The request reaches the server twice (network-level duplication).
+    Duplicate,
+    /// Extra queueing delay before normal delivery, in milliseconds.
+    Delay { ms: u32 },
+    /// A bulk transfer is torn mid-flight; the link must resume or
+    /// surface `FsError::Interrupted` with the resume block.
+    Interrupt,
+}
+
+/// Control-plane events the harness (not the link) must act on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// Crash-and-recover the numbered client (snapshot its cache space,
+    /// drop the process, rebuild via `XufsClient::recover`).
+    ClientCrash { client: u8 },
+}
+
+/// The plan's verdict for one interaction step.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct StepOutcome {
+    pub action: Option<FaultAction>,
+    /// The link is partitioned for this step: sever and fail the call.
+    pub partitioned: bool,
+    /// Crash the server process before handling this interaction.
+    pub server_crash: bool,
+    /// Restart the server process before handling this interaction.
+    pub server_restart: bool,
+}
+
+/// Seeded, deterministic fault schedule shared by every link of a
+/// deployment (wrap in `Arc<Mutex<..>>`).
+#[derive(Debug)]
+pub struct FaultPlan {
+    rng: Rng,
+    cfg: FaultConfig,
+    step: u64,
+    /// Interactions left in the current partition.
+    partition_left: u32,
+    /// Step at which a crashed server restarts.
+    restart_at: Option<u64>,
+    events: Vec<FaultEvent>,
+    injected: u64,
+    partitions: u64,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64, cfg: FaultConfig) -> Self {
+        FaultPlan {
+            rng: Rng::new(seed ^ 0xFA17_FA17_FA17_FA17),
+            cfg,
+            step: 0,
+            partition_left: 0,
+            restart_at: None,
+            events: Vec::new(),
+            injected: 0,
+            partitions: 0,
+        }
+    }
+
+    /// Total interactions stepped so far.
+    pub fn steps(&self) -> u64 {
+        self.step
+    }
+
+    /// Faults injected so far (anything other than clean delivery).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+
+    /// Partitions started so far.
+    pub fn partitions(&self) -> u64 {
+        self.partitions
+    }
+
+    /// Is a partition currently in force?
+    pub fn partitioned(&self) -> bool {
+        self.cfg.enabled && self.partition_left > 0
+    }
+
+    /// Is a server restart still pending (crash happened, restart step
+    /// not yet reached)?
+    pub fn restart_pending(&self) -> bool {
+        self.restart_at.is_some()
+    }
+
+    /// Stop injecting anything new and release standing conditions: the
+    /// quiesce phase of a schedule. A pending server restart is surfaced
+    /// once more through the next `step()` so the link can restart it.
+    pub fn quiesce(&mut self) {
+        self.cfg.enabled = false;
+        self.partition_left = 0;
+        if let Some(at) = self.restart_at {
+            // fire at the next step regardless of the original schedule
+            self.restart_at = Some(at.min(self.step + 1));
+        }
+    }
+
+    /// Drain pending harness-level events (client crashes).
+    pub fn take_harness_events(&mut self) -> Vec<FaultEvent> {
+        std::mem::take(&mut self.events)
+    }
+
+    /// Advance one interaction and decide its fate. Dice are rolled in a
+    /// fixed order so a schedule depends only on (seed, step sequence).
+    pub fn step(&mut self) -> StepOutcome {
+        self.step += 1;
+        let mut out = StepOutcome::default();
+        // a scheduled restart fires even while quiesced or partitioned
+        if let Some(at) = self.restart_at {
+            if self.step >= at {
+                out.server_restart = true;
+                self.restart_at = None;
+            }
+        }
+        if !self.cfg.enabled {
+            return out;
+        }
+        if self.partition_left > 0 {
+            self.partition_left -= 1;
+            self.injected += 1;
+            out.partitioned = true;
+            return out;
+        }
+        if self.cfg.partition_p > 0.0 && self.rng.chance(self.cfg.partition_p) {
+            self.partition_left = self.rng.range(1, self.cfg.partition_max_steps.max(1) as u64) as u32;
+            self.partitions += 1;
+            self.injected += 1;
+            out.partitioned = true;
+            return out;
+        }
+        if self.cfg.server_crash_p > 0.0
+            && self.restart_at.is_none()
+            && !out.server_restart
+            && self.rng.chance(self.cfg.server_crash_p)
+        {
+            out.server_crash = true;
+            self.restart_at =
+                Some(self.step + self.rng.range(1, self.cfg.server_crash_max_steps.max(1) as u64));
+            self.injected += 1;
+            return out;
+        }
+        if self.cfg.client_crash_p > 0.0 && self.rng.chance(self.cfg.client_crash_p) {
+            // which client the harness should crash (harness maps the
+            // index onto its mounted clients)
+            let client = self.rng.below(256) as u8;
+            self.events.push(FaultEvent::ClientCrash { client });
+            self.injected += 1;
+            // the interaction itself still proceeds normally
+        }
+        let action = if self.rng.chance(self.cfg.drop_request_p) {
+            Some(FaultAction::DropRequest)
+        } else if self.rng.chance(self.cfg.drop_reply_p) {
+            Some(FaultAction::DropReply)
+        } else if self.rng.chance(self.cfg.duplicate_p) {
+            Some(FaultAction::Duplicate)
+        } else if self.rng.chance(self.cfg.interrupt_p) {
+            Some(FaultAction::Interrupt)
+        } else if self.rng.chance(self.cfg.delay_p) {
+            Some(FaultAction::Delay {
+                ms: self.rng.range(1, self.cfg.delay_max_ms.max(1) as u64) as u32,
+            })
+        } else {
+            None
+        };
+        if action.is_some() {
+            self.injected += 1;
+        }
+        out.action = action;
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chaos_cfg() -> FaultConfig {
+        FaultConfig {
+            enabled: true,
+            drop_request_p: 0.1,
+            drop_reply_p: 0.1,
+            duplicate_p: 0.1,
+            delay_p: 0.1,
+            delay_max_ms: 200,
+            interrupt_p: 0.1,
+            partition_p: 0.05,
+            partition_max_steps: 12,
+            server_crash_p: 0.02,
+            server_crash_max_steps: 20,
+            client_crash_p: 0.01,
+        }
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let mut a = FaultPlan::new(42, chaos_cfg());
+        let mut b = FaultPlan::new(42, chaos_cfg());
+        for _ in 0..500 {
+            assert_eq!(a.step(), b.step());
+        }
+        assert_eq!(a.take_harness_events(), b.take_harness_events());
+        assert_eq!(a.injected(), b.injected());
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = FaultPlan::new(1, chaos_cfg());
+        let mut b = FaultPlan::new(2, chaos_cfg());
+        let diverged = (0..200).any(|_| a.step() != b.step());
+        assert!(diverged);
+    }
+
+    #[test]
+    fn partitions_end_and_crashes_restart() {
+        let mut p = FaultPlan::new(7, chaos_cfg());
+        let mut saw_partition = false;
+        let mut saw_crash = false;
+        let mut saw_restart = false;
+        let mut server_up = true;
+        for _ in 0..5000 {
+            let o = p.step();
+            if o.server_restart {
+                saw_restart = true;
+                server_up = true;
+            }
+            if o.server_crash {
+                saw_crash = true;
+                server_up = false;
+            }
+            saw_partition |= o.partitioned;
+        }
+        assert!(saw_partition && saw_crash && saw_restart);
+        // every crash schedules a restart, so a long run cannot end with
+        // the server wedged down once quiesced
+        p.quiesce();
+        for _ in 0..3 {
+            if p.step().server_restart {
+                server_up = true;
+            }
+        }
+        assert!(server_up, "quiesce must release a pending restart");
+        assert!(!p.partitioned());
+    }
+
+    #[test]
+    fn disabled_plan_is_transparent() {
+        let mut cfg = chaos_cfg();
+        cfg.enabled = false;
+        let mut p = FaultPlan::new(3, cfg);
+        for _ in 0..100 {
+            assert_eq!(p.step(), StepOutcome::default());
+        }
+        assert_eq!(p.injected(), 0);
+    }
+
+    #[test]
+    fn quiesce_stops_new_faults() {
+        let mut p = FaultPlan::new(11, chaos_cfg());
+        for _ in 0..50 {
+            p.step();
+        }
+        p.quiesce();
+        // drain a possible pending restart, then everything is clean
+        let _ = p.step();
+        for _ in 0..100 {
+            let o = p.step();
+            assert!(!o.partitioned && o.action.is_none() && !o.server_crash && !o.server_restart);
+        }
+    }
+}

@@ -19,9 +19,11 @@
 //! stream-capped bandwidth shares, both of which the closed form captures.
 
 mod clock;
+mod fault;
 mod wan;
 
 pub use clock::{Clock, RealClock, SimClock, VirtualTime};
+pub use fault::{FaultAction, FaultEvent, FaultPlan, StepOutcome};
 pub use wan::{TransferKind, Wan, WanStats};
 
 #[cfg(test)]

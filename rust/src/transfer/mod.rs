@@ -162,7 +162,12 @@ pub fn build_writeback(
         )
     } else {
         (
-            MetaOp::WriteFull { path: path.to_string(), data: data.to_vec(), digests: digests.clone() },
+            MetaOp::WriteFull {
+                path: path.to_string(),
+                data: data.to_vec(),
+                digests: digests.clone(),
+                base_version: 0,
+            },
             digests,
         )
     }

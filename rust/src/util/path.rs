@@ -93,6 +93,13 @@ pub fn shadow_file_name(entry: &str, handle: u64) -> String {
     format!(".xufs.shadow.{handle}.{entry}")
 }
 
+/// True if the name is a write-handle shadow file (an orphan of a crash
+/// between `pwrite` and `close` — cleaned up by cache recovery; its
+/// unmerged bytes are gone per POSIX un-closed-write semantics).
+pub fn is_shadow_file(name: &str) -> bool {
+    name.starts_with(".xufs.shadow.")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

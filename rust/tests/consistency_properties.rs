@@ -31,7 +31,7 @@ fn random_op(rng: &mut Rng) -> MetaOp {
         2 => {
             let mut data = vec![0u8; rng.range(1, 4096) as usize];
             rng.fill_bytes(&mut data);
-            MetaOp::WriteFull { path, data, digests: vec![] }
+            MetaOp::WriteFull { path, data, digests: vec![], base_version: 0 }
         }
         3 => MetaOp::Truncate { path, size: rng.below(2048) },
         4 => MetaOp::SetMode { path, mode: 0o600 | (rng.below(0o77) as u32) },

@@ -1,0 +1,682 @@
+//! Disconnected-operation hardening: the randomized fault-schedule
+//! explorer plus directed failure-plane tests (DESIGN.md §2.5).
+//!
+//! The explorer drives 2 clients + 1 server through hundreds of seeded
+//! fault schedules — dropped/duplicated/delayed packets, torn transfers,
+//! multi-step partitions, server crash/restart, client crash/recovery —
+//! and checks the convergence invariants after a quiesce:
+//!
+//!   I1  no dirty block is ever lost: every surviving successful close is
+//!       byte-identical at the home space (last close wins);
+//!   I2  no op applies twice and nothing resurrects: each client's home
+//!       directory holds exactly the files the model predicts, with no
+//!       spurious conflict files;
+//!   I3  all replicas converge: after quiesce, every client reads every
+//!       file byte-identical to the home space.
+//!
+//! A failing schedule reproduces deterministically from its printed seed:
+//!
+//! ```text
+//! FAULT_SEED=<seed> cargo test --test fault_properties fault_schedule_explorer
+//! ```
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use xufs::client::{OpenFlags, ServerLink, Vfs, WritebackMode, XufsClient};
+use xufs::config::{FaultConfig, XufsConfig};
+use xufs::coordinator::{SimLink, SimWorld};
+use xufs::homefs::FsError;
+use xufs::metrics::names;
+use xufs::proto::LockKind;
+use xufs::simnet::{FaultEvent, FaultPlan, VirtualTime};
+use xufs::util::Rng;
+
+fn t(s: f64) -> VirtualTime {
+    VirtualTime::from_secs(s)
+}
+
+/// The chaos profile the explorer runs under: every fault class enabled
+/// at rates high enough that a 60-op schedule hits several of them.
+fn chaos_profile() -> FaultConfig {
+    FaultConfig {
+        enabled: true,
+        drop_request_p: 0.06,
+        drop_reply_p: 0.06,
+        duplicate_p: 0.05,
+        delay_p: 0.05,
+        delay_max_ms: 150,
+        interrupt_p: 0.05,
+        partition_p: 0.02,
+        partition_max_steps: 20,
+        server_crash_p: 0.01,
+        server_crash_max_steps: 12,
+        client_crash_p: 0.01,
+    }
+}
+
+/// Retry a mutating op until it succeeds, reconnecting between attempts
+/// (every attempt advances the fault schedule, so partitions drain).
+fn with_retries(
+    c: &mut XufsClient<SimLink>,
+    what: &str,
+    mut op: impl FnMut(&mut XufsClient<SimLink>) -> Result<(), FsError>,
+) -> Result<(), String> {
+    for _ in 0..25 {
+        if op(c).is_ok() {
+            return Ok(());
+        }
+        let _ = c.link_mut().reconnect();
+    }
+    Err(format!("{what} kept failing"))
+}
+
+fn read_all(c: &mut XufsClient<SimLink>, path: &str) -> Result<Vec<u8>, FsError> {
+    let fd = c.open(path, OpenFlags::rdonly())?;
+    let mut out = Vec::new();
+    let mut buf = vec![0u8; 8192];
+    loop {
+        match c.read(fd, &mut buf) {
+            Ok(0) => break,
+            Ok(n) => out.extend_from_slice(&buf[..n]),
+            Err(e) => {
+                let _ = c.close(fd);
+                return Err(e);
+            }
+        }
+    }
+    c.close(fd)?;
+    Ok(out)
+}
+
+/// One seeded schedule: randomized ops on 2 clients under the fault
+/// plane, then quiesce and check the convergence invariants.
+fn run_schedule(seed: u64, ops: usize) -> Result<(), String> {
+    let mut cfg = XufsConfig::default();
+    cfg.seed = seed;
+    cfg.fault = chaos_profile();
+    let mut world = SimWorld::new(cfg.clone());
+    world.home(|s| {
+        let now = VirtualTime::ZERO;
+        s.home_mut().mkdir_p("/home/u/c0", now).unwrap();
+        s.home_mut().mkdir_p("/home/u/c1", now).unwrap();
+        s.home_mut().write("/home/u/shared0", &vec![0xA5u8; 100_000], now).unwrap();
+        s.home_mut().write("/home/u/shared1", b"shared doc\n", now).unwrap();
+    });
+    // mount cleanly, then arm the fault plane on both links
+    let mut clients = Vec::new();
+    for _ in 0..2 {
+        let mut c = world.mount("/home/u").map_err(|e| format!("mount: {e}"))?;
+        c.writeback = WritebackMode::Async;
+        c.async_flush_threshold = 3;
+        clients.push(c);
+    }
+    let plan = Arc::new(Mutex::new(FaultPlan::new(seed, cfg.fault.clone())));
+    world.set_fault_plan(plan.clone());
+    for c in &mut clients {
+        c.link_mut().set_faults(plan.clone());
+    }
+
+    // expected home content per client dir, updated on every SUCCESSFUL
+    // local operation (each client writes a disjoint subtree, so the
+    // final home state is exactly the per-client last-close truth)
+    let mut model: Vec<BTreeMap<String, Vec<u8>>> = vec![BTreeMap::new(), BTreeMap::new()];
+    let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
+
+    for op_no in 0..ops as u64 {
+        let i = rng.below(2) as usize;
+        // a real client keeps trying to come back; every attempt also
+        // advances the schedule, so partitions and crashes always end
+        if !clients[i].link().is_connected() {
+            let _ = clients[i].link_mut().reconnect();
+        }
+        let file = format!("/home/u/c{i}/f{}", rng.below(4));
+        match rng.below(20) {
+            0..=7 | 18..=19 => {
+                // whole-file write of fresh unique content; the close is
+                // local (write-behind), so only rare flush-path errors
+                // need the retry
+                let mut data = vec![0u8; rng.range(16, 4096) as usize];
+                rng.fill_bytes(&mut data);
+                data.extend_from_slice(format!("#{seed}/{op_no}").as_bytes());
+                with_retries(&mut clients[i], &format!("write_file {file}"), |c| {
+                    c.write_file(&file, &data, 1024)
+                })?;
+                model[i].insert(file.clone(), data);
+            }
+            8..=9 => {
+                let _ = clients[i].scan_file(&file, 4096);
+            }
+            10..=11 => {
+                let _ = clients[i].scan_file(&format!("/home/u/shared{}", rng.below(2)), 8192);
+            }
+            12..=13 => {
+                if model[i].contains_key(&file) {
+                    with_retries(&mut clients[i], &format!("unlink {file}"), |c| {
+                        c.unlink(&file)
+                    })?;
+                    model[i].remove(&file);
+                }
+            }
+            14 => {
+                if model[i].contains_key(&file) {
+                    let to = format!("/home/u/c{i}/r{op_no}");
+                    with_retries(&mut clients[i], &format!("rename {file}"), |c| {
+                        c.rename(&file, &to)
+                    })?;
+                    let data = model[i].remove(&file).unwrap();
+                    model[i].insert(to, data);
+                }
+            }
+            15 => {
+                let _ = clients[i].fsync();
+            }
+            16 => {
+                world.server_tick();
+                clients[i].think(0.5);
+            }
+            _ => {
+                // spill-class write: exercises the by-reference op-log
+                // records surviving crashes
+                let mut data = vec![0u8; 300 * 1024];
+                rng.fill_bytes(&mut data[..64]);
+                data.extend_from_slice(format!("#{seed}/{op_no}").as_bytes());
+                with_retries(&mut clients[i], &format!("big write_file {file}"), |c| {
+                    c.write_file(&file, &data, 65536)
+                })?;
+                model[i].insert(file.clone(), data);
+            }
+        }
+        // scheduled client crashes: snapshot the cache space, drop the
+        // process, recover under the SAME identity from the durable log
+        // (take the events in their own statement — holding the plan
+        // lock across mount_recovered would deadlock on fault_step)
+        let events = plan.lock().unwrap().take_harness_events();
+        for ev in events {
+            let FaultEvent::ClientCrash { client } = ev;
+            let idx = client as usize % clients.len();
+            let snap = clients[idx].cache_store_snapshot();
+            let id = clients[idx].link().client_id();
+            let mut back = None;
+            for _ in 0..5000 {
+                if let Ok((c2, _corrupt)) = world.mount_recovered("/home/u", &snap, id) {
+                    back = Some(c2);
+                    break;
+                }
+            }
+            let Some(mut c2) = back else {
+                return Err("crashed client could not re-mount".into());
+            };
+            c2.writeback = WritebackMode::Async;
+            c2.async_flush_threshold = 3;
+            clients[idx] = c2;
+        }
+    }
+
+    // ---- quiesce: stop injecting, heal the world, drain every queue ----
+    plan.lock().unwrap().quiesce();
+    if !world.server.lock().unwrap().is_up() {
+        world.server_restart();
+    }
+    for c in clients.iter_mut() {
+        for _ in 0..50 {
+            if c.link().is_connected() {
+                break;
+            }
+            let _ = c.link_mut().reconnect();
+        }
+        if !c.link().is_connected() {
+            return Err("client could not reconnect during quiesce".into());
+        }
+        c.fsync().map_err(|e| format!("quiesce fsync: {e}"))?;
+    }
+    world.server_tick();
+    for c in clients.iter_mut() {
+        c.tick();
+        c.fsync().map_err(|e| format!("quiesce fsync 2: {e}"))?;
+        if c.queue_len() != 0 {
+            return Err(format!("queue not drained after quiesce: {} ops left", c.queue_len()));
+        }
+    }
+
+    // ---- invariants ----
+    for (i, m) in model.iter().enumerate() {
+        // I1: no dirty block lost, last close wins
+        for (path, want) in m {
+            let home = world
+                .home(|s| s.home().read(path).map(|d| d.to_vec()))
+                .map_err(|e| format!("I1: home lost {path}: {e}"))?;
+            if &home != want {
+                return Err(format!(
+                    "I1: home diverged at {path}: {} bytes vs expected {}",
+                    home.len(),
+                    want.len()
+                ));
+            }
+        }
+        // I2: nothing applied twice, nothing resurrected, no spurious
+        // conflicts in a single-writer subtree
+        let listing: Vec<String> = world
+            .home(|s| {
+                s.home()
+                    .readdir(&format!("/home/u/c{i}"))
+                    .map(|v| v.into_iter().map(|(n, _)| n).collect())
+            })
+            .map_err(|e| format!("I2: readdir c{i}: {e}"))?;
+        for name in &listing {
+            let p = format!("/home/u/c{i}/{name}");
+            if name.contains(".xufs-conflict-") {
+                return Err(format!("I2: spurious conflict file {p} in single-writer dir"));
+            }
+            if !m.contains_key(&p) {
+                return Err(format!("I2: unexpected file {p} at home"));
+            }
+        }
+        if listing.len() != m.len() {
+            return Err(format!(
+                "I2: c{i} home dir has {} entries, model has {}",
+                listing.len(),
+                m.len()
+            ));
+        }
+    }
+    // I3: every replica reads every file byte-identical to home
+    for ci in 0..clients.len() {
+        for m in &model {
+            for (path, want) in m {
+                let got = read_all(&mut clients[ci], path)
+                    .map_err(|e| format!("I3: client {ci} cannot read {path}: {e}"))?;
+                if &got != want {
+                    return Err(format!("I3: client {ci} reads stale/divergent {path}"));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn seed_override() -> Option<u64> {
+    std::env::var("FAULT_SEED").ok().and_then(|s| s.parse().ok())
+}
+
+fn explore(seeds: std::ops::Range<u64>, ops: usize) {
+    if let Some(seed) = seed_override() {
+        if let Err(msg) = run_schedule(seed, ops) {
+            panic!("schedule seed {seed} violated an invariant: {msg}");
+        }
+        return;
+    }
+    let mut failures: Vec<(u64, String)> = Vec::new();
+    let total = seeds.end - seeds.start;
+    for seed in seeds {
+        if let Err(msg) = run_schedule(seed, ops) {
+            failures.push((seed, msg));
+        }
+    }
+    if !failures.is_empty() {
+        let (seed, msg) = &failures[0];
+        panic!(
+            "{}/{} fault schedules violated invariants; first: seed {seed}: {msg}\n  \
+             reproduce: FAULT_SEED={seed} cargo test --test fault_properties fault_schedule_explorer",
+            failures.len(),
+            total,
+        );
+    }
+}
+
+/// The fast, deterministic fault matrix: 220 seeded schedules (CI's
+/// `fault-matrix` job runs exactly this).
+#[test]
+fn fault_schedule_explorer() {
+    explore(0xFA17_0000..0xFA17_0000 + 220, 60);
+}
+
+/// The nightly-class long run: more seeds, longer schedules.
+#[test]
+#[ignore = "long fault matrix; run with --ignored (nightly CI) or FAULT_SEED=<seed> for one schedule"]
+fn fault_schedule_explorer_long() {
+    explore(0xFA17_8000..0xFA17_8000 + 1000, 120);
+}
+
+// ---------------------------------------------------------------------
+// directed failure-plane tests
+// ---------------------------------------------------------------------
+
+/// Flagship disconnected-conflict case: the home copy changes while a
+/// disconnected client edits the same file. On reconnect the client's
+/// close wins (last-close-wins), but the home-side edit is preserved as
+/// a `.xufs-conflict-<client>-<seq>` file instead of being silently dropped.
+#[test]
+fn disconnected_conflict_preserves_loser_at_home() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/doc", b"draft at home\n", t(0.0)).unwrap();
+    });
+    let mut c = world.mount("/home/u").unwrap();
+    c.scan_file("/home/u/doc", 1024).unwrap();
+    c.link_mut().set_network(false);
+    c.write_file("/home/u/doc", b"edited at the site while offline\n", 1024).unwrap();
+    assert!(c.queue_len() > 0, "disconnected close queues the write");
+    // the user edits the same file at home during the outage
+    world.home(|s| s.local_write("/home/u/doc", b"edited at home during the outage\n", t(5.0)).unwrap());
+    c.link_mut().set_network(true);
+    c.link_mut().reconnect().unwrap();
+    c.fsync().unwrap();
+    assert_eq!(c.queue_len(), 0);
+    // last close wins at the path itself...
+    let home = world.home(|s| s.home().read("/home/u/doc").unwrap().to_vec());
+    assert_eq!(home, b"edited at the site while offline\n");
+    // ...and the loser survives beside it
+    let conflicts: Vec<String> = world.home(|s| {
+        s.home()
+            .readdir("/home/u")
+            .unwrap()
+            .into_iter()
+            .map(|(n, _)| n)
+            .filter(|n| n.contains(".xufs-conflict-"))
+            .collect()
+    });
+    assert_eq!(conflicts.len(), 1, "exactly one conflict file: {conflicts:?}");
+    let loser =
+        world.home(|s| s.home().read(&format!("/home/u/{}", conflicts[0])).unwrap().to_vec());
+    assert_eq!(loser, b"edited at home during the outage\n");
+    assert_eq!(world.metrics.counter(names::CONFLICT_FILES), 1);
+}
+
+/// An uncontended disconnected replay (home copy untouched during the
+/// outage) must not leave a conflict file even though the write carries
+/// conflict-detection context.
+#[test]
+fn uncontended_disconnected_replay_leaves_no_conflict() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/doc", b"v1", t(0.0)).unwrap();
+    });
+    let mut c = world.mount("/home/u").unwrap();
+    c.scan_file("/home/u/doc", 1024).unwrap();
+    c.link_mut().set_network(false);
+    c.write_file("/home/u/doc", b"offline edit", 1024).unwrap();
+    // nothing edits the file at home during the outage: on replay the
+    // base version still matches the server's, so even though the write
+    // carries conflict-detection context, no conflict is recorded
+    c.link_mut().set_network(true);
+    c.link_mut().reconnect().unwrap();
+    c.fsync().unwrap();
+    let names_at_home: Vec<String> =
+        world.home(|s| s.home().readdir("/home/u").unwrap().into_iter().map(|(n, _)| n).collect());
+    assert!(
+        names_at_home.iter().all(|n| !n.contains(".xufs-conflict-")),
+        "no conflict for an uncontended replay: {names_at_home:?}"
+    );
+    assert_eq!(world.metrics.counter(names::CONFLICT_FILES), 0);
+}
+
+/// Satellite regression: replay must SKIP ops whose target vanished
+/// while disconnected instead of erroring the whole queue — both when
+/// the target's parent was removed at home, and when the client itself
+/// unlinked the file behind a queued write.
+#[test]
+fn ghost_replay_skips_vanished_targets_and_drains_queue() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u/sub", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/sub/f", b"cached", t(0.0)).unwrap();
+    });
+    let mut c = world.mount("/home/u").unwrap();
+    c.writeback = WritebackMode::Async;
+    c.async_flush_threshold = usize::MAX;
+    c.scan_file("/home/u/sub/f", 1024).unwrap();
+    c.link_mut().set_network(false);
+    // ghost class 1: queued write whose home-side parent dir vanishes
+    c.write_file("/home/u/sub/f", b"offline", 1024).unwrap();
+    // ghost class 2: the client itself unlinks behind its queued write
+    c.write_file("/home/u/gone.txt", b"create, write...", 1024).unwrap();
+    c.unlink("/home/u/gone.txt").unwrap();
+    // an innocent bystander queued after the ghosts
+    c.write_file("/home/u/kept.txt", b"survives", 1024).unwrap();
+    // meanwhile the user removes /home/u/sub at home entirely
+    world.home(|s| {
+        s.home_mut().unlink("/home/u/sub/f", t(5.0)).unwrap();
+        s.home_mut().rmdir("/home/u/sub", t(5.0)).unwrap();
+    });
+    c.link_mut().set_network(true);
+    c.link_mut().reconnect().unwrap();
+    c.fsync().unwrap();
+    assert_eq!(c.queue_len(), 0, "ghosts must not wedge the queue");
+    assert!(c.metrics().counter(names::METAQ_REPLAY_SKIPPED) >= 1);
+    world.home(|s| {
+        assert!(!s.home().exists("/home/u/sub/f"));
+        assert!(!s.home().exists("/home/u/gone.txt"));
+        assert_eq!(s.home().read("/home/u/kept.txt").unwrap(), b"survives");
+    });
+}
+
+/// Acceptance: a client crash with a non-empty durable op log replays to
+/// a byte-identical namespace on restart — including spill-class writes
+/// recovered by reference — and replaying ops the server already applied
+/// (lost replies) does not re-apply them.
+#[test]
+fn client_crash_with_dirty_oplog_replays_byte_identical() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+    });
+    let mut c = world.mount("/home/u").unwrap();
+    c.writeback = WritebackMode::Async;
+    c.async_flush_threshold = usize::MAX;
+    let mut rng = Rng::new(0xD1E);
+    let mut big = vec![0u8; 400 * 1024];
+    rng.fill_bytes(&mut big);
+    c.write_file("/home/u/small.txt", b"small dirty write", 1024).unwrap();
+    c.write_file("/home/u/big.bin", &big, 65536).unwrap();
+    c.write_file("/home/u/victim.txt", b"doomed", 1024).unwrap();
+    c.unlink("/home/u/victim.txt").unwrap();
+    c.rename("/home/u/small.txt", "/home/u/renamed.txt").unwrap();
+    assert!(c.queue_len() > 0, "the durable op log is non-empty");
+    // crash before any flush; the cache space (parallel FS) survives
+    let snap = c.cache_store_snapshot();
+    let id = c.link().client_id();
+    drop(c);
+    let (c2, corrupt) = world.mount_recovered("/home/u", &snap, id).unwrap();
+    assert_eq!(corrupt, 0);
+    assert_eq!(c2.queue_len(), 0, "recovery replays the whole log");
+    world.home(|s| {
+        assert_eq!(s.home().read("/home/u/renamed.txt").unwrap(), b"small dirty write");
+        assert_eq!(s.home().read("/home/u/big.bin").unwrap(), &big[..]);
+        assert!(!s.home().exists("/home/u/victim.txt"));
+        assert!(!s.home().exists("/home/u/small.txt"));
+    });
+
+    // now the lost-reply shape: everything applies server-side but no
+    // ack comes back; a crash + recovery replays duplicates, which the
+    // idempotence watermark must swallow without re-applying
+    let mut c2 = c2;
+    c2.writeback = WritebackMode::Async;
+    c2.async_flush_threshold = usize::MAX;
+    c2.write_file("/home/u/twice.txt", b"must apply exactly once", 1024).unwrap();
+    let reply_loss = FaultConfig { enabled: true, drop_reply_p: 1.0, ..Default::default() };
+    let plan = Arc::new(Mutex::new(FaultPlan::new(7, reply_loss)));
+    world.set_fault_plan(plan.clone());
+    c2.link_mut().set_faults(plan.clone());
+    let _ = c2.fsync(); // applied at the server; replies lost
+    assert!(c2.queue_len() > 0, "no acks -> ops stay queued");
+    let v_applied = world.home(|s| s.home().stat("/home/u/twice.txt").unwrap().version);
+    plan.lock().unwrap().quiesce();
+    let snap2 = c2.cache_store_snapshot();
+    let id2 = c2.link().client_id();
+    drop(c2);
+    let (c3, corrupt2) = world.mount_recovered("/home/u", &snap2, id2).unwrap();
+    assert_eq!(corrupt2, 0);
+    assert_eq!(c3.queue_len(), 0);
+    world.home(|s| {
+        assert_eq!(s.home().read("/home/u/twice.txt").unwrap(), b"must apply exactly once");
+        assert_eq!(
+            s.home().stat("/home/u/twice.txt").unwrap().version,
+            v_applied,
+            "duplicate replay must not re-apply (version bump) the write"
+        );
+    });
+}
+
+/// Satellite: crash-recovery of the residency map under 10 seeds — a
+/// client killed between `pwrite` and `close` loses only the unmerged
+/// shadow bytes (cleaned up by recovery), while exactly the entries
+/// whose persisted residency token was torn demote to Invalid.
+#[test]
+fn residency_recovery_demotes_exactly_torn_entries() {
+    for seed in 0..10u64 {
+        let mut world = SimWorld::new(XufsConfig::default());
+        let mut originals: Vec<Vec<u8>> = Vec::new();
+        let mut rng = Rng::new(0xBEEF ^ seed);
+        world.home(|s| {
+            s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        });
+        for i in 0..6 {
+            let mut data = vec![0u8; 150_000];
+            rng.fill_bytes(&mut data);
+            world.home(|s| {
+                s.home_mut().write(&format!("/home/u/f{i}"), &data, t(0.0)).unwrap()
+            });
+            originals.push(data);
+        }
+        let mut c = world.mount("/home/u").unwrap();
+        for i in 0..6 {
+            c.scan_file(&format!("/home/u/f{i}"), 65536).unwrap();
+        }
+        // interrupted writers: pwrite lands in the shadow, close never runs
+        let mut torn_writes = Vec::new();
+        for i in 0..3usize {
+            if rng.chance(0.6) {
+                let fd = c.open(&format!("/home/u/f{i}"), OpenFlags::rdwr()).unwrap();
+                c.pwrite(fd, &vec![0xEE; 1000], 64 * 1024 * (i as u64 % 2)).unwrap();
+                torn_writes.push(i);
+                // fd intentionally left open: the crash happens here
+            }
+        }
+        let mut snap = c.cache_store_snapshot();
+        let id = c.link().client_id();
+        drop(c);
+        let had_shadows =
+            snap.walk("/").unwrap().iter().any(|(p, _)| p.contains(".xufs.shadow."));
+        assert_eq!(
+            had_shadows,
+            !torn_writes.is_empty(),
+            "seed {seed}: interrupted writers leave shadows behind"
+        );
+        // torn attr files: the crash tore the persisted residency token
+        // of some OTHER entries mid-write
+        let mut torn_tokens = Vec::new();
+        for i in 3..6usize {
+            if rng.chance(0.6) {
+                let apath = format!("/home/u/.xufs.attr.f{i}");
+                let txt = String::from_utf8_lossy(snap.read(&apath).unwrap()).to_string();
+                let bad = txt.replace("\"residency\":\"", "\"residency\":\"!torn ");
+                assert_ne!(bad, txt, "tamper must hit the residency token");
+                snap.write(&apath, bad.as_bytes(), t(9.0)).unwrap();
+                torn_tokens.push(i);
+            }
+        }
+        let demoted_before = world.metrics.counter(names::CACHE_RECOVER_DEMOTED);
+        let (mut c2, corrupt) = world.mount_recovered("/home/u", &snap, id).unwrap();
+        assert_eq!(corrupt, 0, "seed {seed}: the op log itself is intact");
+        assert_eq!(
+            world.metrics.counter(names::CACHE_RECOVER_DEMOTED) - demoted_before,
+            torn_tokens.len() as u64,
+            "seed {seed}: recover() demotes exactly the torn entries"
+        );
+        assert_eq!(c2.queue_len(), 0, "seed {seed}: un-closed writes queue nothing");
+        // torn-token entries are Invalid (refetched on demand); everything
+        // reads back the ORIGINAL content — unmerged pwrites are gone per
+        // POSIX un-closed-write semantics
+        for i in &torn_tokens {
+            let state = c2.cache().entry(&format!("/home/u/f{i}")).unwrap().state;
+            assert_eq!(state, xufs::cache::EntryState::Invalid, "seed {seed}: f{i}");
+        }
+        for i in 0..6usize {
+            let got = read_all(&mut c2, &format!("/home/u/f{i}")).unwrap();
+            assert_eq!(got, originals[i], "seed {seed}: f{i} content");
+        }
+        // orphaned shadow files were swept by recovery
+        let store = c2.cache_store_snapshot();
+        let shadows: Vec<String> = store
+            .walk("/")
+            .unwrap()
+            .into_iter()
+            .map(|(p, _)| p)
+            .filter(|p| p.contains(".xufs.shadow."))
+            .collect();
+        assert!(shadows.is_empty(), "seed {seed}: orphaned shadows remain: {shadows:?}");
+    }
+}
+
+/// Satellite: a lock lease lapses while its holder is partitioned away.
+/// The server frees the lock for others; after the partition heals the
+/// old holder must revalidate before serving cached reads.
+#[test]
+fn lease_expiry_during_partition_forces_revalidation() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/doc", b"locked content v1", t(0.0)).unwrap();
+    });
+    let mut a = world.mount("/home/u").unwrap();
+    let mut b = world.mount("/home/u").unwrap();
+    a.scan_file("/home/u/doc", 1024).unwrap();
+    let fd_a = a.open("/home/u/doc", OpenFlags::rdonly()).unwrap();
+    a.lock(fd_a, LockKind::Exclusive).unwrap();
+    // partition the holder for far longer than the 30 s lease
+    a.link_mut().set_network(false);
+    a.think(120.0);
+    world.server_tick();
+    assert!(world.metrics.counter(names::LEASE_EXPIRED) >= 1, "orphan lease expired");
+    // the lock is free: the other client takes it and rewrites the file
+    let fd_b = b.open("/home/u/doc", OpenFlags::rdonly()).unwrap();
+    b.lock(fd_b, LockKind::Exclusive).unwrap();
+    b.unlock(fd_b).unwrap();
+    b.close(fd_b).unwrap();
+    b.write_file("/home/u/doc", b"rewritten while a was away", 1024).unwrap();
+    // the partition heals; the old holder reconnects
+    a.link_mut().set_network(true);
+    a.link_mut().reconnect().unwrap();
+    let rpcs_before = world.wan.stats().rpcs;
+    let got = read_all(&mut a, "/home/u/doc").unwrap();
+    assert_eq!(got, b"rewritten while a was away", "stale cache must not be served blind");
+    assert!(
+        world.wan.stats().rpcs > rpcs_before,
+        "the read after reconnect must revalidate over the WAN"
+    );
+    // releasing the dead lease is a no-op server-side, not an error
+    a.close(fd_a).unwrap();
+    // and a fresh lock acquire succeeds now that the orphan is gone
+    let fd_a2 = a.open("/home/u/doc", OpenFlags::rdonly()).unwrap();
+    a.lock(fd_a2, LockKind::Exclusive).unwrap();
+    a.close(fd_a2).unwrap();
+}
+
+/// Torn bulk transfers resume instead of restarting: with every range
+/// fetch interrupted mid-flight, a multi-block scan still completes and
+/// verifies, with the resumes surfaced in metrics.
+#[test]
+fn interrupted_transfers_resume_and_complete() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    let mut data = vec![0u8; 2 << 20];
+    let mut rng = Rng::new(42);
+    rng.fill_bytes(&mut data);
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/big.bin", &data, t(0.0)).unwrap();
+    });
+    let mut c = world.mount("/home/u").unwrap();
+    let torn_only = FaultConfig { enabled: true, interrupt_p: 1.0, ..Default::default() };
+    let plan = Arc::new(Mutex::new(FaultPlan::new(3, torn_only)));
+    world.set_fault_plan(plan.clone());
+    c.link_mut().set_faults(plan.clone());
+    let got = read_all(&mut c, "/home/u/big.bin").unwrap();
+    assert_eq!(got, data, "resumed fetch must be byte-identical");
+    assert!(
+        c.metrics().counter(names::RESUMED_FETCHES) > 0,
+        "every transfer was torn; resumes must show up in metrics"
+    );
+}
