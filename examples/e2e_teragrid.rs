@@ -57,7 +57,7 @@ fn phase_sim() {
     // 1) develop at home: the source tree + input data live on the laptop
     let spec = buildtree::BuildSpec::default();
     world.home(|s| {
-        buildtree::generate_tree(s.home_mut(), "/home/sci/code", &spec, 7).unwrap();
+        buildtree::generate_tree(&mut s.home_mut(), "/home/sci/code", &spec, 7).unwrap();
         let input = largefile::text_content(64 << 20, 96, 11);
         s.home_mut().mkdir_p("/home/sci/data", VirtualTime::ZERO).unwrap();
         s.home_mut().write("/home/sci/data/input.dat", &input, VirtualTime::ZERO).unwrap();
@@ -166,19 +166,19 @@ fn phase_tcp() {
         home.write(&format!("/home/sci/small{i:02}.txt"), format!("note {i}\n").as_bytes(), VirtualTime::ZERO)
             .unwrap();
     }
-    let server = Arc::new(Mutex::new(FileServer::new(
+    let cfg = XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() };
+    let server = Arc::new(FileServer::new(
         home,
         DiskModel::new(1e12, 0.0), // real I/O is real; no modeled delay
         engine.clone(),
         64 * 1024,
         30.0,
+        cfg.server.shards,
         metrics.clone(),
-    )));
+    ));
     let auth = Arc::new(Mutex::new(Authenticator::new(pair.clone(), 5)));
     let tcp = TcpServer::spawn(server.clone(), auth, metrics.clone()).expect("bind");
     println!("server     : listening on {}", tcp.addr);
-
-    let cfg = XufsConfig { artifacts_dir: "artifacts".into(), ..Default::default() };
     let link = TcpLink::connect(tcp.addr, pair.clone(), cfg.clone(), 1, "/home/sci", metrics.clone())
         .expect("connect");
     let clock = Arc::new(RealClock::new());
@@ -214,13 +214,11 @@ fn phase_tcp() {
 
     // write-back over the real protocol + cross-check at the server
     client.write_file("/home/sci/from_site.txt", b"written via TCP link", 4096).unwrap();
-    let ok = server.lock().unwrap().home().read("/home/sci/from_site.txt").unwrap() == b"written via TCP link";
+    let ok = server.home().read("/home/sci/from_site.txt").unwrap() == b"written via TCP link";
     println!("writeback  : applied at the server over TCP: {ok}");
 
     // push-mode callback: a home-side edit invalidates the cached copy
     server
-        .lock()
-        .unwrap()
         .local_write("/home/sci/small00.txt", b"changed under you\n", VirtualTime::from_secs(1.0))
         .unwrap();
     std::thread::sleep(std::time::Duration::from_millis(100)); // callback pump

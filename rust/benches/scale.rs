@@ -1,0 +1,31 @@
+//! Scale-harness runner: prints the N-client sharded-vs-single-lock
+//! table, regenerates `BENCH_scale.json` at the repo root — the
+//! cross-PR record of server-side concurrency (DESIGN.md §2.6) — and
+//! ENFORCES the acceptance criterion (>= 3x aggregate ops/s at
+//! 8 clients for the sharded core over the `shards = 1` ablation), so a
+//! regression that re-serializes the server fails this run instead of
+//! silently recording a flat table.
+//!
+//! `QUICK=1` shrinks the per-point measurement window for smoke runs.
+
+use xufs::bench::scale::{speedup_at_8, ACCEPT_SPEEDUP_AT_8};
+use xufs::bench::run_scale;
+use xufs::config::XufsConfig;
+
+fn main() {
+    let quick = std::env::var("QUICK").is_ok();
+    let window = if quick { 0.15 } else { 0.6 };
+    let cfg = XufsConfig::default();
+    let t = run_scale(&cfg, window);
+    t.print();
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_scale.json");
+    std::fs::write(&path, format!("{}\n", t.to_json())).expect("write BENCH_scale.json");
+    println!("wrote {}", path.display());
+    let speedup = speedup_at_8(&t).expect("table has an 8-client sharded row");
+    assert!(
+        speedup >= ACCEPT_SPEEDUP_AT_8,
+        "sharded server speedup at 8 clients is {speedup:.2}x, below the \
+         {ACCEPT_SPEEDUP_AT_8}x acceptance bar — the concurrent core has re-serialized"
+    );
+    println!("acceptance: {speedup:.2}x at 8 clients (>= {ACCEPT_SPEEDUP_AT_8}x) OK");
+}

@@ -2,7 +2,7 @@
 //! parallel file system, a plain local parallel FS, an NFS-style
 //! check-on-open client (consistency-protocol ablation), and the TGCP /
 //! SCP copy commands of Table 2. All file systems implement the same
-//! [`Vfs`] the workloads drive, over the same WAN/disk models as XUFS —
+//! [`Vfs`](crate::client::Vfs) the workloads drive, over the same WAN/disk models as XUFS —
 //! only the protocol behaviour differs (DESIGN.md §2).
 
 mod gpfswan;

@@ -6,6 +6,7 @@
 
 pub mod figures;
 pub mod report;
+pub mod scale;
 
 pub use figures::{
     run_ablation_compound, run_ablation_consistency, run_ablation_delta, run_ablation_paging,
@@ -13,3 +14,4 @@ pub use figures::{
     run_fig5_table2, run_table1,
 };
 pub use report::Table;
+pub use scale::{run_scale, run_scale_point, ScalePoint};

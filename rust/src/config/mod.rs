@@ -173,6 +173,23 @@ impl Default for FaultConfig {
     }
 }
 
+/// File-server concurrency parameters (DESIGN.md §2.6).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServerConfig {
+    /// Namespace shard count: per-path server state (digest cache, lock
+    /// table, replay watermarks, callback fanout) splits into this many
+    /// independently locked shards, routed by canonical-path hash.
+    /// `1` reproduces the old single-lock server (the scale ablation
+    /// baseline); the default 8 matches the paper's many-client claim.
+    pub shards: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { shards: 8 }
+    }
+}
+
 /// Disk / parallel-FS models for each side (DESIGN.md §5).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DiskConfig {
@@ -211,6 +228,7 @@ pub struct XufsConfig {
     pub lease: LeaseConfig,
     pub disk: DiskConfig,
     pub fault: FaultConfig,
+    pub server: ServerConfig,
     /// Directory holding AOT HLO artifacts (empty => native digest engine).
     pub artifacts_dir: String,
     /// Deterministic seed for workloads / jitter.
@@ -266,6 +284,7 @@ impl XufsConfig {
                     cfg.fault.server_crash_max_steps = value.as_u64()? as u32
                 }
                 "fault.client_crash_p" => cfg.fault.client_crash_p = value.as_f64()?,
+                "server.shards" => cfg.server.shards = value.as_usize()?.max(1),
                 "artifacts_dir" => cfg.artifacts_dir = value.as_str()?.to_string(),
                 "seed" => cfg.seed = value.as_u64()?,
                 other => {
@@ -332,6 +351,16 @@ localized_dirs = "/scratch/out:/scratch/tmp"
         let c = XufsConfig::from_toml(text).unwrap();
         assert_eq!(c.cache.budget_bytes, 1 << 20);
         assert_eq!(c.cache.readahead_blocks, 8);
+    }
+
+    #[test]
+    fn parse_server_keys() {
+        let c = XufsConfig::from_toml("[server]\nshards = 4\n").unwrap();
+        assert_eq!(c.server.shards, 4);
+        // shards = 0 would deadlock routing; it clamps to the ablation value
+        let c = XufsConfig::from_toml("[server]\nshards = 0\n").unwrap();
+        assert_eq!(c.server.shards, 1);
+        assert_eq!(XufsConfig::default().server.shards, 8);
     }
 
     #[test]

@@ -1,9 +1,16 @@
-//! Real-TCP deployment: the same [`FileServer`] / [`XufsClient`] logic over
+//! Real-TCP deployment: the same [`FileServer`] /
+//! [`XufsClient`](crate::client::XufsClient) logic over
 //! actual sockets on localhost, with the full USSH challenge-response
 //! handshake per connection, genuinely parallel striped range-fetches, and
 //! a push-mode callback channel fed by a pump thread. Used by integration
 //! tests and the e2e example to prove the protocol works outside the
 //! simulator.
+//!
+//! Since the sharded-server refactor (DESIGN.md §2.6) the server is
+//! shared as a bare `Arc<FileServer>`: each connection thread dispatches
+//! [`FileServer::handle`] directly, serializing only on the namespace
+//! shard its request routes to — concurrent clients on different
+//! subtrees are served genuinely in parallel.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -64,7 +71,7 @@ pub struct TcpServer {
 impl TcpServer {
     /// Bind on an ephemeral localhost port and serve until dropped.
     pub fn spawn(
-        server: Arc<Mutex<FileServer>>,
+        server: Arc<FileServer>,
         authenticator: Arc<Mutex<Authenticator>>,
         metrics: Metrics,
     ) -> std::io::Result<TcpServer> {
@@ -76,7 +83,17 @@ impl TcpServer {
         let accept_thread = std::thread::spawn(move || {
             let clock = RealClock::new();
             let mut conn_threads: Vec<JoinHandle<()>> = Vec::new();
+            // housekeeping: with per-shard lock tables, a conflicting
+            // acquire only sweeps its own shard — this periodic tick is
+            // what frees orphaned leases on otherwise-quiet shards (the
+            // sim deployment's `server_tick` equivalent; the paper runs
+            // it from the server's background thread)
+            let mut last_sweep = std::time::Instant::now();
             while !stop2.load(Ordering::SeqCst) {
+                if last_sweep.elapsed() >= Duration::from_secs(1) {
+                    server.expire_leases(clock.now());
+                    last_sweep = std::time::Instant::now();
+                }
                 match listener.accept() {
                     Ok((stream, _)) => {
                         let server = server.clone();
@@ -149,7 +166,7 @@ fn server_handshake(
 
 fn serve_connection(
     mut stream: TcpStream,
-    server: Arc<Mutex<FileServer>>,
+    server: Arc<FileServer>,
     authenticator: Arc<Mutex<Authenticator>>,
     metrics: Metrics,
     clock: RealClock,
@@ -178,15 +195,12 @@ fn serve_connection(
         // callback channel: attach a fresh channel and pump events out.
         if let Request::RegisterCallback { root, client_id } = &req {
             let channel = NotifyChannel::new();
-            let resp = {
-                let mut s = server.lock().unwrap();
-                s.attach_channel(*client_id, channel.clone());
-                s.handle(
-                    *client_id,
-                    Request::RegisterCallback { root: root.clone(), client_id: *client_id },
-                    clock.now(),
-                )
-            };
+            server.attach_channel(*client_id, channel.clone());
+            let resp = server.handle(
+                *client_id,
+                Request::RegisterCallback { root: root.clone(), client_id: *client_id },
+                clock.now(),
+            );
             write_frame(&mut stream, &resp.encode())?;
             // push mode until the peer hangs up
             loop {
@@ -202,7 +216,9 @@ fn serve_connection(
                 std::thread::sleep(Duration::from_millis(2));
             }
         }
-        let resp = server.lock().unwrap().handle(session, req, clock.now());
+        // no global server lock: the sharded core serializes internally,
+        // so connection threads for different subtrees run in parallel
+        let resp = server.handle(session, req, clock.now());
         write_frame(&mut stream, &resp.encode())?;
     }
 }

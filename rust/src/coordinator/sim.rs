@@ -25,10 +25,15 @@ use crate::vdisk::DiskModel;
 
 /// The simulated deployment: one home-space server, any number of mounted
 /// clients, one WAN.
+///
+/// The server is the sharded concurrent core (DESIGN.md §2.6) shared as
+/// a bare `Arc` — no global lock. The sim's single-threaded interleaving
+/// of multi-client steps exercises the same per-shard routing the
+/// threaded TCP deployment runs concurrently.
 pub struct SimWorld {
     pub clock: SimClock,
     pub wan: Arc<Wan>,
-    pub server: Arc<Mutex<FileServer>>,
+    pub server: Arc<FileServer>,
     pub auth: Arc<Mutex<Authenticator>>,
     pub engine: Arc<DigestEngine>,
     pub cfg: XufsConfig,
@@ -59,12 +64,13 @@ impl SimWorld {
             engine.clone(),
             cfg.stripe.min_block as usize,
             cfg.lease.duration_s,
+            cfg.server.shards,
             metrics.clone(),
         );
         SimWorld {
             clock,
             wan,
-            server: Arc::new(Mutex::new(server)),
+            server: Arc::new(server),
             auth: Arc::new(Mutex::new(Authenticator::new(pair.clone(), cfg.seed ^ 0xA0A0))),
             engine,
             cfg,
@@ -87,9 +93,10 @@ impl SimWorld {
     }
 
     /// Direct access to the home space (pre-populating workloads, and the
-    /// "user edits a file at home" side of consistency tests).
-    pub fn home<R>(&self, f: impl FnOnce(&mut FileServer) -> R) -> R {
-        f(&mut self.server.lock().unwrap())
+    /// "user edits a file at home" side of consistency tests). The server
+    /// takes `&self`; `FileServer::home_mut` hands out store write guards.
+    pub fn home<R>(&self, f: impl FnOnce(&FileServer) -> R) -> R {
+        f(&self.server)
     }
 
     /// USSH login + mount: authenticate, open the control + callback
@@ -170,25 +177,25 @@ impl SimWorld {
 
     /// Simulate a server crash (process dies; home disk survives).
     pub fn server_crash(&self) {
-        self.server.lock().unwrap().crash();
+        self.server.crash();
     }
 
     /// Server restarted (paper: by crontab).
     pub fn server_restart(&self) {
-        self.server.lock().unwrap().restart();
+        self.server.restart();
     }
 
     /// Housekeeping tick (lease expiry, as the server's background thread).
     pub fn server_tick(&self) {
         let now = self.clock.now();
-        self.server.lock().unwrap().expire_leases(now);
+        self.server.expire_leases(now);
     }
 }
 
 /// Simulated transport: direct calls into the shared server, with WAN time
 /// accounted against the virtual clock, plus auth + callback channel.
 pub struct SimLink {
-    server: Arc<Mutex<FileServer>>,
+    server: Arc<FileServer>,
     auth: Arc<Mutex<Authenticator>>,
     wan: Arc<Wan>,
     clock: SimClock,
@@ -222,10 +229,10 @@ impl SimLink {
         let Some(plan) = &self.faults else { return StepOutcome::default() };
         let out = plan.lock().unwrap().step();
         if out.server_restart {
-            self.server.lock().unwrap().restart();
+            self.server.restart();
         }
         if out.server_crash {
-            self.server.lock().unwrap().crash();
+            self.server.crash();
         }
         if out.partitioned {
             self.metrics.incr(names::FAULT_PARTITIONED_OPS);
@@ -258,7 +265,7 @@ impl SimLink {
         if out.partitioned || matches!(out.action, Some(FaultAction::DropRequest)) {
             return Err(FsError::Disconnected);
         }
-        if !self.net_up || !self.server.lock().unwrap().is_up() {
+        if !self.net_up || !self.server.is_up() {
             return Err(FsError::Disconnected);
         }
         self.data_conns_warm = false;
@@ -283,15 +290,12 @@ impl SimLink {
         };
         self.session = Some(session);
         // attach + register the callback channel
-        {
-            let mut s = self.server.lock().unwrap();
-            s.attach_channel(self.client_id, self.channel.clone());
-            s.handle(
-                self.client_id,
-                Request::RegisterCallback { root: self.root.clone(), client_id: self.client_id },
-                self.clock.now(),
-            );
-        }
+        self.server.attach_channel(self.client_id, self.channel.clone());
+        self.server.handle(
+            self.client_id,
+            Request::RegisterCallback { root: self.root.clone(), client_id: self.client_id },
+            self.clock.now(),
+        );
         self.wan.rpc(&self.clock, 64, 16);
         Ok(())
     }
@@ -314,7 +318,7 @@ impl SimLink {
         if !self.net_up || self.session.is_none() {
             return Err(FsError::Disconnected);
         }
-        if !self.server.lock().unwrap().is_up() {
+        if !self.server.is_up() {
             return Err(FsError::Disconnected);
         }
         Ok(())
@@ -344,10 +348,8 @@ impl ServerLink for SimLink {
                 // the server APPLIES the request; only the reply is lost.
                 // The client must treat this exactly like a drop — which
                 // is why replay has to be idempotent.
-                let mut s = self.server.lock().unwrap();
-                s.disk.op(&self.clock);
-                let _ = s.handle(self.client_id, req, self.clock.now());
-                drop(s);
+                self.server.disk.op(&self.clock);
+                let _ = self.server.handle(self.client_id, req, self.clock.now());
                 self.wan.rpc(&self.clock, req_bytes, 0);
                 return Err(FsError::Disconnected);
             }
@@ -365,13 +367,11 @@ impl ServerLink for SimLink {
                         | Request::LockRenew { .. }
                         | Request::LockRelease { .. }
                 );
-                let mut s = self.server.lock().unwrap();
-                s.disk.op(&self.clock);
+                self.server.disk.op(&self.clock);
                 if duplicable {
-                    let _ = s.handle(self.client_id, req.clone(), self.clock.now());
+                    let _ = self.server.handle(self.client_id, req.clone(), self.clock.now());
                 }
-                let resp = s.handle(self.client_id, req, self.clock.now());
-                drop(s);
+                let resp = self.server.handle(self.client_id, req, self.clock.now());
                 self.wan.rpc(&self.clock, req_bytes, resp.wire_bytes());
                 self.metrics.add(names::WAN_RPCS, 1);
                 return Ok(resp);
@@ -379,12 +379,9 @@ impl ServerLink for SimLink {
             // a torn bulk transfer does not apply to small control RPCs
             Some(FaultAction::Interrupt) | Some(FaultAction::Delay { .. }) | None => {}
         }
-        let resp = {
-            let mut s = self.server.lock().unwrap();
-            // server-side disk op for metadata service
-            s.disk.op(&self.clock);
-            s.handle(self.client_id, req, self.clock.now())
-        };
+        // server-side disk op for metadata service
+        self.server.disk.op(&self.clock);
+        let resp = self.server.handle(self.client_id, req, self.clock.now());
         self.wan.rpc(&self.clock, req_bytes, resp.wire_bytes());
         self.metrics.add(names::WAN_RPCS, 1);
         Ok(resp)
@@ -409,13 +406,12 @@ impl ServerLink for SimLink {
             return Err(FsError::Disconnected);
         }
         let resp = {
-            let mut s = self.server.lock().unwrap();
             let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
-            let r = s.handle(self.client_id, req, self.clock.now());
+            let r = self.server.handle(self.client_id, req, self.clock.now());
             if let Response::FileBlocks { extents, .. } = &r {
                 // server reads the blocks off its disk
                 let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();
-                s.disk.io(&self.clock, bytes);
+                self.server.disk.io(&self.clock, bytes);
             }
             r
         };
@@ -493,20 +489,19 @@ impl ServerLink for SimLink {
         }
         let mut images = Vec::with_capacity(files.len());
         let mut sizes = Vec::with_capacity(files.len());
-        {
-            let mut s = self.server.lock().unwrap();
-            for (path, _size) in files {
-                if let Response::File { image } =
-                    s.handle(self.client_id, Request::Fetch { path: path.clone() }, self.clock.now())
-                {
-                    sizes.push(image.data.len() as u64 + 256);
-                    images.push(image);
-                }
+        for (path, _size) in files {
+            if let Response::File { image } = self.server.handle(
+                self.client_id,
+                Request::Fetch { path: path.clone() },
+                self.clock.now(),
+            ) {
+                sizes.push(image.data.len() as u64 + 256);
+                images.push(image);
             }
-            // server disk: sequential read of all prefetched bytes
-            let total: u64 = images.iter().map(|i| i.data.len() as u64).sum();
-            s.disk.io(&self.clock, total);
         }
+        // server disk: sequential read of all prefetched bytes
+        let total: u64 = images.iter().map(|i| i.data.len() as u64).sum();
+        self.server.disk.io(&self.clock, total);
         // the 12 prefetch threads fetch in parallel waves
         self.wan.batch_fetch(&self.clock, &sizes, self.cfg.stripe.prefetch_threads);
         self.metrics.add(names::WAN_BYTES_RX, sizes.iter().sum::<u64>());
@@ -536,17 +531,20 @@ impl ServerLink for SimLink {
         }
         self.metrics.add(names::WAN_BYTES_TX, bytes);
         let resp = {
-            let mut s = self.server.lock().unwrap();
             // server writes the payload to its disk
-            s.disk.io(&self.clock, bytes);
+            self.server.disk.io(&self.clock, bytes);
             if matches!(out.action, Some(FaultAction::Duplicate)) {
-                let _ = s.handle(
+                let _ = self.server.handle(
                     self.client_id,
                     Request::Apply { seq, op: op.clone() },
                     self.clock.now(),
                 );
             }
-            s.handle(self.client_id, Request::Apply { seq, op: op.clone() }, self.clock.now())
+            self.server.handle(
+                self.client_id,
+                Request::Apply { seq, op: op.clone() },
+                self.clock.now(),
+            )
         };
         if matches!(out.action, Some(FaultAction::DropReply)) {
             // applied at the server; the ack never comes back
@@ -584,9 +582,8 @@ impl ServerLink for SimLink {
         self.metrics.incr(names::COMPOUND_RPCS);
         self.metrics.add(names::COMPOUND_OPS, ops.len() as u64);
         let resp = {
-            let mut s = self.server.lock().unwrap();
             // server writes the aggregated payload to its disk
-            s.disk.io(&self.clock, payload);
+            self.server.disk.io(&self.clock, payload);
             let req = Request::Compound {
                 ops: ops
                     .iter()
@@ -594,9 +591,9 @@ impl ServerLink for SimLink {
                     .collect(),
             };
             if matches!(out.action, Some(FaultAction::Duplicate)) {
-                let _ = s.handle(self.client_id, req.clone(), self.clock.now());
+                let _ = self.server.handle(self.client_id, req.clone(), self.clock.now());
             }
-            s.handle(self.client_id, req, self.clock.now())
+            self.server.handle(self.client_id, req, self.clock.now())
         };
         if matches!(out.action, Some(FaultAction::DropReply)) {
             // the WHOLE batch applied; the reply frame is lost. The
@@ -650,10 +647,7 @@ impl ServerLink for SimLink {
     }
 
     fn is_connected(&self) -> bool {
-        self.net_up
-            && self.session.is_some()
-            && self.channel.is_connected()
-            && self.server.lock().unwrap().is_up()
+        self.net_up && self.session.is_some() && self.channel.is_connected() && self.server.is_up()
     }
 
     fn reconnect(&mut self) -> Result<u64, FsError> {
@@ -861,6 +855,40 @@ mod tests {
         assert_eq!(c.scan_file("/home/u/proj/main.c", 1024).unwrap(), 25);
         c.write_file("/home/u/proj/after.txt", b"ok", 64).unwrap();
         assert!(w.home(|s| s.home().exists("/home/u/proj/after.txt")));
+    }
+
+    #[test]
+    fn interleaved_multi_client_steps_on_the_sharded_core() {
+        let mut w = world_with_home();
+        assert!(w.server.shard_count() > 1, "default config is sharded");
+        let mut clients: Vec<_> = (0..4).map(|_| w.mount("/home/u").unwrap()).collect();
+        // round-robin interleaving: each client grows its own files while
+        // re-reading a shared one — every step dispatches into the
+        // sharded core with no global server lock
+        for round in 0..6 {
+            for (i, c) in clients.iter_mut().enumerate() {
+                let path = format!("/home/u/proj/c{i}_{round}.txt");
+                c.write_file(&path, format!("r{round} by c{i}").as_bytes(), 1024).unwrap();
+                c.scan_file("/home/u/proj/README", 1024).unwrap();
+            }
+        }
+        for c in clients.iter_mut() {
+            c.fsync().unwrap();
+        }
+        // every client's writes landed at home, and every other client
+        // converges on them (callback fanout crossed shard boundaries)
+        for i in 0..4 {
+            for round in 0..6 {
+                let path = format!("/home/u/proj/c{i}_{round}.txt");
+                let want = format!("r{round} by c{i}").into_bytes();
+                let home = w.home(|s| s.home().read(&path).map(|d| d.to_vec()));
+                assert_eq!(home.as_deref(), Ok(&want[..]), "{path} at home");
+                for (j, c) in clients.iter_mut().enumerate() {
+                    let n = c.scan_file(&path, 1024).unwrap();
+                    assert_eq!(n as usize, want.len(), "client {j} reads {path}");
+                }
+            }
+        }
     }
 
     #[test]

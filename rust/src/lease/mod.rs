@@ -30,16 +30,40 @@ pub enum Acquire {
 }
 
 /// Server-side lock table with lease expiry.
-#[derive(Debug, Default)]
+///
+/// The sharded server (DESIGN.md §2.6) runs one table per namespace
+/// shard. Conflicting acquires always land in the same table (locks
+/// route by path hash), but renew/release carry only a token — so each
+/// table mints tokens from a disjoint arithmetic progression
+/// ([`LockTable::with_tokens`]) and the server routes a token back to
+/// its shard from the token value alone.
+///
+/// (Deliberately no `Default`: a zero `token_step` would mint the same
+/// token forever — construct via [`LockTable::new`] or
+/// [`LockTable::with_tokens`].)
+#[derive(Debug)]
 pub struct LockTable {
     locks: HashMap<u64, LockRec>,
     next_token: u64,
+    token_step: u64,
     lease_s: f64,
 }
 
 impl LockTable {
     pub fn new(lease_s: f64) -> Self {
-        LockTable { locks: HashMap::new(), next_token: 1, lease_s }
+        Self::with_tokens(lease_s, 1, 1)
+    }
+
+    /// A table whose tokens are `first_token + k * token_step` — shard
+    /// `i` of `n` uses `with_tokens(lease_s, i + 1, n)`, so
+    /// `(token - 1) % n` recovers the owning shard.
+    pub fn with_tokens(lease_s: f64, first_token: u64, token_step: u64) -> Self {
+        LockTable {
+            locks: HashMap::new(),
+            next_token: first_token,
+            token_step: token_step.max(1),
+            lease_s,
+        }
     }
 
     pub fn lease_secs(&self) -> f64 {
@@ -65,7 +89,7 @@ impl LockTable {
             return Acquire::Denied { holder };
         }
         let token = self.next_token;
-        self.next_token += 1;
+        self.next_token += self.token_step;
         let expires = now.add_secs(self.lease_s);
         self.locks.insert(token, LockRec { token, path: path.to_string(), kind, owner, expires });
         Acquire::Granted { token, lease: expires }
@@ -247,6 +271,27 @@ mod tests {
         assert!(!lt.release(token, 9));
         assert!(lt.release(token, 1));
         assert!(lt.is_empty());
+    }
+
+    #[test]
+    fn token_progressions_are_disjoint_across_shards() {
+        // shard i of n mints tokens i+1, i+1+n, i+1+2n, ... so the server
+        // can route a bare renew/release token back to its shard
+        let n = 4u64;
+        let mut tables: Vec<LockTable> =
+            (0..n).map(|i| LockTable::with_tokens(30.0, i + 1, n)).collect();
+        let mut seen = std::collections::HashSet::new();
+        for (i, lt) in tables.iter_mut().enumerate() {
+            for k in 0..3 {
+                let Acquire::Granted { token, .. } =
+                    lt.acquire(&format!("/f{k}"), LockKind::Shared, 1, t(0.0))
+                else {
+                    panic!()
+                };
+                assert_eq!((token - 1) % n, i as u64, "token {token} routes to shard {i}");
+                assert!(seen.insert(token), "token {token} minted twice");
+            }
+        }
     }
 
     #[test]

@@ -22,6 +22,14 @@
 //! defaults, validated [`client::OpenFlags`], and compound metadata
 //! batching — the meta-op queue flushes as one `Request::Compound` WAN
 //! round trip instead of one round trip per op.
+//!
+//! The server side is a **namespace-sharded concurrent core**
+//! (DESIGN.md §2.6): [`server::FileServer::handle`] takes `&self`, so
+//! TCP connection threads and simulated links dispatch with no global
+//! lock — requests serialize only on the shard their canonical path
+//! hashes to, and bulk block reads/digesting run outside shard locks.
+//! `cargo bench --bench scale` measures the win over the `shards = 1`
+//! ablation (`BENCH_scale.json`).
 
 pub mod auth;
 pub mod baselines;

@@ -68,6 +68,7 @@ fn main() {
         "serve" => serve(cfg),
         "perf" => perf(cfg),
         "config" => print_config(),
+        "metrics-md" => print_metrics_md(),
         _ => {
             println!("{HELP}");
         }
@@ -84,7 +85,14 @@ USAGE:
   xufs serve [--config xufs.toml]    run the TCP file server (demo home)
   xufs perf                          hot-path microbenchmarks (wall-clock)
   xufs config                        print accepted config keys
+  xufs metrics-md                    print METRICS.md (regenerate the doc)
 ";
+
+/// `METRICS.md` generator: the doc at the repo root is exactly this
+/// output (a test in `metrics` keeps them in sync).
+fn print_metrics_md() {
+    print!("{}", xufs::metrics::names::metrics_md());
+}
 
 fn selftest(cfg: XufsConfig) {
     let mut world = SimWorld::new(cfg);
@@ -171,14 +179,15 @@ fn serve(cfg: XufsConfig) {
     let mut home = FileStore::default();
     home.mkdir_p("/home/demo", VirtualTime::ZERO).unwrap();
     home.write("/home/demo/README", b"served by xufs\n", VirtualTime::ZERO).unwrap();
-    let server = Arc::new(Mutex::new(FileServer::new(
+    let server = Arc::new(FileServer::new(
         home,
         DiskModel::new(cfg.disk.home_bps, cfg.disk.home_op_s),
         engine,
         cfg.stripe.min_block as usize,
         cfg.lease.duration_s,
+        cfg.server.shards,
         metrics,
-    )));
+    ));
     let auth = Arc::new(Mutex::new(Authenticator::new(pair.clone(), cfg.seed)));
     let tcp = TcpServer::spawn(server, auth, Metrics::new()).expect("bind");
     println!("xufs file server on {}", tcp.addr);
@@ -294,6 +303,9 @@ cache_mibps = 400
 cache_op_ms = 2
 home_mibps = 200
 home_op_ms = 2
-digest_cpu_mibps = 300"
+digest_cpu_mibps = 300
+
+[server]
+shards = 8"
     );
 }

@@ -103,6 +103,10 @@ impl Metrics {
 
 /// Well-known metric names (typo safety — use these constants, not ad-hoc
 /// strings, from subsystem code).
+///
+/// Every name also appears in [`names::ALL`] with a one-line meaning;
+/// the repo-root `METRICS.md` is generated from that table
+/// (`xufs metrics-md`) and a test keeps the two in sync.
 pub mod names {
     pub const WAN_BYTES_TX: &str = "wan.bytes_tx";
     pub const WAN_BYTES_RX: &str = "wan.bytes_rx";
@@ -148,7 +152,88 @@ pub mod names {
     pub const LEASE_EXPIRED: &str = "lease.expired";
     pub const CALLBACKS_SENT: &str = "server.callbacks_sent";
     pub const AUTH_FAILURES: &str = "server.auth_failures";
+    /// Shard-lock acquisitions that found the lock held (the request
+    /// blocked behind another client on the same namespace shard).
+    pub const SHARD_CONTENTION: &str = "server.shard_contention";
+    /// Operations that took locks on more than one namespace shard
+    /// (cross-shard renames, callback-registry broadcasts).
+    pub const CROSS_SHARD_OPS: &str = "server.cross_shard_ops";
     pub const OP_LATENCY: &str = "vfs.op_latency";
+
+    /// Every metric the system emits, with a one-line meaning. This is
+    /// the source of truth behind `METRICS.md` (see [`metrics_md`]); a
+    /// test asserts the two never drift apart.
+    pub const ALL: &[(&str, &str)] = &[
+        (WAN_BYTES_TX, "Bytes shipped client -> server over the WAN (meta-ops, writebacks)."),
+        (WAN_BYTES_RX, "Bytes received server -> client over the WAN (fetches, prefetches)."),
+        (WAN_RPCS, "Request/response round trips on the control connection."),
+        (WAN_CONNECTS, "WAN connection setups (TCP + USSH handshake cost model)."),
+        (COMPOUND_RPCS, "Compound round trips issued (one per `Request::Compound` frame)."),
+        (COMPOUND_OPS, "Meta-ops carried inside compound round trips."),
+        (CACHE_HITS, "Opens served entirely from the cache space (no WAN)."),
+        (CACHE_MISSES, "Opens that had to consult the home space."),
+        (CACHE_INVALIDATIONS, "Cache entries invalidated by callback notifications."),
+        (CACHE_EVICTIONS, "Whole entries evicted by the capacity policy."),
+        (FETCH_FILES, "Whole files fetched from the home space."),
+        (FETCH_BYTES, "Bytes of file content fetched whole-file."),
+        (RANGE_FETCHES, "Paged range fetches issued (demand-paging fault-ins)."),
+        (CACHE_EVICTED_BYTES, "Bytes evicted by the budgeted LRU block eviction."),
+        (CACHE_RECOVER_DEMOTED, "Entries demoted to Invalid by recover on unknown persisted tokens."),
+        (PREFETCH_FILES, "Small files pulled by the parallel pre-fetch on first chdir."),
+        (WRITEBACK_FILES, "Files written back to the home space on close/flush."),
+        (WRITEBACK_BYTES, "Bytes actually shipped by writebacks (after delta planning)."),
+        (WRITEBACK_BYTES_SAVED, "Bytes delta writeback avoided shipping vs a full write."),
+        (DIGEST_BLOCKS, "Stripe blocks digested by the digest engine."),
+        (DIGEST_CALLS, "Digest-engine invocations (whole-buffer calls)."),
+        (METAQ_APPENDS, "Records appended to the durable op log."),
+        (METAQ_REPLAYS, "Ops replayed from the op log after a reconnect or recovery."),
+        (METAQ_REPLAY_SKIPPED, "Replayed ops skipped because their target vanished while queued."),
+        (FAULTS_INJECTED, "Faults the fault plane injected (any non-clean delivery)."),
+        (FAULT_PARTITIONED_OPS, "Interactions refused because the link was partitioned."),
+        (RESUMED_FETCHES, "Torn transfers transparently resumed mid-range."),
+        (CONFLICT_FILES, "Loser copies preserved as `.xufs-conflict-<client>-<seq>` files at home."),
+        (LEASE_RENEWALS, "Lock-lease renewals granted by the server."),
+        (LEASE_EXPIRED, "Orphaned lock leases expired by the server."),
+        (CALLBACKS_SENT, "Invalidation/removal notifications pushed to registered clients."),
+        (AUTH_FAILURES, "USSH authentication attempts the server rejected."),
+        (SHARD_CONTENTION, "Shard-lock acquisitions that blocked behind another request."),
+        (CROSS_SHARD_OPS, "Operations that locked more than one namespace shard."),
+        (OP_LATENCY, "Histogram of per-VFS-op latency, seconds."),
+    ];
+
+    /// Render [`ALL`] as the `METRICS.md` table body. `xufs metrics-md`
+    /// prints the full document; the sync test checks the shipped file
+    /// contains exactly these rows.
+    pub fn markdown_rows() -> String {
+        let mut out = String::new();
+        for (name, meaning) in ALL {
+            out.push_str(&format!("| `{name}` | {meaning} |\n"));
+        }
+        out
+    }
+
+    /// The complete `METRICS.md` document (`xufs metrics-md` prints it;
+    /// the repo-root file is exactly this output).
+    pub fn metrics_md() -> String {
+        let mut out = String::new();
+        out.push_str("# XUFS metrics\n\n");
+        out.push_str(
+            "Every counter/gauge/histogram the system emits, by canonical name.\n\
+             Names live in `rust/src/metrics/mod.rs` (`metrics::names`); subsystem\n\
+             code uses those constants, never ad-hoc strings. This file is\n\
+             GENERATED — regenerate with `cargo run -- metrics-md > METRICS.md`\n\
+             after extending `names::ALL`; a test (`metrics::tests::\n\
+             metrics_md_in_sync_with_names_table`) fails if the two drift.\n\n",
+        );
+        out.push_str("| metric | meaning |\n|---|---|\n");
+        out.push_str(&markdown_rows());
+        out.push_str(
+            "\nSnapshot any deployment's values with `Metrics::to_json()` (the\n\
+             CLI prints it after `xufs selftest`; bench tables embed it in their\n\
+             JSON sidecars).\n",
+        );
+        out
+    }
 }
 
 #[cfg(test)]
@@ -192,6 +277,53 @@ mod tests {
         m.reset();
         assert_eq!(m.counter("a"), 0);
         assert_eq!(m.histogram_count("h"), 0);
+    }
+
+    #[test]
+    fn names_table_is_complete_and_unique() {
+        let mut seen = std::collections::HashSet::new();
+        for (name, meaning) in names::ALL {
+            assert!(seen.insert(*name), "duplicate metric name {name}");
+            assert!(!meaning.is_empty(), "{name} needs a meaning");
+            let (subsystem, rest) = name.split_once('.').expect("names are subsystem.metric");
+            assert!(!subsystem.is_empty() && !rest.is_empty(), "malformed name {name}");
+        }
+        // spot-check that the constants subsystem code actually uses are
+        // all in the table (additions to `names` must extend `ALL`)
+        for c in [
+            names::WAN_RPCS,
+            names::CACHE_HITS,
+            names::RANGE_FETCHES,
+            names::CONFLICT_FILES,
+            names::SHARD_CONTENTION,
+            names::CROSS_SHARD_OPS,
+            names::OP_LATENCY,
+        ] {
+            assert!(seen.contains(c), "{c} missing from names::ALL");
+        }
+    }
+
+    /// `METRICS.md` at the repo root documents every metric in
+    /// [`names::ALL`] — regenerate it with `xufs metrics-md > METRICS.md`
+    /// whenever the table changes.
+    #[test]
+    fn metrics_md_in_sync_with_names_table() {
+        let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../METRICS.md");
+        let doc = std::fs::read_to_string(path)
+            .expect("METRICS.md at the repo root (regenerate: xufs metrics-md > METRICS.md)");
+        for line in names::markdown_rows().lines() {
+            assert!(
+                doc.contains(line),
+                "METRICS.md is stale — missing row:\n  {line}\nregenerate with `xufs metrics-md > METRICS.md`"
+            );
+        }
+        let doc_rows = doc.lines().filter(|l| l.starts_with("| `")).count();
+        assert_eq!(
+            doc_rows,
+            names::ALL.len(),
+            "METRICS.md documents {doc_rows} metrics but names::ALL has {} — regenerate with `xufs metrics-md > METRICS.md`",
+            names::ALL.len()
+        );
     }
 
     #[test]

@@ -1,27 +1,51 @@
-//! The XUFS user-space file server (paper §3.1–3.2).
+//! The XUFS user-space file server (paper §3.1–3.2), as a **namespace-
+//! sharded concurrent core** (DESIGN.md §2.6).
 //!
 //! Runs on (or beside) the user's personal system, exporting the home
 //! space to client sites. Transport-agnostic: [`FileServer::handle`] maps
-//! one authenticated request to one response; the simulated deployment
-//! calls it directly with modeled WAN delay, the TCP deployment
-//! (`coordinator::net`) calls it from connection threads after the USSH
-//! challenge-response handshake.
+//! one authenticated request to one response and takes `&self`, so any
+//! number of connection threads (the TCP deployment) or interleaved
+//! simulated clients (the sim deployment) dispatch concurrently without a
+//! global lock.
 //!
-//! Responsibilities:
-//! * serve namespace reads (stat/readdir) and whole-file fetches with
-//!   per-block digests for integrity + later delta writeback;
+//! Concurrency model (DESIGN.md §2.6):
+//!
+//! * Per-path service state — digest cache, lock table, replay
+//!   watermarks, callback registry — splits into N **shards**, each
+//!   behind its own mutex, routed by canonical-path hash. Requests for
+//!   different subtrees proceed in parallel; requests for the same path
+//!   always serialize through the same shard.
+//! * The inode substrate ([`FileStore`]) sits behind one `RwLock`:
+//!   namespace reads run in parallel under the read lock, mutations take
+//!   brief write sections.
+//! * Block reads and digest computation run **outside any shard lock**,
+//!   so bulk fetches from different clients overlap even within a shard.
+//! * Cross-shard operations (a rename whose source and target hash to
+//!   different shards, registry broadcasts) take their shard locks in
+//!   ascending index order — the single lock-ordering rule that keeps the
+//!   core deadlock-free.
+//! * The per-client idempotent-replay watermark lives in the shard of the
+//!   op's primary path. A given `(client, seq)` always routes to the same
+//!   shard, so duplicate detection is exactly as strong as under the old
+//!   global lock (DESIGN.md §2.5 invariants hold unchanged).
+//!
+//! Responsibilities (unchanged from the paper):
+//! * serve namespace reads (stat/readdir) and whole-file/range fetches
+//!   with per-block digests for integrity + later delta writeback;
 //! * apply replayed meta-operations **idempotently** (per-client sequence
 //!   numbers — a crashed client can replay its whole queue safely);
 //! * fan out change notifications to registered callback channels
 //!   (skipping the originating client, whose copy is already current);
-//! * grant lock leases via [`lease::LockTable`] and expire orphans;
+//! * grant lock leases via [`LockTable`] and expire orphans;
 //! * simulate crash/restart (the paper restarts the server from crontab).
 
 use std::collections::{BTreeSet, HashMap};
-use std::sync::Arc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+use std::time::Duration;
 
 use crate::callback::NotifyChannel;
-use crate::homefs::{FileStore, FsError};
+use crate::homefs::{FileStore, FsError, NodeKind};
 use crate::lease::{Acquire, LockTable};
 use crate::metrics::{names, Metrics};
 use crate::proto::{
@@ -40,15 +64,26 @@ struct CallbackReg {
     channel: NotifyChannel,
 }
 
-/// The user-space file server.
-pub struct FileServer {
-    fs: FileStore,
-    pub disk: DiskModel,
-    engine: Arc<DigestEngine>,
-    block_bytes: usize,
+/// Per-path service state owned by one namespace shard (DESIGN.md §2.6).
+/// Everything here is only ever touched under the shard's mutex.
+struct Shard {
+    /// Digest cache: path -> (version, digests). Fetches of unchanged
+    /// files skip recomputation (hot-path optimization, EXPERIMENTS §Perf).
+    digest_cache: HashMap<String, (u64, Vec<i32>)>,
+    /// Lock leases for paths routed to this shard. Tokens come from a
+    /// per-shard arithmetic progression so a bare renew/release token
+    /// routes back here (`LockTable::with_tokens`).
     locks: LockTable,
+    /// Callback registrations, **replicated** to every shard: the
+    /// registry is tiny and write-rare, and replication lets a mutating
+    /// op fan out invalidations without leaving its own shard lock.
+    /// Updated only under the ordered all-shard lock path.
     callbacks: Vec<CallbackReg>,
-    /// Highest applied meta-op sequence per client (idempotent replay).
+    /// Highest applied meta-op sequence per client, for ops routed to
+    /// this shard (idempotent replay). A `(client, seq)` pair always
+    /// routes to the same shard, so the per-shard watermark answers
+    /// duplicates exactly like the old global one. Journaled to the home
+    /// disk (survives `crash`).
     applied: HashMap<u64, u64>,
     /// Seqs at or below the watermark that failed SEMANTICALLY, per
     /// client. A compound advances the watermark past a mid-batch
@@ -57,21 +92,61 @@ pub struct FileServer {
     /// answering it as a duplicate would falsely ack a write that never
     /// landed. Bounded per client (oldest evicted).
     failed: HashMap<u64, BTreeSet<u64>>,
-    /// Digest cache: path -> (version, digests). Fetches of unchanged
-    /// files skip recomputation (hot-path optimization, EXPERIMENTS §Perf).
-    digest_cache: HashMap<String, (u64, Vec<i32>)>,
-    /// Callback channel per client (attached by the transport at connect).
-    channel_map: HashMap<u64, NotifyChannel>,
+    /// Bumped on every digest-cache purge. The unlocked fetch-path
+    /// digest pass records this before snapshotting and refuses to
+    /// install if it moved — otherwise a rename that preserves the
+    /// moved inode's version could race an in-flight digest pass and
+    /// have the old content's digests re-installed under a version that
+    /// now identifies the new content.
+    purge_epoch: u64,
+}
+
+impl Shard {
+    /// Drop a path's cached digests and advance the purge epoch (see
+    /// [`Shard::purge_epoch`]). Every invalidation-class removal goes
+    /// through here; plain version-keyed inserts do not.
+    fn purge_digests(&mut self, key: &str) {
+        self.digest_cache.remove(key);
+        self.purge_epoch += 1;
+    }
+
+    /// Replayed-duplicate test (DESIGN.md §2.5): seq at or below this
+    /// client's watermark and not recorded as a semantic failure.
+    fn is_duplicate(&self, client_id: u64, seq: u64) -> bool {
+        let last = self.applied.get(&client_id).copied().unwrap_or(0);
+        let failed = self.failed.get(&client_id).map(|s| s.contains(&seq)).unwrap_or(false);
+        seq <= last && !failed
+    }
+}
+
+/// The user-space file server. All methods take `&self`: share it as
+/// `Arc<FileServer>` across connection threads or simulated links.
+pub struct FileServer {
+    fs: RwLock<FileStore>,
+    pub disk: DiskModel,
+    engine: Arc<DigestEngine>,
+    block_bytes: usize,
+    lease_s: f64,
+    shards: Vec<Mutex<Shard>>,
+    /// Callback channel per client (attached by the transport at
+    /// connect). One copy behind its own leaf mutex — unlike the
+    /// `callbacks` registry it is not consulted on the fanout hot path,
+    /// so it needs no replication. Never locked while a shard guard is
+    /// held.
+    channel_map: Mutex<HashMap<u64, NotifyChannel>>,
+    up: AtomicBool,
+    /// When set, modeled disk service times are slept for REAL (the
+    /// wall-clock scale bench; the analytic deployments leave this off
+    /// and charge the virtual clock instead).
+    modeled_waits: AtomicBool,
     metrics: Metrics,
-    up: bool,
 }
 
 impl std::fmt::Debug for FileServer {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.debug_struct("FileServer")
-            .field("up", &self.up)
-            .field("callbacks", &self.callbacks.len())
-            .field("locks", &self.locks.len())
+            .field("up", &self.is_up())
+            .field("shards", &self.shards.len())
             .finish()
     }
 }
@@ -90,6 +165,16 @@ fn err_resp(e: &FsError) -> Response {
     Response::Err { code, msg: e.to_string() }
 }
 
+/// FNV-1a — stable, dependency-free canonical-path hash for shard routing.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in bytes {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 impl FileServer {
     pub fn new(
         fs: FileStore,
@@ -97,41 +182,116 @@ impl FileServer {
         engine: Arc<DigestEngine>,
         block_bytes: usize,
         lease_s: f64,
+        shards: usize,
         metrics: Metrics,
     ) -> Self {
+        let n = shards.max(1);
+        let shards = (0..n)
+            .map(|i| {
+                Mutex::new(Shard {
+                    digest_cache: HashMap::new(),
+                    locks: LockTable::with_tokens(lease_s, i as u64 + 1, n as u64),
+                    callbacks: Vec::new(),
+                    applied: HashMap::new(),
+                    failed: HashMap::new(),
+                    purge_epoch: 0,
+                })
+            })
+            .collect();
         FileServer {
-            fs,
+            fs: RwLock::new(fs),
             disk,
             engine,
             block_bytes,
-            locks: LockTable::new(lease_s),
-            callbacks: Vec::new(),
-            applied: HashMap::new(),
-            failed: HashMap::new(),
-            digest_cache: HashMap::new(),
-            channel_map: HashMap::new(),
+            lease_s,
+            shards,
+            channel_map: Mutex::new(HashMap::new()),
+            up: AtomicBool::new(true),
+            modeled_waits: AtomicBool::new(false),
             metrics,
-            up: true,
         }
     }
 
-    /// Direct (trusted) access to the home space — used by tests, the
-    /// workload generators that pre-populate the home space, and by
-    /// "local edits" that simulate the user touching files at home.
-    pub fn home_mut(&mut self) -> &mut FileStore {
-        &mut self.fs
+    /// Direct (trusted) access to the home space — for tests and the
+    /// workload generators that PRE-POPULATE the home space before any
+    /// client has cached anything. Returns a write guard over the inode
+    /// substrate and bypasses the digest-cache purge + callback fanout
+    /// entirely: once clients are attached, home-side edits must go
+    /// through [`Self::local_write`]/[`Self::local_unlink`] instead
+    /// (an unlink+recreate through this guard restarts the inode's
+    /// version at 1 and can collide with a cached digest entry).
+    pub fn home_mut(&self) -> RwLockWriteGuard<'_, FileStore> {
+        self.fs.write().unwrap()
     }
 
-    pub fn home(&self) -> &FileStore {
-        &self.fs
+    pub fn home(&self) -> RwLockReadGuard<'_, FileStore> {
+        self.fs.read().unwrap()
     }
 
     pub fn is_up(&self) -> bool {
-        self.up
+        self.up.load(Ordering::SeqCst)
     }
 
     pub fn block_bytes(&self) -> usize {
         self.block_bytes
+    }
+
+    /// Number of namespace shards (`[server] shards` in `xufs.toml`).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Which shard a canonical path routes to. Public so tests and the
+    /// scale harness can construct provably co-/cross-shard path sets.
+    pub fn shard_of(&self, path: &str) -> usize {
+        let key = vpath::normalize(path);
+        (fnv1a(key.as_bytes()) % self.shards.len() as u64) as usize
+    }
+
+    /// Turn modeled disk service waits on/off (wall-clock deployments
+    /// only — see `bench/scale.rs`). Metadata ops sleep `disk.op_secs()`
+    /// under their shard lock (the serialization a real home disk
+    /// imposes). FETCH payloads sleep their streaming time outside any
+    /// shard lock (the parallel data plane); WRITE payloads sleep it
+    /// under the path's shard lock, deliberately — a home disk
+    /// serializes same-subtree writes, and the old global lock
+    /// serialized ALL of them.
+    pub fn set_modeled_disk_waits(&self, enabled: bool) {
+        self.modeled_waits.store(enabled, Ordering::Relaxed);
+    }
+
+    fn op_wait(&self) {
+        if self.modeled_waits.load(Ordering::Relaxed) {
+            std::thread::sleep(Duration::from_secs_f64(self.disk.op_secs()));
+        }
+    }
+
+    fn io_wait(&self, bytes: u64) {
+        if self.modeled_waits.load(Ordering::Relaxed) && bytes > 0 {
+            std::thread::sleep(Duration::from_secs_f64(bytes as f64 / self.disk.bps));
+        }
+    }
+
+    /// Lock one shard, counting acquisitions that had to block behind
+    /// another request (`server.shard_contention`).
+    fn lock_shard(&self, idx: usize) -> MutexGuard<'_, Shard> {
+        if let Ok(g) = self.shards[idx].try_lock() {
+            return g;
+        }
+        self.metrics.incr(names::SHARD_CONTENTION);
+        self.shards[idx].lock().unwrap()
+    }
+
+    /// Lock every shard in ascending index order (registry broadcasts,
+    /// crash). The same ascending rule as cross-shard renames keeps the
+    /// core deadlock-free.
+    fn lock_all(&self) -> Vec<MutexGuard<'_, Shard>> {
+        (0..self.shards.len()).map(|i| self.lock_shard(i)).collect()
+    }
+
+    /// Route a bare lock token back to the shard that minted it.
+    fn shard_of_token(&self, token: u64) -> usize {
+        (token.wrapping_sub(1) % self.shards.len() as u64) as usize
     }
 
     /// Crash the server process: callback registrations and the in-memory
@@ -142,57 +302,64 @@ impl FileServer {
     /// as duplicates, not re-apply them: re-application would double-bump
     /// versions and mistake a client's own earlier write for a
     /// conflicting third-party edit (DESIGN.md §2.5).
-    pub fn crash(&mut self) {
-        self.up = false;
-        for reg in &self.callbacks {
-            reg.channel.disconnect();
+    pub fn crash(&self) {
+        self.up.store(false, Ordering::SeqCst);
+        let n = self.shards.len();
+        let mut guards = self.lock_all();
+        for (i, g) in guards.iter_mut().enumerate() {
+            for reg in &g.callbacks {
+                reg.channel.disconnect();
+            }
+            g.callbacks.clear();
+            g.locks = LockTable::with_tokens(self.lease_s, i as u64 + 1, n as u64);
         }
-        self.callbacks.clear();
-        self.locks = LockTable::new(self.locks.lease_secs());
     }
 
     /// Restart (the paper uses a crontab job). Clients must re-register
     /// callbacks and re-acquire locks.
-    pub fn restart(&mut self) {
-        self.up = true;
+    pub fn restart(&self) {
+        self.up.store(true, Ordering::SeqCst);
     }
 
     /// A change made *at the home space directly* (the user editing a file
     /// on their workstation). Bumps the store and fans out invalidations
     /// to every registered client.
-    pub fn local_write(&mut self, path: &str, data: &[u8], now: VirtualTime) -> Result<(), FsError> {
-        self.fs.write(path, data, now)?;
-        self.digest_cache.remove(&vpath::normalize(path));
-        let version = self.fs.stat(path).map(|a| a.version).unwrap_or(0);
-        self.notify_change(path, version, None);
+    pub fn local_write(&self, path: &str, data: &[u8], now: VirtualTime) -> Result<(), FsError> {
+        let key = vpath::normalize(path);
+        let mut g = self.lock_shard(self.shard_of(&key));
+        self.fs.write().unwrap().write(&key, data, now)?;
+        g.purge_digests(&key);
+        let version = self.fs.read().unwrap().stat(&key).map(|a| a.version).unwrap_or(0);
+        self.notify_change_in(&g, &key, version, None);
         Ok(())
     }
 
-    pub fn local_unlink(&mut self, path: &str, now: VirtualTime) -> Result<(), FsError> {
-        self.fs.unlink(path, now)?;
-        self.digest_cache.remove(&vpath::normalize(path));
-        self.notify_removed(path, None);
+    pub fn local_unlink(&self, path: &str, now: VirtualTime) -> Result<(), FsError> {
+        let key = vpath::normalize(path);
+        let mut g = self.lock_shard(self.shard_of(&key));
+        self.fs.write().unwrap().unlink(&key, now)?;
+        g.purge_digests(&key);
+        self.notify_removed_in(&g, &key, None);
         Ok(())
     }
 
-    fn notify_change(&mut self, path: &str, new_version: u64, originator: Option<u64>) {
+    fn notify_change_in(&self, shard: &Shard, path: &str, new_version: u64, originator: Option<u64>) {
         let p = vpath::normalize(path);
-        for reg in &self.callbacks {
+        for reg in &shard.callbacks {
             if Some(reg.client_id) == originator {
                 continue;
             }
-            if vpath::is_under(&p, &reg.root) && reg.channel.push(NotifyEvent::Invalidate {
-                path: p.clone(),
-                new_version,
-            }) {
+            if vpath::is_under(&p, &reg.root)
+                && reg.channel.push(NotifyEvent::Invalidate { path: p.clone(), new_version })
+            {
                 self.metrics.incr(names::CALLBACKS_SENT);
             }
         }
     }
 
-    fn notify_removed(&mut self, path: &str, originator: Option<u64>) {
+    fn notify_removed_in(&self, shard: &Shard, path: &str, originator: Option<u64>) {
         let p = vpath::normalize(path);
-        for reg in &self.callbacks {
+        for reg in &shard.callbacks {
             if Some(reg.client_id) == originator {
                 continue;
             }
@@ -204,32 +371,115 @@ impl FileServer {
         }
     }
 
-    /// Expire orphaned lock leases (invoked by the coordinator's
-    /// housekeeping tick and before conflicting acquires).
-    pub fn expire_leases(&mut self, now: VirtualTime) -> usize {
-        let n = self.locks.expire(now);
-        if n > 0 {
-            self.metrics.add(names::LEASE_EXPIRED, n as u64);
+    /// Expire orphaned lock leases across every shard (invoked by the
+    /// coordinator's housekeeping tick; conflicting acquires expire
+    /// their own shard inline).
+    pub fn expire_leases(&self, now: VirtualTime) -> usize {
+        let mut total = 0;
+        for i in 0..self.shards.len() {
+            total += self.lock_shard(i).locks.expire(now);
         }
-        n
+        if total > 0 {
+            self.metrics.add(names::LEASE_EXPIRED, total as u64);
+        }
+        total
     }
 
-    fn digests_for(&mut self, path: &str, version: u64) -> Vec<i32> {
+    /// Digest-cache lookup/compute with the shard guard HELD — only the
+    /// rare conflict-detection path inside `apply` uses this; the bulk
+    /// fetch paths use [`Self::cached_digests_at`]/[`Self::install_digests`]
+    /// so the digest pass itself runs outside any shard lock.
+    fn digests_in(&self, shard: &mut Shard, path: &str, version: u64) -> Vec<i32> {
         let key = vpath::normalize(path);
-        if let Some((v, d)) = self.digest_cache.get(&key) {
+        if let Some((v, d)) = shard.digest_cache.get(&key) {
             if *v == version {
                 return d.clone();
             }
         }
-        let data = self.fs.read(&key).map(|d| d.to_vec()).unwrap_or_default();
+        let data = self.fs.read().unwrap().read(&key).map(|d| d.to_vec()).unwrap_or_default();
         let digests = self.engine.digests(&data, self.block_bytes);
-        self.digest_cache.insert(key, (version, digests.clone()));
+        shard.digest_cache.insert(key, (version, digests.clone()));
         digests
     }
 
-    /// Handle one authenticated request from `client_id`.
-    pub fn handle(&mut self, client_id: u64, req: Request, now: VirtualTime) -> Response {
-        if !self.up {
+    /// Version-gated digest-cache probe that ALSO requires the purge
+    /// epoch unchanged since `epoch`: every fetch-path caller pairs the
+    /// returned digests with a stat/data snapshot taken at that epoch,
+    /// and a hit installed after an invalidation (a same-version rename
+    /// by another client) must not be paired with pre-invalidation
+    /// state — an epoch mismatch forces a recompute from the caller's
+    /// own snapshot (self-consistent by construction). Must NOT be
+    /// called while this shard's guard is already held.
+    fn cached_digests_at(
+        &self,
+        idx: usize,
+        key: &str,
+        version: u64,
+        epoch: u64,
+    ) -> Option<Vec<i32>> {
+        let g = self.lock_shard(idx);
+        if g.purge_epoch != epoch {
+            return None;
+        }
+        match g.digest_cache.get(key) {
+            Some((v, d)) if *v == version => Some(d.clone()),
+            _ => None,
+        }
+    }
+
+    /// The shard's current purge epoch (brief shard lock). Read BEFORE
+    /// snapshotting data for an unlocked digest pass; pass the value to
+    /// [`Self::install_digests`].
+    fn digest_epoch(&self, idx: usize) -> u64 {
+        self.lock_shard(idx).purge_epoch
+    }
+
+    /// Install freshly computed digests (brief shard lock) — unless a
+    /// purge happened since `epoch` was read, in which case the pass may
+    /// have snapshotted content that a rename/unlink/local edit replaced
+    /// and installing would poison the cache (the next fetch just
+    /// recomputes). Also refuses to clobber an entry a newer-version
+    /// pass already installed (versions are monotone within an inode's
+    /// lifetime; inode swaps always bump the epoch). Must NOT be called
+    /// while this shard's guard is held.
+    fn install_digests(&self, idx: usize, key: &str, version: u64, digests: Vec<i32>, epoch: u64) {
+        let mut g = self.lock_shard(idx);
+        if g.purge_epoch != epoch {
+            return;
+        }
+        if let Some((v, _)) = g.digest_cache.get(key) {
+            if *v > version {
+                return;
+            }
+        }
+        g.digest_cache.insert(key.to_string(), (version, digests));
+    }
+
+    /// `(version, size, digests)` for a path — the digest pass (a whole-
+    /// file read + checksum) runs outside any shard lock, guarded by the
+    /// purge epoch so it never installs over a concurrent invalidation.
+    fn file_meta(&self, idx: usize, key: &str) -> Result<(u64, u64, Vec<i32>), FsError> {
+        let epoch = self.digest_epoch(idx);
+        let a = self.fs.read().unwrap().stat(key)?;
+        if let Some(d) = self.cached_digests_at(idx, key, a.version, epoch) {
+            return Ok((a.version, a.size, d));
+        }
+        let (a, data) = {
+            let fs = self.fs.read().unwrap();
+            let a = fs.stat(key)?;
+            let data = fs.read(key).map(|d| d.to_vec()).unwrap_or_default();
+            (a, data)
+        };
+        let digests = self.engine.digests(&data, self.block_bytes);
+        self.install_digests(idx, key, a.version, digests.clone(), epoch);
+        Ok((a.version, a.size, digests))
+    }
+
+    /// Handle one authenticated request from `client_id`. Takes `&self`:
+    /// concurrent callers serialize only on the shard(s) their paths
+    /// route to (plus brief store read/write sections).
+    pub fn handle(&self, client_id: u64, req: Request, now: VirtualTime) -> Response {
+        if !self.is_up() {
             return Response::Err { code: 111, msg: "connection refused (server down)".into() };
         }
         match req {
@@ -238,62 +488,143 @@ impl FileServer {
                 msg: "auth is handled by the transport handshake".into(),
             },
             Request::Ping => Response::Pong,
-            Request::Stat { path } => match self.fs.stat(&path) {
-                Ok(a) => Response::Attr { attr: WireAttr::from_attr(&a) },
-                Err(e) => err_resp(&e),
-            },
-            Request::ReadDir { path } => match self.fs.readdir(&path) {
-                Ok(entries) => Response::Dir {
-                    entries: entries
-                        .into_iter()
-                        .map(|(name, a)| DirEntry { name, attr: WireAttr::from_attr(&a) })
-                        .collect(),
-                },
-                Err(e) => err_resp(&e),
-            },
-            Request::Fetch { path } => match self.fs.stat(&path) {
-                Ok(a) => {
-                    let digests = self.digests_for(&path, a.version);
-                    let data = self.fs.read(&path).map(|d| d.to_vec()).unwrap_or_default();
-                    Response::File {
-                        image: FileImage {
-                            path: vpath::normalize(&path),
-                            version: a.version,
-                            data,
-                            digests,
-                        },
+            Request::Stat { path } => {
+                let _g = self.lock_shard(self.shard_of(&path));
+                self.op_wait();
+                match self.fs.read().unwrap().stat(&path) {
+                    Ok(a) => Response::Attr { attr: WireAttr::from_attr(&a) },
+                    Err(e) => err_resp(&e),
+                }
+            }
+            Request::ReadDir { path } => {
+                let _g = self.lock_shard(self.shard_of(&path));
+                self.op_wait();
+                match self.fs.read().unwrap().readdir(&path) {
+                    Ok(entries) => Response::Dir {
+                        entries: entries
+                            .into_iter()
+                            .map(|(name, a)| DirEntry { name, attr: WireAttr::from_attr(&a) })
+                            .collect(),
+                    },
+                    Err(e) => err_resp(&e),
+                }
+            }
+            Request::Fetch { path } => {
+                let key = vpath::normalize(&path);
+                let idx = self.shard_of(&key);
+                // admission: the namespace op serializes on its shard...
+                {
+                    let _g = self.lock_shard(idx);
+                    self.op_wait();
+                }
+                // ...but the block read + digest pass run OUTSIDE any
+                // shard lock, so fetches from different clients overlap
+                // (§2.6). One read section => a consistent snapshot; the
+                // epoch (read first) keeps the later install from racing
+                // a concurrent invalidation of this path.
+                let epoch = self.digest_epoch(idx);
+                let snap = {
+                    let fs = self.fs.read().unwrap();
+                    match fs.stat(&key) {
+                        Ok(a) => {
+                            Ok((a.version, fs.read(&key).map(|d| d.to_vec()).unwrap_or_default()))
+                        }
+                        Err(e) => Err(e),
                     }
+                };
+                match snap {
+                    Ok((version, data)) => {
+                        self.io_wait(data.len() as u64);
+                        let digests = match self.cached_digests_at(idx, &key, version, epoch) {
+                            Some(d) => d,
+                            None => {
+                                let d = self.engine.digests(&data, self.block_bytes);
+                                self.install_digests(idx, &key, version, d.clone(), epoch);
+                                d
+                            }
+                        };
+                        Response::File { image: FileImage { path: key, version, data, digests } }
+                    }
+                    Err(e) => err_resp(&e),
                 }
-                Err(e) => err_resp(&e),
-            },
-            Request::FetchMeta { path } => match self.fs.stat(&path) {
-                Ok(a) => {
-                    let digests = self.digests_for(&path, a.version);
-                    Response::FileMeta { version: a.version, size: a.size, digests }
+            }
+            Request::FetchMeta { path } => {
+                let key = vpath::normalize(&path);
+                let idx = self.shard_of(&key);
+                {
+                    let _g = self.lock_shard(idx);
+                    self.op_wait();
                 }
-                Err(e) => err_resp(&e),
-            },
+                match self.file_meta(idx, &key) {
+                    Ok((version, size, digests)) => Response::FileMeta { version, size, digests },
+                    Err(e) => err_resp(&e),
+                }
+            }
             Request::FetchRange { path, offset, len, expect_version } => {
-                match self.fs.stat(&path) {
-                    Ok(a) if a.version != expect_version => err_resp(&FsError::Stale(format!(
-                        "{path} changed during striped fetch (v{} != v{expect_version})",
-                        a.version
-                    ))),
-                    Ok(a) => {
-                        // serve whole blocks covering the range, each with
-                        // its digest from the digest cache, so the client
-                        // can verify and install blocks independently
+                let key = vpath::normalize(&path);
+                let idx = self.shard_of(&key);
+                // admission
+                {
+                    let _g = self.lock_shard(idx);
+                    self.op_wait();
+                }
+                let stale = |v: u64| {
+                    err_resp(&FsError::Stale(format!(
+                        "{path} changed during striped fetch (v{v} != v{expect_version})"
+                    )))
+                };
+                // Digest resolution and the block copy are separate
+                // lock-free(ish) sections; the purge epoch brackets the
+                // whole attempt so an interleaved invalidation (e.g. a
+                // rename that preserves the moved inode's version — the
+                // case versions alone cannot gate) can never pair one
+                // content's digests with another's bytes. Purges are
+                // rare: the loop converges on its first pass in
+                // practice, and a pathological churn storm surfaces as
+                // Stale, which the client answers with a refresh.
+                for _ in 0..4 {
+                    let epoch = self.digest_epoch(idx);
+                    match self.fs.read().unwrap().stat(&key) {
+                        Ok(a) if a.version != expect_version => return stale(a.version),
+                        Ok(_) => {}
+                        Err(e) => return err_resp(&e),
+                    }
+                    // digests from the cache, or a whole-file digest
+                    // pass — either way outside any shard lock
+                    let digests =
+                        match self.cached_digests_at(idx, &key, expect_version, epoch) {
+                            Some(d) => d,
+                            None => match self.file_meta(idx, &key) {
+                                Ok((v, _, d)) if v == expect_version => d,
+                                Ok((v, _, _)) => return stale(v),
+                                Err(e) => return err_resp(&e),
+                            },
+                        };
+                    // copy the covering blocks in ONE store read
+                    // section, re-gating the version so a racing write
+                    // cannot tear the reply; serve whole blocks with
+                    // their digests so the client verifies and installs
+                    // them independently
+                    let extents = {
+                        let fs = self.fs.read().unwrap();
+                        let a = match fs.stat(&key) {
+                            Ok(a) => a,
+                            Err(e) => return err_resp(&e),
+                        };
+                        if a.version != expect_version {
+                            return stale(a.version);
+                        }
                         let bb = self.block_bytes.max(1) as u64;
-                        let digests = self.digests_for(&path, a.version);
                         let total = a.size.div_ceil(bb);
                         let first = (offset / bb).min(total);
                         let last = offset.saturating_add(len).min(a.size).div_ceil(bb);
-                        let mut extents = Vec::with_capacity(last.saturating_sub(first) as usize);
+                        let mut extents =
+                            Vec::with_capacity(last.saturating_sub(first) as usize);
                         let mut failed = None;
                         for b in first..last {
                             let boff = b * bb;
                             let blen = bb.min(a.size - boff) as usize;
-                            match self.fs.read_at(&path, boff, blen) {
+                            match fs.read_at(&key, boff, blen) {
                                 Ok(data) => extents.push(BlockExtent {
                                     index: b as u32,
                                     data: data.to_vec(),
@@ -305,23 +636,47 @@ impl FileServer {
                                 }
                             }
                         }
-                        match failed {
-                            Some(e) => err_resp(&e),
-                            None => Response::FileBlocks { version: a.version, extents },
+                        if let Some(e) = failed {
+                            return err_resp(&e);
                         }
+                        extents
+                    };
+                    if self.digest_epoch(idx) != epoch {
+                        // an invalidation interleaved between the digest
+                        // resolution and the block copy — retry against
+                        // the settled state
+                        continue;
                     }
-                    Err(e) => err_resp(&e),
+                    self.io_wait(extents.iter().map(|x| x.data.len() as u64).sum::<u64>());
+                    return Response::FileBlocks { version: expect_version, extents };
                 }
+                err_resp(&FsError::Stale(format!(
+                    "{path} kept changing during striped fetch (aborted by concurrent \
+                     invalidations; refetch at the current version)"
+                )))
             }
             Request::RegisterCallback { root, client_id: cid } => {
-                // replace any prior registration for this client+root
-                self.callbacks.retain(|r| !(r.client_id == cid && r.root == root));
-                let channel = self.channel_for(cid).unwrap_or_default();
-                self.callbacks.push(CallbackReg {
-                    client_id: cid,
-                    root: vpath::normalize(&root),
-                    channel,
-                });
+                // the registry is replicated to every shard (so fanout
+                // never leaves the mutating op's shard): broadcast under
+                // the ordered all-shard lock path
+                if self.shards.len() > 1 {
+                    self.metrics.incr(names::CROSS_SHARD_OPS);
+                }
+                // leaf mutex, taken and released before any shard lock
+                let channel =
+                    self.channel_map.lock().unwrap().get(&cid).cloned().unwrap_or_default();
+                let mut guards = self.lock_all();
+                self.op_wait();
+                let root_n = vpath::normalize(&root);
+                for g in guards.iter_mut() {
+                    // replace any prior registration for this client+root
+                    g.callbacks.retain(|r| !(r.client_id == cid && r.root == root_n));
+                    g.callbacks.push(CallbackReg {
+                        client_id: cid,
+                        root: root_n.clone(),
+                        channel: channel.clone(),
+                    });
+                }
                 Response::CallbackRegistered
             }
             Request::Apply { seq, op } => self.apply(client_id, seq, op, now),
@@ -330,23 +685,36 @@ impl FileServer {
                 // Response its single-op request would have produced, so
                 // the client sees partial failure per op and replays only
                 // what did not land (idempotent via per-client seqs).
+                // Each op takes its own shard lock(s) in turn — a frame
+                // spanning shards never holds two shard locks at once
+                // except through the ordered rename path.
                 // (Round-trip accounting lives client-side in the links —
                 // the sim deployment shares one metrics sink.)
                 let replies = ops
                     .into_iter()
                     .map(|op| match op {
                         CompoundOp::Apply { seq, op } => self.apply(client_id, seq, op, now),
-                        CompoundOp::Stat { path } => match self.fs.stat(&path) {
-                            Ok(a) => Response::Attr { attr: WireAttr::from_attr(&a) },
-                            Err(e) => err_resp(&e),
-                        },
+                        CompoundOp::Stat { path } => {
+                            let _g = self.lock_shard(self.shard_of(&path));
+                            self.op_wait();
+                            match self.fs.read().unwrap().stat(&path) {
+                                Ok(a) => Response::Attr { attr: WireAttr::from_attr(&a) },
+                                Err(e) => err_resp(&e),
+                            }
+                        }
                     })
                     .collect();
                 Response::CompoundReply { replies }
             }
             Request::LockAcquire { path, kind, owner } => {
-                self.expire_leases(now);
-                match self.locks.acquire(&vpath::normalize(&path), kind, owner, now) {
+                let key = vpath::normalize(&path);
+                let mut g = self.lock_shard(self.shard_of(&key));
+                self.op_wait();
+                let expired = g.locks.expire(now);
+                if expired > 0 {
+                    self.metrics.add(names::LEASE_EXPIRED, expired as u64);
+                }
+                match g.locks.acquire(&key, kind, owner, now) {
                     Acquire::Granted { token, lease } => Response::LockGranted {
                         token,
                         lease_ns: lease.saturating_sub(now).0,
@@ -354,15 +722,21 @@ impl FileServer {
                     Acquire::Denied { holder } => Response::LockDenied { holder },
                 }
             }
-            Request::LockRenew { token, owner } => match self.locks.renew(token, owner, now) {
-                Some(expires) => {
-                    self.metrics.incr(names::LEASE_RENEWALS);
-                    Response::LockGranted { token, lease_ns: expires.saturating_sub(now).0 }
+            Request::LockRenew { token, owner } => {
+                let mut g = self.lock_shard(self.shard_of_token(token));
+                self.op_wait();
+                match g.locks.renew(token, owner, now) {
+                    Some(expires) => {
+                        self.metrics.incr(names::LEASE_RENEWALS);
+                        Response::LockGranted { token, lease_ns: expires.saturating_sub(now).0 }
+                    }
+                    None => Response::Err { code: 77, msg: "lease lost".into() },
                 }
-                None => Response::Err { code: 77, msg: "lease lost".into() },
-            },
+            }
             Request::LockRelease { token, owner } => {
-                if self.locks.release(token, owner) {
+                let mut g = self.lock_shard(self.shard_of_token(token));
+                self.op_wait();
+                if g.locks.release(token, owner) {
                     Response::Released
                 } else {
                     Response::Err { code: 77, msg: "no such lock".into() }
@@ -372,62 +746,225 @@ impl FileServer {
     }
 
     /// Attach (or create) the callback channel for a client. The transport
-    /// owns the other end.
-    pub fn attach_channel(&mut self, client_id: u64, channel: NotifyChannel) {
-        for reg in &mut self.callbacks {
-            if reg.client_id == client_id {
-                reg.channel = channel.clone();
+    /// owns the other end. Existing registrations are re-pointed in every
+    /// shard's replicated registry (ordered broadcast); the channel map
+    /// itself keeps one copy behind its own leaf mutex so a later
+    /// `RegisterCallback` can find it.
+    pub fn attach_channel(&self, client_id: u64, channel: NotifyChannel) {
+        if self.shards.len() > 1 {
+            self.metrics.incr(names::CROSS_SHARD_OPS);
+        }
+        self.channel_map.lock().unwrap().insert(client_id, channel.clone());
+        let mut guards = self.lock_all();
+        for g in guards.iter_mut() {
+            for reg in g.callbacks.iter_mut() {
+                if reg.client_id == client_id {
+                    reg.channel = channel.clone();
+                }
             }
         }
-        // keep a registration-less attachment so RegisterCallback can find it
-        self.channel_map.insert(client_id, channel);
-    }
-
-    fn channel_for(&self, client_id: u64) -> Option<NotifyChannel> {
-        self.channel_map.get(&client_id).cloned()
     }
 
     /// Retained failed-seq records per client (tiny; evicting the oldest
     /// only risks falsely acking a replay of a very stale failed op).
     const MAX_FAILED_SEQS: usize = 1024;
 
-    fn apply(&mut self, client_id: u64, seq: u64, op: MetaOp, now: VirtualTime) -> Response {
-        let last = self.applied.get(&client_id).copied().unwrap_or(0);
+    /// Route an op to its shard(s) and apply it. Cross-shard renames take
+    /// both locks in ascending index order; DIRECTORY renames take every
+    /// shard lock (still ascending) so the descendant digest sweep is
+    /// atomic with the move. One ordering rule, so no deadlock.
+    fn apply(&self, client_id: u64, seq: u64, op: MetaOp, now: VirtualTime) -> Response {
+        let primary = self.shard_of(op.path());
+        let rename_pair = match &op {
+            MetaOp::Rename { from, to } => {
+                Some((vpath::normalize(from), vpath::normalize(to)))
+            }
+            _ => None,
+        };
+        let secondary = rename_pair.as_ref().and_then(|(_, to)| {
+            let t = self.shard_of(to);
+            if t == primary {
+                None
+            } else {
+                Some(t)
+            }
+        });
+        // A DIRECTORY rename moves a whole subtree: the descendants'
+        // cached digest entries live in arbitrary shards (path-hash
+        // routing) and their inodes keep their versions, so a recreate
+        // under the old path could collide with a stale entry. Take
+        // every shard lock and sweep both subtree prefixes atomically
+        // with the move. (The kind probe is lock-free; the pathological
+        // race — another client swapping the path's kind between probe
+        // and locks — is covered by the post-apply fallback below.)
+        let subtree_move = rename_pair.is_some()
+            && self
+                .fs
+                .read()
+                .unwrap()
+                .stat(op.path())
+                .map(|a| a.kind == NodeKind::Dir)
+                .unwrap_or(false);
+        if subtree_move {
+            if self.shards.len() > 1 {
+                self.metrics.incr(names::CROSS_SHARD_OPS);
+            }
+            let (from_p, to_p) = rename_pair.expect("subtree_move implies a rename");
+            let mut guards = self.lock_all();
+            self.op_wait();
+            let was_dup = guards[primary].is_duplicate(client_id, seq);
+            let resp = match secondary {
+                None => self.apply_in(&mut guards[primary], None, client_id, seq, op, now),
+                Some(sec) => {
+                    let (lo_i, hi_i) = (primary.min(sec), primary.max(sec));
+                    let (left, right) = guards.split_at_mut(hi_i);
+                    let lo: &mut Shard = &mut left[lo_i];
+                    let hi: &mut Shard = &mut right[0];
+                    if primary < sec {
+                        self.apply_in(lo, Some(hi), client_id, seq, op, now)
+                    } else {
+                        self.apply_in(hi, Some(lo), client_id, seq, op, now)
+                    }
+                }
+            };
+            // sweep only when the op genuinely applied: a replayed
+            // duplicate changed nothing, and purging on every replay
+            // would needlessly abort in-flight digest passes
+            if !was_dup && matches!(resp, Response::Applied { .. }) {
+                for g in guards.iter_mut() {
+                    g.digest_cache.retain(|k, _| {
+                        !vpath::is_under(k, &from_p) && !vpath::is_under(k, &to_p)
+                    });
+                    g.purge_epoch += 1;
+                }
+            }
+            return resp;
+        }
+        let (resp, was_dup) = match secondary {
+            None => {
+                let mut g = self.lock_shard(primary);
+                self.op_wait();
+                let dup = g.is_duplicate(client_id, seq);
+                (self.apply_in(&mut g, None, client_id, seq, op, now), dup)
+            }
+            Some(sec) => {
+                self.metrics.incr(names::CROSS_SHARD_OPS);
+                let (mut a, mut b) = if primary < sec {
+                    let a = self.lock_shard(primary);
+                    let b = self.lock_shard(sec);
+                    (a, b)
+                } else {
+                    let b = self.lock_shard(sec);
+                    let a = self.lock_shard(primary);
+                    (a, b)
+                };
+                self.op_wait();
+                let dup = a.is_duplicate(client_id, seq);
+                (self.apply_in(&mut a, Some(&mut b), client_id, seq, op, now), dup)
+            }
+        };
+        // fallback for the probe race above: the moved node turned out
+        // to be a directory after all — sweep after release (a tiny
+        // window, reachable only if another client swapped the path's
+        // kind between the probe and the locks). Replayed duplicates
+        // changed nothing and never sweep.
+        if was_dup {
+            return resp;
+        }
+        if let (Some((from_p, to_p)), Response::Applied { .. }) = (&rename_pair, &resp) {
+            let moved_dir = self
+                .fs
+                .read()
+                .unwrap()
+                .stat(to_p)
+                .map(|a| a.kind == NodeKind::Dir)
+                .unwrap_or(false);
+            if moved_dir {
+                for i in 0..self.shards.len() {
+                    let mut g = self.lock_shard(i);
+                    g.digest_cache.retain(|k, _| {
+                        !vpath::is_under(k, from_p) && !vpath::is_under(k, to_p)
+                    });
+                    g.purge_epoch += 1;
+                }
+            }
+        }
+        resp
+    }
+
+    /// Apply one meta-op with its shard guard(s) held. `shard` is the
+    /// primary (the op's path); `to_shard` is the rename target's shard
+    /// when that differs.
+    fn apply_in(
+        &self,
+        shard: &mut Shard,
+        to_shard: Option<&mut Shard>,
+        client_id: u64,
+        seq: u64,
+        op: MetaOp,
+        now: VirtualTime,
+    ) -> Response {
         let previously_failed =
-            self.failed.get(&client_id).map(|s| s.contains(&seq)).unwrap_or(false);
-        if seq <= last && !previously_failed {
+            shard.failed.get(&client_id).map(|s| s.contains(&seq)).unwrap_or(false);
+        if shard.is_duplicate(client_id, seq) {
             // replayed duplicate: already applied — answer success again
-            let version = self.fs.stat(op.path()).map(|a| a.version).unwrap_or(0);
+            let version =
+                self.fs.read().unwrap().stat(op.path()).map(|a| a.version).unwrap_or(0);
             return Response::Applied { seq, new_version: version };
         }
+        // modeled home-disk write service for bulk payloads happens under
+        // the shard lock — a real home disk serializes writes to the same
+        // subtree exactly like this
+        match &op {
+            MetaOp::WriteFull { data, .. } => self.io_wait(data.len() as u64),
+            MetaOp::WriteDelta { blocks, .. } => {
+                self.io_wait(blocks.iter().map(|(_, b)| b.len() as u64).sum::<u64>())
+            }
+            _ => {}
+        }
         let result: Result<Vec<(String, bool)>, FsError> = match &op {
-            MetaOp::Mkdir { path } => self.fs.mkdir_p(path, now).map(|_| vec![(path.clone(), false)]),
-            MetaOp::Rmdir { path } => self.fs.rmdir(path, now).map(|_| vec![(path.clone(), true)]),
+            MetaOp::Mkdir { path } => {
+                self.fs.write().unwrap().mkdir_p(path, now).map(|_| vec![(path.clone(), false)])
+            }
+            MetaOp::Rmdir { path } => {
+                self.fs.write().unwrap().rmdir(path, now).map(|_| vec![(path.clone(), true)])
+            }
             MetaOp::Create { path } => {
-                let r = match self.fs.create(path, now) {
+                let r = match self.fs.write().unwrap().create(path, now) {
                     Ok(_) => Ok(()),
                     Err(FsError::Exists(_)) => Ok(()), // create is idempotent
                     Err(e) => Err(e),
                 };
                 r.map(|_| vec![(path.clone(), false)])
             }
-            MetaOp::Unlink { path } => self.fs.unlink(path, now).map(|_| vec![(path.clone(), true)]),
+            MetaOp::Unlink { path } => {
+                self.fs.write().unwrap().unlink(path, now).map(|_| vec![(path.clone(), true)])
+            }
             MetaOp::Rename { from, to } => self
                 .fs
+                .write()
+                .unwrap()
                 .rename(from, to, now)
                 .map(|_| vec![(from.clone(), true), (to.clone(), false)]),
-            MetaOp::Truncate { path, size } => {
-                self.fs.truncate(path, *size, now).map(|_| vec![(path.clone(), false)])
-            }
-            MetaOp::SetMode { path, mode } => {
-                self.fs.set_mode(path, *mode, now).map(|_| vec![(path.clone(), false)])
-            }
+            MetaOp::Truncate { path, size } => self
+                .fs
+                .write()
+                .unwrap()
+                .truncate(path, *size, now)
+                .map(|_| vec![(path.clone(), false)]),
+            MetaOp::SetMode { path, mode } => self
+                .fs
+                .write()
+                .unwrap()
+                .set_mode(path, *mode, now)
+                .map(|_| vec![(path.clone(), false)]),
             MetaOp::WriteFull { path, data, digests, base_version } => {
                 let mut touched = vec![(path.clone(), false)];
                 if *base_version > 0 && !digests.is_empty() {
-                    if let Ok(attr) = self.fs.stat(path) {
+                    let attr = self.fs.read().unwrap().stat(path).ok();
+                    if let Some(attr) = attr {
                         if attr.version != *base_version
-                            && self.digests_for(path, attr.version) != *digests
+                            && self.digests_in(shard, path, attr.version) != *digests
                         {
                             // a disconnected-time write raced a home-side
                             // edit the client never saw: last close wins,
@@ -448,9 +985,11 @@ impl FileServer {
                                 "{}.xufs-conflict-{client_id}-{seq}",
                                 vpath::normalize(path)
                             );
-                            let loser = self.fs.read(path).map(|d| d.to_vec());
+                            let loser =
+                                self.fs.read().unwrap().read(path).map(|d| d.to_vec());
                             if let Ok(loser) = loser {
-                                if self.fs.write(&conflict, &loser, now).is_ok() {
+                                if self.fs.write().unwrap().write(&conflict, &loser, now).is_ok()
+                                {
                                     self.metrics.incr(names::CONFLICT_FILES);
                                     touched.push((conflict, false));
                                 }
@@ -458,43 +997,60 @@ impl FileServer {
                         }
                     }
                 }
-                let r = self.fs.write(path, data, now);
+                let r = self.fs.write().unwrap().write(path, data, now);
                 if r.is_ok() && !digests.is_empty() {
-                    let v = self.fs.stat(path).map(|a| a.version).unwrap_or(0);
-                    self.digest_cache.insert(vpath::normalize(path), (v, digests.clone()));
+                    let v = self.fs.read().unwrap().stat(path).map(|a| a.version).unwrap_or(0);
+                    shard.digest_cache.insert(vpath::normalize(path), (v, digests.clone()));
                 }
                 r.map(|_| touched)
             }
-            MetaOp::WriteDelta { path, total_size, base_version, blocks, digests } => {
-                self.apply_delta(path, *total_size, *base_version, blocks, digests, now)
-                    .map(|_| vec![(path.clone(), false)])
-            }
+            MetaOp::WriteDelta { path, total_size, base_version, blocks, digests } => self
+                .apply_delta(shard, path, *total_size, *base_version, blocks, digests, now)
+                .map(|_| vec![(path.clone(), false)]),
         };
         match result {
             Ok(touched) => {
                 // max(): a successful retry of a previously-failed low seq
                 // must not regress the watermark
-                let wm = self.applied.entry(client_id).or_insert(0);
+                let wm = shard.applied.entry(client_id).or_insert(0);
                 *wm = (*wm).max(seq);
                 if previously_failed {
-                    if let Some(s) = self.failed.get_mut(&client_id) {
+                    if let Some(s) = shard.failed.get_mut(&client_id) {
                         s.remove(&seq);
                     }
                 }
-                let version = self.fs.stat(op.path()).map(|a| a.version).unwrap_or(0);
+                let version =
+                    self.fs.read().unwrap().stat(op.path()).map(|a| a.version).unwrap_or(0);
                 for (path, removed) in touched {
                     if removed {
-                        self.digest_cache.remove(&vpath::normalize(&path));
-                        self.notify_removed(&path, Some(client_id));
+                        shard.purge_digests(&vpath::normalize(&path));
+                        self.notify_removed_in(shard, &path, Some(client_id));
                     } else {
-                        let v = self.fs.stat(&path).map(|a| a.version).unwrap_or(version);
-                        self.notify_change(&path, v, Some(client_id));
+                        let v = self
+                            .fs
+                            .read()
+                            .unwrap()
+                            .stat(&path)
+                            .map(|a| a.version)
+                            .unwrap_or(version);
+                        self.notify_change_in(shard, &path, v, Some(client_id));
+                    }
+                }
+                // a rename target's stale digest-cache entry must go:
+                // the moved inode KEEPS its version, so a version
+                // collision with the replaced file would otherwise serve
+                // the old content's digests for the new bytes
+                if let MetaOp::Rename { to, .. } = &op {
+                    let to_key = vpath::normalize(to);
+                    match to_shard {
+                        Some(ts) => ts.purge_digests(&to_key),
+                        None => shard.purge_digests(&to_key),
                     }
                 }
                 Response::Applied { seq, new_version: version }
             }
             Err(e) => {
-                let set = self.failed.entry(client_id).or_default();
+                let set = shard.failed.entry(client_id).or_default();
                 set.insert(seq);
                 while set.len() > Self::MAX_FAILED_SEQS {
                     set.pop_first();
@@ -507,8 +1063,10 @@ impl FileServer {
     /// Apply a delta writeback: only valid against the exact base version
     /// the client diffed from; otherwise the client must fall back to a
     /// full write (the server's copy changed concurrently).
+    #[allow(clippy::too_many_arguments)]
     fn apply_delta(
-        &mut self,
+        &self,
+        shard: &mut Shard,
         path: &str,
         total_size: u64,
         base_version: u64,
@@ -516,14 +1074,19 @@ impl FileServer {
         digests: &[i32],
         now: VirtualTime,
     ) -> Result<(), FsError> {
-        let attr = self.fs.stat(path)?;
-        if attr.version != base_version {
-            return Err(FsError::Stale(format!(
-                "delta base version {base_version} != server version {}",
-                attr.version
-            )));
-        }
-        let mut data = self.fs.read(path)?.to_vec();
+        // patch a copy of the base outside the store's write section (the
+        // write lock is global; only the final install holds it)
+        let mut data = {
+            let fs = self.fs.read().unwrap();
+            let attr = fs.stat(path)?;
+            if attr.version != base_version {
+                return Err(FsError::Stale(format!(
+                    "delta base version {base_version} != server version {}",
+                    attr.version
+                )));
+            }
+            fs.read(path)?.to_vec()
+        };
         data.resize(total_size as usize, 0);
         for (idx, payload) in blocks {
             let start = *idx as usize * self.block_bytes;
@@ -533,10 +1096,12 @@ impl FileServer {
             }
             data[start..end].copy_from_slice(&payload[..end - start]);
         }
-        self.fs.write(path, &data, now)?;
+        // the path's shard lock is held, so the version cannot have moved
+        // since the gate above (same-path ops serialize per shard)
+        self.fs.write().unwrap().write(path, &data, now)?;
         if !digests.is_empty() {
-            let v = self.fs.stat(path).map(|a| a.version).unwrap_or(0);
-            self.digest_cache.insert(vpath::normalize(path), (v, digests.to_vec()));
+            let v = self.fs.read().unwrap().stat(path).map(|a| a.version).unwrap_or(0);
+            shard.digest_cache.insert(vpath::normalize(path), (v, digests.to_vec()));
         }
         Ok(())
     }
@@ -562,13 +1127,14 @@ mod tests {
             Arc::new(DigestEngine::native(Metrics::new())),
             65536,
             30.0,
+            4,
             Metrics::new(),
         )
     }
 
     #[test]
     fn stat_and_readdir() {
-        let mut s = server();
+        let s = server();
         match s.handle(1, Request::Stat { path: "/home/user/a.txt".into() }, t(1.0)) {
             Response::Attr { attr } => assert_eq!(attr.size, 11),
             r => panic!("{r:?}"),
@@ -588,7 +1154,7 @@ mod tests {
 
     #[test]
     fn fetch_includes_verifiable_digests() {
-        let mut s = server();
+        let s = server();
         match s.handle(1, Request::Fetch { path: "/home/user/b.dat".into() }, t(1.0)) {
             Response::File { image } => {
                 assert_eq!(image.data.len(), 200_000);
@@ -617,19 +1183,19 @@ mod tests {
 
     #[test]
     fn fetch_range_serves_block_extents_with_digests() {
-        let mut s = server();
+        let s = server();
         // whole-file digests (fills the digest cache)
-        let whole = match s.handle(1, Request::Fetch { path: "/home/u/b.dat".into() }, t(1.0)) {
+        let whole = match s.handle(1, Request::Fetch { path: "/home/user/b.dat".into() }, t(1.0)) {
             Response::File { image } => image,
             r => panic!("{r:?}"),
         };
-        let v = s.home().stat("/home/u/b.dat").unwrap().version;
+        let v = s.home().stat("/home/user/b.dat").unwrap().version;
         // a mid-file byte range comes back as the covering blocks, each
         // carrying the digest the whole-file fetch reported
         let r = s.handle(
             1,
             Request::FetchRange {
-                path: "/home/u/b.dat".into(),
+                path: "/home/user/b.dat".into(),
                 offset: 65536 + 10,
                 len: 65536,
                 expect_version: v,
@@ -650,7 +1216,7 @@ mod tests {
         let r = s.handle(
             1,
             Request::FetchRange {
-                path: "/home/u/b.dat".into(),
+                path: "/home/user/b.dat".into(),
                 offset: 199_000,
                 len: 1 << 20,
                 expect_version: v,
@@ -665,7 +1231,7 @@ mod tests {
         let r = s.handle(
             1,
             Request::FetchRange {
-                path: "/home/u/b.dat".into(),
+                path: "/home/user/b.dat".into(),
                 offset: 10 << 20,
                 len: 4096,
                 expect_version: v,
@@ -677,7 +1243,7 @@ mod tests {
 
     #[test]
     fn apply_is_idempotent_per_client() {
-        let mut s = server();
+        let s = server();
         let op = MetaOp::WriteFull {
             path: "/home/user/new".into(),
             data: b"v1".to_vec(),
@@ -695,7 +1261,7 @@ mod tests {
 
     #[test]
     fn compound_applies_in_order_with_per_op_status() {
-        let mut s = server();
+        let s = server();
         let r = s.handle(
             1,
             Request::Compound {
@@ -741,7 +1307,7 @@ mod tests {
 
     #[test]
     fn compound_replay_retries_failed_ops_not_false_acks() {
-        let mut s = server();
+        let s = server();
         let ops = vec![
             // fails (no such file) while the NEXT op advances the watermark
             CompoundOp::Apply { seq: 1, op: MetaOp::Unlink { path: "/home/user/ghost".into() } },
@@ -780,7 +1346,7 @@ mod tests {
 
     #[test]
     fn compound_replay_is_idempotent() {
-        let mut s = server();
+        let s = server();
         let ops = vec![
             CompoundOp::Apply {
                 seq: 1,
@@ -804,7 +1370,7 @@ mod tests {
 
     #[test]
     fn apply_notifies_other_clients_not_originator() {
-        let mut s = server();
+        let s = server();
         let ch1 = NotifyChannel::new();
         let ch2 = NotifyChannel::new();
         s.attach_channel(1, ch1.clone());
@@ -826,7 +1392,7 @@ mod tests {
 
     #[test]
     fn local_write_invalidates_everyone() {
-        let mut s = server();
+        let s = server();
         let ch = NotifyChannel::new();
         s.attach_channel(1, ch.clone());
         s.handle(1, Request::RegisterCallback { root: "/home/user".into(), client_id: 1 }, t(0.0));
@@ -839,7 +1405,7 @@ mod tests {
 
     #[test]
     fn delta_against_stale_base_rejected() {
-        let mut s = server();
+        let s = server();
         let base = s.home().stat("/home/user/b.dat").unwrap().version;
         s.local_write("/home/user/b.dat", &[9u8; 100], t(1.0)).unwrap();
         let r = s.handle(
@@ -861,7 +1427,7 @@ mod tests {
 
     #[test]
     fn delta_applies_blocks() {
-        let mut s = server();
+        let s = server();
         let base = s.home().stat("/home/user/b.dat").unwrap().version;
         let mut expect = s.home().read("/home/user/b.dat").unwrap().to_vec();
         let blk = vec![0xABu8; 65536];
@@ -886,7 +1452,7 @@ mod tests {
 
     #[test]
     fn crash_refuses_and_restart_recovers() {
-        let mut s = server();
+        let s = server();
         let ch = NotifyChannel::new();
         s.attach_channel(1, ch.clone());
         s.handle(1, Request::RegisterCallback { root: "/".into(), client_id: 1 }, t(0.0));
@@ -907,7 +1473,7 @@ mod tests {
 
     #[test]
     fn lock_lifecycle_over_protocol() {
-        let mut s = server();
+        let s = server();
         let r = s.handle(
             1,
             Request::LockAcquire { path: "/f".into(), kind: LockKind::Exclusive, owner: 10 },
@@ -932,7 +1498,7 @@ mod tests {
 
     #[test]
     fn rename_notifies_both_paths() {
-        let mut s = server();
+        let s = server();
         let ch = NotifyChannel::new();
         s.attach_channel(2, ch.clone());
         s.handle(2, Request::RegisterCallback { root: "/home/user".into(), client_id: 2 }, t(0.0));
@@ -948,5 +1514,255 @@ mod tests {
         assert_eq!(evs.len(), 2);
         assert!(matches!(&evs[0], NotifyEvent::Removed { path } if path == "/home/user/a.txt"));
         assert!(matches!(&evs[1], NotifyEvent::Invalidate { path, .. } if path == "/home/user/c.txt"));
+    }
+
+    // ----- sharding-specific coverage (DESIGN.md §2.6) -----
+
+    /// Find two paths under `dir` that hash to DIFFERENT shards (and two
+    /// that hash to the same), by probing candidate names.
+    fn cross_shard_pair(s: &FileServer, dir: &str) -> (String, String) {
+        let first = format!("{dir}/x0");
+        let base = s.shard_of(&first);
+        for i in 1..256 {
+            let cand = format!("{dir}/x{i}");
+            if s.shard_of(&cand) != base {
+                return (first, cand);
+            }
+        }
+        panic!("no cross-shard pair in 256 candidates");
+    }
+
+    #[test]
+    fn routing_is_deterministic_and_normalized() {
+        let s = server();
+        assert_eq!(s.shard_count(), 4);
+        assert_eq!(s.shard_of("/home/user/a.txt"), s.shard_of("/home//user/./a.txt"));
+        // every path routes inside the shard vector
+        for i in 0..64 {
+            assert!(s.shard_of(&format!("/p{i}")) < s.shard_count());
+        }
+    }
+
+    #[test]
+    fn cross_shard_rename_moves_and_counts() {
+        let s = server();
+        let (from, to) = cross_shard_pair(&s, "/home/user");
+        s.home_mut().write(&from, b"payload", t(0.0)).unwrap();
+        let before = s.metrics.counter(names::CROSS_SHARD_OPS);
+        let r = s.handle(
+            1,
+            Request::Apply { seq: 1, op: MetaOp::Rename { from: from.clone(), to: to.clone() } },
+            t(1.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        assert!(!s.home().exists(&from));
+        assert_eq!(s.home().read(&to).unwrap(), b"payload");
+        assert!(
+            s.metrics.counter(names::CROSS_SHARD_OPS) > before,
+            "a rename spanning shards takes the ordered two-shard path"
+        );
+        // replay stays idempotent across the two-shard path
+        let v = s.home().stat(&to).unwrap().version;
+        let r = s.handle(
+            1,
+            Request::Apply { seq: 1, op: MetaOp::Rename { from, to: to.clone() } },
+            t(2.0),
+        );
+        assert!(matches!(r, Response::Applied { seq: 1, .. }), "{r:?}");
+        assert_eq!(s.home().stat(&to).unwrap().version, v, "duplicate must not re-apply");
+    }
+
+    #[test]
+    fn rename_over_existing_file_drops_stale_target_digests() {
+        let s = server();
+        // a SAME-shard (from, to) pair under /home/user — exercises the
+        // non-cross-shard arm of the rename digest-cache invalidation
+        let to = "/home/user/s0".to_string();
+        let mut from = None;
+        for i in 1..256 {
+            let cand = format!("/home/user/s{i}");
+            if s.shard_of(&cand) == s.shard_of(&to) {
+                from = Some(cand);
+                break;
+            }
+        }
+        let from = from.expect("a same-shard sibling in 256 candidates");
+        s.home_mut().write(&to, b"old target content", t(0.0)).unwrap();
+        s.home_mut().write(&from, b"new content", t(0.0)).unwrap();
+        let v_cached = s.home().stat(&to).unwrap().version;
+        // cache the target's digests at its current version
+        assert!(matches!(
+            s.handle(1, Request::FetchMeta { path: to.clone() }, t(1.0)),
+            Response::FileMeta { .. }
+        ));
+        // rename over it: the moved inode KEEPS its version, which here
+        // collides with the version the cache entry is keyed by
+        let r = s.handle(
+            1,
+            Request::Apply { seq: 1, op: MetaOp::Rename { from: from.clone(), to: to.clone() } },
+            t(2.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        // the scenario really is a version collision (the moved inode
+        // kept its version, equal to the cached entry's key)
+        assert_eq!(s.home().stat(&to).unwrap().version, v_cached);
+        // the re-fetch must serve digests of the NEW content, not the
+        // stale cached vector
+        let r = s.handle(1, Request::FetchMeta { path: to.clone() }, t(3.0));
+        let Response::FileMeta { digests, .. } = r else { panic!("{r:?}") };
+        let engine = DigestEngine::native(Metrics::new());
+        assert_eq!(digests, engine.digests(b"new content", 65536));
+    }
+
+    #[test]
+    fn directory_rename_purges_descendant_digests() {
+        let s = server();
+        s.home_mut().mkdir_p("/home/user/dir", t(0.0)).unwrap();
+        s.home_mut().write("/home/user/dir/f", b"old content", t(0.0)).unwrap();
+        // cache the child's digests (keyed by its current version)
+        assert!(matches!(
+            s.handle(1, Request::FetchMeta { path: "/home/user/dir/f".into() }, t(1.0)),
+            Response::FileMeta { .. }
+        ));
+        // move the whole directory, then recreate the old path: the new
+        // child inode's version restarts and collides with the cached key
+        let r = s.handle(
+            1,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::Rename { from: "/home/user/dir".into(), to: "/home/user/dir2".into() },
+            },
+            t(2.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        let r = s.handle(
+            1,
+            Request::Apply { seq: 2, op: MetaOp::Mkdir { path: "/home/user/dir".into() } },
+            t(3.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        let r = s.handle(
+            1,
+            Request::Apply {
+                seq: 3,
+                op: MetaOp::WriteFull {
+                    path: "/home/user/dir/f".into(),
+                    data: b"new content".to_vec(),
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(4.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        // the dir-rename sweep must have dropped the stale child entry:
+        // this serves digests of the NEW content despite the collision
+        let r = s.handle(1, Request::FetchMeta { path: "/home/user/dir/f".into() }, t(5.0));
+        let Response::FileMeta { digests, .. } = r else { panic!("{r:?}") };
+        let engine = DigestEngine::native(Metrics::new());
+        assert_eq!(digests, engine.digests(b"new content", 65536));
+        // and the moved copy still reads correctly under its new path
+        assert_eq!(s.home().read("/home/user/dir2/f").unwrap(), b"old content");
+    }
+
+    #[test]
+    fn watermarks_are_per_path_shard_but_semantically_global() {
+        let s = server();
+        // ops with ascending seqs land on whatever shards their paths
+        // hash to; replaying ANY of them must answer as a duplicate
+        for seq in 1..=12u64 {
+            let op = MetaOp::WriteFull {
+                path: format!("/home/user/w{seq}"),
+                data: vec![seq as u8; 64],
+                digests: vec![],
+                base_version: 0,
+            };
+            let r = s.handle(7, Request::Apply { seq, op }, t(seq as f64));
+            assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        }
+        for seq in 1..=12u64 {
+            let path = format!("/home/user/w{seq}");
+            let v = s.home().stat(&path).unwrap().version;
+            let op = MetaOp::WriteFull {
+                path: path.clone(),
+                data: vec![seq as u8; 64],
+                digests: vec![],
+                base_version: 0,
+            };
+            let r = s.handle(7, Request::Apply { seq, op }, t(20.0));
+            assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+            assert_eq!(s.home().stat(&path).unwrap().version, v, "seq {seq} re-applied");
+        }
+    }
+
+    #[test]
+    fn lock_tokens_route_back_to_their_shard() {
+        let s = server();
+        // locks on many paths spread over shards; every token must renew
+        // and release correctly even though those requests carry no path
+        let mut tokens = Vec::new();
+        for i in 0..16 {
+            let r = s.handle(
+                1,
+                Request::LockAcquire {
+                    path: format!("/home/user/l{i}"),
+                    kind: LockKind::Exclusive,
+                    owner: 1,
+                },
+                t(0.0),
+            );
+            let Response::LockGranted { token, .. } = r else { panic!("{r:?}") };
+            tokens.push(token);
+        }
+        let unique: std::collections::HashSet<u64> = tokens.iter().copied().collect();
+        assert_eq!(unique.len(), tokens.len(), "tokens unique across shards");
+        for &token in &tokens {
+            assert!(matches!(
+                s.handle(1, Request::LockRenew { token, owner: 1 }, t(5.0)),
+                Response::LockGranted { .. }
+            ));
+        }
+        for &token in &tokens {
+            assert!(matches!(
+                s.handle(1, Request::LockRelease { token, owner: 1 }, t(6.0)),
+                Response::Released
+            ));
+        }
+    }
+
+    #[test]
+    fn shards_1_is_the_single_lock_ablation() {
+        let fs = {
+            let mut fs = FileStore::default();
+            fs.mkdir_p("/home/user", t(0.0)).unwrap();
+            fs
+        };
+        let s = FileServer::new(
+            fs,
+            DiskModel::new(200.0e6, 0.002),
+            Arc::new(DigestEngine::native(Metrics::new())),
+            65536,
+            30.0,
+            1,
+            Metrics::new(),
+        );
+        assert_eq!(s.shard_count(), 1);
+        for i in 0..8 {
+            assert_eq!(s.shard_of(&format!("/home/user/f{i}")), 0);
+        }
+        let r = s.handle(
+            1,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteFull {
+                    path: "/home/user/one".into(),
+                    data: b"x".to_vec(),
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(1.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
     }
 }

@@ -1,7 +1,7 @@
 //! Workload generators for the paper's evaluation (§2.3, §4): the IOzone
 //! micro-benchmark, the source-tree build, the 1 GiB `wc -l` scan, and the
 //! TACC scratch-space file-population census of Table 1. All drivers are
-//! generic over [`Vfs`] so the same workload runs unchanged on XUFS,
+//! generic over [`Vfs`](crate::client::Vfs) so the same workload runs unchanged on XUFS,
 //! GPFS-WAN, NFS and local-FS clients.
 
 pub mod buildtree;

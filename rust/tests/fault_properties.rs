@@ -90,11 +90,15 @@ fn read_all(c: &mut XufsClient<SimLink>, path: &str) -> Result<Vec<u8>, FsError>
 }
 
 /// One seeded schedule: randomized ops on 2 clients under the fault
-/// plane, then quiesce and check the convergence invariants.
-fn run_schedule(seed: u64, ops: usize) -> Result<(), String> {
+/// plane, then quiesce and check the convergence invariants. `shards`
+/// pins the server's namespace shard count (DESIGN.md §2.6) so the same
+/// invariants are model-checked against both the sharded core and the
+/// single-lock ablation.
+fn run_schedule(seed: u64, ops: usize, shards: usize) -> Result<(), String> {
     let mut cfg = XufsConfig::default();
     cfg.seed = seed;
     cfg.fault = chaos_profile();
+    cfg.server.shards = shards;
     let mut world = SimWorld::new(cfg.clone());
     world.home(|s| {
         let now = VirtualTime::ZERO;
@@ -215,7 +219,7 @@ fn run_schedule(seed: u64, ops: usize) -> Result<(), String> {
 
     // ---- quiesce: stop injecting, heal the world, drain every queue ----
     plan.lock().unwrap().quiesce();
-    if !world.server.lock().unwrap().is_up() {
+    if !world.server.is_up() {
         world.server_restart();
     }
     for c in clients.iter_mut() {
@@ -300,8 +304,12 @@ fn seed_override() -> Option<u64> {
 }
 
 fn explore(seeds: std::ops::Range<u64>, ops: usize) {
+    explore_with_shards(seeds, ops, XufsConfig::default().server.shards)
+}
+
+fn explore_with_shards(seeds: std::ops::Range<u64>, ops: usize, shards: usize) {
     if let Some(seed) = seed_override() {
-        if let Err(msg) = run_schedule(seed, ops) {
+        if let Err(msg) = run_schedule(seed, ops, shards) {
             panic!("schedule seed {seed} violated an invariant: {msg}");
         }
         return;
@@ -309,7 +317,7 @@ fn explore(seeds: std::ops::Range<u64>, ops: usize) {
     let mut failures: Vec<(u64, String)> = Vec::new();
     let total = seeds.end - seeds.start;
     for seed in seeds {
-        if let Err(msg) = run_schedule(seed, ops) {
+        if let Err(msg) = run_schedule(seed, ops, shards) {
             failures.push((seed, msg));
         }
     }
@@ -336,6 +344,23 @@ fn fault_schedule_explorer() {
 #[ignore = "long fault matrix; run with --ignored (nightly CI) or FAULT_SEED=<seed> for one schedule"]
 fn fault_schedule_explorer_long() {
     explore(0xFA17_8000..0xFA17_8000 + 1000, 120);
+}
+
+/// Invariants I1–I3 pinned at `shards = 4` (DESIGN.md §2.6): the sharded
+/// concurrent core preserves the whole PR 3 fault plane — watermarks and
+/// conflict preservation live per shard, and these 50 schedules prove no
+/// seeded interleaving of drops, duplicates, partitions, crashes and
+/// recoveries can tell the difference.
+#[test]
+fn fault_schedule_explorer_sharded_core() {
+    explore_with_shards(0xFA17_4000..0xFA17_4000 + 50, 60, 4);
+}
+
+/// The same 50 schedules against the `shards = 1` ablation — the scale
+/// bench's baseline server is held to the identical failure model.
+#[test]
+fn fault_schedule_explorer_single_shard_ablation() {
+    explore_with_shards(0xFA17_4000..0xFA17_4000 + 50, 60, 1);
 }
 
 // ---------------------------------------------------------------------

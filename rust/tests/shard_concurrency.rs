@@ -1,0 +1,255 @@
+//! Real-thread tests of the sharded concurrent server core
+//! (DESIGN.md §2.6): multiple OS threads dispatch [`FileServer::handle`]
+//! on one shared `Arc<FileServer>` with NO global lock, and the AFS-2
+//! guarantees must hold exactly as they did under the old single mutex —
+//! callback fanout crosses shard boundaries, per-client replay stays
+//! idempotent, and concurrent writers to disjoint subtrees converge.
+
+use std::sync::Arc;
+
+use xufs::callback::NotifyChannel;
+use xufs::homefs::FileStore;
+use xufs::metrics::{names, Metrics};
+use xufs::proto::{MetaOp, NotifyEvent, Request, Response};
+use xufs::runtime::DigestEngine;
+use xufs::server::FileServer;
+use xufs::simnet::VirtualTime;
+use xufs::vdisk::DiskModel;
+
+fn t(s: f64) -> VirtualTime {
+    VirtualTime::from_secs(s)
+}
+
+fn server(shards: usize) -> (Arc<FileServer>, Metrics) {
+    let mut fs = FileStore::default();
+    fs.mkdir_p("/home/u", t(0.0)).unwrap();
+    let metrics = Metrics::new();
+    let s = FileServer::new(
+        fs,
+        DiskModel::new(200.0e6, 0.0005),
+        Arc::new(DigestEngine::native(metrics.clone())),
+        65536,
+        30.0,
+        shards,
+        metrics.clone(),
+    );
+    (Arc::new(s), metrics)
+}
+
+/// Two paths under `dir` that provably route to DIFFERENT shards.
+fn cross_shard_pair(s: &FileServer, dir: &str) -> (String, String) {
+    let first = format!("{dir}/shardprobe0");
+    let base = s.shard_of(&first);
+    for i in 1..512 {
+        let cand = format!("{dir}/shardprobe{i}");
+        if s.shard_of(&cand) != base {
+            return (first, cand);
+        }
+    }
+    panic!("no cross-shard pair found in 512 candidates");
+}
+
+/// Satellite acceptance: two clients mutating DISJOINT shards from two
+/// real threads both receive each other's invalidations — the replicated
+/// callback registry makes fanout work without any cross-shard locking
+/// on the hot path.
+#[test]
+fn concurrent_callback_fanout_across_disjoint_shards() {
+    let (s, _m) = server(8);
+    let ch1 = NotifyChannel::new();
+    let ch2 = NotifyChannel::new();
+    s.attach_channel(1, ch1.clone());
+    s.attach_channel(2, ch2.clone());
+    s.handle(1, Request::RegisterCallback { root: "/home/u".into(), client_id: 1 }, t(0.0));
+    s.handle(2, Request::RegisterCallback { root: "/home/u".into(), client_id: 2 }, t(0.0));
+    let (p1, p2) = cross_shard_pair(&s, "/home/u");
+    assert_ne!(s.shard_of(&p1), s.shard_of(&p2), "the two writers hit disjoint shards");
+    let mut handles = Vec::new();
+    for (cid, path) in [(1u64, p1.clone()), (2u64, p2.clone())] {
+        let s = s.clone();
+        handles.push(std::thread::spawn(move || {
+            for seq in 1..=50u64 {
+                let r = s.handle(
+                    cid,
+                    Request::Apply {
+                        seq,
+                        op: MetaOp::WriteFull {
+                            path: path.clone(),
+                            data: vec![seq as u8; 512],
+                            digests: vec![],
+                            base_version: 0,
+                        },
+                    },
+                    t(seq as f64),
+                );
+                assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("writer thread panicked");
+    }
+    // each client saw exactly the OTHER writer's 50 invalidations
+    let evs1 = ch1.drain();
+    let evs2 = ch2.drain();
+    assert_eq!(evs1.len(), 50, "client 1 gets client 2's invalidations");
+    assert!(evs1
+        .iter()
+        .all(|e| matches!(e, NotifyEvent::Invalidate { path, .. } if *path == p2)));
+    assert_eq!(evs2.len(), 50, "client 2 gets client 1's invalidations");
+    assert!(evs2
+        .iter()
+        .all(|e| matches!(e, NotifyEvent::Invalidate { path, .. } if *path == p1)));
+}
+
+/// Four threads of interleaved writes + neighbour reads converge to the
+/// per-thread last-write truth, and replaying any already-applied
+/// `(client, seq)` afterwards answers as a duplicate without a version
+/// bump — the per-shard watermark is semantically the global one.
+#[test]
+fn concurrent_mixed_ops_converge_and_replay_stays_idempotent() {
+    const THREADS: u64 = 4;
+    const OPS: u64 = 40;
+    let (s, _m) = server(8);
+    let mut handles = Vec::new();
+    for c in 0..THREADS {
+        let s = s.clone();
+        handles.push(std::thread::spawn(move || {
+            let client = c + 1;
+            let dir = format!("/home/u/t{client}");
+            let r = s.handle(
+                client,
+                Request::Apply { seq: 1, op: MetaOp::Mkdir { path: dir.clone() } },
+                t(0.0),
+            );
+            assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+            for k in 0..OPS {
+                let seq = k + 2;
+                let r = s.handle(
+                    client,
+                    Request::Apply {
+                        seq,
+                        op: MetaOp::WriteFull {
+                            path: format!("{dir}/f{}", k % 8),
+                            data: vec![(k % 251) as u8; 1024],
+                            digests: vec![],
+                            base_version: 0,
+                        },
+                    },
+                    t(1.0),
+                );
+                assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+                // reads of a neighbour's subtree interleave freely (the
+                // neighbour may not have created it yet — both answers
+                // are legal, neither may wedge)
+                let neighbour = (c + 1) % THREADS + 1;
+                let _ = s.handle(
+                    client,
+                    Request::Stat { path: format!("/home/u/t{neighbour}/f0") },
+                    t(1.0),
+                );
+            }
+        }));
+    }
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    // last write wins per file: for f{j} the last k with k % 8 == j is 32+j
+    for c in 1..=THREADS {
+        for j in 0..8u64 {
+            let path = format!("/home/u/t{c}/f{j}");
+            let data = s.home().read(&path).map(|d| d.to_vec()).expect(&path);
+            assert_eq!(data, vec![((32 + j) % 251) as u8; 1024], "{path}");
+        }
+    }
+    // replay an applied seq: duplicate answer, no re-apply
+    let v = s.home().stat("/home/u/t1/f0").unwrap().version;
+    let r = s.handle(
+        1,
+        Request::Apply {
+            seq: 34,
+            op: MetaOp::WriteFull {
+                path: "/home/u/t1/f0".into(),
+                data: vec![9u8; 16],
+                digests: vec![],
+                base_version: 0,
+            },
+        },
+        t(9.0),
+    );
+    assert!(matches!(r, Response::Applied { seq: 34, .. }), "{r:?}");
+    assert_eq!(s.home().stat("/home/u/t1/f0").unwrap().version, v, "no double apply");
+}
+
+/// The `shards = 1` ablation really is the single-lock server: with
+/// modeled disk waits on, concurrent threads pile up on the one shard
+/// and `server.shard_contention` shows it.
+#[test]
+fn single_shard_ablation_serializes_and_counts_contention() {
+    let (s, m) = server(1);
+    s.set_modeled_disk_waits(true);
+    let mut handles = Vec::new();
+    for c in 0..4u64 {
+        let s = s.clone();
+        handles.push(std::thread::spawn(move || {
+            for i in 0..20u64 {
+                let r =
+                    s.handle(c + 1, Request::Stat { path: format!("/home/u/p{c}_{i}") }, t(1.0));
+                // the files don't exist — NotFound is the expected
+                // answer; the point is the lock traffic
+                assert!(matches!(r, Response::Err { code: 2, .. }), "{r:?}");
+            }
+        }));
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    assert!(
+        m.counter(names::SHARD_CONTENTION) > 0,
+        "4 threads on 1 shard with real service waits must contend"
+    );
+}
+
+/// Cross-shard renames from concurrent clients keep both namespaces
+/// consistent (ordered two-shard locking, no deadlock) and count in
+/// `server.cross_shard_ops`.
+#[test]
+fn concurrent_cross_shard_renames_are_deadlock_free() {
+    let (s, m) = server(8);
+    // each client gets its own provably-cross-shard (from, to) pair
+    let mut pairs = Vec::new();
+    for c in 0..4 {
+        let (from, to) = cross_shard_pair(&s, &format!("/home/u/r{c}"));
+        s.home_mut().mkdir_p(&format!("/home/u/r{c}"), t(0.0)).unwrap();
+        s.home_mut().write(&from, format!("payload {c}").as_bytes(), t(0.0)).unwrap();
+        pairs.push((from, to));
+    }
+    let mut handles = Vec::new();
+    for (c, (from, to)) in pairs.iter().enumerate() {
+        let s = s.clone();
+        let (from, to) = (from.clone(), to.clone());
+        handles.push(std::thread::spawn(move || {
+            let r = s.handle(
+                c as u64 + 1,
+                Request::Apply { seq: 1, op: MetaOp::Rename { from, to } },
+                t(1.0),
+            );
+            assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        }));
+    }
+    for h in handles {
+        h.join().expect("rename thread panicked");
+    }
+    for (c, (from, to)) in pairs.iter().enumerate() {
+        assert!(!s.home().exists(from), "{from} moved");
+        assert_eq!(
+            s.home().read(to).map(|d| d.to_vec()),
+            Ok(format!("payload {c}").into_bytes()),
+            "{to}"
+        );
+    }
+    assert!(
+        m.counter(names::CROSS_SHARD_OPS) >= 4,
+        "each rename took the ordered two-shard path"
+    );
+}

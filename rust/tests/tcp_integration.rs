@@ -19,7 +19,7 @@ use xufs::vdisk::DiskModel;
 
 struct Rig {
     tcp: TcpServer,
-    server: Arc<Mutex<FileServer>>,
+    server: Arc<FileServer>,
     pair: KeyPair,
     cfg: XufsConfig,
     engine: Arc<DigestEngine>,
@@ -37,17 +37,18 @@ fn rig(files: &[(&str, Vec<u8>)]) -> Rig {
         home.mkdir_p(&xufs::util::path::parent(p), VirtualTime::ZERO).unwrap();
         home.write(p, d, VirtualTime::ZERO).unwrap();
     }
-    let server = Arc::new(Mutex::new(FileServer::new(
+    let cfg = XufsConfig::default();
+    let server = Arc::new(FileServer::new(
         home,
         DiskModel::new(1e12, 0.0),
         engine.clone(),
         64 * 1024,
         2.0, // short leases so orphan expiry is testable
+        cfg.server.shards,
         metrics.clone(),
-    )));
+    ));
     let auth = Arc::new(Mutex::new(Authenticator::new(pair.clone(), 77)));
     let tcp = TcpServer::spawn(server.clone(), auth, metrics.clone()).expect("bind");
-    let cfg = XufsConfig::default();
     Rig { tcp, server, pair, cfg, engine, metrics }
 }
 
@@ -136,7 +137,7 @@ fn auth_rejects_wrong_phrase() {
     // and a good client still connects fine afterwards
     let mut c = r.client(1);
     c.write_file("/home/u/ok.txt", b"fine", 64).unwrap();
-    assert!(r.server.lock().unwrap().home().exists("/home/u/ok.txt"));
+    assert!(r.server.home().exists("/home/u/ok.txt"));
 }
 
 #[test]
@@ -160,7 +161,7 @@ fn client_crash_recovery_over_tcp() {
     c.write_file("/home/u/wip1.txt", b"work one", 4096).unwrap();
     c.write_file("/home/u/wip2.txt", b"work two", 4096).unwrap();
     assert!(c.queue_len() >= 2);
-    assert!(!r.server.lock().unwrap().home().exists("/home/u/wip1.txt"));
+    assert!(!r.server.home().exists("/home/u/wip1.txt"));
     let snapshot = c.cache_store_snapshot();
     drop(c); // crash
 
@@ -177,9 +178,8 @@ fn client_crash_recovery_over_tcp() {
     );
     assert_eq!(corrupt, 0);
     assert_eq!(c2.queue_len(), 0, "recovery replays the queue");
-    let s = r.server.lock().unwrap();
-    assert_eq!(s.home().read("/home/u/wip1.txt").unwrap(), b"work one");
-    assert_eq!(s.home().read("/home/u/wip2.txt").unwrap(), b"work two");
+    assert_eq!(r.server.home().read("/home/u/wip1.txt").unwrap(), b"work one");
+    assert_eq!(r.server.home().read("/home/u/wip2.txt").unwrap(), b"work two");
 }
 
 #[test]
@@ -188,14 +188,14 @@ fn server_restart_and_reconnect() {
     let mut c = r.client(1);
     c.scan_file("/home/u/f.txt", 4096).unwrap();
     // server process "crashes" (state except disk lost) and restarts
-    r.server.lock().unwrap().crash();
-    r.server.lock().unwrap().restart();
+    r.server.crash();
+    r.server.restart();
     // cached read still fine
     assert_eq!(c.scan_file("/home/u/f.txt", 4096).unwrap(), 5);
     // reconnect re-registers the callback channel; writes flow again
     c.link_mut().reconnect().unwrap();
     c.write_file("/home/u/after.txt", b"back", 4096).unwrap();
-    assert!(r.server.lock().unwrap().home().exists("/home/u/after.txt"));
+    assert!(r.server.home().exists("/home/u/after.txt"));
 }
 
 #[test]
@@ -217,7 +217,7 @@ fn lock_lease_conflict_and_orphan_expiry_over_tcp() {
 fn torn_striped_fetch_detected_via_version() {
     // a FetchRange with a stale expect_version must be refused
     let r = rig(&[("/home/u/v.bin", vec![1u8; 256 * 1024])]);
-    let resp = r.server.lock().unwrap().handle(
+    let resp = r.server.handle(
         1,
         Request::FetchRange {
             path: "/home/u/v.bin".into(),

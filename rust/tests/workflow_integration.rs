@@ -22,7 +22,7 @@ fn full_computational_science_workflow() {
     let mut world = SimWorld::new(cfg);
     let spec = buildtree::BuildSpec::default();
     world.home(|s| {
-        buildtree::generate_tree(s.home_mut(), "/home/sci/code", &spec, 3).unwrap();
+        buildtree::generate_tree(&mut s.home_mut(), "/home/sci/code", &spec, 3).unwrap();
         let input = largefile::text_content(8 << 20, 100, 5);
         s.home_mut().mkdir_p("/home/sci/data", t(0.0)).unwrap();
         s.home_mut().write("/home/sci/data/input.dat", &input, t(0.0)).unwrap();
