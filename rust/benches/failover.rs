@@ -1,0 +1,25 @@
+//! Failover-bench runner: prints the replicated-takeover vs cold-restart
+//! table, regenerates `BENCH_failover.json` at the repo root, and
+//! ENFORCES the acceptance criterion (failover time-to-first-op beats
+//! the cold crontab restart). Deterministic virtual-clock model — a
+//! single iteration IS the run (the nightly CI smoke invokes exactly
+//! this binary).
+
+use xufs::bench::failover::totals;
+use xufs::bench::run_failover;
+use xufs::config::XufsConfig;
+
+fn main() {
+    let cfg = XufsConfig::default();
+    let t = run_failover(&cfg);
+    t.print();
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_failover.json");
+    std::fs::write(&path, format!("{}\n", t.to_json())).expect("write BENCH_failover.json");
+    println!("wrote {}", path.display());
+    let (fo, cold) = totals(&t).expect("table has both recovery modes");
+    assert!(
+        fo < cold,
+        "replicated failover ({fo}s) must beat the cold crontab restart ({cold}s)"
+    );
+    println!("acceptance: failover {fo}s < cold restart {cold}s OK");
+}

@@ -4,10 +4,12 @@
 //! plots, with the paper's own numbers attached as notes for side-by-side
 //! comparison (EXPERIMENTS.md records both).
 
+pub mod failover;
 pub mod figures;
 pub mod report;
 pub mod scale;
 
+pub use failover::run_failover;
 pub use figures::{
     run_ablation_compound, run_ablation_consistency, run_ablation_delta, run_ablation_paging,
     run_ablation_prefetch, run_ablation_stripes, run_ablation_writeback, run_fig2_fig3, run_fig4,

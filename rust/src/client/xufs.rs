@@ -249,6 +249,52 @@ impl<L: ServerLink> XufsClient<L> {
                 root: self.mount_root.clone(),
                 client_id: self.link.client_id(),
             });
+            // re-acquire held locks under FRESH tokens: the server we
+            // reconnected to (a restarted primary, or the promoted
+            // secondary after a failover — DESIGN.md §2.7) lost or never
+            // had our lock table. Already-lapsed leases are dropped
+            // first, not resurrected. Only a DEFINITIVE server answer
+            // (denied/refused) forfeits a lease — a transient transport
+            // failure keeps it, and the generation stays bumped on a
+            // failed reconnect so the next successful one retries here.
+            self.lease.drop_expired(now);
+            if self.link.is_connected() {
+                for held in self.lease.held_leases() {
+                    match self.link.rpc(Request::LockAcquire {
+                        path: held.path.clone(),
+                        kind: held.kind,
+                        owner: self.link.client_id(),
+                    }) {
+                        Ok(Response::LockGranted { token, lease_ns }) => {
+                            let now = self.clock.now();
+                            self.lease.released(held.token);
+                            self.lease.granted(
+                                token,
+                                &held.path,
+                                held.kind,
+                                now.add_secs(lease_ns as f64 / 1e9),
+                            );
+                            for t in self.fd_locks.values_mut() {
+                                if *t == held.token {
+                                    *t = token;
+                                }
+                            }
+                        }
+                        Ok(_) => {
+                            // denied (another client legitimately took
+                            // the lock while we were away) or refused:
+                            // the lock is lost for real — like expiry
+                            self.lease.released(held.token);
+                            self.fd_locks.retain(|_, t| *t != held.token);
+                        }
+                        Err(_) => {
+                            // transient transport failure: keep the
+                            // lease; the renewal path below retries or
+                            // expires it honestly
+                        }
+                    }
+                }
+            }
             // push any queued (possibly disconnected-time) mutations
             let _ = self.flush_queue();
         }

@@ -152,6 +152,12 @@ pub struct FaultConfig {
     pub server_crash_max_steps: u32,
     /// The harness is asked to crash+recover a client.
     pub client_crash_p: f64,
+    /// Given a server crash fired, the probability the schedule also
+    /// decides to PROMOTE the secondary instead of waiting out the
+    /// restart (replicated topologies only; the harness acts on the
+    /// surfaced event). The crashed primary still restarts on schedule —
+    /// fenced, so clients must fail over.
+    pub promote_after_crash_p: f64,
 }
 
 impl Default for FaultConfig {
@@ -169,7 +175,32 @@ impl Default for FaultConfig {
             server_crash_p: 0.0,
             server_crash_max_steps: 24,
             client_crash_p: 0.0,
+            promote_after_crash_p: 0.0,
         }
+    }
+}
+
+/// Home-server replication parameters (DESIGN.md §2.7). Off by default:
+/// the paper's deployment is a lone user-space server restarted by
+/// crontab; `[replica] enabled` stands up the warm secondary the
+/// fault explorer and failover bench exercise.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplicaConfig {
+    /// Master switch: record the applied-op log on the primary, stand up
+    /// the secondary, and hand clients both endpoints.
+    pub enabled: bool,
+    /// Records per `Replicate` frame (one WAN round trip each).
+    pub ship_batch: usize,
+    /// Shipping target: the coordinator's replication tick drains the
+    /// log whenever the secondary trails the primary by at least this
+    /// many applied ops (quiesce/promote always drain fully). Smaller =
+    /// tighter lag = less promote-time catch-up.
+    pub max_lag_ops: u64,
+}
+
+impl Default for ReplicaConfig {
+    fn default() -> Self {
+        ReplicaConfig { enabled: false, ship_batch: 64, max_lag_ops: 8 }
     }
 }
 
@@ -229,6 +260,7 @@ pub struct XufsConfig {
     pub disk: DiskConfig,
     pub fault: FaultConfig,
     pub server: ServerConfig,
+    pub replica: ReplicaConfig,
     /// Directory holding AOT HLO artifacts (empty => native digest engine).
     pub artifacts_dir: String,
     /// Deterministic seed for workloads / jitter.
@@ -284,7 +316,13 @@ impl XufsConfig {
                     cfg.fault.server_crash_max_steps = value.as_u64()? as u32
                 }
                 "fault.client_crash_p" => cfg.fault.client_crash_p = value.as_f64()?,
+                "fault.promote_after_crash_p" => {
+                    cfg.fault.promote_after_crash_p = value.as_f64()?
+                }
                 "server.shards" => cfg.server.shards = value.as_usize()?.max(1),
+                "replica.enabled" => cfg.replica.enabled = value.as_bool()?,
+                "replica.ship_batch" => cfg.replica.ship_batch = value.as_usize()?.max(1),
+                "replica.max_lag_ops" => cfg.replica.max_lag_ops = value.as_u64()?,
                 "artifacts_dir" => cfg.artifacts_dir = value.as_str()?.to_string(),
                 "seed" => cfg.seed = value.as_u64()?,
                 other => {
@@ -373,6 +411,26 @@ localized_dirs = "/scratch/out:/scratch/tmp"
         // untouched fault knobs keep their (inert) defaults
         assert_eq!(c.fault.drop_request_p, 0.0);
         assert!(!XufsConfig::default().fault.enabled, "faults must be opt-in");
+    }
+
+    #[test]
+    fn parse_replica_keys() {
+        let text = "[replica]\nenabled = true\nship_batch = 16\nmax_lag_ops = 4\n";
+        let c = XufsConfig::from_toml(text).unwrap();
+        assert!(c.replica.enabled);
+        assert_eq!(c.replica.ship_batch, 16);
+        assert_eq!(c.replica.max_lag_ops, 4);
+        // replication must be opt-in (the applied-op log costs memory)
+        let d = XufsConfig::default();
+        assert!(!d.replica.enabled);
+        assert_eq!(d.replica.ship_batch, 64);
+        // a zero batch would never make shipping progress: clamped
+        let c = XufsConfig::from_toml("[replica]\nship_batch = 0\n").unwrap();
+        assert_eq!(c.replica.ship_batch, 1);
+        // the promote dice ride the fault section
+        let c = XufsConfig::from_toml("[fault]\npromote_after_crash_p = 0.5\n").unwrap();
+        assert!((c.fault.promote_after_crash_p - 0.5).abs() < 1e-12);
+        assert_eq!(d.fault.promote_after_crash_p, 0.0);
     }
 
     #[test]

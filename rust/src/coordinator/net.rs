@@ -379,7 +379,9 @@ fn response_to_fs_err(r: Response) -> FsError {
     match r {
         Response::Err { code: 2, msg } => FsError::NotFound(msg),
         Response::Err { code: 21, msg } => FsError::IsADir(msg),
-        Response::Err { code: 111, .. } => FsError::Disconnected,
+        // 111 = server down; 112 = standby/fenced endpoint (DESIGN.md
+        // §2.7) — both mean "reconnect, possibly elsewhere"
+        Response::Err { code: 111, .. } | Response::Err { code: 112, .. } => FsError::Disconnected,
         Response::Err { code: 116, msg } => FsError::Stale(msg),
         r => FsError::Protocol(format!("unexpected response {r:?}")),
     }

@@ -17,8 +17,9 @@ use crate::config::XufsConfig;
 use crate::homefs::{FileStore, FsError};
 use crate::metrics::{names, Metrics};
 use crate::proto::{CompoundOp, FileImage, MetaOp, NotifyEvent, RangeImage, Request, Response};
+use crate::replica::Shipper;
 use crate::runtime::DigestEngine;
-use crate::server::FileServer;
+use crate::server::{FileServer, Role};
 use crate::simnet::{Clock, FaultAction, FaultPlan, SimClock, StepOutcome, TransferKind, Wan};
 use crate::transfer;
 use crate::vdisk::DiskModel;
@@ -42,6 +43,16 @@ pub struct SimWorld {
     next_client: u64,
     /// Optional seeded fault plane shared by every link of this world.
     faults: Option<Arc<Mutex<FaultPlan>>>,
+    /// Warm standby home server (DESIGN.md §2.7), stood up by
+    /// [`Self::enable_replica`]. Clients mounted afterwards get both
+    /// endpoints and fail over to it once promoted.
+    secondary: Option<Arc<FileServer>>,
+    /// The log-shipping sidecar streaming the primary's applied-op log
+    /// to the secondary (its link rides the same WAN + fault plane).
+    shipper: Option<Shipper<SimLink>>,
+    /// Set once [`Self::promote_secondary`] succeeded: the secondary is
+    /// the serving primary and the old primary is fenced.
+    promoted: bool,
 }
 
 impl SimWorld {
@@ -78,14 +89,149 @@ impl SimWorld {
             pair,
             next_client: 1,
             faults: None,
+            secondary: None,
+            shipper: None,
+            promoted: false,
         }
+    }
+
+    /// Stand up the warm secondary (DESIGN.md §2.7): a second
+    /// [`FileServer`] seeded from a snapshot of the primary's CURRENT
+    /// home space (the initial full sync), plus the log shipper that
+    /// keeps it within `replica.max_lag_ops` of the primary's applied-op
+    /// log. Call AFTER pre-populating the home space and BEFORE
+    /// mounting clients (mounted links learn both endpoints). Idempotent.
+    pub fn enable_replica(&mut self) {
+        if self.secondary.is_some() {
+            return;
+        }
+        self.cfg.replica.enabled = true;
+        self.server.enable_replication();
+        let snap = self.server.home().clone();
+        let home_disk = DiskModel::new(self.cfg.disk.home_bps, self.cfg.disk.home_op_s);
+        let sec = FileServer::new(
+            snap,
+            home_disk,
+            self.engine.clone(),
+            self.cfg.stripe.min_block as usize,
+            self.cfg.lease.duration_s,
+            self.cfg.server.shards,
+            self.metrics.clone(),
+        );
+        sec.set_role(Role::Secondary);
+        sec.enable_replication();
+        let sec = Arc::new(sec);
+        self.secondary = Some(sec.clone());
+        // the shipper's WAN link targets the secondary; client id 0 is
+        // reserved for the replication daemon
+        let link = SimLink {
+            servers: vec![sec],
+            active: 0,
+            crash_target: self.server.clone(),
+            auth: self.auth.clone(),
+            wan: self.wan.clone(),
+            clock: self.clock.clone(),
+            channel: NotifyChannel::new(),
+            cfg: self.cfg.clone(),
+            metrics: self.metrics.clone(),
+            pair: self.pair.clone(),
+            client_id: 0,
+            net_up: true,
+            session: None,
+            root: "/".to_string(),
+            data_conns_warm: false,
+            faults: self.faults.clone(),
+            replication_link: true,
+        };
+        self.shipper = Some(Shipper::new(link, self.cfg.replica.ship_batch));
+    }
+
+    pub fn secondary(&self) -> Option<Arc<FileServer>> {
+        self.secondary.clone()
+    }
+
+    /// Has [`Self::promote_secondary`] completed?
+    pub fn is_promoted(&self) -> bool {
+        self.promoted
+    }
+
+    /// The node currently authoritative for the namespace: the promoted
+    /// secondary after a failover, the primary otherwise. Invariant
+    /// checks compare against THIS node's home space.
+    pub fn authority(&self) -> Arc<FileServer> {
+        if self.promoted {
+            self.secondary.clone().expect("promoted implies a secondary")
+        } else {
+            self.server.clone()
+        }
+    }
+
+    /// One replication housekeeping step: ship the applied-op log when
+    /// the secondary trails by at least `replica.max_lag_ops` (`force`
+    /// drains unconditionally — quiesce and promotion use that).
+    /// Returns the remaining lag; shipping rides the WAN and the fault
+    /// plane, so a partitioned/refused attempt just leaves lag behind
+    /// for the next tick.
+    pub fn replica_tick(&mut self, force: bool) -> u64 {
+        if self.promoted {
+            return 0;
+        }
+        let max_lag = self.cfg.replica.max_lag_ops;
+        let Some(shipper) = self.shipper.as_mut() else { return 0 };
+        let lag = shipper.lag(&self.server);
+        if lag == 0 || (!force && lag < max_lag.max(1)) {
+            return lag;
+        }
+        if !shipper.link().is_connected() {
+            if shipper.link_mut().reconnect().is_err() {
+                return lag;
+            }
+            if shipper.resync().is_err() {
+                return lag;
+            }
+        }
+        match shipper.ship(&self.server, &self.metrics) {
+            Ok(left) => left,
+            Err(_) => shipper.lag(&self.server),
+        }
+    }
+
+    /// The explicit failover step (DESIGN.md §2.7): catch the secondary
+    /// up to the end of the primary's DURABLE applied-op log (the
+    /// shipper sidecar outlives the server process, so this works while
+    /// the primary is down), promote it, and fence the old primary so
+    /// its crontab restart cannot split-brain the namespace. Fails —
+    /// retriable — while the replication link is partitioned.
+    pub fn promote_secondary(&mut self) -> Result<(), FsError> {
+        if self.promoted {
+            return Ok(());
+        }
+        let Some(shipper) = self.shipper.as_mut() else {
+            return Err(FsError::Invalid("promote: no replica configured".into()));
+        };
+        if !shipper.link().is_connected() {
+            shipper.link_mut().reconnect()?;
+            shipper.resync()?;
+        }
+        let lag = shipper.ship(&self.server, &self.metrics)?;
+        if lag > 0 {
+            return Err(FsError::Disconnected);
+        }
+        shipper.promote()?;
+        self.server.retire();
+        self.promoted = true;
+        Ok(())
     }
 
     /// Install a seeded fault plane. Links mounted afterwards consult it
     /// on every WAN interaction; already-mounted links can be attached
-    /// via [`SimLink::set_faults`].
+    /// via [`SimLink::set_faults`]. The replication shipper's link (if
+    /// any) is re-armed too — log shipping is WAN traffic like any other.
     pub fn set_fault_plan(&mut self, plan: Arc<Mutex<FaultPlan>>) {
-        self.faults = Some(plan);
+        self.faults = Some(plan.clone());
+        if let Some(shipper) = self.shipper.as_mut() {
+            shipper.link_mut().set_faults(plan);
+        }
     }
 
     pub fn fault_plan(&self) -> Option<Arc<Mutex<FaultPlan>>> {
@@ -99,13 +245,25 @@ impl SimWorld {
         f(&self.server)
     }
 
+    /// The endpoint list a freshly mounted client learns from config:
+    /// the primary first, then the secondary when one is configured.
+    fn endpoints(&self) -> Vec<Arc<FileServer>> {
+        let mut servers = vec![self.server.clone()];
+        if let Some(sec) = &self.secondary {
+            servers.push(sec.clone());
+        }
+        servers
+    }
+
     /// USSH login + mount: authenticate, open the control + callback
     /// channels, register the callback, return a mounted client.
     pub fn mount(&mut self, root: &str) -> Result<XufsClient<SimLink>, FsError> {
         let client_id = self.next_client;
         self.next_client += 1;
         let mut link = SimLink {
-            server: self.server.clone(),
+            servers: self.endpoints(),
+            active: 0,
+            crash_target: self.server.clone(),
             auth: self.auth.clone(),
             wan: self.wan.clone(),
             clock: self.clock.clone(),
@@ -119,6 +277,7 @@ impl SimWorld {
             root: root.to_string(),
             data_conns_warm: false,
             faults: self.faults.clone(),
+            replication_link: false,
         };
         link.connect()?;
         Ok(XufsClient::new(
@@ -145,7 +304,9 @@ impl SimWorld {
         client_id: u64,
     ) -> Result<(XufsClient<SimLink>, usize), FsError> {
         let mut link = SimLink {
-            server: self.server.clone(),
+            servers: self.endpoints(),
+            active: 0,
+            crash_target: self.server.clone(),
             auth: self.auth.clone(),
             wan: self.wan.clone(),
             clock: self.clock.clone(),
@@ -159,6 +320,7 @@ impl SimWorld {
             root: root.to_string(),
             data_conns_warm: false,
             faults: self.faults.clone(),
+            replication_link: false,
         };
         link.connect()?;
         // the store is cloned only once the login succeeded — retrying
@@ -185,17 +347,37 @@ impl SimWorld {
         self.server.restart();
     }
 
-    /// Housekeeping tick (lease expiry, as the server's background thread).
+    /// Housekeeping tick (lease expiry, as the server's background
+    /// thread — on every node of the pair).
     pub fn server_tick(&self) {
         let now = self.clock.now();
         self.server.expire_leases(now);
+        if let Some(sec) = &self.secondary {
+            sec.expire_leases(now);
+        }
     }
 }
 
 /// Simulated transport: direct calls into the shared server, with WAN time
 /// accounted against the virtual clock, plus auth + callback channel.
+///
+/// Replication-aware (DESIGN.md §2.7): the link holds the config's full
+/// endpoint list. Requests go to the ACTIVE endpoint; a failed connect
+/// rotates through the others, so when the primary is crashed or fenced
+/// and the secondary has been promoted, the client fails over on its
+/// next reconnect (counted in `replica.failovers`). A non-promoted
+/// standby refuses with code 112, which the link surfaces as
+/// `Disconnected` — the client just keeps retrying until an endpoint
+/// serves.
 pub struct SimLink {
-    server: Arc<FileServer>,
+    /// Endpoint list from config: primary first, then the secondary.
+    servers: Vec<Arc<FileServer>>,
+    /// Index of the endpoint this session is bound to.
+    active: usize,
+    /// The node the fault plane's server-crash/restart events target:
+    /// always the ORIGINAL primary (the paper's crontab-managed home
+    /// node; the issue's schedules crash the primary, not the standby).
+    crash_target: Arc<FileServer>,
     auth: Arc<Mutex<Authenticator>>,
     wan: Arc<Wan>,
     clock: SimClock,
@@ -214,6 +396,12 @@ pub struct SimLink {
     data_conns_warm: bool,
     /// Optional shared fault plane consulted before every interaction.
     faults: Option<Arc<Mutex<FaultPlan>>>,
+    /// True only for the log shipper's link (DESIGN.md §2.7): it may
+    /// bind to a standby (whose 112 on callback registration is
+    /// expected — the replication plane needs no callbacks), while a
+    /// CLIENT link treats that refusal as "wrong endpoint, keep
+    /// rotating" so it can never wedge on a node that serves nothing.
+    replication_link: bool,
 }
 
 impl SimLink {
@@ -222,17 +410,30 @@ impl SimLink {
         self.faults = Some(plan);
     }
 
+    /// The endpoint this session is currently bound to.
+    fn server(&self) -> &Arc<FileServer> {
+        &self.servers[self.active]
+    }
+
+    /// Which endpoint the session is bound to (0 = primary) — the
+    /// failover tests read this.
+    pub fn active_endpoint(&self) -> usize {
+        self.active
+    }
+
     /// Advance the fault plane one interaction and apply its control
     /// side-effects (server crash/restart, partition severing the
-    /// session). Returns the outcome for the caller to act on.
+    /// session). Crash/restart events always target the PRIMARY (see
+    /// [`Self::crash_target`]). Returns the outcome for the caller to
+    /// act on.
     fn fault_step(&mut self) -> StepOutcome {
         let Some(plan) = &self.faults else { return StepOutcome::default() };
         let out = plan.lock().unwrap().step();
         if out.server_restart {
-            self.server.restart();
+            self.crash_target.restart();
         }
         if out.server_crash {
-            self.server.crash();
+            self.crash_target.crash();
         }
         if out.partitioned {
             self.metrics.incr(names::FAULT_PARTITIONED_OPS);
@@ -255,17 +456,56 @@ impl SimLink {
         self.data_conns_warm = false;
     }
 
+    /// A code-112 "wrong endpoint" answer (standby/fenced node,
+    /// DESIGN.md §2.7): kill the session so `is_connected` turns false
+    /// and the next reconnect rotates endpoints, and surface the same
+    /// `Disconnected` a dead server would.
+    fn wrong_endpoint(&mut self) -> FsError {
+        self.sever();
+        FsError::Disconnected
+    }
+
     /// Establish control + callback channels: TCP setup, USSH
     /// challenge-response, callback registration. Connection setup is a
     /// WAN interaction like any other: a partitioned or dropped step
     /// fails the attempt (and advances the schedule, so retrying makes
     /// progress toward the partition's end).
+    ///
+    /// Failover (DESIGN.md §2.7): the active endpoint is tried first;
+    /// a refusal — connect refusal from a crashed primary, the 112
+    /// "wrong endpoint" answer from a fenced/standby node — rotates to
+    /// the next endpoint in the config list. Binding to a different
+    /// endpoint than before counts in `replica.failovers`.
     fn connect(&mut self) -> Result<(), FsError> {
         let out = self.fault_step();
         if out.partitioned || matches!(out.action, Some(FaultAction::DropRequest)) {
             return Err(FsError::Disconnected);
         }
-        if !self.net_up || !self.server.is_up() {
+        if !self.net_up {
+            return Err(FsError::Disconnected);
+        }
+        let n = self.servers.len();
+        let mut last = FsError::Disconnected;
+        for k in 0..n {
+            let idx = (self.active + k) % n;
+            match self.connect_to(idx) {
+                Ok(()) => {
+                    if idx != self.active {
+                        self.active = idx;
+                        self.metrics.incr(names::REPLICA_FAILOVERS);
+                    }
+                    return Ok(());
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    /// One endpoint's worth of connection setup (see [`Self::connect`]).
+    fn connect_to(&mut self, idx: usize) -> Result<(), FsError> {
+        let server = self.servers[idx].clone();
+        if !server.is_up() {
             return Err(FsError::Disconnected);
         }
         self.data_conns_warm = false;
@@ -288,15 +528,28 @@ impl SimLink {
             self.metrics.incr(names::AUTH_FAILURES);
             return Err(FsError::Perm("USSH authentication failed".into()));
         };
-        self.session = Some(session);
-        // attach + register the callback channel
-        self.server.attach_channel(self.client_id, self.channel.clone());
-        self.server.handle(
+        // attach + register the callback channel; a standby or fenced
+        // endpoint refuses the registration (code 112), which fails a
+        // CLIENT's attempt (rotation keeps looking for the serving
+        // node) but is expected on the shipper's link — the replication
+        // plane needs no callbacks, and binding a client to a node that
+        // serves nothing would wedge it there
+        server.attach_channel(self.client_id, self.channel.clone());
+        let resp = server.handle(
             self.client_id,
             Request::RegisterCallback { root: self.root.clone(), client_id: self.client_id },
             self.clock.now(),
         );
         self.wan.rpc(&self.clock, 64, 16);
+        match resp {
+            Response::CallbackRegistered => {}
+            Response::Err { code: 112, .. } if self.replication_link => {}
+            Response::Err { code: 111, .. } | Response::Err { code: 112, .. } => {
+                return Err(FsError::Disconnected)
+            }
+            r => return Err(FsError::Protocol(format!("unexpected register reply {r:?}"))),
+        }
+        self.session = Some(session);
         Ok(())
     }
 
@@ -318,7 +571,7 @@ impl SimLink {
         if !self.net_up || self.session.is_none() {
             return Err(FsError::Disconnected);
         }
-        if !self.server.is_up() {
+        if !self.server().is_up() {
             return Err(FsError::Disconnected);
         }
         Ok(())
@@ -348,8 +601,8 @@ impl ServerLink for SimLink {
                 // the server APPLIES the request; only the reply is lost.
                 // The client must treat this exactly like a drop — which
                 // is why replay has to be idempotent.
-                self.server.disk.op(&self.clock);
-                let _ = self.server.handle(self.client_id, req, self.clock.now());
+                self.server().disk.op(&self.clock);
+                let _ = self.server().handle(self.client_id, req, self.clock.now());
                 self.wan.rpc(&self.clock, req_bytes, 0);
                 return Err(FsError::Disconnected);
             }
@@ -367,23 +620,31 @@ impl ServerLink for SimLink {
                         | Request::LockRenew { .. }
                         | Request::LockRelease { .. }
                 );
-                self.server.disk.op(&self.clock);
+                self.server().disk.op(&self.clock);
                 if duplicable {
-                    let _ = self.server.handle(self.client_id, req.clone(), self.clock.now());
+                    let _ = self.server().handle(self.client_id, req.clone(), self.clock.now());
                 }
-                let resp = self.server.handle(self.client_id, req, self.clock.now());
+                let resp = self.server().handle(self.client_id, req, self.clock.now());
                 self.wan.rpc(&self.clock, req_bytes, resp.wire_bytes());
                 self.metrics.add(names::WAN_RPCS, 1);
+                if let Response::Err { code: 112, .. } = &resp {
+                    return Err(self.wrong_endpoint());
+                }
                 return Ok(resp);
             }
             // a torn bulk transfer does not apply to small control RPCs
             Some(FaultAction::Interrupt) | Some(FaultAction::Delay { .. }) | None => {}
         }
         // server-side disk op for metadata service
-        self.server.disk.op(&self.clock);
-        let resp = self.server.handle(self.client_id, req, self.clock.now());
+        self.server().disk.op(&self.clock);
+        let resp = self.server().handle(self.client_id, req, self.clock.now());
         self.wan.rpc(&self.clock, req_bytes, resp.wire_bytes());
         self.metrics.add(names::WAN_RPCS, 1);
+        // "wrong endpoint" (standby/fenced — code 112) surfaces as a
+        // disconnection: the client reconnects and fails over
+        if let Response::Err { code: 112, .. } = &resp {
+            return Err(self.wrong_endpoint());
+        }
         Ok(resp)
     }
 
@@ -407,11 +668,11 @@ impl ServerLink for SimLink {
         }
         let resp = {
             let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
-            let r = self.server.handle(self.client_id, req, self.clock.now());
+            let r = self.server().handle(self.client_id, req, self.clock.now());
             if let Response::FileBlocks { extents, .. } = &r {
                 // server reads the blocks off its disk
                 let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();
-                self.server.disk.io(&self.clock, bytes);
+                self.server().disk.io(&self.clock, bytes);
             }
             r
         };
@@ -463,6 +724,7 @@ impl ServerLink for SimLink {
             Response::Err { code: 21, msg } => Err(FsError::IsADir(msg)),
             Response::Err { code: 116, msg } => Err(FsError::Stale(msg)),
             Response::Err { code: 111, .. } => Err(FsError::Disconnected),
+            Response::Err { code: 112, .. } => Err(self.wrong_endpoint()),
             r => Err(FsError::Protocol(format!("unexpected range response {r:?}"))),
         }
     }
@@ -490,7 +752,7 @@ impl ServerLink for SimLink {
         let mut images = Vec::with_capacity(files.len());
         let mut sizes = Vec::with_capacity(files.len());
         for (path, _size) in files {
-            if let Response::File { image } = self.server.handle(
+            if let Response::File { image } = self.server().handle(
                 self.client_id,
                 Request::Fetch { path: path.clone() },
                 self.clock.now(),
@@ -501,7 +763,7 @@ impl ServerLink for SimLink {
         }
         // server disk: sequential read of all prefetched bytes
         let total: u64 = images.iter().map(|i| i.data.len() as u64).sum();
-        self.server.disk.io(&self.clock, total);
+        self.server().disk.io(&self.clock, total);
         // the 12 prefetch threads fetch in parallel waves
         self.wan.batch_fetch(&self.clock, &sizes, self.cfg.stripe.prefetch_threads);
         self.metrics.add(names::WAN_BYTES_RX, sizes.iter().sum::<u64>());
@@ -532,15 +794,15 @@ impl ServerLink for SimLink {
         self.metrics.add(names::WAN_BYTES_TX, bytes);
         let resp = {
             // server writes the payload to its disk
-            self.server.disk.io(&self.clock, bytes);
+            self.server().disk.io(&self.clock, bytes);
             if matches!(out.action, Some(FaultAction::Duplicate)) {
-                let _ = self.server.handle(
+                let _ = self.server().handle(
                     self.client_id,
                     Request::Apply { seq, op: op.clone() },
                     self.clock.now(),
                 );
             }
-            self.server.handle(
+            self.server().handle(
                 self.client_id,
                 Request::Apply { seq, op: op.clone() },
                 self.clock.now(),
@@ -549,6 +811,9 @@ impl ServerLink for SimLink {
         if matches!(out.action, Some(FaultAction::DropReply)) {
             // applied at the server; the ack never comes back
             return Err(FsError::Disconnected);
+        }
+        if matches!(resp, Response::Err { code: 112, .. }) {
+            return Err(self.wrong_endpoint());
         }
         if matches!(resp, Response::Err { code: 111, .. }) {
             return Err(FsError::Disconnected);
@@ -583,7 +848,7 @@ impl ServerLink for SimLink {
         self.metrics.add(names::COMPOUND_OPS, ops.len() as u64);
         let resp = {
             // server writes the aggregated payload to its disk
-            self.server.disk.io(&self.clock, payload);
+            self.server().disk.io(&self.clock, payload);
             let req = Request::Compound {
                 ops: ops
                     .iter()
@@ -591,9 +856,9 @@ impl ServerLink for SimLink {
                     .collect(),
             };
             if matches!(out.action, Some(FaultAction::Duplicate)) {
-                let _ = self.server.handle(self.client_id, req.clone(), self.clock.now());
+                let _ = self.server().handle(self.client_id, req.clone(), self.clock.now());
             }
-            self.server.handle(self.client_id, req, self.clock.now())
+            self.server().handle(self.client_id, req, self.clock.now())
         };
         if matches!(out.action, Some(FaultAction::DropReply)) {
             // the WHOLE batch applied; the reply frame is lost. The
@@ -604,6 +869,7 @@ impl ServerLink for SimLink {
         match resp {
             Response::CompoundReply { replies } => Ok(replies),
             Response::Err { code: 111, .. } => Err(FsError::Disconnected),
+            Response::Err { code: 112, .. } => Err(self.wrong_endpoint()),
             r => Err(FsError::Protocol(format!("unexpected compound reply {r:?}"))),
         }
     }
@@ -647,7 +913,7 @@ impl ServerLink for SimLink {
     }
 
     fn is_connected(&self) -> bool {
-        self.net_up && self.session.is_some() && self.channel.is_connected() && self.server.is_up()
+        self.net_up && self.session.is_some() && self.channel.is_connected() && self.server().is_up()
     }
 
     fn reconnect(&mut self) -> Result<u64, FsError> {
@@ -889,6 +1155,63 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn replica_ships_and_failover_serves_clients() {
+        let mut w = world_with_home();
+        w.enable_replica();
+        let mut c = w.mount("/home/u").unwrap();
+        assert_eq!(c.link().active_endpoint(), 0);
+        // writes land at the primary and ship to the standby
+        c.write_file("/home/u/proj/repl.txt", b"replicated content", 1024).unwrap();
+        assert_eq!(w.replica_tick(true), 0, "forced tick drains the log");
+        let sec = w.secondary().unwrap();
+        assert_eq!(sec.home().read("/home/u/proj/repl.txt").unwrap(), b"replicated content");
+        // the standby refuses clients while the primary serves
+        assert!(!w.is_promoted());
+        // primary crashes; the operator promotes (drain + Promote + fence)
+        w.server_crash();
+        w.promote_secondary().unwrap();
+        assert!(w.is_promoted());
+        // the client's next reconnect rotates to the promoted secondary
+        assert!(!c.link().is_connected(), "crashed primary leaves the session dead");
+        c.link_mut().reconnect().unwrap();
+        assert_eq!(c.link().active_endpoint(), 1);
+        assert!(w.metrics.counter(names::REPLICA_FAILOVERS) >= 1);
+        assert_eq!(c.scan_file("/home/u/proj/repl.txt", 1024).unwrap(), 18);
+        // and writes keep working against the new primary
+        c.write_file("/home/u/proj/after-failover.txt", b"post", 64).unwrap();
+        assert_eq!(
+            w.authority().home().read("/home/u/proj/after-failover.txt").unwrap(),
+            b"post"
+        );
+        // the fenced old primary refuses even after its crontab restart
+        w.server_restart();
+        let r = w.server.handle(
+            c.link().client_id(),
+            Request::Stat { path: "/home/u/proj/repl.txt".into() },
+            w.clock.now(),
+        );
+        assert!(matches!(r, Response::Err { code: 112, .. }), "{r:?}");
+    }
+
+    #[test]
+    fn replica_tick_respects_lag_threshold() {
+        let mut w = world_with_home();
+        w.cfg.replica.max_lag_ops = 100; // far above anything this test queues
+        w.enable_replica();
+        let mut c = w.mount("/home/u").unwrap();
+        c.write_file("/home/u/proj/lagged.txt", b"lagging", 1024).unwrap();
+        let lag = w.replica_tick(false);
+        assert!(lag >= 1, "below the threshold nothing ships (lag {lag})");
+        let sec = w.secondary().unwrap();
+        assert!(!sec.home().exists("/home/u/proj/lagged.txt"));
+        // I4 shape: the un-shipped write is invisible at the standby —
+        // it never serves state ahead of its watermark
+        assert_eq!(sec.repl_ship_seq(), 0);
+        assert_eq!(w.replica_tick(true), 0);
+        assert!(sec.home().exists("/home/u/proj/lagged.txt"));
     }
 
     #[test]

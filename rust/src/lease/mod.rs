@@ -210,6 +210,13 @@ impl LeaseManager {
         self.held.values().find(|l| l.path == path).map(|l| l.token)
     }
 
+    /// Snapshot of every held lease — the reconnect path re-acquires
+    /// each on the (possibly different) serving endpoint, under a fresh
+    /// token (the old table died with the crash/failover).
+    pub fn held_leases(&self) -> Vec<HeldLease> {
+        self.held.values().cloned().collect()
+    }
+
     pub fn len(&self) -> usize {
         self.held.len()
     }

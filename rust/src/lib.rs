@@ -44,6 +44,7 @@ pub mod lease;
 pub mod metaq;
 pub mod metrics;
 pub mod proto;
+pub mod replica;
 pub mod runtime;
 pub mod server;
 pub mod simnet;

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! xufs selftest                      quick end-to-end smoke (sim world)
-//! xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|ablations|all
+//! xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|ablations|all
 //! xufs census [--seed N]             regenerate Table 1
 //! xufs serve [--config xufs.toml]    real TCP file server (demo home space)
 //! xufs config                        print the default config as TOML keys
@@ -80,7 +80,7 @@ xufs — wide-area distributed file system (XUFS reproduction)
 
 USAGE:
   xufs selftest                      end-to-end smoke test (sim world)
-  xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|ablations|all
+  xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|ablations|all
   xufs census [--seed N]             regenerate the Table 1 census
   xufs serve [--config xufs.toml]    run the TCP file server (demo home)
   xufs perf                          hot-path microbenchmarks (wall-clock)
@@ -130,6 +130,7 @@ fn run_bench(cfg: XufsConfig, which: &str, quick: bool) {
             }
         }
         "fig4" => bench::run_fig4(&cfg, 5).print(),
+        "failover" => bench::run_failover(&cfg).print(),
         "fig5" | "table2" => {
             let gib = if quick { 256 << 20 } else { 1u64 << 30 };
             let (f, t) = bench::run_fig5_table2(&cfg, 5, gib);
@@ -293,6 +294,8 @@ delta_writeback = true
 [cache]
 capacity_gib = 1024
 localized_dirs = \"/home/u/scratch:/home/u/runs\"
+budget_bytes = 0
+readahead_blocks = 32
 
 [lease]
 duration_s = 30
@@ -306,6 +309,26 @@ home_op_ms = 2
 digest_cpu_mibps = 300
 
 [server]
-shards = 8"
+shards = 8
+
+[replica]
+enabled = false
+ship_batch = 64
+max_lag_ops = 8
+
+[fault]
+enabled = false
+drop_request_p = 0.0
+drop_reply_p = 0.0
+duplicate_p = 0.0
+delay_p = 0.0
+delay_max_ms = 100
+interrupt_p = 0.0
+partition_p = 0.0
+partition_max_steps = 16
+server_crash_p = 0.0
+server_crash_max_steps = 24
+client_crash_p = 0.0
+promote_after_crash_p = 0.0"
     );
 }

@@ -158,6 +158,14 @@ pub mod names {
     /// Operations that took locks on more than one namespace shard
     /// (cross-shard renames, callback-registry broadcasts).
     pub const CROSS_SHARD_OPS: &str = "server.cross_shard_ops";
+    /// Gauge: applied ops the secondary trails the primary's replication
+    /// log by (refreshed on every ship attempt).
+    pub const REPLICA_LAG: &str = "replica.lag_ops";
+    /// Client connects that landed on a different endpoint than the one
+    /// previously active (primary -> promoted secondary, or back).
+    pub const REPLICA_FAILOVERS: &str = "replica.failovers";
+    /// `Replicate` frames the shipper successfully delivered.
+    pub const REPLICA_SHIP_BATCHES: &str = "replica.ship_batches";
     pub const OP_LATENCY: &str = "vfs.op_latency";
 
     /// Every metric the system emits, with a one-line meaning. This is
@@ -198,6 +206,9 @@ pub mod names {
         (AUTH_FAILURES, "USSH authentication attempts the server rejected."),
         (SHARD_CONTENTION, "Shard-lock acquisitions that blocked behind another request."),
         (CROSS_SHARD_OPS, "Operations that locked more than one namespace shard."),
+        (REPLICA_LAG, "Gauge: applied ops the secondary trails the primary's replication log by."),
+        (REPLICA_FAILOVERS, "Client connects that switched to a different endpoint (failover)."),
+        (REPLICA_SHIP_BATCHES, "`Replicate` frames the log shipper successfully delivered."),
         (OP_LATENCY, "Histogram of per-VFS-op latency, seconds."),
     ];
 

@@ -231,6 +231,93 @@ impl MetaOp {
     }
 }
 
+/// One record of the server's applied-op replication log (DESIGN.md
+/// §2.7). The primary appends a record for every *genuine* application
+/// outcome — successful client ops (with the resulting version), failed
+/// client ops (so the per-(client,seq) failure sets replicate alongside
+/// the idempotence watermarks), and home-side local edits — and a
+/// [`crate::replica::Shipper`] streams them, HMAC-framed, to the
+/// secondary in strict `ship_seq` order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ReplRecord {
+    /// Global position in the applied-op log, 1-based and gapless: the
+    /// secondary applies `watermark + 1` or nothing.
+    pub ship_seq: u64,
+    /// Namespace shard the op routed to on the primary (per-shard
+    /// replication watermarks are tracked against this).
+    pub shard: u32,
+    pub payload: ReplPayload,
+}
+
+/// What one replication record carries.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ReplPayload {
+    /// A client meta-op that APPLIED on the primary. The secondary
+    /// replays it through its normal apply path under the original
+    /// `(client_id, seq)`, so the idempotence watermark advances
+    /// identically and a post-failover replay of the same seq is
+    /// answered as a duplicate, never re-applied.
+    Op { client_id: u64, seq: u64, new_version: u64, op: MetaOp },
+    /// A client meta-op that FAILED semantically on the primary. The
+    /// secondary records the seq in its per-client failed set: a
+    /// compound may have advanced the watermark past this seq, and
+    /// answering its post-failover retry as a duplicate would falsely
+    /// ack an op that never landed (DESIGN.md §2.5).
+    Failed { client_id: u64, seq: u64, path: String },
+    /// A home-side local edit (`local_write`/`local_unlink`) — not a
+    /// client op, so it carries no seq and touches no watermark.
+    Local { op: MetaOp },
+}
+
+impl ReplRecord {
+    pub fn encode_into(&self, e: &mut Encoder) {
+        e.u64(self.ship_seq).u32(self.shard);
+        match &self.payload {
+            ReplPayload::Op { client_id, seq, new_version, op } => {
+                e.u8(0).u64(*client_id).u64(*seq).u64(*new_version);
+                op.encode_into(e);
+            }
+            ReplPayload::Failed { client_id, seq, path } => {
+                e.u8(1).u64(*client_id).u64(*seq).str(path);
+            }
+            ReplPayload::Local { op } => {
+                e.u8(2);
+                op.encode_into(e);
+            }
+        }
+    }
+
+    pub fn decode_from(d: &mut Decoder) -> Result<Self, ProtoError> {
+        let ship_seq = d.u64()?;
+        let shard = d.u32()?;
+        let payload = match d.u8()? {
+            0 => ReplPayload::Op {
+                client_id: d.u64()?,
+                seq: d.u64()?,
+                new_version: d.u64()?,
+                op: MetaOp::decode_from(d)?,
+            },
+            1 => ReplPayload::Failed { client_id: d.u64()?, seq: d.u64()?, path: d.str()? },
+            2 => ReplPayload::Local { op: MetaOp::decode_from(d)? },
+            t => return Err(ProtoError(format!("bad ReplPayload tag {t}"))),
+        };
+        Ok(ReplRecord { ship_seq, shard, payload })
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Encoder::new();
+        self.encode_into(&mut e);
+        e.into_bytes()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
+        let mut d = Decoder::new(buf);
+        let rec = Self::decode_from(&mut d)?;
+        d.expect_end()?;
+        Ok(rec)
+    }
+}
+
 /// One operation inside a [`Request::Compound`] (DESIGN.md §2.3): either
 /// a queued meta-op replay (idempotent via its client sequence number) or
 /// a read-only stat. The server answers each with a full [`Response`], so
@@ -320,6 +407,21 @@ pub enum Request {
     /// trip. Answered by [`Response::CompoundReply`] with one per-op
     /// [`Response`] in order.
     Compound { ops: Vec<CompoundOp> },
+    /// Log shipping (DESIGN.md §2.7): a batch of HMAC-framed
+    /// [`ReplRecord`]s starting at ship-seq `from`, sent by the
+    /// primary's shipper to the secondary. Answered by
+    /// [`Response::ReplicaAck`] with the secondary's new global
+    /// replication watermark; records at or below the watermark are
+    /// skipped (idempotent re-ship after a lost ack), a gap is refused.
+    Replicate { from: u64, frames: Vec<u8> },
+    /// Ask a replica (or the primary) for its replication watermark:
+    /// `shard < shard_count` reads that shard's watermark, anything
+    /// else (use `u32::MAX`) the global one.
+    WatermarkQuery { shard: u32 },
+    /// Explicit promotion step (DESIGN.md §2.7): the secondary becomes
+    /// the primary and starts serving clients. Idempotent on an
+    /// already-primary node; refused by a retired (fenced) one.
+    Promote,
 }
 
 impl Request {
@@ -372,6 +474,15 @@ impl Request {
                     op.encode_into(&mut e);
                 }
             }
+            Request::Replicate { from, frames } => {
+                e.u8(14).u64(*from).bytes(frames);
+            }
+            Request::WatermarkQuery { shard } => {
+                e.u8(15).u32(*shard);
+            }
+            Request::Promote => {
+                e.u8(16);
+            }
         }
         e.into_bytes()
     }
@@ -409,6 +520,9 @@ impl Request {
                 }
                 Request::Compound { ops }
             }
+            14 => Request::Replicate { from: d.u64()?, frames: d.bytes()?.to_vec() },
+            15 => Request::WatermarkQuery { shard: d.u32()? },
+            16 => Request::Promote,
             t => return Err(ProtoError(format!("bad Request tag {t}"))),
         };
         d.expect_end()?;
@@ -462,6 +576,15 @@ pub enum Response {
     /// have produced (`Applied`/`Attr`/`Err`), so partial failure is
     /// visible per op.
     CompoundReply { replies: Vec<Response> },
+    /// The secondary's global replication watermark after ingesting a
+    /// [`Request::Replicate`] batch (DESIGN.md §2.7).
+    ReplicaAck { watermark: u64 },
+    /// Answer to [`Request::WatermarkQuery`]: the queried shard (echoed)
+    /// and its replication watermark.
+    Watermark { shard: u32, watermark: u64 },
+    /// Answer to [`Request::Promote`]: the node now serves as primary;
+    /// `watermark` is the replication log position it took over at.
+    Promoted { watermark: u64 },
 }
 
 impl Response {
@@ -529,6 +652,15 @@ impl Response {
                 for r in replies {
                     e.bytes(&r.encode());
                 }
+            }
+            Response::ReplicaAck { watermark } => {
+                e.u8(16).u64(*watermark);
+            }
+            Response::Watermark { shard, watermark } => {
+                e.u8(17).u32(*shard).u64(*watermark);
+            }
+            Response::Promoted { watermark } => {
+                e.u8(18).u64(*watermark);
             }
         }
         e.into_bytes()
@@ -598,6 +730,9 @@ impl Response {
                 }
                 Response::CompoundReply { replies }
             }
+            16 => Response::ReplicaAck { watermark: d.u64()? },
+            17 => Response::Watermark { shard: d.u32()?, watermark: d.u64()? },
+            18 => Response::Promoted { watermark: d.u64()? },
             t => return Err(ProtoError(format!("bad Response tag {t}"))),
         };
         d.expect_end()?;
@@ -686,6 +821,10 @@ mod tests {
                     CompoundOp::Stat { path: "/f".into() },
                 ],
             },
+            Request::Replicate { from: 7, frames: vec![0xAB; 48] },
+            Request::WatermarkQuery { shard: 3 },
+            Request::WatermarkQuery { shard: u32::MAX },
+            Request::Promote,
         ];
         for r in reqs {
             let b = r.encode();
@@ -739,6 +878,9 @@ mod tests {
                     Response::Attr { attr: attr() },
                 ],
             },
+            Response::ReplicaAck { watermark: 41 },
+            Response::Watermark { shard: 2, watermark: 17 },
+            Response::Promoted { watermark: 99 },
         ];
         for r in resps {
             let b = r.encode();
@@ -768,6 +910,45 @@ mod tests {
         for op in ops {
             let b = op.encode();
             assert_eq!(MetaOp::decode(&b).unwrap(), op, "{op:?}");
+        }
+    }
+
+    #[test]
+    fn repl_record_roundtrip_all_variants() {
+        let recs = vec![
+            ReplRecord {
+                ship_seq: 1,
+                shard: 0,
+                payload: ReplPayload::Op {
+                    client_id: 3,
+                    seq: 9,
+                    new_version: 4,
+                    op: MetaOp::WriteFull {
+                        path: "/f".into(),
+                        data: vec![1; 30],
+                        digests: vec![7],
+                        base_version: 2,
+                    },
+                },
+            },
+            ReplRecord {
+                ship_seq: 2,
+                shard: 5,
+                payload: ReplPayload::Failed { client_id: 3, seq: 10, path: "/ghost".into() },
+            },
+            ReplRecord {
+                ship_seq: 3,
+                shard: 1,
+                payload: ReplPayload::Local { op: MetaOp::Unlink { path: "/gone".into() } },
+            },
+        ];
+        for rec in recs {
+            let b = rec.encode();
+            assert_eq!(ReplRecord::decode(&b).unwrap(), rec, "{rec:?}");
+            // truncations error, never panic
+            for cut in 0..b.len() {
+                assert!(ReplRecord::decode(&b[..cut]).is_err(), "prefix of {cut} bytes accepted");
+            }
         }
     }
 

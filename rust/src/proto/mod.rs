@@ -13,7 +13,7 @@ mod messages;
 pub use codec::{Decoder, Encoder, ProtoError};
 pub use messages::{
     BlockExtent, CompoundOp, DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, RangeImage,
-    Request, Response, WireAttr,
+    ReplPayload, ReplRecord, Request, Response, WireAttr,
 };
 
 /// Frame a message body with a u32-LE length prefix (TCP transport).

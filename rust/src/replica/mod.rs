@@ -1,0 +1,292 @@
+//! Home-server replication (DESIGN.md §2.7).
+//!
+//! XUFS's single home server is the last single point of failure the
+//! paper leaves standing: clients survive disconnection and WAN
+//! partitions, but a crashed home node stalls every private namespace it
+//! exports until crontab restarts it. This module adds the warm standby:
+//! the primary [`FileServer`](crate::server::FileServer) records every
+//! *genuine* application outcome in an applied-op log (successful client
+//! ops with their resulting version, semantic failures, home-side local
+//! edits — [`ReplRecord`]), and a [`Shipper`] streams that log, HMAC-
+//! framed exactly like the PR 3 durable op-log records, to a secondary
+//! `FileServer` over any [`ServerLink`].
+//!
+//! The secondary ingests records in strict `ship_seq` order through its
+//! normal apply path, so everything the consistency protocol depends on
+//! replicates *by construction*:
+//!
+//! * per-(client, seq) idempotence watermarks and failed-seq sets — a
+//!   post-failover replay of an op the primary already acknowledged is
+//!   answered as a duplicate, never re-applied;
+//! * conflict preservation — a replayed `WriteFull { base_version }`
+//!   re-runs the same digest comparison against the same store state,
+//!   so `.xufs-conflict-*` files appear exactly once;
+//! * version monotonicity — the secondary's inodes take exactly the
+//!   version bumps the primary's did, in the same order.
+//!
+//! **Durability model.** The applied-op log lives on the primary's home
+//! disk next to the namespace it guards (the paper's server is a user
+//! process restarted by crontab: a crash kills the process, not the
+//! disk). The shipper is a sidecar on the same host, so it keeps
+//! draining the durable log even while the server process is down —
+//! which is what lets an explicit [`Request::Promote`] first catch the
+//! secondary up to the log's end and then switch roles without losing
+//! acknowledged operations. A full *host* loss would forfeit the
+//! unshipped tail (bounded by `replica.max_lag_ops`); fencing that
+//! requires synchronous shipping, which the paper's WAN budget rules
+//! out (DESIGN.md §2.7 discusses the trade).
+//!
+//! Wire framing: each record travels as
+//! `len:u32le | record-bytes | hmac:[u8;32]` with
+//! `hmac = HMAC-SHA256("xufs-repl-v1", record-bytes)` — a torn or
+//! tampered frame fails verification and the whole batch is refused
+//! (the shipper simply re-sends; ingestion is idempotent).
+
+use crate::client::ServerLink;
+use crate::homefs::FsError;
+use crate::metrics::{names, Metrics};
+use crate::proto::{ProtoError, ReplRecord, Request, Response};
+use crate::server::FileServer;
+use crate::util::hmacsha;
+
+/// HMAC key for replication frames (versioned like the op-log key).
+const REPL_HMAC_KEY: &[u8] = b"xufs-repl-v1";
+const FRAME_HDR: usize = 4;
+const FRAME_MAC: usize = 32;
+
+/// Encode records as a contiguous run of HMAC frames (the payload of one
+/// [`Request::Replicate`]).
+pub fn frame_records(records: &[ReplRecord]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for rec in records {
+        let body = rec.encode();
+        out.extend_from_slice(&(body.len() as u32).to_le_bytes());
+        out.extend_from_slice(&body);
+        out.extend_from_slice(&hmacsha::hmac_sha256(REPL_HMAC_KEY, &[&body]));
+    }
+    out
+}
+
+/// Decode and verify a run of HMAC frames. Any torn, short, or tampered
+/// frame fails the WHOLE batch — the shipper re-sends and the secondary's
+/// gapless-ingest rule makes the retry safe.
+pub fn decode_frames(buf: &[u8]) -> Result<Vec<ReplRecord>, ProtoError> {
+    let mut out = Vec::new();
+    let mut at = 0usize;
+    while at < buf.len() {
+        if buf.len() - at < FRAME_HDR + FRAME_MAC {
+            return Err(ProtoError("torn replication frame header".into()));
+        }
+        let mut len_bytes = [0u8; 4];
+        len_bytes.copy_from_slice(&buf[at..at + 4]);
+        let len = u32::from_le_bytes(len_bytes) as usize;
+        let Some(end) = at
+            .checked_add(FRAME_HDR)
+            .and_then(|x| x.checked_add(len))
+            .and_then(|x| x.checked_add(FRAME_MAC))
+        else {
+            return Err(ProtoError("replication frame length overflow".into()));
+        };
+        if end > buf.len() {
+            return Err(ProtoError("torn replication frame payload".into()));
+        }
+        let body = &buf[at + FRAME_HDR..at + FRAME_HDR + len];
+        let mac = &buf[at + FRAME_HDR + len..end];
+        let want = hmacsha::hmac_sha256(REPL_HMAC_KEY, &[body]);
+        if !hmacsha::ct_eq(mac, &want) {
+            return Err(ProtoError("replication frame failed HMAC verification".into()));
+        }
+        out.push(ReplRecord::decode(body)?);
+        at = end;
+    }
+    Ok(out)
+}
+
+/// The log-shipping sidecar: reads the primary's durable applied-op log
+/// locally (same host — no WAN) and streams it to the secondary over a
+/// [`ServerLink`] in bounded batches. One WAN round trip per batch; the
+/// ack carries the secondary's new watermark, which is the only cursor
+/// state the shipper trusts (a lost ack just re-ships, idempotently).
+pub struct Shipper<L: ServerLink> {
+    link: L,
+    /// Records per `Replicate` frame (`replica.ship_batch`).
+    batch: usize,
+    /// The secondary's global watermark as of the last ack/resync.
+    cursor: u64,
+}
+
+impl<L: ServerLink> Shipper<L> {
+    pub fn new(link: L, batch: usize) -> Self {
+        Shipper { link, batch: batch.max(1), cursor: 0 }
+    }
+
+    pub fn link(&self) -> &L {
+        &self.link
+    }
+
+    pub fn link_mut(&mut self) -> &mut L {
+        &mut self.link
+    }
+
+    /// The secondary's watermark as last observed (pessimistic: a lost
+    /// ack under-reports, which only causes an idempotent re-ship).
+    pub fn watermark(&self) -> u64 {
+        self.cursor
+    }
+
+    /// How many applied ops the secondary is behind the primary's log.
+    pub fn lag(&self, primary: &FileServer) -> u64 {
+        primary.repl_ship_seq().saturating_sub(self.cursor)
+    }
+
+    /// Re-read the secondary's global watermark (after a reconnect, or
+    /// when a fresh shipper attaches to a secondary with history).
+    pub fn resync(&mut self) -> Result<u64, FsError> {
+        match self.link.rpc(Request::WatermarkQuery { shard: u32::MAX })? {
+            Response::Watermark { watermark, .. } => {
+                self.cursor = self.cursor.max(watermark);
+                Ok(self.cursor)
+            }
+            Response::Err { code: 111, .. } | Response::Err { code: 112, .. } => {
+                Err(FsError::Disconnected)
+            }
+            r => Err(FsError::Protocol(format!("unexpected watermark reply {r:?}"))),
+        }
+    }
+
+    /// Ship everything the primary's log holds beyond the secondary's
+    /// watermark, in `batch`-sized frames. Returns the remaining lag
+    /// (0 on full drain; an `Err` leaves the cursor where the last ack
+    /// put it — the next call resumes). Also refreshes the
+    /// `replica.lag_ops` gauge and counts `replica.ship_batches`.
+    pub fn ship(&mut self, primary: &FileServer, metrics: &Metrics) -> Result<u64, FsError> {
+        let result = self.ship_inner(primary, metrics);
+        metrics.set_gauge(names::REPLICA_LAG, self.lag(primary) as f64);
+        result?;
+        Ok(self.lag(primary))
+    }
+
+    fn ship_inner(&mut self, primary: &FileServer, metrics: &Metrics) -> Result<(), FsError> {
+        while self.cursor < primary.repl_ship_seq() {
+            let records = primary.repl_records_after(self.cursor, self.batch);
+            if records.is_empty() {
+                return Ok(());
+            }
+            let from = records[0].ship_seq;
+            let frames = frame_records(&records);
+            match self.link.rpc(Request::Replicate { from, frames })? {
+                Response::ReplicaAck { watermark } => {
+                    if watermark <= self.cursor {
+                        // the secondary refused to advance (gap or
+                        // divergence): surface it rather than spin
+                        return Err(FsError::Protocol(format!(
+                            "replication stalled at watermark {watermark} (cursor {})",
+                            self.cursor
+                        )));
+                    }
+                    self.cursor = watermark;
+                    metrics.incr(names::REPLICA_SHIP_BATCHES);
+                }
+                Response::Err { code: 111, .. } | Response::Err { code: 112, .. } => {
+                    return Err(FsError::Disconnected)
+                }
+                r => return Err(FsError::Protocol(format!("unexpected replicate reply {r:?}"))),
+            }
+        }
+        Ok(())
+    }
+
+    /// The explicit promotion step: the secondary (already caught up —
+    /// call [`Self::ship`] to lag 0 first) takes over as primary.
+    /// Returns the log position it took over at.
+    pub fn promote(&mut self) -> Result<u64, FsError> {
+        match self.link.rpc(Request::Promote)? {
+            Response::Promoted { watermark } => Ok(watermark),
+            Response::Err { code: 111, .. } | Response::Err { code: 112, .. } => {
+                Err(FsError::Disconnected)
+            }
+            r => Err(FsError::Protocol(format!("unexpected promote reply {r:?}"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::proto::{MetaOp, ReplPayload};
+
+    fn rec(ship_seq: u64) -> ReplRecord {
+        ReplRecord {
+            ship_seq,
+            shard: (ship_seq % 4) as u32,
+            payload: ReplPayload::Op {
+                client_id: 1,
+                seq: ship_seq,
+                new_version: ship_seq + 1,
+                op: MetaOp::WriteFull {
+                    path: format!("/f{ship_seq}"),
+                    data: vec![ship_seq as u8; 64],
+                    digests: vec![3],
+                    base_version: 0,
+                },
+            },
+        }
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let records: Vec<ReplRecord> = (1..=5).map(rec).collect();
+        let buf = frame_records(&records);
+        assert_eq!(decode_frames(&buf).unwrap(), records);
+        assert_eq!(decode_frames(&[]).unwrap(), Vec::<ReplRecord>::new());
+    }
+
+    #[test]
+    fn torn_and_tampered_frames_rejected() {
+        let records: Vec<ReplRecord> = (1..=3).map(rec).collect();
+        let buf = frame_records(&records);
+        // a cut exactly between frames is a valid SHORTER batch (the
+        // shipper's reply-loss re-send depends on that); any other
+        // prefix is torn and refuses wholesale — never a panic, never a
+        // partial accept
+        let mut boundaries = vec![0usize];
+        for r in &records {
+            let len = FRAME_HDR + r.encode().len() + FRAME_MAC;
+            boundaries.push(boundaries.last().unwrap() + len);
+        }
+        for cut in 1..buf.len() {
+            match decode_frames(&buf[..cut]) {
+                Ok(got) => {
+                    let k = boundaries
+                        .iter()
+                        .position(|b| *b == cut)
+                        .unwrap_or_else(|| panic!("non-boundary prefix of {cut} bytes accepted"));
+                    assert_eq!(got, records[..k], "boundary cut {cut}");
+                }
+                Err(_) => {
+                    assert!(
+                        !boundaries.contains(&cut),
+                        "boundary cut {cut} must decode to a record prefix"
+                    );
+                }
+            }
+        }
+        // a flipped payload byte fails the HMAC
+        let mut bad = buf.clone();
+        bad[FRAME_HDR + 2] ^= 0xFF;
+        assert!(decode_frames(&bad).is_err());
+        // a flipped MAC byte likewise
+        let mut bad = buf;
+        let first_len = u32::from_le_bytes([bad[0], bad[1], bad[2], bad[3]]) as usize;
+        bad[FRAME_HDR + first_len] ^= 0x01;
+        assert!(decode_frames(&bad).is_err());
+    }
+
+    #[test]
+    fn absurd_frame_length_rejected() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&u32::MAX.to_le_bytes());
+        buf.extend_from_slice(&[0u8; 64]);
+        assert!(decode_frames(&buf).is_err());
+    }
+}

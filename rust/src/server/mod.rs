@@ -37,10 +37,16 @@
 //! * fan out change notifications to registered callback channels
 //!   (skipping the originating client, whose copy is already current);
 //! * grant lock leases via [`LockTable`] and expire orphans;
-//! * simulate crash/restart (the paper restarts the server from crontab).
+//! * simulate crash/restart (the paper restarts the server from crontab);
+//! * as one half of a replicated pair (DESIGN.md §2.7): record applied
+//!   ops in a durable replication log ([`Role::Primary`]), or ingest the
+//!   shipped log through the same apply path ([`Role::Secondary`]) so
+//!   idempotence watermarks, failed-seq sets and conflict preservation
+//!   replicate by construction — and take over on an explicit
+//!   [`Request::Promote`].
 
 use std::collections::{BTreeSet, HashMap};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Duration;
 
@@ -49,12 +55,54 @@ use crate::homefs::{FileStore, FsError, NodeKind};
 use crate::lease::{Acquire, LockTable};
 use crate::metrics::{names, Metrics};
 use crate::proto::{
-    BlockExtent, CompoundOp, DirEntry, FileImage, MetaOp, NotifyEvent, Request, Response, WireAttr,
+    BlockExtent, CompoundOp, DirEntry, FileImage, MetaOp, NotifyEvent, ReplPayload, ReplRecord,
+    Request, Response, WireAttr,
 };
 use crate::runtime::DigestEngine;
 use crate::simnet::VirtualTime;
 use crate::util::path as vpath;
 use crate::vdisk::DiskModel;
+
+/// The server's place in a replicated pair (DESIGN.md §2.7). A plain
+/// unreplicated deployment runs a lone `Primary`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Role {
+    /// Serves clients; records applied ops in the replication log.
+    Primary,
+    /// Warm standby: ingests shipped log records through the normal
+    /// apply path, refuses client requests (code 112) until promoted.
+    Secondary,
+    /// Fenced ex-primary: after a promotion the old node, even once its
+    /// process restarts, refuses everything but `Ping`/`WatermarkQuery`
+    /// so a stale client cannot split-brain the namespace.
+    Retired,
+}
+
+const ROLE_PRIMARY: u8 = 0;
+const ROLE_SECONDARY: u8 = 1;
+const ROLE_RETIRED: u8 = 2;
+
+/// The applied-op replication log (DESIGN.md §2.7). On the primary it is
+/// the ship source (journaled to the home disk alongside the idempotence
+/// watermarks — it survives `crash`); on the secondary it is the mirror
+/// that makes ship-seqs line up across the pair and per-shard watermarks
+/// answerable.
+///
+/// Retention: the log currently keeps full history — the fault
+/// explorer's I4 oracle replays it from ship-seq 1, and schedules are
+/// short. A long-lived deployment needs acked-prefix truncation (a base
+/// offset below the secondary's watermark, with `WriteFull` payloads
+/// spilled by reference like the §2.5 op log compacts) — recorded as a
+/// ROADMAP item rather than silently unbounded.
+#[derive(Debug, Default)]
+struct ReplLog {
+    /// `records[i].ship_seq == i + 1` — the global watermark is just
+    /// `records.len()`.
+    records: Vec<ReplRecord>,
+    /// Per-shard watermark: ship-seq of the latest record routed to each
+    /// namespace shard (`Request::WatermarkQuery { shard }`).
+    shard_watermarks: Vec<u64>,
+}
 
 /// One registered callback (client + subtree root + channel).
 #[derive(Debug)]
@@ -139,6 +187,19 @@ pub struct FileServer {
     /// wall-clock scale bench; the analytic deployments leave this off
     /// and charge the virtual clock instead).
     modeled_waits: AtomicBool,
+    /// Replica-pair role ([`Role`]); survives `crash` like the rest of
+    /// the durable identity (a fenced Retired node restarts fenced).
+    role: AtomicU8,
+    /// Applied-op logging is opt-in (`[replica] enabled`): an
+    /// unreplicated deployment must not accumulate write payloads.
+    repl_enabled: AtomicBool,
+    /// The applied-op log. Lock ordering: a shard guard may be held when
+    /// this is taken (apply-time append), never the reverse.
+    repl: Mutex<ReplLog>,
+    /// Serializes whole-record ingestion on the secondary (gap check +
+    /// apply + mirror must be atomic against concurrent `Replicate`s).
+    /// Ordering: taken before any shard guard, never while one is held.
+    repl_ingest: Mutex<()>,
     metrics: Metrics,
 }
 
@@ -208,8 +269,152 @@ impl FileServer {
             channel_map: Mutex::new(HashMap::new()),
             up: AtomicBool::new(true),
             modeled_waits: AtomicBool::new(false),
+            role: AtomicU8::new(ROLE_PRIMARY),
+            repl_enabled: AtomicBool::new(false),
+            repl: Mutex::new(ReplLog { records: Vec::new(), shard_watermarks: vec![0; n] }),
+            repl_ingest: Mutex::new(()),
             metrics,
         }
+    }
+
+    // ---------------------------------------------------------------
+    // replication: roles + the applied-op log (DESIGN.md §2.7)
+    // ---------------------------------------------------------------
+
+    pub fn role(&self) -> Role {
+        match self.role.load(Ordering::SeqCst) {
+            ROLE_SECONDARY => Role::Secondary,
+            ROLE_RETIRED => Role::Retired,
+            _ => Role::Primary,
+        }
+    }
+
+    pub fn set_role(&self, role: Role) {
+        let v = match role {
+            Role::Primary => ROLE_PRIMARY,
+            Role::Secondary => ROLE_SECONDARY,
+            Role::Retired => ROLE_RETIRED,
+        };
+        self.role.store(v, Ordering::SeqCst);
+    }
+
+    /// Fence this node out of the pair (the demotion half of a
+    /// promotion — see [`Role::Retired`]).
+    pub fn retire(&self) {
+        self.set_role(Role::Retired);
+    }
+
+    /// Turn on applied-op logging (`[replica] enabled`). Both members of
+    /// a pair enable it: the primary to feed the shipper, the secondary
+    /// so its own post-promotion applies continue the same log.
+    pub fn enable_replication(&self) {
+        self.repl_enabled.store(true, Ordering::SeqCst);
+    }
+
+    pub fn replication_enabled(&self) -> bool {
+        self.repl_enabled.load(Ordering::SeqCst)
+    }
+
+    /// Global position of the applied-op log (ship-seq of its last
+    /// record). On the secondary this IS the global replication
+    /// watermark: the mirror only grows by ingesting.
+    pub fn repl_ship_seq(&self) -> u64 {
+        self.repl.lock().unwrap().records.len() as u64
+    }
+
+    /// Per-shard replication watermark; any out-of-range index (the
+    /// `u32::MAX` convention) reads the global one.
+    pub fn repl_watermark(&self, shard: usize) -> u64 {
+        let g = self.repl.lock().unwrap();
+        match g.shard_watermarks.get(shard) {
+            Some(w) => *w,
+            None => g.records.len() as u64,
+        }
+    }
+
+    /// Up to `max` log records strictly after ship-seq `from` — the
+    /// shipper's read side (local disk, no WAN).
+    pub fn repl_records_after(&self, from: u64, max: usize) -> Vec<ReplRecord> {
+        let g = self.repl.lock().unwrap();
+        let start = (from as usize).min(g.records.len());
+        let end = start.saturating_add(max).min(g.records.len());
+        g.records[start..end].to_vec()
+    }
+
+    /// Append one record to the applied-op log (apply-time, shard guard
+    /// held; see the `repl` field's lock-ordering note).
+    fn log_record(&self, shard_idx: usize, payload: ReplPayload) {
+        let mut g = self.repl.lock().unwrap();
+        let ship_seq = g.records.len() as u64 + 1;
+        if let Some(w) = g.shard_watermarks.get_mut(shard_idx) {
+            *w = ship_seq;
+        }
+        g.records.push(ReplRecord { ship_seq, shard: shard_idx as u32, payload });
+    }
+
+    /// Ingest one shipped record on the secondary: strict gapless order
+    /// (`watermark + 1` applies, at-or-below skips as an idempotent
+    /// re-ship, beyond refuses), replayed through the NORMAL apply path
+    /// so watermarks/failure-sets/conflict-preservation replicate by
+    /// construction, then mirrored verbatim so ship-seqs stay aligned
+    /// across the pair. Returns whether the record advanced the log.
+    pub fn apply_replicated(&self, rec: ReplRecord, now: VirtualTime) -> Result<bool, FsError> {
+        let _ingest = self.repl_ingest.lock().unwrap();
+        {
+            let g = self.repl.lock().unwrap();
+            let watermark = g.records.len() as u64;
+            if rec.ship_seq <= watermark {
+                return Ok(false);
+            }
+            if rec.ship_seq != watermark + 1 {
+                return Err(FsError::Protocol(format!(
+                    "replication gap: got ship_seq {} at watermark {watermark}",
+                    rec.ship_seq
+                )));
+            }
+        }
+        match &rec.payload {
+            ReplPayload::Op { client_id, seq, op, .. } => {
+                // the record applied on the primary; replaying the same
+                // op against the same mirrored state is deterministic,
+                // so a non-Applied answer here means divergence — which
+                // the convergence invariants (I3/I4) surface loudly.
+                let _ = self.apply(*client_id, *seq, op.clone(), now, false);
+            }
+            ReplPayload::Failed { client_id, seq, path } => {
+                let key = vpath::normalize(path);
+                let mut g = self.lock_shard(self.shard_of(&key));
+                let set = g.failed.entry(*client_id).or_default();
+                set.insert(*seq);
+                while set.len() > Self::MAX_FAILED_SEQS {
+                    set.pop_first();
+                }
+            }
+            ReplPayload::Local { op } => match op {
+                MetaOp::WriteFull { path, data, .. } => {
+                    let key = vpath::normalize(path);
+                    let mut g = self.lock_shard(self.shard_of(&key));
+                    self.fs.write().unwrap().write(&key, data, now)?;
+                    g.purge_digests(&key);
+                }
+                MetaOp::Unlink { path } => {
+                    let key = vpath::normalize(path);
+                    let mut g = self.lock_shard(self.shard_of(&key));
+                    let _ = self.fs.write().unwrap().unlink(&key, now);
+                    g.purge_digests(&key);
+                }
+                // local edits are only ever writes/unlinks; anything
+                // else in a Local record is mirrored without effect
+                _ => {}
+            },
+        }
+        let mut g = self.repl.lock().unwrap();
+        debug_assert_eq!(g.records.len() as u64 + 1, rec.ship_seq);
+        if let Some(w) = g.shard_watermarks.get_mut(rec.shard as usize) {
+            *w = rec.ship_seq;
+        }
+        g.records.push(rec);
+        Ok(true)
     }
 
     /// Direct (trusted) access to the home space — for tests and the
@@ -326,20 +531,40 @@ impl FileServer {
     /// to every registered client.
     pub fn local_write(&self, path: &str, data: &[u8], now: VirtualTime) -> Result<(), FsError> {
         let key = vpath::normalize(path);
-        let mut g = self.lock_shard(self.shard_of(&key));
+        let idx = self.shard_of(&key);
+        let mut g = self.lock_shard(idx);
         self.fs.write().unwrap().write(&key, data, now)?;
         g.purge_digests(&key);
         let version = self.fs.read().unwrap().stat(&key).map(|a| a.version).unwrap_or(0);
         self.notify_change_in(&g, &key, version, None);
+        // home-side edits replicate as Local records: no client seq, no
+        // watermark — the secondary just mirrors the store change
+        if self.replication_enabled() && self.role() == Role::Primary {
+            self.log_record(
+                idx,
+                ReplPayload::Local {
+                    op: MetaOp::WriteFull {
+                        path: key.clone(),
+                        data: data.to_vec(),
+                        digests: Vec::new(),
+                        base_version: 0,
+                    },
+                },
+            );
+        }
         Ok(())
     }
 
     pub fn local_unlink(&self, path: &str, now: VirtualTime) -> Result<(), FsError> {
         let key = vpath::normalize(path);
-        let mut g = self.lock_shard(self.shard_of(&key));
+        let idx = self.shard_of(&key);
+        let mut g = self.lock_shard(idx);
         self.fs.write().unwrap().unlink(&key, now)?;
         g.purge_digests(&key);
         self.notify_removed_in(&g, &key, None);
+        if self.replication_enabled() && self.role() == Role::Primary {
+            self.log_record(idx, ReplPayload::Local { op: MetaOp::Unlink { path: key.clone() } });
+        }
         Ok(())
     }
 
@@ -481,6 +706,50 @@ impl FileServer {
     pub fn handle(&self, client_id: u64, req: Request, now: VirtualTime) -> Response {
         if !self.is_up() {
             return Response::Err { code: 111, msg: "connection refused (server down)".into() };
+        }
+        // replica-pair role gate (DESIGN.md §2.7): a standby serves only
+        // the replication plane until promoted; a fenced ex-primary
+        // serves nothing mutable ever again. Code 112 is the links'
+        // "wrong endpoint — fail over" signal.
+        match self.role() {
+            Role::Primary => {
+                if matches!(req, Request::Replicate { .. }) {
+                    return Response::Err {
+                        code: 112,
+                        msg: "replicate refused: this node is the primary".into(),
+                    };
+                }
+            }
+            Role::Secondary => {
+                // ONLY the replication plane. RegisterCallback is
+                // refused too: a client that could complete its mount
+                // handshake here would bind to a node that serves
+                // nothing (and every ingested record would queue an
+                // invalidation for it) — the 112 makes its connect
+                // attempt fail so endpoint rotation keeps looking for
+                // the serving node.
+                let allowed = matches!(
+                    req,
+                    Request::Ping
+                        | Request::Replicate { .. }
+                        | Request::WatermarkQuery { .. }
+                        | Request::Promote
+                );
+                if !allowed {
+                    return Response::Err {
+                        code: 112,
+                        msg: "not primary (standby replica): fail over".into(),
+                    };
+                }
+            }
+            Role::Retired => {
+                if !matches!(req, Request::Ping | Request::WatermarkQuery { .. }) {
+                    return Response::Err {
+                        code: 112,
+                        msg: "retired primary (fenced after promotion): fail over".into(),
+                    };
+                }
+            }
         }
         match req {
             Request::AuthHello { .. } | Request::AuthProof { .. } => Response::Err {
@@ -679,7 +948,7 @@ impl FileServer {
                 }
                 Response::CallbackRegistered
             }
-            Request::Apply { seq, op } => self.apply(client_id, seq, op, now),
+            Request::Apply { seq, op } => self.apply(client_id, seq, op, now, true),
             Request::Compound { ops } => {
                 // one WAN round trip, N ops: each op gets the exact
                 // Response its single-op request would have produced, so
@@ -693,7 +962,7 @@ impl FileServer {
                 let replies = ops
                     .into_iter()
                     .map(|op| match op {
-                        CompoundOp::Apply { seq, op } => self.apply(client_id, seq, op, now),
+                        CompoundOp::Apply { seq, op } => self.apply(client_id, seq, op, now, true),
                         CompoundOp::Stat { path } => {
                             let _g = self.lock_shard(self.shard_of(&path));
                             self.op_wait();
@@ -742,6 +1011,35 @@ impl FileServer {
                     Response::Err { code: 77, msg: "no such lock".into() }
                 }
             }
+            Request::Replicate { from, frames } => {
+                // reachable only on a Secondary (role gate above)
+                let records = match crate::replica::decode_frames(&frames) {
+                    Ok(r) => r,
+                    Err(e) => {
+                        return Response::Err {
+                            code: 74,
+                            msg: format!("replication batch refused: {e}"),
+                        }
+                    }
+                };
+                let _ = from; // the frames carry authoritative ship-seqs
+                for rec in records {
+                    match self.apply_replicated(rec, now) {
+                        Ok(_) => {}
+                        Err(e) => return err_resp(&e),
+                    }
+                }
+                Response::ReplicaAck { watermark: self.repl_ship_seq() }
+            }
+            Request::WatermarkQuery { shard } => {
+                Response::Watermark { shard, watermark: self.repl_watermark(shard as usize) }
+            }
+            Request::Promote => {
+                // the explicit takeover step (idempotent on a primary;
+                // a Retired node never reaches here — role gate)
+                self.set_role(Role::Primary);
+                Response::Promoted { watermark: self.repl_ship_seq() }
+            }
         }
     }
 
@@ -773,7 +1071,12 @@ impl FileServer {
     /// both locks in ascending index order; DIRECTORY renames take every
     /// shard lock (still ascending) so the descendant digest sweep is
     /// atomic with the move. One ordering rule, so no deadlock.
-    fn apply(&self, client_id: u64, seq: u64, op: MetaOp, now: VirtualTime) -> Response {
+    ///
+    /// `log = true` records the application outcome in the replication
+    /// log (when enabled); the secondary's ingest path passes `false`
+    /// and mirrors the shipped record verbatim instead, so ship-seqs
+    /// stay aligned across the pair.
+    fn apply(&self, client_id: u64, seq: u64, op: MetaOp, now: VirtualTime, log: bool) -> Response {
         let primary = self.shard_of(op.path());
         let rename_pair = match &op {
             MetaOp::Rename { from, to } => {
@@ -814,16 +1117,16 @@ impl FileServer {
             self.op_wait();
             let was_dup = guards[primary].is_duplicate(client_id, seq);
             let resp = match secondary {
-                None => self.apply_in(&mut guards[primary], None, client_id, seq, op, now),
+                None => self.apply_in(&mut guards[primary], None, primary, client_id, seq, op, now, log),
                 Some(sec) => {
                     let (lo_i, hi_i) = (primary.min(sec), primary.max(sec));
                     let (left, right) = guards.split_at_mut(hi_i);
                     let lo: &mut Shard = &mut left[lo_i];
                     let hi: &mut Shard = &mut right[0];
                     if primary < sec {
-                        self.apply_in(lo, Some(hi), client_id, seq, op, now)
+                        self.apply_in(lo, Some(hi), primary, client_id, seq, op, now, log)
                     } else {
-                        self.apply_in(hi, Some(lo), client_id, seq, op, now)
+                        self.apply_in(hi, Some(lo), primary, client_id, seq, op, now, log)
                     }
                 }
             };
@@ -845,7 +1148,7 @@ impl FileServer {
                 let mut g = self.lock_shard(primary);
                 self.op_wait();
                 let dup = g.is_duplicate(client_id, seq);
-                (self.apply_in(&mut g, None, client_id, seq, op, now), dup)
+                (self.apply_in(&mut g, None, primary, client_id, seq, op, now, log), dup)
             }
             Some(sec) => {
                 self.metrics.incr(names::CROSS_SHARD_OPS);
@@ -860,7 +1163,7 @@ impl FileServer {
                 };
                 self.op_wait();
                 let dup = a.is_duplicate(client_id, seq);
-                (self.apply_in(&mut a, Some(&mut b), client_id, seq, op, now), dup)
+                (self.apply_in(&mut a, Some(&mut b), primary, client_id, seq, op, now, log), dup)
             }
         };
         // fallback for the probe race above: the moved node turned out
@@ -893,16 +1196,22 @@ impl FileServer {
     }
 
     /// Apply one meta-op with its shard guard(s) held. `shard` is the
-    /// primary (the op's path); `to_shard` is the rename target's shard
-    /// when that differs.
+    /// primary (the op's path); `shard_idx` its index (replication-log
+    /// routing); `to_shard` is the rename target's shard when that
+    /// differs. `log` records the outcome in the applied-op log
+    /// (suppressed on the secondary's ingest path, which mirrors the
+    /// shipped record instead).
+    #[allow(clippy::too_many_arguments)]
     fn apply_in(
         &self,
         shard: &mut Shard,
         to_shard: Option<&mut Shard>,
+        shard_idx: usize,
         client_id: u64,
         seq: u64,
         op: MetaOp,
         now: VirtualTime,
+        log: bool,
     ) -> Response {
         let previously_failed =
             shard.failed.get(&client_id).map(|s| s.contains(&seq)).unwrap_or(false);
@@ -1047,6 +1356,28 @@ impl FileServer {
                         None => shard.purge_digests(&to_key),
                     }
                 }
+                // record the genuine application in the replication log
+                // while the shard guard is still held, so log order
+                // matches per-shard apply order (DESIGN.md §2.7). A
+                // rename's meaningful version lives at the TARGET (the
+                // moved inode keeps it; the source is gone) — the I4
+                // watermark oracle in the explorer leans on this.
+                if log && self.replication_enabled() {
+                    let logged_version = match &op {
+                        MetaOp::Rename { to, .. } => self
+                            .fs
+                            .read()
+                            .unwrap()
+                            .stat(to)
+                            .map(|a| a.version)
+                            .unwrap_or(version),
+                        _ => version,
+                    };
+                    self.log_record(
+                        shard_idx,
+                        ReplPayload::Op { client_id, seq, new_version: logged_version, op },
+                    );
+                }
                 Response::Applied { seq, new_version: version }
             }
             Err(e) => {
@@ -1054,6 +1385,16 @@ impl FileServer {
                 set.insert(seq);
                 while set.len() > Self::MAX_FAILED_SEQS {
                     set.pop_first();
+                }
+                // semantic failures replicate too: the failed-seq set is
+                // part of the idempotence watermark's meaning (a replay
+                // of this seq must retry for real, not be false-acked —
+                // on the secondary exactly as on the primary)
+                if log && self.replication_enabled() {
+                    self.log_record(
+                        shard_idx,
+                        ReplPayload::Failed { client_id, seq, path: op.path().to_string() },
+                    );
                 }
                 err_resp(&e)
             }
@@ -1728,6 +2069,230 @@ mod tests {
                 Response::Released
             ));
         }
+    }
+
+    // ----- replication (DESIGN.md §2.7) -----
+
+    /// A primary (with the standard test home space) and a secondary
+    /// seeded from a snapshot of it, both logging applied ops.
+    fn replica_pair() -> (FileServer, FileServer) {
+        let s = server();
+        s.enable_replication();
+        let snap = s.home().clone();
+        let sec = FileServer::new(
+            snap,
+            DiskModel::new(200.0e6, 0.002),
+            Arc::new(DigestEngine::native(Metrics::new())),
+            65536,
+            30.0,
+            4,
+            Metrics::new(),
+        );
+        sec.set_role(Role::Secondary);
+        sec.enable_replication();
+        (s, sec)
+    }
+
+    /// Ship everything past the secondary's watermark in one frame.
+    fn ship_all(primary: &FileServer, sec: &FileServer) {
+        let from = sec.repl_ship_seq();
+        let recs = primary.repl_records_after(from, usize::MAX);
+        let frames = crate::replica::frame_records(&recs);
+        let r = sec.handle(0, Request::Replicate { from: from + 1, frames }, t(1.0));
+        assert!(matches!(r, Response::ReplicaAck { .. }), "{r:?}");
+    }
+
+    #[test]
+    fn secondary_refuses_clients_until_promoted() {
+        let (_s, sec) = replica_pair();
+        let r = sec.handle(1, Request::Stat { path: "/home/user/a.txt".into() }, t(1.0));
+        assert!(matches!(r, Response::Err { code: 112, .. }), "{r:?}");
+        // the replication plane stays open
+        assert!(matches!(sec.handle(0, Request::Ping, t(1.0)), Response::Pong));
+        assert!(matches!(
+            sec.handle(0, Request::WatermarkQuery { shard: u32::MAX }, t(1.0)),
+            Response::Watermark { watermark: 0, .. }
+        ));
+        // the explicit Promote flips it into a serving primary
+        let r = sec.handle(0, Request::Promote, t(2.0));
+        assert!(matches!(r, Response::Promoted { watermark: 0 }), "{r:?}");
+        assert_eq!(sec.role(), Role::Primary);
+        let r = sec.handle(1, Request::Stat { path: "/home/user/a.txt".into() }, t(3.0));
+        assert!(matches!(r, Response::Attr { .. }), "{r:?}");
+    }
+
+    #[test]
+    fn retired_primary_is_fenced() {
+        let s = server();
+        s.retire();
+        let r = s.handle(1, Request::Stat { path: "/home/user/a.txt".into() }, t(1.0));
+        assert!(matches!(r, Response::Err { code: 112, .. }), "{r:?}");
+        // fencing survives a crash/restart cycle (the crontab restart of
+        // the old primary must NOT resurrect a second writable head)
+        s.crash();
+        s.restart();
+        let r = s.handle(1, Request::Ping, t(2.0));
+        assert!(matches!(r, Response::Pong), "{r:?}");
+        let r = s.handle(1, Request::ReadDir { path: "/home/user".into() }, t(2.0));
+        assert!(matches!(r, Response::Err { code: 112, .. }), "{r:?}");
+    }
+
+    #[test]
+    fn replication_mirrors_state_versions_and_watermarks() {
+        let (s, sec) = replica_pair();
+        // a mix of outcomes: success, semantic failure, home-side edit
+        let r = s.handle(
+            7,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteFull {
+                    path: "/home/user/repl.txt".into(),
+                    data: b"replicated".to_vec(),
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(1.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }));
+        let r = s.handle(
+            7,
+            Request::Apply { seq: 2, op: MetaOp::Unlink { path: "/home/user/ghost".into() } },
+            t(1.5),
+        );
+        assert!(matches!(r, Response::Err { code: 2, .. }));
+        let r = s.handle(
+            7,
+            Request::Apply { seq: 3, op: MetaOp::Mkdir { path: "/home/user/d".into() } },
+            t(2.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }));
+        s.local_write("/home/user/a.txt", b"edited at home", t(2.5)).unwrap();
+        assert_eq!(s.repl_ship_seq(), 4, "3 client outcomes + 1 local edit logged");
+
+        ship_all(&s, &sec);
+        assert_eq!(sec.repl_ship_seq(), 4);
+        // the mirrored store is byte- and version-identical
+        for path in ["/home/user/repl.txt", "/home/user/a.txt", "/home/user/b.dat"] {
+            assert_eq!(
+                s.home().read(path).map(|d| d.to_vec()),
+                sec.home().read(path).map(|d| d.to_vec()),
+                "{path} content"
+            );
+            assert_eq!(
+                s.home().stat(path).unwrap().version,
+                sec.home().stat(path).unwrap().version,
+                "{path} version"
+            );
+        }
+        assert!(sec.home().exists("/home/user/d"));
+
+        // promote, then replay the client's unacked ops: the replicated
+        // idempotence watermark answers seq 1/3 as duplicates (no
+        // version bump) while the FAILED seq 2 retries for real
+        assert!(matches!(sec.handle(0, Request::Promote, t(3.0)), Response::Promoted { .. }));
+        let v = sec.home().stat("/home/user/repl.txt").unwrap().version;
+        let r = sec.handle(
+            7,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteFull {
+                    path: "/home/user/repl.txt".into(),
+                    data: b"replicated".to_vec(),
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(4.0),
+        );
+        assert!(matches!(r, Response::Applied { seq: 1, .. }), "{r:?}");
+        assert_eq!(sec.home().stat("/home/user/repl.txt").unwrap().version, v, "no re-apply");
+        let r = sec.handle(
+            7,
+            Request::Apply { seq: 2, op: MetaOp::Unlink { path: "/home/user/ghost".into() } },
+            t(4.5),
+        );
+        assert!(
+            matches!(r, Response::Err { code: 2, .. }),
+            "a replicated FAILED seq must retry for real, not false-ack: {r:?}"
+        );
+    }
+
+    #[test]
+    fn re_ship_is_idempotent_and_gaps_refused() {
+        let (s, sec) = replica_pair();
+        for seq in 1..=3u64 {
+            s.handle(
+                9,
+                Request::Apply {
+                    seq,
+                    op: MetaOp::WriteFull {
+                        path: format!("/home/user/f{seq}"),
+                        data: vec![seq as u8; 32],
+                        digests: vec![],
+                        base_version: 0,
+                    },
+                },
+                t(seq as f64),
+            );
+        }
+        let recs = s.repl_records_after(0, usize::MAX);
+        let frames = crate::replica::frame_records(&recs);
+        // first delivery applies...
+        let r = sec.handle(0, Request::Replicate { from: 1, frames: frames.clone() }, t(5.0));
+        assert!(matches!(r, Response::ReplicaAck { watermark: 3 }), "{r:?}");
+        let v = sec.home().stat("/home/user/f1").unwrap().version;
+        // ...a duplicate delivery (lost ack) is skipped wholesale
+        let r = sec.handle(0, Request::Replicate { from: 1, frames }, t(6.0));
+        assert!(matches!(r, Response::ReplicaAck { watermark: 3 }), "{r:?}");
+        assert_eq!(sec.home().stat("/home/user/f1").unwrap().version, v, "no double-apply");
+        // a gapped batch is refused, watermark unmoved
+        let gap = crate::replica::frame_records(&[ReplRecord {
+            ship_seq: 9,
+            shard: 0,
+            payload: ReplPayload::Local { op: MetaOp::Unlink { path: "/home/user/f1".into() } },
+        }]);
+        let r = sec.handle(0, Request::Replicate { from: 9, frames: gap }, t(7.0));
+        assert!(matches!(r, Response::Err { .. }), "{r:?}");
+        assert_eq!(sec.repl_ship_seq(), 3);
+        // a tampered batch is refused before anything applies
+        let mut bad = crate::replica::frame_records(&s.repl_records_after(0, 1));
+        let n = bad.len();
+        bad[n - 1] ^= 0xFF;
+        let r = sec.handle(0, Request::Replicate { from: 1, frames: bad }, t(8.0));
+        assert!(matches!(r, Response::Err { code: 74, .. }), "{r:?}");
+    }
+
+    #[test]
+    fn per_shard_watermarks_track_routed_records() {
+        let (s, sec) = replica_pair();
+        let path = "/home/user/wshard".to_string();
+        s.handle(
+            3,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteFull {
+                    path: path.clone(),
+                    data: b"x".to_vec(),
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(1.0),
+        );
+        ship_all(&s, &sec);
+        let shard = s.shard_of(&path) as u32;
+        let r = sec.handle(0, Request::WatermarkQuery { shard }, t(2.0));
+        let Response::Watermark { watermark, .. } = r else { panic!("{r:?}") };
+        assert_eq!(watermark, 1, "the routed shard's watermark advanced");
+        // an unrouted shard stays at 0; the global view reads 1
+        let other = (shard + 1) % 4;
+        if s.shard_of(&path) != other as usize {
+            let r = sec.handle(0, Request::WatermarkQuery { shard: other }, t(2.0));
+            assert!(matches!(r, Response::Watermark { watermark: 0, .. }), "{r:?}");
+        }
+        let r = sec.handle(0, Request::WatermarkQuery { shard: u32::MAX }, t(2.0));
+        assert!(matches!(r, Response::Watermark { watermark: 1, .. }), "{r:?}");
     }
 
     #[test]

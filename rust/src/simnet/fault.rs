@@ -43,6 +43,11 @@ pub enum FaultEvent {
     /// Crash-and-recover the numbered client (snapshot its cache space,
     /// drop the process, rebuild via `XufsClient::recover`).
     ClientCrash { client: u8 },
+    /// The schedule decided this primary crash warrants a failover:
+    /// drain the replication log to the secondary and promote it
+    /// (DESIGN.md §2.7). Ignored by unreplicated topologies. The
+    /// crashed primary still restarts on schedule — fenced.
+    PromoteSecondary,
 }
 
 /// The plan's verdict for one interaction step.
@@ -166,6 +171,16 @@ impl FaultPlan {
             out.server_crash = true;
             self.restart_at =
                 Some(self.step + self.rng.range(1, self.cfg.server_crash_max_steps.max(1) as u64));
+            // primary-crash/promote schedule events (DESIGN.md §2.7):
+            // some crashes escalate to a failover decision the harness
+            // acts on. With `promote_after_crash_p = 0` (the default) no
+            // die is rolled, so pre-replica schedules reproduce
+            // byte-identically from their seeds.
+            if self.cfg.promote_after_crash_p > 0.0
+                && self.rng.chance(self.cfg.promote_after_crash_p)
+            {
+                self.events.push(FaultEvent::PromoteSecondary);
+            }
             self.injected += 1;
             return out;
         }
@@ -218,6 +233,7 @@ mod tests {
             server_crash_p: 0.02,
             server_crash_max_steps: 20,
             client_crash_p: 0.01,
+            promote_after_crash_p: 0.25,
         }
     }
 

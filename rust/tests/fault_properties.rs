@@ -1,18 +1,27 @@
 //! Disconnected-operation hardening: the randomized fault-schedule
-//! explorer plus directed failure-plane tests (DESIGN.md §2.5).
+//! explorer plus directed failure-plane tests (DESIGN.md §2.5, §2.7).
 //!
-//! The explorer drives 2 clients + 1 server through hundreds of seeded
-//! fault schedules — dropped/duplicated/delayed packets, torn transfers,
-//! multi-step partitions, server crash/restart, client crash/recovery —
-//! and checks the convergence invariants after a quiesce:
+//! The explorer drives 2 clients + 1 server — or, on the replicated
+//! topology, 2 clients + a primary/secondary pair with log shipping and
+//! primary-crash/promote schedule events — through hundreds of seeded
+//! fault schedules (dropped/duplicated/delayed packets, torn transfers,
+//! multi-step partitions, server crash/restart, client crash/recovery,
+//! failover) and checks the convergence invariants after a quiesce:
 //!
 //!   I1  no dirty block is ever lost: every surviving successful close is
-//!       byte-identical at the home space (last close wins);
+//!       byte-identical at the authoritative home space (last close wins
+//!       — the PROMOTED SECONDARY after a failover);
 //!   I2  no op applies twice and nothing resurrects: each client's home
 //!       directory holds exactly the files the model predicts, with no
-//!       spurious conflict files;
+//!       spurious conflict files — across crash, replay AND failover;
 //!   I3  all replicas converge: after quiesce, every client reads every
-//!       file byte-identical to the home space.
+//!       file byte-identical to the authority, and (un-promoted pairs)
+//!       the secondary's store mirrors the primary's byte- and
+//!       version-identically once shipping drains;
+//!   I4  the secondary never serves state ahead of its replication
+//!       watermark: for every path its shipped log governs, its version
+//!       is exactly what the log prescribes at the watermark, and paths
+//!       first created beyond the watermark are absent.
 //!
 //! A failing schedule reproduces deterministically from its printed seed:
 //!
@@ -20,7 +29,7 @@
 //! FAULT_SEED=<seed> cargo test --test fault_properties fault_schedule_explorer
 //! ```
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::sync::{Arc, Mutex};
 
 use xufs::client::{OpenFlags, ServerLink, Vfs, WritebackMode, XufsClient};
@@ -28,7 +37,7 @@ use xufs::config::{FaultConfig, XufsConfig};
 use xufs::coordinator::{SimLink, SimWorld};
 use xufs::homefs::FsError;
 use xufs::metrics::names;
-use xufs::proto::LockKind;
+use xufs::proto::{LockKind, MetaOp, ReplPayload};
 use xufs::simnet::{FaultEvent, FaultPlan, VirtualTime};
 use xufs::util::Rng;
 
@@ -52,7 +61,16 @@ fn chaos_profile() -> FaultConfig {
         server_crash_p: 0.01,
         server_crash_max_steps: 12,
         client_crash_p: 0.01,
+        // 0 keeps pre-replica schedules byte-identical per seed (no
+        // extra die is rolled); the replicated explorer turns it up
+        promote_after_crash_p: 0.0,
     }
+}
+
+/// The replicated topology's profile: same chaos, plus half of all
+/// primary crashes escalate to a promote decision (DESIGN.md §2.7).
+fn replica_chaos_profile() -> FaultConfig {
+    FaultConfig { promote_after_crash_p: 0.5, ..chaos_profile() }
 }
 
 /// Retry a mutating op until it succeeds, reconnecting between attempts
@@ -89,15 +107,135 @@ fn read_all(c: &mut XufsClient<SimLink>, path: &str) -> Result<Vec<u8>, FsError>
     Ok(out)
 }
 
+/// I4 (replicated topology, un-promoted): the secondary never serves
+/// state ahead of its replication watermark. For every path governed by
+/// a shipped `Op` record, the secondary's version must be exactly what
+/// the log prescribes at its watermark; a path whose FIRST record lies
+/// beyond the watermark (and which the initial snapshot lacked) must be
+/// absent. Paths touched by `Local` records are skipped (those carry no
+/// version), as are conflict side-writes (not in the log at all).
+fn check_i4(world: &SimWorld, initial_paths: &BTreeSet<String>) -> Result<(), String> {
+    let Some(sec) = world.secondary() else { return Ok(()) };
+    if world.is_promoted() {
+        return Ok(());
+    }
+    let w = sec.repl_ship_seq();
+    let log = world.server.repl_records_after(0, usize::MAX);
+    // last effect per path at the watermark: Some(v) = exists at v,
+    // None = removed
+    let mut expect: BTreeMap<String, Option<u64>> = BTreeMap::new();
+    let mut untracked: BTreeSet<String> = BTreeSet::new();
+    let mut beyond: BTreeSet<String> = BTreeSet::new();
+    for rec in &log {
+        let within = rec.ship_seq <= w;
+        match &rec.payload {
+            ReplPayload::Op { new_version, op, .. } => match op {
+                MetaOp::Rename { from, to } => {
+                    if within {
+                        expect.insert(from.clone(), None);
+                        expect.insert(to.clone(), Some(*new_version));
+                    } else if !expect.contains_key(to) && !initial_paths.contains(to) {
+                        beyond.insert(to.clone());
+                    }
+                }
+                MetaOp::Unlink { path } | MetaOp::Rmdir { path } => {
+                    if within {
+                        expect.insert(path.clone(), None);
+                    }
+                }
+                _ => {
+                    let p = op.path().to_string();
+                    if within {
+                        expect.insert(p, Some(*new_version));
+                    } else if !expect.contains_key(&p) && !initial_paths.contains(&p) {
+                        beyond.insert(p);
+                    }
+                }
+            },
+            ReplPayload::Local { op } => {
+                untracked.insert(op.path().to_string());
+            }
+            ReplPayload::Failed { .. } => {}
+        }
+    }
+    for (path, want) in &expect {
+        if untracked.contains(path) {
+            continue;
+        }
+        let got = sec.home().stat(path).ok().map(|a| a.version);
+        let ok = match (got, want) {
+            (Some(v), Some(exp)) => v == *exp,
+            (None, None) => true,
+            _ => false,
+        };
+        if !ok {
+            return Err(format!(
+                "I4: secondary serves {path} at {got:?} but its watermark {w} prescribes {want:?}"
+            ));
+        }
+    }
+    for path in beyond {
+        if untracked.contains(&path) {
+            continue;
+        }
+        if sec.home().exists(&path) {
+            return Err(format!(
+                "I4: secondary serves {path}, first created beyond its watermark {w}"
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Un-promoted replicated quiesce: once shipping drains, the secondary's
+/// store must mirror the primary's — same paths, kinds, sizes, versions
+/// and bytes (mtimes differ: the mirror applies at ship time).
+fn check_replica_mirror(world: &SimWorld) -> Result<(), String> {
+    let Some(sec) = world.secondary() else { return Ok(()) };
+    if world.is_promoted() {
+        return Ok(());
+    }
+    let fingerprint = |s: &xufs::server::FileServer| -> Result<Vec<String>, String> {
+        let guard = s.home();
+        let mut out = Vec::new();
+        for (path, attr) in guard.walk("/").map_err(|e| format!("walk: {e}"))? {
+            let content = match attr.kind {
+                xufs::homefs::NodeKind::File => {
+                    let data = guard.read(&path).map_err(|e| format!("read {path}: {e}"))?;
+                    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+                    for b in data {
+                        h ^= *b as u64;
+                        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                    }
+                    format!("{} bytes, fnv {h:016x}", data.len())
+                }
+                xufs::homefs::NodeKind::Dir => "dir".to_string(),
+            };
+            out.push(format!("{path} v{} {:?} {} [{content}]", attr.version, attr.kind, attr.size));
+        }
+        Ok(out)
+    };
+    let a = fingerprint(&world.server)?;
+    let b = fingerprint(&sec)?;
+    if a != b {
+        let diff: Vec<&String> =
+            a.iter().filter(|x| !b.contains(x)).chain(b.iter().filter(|x| !a.contains(x))).collect();
+        return Err(format!("I3: secondary mirror diverges from primary: {diff:?}"));
+    }
+    Ok(())
+}
+
 /// One seeded schedule: randomized ops on 2 clients under the fault
 /// plane, then quiesce and check the convergence invariants. `shards`
 /// pins the server's namespace shard count (DESIGN.md §2.6) so the same
 /// invariants are model-checked against both the sharded core and the
-/// single-lock ablation.
-fn run_schedule(seed: u64, ops: usize, shards: usize) -> Result<(), String> {
+/// single-lock ablation; `replica` stands up the primary/secondary pair
+/// with log shipping and primary-crash/promote schedule events
+/// (DESIGN.md §2.7).
+fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(), String> {
     let mut cfg = XufsConfig::default();
     cfg.seed = seed;
-    cfg.fault = chaos_profile();
+    cfg.fault = if replica { replica_chaos_profile() } else { chaos_profile() };
     cfg.server.shards = shards;
     let mut world = SimWorld::new(cfg.clone());
     world.home(|s| {
@@ -107,6 +245,19 @@ fn run_schedule(seed: u64, ops: usize, shards: usize) -> Result<(), String> {
         s.home_mut().write("/home/u/shared0", &vec![0xA5u8; 100_000], now).unwrap();
         s.home_mut().write("/home/u/shared1", b"shared doc\n", now).unwrap();
     });
+    let mut initial_paths: BTreeSet<String> = BTreeSet::new();
+    if replica {
+        world.enable_replica();
+        initial_paths = world
+            .secondary()
+            .expect("replica enabled")
+            .home()
+            .walk("/")
+            .map_err(|e| format!("walk: {e}"))?
+            .into_iter()
+            .map(|(p, _)| p)
+            .collect();
+    }
     // mount cleanly, then arm the fault plane on both links
     let mut clients = Vec::new();
     for _ in 0..2 {
@@ -191,29 +342,58 @@ fn run_schedule(seed: u64, ops: usize, shards: usize) -> Result<(), String> {
                 model[i].insert(file.clone(), data);
             }
         }
-        // scheduled client crashes: snapshot the cache space, drop the
-        // process, recover under the SAME identity from the durable log
-        // (take the events in their own statement — holding the plan
-        // lock across mount_recovered would deadlock on fault_step)
+        // harness-level schedule events: client crashes (snapshot the
+        // cache space, drop the process, recover under the SAME identity
+        // from the durable log) and — replicated topology — the decision
+        // to promote the secondary after a primary crash. (Take the
+        // events in their own statement — holding the plan lock across
+        // mount_recovered/promote would deadlock on fault_step.)
         let events = plan.lock().unwrap().take_harness_events();
         for ev in events {
-            let FaultEvent::ClientCrash { client } = ev;
-            let idx = client as usize % clients.len();
-            let snap = clients[idx].cache_store_snapshot();
-            let id = clients[idx].link().client_id();
-            let mut back = None;
-            for _ in 0..5000 {
-                if let Ok((c2, _corrupt)) = world.mount_recovered("/home/u", &snap, id) {
-                    back = Some(c2);
-                    break;
+            match ev {
+                FaultEvent::ClientCrash { client } => {
+                    let idx = client as usize % clients.len();
+                    let snap = clients[idx].cache_store_snapshot();
+                    let id = clients[idx].link().client_id();
+                    let mut back = None;
+                    for _ in 0..5000 {
+                        if let Ok((c2, _corrupt)) = world.mount_recovered("/home/u", &snap, id) {
+                            back = Some(c2);
+                            break;
+                        }
+                    }
+                    let Some(mut c2) = back else {
+                        return Err("crashed client could not re-mount".into());
+                    };
+                    c2.writeback = WritebackMode::Async;
+                    c2.async_flush_threshold = 3;
+                    clients[idx] = c2;
+                }
+                FaultEvent::PromoteSecondary => {
+                    if !replica {
+                        continue;
+                    }
+                    // the operator's failover: drain the durable log to
+                    // the secondary and promote it. Every failed attempt
+                    // (partitioned/refused shipping) advances the
+                    // schedule, so the drain eventually gets through.
+                    let mut promoted = false;
+                    for _ in 0..5000 {
+                        if world.promote_secondary().is_ok() {
+                            promoted = true;
+                            break;
+                        }
+                    }
+                    if !promoted {
+                        return Err("promote could not complete".into());
+                    }
                 }
             }
-            let Some(mut c2) = back else {
-                return Err("crashed client could not re-mount".into());
-            };
-            c2.writeback = WritebackMode::Async;
-            c2.async_flush_threshold = 3;
-            clients[idx] = c2;
+        }
+        // steady-state log shipping (bounded lag): rides the WAN and the
+        // fault plane like any other interaction
+        if replica {
+            world.replica_tick(false);
         }
     }
 
@@ -223,16 +403,24 @@ fn run_schedule(seed: u64, ops: usize, shards: usize) -> Result<(), String> {
         world.server_restart();
     }
     for c in clients.iter_mut() {
+        // reconnect AND drain: after a failover the client may come back
+        // bound to the fenced ex-primary (restarted, up, refusing) —
+        // a drained queue on a serving endpoint is the real success
+        // condition, and each failed round rotates endpoints
+        let mut drained = false;
         for _ in 0..50 {
-            if c.link().is_connected() {
+            if !c.link().is_connected() && c.link_mut().reconnect().is_err() {
+                continue;
+            }
+            if c.fsync().is_ok() && c.queue_len() == 0 {
+                drained = true;
                 break;
             }
             let _ = c.link_mut().reconnect();
         }
-        if !c.link().is_connected() {
-            return Err("client could not reconnect during quiesce".into());
+        if !drained {
+            return Err("client could not reconnect+drain during quiesce".into());
         }
-        c.fsync().map_err(|e| format!("quiesce fsync: {e}"))?;
     }
     world.server_tick();
     for c in clients.iter_mut() {
@@ -243,12 +431,38 @@ fn run_schedule(seed: u64, ops: usize, shards: usize) -> Result<(), String> {
         }
     }
 
-    // ---- invariants ----
+    // ---- replication: settle the pair before judging invariants ----
+    if replica {
+        // I4 first, at whatever lag the schedule left behind (the
+        // watermark oracle bites precisely when lag > 0)...
+        check_i4(&world, &initial_paths)?;
+        if !world.is_promoted() {
+            // ...then drain fully and require a byte+version mirror
+            let mut left = u64::MAX;
+            for _ in 0..200 {
+                left = world.replica_tick(true);
+                if left == 0 {
+                    break;
+                }
+            }
+            if left != 0 {
+                return Err(format!("replication could not drain at quiesce ({left} ops left)"));
+            }
+            check_replica_mirror(&world)?;
+            check_i4(&world, &initial_paths)?;
+        }
+    }
+
+    // ---- invariants, judged against the AUTHORITY (the promoted
+    // secondary after a failover, the primary otherwise) ----
+    let authority = world.authority();
     for (i, m) in model.iter().enumerate() {
         // I1: no dirty block lost, last close wins
         for (path, want) in m {
-            let home = world
-                .home(|s| s.home().read(path).map(|d| d.to_vec()))
+            let home = authority
+                .home()
+                .read(path)
+                .map(|d| d.to_vec())
                 .map_err(|e| format!("I1: home lost {path}: {e}"))?;
             if &home != want {
                 return Err(format!(
@@ -260,12 +474,10 @@ fn run_schedule(seed: u64, ops: usize, shards: usize) -> Result<(), String> {
         }
         // I2: nothing applied twice, nothing resurrected, no spurious
         // conflicts in a single-writer subtree
-        let listing: Vec<String> = world
-            .home(|s| {
-                s.home()
-                    .readdir(&format!("/home/u/c{i}"))
-                    .map(|v| v.into_iter().map(|(n, _)| n).collect())
-            })
+        let listing: Vec<String> = authority
+            .home()
+            .readdir(&format!("/home/u/c{i}"))
+            .map(|v| v.into_iter().map(|(n, _)| n).collect())
             .map_err(|e| format!("I2: readdir c{i}: {e}"))?;
         for name in &listing {
             let p = format!("/home/u/c{i}/{name}");
@@ -304,12 +516,16 @@ fn seed_override() -> Option<u64> {
 }
 
 fn explore(seeds: std::ops::Range<u64>, ops: usize) {
-    explore_with_shards(seeds, ops, XufsConfig::default().server.shards)
+    explore_cfg(seeds, ops, XufsConfig::default().server.shards, false)
 }
 
 fn explore_with_shards(seeds: std::ops::Range<u64>, ops: usize, shards: usize) {
+    explore_cfg(seeds, ops, shards, false)
+}
+
+fn explore_cfg(seeds: std::ops::Range<u64>, ops: usize, shards: usize, replica: bool) {
     if let Some(seed) = seed_override() {
-        if let Err(msg) = run_schedule(seed, ops, shards) {
+        if let Err(msg) = run_schedule(seed, ops, shards, replica) {
             panic!("schedule seed {seed} violated an invariant: {msg}");
         }
         return;
@@ -317,7 +533,7 @@ fn explore_with_shards(seeds: std::ops::Range<u64>, ops: usize, shards: usize) {
     let mut failures: Vec<(u64, String)> = Vec::new();
     let total = seeds.end - seeds.start;
     for seed in seeds {
-        if let Err(msg) = run_schedule(seed, ops, shards) {
+        if let Err(msg) = run_schedule(seed, ops, shards, replica) {
             failures.push((seed, msg));
         }
     }
@@ -361,6 +577,32 @@ fn fault_schedule_explorer_sharded_core() {
 #[test]
 fn fault_schedule_explorer_single_shard_ablation() {
     explore_with_shards(0xFA17_4000..0xFA17_4000 + 50, 60, 1);
+}
+
+/// The REPLICATED fault matrix (DESIGN.md §2.7): 220 seeded schedules on
+/// the 2-clients + primary + secondary topology — log shipping rides the
+/// same WAN faults, primary crashes escalate to a promote decision half
+/// the time, clients fail over with full replay of their unacked op
+/// logs. Invariants I1–I3 are re-proven against whichever node ends up
+/// authoritative, plus I4 (the secondary never serves state ahead of its
+/// replication watermark). CI's `failover-matrix` job runs exactly this;
+/// a failing schedule reproduces with
+/// `FAULT_SEED=<seed> cargo test --test fault_properties fault_schedule_explorer_replicated`.
+#[test]
+fn fault_schedule_explorer_replicated() {
+    explore_cfg(0xFA17_2000..0xFA17_2000 + 220, 60, XufsConfig::default().server.shards, true);
+}
+
+/// Nightly-class replicated long run (more seeds, longer schedules).
+#[test]
+#[ignore = "long replicated fault matrix; run with --ignored (nightly CI) or FAULT_SEED=<seed>"]
+fn fault_schedule_explorer_replicated_long() {
+    explore_cfg(
+        0xFA17_A000..0xFA17_A000 + 500,
+        120,
+        XufsConfig::default().server.shards,
+        true,
+    );
 }
 
 // ---------------------------------------------------------------------
@@ -678,6 +920,172 @@ fn lease_expiry_during_partition_forces_revalidation() {
     let fd_a2 = a.open("/home/u/doc", OpenFlags::rdonly()).unwrap();
     a.lock(fd_a2, LockKind::Exclusive).unwrap();
     a.close(fd_a2).unwrap();
+}
+
+// ---------------------------------------------------------------------
+// directed failover tests (DESIGN.md §2.7)
+// ---------------------------------------------------------------------
+
+/// Conflict files under `/home/u` at one node of the pair.
+fn conflicts_at(s: &xufs::server::FileServer) -> Vec<String> {
+    s.home()
+        .readdir("/home/u")
+        .unwrap()
+        .into_iter()
+        .map(|(n, _)| n)
+        .filter(|n| n.contains(".xufs-conflict-"))
+        .collect()
+}
+
+/// A lease held at primary-crash time re-acquires on the promoted
+/// secondary under a FRESH token (lock state is deliberately volatile —
+/// the table died with the primary's process), and the lock is genuinely
+/// held there: a rival stays denied until the holder releases.
+#[test]
+fn failover_reacquires_lease_with_fresh_token_on_secondary() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/doc", b"locked content", t(0.0)).unwrap();
+    });
+    world.enable_replica();
+    let mut a = world.mount("/home/u").unwrap();
+    let mut b = world.mount("/home/u").unwrap();
+    a.scan_file("/home/u/doc", 1024).unwrap();
+    let fd_a = a.open("/home/u/doc", OpenFlags::rdonly()).unwrap();
+    a.lock(fd_a, LockKind::Exclusive).unwrap();
+    let fd_b = b.open("/home/u/doc", OpenFlags::rdonly()).unwrap();
+    assert!(matches!(b.lock(fd_b, LockKind::Exclusive), Err(FsError::LockConflict(_))));
+    // crash the primary while the lease is held; promote the standby
+    world.server_crash();
+    world.promote_secondary().unwrap();
+    // the holder reconnects: the op-boundary tick re-acquires its lease
+    // on the promoted secondary
+    a.link_mut().reconnect().unwrap();
+    assert_eq!(a.link().active_endpoint(), 1, "holder failed over to the secondary");
+    a.tick();
+    // the rival fails over too — and is still denied, by name
+    b.link_mut().reconnect().unwrap();
+    assert_eq!(b.link().active_endpoint(), 1);
+    match b.lock(fd_b, LockKind::Exclusive) {
+        Err(FsError::LockConflict(msg)) => {
+            assert!(msg.contains(&format!("client {}", a.link().client_id())), "{msg}");
+        }
+        r => panic!("rival lock must stay denied after failover: {r:?}"),
+    }
+    // releasing through the re-acquired (fresh) token works on the
+    // secondary and frees the path for the rival
+    a.unlock(fd_a).unwrap();
+    b.lock(fd_b, LockKind::Exclusive).unwrap();
+    b.close(fd_b).unwrap();
+    a.close(fd_a).unwrap();
+    assert!(world.metrics.counter(names::REPLICA_FAILOVERS) >= 2);
+}
+
+/// Dirty-chain conflict across a failover, reply-loss shape: the
+/// disconnected write APPLIED at the primary (conflict preserved there)
+/// but every ack was lost, so the client replays it to the promoted
+/// secondary. The replicated per-(client,seq) watermark answers the
+/// replay as a duplicate — the conflict file exists exactly once at the
+/// new authority, not twice.
+#[test]
+fn failover_replay_preserves_conflict_once_not_twice() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/doc", b"draft at home\n", t(0.0)).unwrap();
+    });
+    world.enable_replica();
+    let mut c = world.mount("/home/u").unwrap();
+    c.scan_file("/home/u/doc", 1024).unwrap();
+    c.link_mut().set_network(false);
+    c.write_file("/home/u/doc", b"edited at the site while offline\n", 1024).unwrap();
+    world.home(|s| {
+        s.local_write("/home/u/doc", b"edited at home during the outage\n", t(5.0)).unwrap()
+    });
+    c.link_mut().set_network(true);
+    c.link_mut().reconnect().unwrap();
+    // the flush applies at the primary — conflict preserved there — but
+    // every reply is lost, so the op stays queued (unacked) client-side
+    let reply_loss = FaultConfig { enabled: true, drop_reply_p: 1.0, ..Default::default() };
+    let plan = Arc::new(Mutex::new(FaultPlan::new(7, reply_loss)));
+    world.set_fault_plan(plan.clone());
+    c.link_mut().set_faults(plan.clone());
+    let _ = c.fsync();
+    assert!(c.queue_len() > 0, "acks lost -> op stays queued");
+    assert_eq!(conflicts_at(&world.server).len(), 1, "conflict preserved at the primary");
+    plan.lock().unwrap().quiesce();
+    // ship everything — op, idempotence watermark, conflict file — then
+    // crash the primary and promote
+    assert_eq!(world.replica_tick(true), 0);
+    world.server_crash();
+    world.promote_secondary().unwrap();
+    c.link_mut().reconnect().unwrap();
+    c.fsync().unwrap(); // full replay of the unacked op against the secondary
+    assert_eq!(c.queue_len(), 0);
+    let authority = world.authority();
+    let conflicts = conflicts_at(&authority);
+    assert_eq!(conflicts.len(), 1, "exactly one conflict after the failover replay: {conflicts:?}");
+    assert_eq!(
+        authority.home().read("/home/u/doc").unwrap(),
+        b"edited at the site while offline\n"
+    );
+    assert_eq!(
+        authority.home().read(&format!("/home/u/{}", conflicts[0])).unwrap(),
+        b"edited at home during the outage\n"
+    );
+}
+
+/// Dirty-chain conflict across a failover, lag shape: the primary dies
+/// BEFORE the disconnected write ever reached it. The failover replay
+/// applies the op fresh on the secondary — whose replicated state holds
+/// the conflicting home-side edit — so the conflict file is preserved
+/// exactly once, at the new authority, while the dead primary never saw
+/// the write at all.
+#[test]
+fn failover_replay_applies_unshipped_op_with_conflict_once() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/doc", b"draft at home\n", t(0.0)).unwrap();
+    });
+    world.enable_replica();
+    let mut c = world.mount("/home/u").unwrap();
+    c.scan_file("/home/u/doc", 1024).unwrap();
+    c.link_mut().set_network(false);
+    c.write_file("/home/u/doc", b"edited at the site while offline\n", 1024).unwrap();
+    assert!(c.queue_len() > 0);
+    // the home-side edit replicates; then the primary dies with the
+    // client still disconnected
+    world.home(|s| {
+        s.local_write("/home/u/doc", b"edited at home during the outage\n", t(5.0)).unwrap()
+    });
+    assert_eq!(world.replica_tick(true), 0);
+    world.server_crash();
+    world.promote_secondary().unwrap();
+    c.link_mut().set_network(true);
+    c.link_mut().reconnect().unwrap();
+    assert_eq!(c.link().active_endpoint(), 1);
+    c.fsync().unwrap();
+    assert_eq!(c.queue_len(), 0);
+    let authority = world.authority();
+    let conflicts = conflicts_at(&authority);
+    assert_eq!(conflicts.len(), 1, "conflict created exactly once on the secondary: {conflicts:?}");
+    assert_eq!(
+        authority.home().read("/home/u/doc").unwrap(),
+        b"edited at the site while offline\n"
+    );
+    assert_eq!(
+        authority.home().read(&format!("/home/u/{}", conflicts[0])).unwrap(),
+        b"edited at home during the outage\n"
+    );
+    // the fenced primary holds only the pre-crash state: its home-side
+    // edit, no conflict file
+    assert_eq!(
+        world.server.home().read("/home/u/doc").unwrap(),
+        b"edited at home during the outage\n"
+    );
+    assert!(conflicts_at(&world.server).is_empty());
 }
 
 /// Torn bulk transfers resume instead of restarting: with every range

@@ -1,0 +1,333 @@
+//! Round-trip fuzz for the whole wire protocol (DESIGN.md §2.7
+//! satellite): seeded random instances of every message family —
+//! requests, responses, meta-ops, notifications, replication records and
+//! HMAC-framed replication batches — must
+//!
+//! * decode back to exactly the value that was encoded,
+//! * re-encode byte-identically (the codec is canonical), and
+//! * reject EVERY strict prefix of a valid frame with an error — never a
+//!   panic, never a silent partial parse (length-prefixed fields plus
+//!   `expect_end` make truncations structurally undecodable).
+//!
+//! Random single-byte corruptions additionally must never panic (they
+//! may decode to a different valid message — the transports layer HMACs
+//! and length prefixes above this codec).
+
+use xufs::proto::{
+    BlockExtent, CompoundOp, DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, ReplPayload,
+    ReplRecord, Request, Response, WireAttr,
+};
+use xufs::replica::{decode_frames, frame_records};
+use xufs::util::Rng;
+
+const CASES: usize = 200;
+
+fn rand_string(rng: &mut Rng) -> String {
+    const ALPHA: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789/._-";
+    let n = rng.below(16) as usize;
+    (0..n).map(|_| ALPHA[rng.below(ALPHA.len() as u64) as usize] as char).collect()
+}
+
+fn rand_bytes(rng: &mut Rng, max: u64) -> Vec<u8> {
+    let mut v = vec![0u8; rng.below(max + 1) as usize];
+    rng.fill_bytes(&mut v);
+    v
+}
+
+fn rand_digests(rng: &mut Rng) -> Vec<i32> {
+    (0..rng.below(6)).map(|_| rng.next_u32() as i32).collect()
+}
+
+fn rand_attr(rng: &mut Rng) -> WireAttr {
+    WireAttr {
+        kind: if rng.chance(0.2) { xufs::homefs::NodeKind::Dir } else { xufs::homefs::NodeKind::File },
+        size: rng.next_u64() >> rng.below(40),
+        mtime_ns: rng.next_u64() >> rng.below(20),
+        mode: rng.next_u32() & 0o7777,
+        version: rng.below(1 << 30),
+    }
+}
+
+fn rand_metaop(rng: &mut Rng) -> MetaOp {
+    match rng.below(9) {
+        0 => MetaOp::Mkdir { path: rand_string(rng) },
+        1 => MetaOp::Rmdir { path: rand_string(rng) },
+        2 => MetaOp::Create { path: rand_string(rng) },
+        3 => MetaOp::Unlink { path: rand_string(rng) },
+        4 => MetaOp::Rename { from: rand_string(rng), to: rand_string(rng) },
+        5 => MetaOp::Truncate { path: rand_string(rng), size: rng.next_u64() >> 20 },
+        6 => MetaOp::SetMode { path: rand_string(rng), mode: rng.next_u32() & 0o7777 },
+        7 => MetaOp::WriteFull {
+            path: rand_string(rng),
+            data: rand_bytes(rng, 48),
+            digests: rand_digests(rng),
+            base_version: rng.below(1 << 20),
+        },
+        _ => MetaOp::WriteDelta {
+            path: rand_string(rng),
+            total_size: rng.below(1 << 30),
+            base_version: rng.below(1 << 20),
+            blocks: (0..rng.below(4))
+                .map(|i| (i as u32, rand_bytes(rng, 32)))
+                .collect(),
+            digests: rand_digests(rng),
+        },
+    }
+}
+
+fn rand_repl_record(rng: &mut Rng) -> ReplRecord {
+    let payload = match rng.below(3) {
+        0 => ReplPayload::Op {
+            client_id: rng.below(64),
+            seq: rng.below(1 << 30),
+            new_version: rng.below(1 << 30),
+            op: rand_metaop(rng),
+        },
+        1 => ReplPayload::Failed {
+            client_id: rng.below(64),
+            seq: rng.below(1 << 30),
+            path: rand_string(rng),
+        },
+        _ => ReplPayload::Local { op: rand_metaop(rng) },
+    };
+    ReplRecord { ship_seq: rng.below(1 << 40) + 1, shard: rng.below(64) as u32, payload }
+}
+
+fn rand_request(rng: &mut Rng) -> Request {
+    match rng.below(17) {
+        0 => Request::AuthHello { key_id: rand_string(rng) },
+        1 => Request::AuthProof { key_id: rand_string(rng), proof: rand_bytes(rng, 48) },
+        2 => Request::Stat { path: rand_string(rng) },
+        3 => Request::ReadDir { path: rand_string(rng) },
+        4 => Request::Fetch { path: rand_string(rng) },
+        5 => Request::FetchMeta { path: rand_string(rng) },
+        6 => Request::FetchRange {
+            path: rand_string(rng),
+            offset: rng.next_u64() >> 20,
+            len: rng.below(1 << 30),
+            expect_version: rng.below(1 << 30),
+        },
+        7 => Request::Apply { seq: rng.below(1 << 30), op: rand_metaop(rng) },
+        8 => Request::RegisterCallback { root: rand_string(rng), client_id: rng.below(64) },
+        9 => Request::LockAcquire {
+            path: rand_string(rng),
+            kind: if rng.chance(0.5) { LockKind::Shared } else { LockKind::Exclusive },
+            owner: rng.below(64),
+        },
+        10 => Request::LockRenew { token: rng.next_u64(), owner: rng.below(64) },
+        11 => Request::LockRelease { token: rng.next_u64(), owner: rng.below(64) },
+        12 => Request::Ping,
+        13 => Request::Compound {
+            ops: (0..rng.below(4))
+                .map(|_| {
+                    if rng.chance(0.3) {
+                        CompoundOp::Stat { path: rand_string(rng) }
+                    } else {
+                        CompoundOp::Apply { seq: rng.below(1 << 30), op: rand_metaop(rng) }
+                    }
+                })
+                .collect(),
+        },
+        14 => Request::Replicate { from: rng.below(1 << 40), frames: rand_bytes(rng, 64) },
+        15 => Request::WatermarkQuery { shard: rng.next_u32() },
+        _ => Request::Promote,
+    }
+}
+
+fn rand_response(rng: &mut Rng, nested: bool) -> Response {
+    // CompoundReply never nests (the codec rejects it); the generator
+    // respects that so every generated frame is valid
+    let top = if nested { 18 } else { 19 };
+    match rng.below(top) {
+        0 => Response::Challenge { nonce: rand_bytes(rng, 32) },
+        1 => Response::AuthOk { session: rng.next_u64() },
+        2 => Response::AuthFail,
+        3 => Response::Attr { attr: rand_attr(rng) },
+        4 => Response::Dir {
+            entries: (0..rng.below(4))
+                .map(|_| DirEntry { name: rand_string(rng), attr: rand_attr(rng) })
+                .collect(),
+        },
+        5 => Response::File {
+            image: FileImage {
+                path: rand_string(rng),
+                version: rng.below(1 << 30),
+                data: rand_bytes(rng, 48),
+                digests: rand_digests(rng),
+            },
+        },
+        6 => Response::Applied { seq: rng.below(1 << 30), new_version: rng.below(1 << 30) },
+        7 => Response::CallbackRegistered,
+        8 => Response::LockGranted { token: rng.next_u64(), lease_ns: rng.next_u64() >> 10 },
+        9 => Response::LockDenied { holder: rng.below(64) },
+        10 => Response::Released,
+        11 => Response::Pong,
+        12 => Response::Err { code: rng.next_u32() & 0xFFFF, msg: rand_string(rng) },
+        13 => Response::FileMeta {
+            version: rng.below(1 << 30),
+            size: rng.below(1 << 40),
+            digests: rand_digests(rng),
+        },
+        14 => Response::FileBlocks {
+            version: rng.below(1 << 30),
+            extents: (0..rng.below(4))
+                .map(|i| BlockExtent {
+                    index: i as u32,
+                    data: rand_bytes(rng, 48),
+                    digest: rng.next_u32() as i32,
+                })
+                .collect(),
+        },
+        15 => Response::ReplicaAck { watermark: rng.below(1 << 40) },
+        16 => Response::Watermark { shard: rng.next_u32(), watermark: rng.below(1 << 40) },
+        17 => Response::Promoted { watermark: rng.below(1 << 40) },
+        _ => Response::CompoundReply {
+            replies: (0..rng.below(4)).map(|_| rand_response(rng, true)).collect(),
+        },
+    }
+}
+
+fn rand_notify(rng: &mut Rng) -> NotifyEvent {
+    match rng.below(3) {
+        0 => NotifyEvent::Invalidate { path: rand_string(rng), new_version: rng.below(1 << 30) },
+        1 => NotifyEvent::Removed { path: rand_string(rng) },
+        _ => NotifyEvent::ServerRestart,
+    }
+}
+
+/// Shared property: canonical roundtrip + every strict prefix rejected.
+fn assert_frame_properties<T, E, D>(value: &T, bytes: &[u8], decode: D)
+where
+    T: PartialEq + std::fmt::Debug,
+    E: std::fmt::Debug,
+    D: Fn(&[u8]) -> Result<T, E>,
+{
+    let back = decode(bytes).unwrap_or_else(|e| panic!("decode of {value:?} failed: {e:?}"));
+    assert_eq!(&back, value, "decode(encode(x)) != x");
+    for cut in 0..bytes.len() {
+        assert!(
+            decode(&bytes[..cut]).is_err(),
+            "{}-byte prefix of {value:?} decoded successfully",
+            cut
+        );
+    }
+}
+
+#[test]
+fn requests_roundtrip_and_reject_truncation() {
+    let mut rng = Rng::new(0xF422_0001);
+    for _ in 0..CASES {
+        let r = rand_request(&mut rng);
+        let b = r.encode();
+        assert_frame_properties(&r, &b, Request::decode);
+        assert_eq!(Request::decode(&b).unwrap().encode(), b, "re-encode must be byte-identical");
+    }
+}
+
+#[test]
+fn responses_roundtrip_and_reject_truncation() {
+    let mut rng = Rng::new(0xF422_0002);
+    for _ in 0..CASES {
+        let r = rand_response(&mut rng, false);
+        let b = r.encode();
+        assert_frame_properties(&r, &b, Response::decode);
+        assert_eq!(Response::decode(&b).unwrap().encode(), b, "re-encode must be byte-identical");
+    }
+}
+
+#[test]
+fn metaops_roundtrip_and_reject_truncation() {
+    let mut rng = Rng::new(0xF422_0003);
+    for _ in 0..CASES {
+        let op = rand_metaop(&mut rng);
+        let b = op.encode();
+        assert_frame_properties(&op, &b, MetaOp::decode);
+        assert_eq!(MetaOp::decode(&b).unwrap().encode(), b);
+    }
+}
+
+#[test]
+fn notifications_roundtrip_and_reject_truncation() {
+    let mut rng = Rng::new(0xF422_0004);
+    for _ in 0..CASES {
+        let ev = rand_notify(&mut rng);
+        let b = ev.encode();
+        assert_frame_properties(&ev, &b, NotifyEvent::decode);
+        assert_eq!(NotifyEvent::decode(&b).unwrap().encode(), b);
+    }
+}
+
+#[test]
+fn repl_records_roundtrip_and_reject_truncation() {
+    let mut rng = Rng::new(0xF422_0005);
+    for _ in 0..CASES {
+        let rec = rand_repl_record(&mut rng);
+        let b = rec.encode();
+        assert_frame_properties(&rec, &b, ReplRecord::decode);
+        assert_eq!(ReplRecord::decode(&b).unwrap().encode(), b);
+    }
+}
+
+#[test]
+fn replication_batches_roundtrip_and_reject_tampering() {
+    let mut rng = Rng::new(0xF422_0006);
+    for _ in 0..40 {
+        let records: Vec<ReplRecord> =
+            (0..rng.below(5) + 1).map(|_| rand_repl_record(&mut rng)).collect();
+        let buf = frame_records(&records);
+        assert_eq!(decode_frames(&buf).unwrap(), records);
+        // a cut exactly between frames is a valid SHORTER batch (how a
+        // reply-loss re-send stays safe); any other prefix is torn and
+        // the WHOLE batch is refused — never a panic, never a partial
+        // accept
+        let mut boundaries = vec![0usize];
+        for r in &records {
+            // frame = len:u32 | record | hmac:32
+            let len = 4 + r.encode().len() + 32;
+            boundaries.push(boundaries.last().unwrap() + len);
+        }
+        for cut in 1..buf.len() {
+            match decode_frames(&buf[..cut]) {
+                Ok(got) => {
+                    let k = boundaries
+                        .iter()
+                        .position(|b| *b == cut)
+                        .unwrap_or_else(|| panic!("non-boundary prefix of {cut} bytes accepted"));
+                    assert_eq!(got, records[..k], "boundary cut {cut}");
+                }
+                Err(_) => assert!(
+                    !boundaries.contains(&cut),
+                    "boundary cut {cut} must decode to a record prefix"
+                ),
+            }
+        }
+        // one flipped byte anywhere breaks a frame's HMAC (or its
+        // framing) — refused, never panicking, never partially applied
+        let mut bad = buf.clone();
+        let at = rng.below(bad.len() as u64) as usize;
+        bad[at] ^= 0x01;
+        assert!(decode_frames(&bad).is_err(), "flip at {at} accepted");
+    }
+}
+
+#[test]
+fn random_corruptions_never_panic() {
+    let mut rng = Rng::new(0xF422_0007);
+    for _ in 0..CASES {
+        let mut b = rand_request(&mut rng).encode();
+        let at = rng.below(b.len() as u64) as usize;
+        b[at] ^= (rng.below(255) + 1) as u8;
+        // a corrupted frame may decode to a DIFFERENT valid message
+        // (transports add HMACs above this layer) — but it must never
+        // panic, and whatever decodes must re-encode canonically
+        if let Ok(r) = Request::decode(&b) {
+            assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+        }
+        let mut b = rand_response(&mut rng, false).encode();
+        let at = rng.below(b.len() as u64) as usize;
+        b[at] ^= (rng.below(255) + 1) as u8;
+        if let Ok(r) = Response::decode(&b) {
+            assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+        }
+    }
+}
