@@ -1,0 +1,22 @@
+//! Dedup-bench runner: prints the cross-user dedup table (logical vs
+//! physical bytes with shared software stacks), regenerates
+//! `BENCH_dedup.json` at the repo root, and ENFORCES the acceptance
+//! criterion (dedup ratio > 1.5x). Deterministic virtual-clock model — a
+//! single iteration IS the run (the nightly CI smoke invokes exactly
+//! this binary).
+
+use xufs::bench::dedup::ratio;
+use xufs::bench::run_dedup;
+use xufs::config::XufsConfig;
+
+fn main() {
+    let cfg = XufsConfig::default();
+    let t = run_dedup(&cfg);
+    t.print();
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_dedup.json");
+    std::fs::write(&path, format!("{}\n", t.to_json())).expect("write BENCH_dedup.json");
+    println!("wrote {}", path.display());
+    let r = ratio(&t).expect("table has a dedup ratio column");
+    assert!(r > 1.5, "cross-user dedup ratio ({r:.2}x) must exceed 1.5x");
+    println!("acceptance: dedup ratio {r:.2}x > 1.5x OK");
+}

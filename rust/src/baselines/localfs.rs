@@ -67,7 +67,7 @@ impl Vfs for LocalFs {
         let f = self.fds.get(&fd.0).ok_or(FsError::BadHandle)?;
         let n = {
             let data = self.fs.read_at(&f.path, off, buf.len())?;
-            buf[..data.len()].copy_from_slice(data);
+            buf[..data.len()].copy_from_slice(&data);
             data.len()
         };
         self.disk.io(self.clock.as_ref(), n as u64);

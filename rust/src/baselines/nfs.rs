@@ -131,7 +131,7 @@ impl Vfs for NfsClient {
         let path = f.path.clone();
         let n = {
             let data = self.cache.read_at(&path, off, buf.len())?;
-            buf[..data.len()].copy_from_slice(data);
+            buf[..data.len()].copy_from_slice(&data);
             data.len()
         };
         self.disk.io(self.clock.as_ref(), n as u64);

@@ -1,0 +1,132 @@
+//! Cross-user dedup bench (DESIGN.md §2.8): N users each carry a private
+//! copy of the same software stack in their home dir — the paper's
+//! wide-area pattern of every site replicating the common toolchain —
+//! plus genuinely unique job output. The content-addressed chunk store
+//! must collapse the shared copies to ONE physical instance, so logical
+//! bytes divided by stored bytes lands well above 1. Deterministic
+//! virtual-clock model: a single iteration IS the run, and
+//! `cargo bench --bench dedup` regenerates `BENCH_dedup.json` and
+//! enforces the acceptance ratio (> 1.5x).
+
+use std::sync::Arc;
+
+use crate::config::XufsConfig;
+use crate::homefs::FileStore;
+use crate::metrics::Metrics;
+use crate::runtime::DigestEngine;
+use crate::server::FileServer;
+use crate::simnet::VirtualTime;
+use crate::util::Rng;
+use crate::vdisk::DiskModel;
+
+use super::report::Table;
+
+/// Users, each with a full private copy of the shared stack.
+const USERS: usize = 3;
+/// Shared software-stack files every user's home dir holds.
+const SHARED_FILES: usize = 8;
+/// Bytes per shared stack file (4 chunks at the default 64 KiB).
+const SHARED_BYTES: usize = 256 * 1024;
+/// Unique job-output files per user (no dedup possible).
+const UNIQUE_FILES: usize = 4;
+/// Bytes per unique file (2 chunks at the default 64 KiB).
+const UNIQUE_BYTES: usize = 128 * 1024;
+
+/// Run the dedup experiment and report logical vs physical bytes.
+pub fn run_dedup(cfg: &XufsConfig) -> Table {
+    let now = VirtualTime::ZERO;
+    let mut fs = FileStore::default();
+    for u in 0..USERS {
+        fs.mkdir_p(&format!("/home/u{u}/stack"), now).unwrap();
+        fs.mkdir_p(&format!("/home/u{u}/data"), now).unwrap();
+    }
+    let metrics = Metrics::new();
+    let server = FileServer::new(
+        fs,
+        DiskModel::new(cfg.disk.home_bps, cfg.disk.home_op_s),
+        Arc::new(DigestEngine::native(metrics.clone())),
+        cfg.stripe.min_block as usize,
+        cfg.lease.duration_s,
+        cfg.server.shards,
+        metrics,
+        cfg.chunkstore.clone(),
+    );
+    let mut rng = Rng::new(cfg.seed ^ 0xDED0_C0DE);
+    // the stack is generated once; every user writes the same bytes
+    let shared: Vec<Vec<u8>> = (0..SHARED_FILES)
+        .map(|_| {
+            let mut d = vec![0u8; SHARED_BYTES];
+            rng.fill_bytes(&mut d);
+            d
+        })
+        .collect();
+    let mut logical = 0u64;
+    for u in 0..USERS {
+        for (i, blob) in shared.iter().enumerate() {
+            server.local_write(&format!("/home/u{u}/stack/lib{i}.so"), blob, now).unwrap();
+            logical += blob.len() as u64;
+        }
+        for i in 0..UNIQUE_FILES {
+            let mut d = vec![0u8; UNIQUE_BYTES];
+            rng.fill_bytes(&mut d);
+            server.local_write(&format!("/home/u{u}/data/run{i}.out"), &d, now).unwrap();
+            logical += d.len() as u64;
+        }
+    }
+    let g = server.home();
+    let cs = g.chunkstore().expect("the dedup bench needs [chunkstore] enabled");
+    let stored = cs.stored_bytes();
+    let hits = cs.dedup_hits();
+    let saved = cs.dedup_bytes_saved();
+    let ratio = logical as f64 / stored.max(1) as f64;
+    let mib = |b: u64| format!("{:.2}", b as f64 / (1024.0 * 1024.0));
+    let mut t = Table::new(
+        "Cross-user dedup — shared software stacks under the content-addressed chunk store",
+        &["users", "logical MiB", "stored MiB", "dedup ratio", "dedup hits", "MiB saved"],
+    );
+    t.row(vec![
+        USERS.to_string(),
+        mib(logical),
+        mib(stored),
+        format!("{ratio:.2}"),
+        hits.to_string(),
+        mib(saved),
+    ]);
+    t.note(format!(
+        "per user: {SHARED_FILES} shared stack files x {} KiB + {UNIQUE_FILES} unique x {} KiB; \
+         chunk size {} KiB",
+        SHARED_BYTES / 1024,
+        UNIQUE_BYTES / 1024,
+        cfg.chunkstore.chunk_kib
+    ));
+    t.note("acceptance: dedup ratio > 1.5x (enforced by `cargo bench --bench dedup`)");
+    t
+}
+
+/// The dedup ratio from a finished table (bench acceptance gate).
+pub fn ratio(t: &Table) -> Option<f64> {
+    let col = t.headers.iter().position(|h| h == "dedup ratio")?;
+    t.rows.first()?.get(col)?.parse().ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dedup_collapses_shared_stacks() {
+        let t = run_dedup(&XufsConfig::default());
+        let r = ratio(&t).expect("ratio column");
+        // 7.5 MiB logical over 3.5 MiB physical
+        assert!(r > 2.0 && r < 2.3, "expected ~2.14x, got {r}");
+    }
+
+    #[test]
+    fn dedup_disabled_store_stays_dense() {
+        let mut cfg = XufsConfig::default();
+        cfg.chunkstore.enabled = false;
+        // the run should refuse loudly rather than silently report 1.0x
+        let res = std::panic::catch_unwind(|| run_dedup(&cfg));
+        assert!(res.is_err(), "dense store must not produce a dedup table");
+    }
+}

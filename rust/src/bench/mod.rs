@@ -4,11 +4,13 @@
 //! plots, with the paper's own numbers attached as notes for side-by-side
 //! comparison (EXPERIMENTS.md records both).
 
+pub mod dedup;
 pub mod failover;
 pub mod figures;
 pub mod report;
 pub mod scale;
 
+pub use dedup::run_dedup;
 pub use failover::run_failover;
 pub use figures::{
     run_ablation_compound, run_ablation_consistency, run_ablation_delta, run_ablation_paging,

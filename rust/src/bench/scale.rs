@@ -81,6 +81,7 @@ fn build_server(cfg: &XufsConfig, shards: usize) -> Arc<FileServer> {
         cfg.lease.duration_s,
         shards,
         metrics,
+        cfg.chunkstore.clone(),
     );
     server.set_modeled_disk_waits(true);
     Arc::new(server)

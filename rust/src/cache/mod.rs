@@ -836,7 +836,7 @@ impl CacheSpace {
             let dir = vpath::parent(&path);
             let entry_path = vpath::join(&dir, entry_name);
             let Ok(raw) = cache.fs.read(&path) else { continue };
-            let Ok(json) = Json::parse(&String::from_utf8_lossy(raw)) else { continue };
+            let Ok(json) = Json::parse(&String::from_utf8_lossy(&raw)) else { continue };
             let kind = if json.get("kind").and_then(|k| k.as_str()) == Some("dir") {
                 NodeKind::Dir
             } else {
@@ -1051,7 +1051,7 @@ mod tests {
         // residency token of another
         let mut disk = c.fs.clone();
         let garble = |disk: &mut FileStore, apath: &str, field: &str, junk: &str| {
-            let raw = String::from_utf8_lossy(disk.read(apath).unwrap()).to_string();
+            let raw = String::from_utf8_lossy(&disk.read(apath).unwrap()).to_string();
             let patched = raw.replace(field, junk);
             assert_ne!(raw, patched, "fixture must actually corrupt {apath}");
             disk.write(apath, patched.as_bytes(), t(5.0)).unwrap();

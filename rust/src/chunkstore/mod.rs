@@ -1,0 +1,281 @@
+//! Content-addressed chunk store (DESIGN.md §2.8).
+//!
+//! The meta/data split the ROADMAP calls for: file *content* lives here
+//! as immutable chunks keyed by an in-tree HMAC-SHA256 digest, while the
+//! namespace ([`crate::homefs::FileStore`]) keeps only per-inode ordered
+//! chunk lists. Three payoffs fall out of the split:
+//!
+//! * **Cross-user dedup** — identical chunks (shared toolchains, copied
+//!   datasets) are stored once; `put` of a known digest bumps a refcount
+//!   instead of storing bytes (`chunkstore.dedup_hits` /
+//!   `chunkstore.dedup_bytes_saved`).
+//! * **O(1)-data CoW snapshots** — a snapshot pins every live chunk with
+//!   one refcount increment each and clones only the inode table; no
+//!   content is copied, and `rename` was already pure metadata.
+//! * **Replication by reference** — the applied-op log can spill write
+//!   payloads as digest lists ([`crate::proto::MetaOp::WriteRef`]); the
+//!   secondary fetches only chunks it is missing.
+//!
+//! GC is deferred and refcount-driven: `decref` to zero moves a chunk to
+//! the dead set (bytes retained), and a later [`ChunkStore::gc`] sweep
+//! frees it — a `put`/`incref` in between resurrects it for free. Every
+//! holder of a chunk reference (file node, snapshot manifest, un-shipped
+//! replication record, staged replica push) owns exactly one refcount,
+//! so "GC never collects a referenced chunk" is an arithmetic property,
+//! not a scan.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::metrics::{names, Metrics};
+use crate::util::hmacsha;
+
+/// Content digest of one chunk: HMAC-SHA256 under a versioned key, so a
+/// digest collision attack needs the key AND chunk digests can never be
+/// confused with the op-log or replication MACs.
+pub type Digest = [u8; 32];
+
+/// Domain-separation key for chunk digests.
+const CHUNK_HMAC_KEY: &[u8] = b"xufs-chunk-v1";
+
+/// Digest of one chunk's bytes.
+pub fn chunk_digest(data: &[u8]) -> Digest {
+    hmacsha::hmac_sha256(CHUNK_HMAC_KEY, &[data])
+}
+
+/// Render a digest as short hex (logs / error messages).
+pub fn digest_hex(d: &Digest) -> String {
+    d.iter().take(8).map(|b| format!("{b:02x}")).collect()
+}
+
+#[derive(Debug, Clone)]
+struct Chunk {
+    bytes: Vec<u8>,
+    refs: u64,
+}
+
+/// The immutable, refcounted chunk store. Cloning deep-copies (a cloned
+/// `FileStore` — e.g. the warm secondary seeded from the primary's image
+/// — must own an independent chunk map so "secondary missing chunks"
+/// is a real state, exactly as on separate hosts).
+#[derive(Debug, Clone, Default)]
+pub struct ChunkStore {
+    chunks: HashMap<Digest, Chunk>,
+    /// Digests whose refcount hit zero: bytes retained until [`Self::gc`]
+    /// sweeps them, so an interleaved `put`/`incref` resurrects for free.
+    dead: HashSet<Digest>,
+    /// Physical bytes currently held (including dead, until swept).
+    stored: u64,
+    dedup_hits: u64,
+    dedup_saved: u64,
+    gc_chunks: u64,
+    gc_bytes: u64,
+    metrics: Metrics,
+}
+
+impl ChunkStore {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Point dedup/GC counters at a shared sink (they also stay readable
+    /// through the accessors below).
+    pub fn attach_metrics(&mut self, metrics: &Metrics) {
+        self.metrics = metrics.clone();
+    }
+
+    /// Insert a chunk (or take a reference on an existing identical one).
+    /// Returns its digest; the caller owns one reference.
+    pub fn put(&mut self, data: &[u8]) -> Digest {
+        let d = chunk_digest(data);
+        match self.chunks.get_mut(&d) {
+            Some(c) => {
+                c.refs += 1;
+                self.dead.remove(&d);
+                self.dedup_hits += 1;
+                self.dedup_saved += data.len() as u64;
+                self.metrics.incr(names::CHUNK_DEDUP_HITS);
+                self.metrics.add(names::CHUNK_DEDUP_BYTES_SAVED, data.len() as u64);
+            }
+            None => {
+                self.stored += data.len() as u64;
+                self.chunks.insert(d, Chunk { bytes: data.to_vec(), refs: 1 });
+            }
+        }
+        d
+    }
+
+    /// Chunk bytes, if resident (dead-but-unswept chunks still resolve —
+    /// a reader holding a stale manifest never sees a torn read).
+    pub fn get(&self, d: &Digest) -> Option<&[u8]> {
+        self.chunks.get(d).map(|c| c.bytes.as_slice())
+    }
+
+    pub fn contains(&self, d: &Digest) -> bool {
+        self.chunks.contains_key(d)
+    }
+
+    /// Take an extra reference on an existing chunk. Returns `false` if
+    /// the digest is unknown (caller decides whether that is fatal).
+    pub fn incref(&mut self, d: &Digest) -> bool {
+        match self.chunks.get_mut(d) {
+            Some(c) => {
+                c.refs += 1;
+                self.dead.remove(d);
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Release one reference. At zero the chunk joins the dead set for a
+    /// later [`Self::gc`]; unknown digests are ignored (idempotent
+    /// release paths — e.g. a replayed truncation — stay safe).
+    pub fn decref(&mut self, d: &Digest) {
+        if let Some(c) = self.chunks.get_mut(d) {
+            c.refs = c.refs.saturating_sub(1);
+            if c.refs == 0 {
+                self.dead.insert(*d);
+            }
+        }
+    }
+
+    /// Sweep the dead set: free every chunk whose refcount is still zero.
+    /// Returns (chunks, bytes) collected.
+    pub fn gc(&mut self) -> (u64, u64) {
+        let mut n = 0u64;
+        let mut bytes = 0u64;
+        for d in std::mem::take(&mut self.dead) {
+            match self.chunks.get(&d) {
+                Some(c) if c.refs == 0 => {
+                    bytes += c.bytes.len() as u64;
+                    n += 1;
+                    self.chunks.remove(&d);
+                }
+                _ => {} // resurrected (or already gone): not collectable
+            }
+        }
+        self.stored -= bytes;
+        self.gc_chunks += n;
+        self.gc_bytes += bytes;
+        if n > 0 {
+            self.metrics.add(names::CHUNK_GC_COLLECTED, n);
+        }
+        (n, bytes)
+    }
+
+    /// Physical bytes currently held (dedup makes this <= logical bytes).
+    pub fn stored_bytes(&self) -> u64 {
+        self.stored
+    }
+
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn dead_count(&self) -> usize {
+        self.dead.len()
+    }
+
+    pub fn dedup_hits(&self) -> u64 {
+        self.dedup_hits
+    }
+
+    pub fn dedup_bytes_saved(&self) -> u64 {
+        self.dedup_saved
+    }
+
+    pub fn gc_collected(&self) -> (u64, u64) {
+        (self.gc_chunks, self.gc_bytes)
+    }
+
+    /// Current refcount of a chunk (tests / invariant checks).
+    pub fn refs(&self, d: &Digest) -> u64 {
+        self.chunks.get(d).map(|c| c.refs).unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let mut cs = ChunkStore::new();
+        let d = cs.put(b"hello chunk");
+        assert_eq!(d, chunk_digest(b"hello chunk"));
+        assert_eq!(cs.get(&d).unwrap(), b"hello chunk");
+        assert_eq!(cs.stored_bytes(), 11);
+        assert_eq!(cs.refs(&d), 1);
+    }
+
+    #[test]
+    fn dedup_stores_once_and_counts() {
+        let mut cs = ChunkStore::new();
+        let a = cs.put(b"same bytes");
+        let b = cs.put(b"same bytes");
+        assert_eq!(a, b);
+        assert_eq!(cs.chunk_count(), 1);
+        assert_eq!(cs.refs(&a), 2);
+        assert_eq!(cs.stored_bytes(), 10);
+        assert_eq!(cs.dedup_hits(), 1);
+        assert_eq!(cs.dedup_bytes_saved(), 10);
+    }
+
+    #[test]
+    fn gc_only_collects_unreferenced() {
+        let mut cs = ChunkStore::new();
+        let keep = cs.put(b"keep");
+        let drop_ = cs.put(b"drop");
+        cs.decref(&drop_);
+        assert!(cs.contains(&drop_), "dead bytes retained until sweep");
+        let (n, bytes) = cs.gc();
+        assert_eq!((n, bytes), (1, 4));
+        assert!(!cs.contains(&drop_));
+        assert!(cs.contains(&keep));
+        assert_eq!(cs.stored_bytes(), 4);
+    }
+
+    #[test]
+    fn dead_chunk_resurrects_on_put_or_incref() {
+        let mut cs = ChunkStore::new();
+        let d = cs.put(b"lazarus");
+        cs.decref(&d);
+        assert_eq!(cs.dead_count(), 1);
+        // a re-put takes a fresh reference and cancels the death
+        let d2 = cs.put(b"lazarus");
+        assert_eq!(d, d2);
+        assert_eq!(cs.gc(), (0, 0));
+        assert!(cs.contains(&d));
+        // same through incref
+        cs.decref(&d);
+        assert!(cs.incref(&d));
+        assert_eq!(cs.gc(), (0, 0));
+        assert!(cs.contains(&d));
+    }
+
+    #[test]
+    fn decref_unknown_is_ignored_incref_reports() {
+        let mut cs = ChunkStore::new();
+        let ghost = chunk_digest(b"never stored");
+        cs.decref(&ghost); // no panic
+        assert!(!cs.incref(&ghost));
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let mut a = ChunkStore::new();
+        let d = a.put(b"shared?");
+        let mut b = a.clone();
+        b.decref(&d);
+        b.gc();
+        assert!(!b.contains(&d));
+        assert!(a.contains(&d), "clone must not share chunk state");
+    }
+
+    #[test]
+    fn digests_are_domain_separated() {
+        // a chunk digest is not a bare SHA-256 of the content
+        assert_ne!(chunk_digest(b"abc").to_vec(), hmacsha::sha256(b"abc").to_vec());
+        assert_eq!(digest_hex(&chunk_digest(b"abc")).len(), 16);
+    }
+}

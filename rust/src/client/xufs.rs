@@ -1327,7 +1327,7 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
                     self.fault_range(&path, off, n as u64)?;
                     let got = {
                         let data = self.cache.store().read_at(&path, off, n)?;
-                        buf[..data.len()].copy_from_slice(data);
+                        buf[..data.len()].copy_from_slice(&data);
                         data.len()
                     };
                     if !localized {
@@ -1355,12 +1355,12 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
                         let seg = (seg_end - cur) as usize;
                         if sblocks.binary_search(&b).is_ok() {
                             let data = self.cache.store().read_at(&spath, cur, seg)?;
-                            buf[done..done + data.len()].copy_from_slice(data);
+                            buf[done..done + data.len()].copy_from_slice(&data);
                         } else if cur < base_size {
                             let blen = seg.min((base_size - cur) as usize);
                             self.fault_range(&path, cur, blen as u64)?;
                             let data = self.cache.store().read_at(&path, cur, blen)?;
-                            buf[done..done + data.len()].copy_from_slice(data);
+                            buf[done..done + data.len()].copy_from_slice(&data);
                         }
                         done += seg;
                     }

@@ -204,6 +204,38 @@ impl Default for ReplicaConfig {
     }
 }
 
+/// Content-addressed chunk store parameters (DESIGN.md §2.8). Governs
+/// the HOME servers only — client cache disks and baselines stay dense.
+/// Enabled by default: the meta/data split is the substrate the dedup,
+/// snapshot and replication-by-reference features all ride on.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChunkstoreConfig {
+    /// Master switch: run home-server `FileStore`s over the
+    /// content-addressed chunk store. `false` reproduces the dense
+    /// PR ≤5 substrate (the ablation baseline).
+    pub enabled: bool,
+    /// Chunk size in KiB (default matches the 64 KiB stripe block, so a
+    /// delta-writeback block maps onto exactly one chunk).
+    pub chunk_kib: usize,
+    /// Sweep dead chunks after this many applied mutations (deferred GC;
+    /// dead bytes are retained — and resurrectable — between sweeps).
+    pub gc_interval_ops: u64,
+    /// Live snapshots retained per server; taking one beyond this evicts
+    /// the oldest (releasing its chunk pins).
+    pub snapshot_retention: usize,
+}
+
+impl Default for ChunkstoreConfig {
+    fn default() -> Self {
+        ChunkstoreConfig {
+            enabled: true,
+            chunk_kib: 64,
+            gc_interval_ops: 128,
+            snapshot_retention: 8,
+        }
+    }
+}
+
 /// File-server concurrency parameters (DESIGN.md §2.6).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -261,6 +293,7 @@ pub struct XufsConfig {
     pub fault: FaultConfig,
     pub server: ServerConfig,
     pub replica: ReplicaConfig,
+    pub chunkstore: ChunkstoreConfig,
     /// Directory holding AOT HLO artifacts (empty => native digest engine).
     pub artifacts_dir: String,
     /// Deterministic seed for workloads / jitter.
@@ -323,6 +356,16 @@ impl XufsConfig {
                 "replica.enabled" => cfg.replica.enabled = value.as_bool()?,
                 "replica.ship_batch" => cfg.replica.ship_batch = value.as_usize()?.max(1),
                 "replica.max_lag_ops" => cfg.replica.max_lag_ops = value.as_u64()?,
+                "chunkstore.enabled" => cfg.chunkstore.enabled = value.as_bool()?,
+                "chunkstore.chunk_kib" => {
+                    cfg.chunkstore.chunk_kib = value.as_usize()?.max(1)
+                }
+                "chunkstore.gc_interval_ops" => {
+                    cfg.chunkstore.gc_interval_ops = value.as_u64()?.max(1)
+                }
+                "chunkstore.snapshot_retention" => {
+                    cfg.chunkstore.snapshot_retention = value.as_usize()?.max(1)
+                }
                 "artifacts_dir" => cfg.artifacts_dir = value.as_str()?.to_string(),
                 "seed" => cfg.seed = value.as_u64()?,
                 other => {
@@ -431,6 +474,24 @@ localized_dirs = "/scratch/out:/scratch/tmp"
         let c = XufsConfig::from_toml("[fault]\npromote_after_crash_p = 0.5\n").unwrap();
         assert!((c.fault.promote_after_crash_p - 0.5).abs() < 1e-12);
         assert_eq!(d.fault.promote_after_crash_p, 0.0);
+    }
+
+    #[test]
+    fn parse_chunkstore_keys() {
+        let text =
+            "[chunkstore]\nenabled = false\nchunk_kib = 16\ngc_interval_ops = 32\nsnapshot_retention = 3\n";
+        let c = XufsConfig::from_toml(text).unwrap();
+        assert!(!c.chunkstore.enabled);
+        assert_eq!(c.chunkstore.chunk_kib, 16);
+        assert_eq!(c.chunkstore.gc_interval_ops, 32);
+        assert_eq!(c.chunkstore.snapshot_retention, 3);
+        // the split is the default substrate; zero-valued knobs clamp
+        let d = XufsConfig::default();
+        assert!(d.chunkstore.enabled);
+        assert_eq!(d.chunkstore.chunk_kib, 64);
+        let c = XufsConfig::from_toml("[chunkstore]\nchunk_kib = 0\ngc_interval_ops = 0\n").unwrap();
+        assert_eq!(c.chunkstore.chunk_kib, 1);
+        assert_eq!(c.chunkstore.gc_interval_ops, 1);
     }
 
     #[test]

@@ -58,7 +58,13 @@ pub struct SimWorld {
 impl SimWorld {
     /// Stand up a deployment from config. The home space starts empty;
     /// populate it via `home()` or the workload generators.
-    pub fn new(cfg: XufsConfig) -> Self {
+    pub fn new(mut cfg: XufsConfig) -> Self {
+        // CI pin (like FAULT_SEED): XUFS_CHUNKSTORE=1/0 forces the
+        // chunk substrate on or off regardless of the config file, so
+        // the fault matrix can run both substrates from one config.
+        if let Ok(v) = std::env::var("XUFS_CHUNKSTORE") {
+            cfg.chunkstore.enabled = !matches!(v.trim(), "0" | "false" | "off");
+        }
         let clock = SimClock::new();
         let metrics = Metrics::new();
         let wan = Arc::new(Wan::new(cfg.wan.clone(), clock.clone()));
@@ -77,6 +83,7 @@ impl SimWorld {
             cfg.lease.duration_s,
             cfg.server.shards,
             metrics.clone(),
+            cfg.chunkstore.clone(),
         );
         SimWorld {
             clock,
@@ -117,6 +124,7 @@ impl SimWorld {
             self.cfg.lease.duration_s,
             self.cfg.server.shards,
             self.metrics.clone(),
+            self.cfg.chunkstore.clone(),
         );
         sec.set_role(Role::Secondary);
         sec.enable_replication();
@@ -191,7 +199,13 @@ impl SimWorld {
             }
         }
         match shipper.ship(&self.server, &self.metrics) {
-            Ok(left) => left,
+            Ok(left) => {
+                // the acked prefix is durable on the secondary: drop it
+                // from the primary's log (DESIGN.md §2.8 retention —
+                // chunk pins released, I4 summary folded)
+                self.server.repl_truncate_acked(shipper.watermark());
+                left
+            }
             Err(_) => shipper.lag(&self.server),
         }
     }

@@ -1,8 +1,31 @@
 //! The inode-based file store (see `homefs/mod.rs`).
+//!
+//! Since the meta/data split (DESIGN.md §2.8) the store runs in one of
+//! two modes:
+//!
+//! * **Dense** (the default) — file bytes live inline in the inode, the
+//!   PR ≤5 behavior byte for byte. Client cache disks, baselines and
+//!   op-log backing stores stay dense: their access pattern is
+//!   append-heavy positional I/O where chunk hashing buys nothing.
+//! * **Chunked** ([`FileStore::enable_chunking`]) — file content lives
+//!   in a content-addressed [`ChunkStore`] and inodes keep only an
+//!   ordered digest list. Home servers run chunked: identical content
+//!   across users dedups to one copy, snapshots pin chunks instead of
+//!   copying bytes, and replication can ship references.
+//!
+//! Chunked mode adds **CoW snapshots**: [`FileStore::snapshot`] clones
+//! the inode table (no content copies) and pins every referenced chunk;
+//! the frozen namespace is readable through versioned paths — any path
+//! component may carry an `@v<id>` suffix (`/proj@v42/data/x` reads
+//! `/proj/data/x` as of snapshot 42). Snapshot views are strictly
+//! read-only; a path whose `@v` id matches no live snapshot is treated
+//! literally (files named `a@v2` stay legal).
 
 use std::collections::{BTreeMap, HashMap};
 use std::fmt;
 
+use crate::chunkstore::{digest_hex, ChunkStore, Digest};
+use crate::metrics::Metrics;
 use crate::simnet::VirtualTime;
 use crate::util::path as vpath;
 
@@ -16,6 +39,9 @@ pub type Ino = u64;
 /// allocation (the store is dense; bytes up to the write's end are
 /// really allocated).
 pub const MAX_FILE_BYTES: u64 = 32 << 30;
+
+/// Default chunk size for chunked mode (matches the stripe block).
+pub const DEFAULT_CHUNK_BYTES: usize = 64 * 1024;
 
 /// Errors mirroring the POSIX cases the interposed libc calls surface.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -93,9 +119,28 @@ pub struct Attr {
     pub version: u64,
 }
 
+/// File content, in whichever mode the store runs.
+#[derive(Debug, Clone)]
+enum FileData {
+    /// Bytes inline in the inode (dense mode).
+    Dense(Vec<u8>),
+    /// An ordered chunk list into the store's [`ChunkStore`]; every
+    /// chunk is exactly `chunk_size` bytes except a short final one.
+    Chunked { size: u64, chunks: Vec<Digest> },
+}
+
+impl FileData {
+    fn size(&self) -> u64 {
+        match self {
+            FileData::Dense(d) => d.len() as u64,
+            FileData::Chunked { size, .. } => *size,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 enum Node {
-    File { data: Vec<u8> },
+    File { data: FileData },
     Dir { entries: BTreeMap<String, Ino> },
 }
 
@@ -117,10 +162,19 @@ impl Inode {
 
     fn size(&self) -> u64 {
         match &self.node {
-            Node::File { data } => data.len() as u64,
+            Node::File { data } => data.size(),
             Node::Dir { entries } => entries.len() as u64,
         }
     }
+}
+
+/// A CoW snapshot: a frozen inode table whose chunked file nodes each
+/// hold one pinned reference per chunk. No content is duplicated.
+#[derive(Debug, Clone)]
+struct Snapshot {
+    inodes: HashMap<Ino, Inode>,
+    root: Ino,
+    created: VirtualTime,
 }
 
 /// The store. All paths are virtual (`util::path`), normalized internally.
@@ -129,8 +183,15 @@ pub struct FileStore {
     inodes: HashMap<Ino, Inode>,
     next_ino: Ino,
     root: Ino,
+    /// Logical bytes (chunked mode may physically store fewer).
     used: u64,
     capacity: u64,
+    /// `Some` switches the store to chunked mode.
+    chunks: Option<ChunkStore>,
+    chunk_size: usize,
+    snapshots: BTreeMap<u64, Snapshot>,
+    next_snapshot: u64,
+    snapshot_retention: usize,
 }
 
 pub const DEFAULT_FILE_MODE: u32 = 0o600;
@@ -140,6 +201,36 @@ impl Default for FileStore {
     fn default() -> Self {
         Self::new(u64::MAX)
     }
+}
+
+/// Parse a versioned read path: one component may carry an `@v<id>`
+/// suffix. Returns the snapshot id and the path with the marker
+/// stripped (`/proj@v42/x` -> `(42, "/proj/x")`; `/@v42/x` pins the
+/// root -> `(42, "/x")`). The caller decides whether the id names a
+/// live snapshot; if not, the original path is used literally.
+fn parse_versioned(path: &str) -> Option<(u64, String)> {
+    let mut id = None;
+    let mut out = String::new();
+    for comp in vpath::components(path) {
+        let mut comp = comp;
+        if id.is_none() {
+            if let Some(at) = comp.rfind("@v") {
+                let digits = comp[at + 2..].to_string();
+                if !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit()) {
+                    if let Ok(v) = digits.parse::<u64>() {
+                        id = Some(v);
+                        comp.truncate(at);
+                        if comp.is_empty() {
+                            continue; // bare `@vN` component: the root itself
+                        }
+                    }
+                }
+            }
+        }
+        out.push('/');
+        out.push_str(&comp);
+    }
+    id.map(|v| (v, if out.is_empty() { "/".to_string() } else { out }))
 }
 
 impl FileStore {
@@ -154,11 +245,73 @@ impl FileStore {
                 version: 1,
             },
         );
-        FileStore { inodes, next_ino: 2, root: 1, used: 0, capacity }
+        FileStore {
+            inodes,
+            next_ino: 2,
+            root: 1,
+            used: 0,
+            capacity,
+            chunks: None,
+            chunk_size: DEFAULT_CHUNK_BYTES,
+            snapshots: BTreeMap::new(),
+            next_snapshot: 1,
+            snapshot_retention: 8,
+        }
     }
 
+    /// Switch to chunked mode: existing dense file content moves into a
+    /// fresh [`ChunkStore`] (deduping as it goes). Idempotent.
+    pub fn enable_chunking(&mut self, chunk_size: usize, snapshot_retention: usize) {
+        if self.chunks.is_some() {
+            return;
+        }
+        self.chunk_size = chunk_size.max(1);
+        self.snapshot_retention = snapshot_retention.max(1);
+        let mut cs = ChunkStore::new();
+        for inode in self.inodes.values_mut() {
+            if let Node::File { data } = &mut inode.node {
+                if let FileData::Dense(bytes) = data {
+                    let digests: Vec<Digest> =
+                        bytes.chunks(self.chunk_size).map(|c| cs.put(c)).collect();
+                    *data = FileData::Chunked { size: bytes.len() as u64, chunks: digests };
+                }
+            }
+        }
+        self.chunks = Some(cs);
+    }
+
+    pub fn is_chunked(&self) -> bool {
+        self.chunks.is_some()
+    }
+
+    pub fn chunk_size(&self) -> usize {
+        self.chunk_size
+    }
+
+    /// Point the chunk store's dedup/GC counters at a shared sink.
+    pub fn attach_metrics(&mut self, metrics: &Metrics) {
+        if let Some(cs) = self.chunks.as_mut() {
+            cs.attach_metrics(metrics);
+        }
+    }
+
+    /// Logical bytes of live file content.
     pub fn used_bytes(&self) -> u64 {
         self.used
+    }
+
+    /// Physical bytes actually stored (equal to [`Self::used_bytes`] in
+    /// dense mode; less under dedup in chunked mode).
+    pub fn stored_bytes(&self) -> u64 {
+        match &self.chunks {
+            Some(cs) => cs.stored_bytes(),
+            None => self.used,
+        }
+    }
+
+    /// The chunk store, when in chunked mode (metrics / tests).
+    pub fn chunkstore(&self) -> Option<&ChunkStore> {
+        self.chunks.as_ref()
     }
 
     pub fn capacity(&self) -> u64 {
@@ -172,11 +325,45 @@ impl FileStore {
         ino
     }
 
-    /// Resolve a path to an inode.
-    pub fn resolve(&self, path: &str) -> Result<Ino, FsError> {
-        let mut cur = self.root;
+    fn empty_file_data(&self) -> FileData {
+        if self.chunks.is_some() {
+            FileData::Chunked { size: 0, chunks: Vec::new() }
+        } else {
+            FileData::Dense(Vec::new())
+        }
+    }
+
+    /// Reject mutations through a snapshot view. A path whose `@v` id
+    /// matches no live snapshot falls through (treated literally).
+    fn guard_live(&self, path: &str) -> Result<(), FsError> {
+        if let Some((id, _)) = parse_versioned(path) {
+            if self.snapshots.contains_key(&id) {
+                return Err(FsError::Perm(format!("snapshot view is read-only: {path}")));
+            }
+        }
+        Ok(())
+    }
+
+    /// Pick the inode table a path resolves against: the live namespace,
+    /// or a snapshot's frozen table for `@v<id>` paths naming a live
+    /// snapshot (with the marker stripped).
+    fn view<'a>(&'a self, path: &str) -> (&'a HashMap<Ino, Inode>, Ino, String) {
+        if let Some((id, clean)) = parse_versioned(path) {
+            if let Some(s) = self.snapshots.get(&id) {
+                return (&s.inodes, s.root, clean);
+            }
+        }
+        (&self.inodes, self.root, path.to_string())
+    }
+
+    fn resolve_in(
+        inodes: &HashMap<Ino, Inode>,
+        root: Ino,
+        path: &str,
+    ) -> Result<Ino, FsError> {
+        let mut cur = root;
         for comp in vpath::components(path) {
-            let inode = &self.inodes[&cur];
+            let inode = &inodes[&cur];
             match &inode.node {
                 Node::Dir { entries } => {
                     cur = *entries.get(&comp).ok_or_else(|| FsError::NotFound(path.to_string()))?;
@@ -185,6 +372,12 @@ impl FileStore {
             }
         }
         Ok(cur)
+    }
+
+    /// Resolve a path to an inode in the LIVE namespace (mutations and
+    /// handles go through here; snapshot views are read-path only).
+    pub fn resolve(&self, path: &str) -> Result<Ino, FsError> {
+        Self::resolve_in(&self.inodes, self.root, path)
     }
 
     pub fn exists(&self, path: &str) -> bool {
@@ -203,30 +396,38 @@ impl FileStore {
         Ok((parent, vpath::basename(&p)))
     }
 
-    /// Stat by path.
+    fn stat_ino_in(inodes: &HashMap<Ino, Inode>, ino: Ino) -> Attr {
+        let i = &inodes[&ino];
+        Attr { ino, kind: i.kind(), size: i.size(), mtime: i.mtime, mode: i.mode, version: i.version }
+    }
+
+    /// Stat by path (snapshot views included).
     pub fn stat(&self, path: &str) -> Result<Attr, FsError> {
-        let ino = self.resolve(path)?;
-        Ok(self.stat_ino(ino))
+        let (inodes, root, p) = self.view(path);
+        let ino = Self::resolve_in(inodes, root, &p)?;
+        Ok(Self::stat_ino_in(inodes, ino))
     }
 
     pub fn stat_ino(&self, ino: Ino) -> Attr {
-        let i = &self.inodes[&ino];
-        Attr { ino, kind: i.kind(), size: i.size(), mtime: i.mtime, mode: i.mode, version: i.version }
+        Self::stat_ino_in(&self.inodes, ino)
     }
 
     /// Create an empty file. Fails if it exists.
     pub fn create(&mut self, path: &str, now: VirtualTime) -> Result<Ino, FsError> {
+        self.guard_live(path)?;
         let (parent, name) = self.resolve_parent(path)?;
         if self.dir_entries(parent)?.contains_key(&name) {
             return Err(FsError::Exists(path.to_string()));
         }
-        let ino = self.alloc(Node::File { data: Vec::new() }, now, DEFAULT_FILE_MODE);
+        let data = self.empty_file_data();
+        let ino = self.alloc(Node::File { data }, now, DEFAULT_FILE_MODE);
         self.link(parent, &name, ino, now)?;
         Ok(ino)
     }
 
     /// Create a directory. Fails if it exists.
     pub fn mkdir(&mut self, path: &str, now: VirtualTime) -> Result<Ino, FsError> {
+        self.guard_live(path)?;
         let (parent, name) = self.resolve_parent(path)?;
         if self.dir_entries(parent)?.contains_key(&name) {
             return Err(FsError::Exists(path.to_string()));
@@ -238,6 +439,7 @@ impl FileStore {
 
     /// `mkdir -p`.
     pub fn mkdir_p(&mut self, path: &str, now: VirtualTime) -> Result<Ino, FsError> {
+        self.guard_live(path)?;
         let mut cur = "/".to_string();
         let mut ino = self.root;
         for comp in vpath::components(path) {
@@ -276,49 +478,124 @@ impl FileStore {
         Ok(())
     }
 
-    /// List a directory (sorted names + attrs).
+    /// List a directory (sorted names + attrs; snapshot views included).
     pub fn readdir(&self, path: &str) -> Result<Vec<(String, Attr)>, FsError> {
-        let ino = self.resolve(path)?;
-        let entries = self.dir_entries(ino)?;
-        Ok(entries.iter().map(|(n, &i)| (n.clone(), self.stat_ino(i))).collect())
+        let (inodes, root, p) = self.view(path);
+        let ino = Self::resolve_in(inodes, root, &p)?;
+        let entries = match &inodes.get(&ino).ok_or(FsError::BadHandle)?.node {
+            Node::Dir { entries } => entries,
+            Node::File { .. } => return Err(FsError::NotADir(path.to_string())),
+        };
+        Ok(entries.iter().map(|(n, &i)| (n.clone(), Self::stat_ino_in(inodes, i))).collect())
     }
 
-    /// Full file contents.
-    pub fn read(&self, path: &str) -> Result<&[u8], FsError> {
-        let ino = self.resolve(path)?;
-        match &self.inodes[&ino].node {
-            Node::File { data } => Ok(data),
+    /// Assemble a file node's full content.
+    fn file_bytes(&self, data: &FileData, path: &str) -> Result<Vec<u8>, FsError> {
+        match data {
+            FileData::Dense(d) => Ok(d.clone()),
+            FileData::Chunked { size, chunks } => {
+                let cs = self
+                    .chunks
+                    .as_ref()
+                    .ok_or_else(|| FsError::Protocol(format!("chunked node, no chunk store: {path}")))?;
+                let mut out = Vec::with_capacity(*size as usize);
+                for d in chunks {
+                    out.extend_from_slice(cs.get(d).ok_or_else(|| {
+                        FsError::Protocol(format!("missing chunk {} for {path}", digest_hex(d)))
+                    })?);
+                }
+                Ok(out)
+            }
+        }
+    }
+
+    /// Full file contents (snapshot views included).
+    pub fn read(&self, path: &str) -> Result<Vec<u8>, FsError> {
+        let (inodes, root, p) = self.view(path);
+        let ino = Self::resolve_in(inodes, root, &p)?;
+        match &inodes[&ino].node {
+            Node::File { data } => self.file_bytes(data, path),
             Node::Dir { .. } => Err(FsError::IsADir(path.to_string())),
         }
     }
 
-    /// Ranged read; clamped to EOF.
-    pub fn read_at(&self, path: &str, offset: u64, len: usize) -> Result<&[u8], FsError> {
-        let data = self.read(path)?;
-        let start = (offset as usize).min(data.len());
-        let end = (start + len).min(data.len());
-        Ok(&data[start..end])
+    /// Ranged read; clamped to EOF. Chunked mode touches only the
+    /// covering chunks (no whole-file materialization).
+    pub fn read_at(&self, path: &str, offset: u64, len: usize) -> Result<Vec<u8>, FsError> {
+        let (inodes, root, p) = self.view(path);
+        let ino = Self::resolve_in(inodes, root, &p)?;
+        let data = match &inodes[&ino].node {
+            Node::File { data } => data,
+            Node::Dir { .. } => return Err(FsError::IsADir(path.to_string())),
+        };
+        match data {
+            FileData::Dense(d) => {
+                let start = (offset as usize).min(d.len());
+                let end = (start + len).min(d.len());
+                Ok(d[start..end].to_vec())
+            }
+            FileData::Chunked { size, chunks } => {
+                let start = offset.min(*size);
+                let end = offset.saturating_add(len as u64).min(*size);
+                if start >= end {
+                    return Ok(Vec::new());
+                }
+                let cb = self.chunk_size as u64;
+                let cs = self
+                    .chunks
+                    .as_ref()
+                    .ok_or_else(|| FsError::Protocol(format!("chunked node, no chunk store: {path}")))?;
+                let mut out = Vec::with_capacity((end - start) as usize);
+                for ci in start / cb..end.div_ceil(cb) {
+                    let bytes = cs.get(&chunks[ci as usize]).ok_or_else(|| {
+                        FsError::Protocol(format!(
+                            "missing chunk {} for {path}",
+                            digest_hex(&chunks[ci as usize])
+                        ))
+                    })?;
+                    let cstart = ci * cb;
+                    let s = start.saturating_sub(cstart) as usize;
+                    let e = ((end - cstart) as usize).min(bytes.len());
+                    out.extend_from_slice(&bytes[s..e]);
+                }
+                Ok(out)
+            }
+        }
     }
 
     /// Replace file contents entirely (creating the file if absent).
     pub fn write(&mut self, path: &str, content: &[u8], now: VirtualTime) -> Result<(), FsError> {
+        self.guard_live(path)?;
         if self.resolve(path).is_err() {
             self.create(path, now)?;
         }
         let ino = self.resolve(path)?;
+        if self.inodes[&ino].kind() == NodeKind::Dir {
+            return Err(FsError::IsADir(path.to_string()));
+        }
         let old = self.inodes[&ino].size();
         let new = content.len() as u64;
         self.charge(old, new)?;
-        let inode = self.inodes.get_mut(&ino).unwrap();
-        match &mut inode.node {
-            Node::File { data } => {
-                data.clear();
-                data.extend_from_slice(content);
+        let new_data = match self.chunks.as_mut() {
+            Some(cs) => {
+                let digests: Vec<Digest> =
+                    content.chunks(self.chunk_size).map(|c| cs.put(c)).collect();
+                FileData::Chunked { size: new, chunks: digests }
             }
-            Node::Dir { .. } => return Err(FsError::IsADir(path.to_string())),
-        }
+            None => FileData::Dense(content.to_vec()),
+        };
+        let inode = self.inodes.get_mut(&ino).unwrap();
+        let old_data = match &mut inode.node {
+            Node::File { data } => std::mem::replace(data, new_data),
+            Node::Dir { .. } => unreachable!("kind checked above"),
+        };
         inode.mtime = now;
         inode.version += 1;
+        if let (Some(cs), FileData::Chunked { chunks, .. }) = (self.chunks.as_mut(), &old_data) {
+            for d in chunks {
+                cs.decref(d);
+            }
+        }
         Ok(())
     }
 
@@ -326,7 +603,11 @@ impl FileStore {
     /// materialized in the dense in-memory store are rejected, not
     /// panicked on — `pwrite` exposes arbitrary caller offsets (v2 Vfs).
     pub fn write_at(&mut self, path: &str, offset: u64, buf: &[u8], now: VirtualTime) -> Result<(), FsError> {
+        self.guard_live(path)?;
         let ino = self.resolve(path)?;
+        if self.inodes[&ino].kind() == NodeKind::Dir {
+            return Err(FsError::IsADir(path.to_string()));
+        }
         let old = self.inodes[&ino].size();
         let end = offset
             .checked_add(buf.len() as u64)
@@ -334,15 +615,83 @@ impl FileStore {
             .ok_or_else(|| FsError::Invalid(format!("write_at offset {offset} out of range")))?;
         let new = old.max(end);
         self.charge(old, new)?;
+        if self.chunks.is_some() {
+            return self.write_at_chunked(ino, offset, buf, now, old, new);
+        }
         let inode = self.inodes.get_mut(&ino).unwrap();
         match &mut inode.node {
-            Node::File { data } => {
+            Node::File { data: FileData::Dense(data) } => {
                 if data.len() < end as usize {
                     data.resize(end as usize, 0);
                 }
                 data[offset as usize..end as usize].copy_from_slice(buf);
             }
-            Node::Dir { .. } => return Err(FsError::IsADir(path.to_string())),
+            _ => return Err(FsError::Protocol(format!("mixed-mode node: {path}"))),
+        }
+        inode.mtime = now;
+        inode.version += 1;
+        Ok(())
+    }
+
+    /// Chunked positional write: rebuild only the chunk range the write
+    /// touches. A growing write also rebuilds from the old trailing
+    /// (possibly short) chunk, whose bytes move to an interior,
+    /// full-sized position. Untouched chunks keep their digests — this
+    /// is what keeps GiB-scale append workloads O(bytes written), not
+    /// O(file size).
+    fn write_at_chunked(
+        &mut self,
+        ino: Ino,
+        offset: u64,
+        buf: &[u8],
+        now: VirtualTime,
+        old_size: u64,
+        new_size: u64,
+    ) -> Result<(), FsError> {
+        let cb = self.chunk_size as u64;
+        let end = offset + buf.len() as u64;
+        let old_chunks: Vec<Digest> = match &self.inodes[&ino].node {
+            Node::File { data: FileData::Chunked { chunks, .. } } => chunks.clone(),
+            _ => return Err(FsError::Protocol(format!("mixed-mode node: ino {ino}"))),
+        };
+        let grows = end > old_size;
+        let lo = if grows {
+            let old_last = if old_size == 0 { 0 } else { (old_size - 1) / cb };
+            (offset / cb).min(old_last)
+        } else {
+            offset / cb
+        };
+        let hi = if grows { old_chunks.len() as u64 } else { end.div_ceil(cb) };
+        // materialize the affected byte range [lo*cb, hi's end)
+        let mut patch = Vec::new();
+        {
+            let cs = self.chunks.as_ref().expect("chunked mode");
+            for ci in lo..hi {
+                let d = &old_chunks[ci as usize];
+                patch.extend_from_slice(cs.get(d).ok_or_else(|| {
+                    FsError::Protocol(format!("missing chunk {} for ino {ino}", digest_hex(d)))
+                })?);
+            }
+        }
+        if grows {
+            patch.resize((new_size - lo * cb) as usize, 0);
+        }
+        let rel = (offset - lo * cb) as usize;
+        patch[rel..rel + buf.len()].copy_from_slice(buf);
+        let cs = self.chunks.as_mut().expect("chunked mode");
+        let new_digests: Vec<Digest> = patch.chunks(cb as usize).map(|c| cs.put(c)).collect();
+        for ci in lo..hi {
+            cs.decref(&old_chunks[ci as usize]);
+        }
+        let mut chunks = Vec::with_capacity(lo as usize + new_digests.len());
+        chunks.extend_from_slice(&old_chunks[..lo as usize]);
+        chunks.extend_from_slice(&new_digests);
+        if !grows {
+            chunks.extend_from_slice(&old_chunks[hi as usize..]);
+        }
+        let inode = self.inodes.get_mut(&ino).unwrap();
+        if let Node::File { data } = &mut inode.node {
+            *data = FileData::Chunked { size: new_size, chunks };
         }
         inode.mtime = now;
         inode.version += 1;
@@ -351,16 +700,59 @@ impl FileStore {
 
     /// Truncate/extend to `size`.
     pub fn truncate(&mut self, path: &str, size: u64, now: VirtualTime) -> Result<(), FsError> {
+        self.guard_live(path)?;
         let ino = self.resolve(path)?;
         if size > MAX_FILE_BYTES {
             return Err(FsError::Invalid(format!("truncate size {size} out of range")));
         }
+        if self.inodes[&ino].kind() == NodeKind::Dir {
+            return Err(FsError::IsADir(path.to_string()));
+        }
         let old = self.inodes[&ino].size();
         self.charge(old, size)?;
+        if self.chunks.is_none() {
+            let inode = self.inodes.get_mut(&ino).unwrap();
+            if let Node::File { data: FileData::Dense(data) } = &mut inode.node {
+                data.resize(size as usize, 0);
+            }
+            inode.mtime = now;
+            inode.version += 1;
+            return Ok(());
+        }
+        if size > old {
+            // zero-extension is a growing write of nothing at `size`
+            return self.write_at_chunked(ino, size, &[], now, old, size);
+        }
+        // shrink: drop whole trailing chunks; trim the boundary chunk
+        let cb = self.chunk_size as u64;
+        let old_chunks: Vec<Digest> = match &self.inodes[&ino].node {
+            Node::File { data: FileData::Chunked { chunks, .. } } => chunks.clone(),
+            _ => return Err(FsError::Protocol(format!("mixed-mode node: ino {ino}"))),
+        };
+        let keep = size.div_ceil(cb) as usize;
+        let tail = size % cb;
+        let mut chunks = old_chunks[..keep].to_vec();
+        if tail != 0 {
+            let trimmed = {
+                let cs = self.chunks.as_ref().expect("chunked mode");
+                let d = &old_chunks[keep - 1];
+                let bytes = cs.get(d).ok_or_else(|| {
+                    FsError::Protocol(format!("missing chunk {} for {path}", digest_hex(d)))
+                })?;
+                bytes[..tail as usize].to_vec()
+            };
+            let cs = self.chunks.as_mut().expect("chunked mode");
+            let nd = cs.put(&trimmed);
+            cs.decref(&old_chunks[keep - 1]);
+            chunks[keep - 1] = nd;
+        }
+        let cs = self.chunks.as_mut().expect("chunked mode");
+        for d in &old_chunks[keep..] {
+            cs.decref(d);
+        }
         let inode = self.inodes.get_mut(&ino).unwrap();
-        match &mut inode.node {
-            Node::File { data } => data.resize(size as usize, 0),
-            Node::Dir { .. } => return Err(FsError::IsADir(path.to_string())),
+        if let Node::File { data } = &mut inode.node {
+            *data = FileData::Chunked { size, chunks };
         }
         inode.mtime = now;
         inode.version += 1;
@@ -378,6 +770,7 @@ impl FileStore {
 
     /// chmod.
     pub fn set_mode(&mut self, path: &str, mode: u32, now: VirtualTime) -> Result<(), FsError> {
+        self.guard_live(path)?;
         let ino = self.resolve(path)?;
         let inode = self.inodes.get_mut(&ino).unwrap();
         inode.mode = mode;
@@ -388,6 +781,7 @@ impl FileStore {
 
     /// Remove a file.
     pub fn unlink(&mut self, path: &str, now: VirtualTime) -> Result<(), FsError> {
+        self.guard_live(path)?;
         let ino = self.resolve(path)?;
         if self.inodes[&ino].kind() == NodeKind::Dir {
             return Err(FsError::IsADir(path.to_string()));
@@ -400,13 +794,23 @@ impl FileStore {
         let p = self.inodes.get_mut(&parent).unwrap();
         p.mtime = now;
         p.version += 1;
-        self.inodes.remove(&ino);
+        let removed = self.inodes.remove(&ino);
+        if let (Some(cs), Some(Inode { node: Node::File { data: FileData::Chunked { chunks, .. } }, .. })) =
+            (self.chunks.as_mut(), &removed)
+        {
+            // the namespace reference is gone; snapshots/logs holding
+            // their own pins keep the chunks alive past this decref
+            for d in chunks {
+                cs.decref(d);
+            }
+        }
         self.used -= size;
         Ok(())
     }
 
     /// Remove an empty directory.
     pub fn rmdir(&mut self, path: &str, now: VirtualTime) -> Result<(), FsError> {
+        self.guard_live(path)?;
         let ino = self.resolve(path)?;
         match &self.inodes[&ino].node {
             Node::Dir { entries } if !entries.is_empty() => {
@@ -431,8 +835,12 @@ impl FileStore {
 
     /// Rename (file or directory). POSIX-style: replaces an existing file
     /// target; fails on non-empty directory target; refuses to move a
-    /// directory under itself.
+    /// directory under itself. In chunked mode this is PURE metadata —
+    /// the moved inode keeps its chunk list, no content moves or
+    /// re-hashes (only a replaced target releases its references).
     pub fn rename(&mut self, from: &str, to: &str, now: VirtualTime) -> Result<(), FsError> {
+        self.guard_live(from)?;
+        self.guard_live(to)?;
         let from_n = vpath::normalize(from);
         let to_n = vpath::normalize(to);
         let ino = self.resolve(&from_n)?;
@@ -483,6 +891,115 @@ impl FileStore {
         }
         Ok(out)
     }
+
+    // ---- chunked-mode surface (server replication / snapshots) ----
+
+    /// Size + ordered chunk digests of a live file (chunked mode only).
+    pub fn file_chunks(&self, path: &str) -> Result<(u64, Vec<Digest>), FsError> {
+        let ino = self.resolve(path)?;
+        match &self.inodes[&ino].node {
+            Node::File { data: FileData::Chunked { size, chunks } } => Ok((*size, chunks.clone())),
+            Node::File { data: FileData::Dense(_) } => {
+                Err(FsError::Invalid(format!("dense file has no chunk refs: {path}")))
+            }
+            Node::Dir { .. } => Err(FsError::IsADir(path.to_string())),
+        }
+    }
+
+    pub fn has_chunk(&self, d: &Digest) -> bool {
+        self.chunks.as_ref().map(|cs| cs.contains(d)).unwrap_or(false)
+    }
+
+    /// Raw chunk bytes (replication shipping reads chunks directly).
+    pub fn chunk_data(&self, d: &Digest) -> Option<Vec<u8>> {
+        self.chunks.as_ref().and_then(|cs| cs.get(d).map(|b| b.to_vec()))
+    }
+
+    /// Insert a chunk delivered out of band (replica `ChunkPush`); the
+    /// caller owns one reference (its "staged" pin).
+    pub fn insert_chunk(&mut self, bytes: &[u8]) -> Result<Digest, FsError> {
+        match self.chunks.as_mut() {
+            Some(cs) => Ok(cs.put(bytes)),
+            None => Err(FsError::Invalid("chunk push into a dense store".into())),
+        }
+    }
+
+    /// Pin a chunk (e.g. while an un-shipped replication record refers
+    /// to it). Returns `false` if unknown.
+    pub fn incref_chunk(&mut self, d: &Digest) -> bool {
+        self.chunks.as_mut().map(|cs| cs.incref(d)).unwrap_or(false)
+    }
+
+    /// Release a pin taken with [`Self::incref_chunk`]/[`Self::insert_chunk`].
+    pub fn decref_chunk(&mut self, d: &Digest) {
+        if let Some(cs) = self.chunks.as_mut() {
+            cs.decref(d);
+        }
+    }
+
+    /// Sweep dead chunks. Returns (chunks, bytes) collected.
+    pub fn gc(&mut self) -> (u64, u64) {
+        match self.chunks.as_mut() {
+            Some(cs) => cs.gc(),
+            None => (0, 0),
+        }
+    }
+
+    // ---- snapshots ----
+
+    /// Take a CoW snapshot of the live namespace: clone the inode table
+    /// and pin every referenced chunk — O(metadata), no content copies.
+    /// Read it back through `@v<id>` paths. Snapshots beyond the
+    /// retention bound evict oldest-first (releasing their pins).
+    pub fn snapshot(&mut self, now: VirtualTime) -> Result<u64, FsError> {
+        let Some(cs) = self.chunks.as_mut() else {
+            return Err(FsError::Invalid("snapshots need the chunked store".into()));
+        };
+        for inode in self.inodes.values() {
+            if let Node::File { data: FileData::Chunked { chunks, .. } } = &inode.node {
+                for d in chunks {
+                    cs.incref(d);
+                }
+            }
+        }
+        let id = self.next_snapshot;
+        self.next_snapshot += 1;
+        self.snapshots
+            .insert(id, Snapshot { inodes: self.inodes.clone(), root: self.root, created: now });
+        while self.snapshots.len() > self.snapshot_retention {
+            let oldest = *self.snapshots.keys().next().expect("non-empty");
+            self.drop_snapshot(oldest);
+        }
+        Ok(id)
+    }
+
+    /// Drop a snapshot, releasing its chunk pins. Returns `false` if the
+    /// id names no live snapshot.
+    pub fn drop_snapshot(&mut self, id: u64) -> bool {
+        let Some(snap) = self.snapshots.remove(&id) else {
+            return false;
+        };
+        if let Some(cs) = self.chunks.as_mut() {
+            for inode in snap.inodes.values() {
+                if let Node::File { data: FileData::Chunked { chunks, .. } } = &inode.node {
+                    for d in chunks {
+                        cs.decref(d);
+                    }
+                }
+            }
+        }
+        true
+    }
+
+    /// Live snapshot ids, oldest first.
+    pub fn snapshot_ids(&self) -> Vec<u64> {
+        self.snapshots.keys().copied().collect()
+    }
+
+    /// When a snapshot was taken.
+    pub fn snapshot_created(&self, id: u64) -> Option<VirtualTime> {
+        self.snapshots.get(&id).map(|s| s.created)
+    }
 }
 
 #[cfg(test)]
@@ -491,6 +1008,14 @@ mod tests {
 
     fn t(s: f64) -> VirtualTime {
         VirtualTime::from_secs(s)
+    }
+
+    /// A store in chunked mode with a tiny chunk so tests cross chunk
+    /// boundaries with small payloads.
+    fn chunked(chunk: usize) -> FileStore {
+        let mut fs = FileStore::default();
+        fs.enable_chunking(chunk, 8);
+        fs
     }
 
     #[test]
@@ -655,5 +1180,224 @@ mod tests {
         assert!(matches!(fs.read("/"), Err(FsError::IsADir(_))));
         assert!(matches!(fs.mkdir("/f/sub", t(1.0)), Err(FsError::NotADir(_))));
         assert!(matches!(fs.create("/f", t(1.0)), Err(FsError::Exists(_))));
+    }
+
+    // ---- chunked mode ----
+
+    #[test]
+    fn chunked_matches_dense_on_random_ops() {
+        // same op sequence against both modes must read identically
+        let mut dense = FileStore::default();
+        let mut ch = chunked(7); // deliberately odd chunk size
+        let mut seed = 0x1234_5678_9abc_def0u64;
+        let mut rng = move || {
+            seed ^= seed << 13;
+            seed ^= seed >> 7;
+            seed ^= seed << 17;
+            seed
+        };
+        for s in [&mut dense, &mut ch] {
+            s.mkdir_p("/w", t(0.0)).unwrap();
+        }
+        for step in 0..400u64 {
+            let r = rng();
+            let path = format!("/w/f{}", r % 5);
+            let now = t(step as f64);
+            match r % 5 {
+                0 => {
+                    let data = vec![(r >> 8) as u8; (r % 61) as usize];
+                    dense.write(&path, &data, now).unwrap();
+                    ch.write(&path, &data, now).unwrap();
+                }
+                1 => {
+                    if dense.exists(&path) {
+                        let off = r % 40;
+                        let buf = vec![(r >> 16) as u8; (r % 23) as usize];
+                        assert_eq!(
+                            dense.write_at(&path, off, &buf, now),
+                            ch.write_at(&path, off, &buf, now)
+                        );
+                    }
+                }
+                2 => {
+                    if dense.exists(&path) {
+                        let size = r % 70;
+                        assert_eq!(
+                            dense.truncate(&path, size, now),
+                            ch.truncate(&path, size, now)
+                        );
+                    }
+                }
+                3 => {
+                    if dense.exists(&path) {
+                        assert_eq!(dense.unlink(&path, now), ch.unlink(&path, now));
+                    }
+                }
+                _ => {
+                    assert_eq!(dense.read(&path).ok(), ch.read(&path).ok(), "step {step} {path}");
+                    let off = r % 50;
+                    let len = (r % 30) as usize;
+                    assert_eq!(
+                        dense.read_at(&path, off, len).ok(),
+                        ch.read_at(&path, off, len).ok()
+                    );
+                }
+            }
+            assert_eq!(dense.used_bytes(), ch.used_bytes(), "step {step}");
+        }
+        for (p, a) in dense.walk("/").unwrap() {
+            if a.kind == NodeKind::File {
+                assert_eq!(dense.read(&p).unwrap(), ch.read(&p).unwrap(), "{p}");
+            }
+        }
+    }
+
+    #[test]
+    fn identical_content_dedups() {
+        let mut fs = chunked(8);
+        let blob = vec![0xABu8; 64];
+        fs.write("/u1/tool", &blob, t(0.0)).map_err(|_| ()).ok();
+        fs.mkdir_p("/u1", t(0.0)).unwrap();
+        fs.mkdir_p("/u2", t(0.0)).unwrap();
+        fs.write("/u1/tool", &blob, t(1.0)).unwrap();
+        fs.write("/u2/tool", &blob, t(2.0)).unwrap();
+        assert_eq!(fs.used_bytes(), 128, "logical bytes double-count");
+        assert_eq!(fs.stored_bytes(), 64, "physical bytes stored once");
+        assert!(fs.chunkstore().unwrap().dedup_hits() >= 8);
+    }
+
+    #[test]
+    fn unlink_then_gc_frees_unshared_chunks() {
+        let mut fs = chunked(4);
+        fs.write("/a", b"unique-a", t(0.0)).unwrap();
+        fs.write("/b", b"unique-b", t(0.0)).unwrap();
+        fs.unlink("/a", t(1.0)).unwrap();
+        assert_eq!(fs.stored_bytes(), 16, "dead bytes retained until sweep");
+        let (n, bytes) = fs.gc();
+        assert!(n >= 1);
+        assert_eq!(bytes, 4, "only /a's unshared chunk freed ('uniq' prefix is shared)");
+        assert_eq!(fs.read("/b").unwrap(), b"unique-b");
+    }
+
+    #[test]
+    fn snapshot_isolates_reads_from_live_mutations() {
+        let mut fs = chunked(4);
+        fs.mkdir_p("/proj", t(0.0)).unwrap();
+        fs.write("/proj/data", b"version-one", t(1.0)).unwrap();
+        let id = fs.snapshot(t(2.0)).unwrap();
+        fs.write("/proj/data", b"version-TWO!", t(3.0)).unwrap();
+        fs.truncate("/proj/data", 7, t(4.0)).unwrap();
+        // live sees the mutation, the snapshot view the frozen content
+        assert_eq!(fs.read("/proj/data").unwrap(), b"version");
+        let vpath = format!("/proj@v{id}/data");
+        assert_eq!(fs.read(&vpath).unwrap(), b"version-one");
+        assert_eq!(fs.stat(&vpath).unwrap().size, 11);
+        assert_eq!(fs.read_at(&vpath, 8, 3).unwrap(), b"one");
+        // readdir through the view too
+        let names: Vec<String> =
+            fs.readdir(&format!("/proj@v{id}")).unwrap().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["data"]);
+        // gc never collects snapshot-pinned chunks
+        fs.gc();
+        assert_eq!(fs.read(&vpath).unwrap(), b"version-one");
+    }
+
+    #[test]
+    fn snapshot_survives_unlink_and_drop_releases() {
+        let mut fs = chunked(4);
+        fs.write("/f", b"pinned-by-snap", t(0.0)).unwrap();
+        let id = fs.snapshot(t(1.0)).unwrap();
+        fs.unlink("/f", t(2.0)).unwrap();
+        fs.gc();
+        assert_eq!(fs.read(&format!("/f@v{id}")).unwrap(), b"pinned-by-snap");
+        assert!(fs.drop_snapshot(id));
+        let (n, _) = fs.gc();
+        assert!(n >= 1, "dropping the last pin frees the chunks");
+        assert!(fs.read(&format!("/f@v{id}")).is_err(), "dropped snapshot id is literal");
+    }
+
+    #[test]
+    fn snapshot_views_are_read_only() {
+        let mut fs = chunked(4);
+        fs.write("/f", b"frozen", t(0.0)).unwrap();
+        let id = fs.snapshot(t(1.0)).unwrap();
+        let vp = format!("/f@v{id}");
+        assert!(matches!(fs.write(&vp, b"x", t(2.0)), Err(FsError::Perm(_))));
+        assert!(matches!(fs.unlink(&vp, t(2.0)), Err(FsError::Perm(_))));
+        assert!(matches!(fs.truncate(&vp, 0, t(2.0)), Err(FsError::Perm(_))));
+        assert!(matches!(
+            fs.rename(&vp, "/g", t(2.0)),
+            Err(FsError::Perm(_))
+        ));
+        // an id that names no snapshot is a literal path component
+        fs.write("/f@v999", b"literal", t(3.0)).unwrap();
+        assert_eq!(fs.read("/f@v999").unwrap(), b"literal");
+    }
+
+    #[test]
+    fn snapshot_retention_evicts_oldest() {
+        let mut fs = FileStore::default();
+        fs.enable_chunking(4, 2);
+        fs.write("/f", b"aaaa", t(0.0)).unwrap();
+        let s1 = fs.snapshot(t(1.0)).unwrap();
+        let s2 = fs.snapshot(t(2.0)).unwrap();
+        let s3 = fs.snapshot(t(3.0)).unwrap();
+        assert_eq!(fs.snapshot_ids(), vec![s2, s3]);
+        assert!(fs.snapshot_created(s1).is_none());
+        assert!(fs.snapshot_created(s3).is_some());
+    }
+
+    #[test]
+    fn rename_is_pure_metadata_in_chunked_mode() {
+        let mut fs = chunked(4);
+        fs.mkdir_p("/a", t(0.0)).unwrap();
+        fs.mkdir_p("/b", t(0.0)).unwrap();
+        fs.write("/a/big", &vec![7u8; 1000], t(1.0)).unwrap();
+        let (size_before, digests_before) = fs.file_chunks("/a/big").unwrap();
+        let stored = fs.stored_bytes();
+        let hits = fs.chunkstore().unwrap().dedup_hits();
+        fs.rename("/a/big", "/b/big", t(2.0)).unwrap();
+        let (size_after, digests_after) = fs.file_chunks("/b/big").unwrap();
+        assert_eq!((size_before, &digests_before), (size_after, &digests_after));
+        assert_eq!(fs.stored_bytes(), stored, "no bytes moved");
+        assert_eq!(fs.chunkstore().unwrap().dedup_hits(), hits, "no re-chunking");
+        assert_eq!(fs.read("/b/big").unwrap(), vec![7u8; 1000]);
+    }
+
+    #[test]
+    fn chunk_surface_for_replication() {
+        let mut fs = chunked(4);
+        fs.write("/f", b"abcdefgh", t(0.0)).unwrap();
+        let (size, digests) = fs.file_chunks("/f").unwrap();
+        assert_eq!(size, 8);
+        assert_eq!(digests.len(), 2);
+        assert!(fs.has_chunk(&digests[0]));
+        assert_eq!(fs.chunk_data(&digests[0]).unwrap(), b"abcd");
+        // a log pin keeps a chunk past unlink+gc
+        assert!(fs.incref_chunk(&digests[1]));
+        fs.unlink("/f", t(1.0)).unwrap();
+        fs.gc();
+        assert!(!fs.has_chunk(&digests[0]));
+        assert!(fs.has_chunk(&digests[1]), "pinned chunk survives");
+        fs.decref_chunk(&digests[1]);
+        fs.gc();
+        assert!(!fs.has_chunk(&digests[1]));
+    }
+
+    #[test]
+    fn snapshots_require_chunked_mode() {
+        let mut fs = FileStore::default();
+        assert!(matches!(fs.snapshot(t(0.0)), Err(FsError::Invalid(_))));
+    }
+
+    #[test]
+    fn versioned_path_parsing() {
+        assert_eq!(parse_versioned("/proj@v42/data/x"), Some((42, "/proj/data/x".into())));
+        assert_eq!(parse_versioned("/@v7"), Some((7, "/".into())));
+        assert_eq!(parse_versioned("/@v7/x"), Some((7, "/x".into())));
+        assert_eq!(parse_versioned("/f@v0"), Some((0, "/f".into())));
+        assert_eq!(parse_versioned("/plain/path"), None);
+        assert_eq!(parse_versioned("/odd@vx/path"), None);
+        assert_eq!(parse_versioned("/trailing@v"), None);
     }
 }

@@ -36,6 +36,7 @@ pub mod baselines;
 pub mod bench;
 pub mod cache;
 pub mod callback;
+pub mod chunkstore;
 pub mod client;
 pub mod config;
 pub mod coordinator;

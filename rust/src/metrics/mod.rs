@@ -166,6 +166,18 @@ pub mod names {
     pub const REPLICA_FAILOVERS: &str = "replica.failovers";
     /// `Replicate` frames the shipper successfully delivered.
     pub const REPLICA_SHIP_BATCHES: &str = "replica.ship_batches";
+    /// Applied-op log records dropped by acked-prefix truncation.
+    pub const REPLICA_LOG_TRUNCATED: &str = "replica.log_truncated";
+    /// Chunks pushed to the secondary to fill ref-shipping gaps.
+    pub const REPLICA_CHUNK_PUSHES: &str = "replica.chunk_pushes";
+    /// Chunk writes that found an identical chunk already stored.
+    pub const CHUNK_DEDUP_HITS: &str = "chunkstore.dedup_hits";
+    /// Bytes dedup avoided storing (logical bytes of deduped chunks).
+    pub const CHUNK_DEDUP_BYTES_SAVED: &str = "chunkstore.dedup_bytes_saved";
+    /// Dead chunks the deferred GC sweep actually freed.
+    pub const CHUNK_GC_COLLECTED: &str = "chunkstore.gc_collected";
+    /// CoW snapshots taken of the home namespace.
+    pub const CHUNK_SNAPSHOTS: &str = "chunkstore.snapshots";
     pub const OP_LATENCY: &str = "vfs.op_latency";
 
     /// Every metric the system emits, with a one-line meaning. This is
@@ -209,6 +221,12 @@ pub mod names {
         (REPLICA_LAG, "Gauge: applied ops the secondary trails the primary's replication log by."),
         (REPLICA_FAILOVERS, "Client connects that switched to a different endpoint (failover)."),
         (REPLICA_SHIP_BATCHES, "`Replicate` frames the log shipper successfully delivered."),
+        (REPLICA_LOG_TRUNCATED, "Applied-op log records dropped by acked-prefix truncation."),
+        (REPLICA_CHUNK_PUSHES, "Chunks pushed to the secondary to fill ref-shipping gaps."),
+        (CHUNK_DEDUP_HITS, "Chunk writes that found an identical chunk already stored."),
+        (CHUNK_DEDUP_BYTES_SAVED, "Bytes dedup avoided storing (logical bytes of deduped chunks)."),
+        (CHUNK_GC_COLLECTED, "Dead chunks the deferred GC sweep actually freed."),
+        (CHUNK_SNAPSHOTS, "CoW snapshots taken of the home namespace."),
         (OP_LATENCY, "Histogram of per-VFS-op latency, seconds."),
     ];
 

@@ -1,8 +1,35 @@
 //! Protocol message types and their codec implementations.
 
+use crate::chunkstore::Digest;
 use crate::homefs::{Attr, NodeKind};
 use crate::proto::codec::{Decoder, Encoder, ProtoError};
 use crate::simnet::VirtualTime;
+
+/// Encode a digest list as one length-prefixed blob of `32 * n` bytes.
+fn encode_digest_list(e: &mut Encoder, digests: &[Digest]) {
+    let mut blob = Vec::with_capacity(digests.len() * 32);
+    for d in digests {
+        blob.extend_from_slice(d);
+    }
+    e.bytes(&blob);
+}
+
+/// Decode a digest blob; anything not a multiple of 32 bytes is a torn
+/// or tampered frame.
+fn decode_digest_list(d: &mut Decoder) -> Result<Vec<Digest>, ProtoError> {
+    let raw = d.bytes()?;
+    if raw.len() % 32 != 0 {
+        return Err(ProtoError(format!("digest blob of {} bytes not a multiple of 32", raw.len())));
+    }
+    Ok(raw
+        .chunks_exact(32)
+        .map(|c| {
+            let mut a = [0u8; 32];
+            a.copy_from_slice(c);
+            a
+        })
+        .collect())
+}
 
 /// Attributes on the wire (mirrors `homefs::Attr`).
 #[derive(Debug, Clone, PartialEq)]
@@ -119,6 +146,23 @@ pub enum MetaOp {
         blocks: Vec<(u32, Vec<u8>)>,
         digests: Vec<i32>,
     },
+    /// A `WriteFull` spilled by reference (DESIGN.md §2.8): the content
+    /// is named by its ordered chunk digests instead of carried inline.
+    /// Replication-internal — the primary's log converts applied
+    /// `WriteFull`s to this form when the chunk substrate is on, and the
+    /// secondary materializes it back into a `WriteFull` (fetching any
+    /// chunks it is missing first via `Request::ChunkPush`). `digests`
+    /// and `base_version` are the ORIGINAL block-digest vector and base
+    /// version of the converted write, preserved verbatim so the
+    /// secondary's conflict-detection logic sees byte-identical inputs.
+    /// Clients never submit it; the apply path rejects it as invalid.
+    WriteRef {
+        path: String,
+        size: u64,
+        chunks: Vec<Digest>,
+        digests: Vec<i32>,
+        base_version: u64,
+    },
 }
 
 impl MetaOp {
@@ -132,7 +176,8 @@ impl MetaOp {
             | MetaOp::Truncate { path, .. }
             | MetaOp::SetMode { path, .. }
             | MetaOp::WriteFull { path, .. }
-            | MetaOp::WriteDelta { path, .. } => path,
+            | MetaOp::WriteDelta { path, .. }
+            | MetaOp::WriteRef { path, .. } => path,
             MetaOp::Rename { from, .. } => from,
         }
     }
@@ -144,6 +189,9 @@ impl MetaOp {
             MetaOp::WriteFull { data, .. } => data.len() as u64 + 64,
             MetaOp::WriteDelta { blocks, .. } => {
                 blocks.iter().map(|(_, b)| b.len() as u64 + 8).sum::<u64>() + 64
+            }
+            MetaOp::WriteRef { chunks, digests, .. } => {
+                chunks.len() as u64 * 32 + digests.len() as u64 * 4 + 64
             }
             _ => 64,
         }
@@ -183,6 +231,11 @@ impl MetaOp {
                 }
                 e.i32_slice(digests);
             }
+            MetaOp::WriteRef { path, size, chunks, digests, base_version } => {
+                e.u8(9).str(path).u64(*size);
+                encode_digest_list(e, chunks);
+                e.i32_slice(digests).u64(*base_version);
+            }
         }
     }
 
@@ -213,6 +266,13 @@ impl MetaOp {
                 }
                 MetaOp::WriteDelta { path, total_size, base_version, blocks, digests: d.i32_vec()? }
             }
+            9 => MetaOp::WriteRef {
+                path: d.str()?,
+                size: d.u64()?,
+                chunks: decode_digest_list(d)?,
+                digests: d.i32_vec()?,
+                base_version: d.u64()?,
+            },
             t => return Err(ProtoError(format!("bad MetaOp tag {t}"))),
         })
     }
@@ -422,6 +482,17 @@ pub enum Request {
     /// the primary and starts serving clients. Idempotent on an
     /// already-primary node; refused by a retired (fenced) one.
     Promote,
+    /// Out-of-band chunk delivery (DESIGN.md §2.8): raw chunk payloads
+    /// the secondary reported missing via [`Response::ReplicaNeed`].
+    /// The receiver recomputes each digest on insert (content-addressed
+    /// — a tampered chunk simply lands under a different digest and the
+    /// needing record stays unsatisfied). Secondary-only, like
+    /// `Replicate`.
+    ChunkPush { chunks: Vec<Vec<u8>> },
+    /// Take a CoW snapshot of the server's live namespace. Answered by
+    /// [`Response::SnapshotCreated`] with the id readable through
+    /// `@v<id>` paths. Primary-only; requires the chunk substrate.
+    SnapshotCreate,
 }
 
 impl Request {
@@ -483,6 +554,15 @@ impl Request {
             Request::Promote => {
                 e.u8(16);
             }
+            Request::ChunkPush { chunks } => {
+                e.u8(17).varint(chunks.len() as u64);
+                for c in chunks {
+                    e.bytes(c);
+                }
+            }
+            Request::SnapshotCreate => {
+                e.u8(18);
+            }
         }
         e.into_bytes()
     }
@@ -523,6 +603,15 @@ impl Request {
             14 => Request::Replicate { from: d.u64()?, frames: d.bytes()?.to_vec() },
             15 => Request::WatermarkQuery { shard: d.u32()? },
             16 => Request::Promote,
+            17 => {
+                let n = d.varint()? as usize;
+                let mut chunks = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    chunks.push(d.bytes()?.to_vec());
+                }
+                Request::ChunkPush { chunks }
+            }
+            18 => Request::SnapshotCreate,
             t => return Err(ProtoError(format!("bad Request tag {t}"))),
         };
         d.expect_end()?;
@@ -585,6 +674,17 @@ pub enum Response {
     /// Answer to [`Request::Promote`]: the node now serves as primary;
     /// `watermark` is the replication log position it took over at.
     Promoted { watermark: u64 },
+    /// The secondary cannot ingest a [`Request::Replicate`] batch
+    /// because some `WriteRef` records name chunks it does not hold
+    /// (DESIGN.md §2.8). NOTHING of the batch was applied; the shipper
+    /// pushes exactly these digests via [`Request::ChunkPush`] and
+    /// re-sends the batch.
+    ReplicaNeed { digests: Vec<Digest> },
+    /// Answer to [`Request::ChunkPush`]: how many chunks are now
+    /// resident (deduped pushes count too).
+    ChunkAck { stored: u64 },
+    /// Answer to [`Request::SnapshotCreate`]: the new snapshot's id.
+    SnapshotCreated { id: u64 },
 }
 
 impl Response {
@@ -662,6 +762,16 @@ impl Response {
             Response::Promoted { watermark } => {
                 e.u8(18).u64(*watermark);
             }
+            Response::ReplicaNeed { digests } => {
+                e.u8(19);
+                encode_digest_list(&mut e, digests);
+            }
+            Response::ChunkAck { stored } => {
+                e.u8(20).u64(*stored);
+            }
+            Response::SnapshotCreated { id } => {
+                e.u8(21).u64(*id);
+            }
         }
         e.into_bytes()
     }
@@ -733,6 +843,9 @@ impl Response {
             16 => Response::ReplicaAck { watermark: d.u64()? },
             17 => Response::Watermark { shard: d.u32()?, watermark: d.u64()? },
             18 => Response::Promoted { watermark: d.u64()? },
+            19 => Response::ReplicaNeed { digests: decode_digest_list(&mut d)? },
+            20 => Response::ChunkAck { stored: d.u64()? },
+            21 => Response::SnapshotCreated { id: d.u64()? },
             t => return Err(ProtoError(format!("bad Response tag {t}"))),
         };
         d.expect_end()?;
@@ -825,6 +938,9 @@ mod tests {
             Request::WatermarkQuery { shard: 3 },
             Request::WatermarkQuery { shard: u32::MAX },
             Request::Promote,
+            Request::ChunkPush { chunks: vec![] },
+            Request::ChunkPush { chunks: vec![vec![1; 64], vec![], vec![2; 7]] },
+            Request::SnapshotCreate,
         ];
         for r in reqs {
             let b = r.encode();
@@ -881,6 +997,10 @@ mod tests {
             Response::ReplicaAck { watermark: 41 },
             Response::Watermark { shard: 2, watermark: 17 },
             Response::Promoted { watermark: 99 },
+            Response::ReplicaNeed { digests: vec![] },
+            Response::ReplicaNeed { digests: vec![[0xAB; 32], [0x01; 32]] },
+            Response::ChunkAck { stored: 12 },
+            Response::SnapshotCreated { id: 42 },
         ];
         for r in resps {
             let b = r.encode();
@@ -906,11 +1026,38 @@ mod tests {
                 blocks: vec![(0, vec![1; 64]), (2, vec![2; 8])],
                 digests: vec![10, 20, 30],
             },
+            MetaOp::WriteRef {
+                path: "/f".into(),
+                size: 130,
+                chunks: vec![[0x11; 32], [0x22; 32], [0x33; 32]],
+                digests: vec![5, -6],
+                base_version: 4,
+            },
         ];
         for op in ops {
             let b = op.encode();
             assert_eq!(MetaOp::decode(&b).unwrap(), op, "{op:?}");
         }
+    }
+
+    #[test]
+    fn write_ref_digest_blob_validated() {
+        let op = MetaOp::WriteRef {
+            path: "/f".into(),
+            size: 64,
+            chunks: vec![[7; 32]],
+            digests: vec![1],
+            base_version: 0,
+        };
+        let b = op.encode();
+        assert_eq!(MetaOp::decode(&b).unwrap(), op);
+        for cut in 0..b.len() {
+            assert!(MetaOp::decode(&b[..cut]).is_err(), "prefix of {cut} bytes accepted");
+        }
+        // a blob that is not a multiple of 32 bytes is torn, not padded
+        let mut e = Encoder::new();
+        e.u8(9).str("/f").u64(64).bytes(&[7u8; 31]).i32_slice(&[1]).u64(0);
+        assert!(MetaOp::decode(&e.into_bytes()).is_err());
     }
 
     #[test]

@@ -36,6 +36,17 @@
 //! requires synchronous shipping, which the paper's WAN budget rules
 //! out (DESIGN.md §2.7 discusses the trade).
 //!
+//! **Replication by reference (DESIGN.md §2.8).** On a chunked home
+//! store the log spills write payloads as [`crate::proto::MetaOp::WriteRef`]
+//! digest lists instead of bytes. A secondary missing some of a batch's
+//! chunk payloads answers `ReplicaNeed` (nothing applies); the shipper
+//! reads exactly those chunks off the primary's store and pushes them
+//! (`Request::ChunkPush`), then re-sends the same batch — dedup means a
+//! chunk crosses the WAN at most once, however many files or log
+//! records reference it. Prefixes the secondary has acked are truncated
+//! from the primary's log (`FileServer::repl_truncate_acked`), so the
+//! log's unbounded-growth caveat from PR 5 is gone.
+//!
 //! Wire framing: each record travels as
 //! `len:u32le | record-bytes | hmac:[u8;32]` with
 //! `hmac = HMAC-SHA256("xufs-repl-v1", record-bytes)` — a torn or
@@ -167,6 +178,11 @@ impl<L: ServerLink> Shipper<L> {
     }
 
     fn ship_inner(&mut self, primary: &FileServer, metrics: &Metrics) -> Result<(), FsError> {
+        // per-drain bound on chunk-fill rounds for ONE batch: each round
+        // must shrink the secondary's missing set, so hitting the bound
+        // means the pushes are not sticking (divergence) — surface it
+        // rather than spin on the WAN.
+        let mut fill_rounds = 0u32;
         while self.cursor < primary.repl_ship_seq() {
             let records = primary.repl_records_after(self.cursor, self.batch);
             if records.is_empty() {
@@ -185,7 +201,46 @@ impl<L: ServerLink> Shipper<L> {
                         )));
                     }
                     self.cursor = watermark;
+                    fill_rounds = 0;
                     metrics.incr(names::REPLICA_SHIP_BATCHES);
+                }
+                Response::ReplicaNeed { digests } => {
+                    // ref-based shipping (DESIGN.md §2.8): the batch
+                    // names chunks the secondary lacks. Push exactly
+                    // those payloads (read locally off the primary's
+                    // chunk store), then loop to re-send the SAME batch
+                    // — the cursor has not moved.
+                    fill_rounds += 1;
+                    if fill_rounds > 4 {
+                        return Err(FsError::Protocol(format!(
+                            "secondary still missing {} chunks after {} fill rounds",
+                            digests.len(),
+                            fill_rounds - 1
+                        )));
+                    }
+                    let chunks = primary.read_chunks(&digests);
+                    if chunks.len() != digests.len() {
+                        // log pins make this unreachable unless the logs
+                        // diverged; never ship a partial fill silently
+                        return Err(FsError::Protocol(format!(
+                            "primary holds {}/{} chunks the secondary needs",
+                            chunks.len(),
+                            digests.len()
+                        )));
+                    }
+                    match self.link.rpc(Request::ChunkPush { chunks })? {
+                        Response::ChunkAck { .. } => {
+                            metrics.incr(names::REPLICA_CHUNK_PUSHES);
+                        }
+                        Response::Err { code: 111, .. } | Response::Err { code: 112, .. } => {
+                            return Err(FsError::Disconnected)
+                        }
+                        r => {
+                            return Err(FsError::Protocol(format!(
+                                "unexpected chunk-push reply {r:?}"
+                            )))
+                        }
+                    }
                 }
                 Response::Err { code: 111, .. } | Response::Err { code: 112, .. } => {
                     return Err(FsError::Disconnected)

@@ -43,14 +43,22 @@
 //!   shipped log through the same apply path ([`Role::Secondary`]) so
 //!   idempotence watermarks, failed-seq sets and conflict preservation
 //!   replicate by construction — and take over on an explicit
-//!   [`Request::Promote`].
+//!   [`Request::Promote`];
+//! * run the home space over the content-addressed chunk store
+//!   (DESIGN.md §2.8, `[chunkstore]`): cross-user dedup, O(1)-data CoW
+//!   snapshots with `@vN` read-only views, write payloads spilled into
+//!   the replication log by reference (`MetaOp::WriteRef`, with
+//!   `ChunkPush` filling the secondary's gaps) and acked-prefix log
+//!   truncation.
 
-use std::collections::{BTreeSet, HashMap};
-use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::collections::{BTreeMap, BTreeSet, HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicU8, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
 use std::time::Duration;
 
 use crate::callback::NotifyChannel;
+use crate::chunkstore::{digest_hex, Digest};
+use crate::config::ChunkstoreConfig;
 use crate::homefs::{FileStore, FsError, NodeKind};
 use crate::lease::{Acquire, LockTable};
 use crate::metrics::{names, Metrics};
@@ -88,20 +96,58 @@ const ROLE_RETIRED: u8 = 2;
 /// that makes ship-seqs line up across the pair and per-shard watermarks
 /// answerable.
 ///
-/// Retention: the log currently keeps full history — the fault
-/// explorer's I4 oracle replays it from ship-seq 1, and schedules are
-/// short. A long-lived deployment needs acked-prefix truncation (a base
-/// offset below the secondary's watermark, with `WriteFull` payloads
-/// spilled by reference like the §2.5 op log compacts) — recorded as a
-/// ROADMAP item rather than silently unbounded.
+/// Retention (DESIGN.md §2.8): write payloads are spilled by reference
+/// (`MetaOp::WriteRef` digest lists pinning chunks in the §2.8 chunk
+/// store), and the prefix the secondary has ACKED is truncated away —
+/// `base` is the ship-seq of the last truncated record, and the folded
+/// per-path summary keeps the fault explorer's I4 oracle exact without
+/// replaying dropped records.
 #[derive(Debug, Default)]
 struct ReplLog {
-    /// `records[i].ship_seq == i + 1` — the global watermark is just
-    /// `records.len()`.
+    /// Ship-seq of the last truncated record: `records[i].ship_seq ==
+    /// base + i + 1` and the global watermark is `base + records.len()`.
+    base: u64,
     records: Vec<ReplRecord>,
     /// Per-shard watermark: ship-seq of the latest record routed to each
     /// namespace shard (`Request::WatermarkQuery { shard }`).
     shard_watermarks: Vec<u64>,
+    /// Folded last effect per path over the truncated prefix, exactly as
+    /// the I4 oracle would have computed it: `Some(v)` = the prefix left
+    /// the path existing at version `v`, `None` = it left it removed.
+    truncated_effects: BTreeMap<String, Option<u64>>,
+    /// Paths touched by truncated `Local` records (version-untracked —
+    /// the oracle skips them, so the skip set must survive truncation).
+    truncated_local: BTreeSet<String>,
+}
+
+impl ReplLog {
+    /// Global watermark: ship-seq of the last record ever appended.
+    fn ship_seq(&self) -> u64 {
+        self.base + self.records.len() as u64
+    }
+
+    /// Fold one truncated record into the retained summary (the same
+    /// per-path last-effect rule the I4 oracle applies to live records).
+    fn fold_truncated(&mut self, rec: &ReplRecord) {
+        match &rec.payload {
+            ReplPayload::Op { new_version, op, .. } => match op {
+                MetaOp::Rename { from, to } => {
+                    self.truncated_effects.insert(from.clone(), None);
+                    self.truncated_effects.insert(to.clone(), Some(*new_version));
+                }
+                MetaOp::Unlink { path } | MetaOp::Rmdir { path } => {
+                    self.truncated_effects.insert(path.clone(), None);
+                }
+                _ => {
+                    self.truncated_effects.insert(op.path().to_string(), Some(*new_version));
+                }
+            },
+            ReplPayload::Local { op } => {
+                self.truncated_local.insert(op.path().to_string());
+            }
+            ReplPayload::Failed { .. } => {}
+        }
+    }
 }
 
 /// One registered callback (client + subtree root + channel).
@@ -200,6 +246,18 @@ pub struct FileServer {
     /// apply + mirror must be atomic against concurrent `Replicate`s).
     /// Ordering: taken before any shard guard, never while one is held.
     repl_ingest: Mutex<()>,
+    /// `[chunkstore]` knobs this server was stood up with (DESIGN.md
+    /// §2.8). When enabled, the home `FileStore` runs over the content-
+    /// addressed chunk store and write payloads ship by reference.
+    chunk_cfg: ChunkstoreConfig,
+    /// Mutations since the last dead-chunk sweep (the deferred-GC
+    /// cadence: sweep every `chunkstore.gc_interval_ops` applied ops).
+    ops_since_gc: AtomicU64,
+    /// Transfer pins held by `ChunkPush` (secondary only): one entry per
+    /// pushed chunk, released wholesale once a `Replicate` batch lands
+    /// (by then file/snapshot/log residency owns its own refs). Leaf
+    /// mutex: taken after the `fs` lock, never before it.
+    staged_chunks: Mutex<Vec<Digest>>,
     metrics: Metrics,
 }
 
@@ -237,15 +295,26 @@ fn fnv1a(bytes: &[u8]) -> u64 {
 }
 
 impl FileServer {
+    #[allow(clippy::too_many_arguments)]
     pub fn new(
-        fs: FileStore,
+        mut fs: FileStore,
         disk: DiskModel,
         engine: Arc<DigestEngine>,
         block_bytes: usize,
         lease_s: f64,
         shards: usize,
         metrics: Metrics,
+        chunk_cfg: ChunkstoreConfig,
     ) -> Self {
+        if chunk_cfg.enabled {
+            // flip the home space onto the content-addressed substrate
+            // (idempotent: a pre-populated dense image converts in place)
+            fs.enable_chunking(
+                chunk_cfg.chunk_kib.max(1) * 1024,
+                chunk_cfg.snapshot_retention.max(1),
+            );
+            fs.attach_metrics(&metrics);
+        }
         let n = shards.max(1);
         let shards = (0..n)
             .map(|i| {
@@ -271,8 +340,14 @@ impl FileServer {
             modeled_waits: AtomicBool::new(false),
             role: AtomicU8::new(ROLE_PRIMARY),
             repl_enabled: AtomicBool::new(false),
-            repl: Mutex::new(ReplLog { records: Vec::new(), shard_watermarks: vec![0; n] }),
+            repl: Mutex::new(ReplLog {
+                shard_watermarks: vec![0; n],
+                ..ReplLog::default()
+            }),
             repl_ingest: Mutex::new(()),
+            chunk_cfg,
+            ops_since_gc: AtomicU64::new(0),
+            staged_chunks: Mutex::new(Vec::new()),
             metrics,
         }
     }
@@ -316,10 +391,26 @@ impl FileServer {
     }
 
     /// Global position of the applied-op log (ship-seq of its last
-    /// record). On the secondary this IS the global replication
-    /// watermark: the mirror only grows by ingesting.
+    /// record, truncated prefix included). On the secondary this IS the
+    /// global replication watermark: the mirror only grows by ingesting.
     pub fn repl_ship_seq(&self) -> u64 {
-        self.repl.lock().unwrap().records.len() as u64
+        self.repl.lock().unwrap().ship_seq()
+    }
+
+    /// Ship-seq of the last record dropped by acked-prefix truncation
+    /// (0 until [`Self::repl_truncate_acked`] first fires).
+    pub fn repl_base(&self) -> u64 {
+        self.repl.lock().unwrap().base
+    }
+
+    /// The folded summary of the truncated log prefix: last effect per
+    /// path (`Some(version)` = left existing, `None` = left removed),
+    /// plus the paths truncated `Local` records touched. The fault
+    /// explorer's I4 oracle seeds its replay with this so truncation
+    /// never weakens (or falsifies) the invariant.
+    pub fn repl_truncated_summary(&self) -> (BTreeMap<String, Option<u64>>, BTreeSet<String>) {
+        let g = self.repl.lock().unwrap();
+        (g.truncated_effects.clone(), g.truncated_local.clone())
     }
 
     /// Per-shard replication watermark; any out-of-range index (the
@@ -328,28 +419,174 @@ impl FileServer {
         let g = self.repl.lock().unwrap();
         match g.shard_watermarks.get(shard) {
             Some(w) => *w,
-            None => g.records.len() as u64,
+            None => g.ship_seq(),
         }
     }
 
     /// Up to `max` log records strictly after ship-seq `from` — the
-    /// shipper's read side (local disk, no WAN).
+    /// shipper's read side (local disk, no WAN). `from` below the
+    /// truncation base just starts at the oldest retained record (the
+    /// shipper never needs those: truncation only drops ACKED records).
     pub fn repl_records_after(&self, from: u64, max: usize) -> Vec<ReplRecord> {
         let g = self.repl.lock().unwrap();
-        let start = (from as usize).min(g.records.len());
+        let start = (from.saturating_sub(g.base) as usize).min(g.records.len());
         let end = start.saturating_add(max).min(g.records.len());
         g.records[start..end].to_vec()
     }
 
+    /// Drop the log prefix the secondary has durably ACKED (DESIGN.md
+    /// §2.8): everything at or below `acked` is folded into the retained
+    /// I4 summary and its `WriteRef` chunk pins are released. Returns
+    /// the number of records truncated. Safe to call with a stale or
+    /// over-long watermark — it clamps to what the log actually holds.
+    pub fn repl_truncate_acked(&self, acked: u64) -> u64 {
+        let (drained, n) = {
+            let mut g = self.repl.lock().unwrap();
+            let upto = acked.min(g.ship_seq());
+            if upto <= g.base {
+                return 0;
+            }
+            let n = (upto - g.base) as usize;
+            let drained: Vec<ReplRecord> = g.records.drain(..n).collect();
+            g.base = upto;
+            for rec in &drained {
+                g.fold_truncated(rec);
+            }
+            (drained, n as u64)
+        };
+        // release the truncated records' chunk pins OUTSIDE the log lock
+        // (fs-then-repl is the only ordering the apply path ever uses)
+        let mut fs = self.fs.write().unwrap();
+        for rec in &drained {
+            let op = match &rec.payload {
+                ReplPayload::Op { op, .. } | ReplPayload::Local { op } => op,
+                ReplPayload::Failed { .. } => continue,
+            };
+            if let MetaOp::WriteRef { chunks, .. } = op {
+                for d in chunks {
+                    fs.decref_chunk(d);
+                }
+            }
+        }
+        drop(fs);
+        self.metrics.add(names::REPLICA_LOG_TRUNCATED, n);
+        n
+    }
+
     /// Append one record to the applied-op log (apply-time, shard guard
-    /// held; see the `repl` field's lock-ordering note).
+    /// held; see the `repl` field's lock-ordering note). On a chunked
+    /// store, `WriteFull` payloads are spilled by reference first.
     fn log_record(&self, shard_idx: usize, payload: ReplPayload) {
+        let payload = self.spill_payload(payload);
         let mut g = self.repl.lock().unwrap();
-        let ship_seq = g.records.len() as u64 + 1;
+        let ship_seq = g.ship_seq() + 1;
         if let Some(w) = g.shard_watermarks.get_mut(shard_idx) {
             *w = ship_seq;
         }
         g.records.push(ReplRecord { ship_seq, shard: shard_idx as u32, payload });
+    }
+
+    /// Replication by reference (DESIGN.md §2.8): on a chunked store a
+    /// `WriteFull` log payload is rewritten as a `WriteRef` — the file's
+    /// chunk digest list instead of its bytes — with one refcount pin
+    /// taken per chunk so GC can never collect content an un-truncated
+    /// log record still names. The op's original `digests`/`base_version`
+    /// ride along verbatim: the secondary materializes the record back
+    /// into a `WriteFull` and re-runs the IDENTICAL conflict logic.
+    /// Called with the path's shard guard held (so the just-written
+    /// file's chunk list is exactly the logged payload).
+    fn spill_payload(&self, payload: ReplPayload) -> ReplPayload {
+        let is_write_full = matches!(
+            &payload,
+            ReplPayload::Op { op: MetaOp::WriteFull { .. }, .. }
+                | ReplPayload::Local { op: MetaOp::WriteFull { .. } }
+        );
+        if !is_write_full {
+            return payload;
+        }
+        let mut fs = self.fs.write().unwrap();
+        if !fs.is_chunked() {
+            return payload;
+        }
+        let spill = |fs: &mut FileStore, op: MetaOp| -> MetaOp {
+            let MetaOp::WriteFull { path, data, digests, base_version } = op else {
+                unreachable!("guarded above");
+            };
+            match fs.file_chunks(&path) {
+                Ok((size, chunks)) => {
+                    for d in &chunks {
+                        fs.incref_chunk(d);
+                    }
+                    MetaOp::WriteRef { path, size, chunks, digests, base_version }
+                }
+                // racing unlink or a dense holdout: keep the bytes
+                Err(_) => MetaOp::WriteFull { path, data, digests, base_version },
+            }
+        };
+        match payload {
+            ReplPayload::Op { client_id, seq, new_version, op } => {
+                let op = spill(&mut fs, op);
+                ReplPayload::Op { client_id, seq, new_version, op }
+            }
+            ReplPayload::Local { op } => ReplPayload::Local { op: spill(&mut fs, op) },
+            other => other,
+        }
+    }
+
+    /// Chunk bytes for a digest list — the shipper's read side when the
+    /// secondary answers [`Response::ReplicaNeed`] (local disk, no WAN).
+    /// Unknown digests are skipped; log pins make that unreachable for
+    /// any digest a retained `WriteRef` record names.
+    pub fn read_chunks(&self, digests: &[Digest]) -> Vec<Vec<u8>> {
+        let fs = self.fs.read().unwrap();
+        digests.iter().filter_map(|d| fs.chunk_data(d)).collect()
+    }
+
+    /// Materialize a shipped `WriteRef` back into the `WriteFull` it was
+    /// spilled from, assembling the bytes from the local chunk store
+    /// (the `Replicate` pre-scan guarantees residency; a miss here is a
+    /// real protocol error). Non-ref ops pass through untouched.
+    fn materialize_op(&self, op: MetaOp) -> Result<MetaOp, FsError> {
+        match op {
+            MetaOp::WriteRef { path, size, chunks, digests, base_version } => {
+                let data = self.assemble_chunks(&chunks, size)?;
+                Ok(MetaOp::WriteFull { path, data, digests, base_version })
+            }
+            other => Ok(other),
+        }
+    }
+
+    fn assemble_chunks(&self, chunks: &[Digest], size: u64) -> Result<Vec<u8>, FsError> {
+        let fs = self.fs.read().unwrap();
+        let mut out = Vec::with_capacity(size as usize);
+        for d in chunks {
+            match fs.chunk_data(d) {
+                Some(b) => out.extend_from_slice(&b),
+                None => {
+                    return Err(FsError::Protocol(format!(
+                        "shipped WriteRef names unknown chunk {}",
+                        digest_hex(d)
+                    )))
+                }
+            }
+        }
+        if out.len() as u64 != size {
+            return Err(FsError::Protocol(format!(
+                "shipped WriteRef assembled {} bytes, manifest says {size}",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Deferred dead-chunk sweep: every `chunkstore.gc_interval_ops`
+    /// applied mutations (no-op on a dense store).
+    fn maybe_gc(&self) {
+        let interval = self.chunk_cfg.gc_interval_ops.max(1);
+        let n = self.ops_since_gc.fetch_add(1, Ordering::Relaxed) + 1;
+        if self.chunk_cfg.enabled && n % interval == 0 {
+            self.fs.write().unwrap().gc();
+        }
     }
 
     /// Ingest one shipped record on the secondary: strict gapless order
@@ -362,7 +599,7 @@ impl FileServer {
         let _ingest = self.repl_ingest.lock().unwrap();
         {
             let g = self.repl.lock().unwrap();
-            let watermark = g.records.len() as u64;
+            let watermark = g.ship_seq();
             if rec.ship_seq <= watermark {
                 return Ok(false);
             }
@@ -375,11 +612,15 @@ impl FileServer {
         }
         match &rec.payload {
             ReplPayload::Op { client_id, seq, op, .. } => {
-                // the record applied on the primary; replaying the same
-                // op against the same mirrored state is deterministic,
-                // so a non-Applied answer here means divergence — which
-                // the convergence invariants (I3/I4) surface loudly.
-                let _ = self.apply(*client_id, *seq, op.clone(), now, false);
+                // a spilled WriteRef materializes back into the exact
+                // WriteFull it came from (same digests/base_version, so
+                // the conflict comparison re-runs identically); then the
+                // record applied on the primary; replaying the same op
+                // against the same mirrored state is deterministic, so a
+                // non-Applied answer here means divergence — which the
+                // convergence invariants (I3/I4) surface loudly.
+                let op = self.materialize_op(op.clone())?;
+                let _ = self.apply(*client_id, *seq, op, now, false);
             }
             ReplPayload::Failed { client_id, seq, path } => {
                 let key = vpath::normalize(path);
@@ -390,15 +631,15 @@ impl FileServer {
                     set.pop_first();
                 }
             }
-            ReplPayload::Local { op } => match op {
+            ReplPayload::Local { op } => match self.materialize_op(op.clone())? {
                 MetaOp::WriteFull { path, data, .. } => {
-                    let key = vpath::normalize(path);
+                    let key = vpath::normalize(&path);
                     let mut g = self.lock_shard(self.shard_of(&key));
-                    self.fs.write().unwrap().write(&key, data, now)?;
+                    self.fs.write().unwrap().write(&key, &data, now)?;
                     g.purge_digests(&key);
                 }
                 MetaOp::Unlink { path } => {
-                    let key = vpath::normalize(path);
+                    let key = vpath::normalize(&path);
                     let mut g = self.lock_shard(self.shard_of(&key));
                     let _ = self.fs.write().unwrap().unlink(&key, now);
                     g.purge_digests(&key);
@@ -408,8 +649,23 @@ impl FileServer {
                 _ => {}
             },
         }
+        // a mirrored WriteRef record pins its chunks exactly like the
+        // primary's log copy does (released when THIS log truncates);
+        // fs lock before the log lock, matching the apply path's order
+        {
+            let op = match &rec.payload {
+                ReplPayload::Op { op, .. } | ReplPayload::Local { op } => Some(op),
+                ReplPayload::Failed { .. } => None,
+            };
+            if let Some(MetaOp::WriteRef { chunks, .. }) = op {
+                let mut fs = self.fs.write().unwrap();
+                for d in chunks {
+                    fs.incref_chunk(d);
+                }
+            }
+        }
         let mut g = self.repl.lock().unwrap();
-        debug_assert_eq!(g.records.len() as u64 + 1, rec.ship_seq);
+        debug_assert_eq!(g.ship_seq() + 1, rec.ship_seq);
         if let Some(w) = g.shard_watermarks.get_mut(rec.shard as usize) {
             *w = rec.ship_seq;
         }
@@ -552,6 +808,7 @@ impl FileServer {
                 },
             );
         }
+        self.maybe_gc();
         Ok(())
     }
 
@@ -565,6 +822,7 @@ impl FileServer {
         if self.replication_enabled() && self.role() == Role::Primary {
             self.log_record(idx, ReplPayload::Local { op: MetaOp::Unlink { path: key.clone() } });
         }
+        self.maybe_gc();
         Ok(())
     }
 
@@ -713,10 +971,10 @@ impl FileServer {
         // "wrong endpoint — fail over" signal.
         match self.role() {
             Role::Primary => {
-                if matches!(req, Request::Replicate { .. }) {
+                if matches!(req, Request::Replicate { .. } | Request::ChunkPush { .. }) {
                     return Response::Err {
                         code: 112,
-                        msg: "replicate refused: this node is the primary".into(),
+                        msg: "replication-plane request refused: this node is the primary".into(),
                     };
                 }
             }
@@ -732,6 +990,7 @@ impl FileServer {
                     req,
                     Request::Ping
                         | Request::Replicate { .. }
+                        | Request::ChunkPush { .. }
                         | Request::WatermarkQuery { .. }
                         | Request::Promote
                 );
@@ -1023,13 +1282,102 @@ impl FileServer {
                     }
                 };
                 let _ = from; // the frames carry authoritative ship-seqs
+                // ref-based shipping (DESIGN.md §2.8): before ANYTHING
+                // applies, scan the batch's un-ingested WriteRef records
+                // for chunks this store lacks and ask the shipper to
+                // push those payloads first — the whole batch then lands
+                // atomically on the retry.
+                {
+                    let watermark = self.repl_ship_seq();
+                    let fs = self.fs.read().unwrap();
+                    let mut seen: HashSet<Digest> = HashSet::new();
+                    let mut need: Vec<Digest> = Vec::new();
+                    for rec in &records {
+                        if rec.ship_seq <= watermark {
+                            continue; // idempotent re-ship: already applied
+                        }
+                        let op = match &rec.payload {
+                            ReplPayload::Op { op, .. } | ReplPayload::Local { op } => op,
+                            ReplPayload::Failed { .. } => continue,
+                        };
+                        if let MetaOp::WriteRef { chunks, .. } = op {
+                            if !fs.is_chunked() {
+                                return Response::Err {
+                                    code: 74,
+                                    msg: "replication batch refused: ref-shipped records \
+                                          into a dense (chunkstore-disabled) store"
+                                        .into(),
+                                };
+                            }
+                            for d in chunks {
+                                if !fs.has_chunk(d) && seen.insert(*d) {
+                                    need.push(*d);
+                                }
+                            }
+                        }
+                    }
+                    if !need.is_empty() {
+                        return Response::ReplicaNeed { digests: need };
+                    }
+                }
                 for rec in records {
                     match self.apply_replicated(rec, now) {
                         Ok(_) => {}
                         Err(e) => return err_resp(&e),
                     }
                 }
+                // the batch landed: release the transfer pins ChunkPush
+                // staged for it (file/snapshot/log residency holds its
+                // own references by now; anything unused goes dead and
+                // the deferred GC sweeps it)
+                {
+                    let mut fs = self.fs.write().unwrap();
+                    let mut staged = self.staged_chunks.lock().unwrap();
+                    for d in staged.drain(..) {
+                        fs.decref_chunk(&d);
+                    }
+                }
                 Response::ReplicaAck { watermark: self.repl_ship_seq() }
+            }
+            Request::ChunkPush { chunks } => {
+                // reachable only on a Secondary (role gate above): stage
+                // chunk payloads ahead of the Replicate batch that
+                // references them. Each staged chunk holds one transfer
+                // pin so a GC sweep between push and batch-apply cannot
+                // collect it; re-pushes after a lost ack just stack
+                // another pin (released with the rest).
+                let mut stored = 0u64;
+                {
+                    let mut fs = self.fs.write().unwrap();
+                    if !fs.is_chunked() {
+                        return err_resp(&FsError::Invalid(
+                            "chunk push into a dense (chunkstore-disabled) store".into(),
+                        ));
+                    }
+                    let mut staged = self.staged_chunks.lock().unwrap();
+                    for bytes in &chunks {
+                        if let Ok(d) = fs.insert_chunk(bytes) {
+                            staged.push(d);
+                            stored += 1;
+                        }
+                    }
+                }
+                Response::ChunkAck { stored }
+            }
+            Request::SnapshotCreate => {
+                // CoW snapshot (DESIGN.md §2.8): pin every live chunk
+                // and clone the inode table — O(metadata), zero data
+                // copied. The ordered all-shard lock makes the image a
+                // consistent cut across concurrent appliers.
+                let _guards = self.lock_all();
+                self.op_wait();
+                match self.fs.write().unwrap().snapshot(now) {
+                    Ok(id) => {
+                        self.metrics.incr(names::CHUNK_SNAPSHOTS);
+                        Response::SnapshotCreated { id }
+                    }
+                    Err(e) => err_resp(&e),
+                }
             }
             Request::WatermarkQuery { shard } => {
                 Response::Watermark { shard, watermark: self.repl_watermark(shard as usize) }
@@ -1316,6 +1664,12 @@ impl FileServer {
             MetaOp::WriteDelta { path, total_size, base_version, blocks, digests } => self
                 .apply_delta(shard, path, *total_size, *base_version, blocks, digests, now)
                 .map(|_| vec![(path.clone(), false)]),
+            // WriteRef is replication-internal: the ingest path
+            // materializes it back into a WriteFull BEFORE apply, so one
+            // arriving here came straight from a client — refuse it.
+            MetaOp::WriteRef { .. } => Err(FsError::Invalid(
+                "WriteRef is a replication-log spill, not a client op".into(),
+            )),
         };
         match result {
             Ok(touched) => {
@@ -1378,6 +1732,7 @@ impl FileServer {
                         ReplPayload::Op { client_id, seq, new_version: logged_version, op },
                     );
                 }
+                self.maybe_gc();
                 Response::Applied { seq, new_version: version }
             }
             Err(e) => {
@@ -1470,6 +1825,7 @@ mod tests {
             30.0,
             4,
             Metrics::new(),
+            ChunkstoreConfig::default(),
         )
     }
 
@@ -2087,18 +2443,30 @@ mod tests {
             30.0,
             4,
             Metrics::new(),
+            ChunkstoreConfig::default(),
         );
         sec.set_role(Role::Secondary);
         sec.enable_replication();
         (s, sec)
     }
 
-    /// Ship everything past the secondary's watermark in one frame.
+    /// Ship everything past the secondary's watermark in one frame,
+    /// filling chunk gaps the way the real shipper does: a ReplicaNeed
+    /// answer gets the missing payloads pushed, then the SAME batch
+    /// re-sent.
     fn ship_all(primary: &FileServer, sec: &FileServer) {
         let from = sec.repl_ship_seq();
         let recs = primary.repl_records_after(from, usize::MAX);
         let frames = crate::replica::frame_records(&recs);
-        let r = sec.handle(0, Request::Replicate { from: from + 1, frames }, t(1.0));
+        let mut r =
+            sec.handle(0, Request::Replicate { from: from + 1, frames: frames.clone() }, t(1.0));
+        if let Response::ReplicaNeed { digests } = &r {
+            let chunks = primary.read_chunks(digests);
+            assert_eq!(chunks.len(), digests.len(), "primary must hold every pinned chunk");
+            let pr = sec.handle(0, Request::ChunkPush { chunks }, t(1.0));
+            assert!(matches!(pr, Response::ChunkAck { .. }), "{pr:?}");
+            r = sec.handle(0, Request::Replicate { from: from + 1, frames }, t(1.0));
+        }
         assert!(matches!(r, Response::ReplicaAck { .. }), "{r:?}");
     }
 
@@ -2238,7 +2606,16 @@ mod tests {
         }
         let recs = s.repl_records_after(0, usize::MAX);
         let frames = crate::replica::frame_records(&recs);
-        // first delivery applies...
+        // the writes shipped by reference: the first delivery names
+        // chunks the secondary does not hold yet — NOTHING applies...
+        let r = sec.handle(0, Request::Replicate { from: 1, frames: frames.clone() }, t(4.5));
+        let Response::ReplicaNeed { digests } = r else { panic!("{r:?}") };
+        assert!(!digests.is_empty());
+        assert_eq!(sec.repl_ship_seq(), 0, "a needy batch must not partially apply");
+        // ...the pushed payloads fill the gap and the re-send applies
+        let chunks = s.read_chunks(&digests);
+        let r = sec.handle(0, Request::ChunkPush { chunks }, t(4.6));
+        assert!(matches!(r, Response::ChunkAck { .. }), "{r:?}");
         let r = sec.handle(0, Request::Replicate { from: 1, frames: frames.clone() }, t(5.0));
         assert!(matches!(r, Response::ReplicaAck { watermark: 3 }), "{r:?}");
         let v = sec.home().stat("/home/user/f1").unwrap().version;
@@ -2310,6 +2687,7 @@ mod tests {
             30.0,
             1,
             Metrics::new(),
+            ChunkstoreConfig::default(),
         );
         assert_eq!(s.shard_count(), 1);
         for i in 0..8 {
@@ -2329,5 +2707,203 @@ mod tests {
             t(1.0),
         );
         assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+    }
+
+    // ----- chunk substrate (DESIGN.md §2.8) -----
+
+    #[test]
+    fn snapshot_create_and_versioned_reads_over_protocol() {
+        let s = server();
+        let r = s.handle(1, Request::SnapshotCreate, t(1.0));
+        let Response::SnapshotCreated { id } = r else { panic!("{r:?}") };
+        assert_eq!(id, 1);
+        // live mutation after the cut
+        let r = s.handle(
+            1,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteFull {
+                    path: "/home/user/a.txt".into(),
+                    data: b"rewritten since the snapshot".to_vec(),
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(2.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        // the versioned view serves the frozen image; the live path the
+        // new bytes
+        let snap_path = format!("/home/user/a.txt@v{id}");
+        match s.handle(1, Request::Stat { path: snap_path.clone() }, t(3.0)) {
+            Response::Attr { attr } => assert_eq!(attr.size, 11),
+            r => panic!("{r:?}"),
+        }
+        match s.handle(1, Request::Fetch { path: snap_path.clone() }, t(3.0)) {
+            Response::File { image } => assert_eq!(image.data, b"hello world"),
+            r => panic!("{r:?}"),
+        }
+        match s.handle(1, Request::Fetch { path: "/home/user/a.txt".into() }, t(3.0)) {
+            Response::File { image } => assert_eq!(image.data, b"rewritten since the snapshot"),
+            r => panic!("{r:?}"),
+        }
+        // snapshot views are read-only — a write through one refuses
+        let r = s.handle(
+            1,
+            Request::Apply {
+                seq: 2,
+                op: MetaOp::WriteFull {
+                    path: snap_path,
+                    data: b"nope".to_vec(),
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(4.0),
+        );
+        assert!(matches!(r, Response::Err { code: 5, .. }), "{r:?}");
+    }
+
+    #[test]
+    fn log_spills_write_payloads_by_reference() {
+        let s = server();
+        s.enable_replication();
+        let data = vec![0x5Au8; 100_000];
+        let r = s.handle(
+            1,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteFull {
+                    path: "/home/user/spill".into(),
+                    data: data.clone(),
+                    digests: vec![11, 22],
+                    base_version: 0,
+                },
+            },
+            t(1.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        let recs = s.repl_records_after(0, usize::MAX);
+        assert_eq!(recs.len(), 1);
+        let ReplPayload::Op { op: MetaOp::WriteRef { size, chunks, digests, base_version, .. }, .. } =
+            &recs[0].payload
+        else {
+            panic!("write not spilled by reference: {recs:?}");
+        };
+        assert_eq!(*size, data.len() as u64);
+        assert_eq!(chunks.len(), data.len().div_ceil(64 * 1024));
+        // the op's conflict inputs ride along verbatim
+        assert_eq!(digests, &vec![11, 22]);
+        assert_eq!(*base_version, 0);
+        // the log pins its chunks: one file ref + one log ref each
+        let home = s.home();
+        let cs = home.chunkstore().expect("chunked substrate");
+        for d in chunks {
+            assert_eq!(cs.refs(d), 2, "file residency + log pin");
+        }
+    }
+
+    #[test]
+    fn write_ref_from_a_client_is_refused() {
+        let s = server();
+        let (size, chunks) = s.home().file_chunks("/home/user/a.txt").unwrap();
+        let r = s.handle(
+            1,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteRef {
+                    path: "/home/user/forged".into(),
+                    size,
+                    chunks,
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(1.0),
+        );
+        assert!(matches!(r, Response::Err { code: 5, .. }), "{r:?}");
+        assert!(!s.home().exists("/home/user/forged"));
+    }
+
+    #[test]
+    fn chunk_push_refused_on_primary() {
+        let s = server();
+        let r = s.handle(0, Request::ChunkPush { chunks: vec![b"x".to_vec()] }, t(1.0));
+        assert!(matches!(r, Response::Err { code: 112, .. }), "{r:?}");
+    }
+
+    #[test]
+    fn acked_prefix_truncation_keeps_shipping_and_promotion_sane() {
+        let (s, sec) = replica_pair();
+        for seq in 1..=3u64 {
+            let r = s.handle(
+                9,
+                Request::Apply {
+                    seq,
+                    op: MetaOp::WriteFull {
+                        path: format!("/home/user/f{seq}"),
+                        data: vec![seq as u8; 32],
+                        digests: vec![],
+                        base_version: 0,
+                    },
+                },
+                t(seq as f64),
+            );
+            assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        }
+        ship_all(&s, &sec);
+        assert_eq!(sec.repl_ship_seq(), 3);
+        // truncate the acked prefix: the global position holds, the
+        // records are gone, the folded summary keeps their last effects
+        assert_eq!(s.repl_truncate_acked(sec.repl_ship_seq()), 3);
+        assert_eq!(s.repl_base(), 3);
+        assert_eq!(s.repl_ship_seq(), 3);
+        assert!(s.repl_records_after(0, usize::MAX).is_empty());
+        let (effects, _) = s.repl_truncated_summary();
+        assert_eq!(effects.len(), 3);
+        assert!(matches!(effects.get("/home/user/f1"), Some(Some(_))));
+        // re-truncating at the same watermark is a no-op
+        assert_eq!(s.repl_truncate_acked(3), 0);
+        // post-truncation appends take the next ship-seq and still ship
+        let r = s.handle(
+            9,
+            Request::Apply {
+                seq: 4,
+                op: MetaOp::WriteFull {
+                    path: "/home/user/f4".into(),
+                    data: vec![4u8; 32],
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(4.0),
+        );
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        let recs = s.repl_records_after(3, usize::MAX);
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].ship_seq, 4);
+        ship_all(&s, &sec);
+        assert_eq!(sec.repl_ship_seq(), 4);
+        // promotion after truncation: replays of TRUNCATED seqs still
+        // answer as duplicates (the watermark replicated before the
+        // records were dropped)
+        let r = sec.handle(0, Request::Promote, t(9.0));
+        assert!(matches!(r, Response::Promoted { watermark: 4 }), "{r:?}");
+        let v = sec.home().stat("/home/user/f1").unwrap().version;
+        let r = sec.handle(
+            9,
+            Request::Apply {
+                seq: 1,
+                op: MetaOp::WriteFull {
+                    path: "/home/user/f1".into(),
+                    data: vec![1u8; 32],
+                    digests: vec![],
+                    base_version: 0,
+                },
+            },
+            t(10.0),
+        );
+        assert!(matches!(r, Response::Applied { seq: 1, .. }), "{r:?}");
+        assert_eq!(sec.home().stat("/home/user/f1").unwrap().version, v, "no re-apply");
     }
 }

@@ -120,11 +120,14 @@ fn check_i4(world: &SimWorld, initial_paths: &BTreeSet<String>) -> Result<(), St
         return Ok(());
     }
     let w = sec.repl_ship_seq();
+    // Seed the per-path fold with the effects retained from the
+    // truncated acked prefix (DESIGN.md §2.8): those records were by
+    // definition shipped and acked (ship_seq <= watermark), and without
+    // the seed a path FIRST created inside the truncated prefix would be
+    // misjudged as "first created beyond the watermark".
+    let (mut expect, mut untracked): (BTreeMap<String, Option<u64>>, BTreeSet<String>) =
+        world.server.repl_truncated_summary();
     let log = world.server.repl_records_after(0, usize::MAX);
-    // last effect per path at the watermark: Some(v) = exists at v,
-    // None = removed
-    let mut expect: BTreeMap<String, Option<u64>> = BTreeMap::new();
-    let mut untracked: BTreeSet<String> = BTreeSet::new();
     let mut beyond: BTreeSet<String> = BTreeSet::new();
     for rec in &log {
         let within = rec.ship_seq <= w;
@@ -203,7 +206,7 @@ fn check_replica_mirror(world: &SimWorld) -> Result<(), String> {
                 xufs::homefs::NodeKind::File => {
                     let data = guard.read(&path).map_err(|e| format!("read {path}: {e}"))?;
                     let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-                    for b in data {
+                    for b in &data {
                         h ^= *b as u64;
                         h = h.wrapping_mul(0x0000_0100_0000_01b3);
                     }
@@ -838,7 +841,7 @@ fn residency_recovery_demotes_exactly_torn_entries() {
         for i in 3..6usize {
             if rng.chance(0.6) {
                 let apath = format!("/home/u/.xufs.attr.f{i}");
-                let txt = String::from_utf8_lossy(snap.read(&apath).unwrap()).to_string();
+                let txt = String::from_utf8_lossy(&snap.read(&apath).unwrap()).to_string();
                 let bad = txt.replace("\"residency\":\"", "\"residency\":\"!torn ");
                 assert_ne!(bad, txt, "tamper must hit the residency token");
                 snap.write(&apath, bad.as_bytes(), t(9.0)).unwrap();
@@ -1112,4 +1115,166 @@ fn interrupted_transfers_resume_and_complete() {
         c.metrics().counter(names::RESUMED_FETCHES) > 0,
         "every transfer was torn; resumes must show up in metrics"
     );
+}
+
+// ---------------------------------------------------------------------
+// directed chunk-substrate tests (DESIGN.md §2.8)
+// ---------------------------------------------------------------------
+
+/// Cross-user dedup: the same toolchain blob written into two users'
+/// home dirs is stored physically ONCE — the second copy is all dedup
+/// hits, and the savings surface in the metrics.
+#[test]
+fn dedup_across_two_clients_home_dirs() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u/c0", t(0.0)).unwrap();
+        s.home_mut().mkdir_p("/home/u/c1", t(0.0)).unwrap();
+    });
+    let mut a = world.mount("/home/u").unwrap();
+    let mut b = world.mount("/home/u").unwrap();
+    let mut blob = vec![0u8; 256 * 1024]; // 4 chunks at the default 64 KiB
+    let mut rng = Rng::new(0xDED0);
+    rng.fill_bytes(&mut blob);
+    a.write_file("/home/u/c0/toolchain.tar", &blob, 65536).unwrap();
+    a.fsync().unwrap();
+    b.write_file("/home/u/c1/toolchain.tar", &blob, 65536).unwrap();
+    b.fsync().unwrap();
+    {
+        let g = world.server.home();
+        let cs = g.chunkstore().expect("chunk substrate is on by default");
+        assert_eq!(cs.dedup_hits(), 4, "the second user's copy is pure dedup");
+        assert_eq!(cs.dedup_bytes_saved(), blob.len() as u64);
+        assert_eq!(cs.stored_bytes(), blob.len() as u64, "two logical copies, one physical");
+        assert_eq!(g.read("/home/u/c0/toolchain.tar").unwrap(), blob);
+        assert_eq!(g.read("/home/u/c1/toolchain.tar").unwrap(), blob);
+    }
+    assert_eq!(world.metrics.counter(names::CHUNK_DEDUP_HITS), 4);
+    assert_eq!(world.metrics.counter(names::CHUNK_DEDUP_BYTES_SAVED), blob.len() as u64);
+}
+
+/// Rename is pure metadata on the chunk substrate: the file keeps its
+/// exact chunk list (residency), nothing is re-stored or re-deduped,
+/// and the bytes read back identical at the new name.
+#[test]
+fn rename_is_pure_metadata_and_preserves_chunk_residency() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap());
+    let mut c = world.mount("/home/u").unwrap();
+    let mut data = vec![0u8; 200 * 1024];
+    let mut rng = Rng::new(0x4E4A);
+    rng.fill_bytes(&mut data);
+    c.write_file("/home/u/before.bin", &data, 65536).unwrap();
+    c.fsync().unwrap();
+    let (size_before, digests_before, stored_before, hits_before) = {
+        let g = world.server.home();
+        let (size, ds) = g.file_chunks("/home/u/before.bin").unwrap();
+        let cs = g.chunkstore().unwrap();
+        (size, ds, cs.stored_bytes(), cs.dedup_hits())
+    };
+    c.rename("/home/u/before.bin", "/home/u/after.bin").unwrap();
+    c.fsync().unwrap();
+    let g = world.server.home();
+    assert!(!g.exists("/home/u/before.bin"));
+    let (size_after, digests_after) = g.file_chunks("/home/u/after.bin").unwrap();
+    assert_eq!(size_before, size_after);
+    assert_eq!(digests_before, digests_after, "rename moves references, not bytes");
+    let cs = g.chunkstore().unwrap();
+    assert_eq!(cs.stored_bytes(), stored_before, "no chunk re-stored by the rename");
+    assert_eq!(cs.dedup_hits(), hits_before, "nothing went back through the dedup path");
+    assert_eq!(g.read("/home/u/after.bin").unwrap(), data);
+}
+
+/// GC safety on the replicated pair: a chunk referenced by a snapshot
+/// manifest or an un-shipped replication record NEVER collects. Once
+/// ref-based shipping drains and the acked prefix truncates, the log
+/// pins release — and the sweep then frees exactly the chunks nothing
+/// references, while the snapshot keeps serving its frozen bytes.
+#[test]
+fn gc_never_collects_snapshot_or_unshipped_log_pinned_chunks() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap());
+    world.enable_replica();
+    let mut c = world.mount("/home/u").unwrap();
+    let mut rng = Rng::new(0x6C6C);
+    let mut v1 = vec![0u8; 192 * 1024];
+    rng.fill_bytes(&mut v1);
+    c.write_file("/home/u/data.bin", &v1, 65536).unwrap();
+    c.fsync().unwrap();
+    let v1_digests = world.server.home().file_chunks("/home/u/data.bin").unwrap().1;
+    let snap_id = world.home(|s| s.home_mut().snapshot(t(1.0)).unwrap());
+    // v2 replaces every byte: v1's chunks lose their residency refs but
+    // stay pinned by the snapshot manifest AND the un-shipped records
+    let mut v2 = vec![0u8; 64 * 1024];
+    rng.fill_bytes(&mut v2);
+    c.write_file("/home/u/data.bin", &v2, 65536).unwrap();
+    c.fsync().unwrap();
+    assert_eq!(world.home(|s| s.home_mut().gc()), (0, 0), "every chunk is pinned");
+    // ship by reference: the secondary misses every chunk, asks, gets
+    // the push, acks — and the primary truncates the acked prefix
+    assert_eq!(world.replica_tick(true), 0, "ref shipping drains");
+    assert!(world.metrics.counter(names::REPLICA_CHUNK_PUSHES) >= 1);
+    assert!(world.metrics.counter(names::REPLICA_LOG_TRUNCATED) >= 1);
+    assert!(world.server.repl_records_after(0, usize::MAX).is_empty());
+    let sec = world.secondary().unwrap();
+    assert_eq!(sec.home().read("/home/u/data.bin").unwrap(), v2, "materialized at the standby");
+    // the log pins are gone; the snapshot alone still protects v1
+    assert_eq!(world.home(|s| s.home_mut().gc()).0, 0, "snapshot still pins v1");
+    // drop the live file: ONLY v2's now-unreferenced chunk sweeps
+    c.unlink("/home/u/data.bin").unwrap();
+    c.fsync().unwrap();
+    assert_eq!(world.home(|s| s.home_mut().gc()), (1, v2.len() as u64));
+    assert!(world.metrics.counter(names::CHUNK_GC_COLLECTED) >= 1);
+    let g = world.server.home();
+    let cs = g.chunkstore().unwrap();
+    for d in &v1_digests {
+        assert!(cs.contains(d), "snapshot-pinned chunk survived the sweep");
+    }
+    assert_eq!(g.read(&format!("/home/u/data.bin@v{snap_id}")).unwrap(), v1);
+}
+
+/// Promotion AFTER ref-based shipping and acked-prefix truncation, with
+/// the secondary still missing chunks at promote time: the drain inside
+/// the promote ships the records numbered past the truncated base,
+/// pushes exactly the missing chunk bytes, and the promoted node serves
+/// every file byte-identical — to direct reads and to the failed-over
+/// client.
+#[test]
+fn promote_after_truncation_ships_missing_chunks_and_serves() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap());
+    world.enable_replica();
+    let mut c = world.mount("/home/u").unwrap();
+    let mut rng = Rng::new(0x9001);
+    let mut big = vec![0u8; 320 * 1024];
+    rng.fill_bytes(&mut big);
+    c.write_file("/home/u/tool.bin", &big, 65536).unwrap();
+    c.write_file("/home/u/note.txt", b"survives failover\n", 1024).unwrap();
+    c.fsync().unwrap();
+    assert_eq!(world.replica_tick(true), 0);
+    let base = world.server.repl_base();
+    assert!(base > 0, "acked prefix truncated after the drain");
+    let pushes = world.metrics.counter(names::REPLICA_CHUNK_PUSHES);
+    assert!(pushes >= 1);
+    // more work lands AFTER the truncation, unshipped: its first 64 KiB
+    // chunk dedups against tool.bin, its 32 KiB tail is brand new
+    c.write_file("/home/u/late.bin", &big[..96 * 1024], 65536).unwrap();
+    c.fsync().unwrap();
+    assert!(world.server.repl_ship_seq() > base);
+    world.server_crash();
+    world.promote_secondary().unwrap();
+    assert!(world.is_promoted());
+    assert!(
+        world.metrics.counter(names::REPLICA_CHUNK_PUSHES) > pushes,
+        "the promote drain pushed the missing tail chunk"
+    );
+    let authority = world.authority();
+    assert_eq!(authority.home().read("/home/u/tool.bin").unwrap(), big);
+    assert_eq!(authority.home().read("/home/u/note.txt").unwrap(), b"survives failover\n");
+    assert_eq!(authority.home().read("/home/u/late.bin").unwrap(), &big[..96 * 1024]);
+    // and the failed-over client reads through the promoted node
+    c.link_mut().reconnect().unwrap();
+    assert_eq!(c.link().active_endpoint(), 1);
+    let got = read_all(&mut c, "/home/u/late.bin").unwrap();
+    assert_eq!(got, &big[..96 * 1024]);
 }

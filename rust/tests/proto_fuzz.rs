@@ -13,6 +13,7 @@
 //! may decode to a different valid message — the transports layer HMACs
 //! and length prefixes above this codec).
 
+use xufs::chunkstore::Digest;
 use xufs::proto::{
     BlockExtent, CompoundOp, DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, ReplPayload,
     ReplRecord, Request, Response, WireAttr,
@@ -38,6 +39,17 @@ fn rand_digests(rng: &mut Rng) -> Vec<i32> {
     (0..rng.below(6)).map(|_| rng.next_u32() as i32).collect()
 }
 
+/// Random content-address digests (DESIGN.md §2.8 chunk references).
+fn rand_chunk_digests(rng: &mut Rng) -> Vec<Digest> {
+    (0..rng.below(5))
+        .map(|_| {
+            let mut d = [0u8; 32];
+            rng.fill_bytes(&mut d);
+            d
+        })
+        .collect()
+}
+
 fn rand_attr(rng: &mut Rng) -> WireAttr {
     WireAttr {
         kind: if rng.chance(0.2) { xufs::homefs::NodeKind::Dir } else { xufs::homefs::NodeKind::File },
@@ -49,7 +61,7 @@ fn rand_attr(rng: &mut Rng) -> WireAttr {
 }
 
 fn rand_metaop(rng: &mut Rng) -> MetaOp {
-    match rng.below(9) {
+    match rng.below(10) {
         0 => MetaOp::Mkdir { path: rand_string(rng) },
         1 => MetaOp::Rmdir { path: rand_string(rng) },
         2 => MetaOp::Create { path: rand_string(rng) },
@@ -63,7 +75,7 @@ fn rand_metaop(rng: &mut Rng) -> MetaOp {
             digests: rand_digests(rng),
             base_version: rng.below(1 << 20),
         },
-        _ => MetaOp::WriteDelta {
+        8 => MetaOp::WriteDelta {
             path: rand_string(rng),
             total_size: rng.below(1 << 30),
             base_version: rng.below(1 << 20),
@@ -71,6 +83,13 @@ fn rand_metaop(rng: &mut Rng) -> MetaOp {
                 .map(|i| (i as u32, rand_bytes(rng, 32)))
                 .collect(),
             digests: rand_digests(rng),
+        },
+        _ => MetaOp::WriteRef {
+            path: rand_string(rng),
+            size: rng.below(1 << 40),
+            chunks: rand_chunk_digests(rng),
+            digests: rand_digests(rng),
+            base_version: rng.below(1 << 20),
         },
     }
 }
@@ -94,7 +113,7 @@ fn rand_repl_record(rng: &mut Rng) -> ReplRecord {
 }
 
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.below(17) {
+    match rng.below(19) {
         0 => Request::AuthHello { key_id: rand_string(rng) },
         1 => Request::AuthProof { key_id: rand_string(rng), proof: rand_bytes(rng, 48) },
         2 => Request::Stat { path: rand_string(rng) },
@@ -130,14 +149,18 @@ fn rand_request(rng: &mut Rng) -> Request {
         },
         14 => Request::Replicate { from: rng.below(1 << 40), frames: rand_bytes(rng, 64) },
         15 => Request::WatermarkQuery { shard: rng.next_u32() },
-        _ => Request::Promote,
+        16 => Request::Promote,
+        17 => Request::ChunkPush {
+            chunks: (0..rng.below(4)).map(|_| rand_bytes(rng, 48)).collect(),
+        },
+        _ => Request::SnapshotCreate,
     }
 }
 
 fn rand_response(rng: &mut Rng, nested: bool) -> Response {
     // CompoundReply never nests (the codec rejects it); the generator
     // respects that so every generated frame is valid
-    let top = if nested { 18 } else { 19 };
+    let top = if nested { 21 } else { 22 };
     match rng.below(top) {
         0 => Response::Challenge { nonce: rand_bytes(rng, 32) },
         1 => Response::AuthOk { session: rng.next_u64() },
@@ -181,6 +204,9 @@ fn rand_response(rng: &mut Rng, nested: bool) -> Response {
         15 => Response::ReplicaAck { watermark: rng.below(1 << 40) },
         16 => Response::Watermark { shard: rng.next_u32(), watermark: rng.below(1 << 40) },
         17 => Response::Promoted { watermark: rng.below(1 << 40) },
+        18 => Response::ReplicaNeed { digests: rand_chunk_digests(rng) },
+        19 => Response::ChunkAck { stored: rng.below(1 << 40) },
+        20 => Response::SnapshotCreated { id: rng.below(1 << 40) },
         _ => Response::CompoundReply {
             replies: (0..rng.below(4)).map(|_| rand_response(rng, true)).collect(),
         },
@@ -328,6 +354,47 @@ fn random_corruptions_never_panic() {
         b[at] ^= (rng.below(255) + 1) as u8;
         if let Ok(r) = Response::decode(&b) {
             assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+        }
+        let mut b = rand_metaop(&mut rng).encode();
+        let at = rng.below(b.len() as u64) as usize;
+        b[at] ^= (rng.below(255) + 1) as u8;
+        if let Ok(op) = MetaOp::decode(&b) {
+            assert_eq!(MetaOp::decode(&op.encode()).unwrap(), op);
+        }
+    }
+}
+
+/// Directed corruption of the §2.8 chunk-reference blob: a `WriteRef`
+/// whose digest blob is not a whole number of 32-byte digests must be
+/// REJECTED (never panic, never round down), and single-byte flips
+/// anywhere in a `WriteRef`/`ReplicaNeed` frame must stay panic-free.
+#[test]
+fn chunk_digest_blob_corruptions_rejected_never_panic() {
+    let mut rng = Rng::new(0xF422_0008);
+    for _ in 0..CASES {
+        let op = MetaOp::WriteRef {
+            path: rand_string(&mut rng),
+            size: rng.below(1 << 40),
+            chunks: rand_chunk_digests(&mut rng),
+            digests: rand_digests(&mut rng),
+            base_version: rng.below(1 << 20),
+        };
+        let b = op.encode();
+        // every strict prefix tears the blob or the trailing fields
+        assert_frame_properties(&op, &b, MetaOp::decode);
+        // arbitrary flips: reject or decode-to-valid, never panic
+        let mut bad = b.clone();
+        let at = rng.below(bad.len() as u64) as usize;
+        bad[at] ^= (rng.below(255) + 1) as u8;
+        if let Ok(back) = MetaOp::decode(&bad) {
+            assert_eq!(MetaOp::decode(&back.encode()).unwrap(), back);
+        }
+        let need = Response::ReplicaNeed { digests: rand_chunk_digests(&mut rng) };
+        let mut nb = need.encode();
+        let at = rng.below(nb.len() as u64) as usize;
+        nb[at] ^= (rng.below(255) + 1) as u8;
+        if let Ok(back) = Response::decode(&nb) {
+            assert_eq!(Response::decode(&back.encode()).unwrap(), back);
         }
     }
 }

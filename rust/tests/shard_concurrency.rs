@@ -8,6 +8,7 @@
 use std::sync::Arc;
 
 use xufs::callback::NotifyChannel;
+use xufs::config::ChunkstoreConfig;
 use xufs::homefs::FileStore;
 use xufs::metrics::{names, Metrics};
 use xufs::proto::{MetaOp, NotifyEvent, Request, Response};
@@ -32,6 +33,7 @@ fn server(shards: usize) -> (Arc<FileServer>, Metrics) {
         30.0,
         shards,
         metrics.clone(),
+        ChunkstoreConfig::default(),
     );
     (Arc::new(s), metrics)
 }

@@ -46,6 +46,7 @@ fn rig(files: &[(&str, Vec<u8>)]) -> Rig {
         2.0, // short leases so orphan expiry is testable
         cfg.server.shards,
         metrics.clone(),
+        cfg.chunkstore.clone(),
     ));
     let auth = Arc::new(Mutex::new(Authenticator::new(pair.clone(), 77)));
     let tcp = TcpServer::spawn(server.clone(), auth, metrics.clone()).expect("bind");
