@@ -1,31 +1,71 @@
 //! Scale-harness runner: prints the N-client sharded-vs-single-lock
-//! table, regenerates `BENCH_scale.json` at the repo root — the
-//! cross-PR record of server-side concurrency (DESIGN.md §2.6) — and
-//! ENFORCES the acceptance criterion (>= 3x aggregate ops/s at
-//! 8 clients for the sharded core over the `shards = 1` ablation), so a
-//! regression that re-serializes the server fails this run instead of
-//! silently recording a flat table.
+//! dispatch table AND the N-connection reactor-vs-thread-per-connection
+//! table, regenerates `BENCH_scale.json` at the repo root — the cross-PR
+//! record of server-side concurrency (DESIGN.md §2.6, §2.9) — and
+//! ENFORCES the acceptance criteria:
 //!
-//! `QUICK=1` shrinks the per-point measurement window for smoke runs.
+//! * dispatch: >= 3x aggregate ops/s at 8 clients for the sharded core
+//!   over the `shards = 1` ablation;
+//! * connections: >= 2x aggregate ops/s at 256 live connections for the
+//!   reactor over the thread-per-connection ablation (when the sweep
+//!   includes that point), and no p99 regression at <= 16 connections.
+//!
+//! `QUICK=1` shrinks the per-point measurement windows for smoke runs;
+//! `CONN_CLIENTS=16,256` pins the connection sweep (CI runners cap open
+//! fds near 1024 — the full 1024-connection point needs `ulimit -n 4096`).
 
-use xufs::bench::scale::{speedup_at_8, ACCEPT_SPEEDUP_AT_8};
-use xufs::bench::run_scale;
+use xufs::bench::scale::{
+    conn_p99_at, conn_speedup_at, speedup_at_8, ACCEPT_CONN_SPEEDUP_AT_256, ACCEPT_SPEEDUP_AT_8,
+};
+use xufs::bench::{run_conn_scale, run_scale};
 use xufs::config::XufsConfig;
+use xufs::util::Json;
 
 fn main() {
     let quick = std::env::var("QUICK").is_ok();
     let window = if quick { 0.15 } else { 0.6 };
+    let conn_window = if quick { 0.5 } else { 1.5 };
     let cfg = XufsConfig::default();
-    let t = run_scale(&cfg, window);
-    t.print();
+
+    let dispatch = run_scale(&cfg, window);
+    dispatch.print();
+    let conns = run_conn_scale(&cfg, conn_window);
+    conns.print();
+
+    let combined = Json::obj()
+        .set("dispatch", dispatch.to_json())
+        .set("connections", conns.to_json());
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_scale.json");
-    std::fs::write(&path, format!("{}\n", t.to_json())).expect("write BENCH_scale.json");
+    std::fs::write(&path, format!("{combined}\n")).expect("write BENCH_scale.json");
     println!("wrote {}", path.display());
-    let speedup = speedup_at_8(&t).expect("table has an 8-client sharded row");
+
+    let speedup = speedup_at_8(&dispatch).expect("table has an 8-client sharded row");
     assert!(
         speedup >= ACCEPT_SPEEDUP_AT_8,
         "sharded server speedup at 8 clients is {speedup:.2}x, below the \
          {ACCEPT_SPEEDUP_AT_8}x acceptance bar — the concurrent core has re-serialized"
     );
     println!("acceptance: {speedup:.2}x at 8 clients (>= {ACCEPT_SPEEDUP_AT_8}x) OK");
+
+    if let Some(cs) = conn_speedup_at(&conns, 256) {
+        assert!(
+            cs >= ACCEPT_CONN_SPEEDUP_AT_256,
+            "reactor speedup at 256 connections is {cs:.2}x, below the \
+             {ACCEPT_CONN_SPEEDUP_AT_256}x acceptance bar — the accept path has stopped scaling"
+        );
+        println!(
+            "acceptance: {cs:.2}x at 256 connections (>= {ACCEPT_CONN_SPEEDUP_AT_256}x) OK"
+        );
+    }
+    // the reactor must not buy scale by taxing small deployments: p99 at
+    // <= 16 connections stays within 1.5x of the thread-per-connection core
+    if let (Some(rp), Some(tp)) = (conn_p99_at(&conns, 16, "reactor"), conn_p99_at(&conns, 16, "threads"))
+    {
+        assert!(
+            rp <= tp * 1.5,
+            "reactor p99 at 16 connections is {rp:.2}ms vs {tp:.2}ms on the ablation — \
+             small-deployment latency regressed"
+        );
+        println!("acceptance: p99 at 16 conns {rp:.2}ms (threads {tp:.2}ms, cap 1.5x) OK");
+    }
 }

@@ -18,4 +18,6 @@ pub use figures::{
     run_fig5_table2, run_table1,
 };
 pub use report::Table;
-pub use scale::{run_scale, run_scale_point, ScalePoint};
+pub use scale::{
+    run_conn_point, run_conn_scale, run_scale, run_scale_point, ConnPoint, ScalePoint,
+};

@@ -15,14 +15,17 @@
 //! (clients, shards) point land in `BENCH_scale.json` (regenerate:
 //! `cargo bench --bench scale`).
 
-use std::sync::Arc;
+use std::collections::VecDeque;
+use std::sync::{Arc, Barrier, Mutex};
 use std::time::{Duration, Instant};
 
+use crate::auth::{Authenticator, KeyPair};
 use crate::callback::NotifyChannel;
 use crate::config::XufsConfig;
+use crate::coordinator::net::{dial, TcpServer};
 use crate::homefs::FileStore;
 use crate::metrics::{names, Metrics};
-use crate::proto::{MetaOp, Request, Response};
+use crate::proto::{self, FrameDecoder, FrameWriter, MetaOp, Request, Response};
 use crate::runtime::DigestEngine;
 use crate::server::FileServer;
 use crate::simnet::VirtualTime;
@@ -251,5 +254,305 @@ pub fn run_scale(cfg: &XufsConfig, window: f64) -> Table {
          the shard lock, fetch payloads outside locks (DESIGN.md §2.6); blocking counted in `{}`",
         names::SHARD_CONTENTION
     ));
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Connection-scale harness (DESIGN.md §2.9): N real TCP connections, each a
+// nonblocking pipelined client, against the reactor core and the
+// thread-per-connection ablation. Unlike the dispatch harness above, modeled
+// disk waits are OFF — the point is the serving core (accept path, poll loop,
+// per-connection buffers, wakeup latency), not the disk model.
+// ---------------------------------------------------------------------------
+
+/// Requests each simulated connection keeps in flight.
+const CONN_PIPELINE: usize = 8;
+/// Shared read-mostly files the connections hammer.
+const CONN_FILES: u64 = 64;
+/// Range-fetch block for the connection workload (metadata-class frames
+/// dominate; this keeps payload frames small enough that the harness
+/// measures per-frame costs, not memcpy bandwidth).
+const CONN_BLOCK: usize = 4096;
+/// Blocks per shared file.
+const CONN_FILE_BLOCKS: u64 = 16;
+/// Driver threads multiplexing the simulated connections. The drivers are
+/// nonblocking event loops themselves, so a handful of OS threads can
+/// honestly represent 1024 independent sockets on the client side.
+const DRIVER_THREADS: usize = 4;
+
+/// One measured point: `clients` live TCP connections against one core.
+#[derive(Debug, Clone)]
+pub struct ConnPoint {
+    pub clients: usize,
+    pub ops: u64,
+    pub ops_per_s: f64,
+    pub p50_ms: f64,
+    pub p99_ms: f64,
+}
+
+fn build_conn_server(cfg: &XufsConfig) -> (Arc<FileServer>, Metrics) {
+    let now = VirtualTime::ZERO;
+    let mut fs = FileStore::default();
+    let mut rng = Rng::new(cfg.seed ^ 0xC0_11EC7);
+    let mut block = vec![0u8; CONN_FILE_BLOCKS as usize * CONN_BLOCK];
+    rng.fill_bytes(&mut block);
+    fs.mkdir_p("/conn", now).unwrap();
+    for j in 0..CONN_FILES {
+        fs.write(&format!("/conn/f{j}"), &block, now).unwrap();
+    }
+    let metrics = Metrics::new();
+    let server = FileServer::new(
+        fs,
+        DiskModel::new(cfg.disk.home_bps, 0.0),
+        Arc::new(DigestEngine::native(metrics.clone())),
+        CONN_BLOCK,
+        cfg.lease.duration_s,
+        cfg.server.shards.max(2),
+        metrics.clone(),
+        cfg.chunkstore.clone(),
+    );
+    // no modeled sleeps: saturate the serving core, not the disk model
+    server.set_modeled_disk_waits(false);
+    (Arc::new(server), metrics)
+}
+
+fn pct(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    sorted[((sorted.len() - 1) as f64 * q) as usize] * 1e3
+}
+
+/// One nonblocking simulated connection owned by a driver thread.
+struct SimConn {
+    stream: std::net::TcpStream,
+    dec: FrameDecoder,
+    out: FrameWriter,
+    inflight: VecDeque<Instant>,
+}
+
+/// A driver's event loop over its slice of connections: keep every pipeline
+/// topped up, flush what the sockets will take, decode what arrives.
+#[allow(clippy::too_many_arguments)]
+fn conn_driver(
+    addr: std::net::SocketAddr,
+    pair: KeyPair,
+    versions: Arc<Vec<u64>>,
+    conns: usize,
+    seed: u64,
+    setup: Arc<Barrier>,
+    start: Arc<Barrier>,
+    window: f64,
+) -> (u64, Vec<f64>) {
+    // handshakes are blocking (USSH needs request/response lockstep), then
+    // the socket goes nonblocking for the measured window
+    let mut clients: Vec<SimConn> = (0..conns)
+        .map(|_| {
+            let stream = dial(addr, &pair).expect("conn bench dial");
+            stream.set_nonblocking(true).expect("set_nonblocking");
+            SimConn {
+                stream,
+                dec: FrameDecoder::new(proto::MAX_FRAME),
+                out: FrameWriter::new(),
+                inflight: VecDeque::new(),
+            }
+        })
+        .collect();
+    let mut rng = Rng::new(seed);
+    setup.wait(); // every connection is authenticated before anyone measures
+    start.wait();
+    let deadline = Instant::now() + Duration::from_secs_f64(window);
+    let mut ops = 0u64;
+    let mut lat: Vec<f64> = Vec::with_capacity(8192);
+    loop {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        let mut progress = false;
+        for c in clients.iter_mut() {
+            while c.inflight.len() < CONN_PIPELINE {
+                let j = rng.below(CONN_FILES);
+                let req = if rng.below(100) < 70 {
+                    Request::Stat { path: format!("/conn/f{j}") }
+                } else {
+                    Request::FetchRange {
+                        path: format!("/conn/f{j}"),
+                        offset: rng.below(CONN_FILE_BLOCKS) * CONN_BLOCK as u64,
+                        len: CONN_BLOCK as u64,
+                        expect_version: versions[j as usize],
+                    }
+                };
+                c.out.frame(|e| req.encode_into(e));
+                c.inflight.push_back(Instant::now());
+                progress = true;
+            }
+            c.out.flush_to(&mut c.stream).expect("conn bench write");
+            loop {
+                match c.dec.read_from(&mut c.stream) {
+                    Ok(0) => panic!("server closed a bench connection"),
+                    Ok(_) => progress = true,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+                    Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+                    Err(e) => panic!("conn bench read: {e}"),
+                }
+            }
+            while let Some(frame) = c.dec.next_frame().expect("conn bench decode") {
+                let resp = Response::decode(frame).expect("conn bench response");
+                assert!(!matches!(&resp, Response::Err { .. }), "bench op failed: {resp:?}");
+                let t0 = c.inflight.pop_front().expect("response without a request");
+                lat.push(t0.elapsed().as_secs_f64());
+                ops += 1;
+                progress = true;
+            }
+        }
+        if !progress {
+            std::thread::yield_now();
+        }
+    }
+    (ops, lat)
+}
+
+/// Run one (clients, core) point: `clients` authenticated TCP connections
+/// pipelining a Stat-heavy workload for `window` seconds against the
+/// reactor core (`reactor = true`) or the thread-per-connection ablation.
+pub fn run_conn_point(cfg: &XufsConfig, clients: usize, reactor: bool, window: f64) -> ConnPoint {
+    let (server, metrics) = build_conn_server(cfg);
+    let mut rng = Rng::new(cfg.seed ^ 0xD1A1);
+    let pair = KeyPair::generate(&mut rng, VirtualTime::ZERO, 3600.0);
+    let auth = Arc::new(Mutex::new(Authenticator::new(pair.clone(), cfg.seed)));
+    let mut scfg = cfg.server.clone();
+    scfg.reactor = reactor;
+    // admission must never bite in the bench: the point is throughput at
+    // N live connections, not the busy path
+    scfg.max_connections = clients + 16;
+    let tcp = TcpServer::spawn_with(server.clone(), auth, metrics, &scfg)
+        .expect("conn bench server spawn");
+    let versions: Arc<Vec<u64>> = Arc::new(
+        (0..CONN_FILES)
+            .map(|j| match server.handle(
+                u64::MAX,
+                Request::FetchMeta { path: format!("/conn/f{j}") },
+                VirtualTime::ZERO,
+            ) {
+                Response::FileMeta { version, .. } => version,
+                r => panic!("conn bench setup: {r:?}"),
+            })
+            .collect(),
+    );
+    let setup = Arc::new(Barrier::new(DRIVER_THREADS));
+    let start = Arc::new(Barrier::new(DRIVER_THREADS));
+    let mut handles = Vec::with_capacity(DRIVER_THREADS);
+    for d in 0..DRIVER_THREADS {
+        let conns = clients / DRIVER_THREADS + usize::from(d < clients % DRIVER_THREADS);
+        let addr = tcp.addr;
+        let pair = pair.clone();
+        let versions = versions.clone();
+        let seed = cfg.seed ^ 0xC0_4BE4C ^ ((d as u64) << 40);
+        let setup = setup.clone();
+        let start = start.clone();
+        handles.push(std::thread::spawn(move || {
+            conn_driver(addr, pair, versions, conns, seed, setup, start, window)
+        }));
+    }
+    let mut ops = 0u64;
+    let mut lat: Vec<f64> = Vec::new();
+    for h in handles {
+        let (n, l) = h.join().expect("conn driver panicked");
+        ops += n;
+        lat.extend(l);
+    }
+    drop(tcp); // joins the serving threads before the next point binds
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    ConnPoint {
+        clients,
+        ops,
+        // the drivers start their windows together (barrier) and stop on
+        // the same deadline, so the window IS the measurement interval —
+        // handshake setup time stays out of the denominator
+        ops_per_s: ops as f64 / window.max(1e-9),
+        p50_ms: pct(&lat, 0.50),
+        p99_ms: pct(&lat, 0.99),
+    }
+}
+
+/// The 256-connection reactor-vs-ablation speedup a healthy serving core
+/// must clear (the PR's acceptance criterion; `benches/scale.rs` enforces
+/// it when the sweep includes a 256-client point).
+pub const ACCEPT_CONN_SPEEDUP_AT_256: f64 = 2.0;
+
+/// The reactor speedup recorded in a [`run_conn_scale`] table at `clients`
+/// connections (last cell of the reactor row). `None` if the sweep skipped
+/// that point.
+pub fn conn_speedup_at(t: &Table, clients: usize) -> Option<f64> {
+    let want = clients.to_string();
+    t.rows
+        .iter()
+        .find(|r| r[0] == want && r[1] == "reactor")
+        .and_then(|r| r.last())
+        .and_then(|s| s.parse().ok())
+}
+
+/// The p99 latency (ms) recorded in a [`run_conn_scale`] table for the
+/// `core` row ("reactor" or "threads") at `clients` connections.
+pub fn conn_p99_at(t: &Table, clients: usize, core: &str) -> Option<f64> {
+    let want = clients.to_string();
+    t.rows
+        .iter()
+        .find(|r| r[0] == want && r[1] == core)
+        .and_then(|r| r.get(4))
+        .and_then(|s| s.parse().ok())
+}
+
+/// Which connection counts to sweep: `CONN_CLIENTS=16,256` overrides (CI
+/// runners cap fds near 1024, so the nightly smoke pins a short list); the
+/// default saturation sweep runs to 1024 live connections.
+fn conn_counts() -> Vec<usize> {
+    match std::env::var("CONN_CLIENTS") {
+        Ok(s) => s
+            .split(',')
+            .filter_map(|p| p.trim().parse().ok())
+            .filter(|&c| c > 0)
+            .collect(),
+        Err(_) => vec![16, 64, 256, 512, 1024],
+    }
+}
+
+/// The connection-scale sweep: each count against the thread-per-connection
+/// ablation and the reactor core. The `speedup` column is the reactor row's
+/// aggregate ops/s over the same-count ablation row.
+pub fn run_conn_scale(cfg: &XufsConfig, window: f64) -> Table {
+    let mut t = Table::new(
+        "Connection scale — reactor core vs thread-per-connection ablation",
+        &["clients", "core", "agg ops/s", "p50 ms", "p99 ms", "ops", "speedup"],
+    );
+    for clients in conn_counts() {
+        let base = run_conn_point(cfg, clients, false, window);
+        let reac = run_conn_point(cfg, clients, true, window);
+        for (p, core, speedup) in [
+            (&base, "threads", 1.0),
+            (&reac, "reactor", reac.ops_per_s / base.ops_per_s.max(1e-9)),
+        ] {
+            t.row(vec![
+                p.clients.to_string(),
+                core.to_string(),
+                format!("{:.0}", p.ops_per_s),
+                format!("{:.2}", p.p50_ms),
+                format!("{:.2}", p.p99_ms),
+                p.ops.to_string(),
+                format!("{speedup:.2}"),
+            ]);
+        }
+    }
+    t.note(format!(
+        "{CONN_PIPELINE} pipelined requests/conn (70% Stat, 30% {CONN_BLOCK}-byte FetchRange), \
+         {DRIVER_THREADS} nonblocking driver threads multiplexing the client side; \
+         modeled disk waits OFF — this measures the serving core (DESIGN.md §2.9)"
+    ));
+    t.note(
+        "full sweep needs ~2 fds per connection: raise `ulimit -n` past 4096 before the \
+         1024-client point; CI smoke pins CONN_CLIENTS=16,256"
+            .to_string(),
+    );
     t
 }

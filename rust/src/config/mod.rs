@@ -236,7 +236,7 @@ impl Default for ChunkstoreConfig {
     }
 }
 
-/// File-server concurrency parameters (DESIGN.md §2.6).
+/// File-server concurrency parameters (DESIGN.md §2.6, §2.9).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
     /// Namespace shard count: per-path server state (digest cache, lock
@@ -245,11 +245,30 @@ pub struct ServerConfig {
     /// `1` reproduces the old single-lock server (the scale ablation
     /// baseline); the default 8 matches the paper's many-client claim.
     pub shards: usize,
+    /// Serve TCP with the readiness-driven reactor core (DESIGN.md
+    /// §2.9). `false` pins the legacy thread-per-connection path —
+    /// kept for one release as the connection-scale ablation, also
+    /// reachable via `XUFS_TCP_LEGACY=1`.
+    pub reactor: bool,
+    /// Reactor thread count; `0` means one per available core.
+    pub reactor_threads: usize,
+    /// Admission control: connections beyond this are refused with the
+    /// typed busy code (117) instead of queueing unboundedly.
+    pub max_connections: usize,
+    /// Requests served per connection per drain round; pipelined frames
+    /// beyond this are answered with the typed busy code (117).
+    pub max_inflight_per_conn: usize,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { shards: 8 }
+        ServerConfig {
+            shards: 8,
+            reactor: true,
+            reactor_threads: 0,
+            max_connections: 1024,
+            max_inflight_per_conn: 32,
+        }
     }
 }
 
@@ -353,6 +372,16 @@ impl XufsConfig {
                     cfg.fault.promote_after_crash_p = value.as_f64()?
                 }
                 "server.shards" => cfg.server.shards = value.as_usize()?.max(1),
+                "server.reactor" => cfg.server.reactor = value.as_bool()?,
+                "server.reactor_threads" => {
+                    cfg.server.reactor_threads = value.as_usize()?
+                }
+                "server.max_connections" => {
+                    cfg.server.max_connections = value.as_usize()?.max(1)
+                }
+                "server.max_inflight_per_conn" => {
+                    cfg.server.max_inflight_per_conn = value.as_usize()?.max(1)
+                }
                 "replica.enabled" => cfg.replica.enabled = value.as_bool()?,
                 "replica.ship_batch" => cfg.replica.ship_batch = value.as_usize()?.max(1),
                 "replica.max_lag_ops" => cfg.replica.max_lag_ops = value.as_u64()?,
@@ -442,6 +471,25 @@ localized_dirs = "/scratch/out:/scratch/tmp"
         let c = XufsConfig::from_toml("[server]\nshards = 0\n").unwrap();
         assert_eq!(c.server.shards, 1);
         assert_eq!(XufsConfig::default().server.shards, 8);
+    }
+
+    #[test]
+    fn parse_reactor_keys() {
+        let text = "[server]\nreactor = false\nreactor_threads = 2\n\
+                    max_connections = 64\nmax_inflight_per_conn = 4\n";
+        let c = XufsConfig::from_toml(text).unwrap();
+        assert!(!c.server.reactor);
+        assert_eq!(c.server.reactor_threads, 2);
+        assert_eq!(c.server.max_connections, 64);
+        assert_eq!(c.server.max_inflight_per_conn, 4);
+        // zero admission limits would refuse everything; they clamp to 1
+        let c = XufsConfig::from_toml("[server]\nmax_connections = 0\n").unwrap();
+        assert_eq!(c.server.max_connections, 1);
+        let d = XufsConfig::default().server;
+        assert!(d.reactor, "reactor core is the default");
+        assert_eq!(d.reactor_threads, 0, "0 = one per core");
+        assert_eq!(d.max_connections, 1024);
+        assert_eq!(d.max_inflight_per_conn, 32);
     }
 
     #[test]

@@ -8,10 +8,14 @@
 //!   paper's testbed (DESIGN.md §5).
 //! * [`net`] — real TCP sockets on localhost with the full USSH
 //!   challenge-response handshake, striped fetch connections and a
-//!   callback pump thread: integration tests and the e2e example run the
-//!   identical client/server logic over actual sockets.
+//!   push-mode callback channel: integration tests and the e2e example
+//!   run the identical client/server logic over actual sockets. Serving
+//!   is readiness-driven (the `reactor` module, DESIGN.md §2.9); the
+//!   legacy thread-per-connection path survives one release behind
+//!   `XUFS_TCP_LEGACY=1` as the scale ablation.
 
 pub mod net;
+mod reactor;
 pub mod sim;
 
 pub use sim::{SimLink, SimWorld};

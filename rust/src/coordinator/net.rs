@@ -7,10 +7,17 @@
 //! simulator.
 //!
 //! Since the sharded-server refactor (DESIGN.md §2.6) the server is
-//! shared as a bare `Arc<FileServer>`: each connection thread dispatches
+//! shared as a bare `Arc<FileServer>`: connections dispatch
 //! [`FileServer::handle`] directly, serializing only on the namespace
-//! shard its request routes to — concurrent clients on different
+//! shard a request routes to — concurrent clients on different
 //! subtrees are served genuinely in parallel.
+//!
+//! Serving is readiness-driven by default (the reactor core, DESIGN.md
+//! §2.9): a fixed pool of poll-loop threads owns every connection fd and
+//! streams frames through reused per-connection buffers. The legacy
+//! thread-per-connection path below survives one release behind
+//! `XUFS_TCP_LEGACY=1` (and `[server] reactor = false`) as the scale
+//! ablation.
 
 use std::io::{Read, Write};
 use std::net::{TcpListener, TcpStream};
@@ -22,7 +29,7 @@ use std::time::Duration;
 use crate::auth::{self, Authenticator, KeyPair};
 use crate::callback::NotifyChannel;
 use crate::client::{LinkError, ServerLink};
-use crate::config::XufsConfig;
+use crate::config::{ServerConfig, XufsConfig};
 use crate::homefs::FsError;
 use crate::metrics::{names, Metrics};
 use crate::proto::{
@@ -36,11 +43,11 @@ use crate::transfer;
 // framing
 // ---------------------------------------------------------------------
 
-fn write_frame(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
+pub(crate) fn write_frame(stream: &mut TcpStream, body: &[u8]) -> std::io::Result<()> {
     stream.write_all(&proto::frame(body))
 }
 
-fn read_frame(stream: &mut TcpStream) -> std::io::Result<Vec<u8>> {
+pub(crate) fn read_frame(stream: &mut TcpStream) -> std::io::Result<Vec<u8>> {
     let mut len_buf = [0u8; 4];
     stream.read_exact(&mut len_buf)?;
     let len = u32::from_le_bytes(len_buf) as usize;
@@ -65,12 +72,46 @@ fn io_err(e: std::io::Error) -> FsError {
 pub struct TcpServer {
     pub addr: std::net::SocketAddr,
     stop: Arc<AtomicBool>,
-    accept_thread: Option<JoinHandle<()>>,
+    threads: Vec<JoinHandle<()>>,
 }
 
 impl TcpServer {
-    /// Bind on an ephemeral localhost port and serve until dropped.
+    /// Bind on an ephemeral localhost port and serve until dropped, with
+    /// the default server config: the readiness-driven reactor core
+    /// (DESIGN.md §2.9). `XUFS_TCP_LEGACY=1` pins the legacy
+    /// thread-per-connection path for one release (the scale ablation).
     pub fn spawn(
+        server: Arc<FileServer>,
+        authenticator: Arc<Mutex<Authenticator>>,
+        metrics: Metrics,
+    ) -> std::io::Result<TcpServer> {
+        let mut cfg = ServerConfig::default();
+        if std::env::var("XUFS_TCP_LEGACY").is_ok_and(|v| v == "1") {
+            cfg.reactor = false;
+        }
+        Self::spawn_with(server, authenticator, metrics, &cfg)
+    }
+
+    /// [`TcpServer::spawn`] with explicit `[server]` knobs. `cfg.reactor`
+    /// selects the serving core verbatim (no env pin) — the scale bench
+    /// runs both cores side by side through this.
+    pub fn spawn_with(
+        server: Arc<FileServer>,
+        authenticator: Arc<Mutex<Authenticator>>,
+        metrics: Metrics,
+        cfg: &ServerConfig,
+    ) -> std::io::Result<TcpServer> {
+        if cfg.reactor {
+            let h = super::reactor::spawn(server, authenticator, metrics, cfg)?;
+            Ok(TcpServer { addr: h.addr, stop: h.stop, threads: h.threads })
+        } else {
+            Self::spawn_legacy(server, authenticator, metrics)
+        }
+    }
+
+    /// The pre-reactor thread-per-connection core (one release of life
+    /// left): blocking connection threads plus a polling accept loop.
+    fn spawn_legacy(
         server: Arc<FileServer>,
         authenticator: Arc<Mutex<Authenticator>>,
         metrics: Metrics,
@@ -96,6 +137,7 @@ impl TcpServer {
                 }
                 match listener.accept() {
                     Ok((stream, _)) => {
+                        metrics.incr(names::SERVER_ACCEPTS);
                         let server = server.clone();
                         let authenticator = authenticator.clone();
                         let metrics = metrics.clone();
@@ -108,19 +150,25 @@ impl TcpServer {
                     Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
                         std::thread::sleep(Duration::from_millis(2));
                     }
-                    Err(_) => break,
+                    Err(_) => {
+                        // transient accept failures (ECONNABORTED, fd
+                        // pressure) must not silently kill the listener
+                        // forever — count, breathe, retry
+                        metrics.incr(names::SERVER_ACCEPT_ERRORS);
+                        std::thread::sleep(Duration::from_millis(10));
+                    }
                 }
             }
             for t in conn_threads {
                 let _ = t.join();
             }
         });
-        Ok(TcpServer { addr, stop, accept_thread: Some(accept_thread) })
+        Ok(TcpServer { addr, stop, threads: vec![accept_thread] })
     }
 
     pub fn shutdown(&mut self) {
         self.stop.store(true, Ordering::SeqCst);
-        if let Some(t) = self.accept_thread.take() {
+        for t in self.threads.drain(..) {
             let _ = t.join();
         }
     }
@@ -248,7 +296,7 @@ fn client_handshake(stream: &mut TcpStream, pair: &KeyPair) -> Result<(), FsErro
     }
 }
 
-fn dial(addr: std::net::SocketAddr, pair: &KeyPair) -> Result<TcpStream, FsError> {
+pub(crate) fn dial(addr: std::net::SocketAddr, pair: &KeyPair) -> Result<TcpStream, FsError> {
     let mut stream = TcpStream::connect(addr).map_err(io_err)?;
     stream.set_nodelay(true).ok();
     client_handshake(&mut stream, pair)?;
@@ -258,8 +306,15 @@ fn dial(addr: std::net::SocketAddr, pair: &KeyPair) -> Result<TcpStream, FsError
 /// Real-TCP [`ServerLink`]: an authenticated control connection, parallel
 /// stripe connections for range fetches, and a callback reader thread
 /// feeding a local [`NotifyChannel`].
+///
+/// Like the sim deployment's `SimLink`, the link carries the full
+/// replica endpoint list: connects and reconnects rotate through it on
+/// failed dials and code-112 "wrong endpoint" replies, so failover works
+/// over real sockets exactly as it does in the simulator (DESIGN.md
+/// §2.7).
 pub struct TcpLink {
-    addr: std::net::SocketAddr,
+    addrs: Vec<std::net::SocketAddr>,
+    active: usize,
     pair: KeyPair,
     cfg: XufsConfig,
     control: Option<TcpStream>,
@@ -281,8 +336,26 @@ impl TcpLink {
         root: &str,
         metrics: Metrics,
     ) -> Result<TcpLink, FsError> {
+        Self::connect_endpoints(vec![addr], pair, cfg, client_id, root, metrics)
+    }
+
+    /// [`TcpLink::connect`] with a replica endpoint list. The first
+    /// endpoint that completes dial + USSH + callback registration wins;
+    /// standby endpoints answer registration with code 112 and are
+    /// rotated past (counted in `replica.failovers` when the active
+    /// endpoint actually moves).
+    pub fn connect_endpoints(
+        addrs: Vec<std::net::SocketAddr>,
+        pair: KeyPair,
+        cfg: XufsConfig,
+        client_id: u64,
+        root: &str,
+        metrics: Metrics,
+    ) -> Result<TcpLink, FsError> {
+        assert!(!addrs.is_empty(), "TcpLink needs at least one endpoint");
         let mut link = TcpLink {
-            addr,
+            addrs,
+            active: 0,
             pair,
             cfg,
             control: None,
@@ -297,11 +370,43 @@ impl TcpLink {
         Ok(link)
     }
 
+    /// The endpoint currently serving this link.
+    pub fn active_endpoint(&self) -> std::net::SocketAddr {
+        self.addrs[self.active]
+    }
+
+    fn addr(&self) -> std::net::SocketAddr {
+        self.addrs[self.active]
+    }
+
+    /// Establish on the first endpoint that accepts, starting from the
+    /// one that last worked (`SimLink::connect`'s rotation, over real
+    /// sockets).
     fn establish(&mut self) -> Result<(), FsError> {
         self.teardown_callback();
-        self.control = Some(dial(self.addr, &self.pair)?);
+        self.control = None;
+        let n = self.addrs.len();
+        let mut last = FsError::Disconnected;
+        for k in 0..n {
+            let idx = (self.active + k) % n;
+            match self.establish_at(self.addrs[idx]) {
+                Ok(()) => {
+                    if idx != self.active {
+                        self.active = idx;
+                        self.metrics.incr(names::REPLICA_FAILOVERS);
+                    }
+                    return Ok(());
+                }
+                Err(e) => last = e,
+            }
+        }
+        Err(last)
+    }
+
+    fn establish_at(&mut self, addr: std::net::SocketAddr) -> Result<(), FsError> {
+        let control = dial(addr, &self.pair)?;
         // callback connection: authenticate, register, then read pushes
-        let mut cb = dial(self.addr, &self.pair)?;
+        let mut cb = dial(addr, &self.pair)?;
         write_frame(
             &mut cb,
             &Request::RegisterCallback { root: self.root.clone(), client_id: self.client_id }.encode(),
@@ -311,6 +416,9 @@ impl TcpLink {
             .map_err(|e| FsError::Protocol(e.to_string()))?
         {
             Response::CallbackRegistered => {}
+            // a standby/fenced endpoint refuses registration with 112:
+            // surface a rotatable error so `establish` tries the next one
+            Response::Err { code: 112, .. } => return Err(FsError::Disconnected),
             r => return Err(FsError::Protocol(format!("callback registration failed: {r:?}"))),
         }
         let channel = self.channel.clone();
@@ -336,6 +444,7 @@ impl TcpLink {
                 }
             }
         }));
+        self.control = Some(control);
         Ok(())
     }
 
@@ -360,7 +469,18 @@ impl TcpLink {
             return Err(FsError::Disconnected);
         }
         match read_frame(stream) {
-            Ok(resp) => Response::decode(&resp).map_err(|e| FsError::Protocol(e.to_string())),
+            Ok(resp) => {
+                let resp =
+                    Response::decode(&resp).map_err(|e| FsError::Protocol(e.to_string()))?;
+                if let Response::Err { code: 112, .. } = resp {
+                    // wrong endpoint (demoted/fenced): sever so the
+                    // caller's reconnect rotates to the new primary
+                    self.control = None;
+                    self.channel.disconnect();
+                    return Err(FsError::Disconnected);
+                }
+                Ok(resp)
+            }
             Err(_) => {
                 self.control = None;
                 Err(FsError::Disconnected)
@@ -490,12 +610,18 @@ impl ServerLink for TcpLink {
         if shares.len() == 1 {
             let (soff, slen) = shares[0];
             results.push(fetch_blocks_conn(
-                self.addr, &self.pair, path, soff, slen, expect_version, bb,
+                self.addr(),
+                &self.pair,
+                path,
+                soff,
+                slen,
+                expect_version,
+                bb,
             ));
         } else {
             let mut handles = Vec::new();
             for &(soff, slen) in &shares {
-                let addr = self.addr;
+                let addr = self.addr();
                 let pair = self.pair.clone();
                 let path = path.to_string();
                 handles.push(std::thread::spawn(move || {
@@ -523,7 +649,13 @@ impl ServerLink for TcpLink {
                     debug_assert_eq!(resumed_from_block, soff / bb);
                     self.metrics.incr(names::RESUMED_FETCHES);
                     match fetch_blocks_conn(
-                        self.addr, &self.pair, path, soff, slen, expect_version, bb,
+                        self.addr(),
+                        &self.pair,
+                        path,
+                        soff,
+                        slen,
+                        expect_version,
+                        bb,
                     ) {
                         Ok(chunk) => extents.extend(chunk),
                         // a second tear on the same share surfaces the
@@ -550,7 +682,7 @@ impl ServerLink for TcpLink {
         for _ in 0..threads {
             let work = work.clone();
             let results = results.clone();
-            let addr = self.addr;
+            let addr = self.addr();
             let pair = self.pair.clone();
             let bb = self.cfg.stripe.min_block.max(1);
             handles.push(std::thread::spawn(move || {

@@ -1,0 +1,509 @@
+//! Readiness-driven reactor server core (DESIGN.md §2.9).
+//!
+//! A small pool of reactor threads owns every connection fd: each thread
+//! runs a `poll(2)` loop over nonblocking sockets, drives per-connection
+//! state machines (handshake -> framed request -> dispatch -> framed
+//! response), and hands decoded requests straight to the sharded
+//! [`FileServer::handle`] — which is lock-free to dispatch into, so no
+//! queues or handoff threads sit between the socket and the server core.
+//! This replaces the thread-per-connection path (kept as an ablation,
+//! `XUFS_TCP_LEGACY=1`) whose 2 ms accept sleep and thousands of blocked
+//! threads were the wall in front of the paper's 9000-node claim.
+//!
+//! I/O never blocks a reactor thread: reads go through the v2 streaming
+//! decoder ([`FrameDecoder`], one reused buffer per connection), writes
+//! through [`FrameWriter`] with partial-write resumption — a slow WAN
+//! reader costs buffer space, never a thread. Backpressure is explicit:
+//! a connection whose un-flushed output passes the high-water mark stops
+//! being read until it drains (so a stalled peer throttles only itself),
+//! and admission control refuses work past `[server] max_connections` /
+//! `max_inflight_per_conn` with the typed busy code
+//! ([`proto::BUSY_CODE`]) instead of queueing unboundedly.
+//!
+//! The poll timeout doubles as the reactor's timer tick: thread 0 runs
+//! the 1 s lease sweep (quiet servers still expire orphaned leases — the
+//! legacy path only swept between accepts), and every thread pumps
+//! callback channels and flushes its codec-reuse counters on the tick.
+
+use std::io::Write;
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::auth::Authenticator;
+use crate::callback::NotifyChannel;
+use crate::config::ServerConfig;
+use crate::metrics::{names, Metrics};
+use crate::proto::{self, FrameDecoder, FrameWriter, Request, Response};
+use crate::server::FileServer;
+use crate::simnet::{Clock, RealClock};
+
+/// Minimal `poll(2)` FFI shim — just the constants and struct layout the
+/// reactor needs, straight from POSIX. In-tree on purpose: the offline
+/// crate set has no `libc`, and `std` exposes no readiness API.
+mod sys {
+    use std::os::raw::{c_int, c_short};
+
+    pub const POLLIN: c_short = 0x001;
+    pub const POLLOUT: c_short = 0x004;
+    pub const POLLERR: c_short = 0x008;
+    pub const POLLHUP: c_short = 0x010;
+    pub const POLLNVAL: c_short = 0x020;
+
+    #[cfg(target_os = "linux")]
+    type NfdsT = std::os::raw::c_ulong;
+    #[cfg(not(target_os = "linux"))]
+    type NfdsT = std::os::raw::c_uint;
+
+    #[repr(C)]
+    #[derive(Clone, Copy, Debug)]
+    pub struct PollFd {
+        pub fd: c_int,
+        pub events: c_short,
+        pub revents: c_short,
+    }
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: NfdsT, timeout: c_int) -> c_int;
+    }
+
+    /// Wait for readiness on `fds` for up to `timeout_ms`. EINTR is
+    /// reported as zero ready fds — the caller just re-ticks.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> std::io::Result<usize> {
+        let rc = unsafe { poll(fds.as_mut_ptr(), fds.len() as NfdsT, timeout_ms) };
+        if rc < 0 {
+            let e = std::io::Error::last_os_error();
+            if e.kind() == std::io::ErrorKind::Interrupted {
+                return Ok(0);
+            }
+            return Err(e);
+        }
+        Ok(rc as usize)
+    }
+}
+
+/// Poll timeout: the reactor's timer tick granularity (callback pump
+/// latency bound, lease-sweep scheduling, stop-flag responsiveness).
+const TICK_MS: i32 = 10;
+/// Per-connection read budget per tick — a blasting peer cannot starve
+/// its neighbors on the same reactor thread.
+const READ_BUDGET: usize = 256 * 1024;
+/// Stop reading a connection whose un-flushed output exceeds this.
+const WRITE_HIGH_WATER: usize = 4 * 1024 * 1024;
+/// Resume reading once the backlog drains below this.
+const WRITE_LOW_WATER: usize = 64 * 1024;
+
+/// What `TcpServer` wraps when the reactor core is selected.
+pub(crate) struct ReactorHandle {
+    pub addr: std::net::SocketAddr,
+    pub stop: Arc<AtomicBool>,
+    pub threads: Vec<JoinHandle<()>>,
+}
+
+/// Everything one reactor thread needs; each thread owns a clone.
+struct Shared {
+    listener: Arc<TcpListener>,
+    server: Arc<FileServer>,
+    authenticator: Arc<Mutex<Authenticator>>,
+    metrics: Metrics,
+    stop: Arc<AtomicBool>,
+    active: Arc<AtomicUsize>,
+    max_connections: usize,
+    max_inflight: usize,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ConnState {
+    /// Expecting `AuthHello`.
+    AwaitHello,
+    /// Challenge sent; expecting `AuthProof`.
+    AwaitProof,
+    /// Authenticated; framed request -> dispatch -> framed response.
+    Serving,
+    /// Converted by `RegisterCallback` into the push channel.
+    Callback,
+}
+
+struct Conn {
+    stream: TcpStream,
+    dec: FrameDecoder,
+    out: FrameWriter,
+    state: ConnState,
+    session: u64,
+    channel: Option<NotifyChannel>,
+    /// Backpressured: output past the high-water mark, reads suspended.
+    paused: bool,
+    /// Terminal frame queued (auth failure); close once it flushes.
+    close_after_flush: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            dec: FrameDecoder::new(proto::MAX_FRAME),
+            out: FrameWriter::new(),
+            state: ConnState::AwaitHello,
+            session: 0,
+            channel: None,
+            paused: false,
+            close_after_flush: false,
+            dead: false,
+        }
+    }
+}
+
+/// Bind and launch the reactor thread pool.
+pub(crate) fn spawn(
+    server: Arc<FileServer>,
+    authenticator: Arc<Mutex<Authenticator>>,
+    metrics: Metrics,
+    cfg: &ServerConfig,
+) -> std::io::Result<ReactorHandle> {
+    let listener = TcpListener::bind("127.0.0.1:0")?;
+    let addr = listener.local_addr()?;
+    listener.set_nonblocking(true)?;
+    let listener = Arc::new(listener);
+    let stop = Arc::new(AtomicBool::new(false));
+    let active = Arc::new(AtomicUsize::new(0));
+    let threads_n = if cfg.reactor_threads == 0 {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    } else {
+        cfg.reactor_threads
+    }
+    .clamp(1, 64);
+    let mut threads = Vec::with_capacity(threads_n);
+    for idx in 0..threads_n {
+        let sh = Shared {
+            listener: listener.clone(),
+            server: server.clone(),
+            authenticator: authenticator.clone(),
+            metrics: metrics.clone(),
+            stop: stop.clone(),
+            active: active.clone(),
+            max_connections: cfg.max_connections.max(1),
+            max_inflight: cfg.max_inflight_per_conn.max(1),
+        };
+        threads.push(std::thread::spawn(move || reactor_loop(sh, idx)));
+    }
+    Ok(ReactorHandle { addr, stop, threads })
+}
+
+fn reactor_loop(sh: Shared, thread_idx: usize) {
+    let clock = RealClock::new();
+    let mut conns: Vec<Conn> = Vec::new();
+    let mut fds: Vec<sys::PollFd> = Vec::new();
+    let mut last_tick = Instant::now();
+    let mut buf_reuses = 0u64;
+    while !sh.stop.load(Ordering::SeqCst) {
+        fds.clear();
+        fds.push(sys::PollFd { fd: sh.listener.as_raw_fd(), events: sys::POLLIN, revents: 0 });
+        for c in &conns {
+            let mut ev = 0;
+            if !c.paused && !c.close_after_flush {
+                // Callback conns register POLLIN too: the peer never
+                // sends after registration, so readiness means hangup
+                ev |= sys::POLLIN;
+            }
+            if !c.out.is_empty() {
+                ev |= sys::POLLOUT;
+            }
+            fds.push(sys::PollFd { fd: c.stream.as_raw_fd(), events: ev, revents: 0 });
+        }
+        if sys::poll_fds(&mut fds, TICK_MS).is_err() {
+            // poll itself failing is not a per-connection condition;
+            // breathe and re-tick rather than spinning
+            std::thread::sleep(Duration::from_millis(10));
+            continue;
+        }
+        // timer duties ride the poll timeout
+        if last_tick.elapsed() >= Duration::from_secs(1) {
+            last_tick = Instant::now();
+            if thread_idx == 0 {
+                // the reactor's lease timer: quiet servers still expire
+                // orphaned leases (the legacy path swept only between
+                // accepts)
+                sh.server.expire_leases(clock.now());
+            }
+            if buf_reuses > 0 {
+                sh.metrics.add(names::CODEC_BUF_REUSES, buf_reuses);
+                buf_reuses = 0;
+            }
+        }
+        // conn I/O first (their fds entries predate this tick's accepts)
+        let polled = fds.len() - 1;
+        for (i, c) in conns.iter_mut().take(polled).enumerate() {
+            let re = fds[i + 1].revents;
+            if re & sys::POLLNVAL != 0 {
+                c.dead = true;
+                continue;
+            }
+            if re & (sys::POLLIN | sys::POLLHUP | sys::POLLERR) != 0 && !c.paused {
+                read_input(c);
+            }
+            service_conn(&sh, c, &clock);
+            flush_conn(c, &mut buf_reuses);
+            if c.paused && c.out.pending() < WRITE_LOW_WATER {
+                // drained below low water: resume, and serve any frames
+                // that were already buffered before the pause
+                c.paused = false;
+                service_conn(&sh, c, &clock);
+                flush_conn(c, &mut buf_reuses);
+            }
+            if c.close_after_flush && c.out.is_empty() {
+                c.dead = true;
+            }
+        }
+        if fds[0].revents != 0 {
+            accept_burst(&sh, &mut conns);
+        }
+        if conns.iter().any(|c| c.dead) {
+            conns.retain(|c| {
+                if c.dead {
+                    if let Some(ch) = &c.channel {
+                        ch.disconnect();
+                    }
+                    sh.active.fetch_sub(1, Ordering::SeqCst);
+                    false
+                } else {
+                    true
+                }
+            });
+            sh.metrics
+                .set_gauge(names::SERVER_ACTIVE_CONNS, sh.active.load(Ordering::SeqCst) as f64);
+        }
+    }
+    // shutdown: sever channels so server-side pushes stop queueing
+    for c in &conns {
+        if let Some(ch) = &c.channel {
+            ch.disconnect();
+        }
+    }
+    sh.active.fetch_sub(conns.len(), Ordering::SeqCst);
+}
+
+fn accept_burst(sh: &Shared, conns: &mut Vec<Conn>) {
+    loop {
+        match sh.listener.accept() {
+            Ok((stream, _)) => {
+                if sh.active.load(Ordering::SeqCst) >= sh.max_connections {
+                    // admission control: a typed busy frame, then drop —
+                    // never an unbounded accept queue
+                    sh.metrics.incr(names::SERVER_BACKPRESSURE_REJECTS);
+                    refuse_busy(stream);
+                    continue;
+                }
+                if stream.set_nonblocking(true).is_err() {
+                    continue;
+                }
+                stream.set_nodelay(true).ok();
+                sh.active.fetch_add(1, Ordering::SeqCst);
+                sh.metrics.incr(names::SERVER_ACCEPTS);
+                sh.metrics
+                    .set_gauge(names::SERVER_ACTIVE_CONNS, sh.active.load(Ordering::SeqCst) as f64);
+                conns.push(Conn::new(stream));
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => break,
+            Err(_) => {
+                // transient accept failures (ECONNABORTED, fd pressure)
+                // are counted and retried next tick — the listener is
+                // never silently abandoned
+                sh.metrics.incr(names::SERVER_ACCEPT_ERRORS);
+                break;
+            }
+        }
+    }
+}
+
+/// Tell an over-limit peer it is refused without ever blocking the
+/// reactor: one best-effort nonblocking write of a tiny busy frame.
+fn refuse_busy(mut stream: TcpStream) {
+    stream.set_nonblocking(true).ok();
+    let body =
+        Response::Err { code: proto::BUSY_CODE, msg: "server at max_connections".into() }.encode();
+    let _ = stream.write(&proto::frame(&body));
+}
+
+/// Drain the socket into the connection's decode buffer, up to the
+/// fairness budget. EOF and hard errors mark the connection dead.
+fn read_input(c: &mut Conn) {
+    let mut budget = READ_BUDGET;
+    loop {
+        match c.dec.read_from(&mut c.stream) {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(n) => {
+                if n >= budget {
+                    return;
+                }
+                budget -= n;
+            }
+            Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(ref e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Serve whatever complete frames the connection has buffered, per its
+/// state machine; then (callback conns) pump pending notifications.
+fn service_conn(sh: &Shared, c: &mut Conn, clock: &RealClock) {
+    if matches!(c.state, ConnState::Callback) {
+        pump_callbacks(c);
+        return;
+    }
+    serve_frames(sh, c, clock);
+    if matches!(c.state, ConnState::Callback) {
+        // converted this round: deliver anything already queued
+        pump_callbacks(c);
+    }
+}
+
+fn serve_frames(sh: &Shared, c: &mut Conn, clock: &RealClock) {
+    let mut served = 0usize;
+    loop {
+        if c.dead || c.close_after_flush || c.paused {
+            return;
+        }
+        // pull one frame; the borrow on the decode buffer ends once the
+        // Request is decoded to an owned value
+        let frame = match c.dec.next_frame() {
+            Ok(None) => return,
+            Err(_) => {
+                // framing is lost (hostile length prefix) — nothing
+                // sensible can follow on this connection
+                c.dead = true;
+                return;
+            }
+            Ok(Some(frame)) => Request::decode(frame),
+        };
+        let req = match frame {
+            Ok(r) => r,
+            Err(e) => {
+                let resp = Response::Err { code: 71, msg: e.to_string() };
+                c.out.frame(|enc| resp.encode_into(enc));
+                continue;
+            }
+        };
+        match c.state {
+            ConnState::AwaitHello => {
+                let Request::AuthHello { key_id } = req else {
+                    c.dead = true;
+                    return;
+                };
+                let nonce = sh.authenticator.lock().unwrap().challenge(&key_id);
+                let resp = Response::Challenge { nonce };
+                c.out.frame(|enc| resp.encode_into(enc));
+                c.state = ConnState::AwaitProof;
+            }
+            ConnState::AwaitProof => {
+                let Request::AuthProof { key_id, proof } = req else {
+                    c.dead = true;
+                    return;
+                };
+                let session =
+                    sh.authenticator.lock().unwrap().verify_proof(&key_id, &proof, clock.now());
+                match session {
+                    Some(s) => {
+                        c.session = s;
+                        c.state = ConnState::Serving;
+                        let resp = Response::AuthOk { session: s };
+                        c.out.frame(|enc| resp.encode_into(enc));
+                    }
+                    None => {
+                        sh.metrics.incr(names::AUTH_FAILURES);
+                        c.out.frame(|enc| Response::AuthFail.encode_into(enc));
+                        c.close_after_flush = true;
+                        return;
+                    }
+                }
+            }
+            ConnState::Serving => {
+                if let Request::RegisterCallback { root, client_id } = &req {
+                    // this connection becomes the push channel
+                    let channel = NotifyChannel::new();
+                    sh.server.attach_channel(*client_id, channel.clone());
+                    let resp = sh.server.handle(
+                        *client_id,
+                        Request::RegisterCallback { root: root.clone(), client_id: *client_id },
+                        clock.now(),
+                    );
+                    c.out.frame(|enc| resp.encode_into(enc));
+                    if matches!(resp, Response::CallbackRegistered) {
+                        c.channel = Some(channel);
+                        c.state = ConnState::Callback;
+                    } else {
+                        // refused (e.g. standby endpoint): don't leave a
+                        // never-drained channel attached
+                        channel.disconnect();
+                    }
+                    continue;
+                }
+                served += 1;
+                if served > sh.max_inflight {
+                    // pipelining past the admission cap: typed busy code,
+                    // the frame is consumed but not dispatched
+                    sh.metrics.incr(names::SERVER_BACKPRESSURE_REJECTS);
+                    let resp = Response::Err {
+                        code: proto::BUSY_CODE,
+                        msg: "too many in-flight requests".into(),
+                    };
+                    c.out.frame(|enc| resp.encode_into(enc));
+                    continue;
+                }
+                let resp = sh.server.handle(c.session, req, clock.now());
+                c.out.frame(|enc| resp.encode_into(enc));
+                if c.out.pending() >= WRITE_HIGH_WATER {
+                    // backpressure: stop consuming this peer's requests
+                    // until its backlog drains below the low-water mark.
+                    // Other connections on this thread are unaffected.
+                    c.paused = true;
+                    return;
+                }
+            }
+            ConnState::Callback => return,
+        }
+    }
+}
+
+/// Push-mode pump: forward queued invalidations; discard anything the
+/// peer sends (push-mode peers get no replies, matching the legacy
+/// path), and fold a severed channel into connection death.
+fn pump_callbacks(c: &mut Conn) {
+    loop {
+        match c.dec.next_frame() {
+            Ok(Some(_)) => {}
+            Ok(None) => break,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+    let Some(channel) = c.channel.clone() else { return };
+    if !channel.is_connected() {
+        c.dead = true;
+        return;
+    }
+    for ev in channel.drain() {
+        c.out.frame(|enc| ev.encode_into(enc));
+    }
+}
+
+/// Nonblocking flush with partial-write resumption; accumulates codec
+/// buffer-reuse counts (flushed to metrics once a second).
+fn flush_conn(c: &mut Conn, reuses: &mut u64) {
+    if !c.out.is_empty() && c.out.flush_to(&mut c.stream).is_err() {
+        c.dead = true;
+    }
+    *reuses += c.out.take_reuses() + c.dec.take_reuses();
+}

@@ -25,11 +25,16 @@
 //!
 //! The server side is a **namespace-sharded concurrent core**
 //! (DESIGN.md §2.6): [`server::FileServer::handle`] takes `&self`, so
-//! TCP connection threads and simulated links dispatch with no global
-//! lock — requests serialize only on the shard their canonical path
-//! hashes to, and bulk block reads/digesting run outside shard locks.
-//! `cargo bench --bench scale` measures the win over the `shards = 1`
-//! ablation (`BENCH_scale.json`).
+//! callers dispatch with no global lock — requests serialize only on
+//! the shard their canonical path hashes to, and bulk block
+//! reads/digesting run outside shard locks. Over real sockets it is
+//! fronted by a **readiness-driven reactor** (DESIGN.md §2.9): a
+//! `poll(2)` thread pool, per-connection streaming codec buffers,
+//! explicit backpressure and typed-busy admission control — no thread
+//! per connection. `cargo bench --bench scale` measures both wins —
+//! sharding over the `shards = 1` ablation, and the reactor over the
+//! thread-per-connection ablation at up to 1024 live connections
+//! (`BENCH_scale.json`).
 
 pub mod auth;
 pub mod baselines;

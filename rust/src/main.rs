@@ -312,6 +312,10 @@ digest_cpu_mibps = 300
 
 [server]
 shards = 8
+reactor = true
+reactor_threads = 0
+max_connections = 1024
+max_inflight_per_conn = 32
 
 [replica]
 enabled = false

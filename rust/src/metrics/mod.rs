@@ -158,6 +158,21 @@ pub mod names {
     /// Operations that took locks on more than one namespace shard
     /// (cross-shard renames, callback-registry broadcasts).
     pub const CROSS_SHARD_OPS: &str = "server.cross_shard_ops";
+    /// TCP connections accepted by the server front-end (reactor or
+    /// legacy core).
+    pub const SERVER_ACCEPTS: &str = "server.accepts";
+    /// Transient `accept()` failures survived — counted and retried,
+    /// never a dead listener.
+    pub const SERVER_ACCEPT_ERRORS: &str = "server.accept_errors";
+    /// Gauge: currently open client connections on the TCP front-end.
+    pub const SERVER_ACTIVE_CONNS: &str = "server.active_conns";
+    /// Connections/requests refused by admission control with the typed
+    /// busy code (117): over `max_connections` or pipelining past
+    /// `max_inflight_per_conn`.
+    pub const SERVER_BACKPRESSURE_REJECTS: &str = "server.backpressure_rejects";
+    /// Per-connection codec buffers rewound and reused without
+    /// reallocation (the v2 streaming codec's no-alloc steady state).
+    pub const CODEC_BUF_REUSES: &str = "codec.buf_reuses";
     /// Gauge: applied ops the secondary trails the primary's replication
     /// log by (refreshed on every ship attempt).
     pub const REPLICA_LAG: &str = "replica.lag_ops";
@@ -218,6 +233,11 @@ pub mod names {
         (AUTH_FAILURES, "USSH authentication attempts the server rejected."),
         (SHARD_CONTENTION, "Shard-lock acquisitions that blocked behind another request."),
         (CROSS_SHARD_OPS, "Operations that locked more than one namespace shard."),
+        (SERVER_ACCEPTS, "TCP connections accepted by the server front-end."),
+        (SERVER_ACCEPT_ERRORS, "Transient accept() failures survived (listener kept alive)."),
+        (SERVER_ACTIVE_CONNS, "Gauge: currently open client connections on the TCP front-end."),
+        (SERVER_BACKPRESSURE_REJECTS, "Connections/requests refused with the typed busy code (117) by admission control."),
+        (CODEC_BUF_REUSES, "Per-connection codec buffers rewound and reused without reallocation."),
         (REPLICA_LAG, "Gauge: applied ops the secondary trails the primary's replication log by."),
         (REPLICA_FAILOVERS, "Client connects that switched to a different endpoint (failover)."),
         (REPLICA_SHIP_BATCHES, "`Replicate` frames the log shipper successfully delivered."),

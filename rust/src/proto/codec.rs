@@ -94,6 +94,203 @@ impl Encoder {
     pub fn len(&self) -> usize {
         self.buf.len()
     }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    /// Drop all encoded bytes but keep the allocation (buffer reuse).
+    pub fn clear(&mut self) {
+        self.buf.clear();
+    }
+
+    /// Overwrite 4 already-encoded bytes at `at` with a u32-LE — how
+    /// [`FrameWriter`] patches a frame's length slot after the body is
+    /// encoded, so framing needs no second buffer.
+    pub fn patch_u32(&mut self, at: usize, v: u32) {
+        self.buf[at..at + 4].copy_from_slice(&v.to_le_bytes());
+    }
+}
+
+// ---------------------------------------------------------------------
+// v2 streaming framing (DESIGN.md §2.9)
+// ---------------------------------------------------------------------
+
+/// Read granularity for [`FrameDecoder::read_from`]; also the floor for
+/// the decode buffer, so steady-state small frames never reallocate.
+const DECODER_CHUNK: usize = 64 * 1024;
+
+/// Incremental length-prefixed frame decoder over ONE reusable buffer.
+///
+/// Bytes arrive in arbitrary pieces (nonblocking socket reads, test
+/// `push`es); [`FrameDecoder::next_frame`] yields each complete frame as
+/// a borrowed slice of the buffer — no per-frame `Vec`, no blocking
+/// `read_exact`. When the buffer drains it rewinds to offset zero with
+/// its capacity retained (counted, surfaced as `codec.buf_reuses`);
+/// a partial frame still in flight is compacted to the front only when
+/// the tail runs out of room.
+#[derive(Debug)]
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+    max_frame: usize,
+    reuses: u64,
+}
+
+impl FrameDecoder {
+    pub fn new(max_frame: usize) -> Self {
+        FrameDecoder { buf: Vec::new(), start: 0, end: 0, max_frame, reuses: 0 }
+    }
+
+    /// Bytes buffered but not yet yielded as frames.
+    pub fn buffered(&self) -> usize {
+        self.end - self.start
+    }
+
+    /// Times the drained buffer was rewound with its allocation kept
+    /// (the no-allocation steady state). Resets the counter.
+    pub fn take_reuses(&mut self) -> u64 {
+        std::mem::take(&mut self.reuses)
+    }
+
+    /// Ensure at least `need` writable bytes past `end`: compact a
+    /// partial frame to the front first, grow only if still short.
+    fn make_room(&mut self, need: usize) {
+        if self.buf.len() - self.end >= need {
+            return;
+        }
+        if self.start > 0 {
+            self.buf.copy_within(self.start..self.end, 0);
+            self.end -= self.start;
+            self.start = 0;
+        }
+        if self.buf.len() - self.end < need {
+            let want = (self.end + need).max(DECODER_CHUNK);
+            self.buf.resize(want, 0);
+        }
+    }
+
+    /// Feed bytes that already arrived (tests, in-memory transports).
+    pub fn push(&mut self, data: &[u8]) {
+        self.make_room(data.len());
+        self.buf[self.end..self.end + data.len()].copy_from_slice(data);
+        self.end += data.len();
+    }
+
+    /// One `read` into the spare tail of the buffer. `Ok(0)` is EOF;
+    /// `WouldBlock` passes through untouched (the reactor's signal to
+    /// move on to the next connection).
+    pub fn read_from<R: std::io::Read>(&mut self, r: &mut R) -> std::io::Result<usize> {
+        self.make_room(DECODER_CHUNK);
+        let n = r.read(&mut self.buf[self.end..])?;
+        self.end += n;
+        Ok(n)
+    }
+
+    /// The next complete frame, if one is fully buffered. `Ok(None)`
+    /// means "need more bytes" — never an error, however the stream was
+    /// torn so far. A length prefix above the cap is unrecoverable
+    /// (framing is lost) and errors.
+    pub fn next_frame(&mut self) -> Result<Option<&[u8]>, ProtoError> {
+        if self.start == self.end && self.start != 0 {
+            // fully drained: rewind so the next bytes land at the front
+            // of the SAME allocation
+            self.start = 0;
+            self.end = 0;
+            self.reuses += 1;
+        }
+        if self.buffered() < 4 {
+            return Ok(None);
+        }
+        let header: [u8; 4] = self.buf[self.start..self.start + 4].try_into().unwrap();
+        let len = u32::from_le_bytes(header) as usize;
+        if len > self.max_frame {
+            return Err(err(&format!("frame length {len} exceeds cap {}", self.max_frame)));
+        }
+        if self.buffered() < 4 + len {
+            return Ok(None);
+        }
+        let at = self.start + 4;
+        self.start += 4 + len;
+        Ok(Some(&self.buf[at..at + len]))
+    }
+}
+
+/// Streaming frame writer over one reusable per-connection buffer, with
+/// partial-write resumption.
+///
+/// [`FrameWriter::frame`] reserves the u32-LE length slot, lets the
+/// caller encode the body straight into the buffer (payload bytes are
+/// copied exactly once, from their owner into this buffer), then patches
+/// the slot. [`FrameWriter::flush_to`] pushes as much as the socket will
+/// take and remembers its offset, so a slow reader costs buffer space,
+/// never a blocked thread.
+#[derive(Debug, Default)]
+pub struct FrameWriter {
+    enc: Encoder,
+    start: usize,
+    reuses: u64,
+}
+
+impl FrameWriter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Bytes encoded but not yet accepted by the socket.
+    pub fn pending(&self) -> usize {
+        self.enc.len() - self.start
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending() == 0
+    }
+
+    /// Times the drained buffer was rewound with its allocation kept.
+    /// Resets the counter.
+    pub fn take_reuses(&mut self) -> u64 {
+        std::mem::take(&mut self.reuses)
+    }
+
+    /// Append one length-prefixed frame; `fill` encodes the body.
+    pub fn frame(&mut self, fill: impl FnOnce(&mut Encoder)) {
+        let slot = self.enc.len();
+        self.enc.u32(0);
+        fill(&mut self.enc);
+        let body = self.enc.len() - slot - 4;
+        self.enc.patch_u32(slot, body as u32);
+    }
+
+    /// Push pending bytes until done or the peer's window fills.
+    /// `Ok(true)`: everything flushed, buffer rewound for reuse.
+    /// `Ok(false)`: `WouldBlock` — call again when the fd is writable.
+    pub fn flush_to(&mut self, w: &mut impl std::io::Write) -> std::io::Result<bool> {
+        while self.start < self.enc.len() {
+            match w.write(&self.enc.as_slice()[self.start..]) {
+                Ok(0) => {
+                    return Err(std::io::Error::new(
+                        std::io::ErrorKind::WriteZero,
+                        "socket accepted zero bytes",
+                    ))
+                }
+                Ok(n) => self.start += n,
+                Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return Ok(false),
+                Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+                Err(e) => return Err(e),
+            }
+        }
+        if self.start > 0 {
+            self.enc.clear();
+            self.start = 0;
+            self.reuses += 1;
+        }
+        Ok(true)
+    }
 }
 
 /// Cursor-based decoder.
@@ -269,5 +466,145 @@ mod tests {
         e.varint(u64::MAX); // absurd length claim
         let b = e.into_bytes();
         assert!(Decoder::new(&b).bytes().is_err());
+    }
+
+    fn framed(body: &[u8]) -> Vec<u8> {
+        let mut out = (body.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(body);
+        out
+    }
+
+    #[test]
+    fn frame_decoder_single_and_pipelined() {
+        let mut dec = FrameDecoder::new(1 << 20);
+        let mut wire = framed(b"alpha");
+        wire.extend_from_slice(&framed(b""));
+        wire.extend_from_slice(&framed(b"gamma"));
+        dec.push(&wire);
+        assert_eq!(dec.next_frame().unwrap().unwrap(), b"alpha");
+        assert_eq!(dec.next_frame().unwrap().unwrap(), b"");
+        assert_eq!(dec.next_frame().unwrap().unwrap(), b"gamma");
+        assert_eq!(dec.next_frame().unwrap(), None);
+        assert_eq!(dec.buffered(), 0);
+    }
+
+    #[test]
+    fn frame_decoder_byte_at_a_time() {
+        let mut dec = FrameDecoder::new(1 << 20);
+        let wire = framed(b"slow reader");
+        for (i, b) in wire.iter().enumerate() {
+            dec.push(&[*b]);
+            let got = dec.next_frame().unwrap();
+            if i + 1 < wire.len() {
+                assert!(got.is_none(), "frame complete early at byte {i}");
+            } else {
+                assert_eq!(got.unwrap(), b"slow reader");
+            }
+        }
+    }
+
+    #[test]
+    fn frame_decoder_reuses_buffer_when_drained() {
+        let mut dec = FrameDecoder::new(1 << 20);
+        for round in 0..10u8 {
+            dec.push(&framed(&[round; 100]));
+            assert_eq!(dec.next_frame().unwrap().unwrap(), &[round; 100][..]);
+            assert_eq!(dec.next_frame().unwrap(), None);
+        }
+        // 10 drain/rewind cycles, minus the first (buffer starts empty
+        // at offset zero, so round 1's rewind is the first counted)
+        assert!(dec.take_reuses() >= 9, "drained buffer must be reused");
+        assert_eq!(dec.take_reuses(), 0, "take_reuses resets");
+    }
+
+    #[test]
+    fn frame_decoder_rejects_oversize_length() {
+        let mut dec = FrameDecoder::new(1024);
+        dec.push(&(4096u32).to_le_bytes());
+        assert!(dec.next_frame().is_err());
+    }
+
+    #[test]
+    fn frame_decoder_compacts_partial_frames() {
+        // tiny cap forces compaction: after consuming one frame, the
+        // next partial frame sits mid-buffer until make_room slides it
+        let mut dec = FrameDecoder::new(1 << 20);
+        let big = vec![7u8; 200 * 1024]; // bigger than DECODER_CHUNK
+        let wire = framed(&big);
+        dec.push(&framed(b"first"));
+        dec.push(&wire[..10]);
+        assert_eq!(dec.next_frame().unwrap().unwrap(), b"first");
+        assert_eq!(dec.next_frame().unwrap(), None);
+        dec.push(&wire[10..]);
+        assert_eq!(dec.next_frame().unwrap().unwrap(), &big[..]);
+        assert_eq!(dec.next_frame().unwrap(), None);
+    }
+
+    /// A writer that accepts a few bytes per call, then `WouldBlock`s
+    /// until re-armed — a slow WAN reader in miniature.
+    struct Throttle {
+        accepted: Vec<u8>,
+        window: usize,
+    }
+
+    impl std::io::Write for Throttle {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            if self.window == 0 {
+                return Err(std::io::Error::new(std::io::ErrorKind::WouldBlock, "full"));
+            }
+            let n = buf.len().min(self.window);
+            self.accepted.extend_from_slice(&buf[..n]);
+            self.window = 0;
+            Ok(n)
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn frame_writer_resumes_partial_writes() {
+        let mut w = FrameWriter::new();
+        w.frame(|e| {
+            e.bytes(b"payload one");
+        });
+        w.frame(|e| {
+            e.bytes(b"payload two");
+        });
+        let total = w.pending();
+        let mut sink = Throttle { accepted: Vec::new(), window: 0 };
+        let mut rounds = 0;
+        loop {
+            sink.window = 5;
+            if w.flush_to(&mut sink).unwrap() {
+                break;
+            }
+            rounds += 1;
+            assert!(rounds < 1000, "flush must make progress");
+        }
+        assert!(rounds > 1, "throttle must have split the write");
+        assert!(w.is_empty());
+        assert_eq!(w.take_reuses(), 1);
+        assert_eq!(sink.accepted.len(), total);
+        // the accepted stream reassembles into the original frames
+        let mut dec = FrameDecoder::new(1 << 20);
+        dec.push(&sink.accepted);
+        let f1 = dec.next_frame().unwrap().unwrap().to_vec();
+        assert_eq!(Decoder::new(&f1).bytes().unwrap(), b"payload one");
+        let f2 = dec.next_frame().unwrap().unwrap().to_vec();
+        assert_eq!(Decoder::new(&f2).bytes().unwrap(), b"payload two");
+        assert_eq!(dec.next_frame().unwrap(), None);
+    }
+
+    #[test]
+    fn frame_writer_length_slot_patched() {
+        let mut w = FrameWriter::new();
+        w.frame(|e| {
+            e.u8(1).u64(42);
+        });
+        let mut sink = Vec::new();
+        assert!(w.flush_to(&mut sink).unwrap());
+        assert_eq!(&sink[..4], &9u32.to_le_bytes());
+        assert_eq!(sink.len(), 13);
     }
 }

@@ -498,6 +498,14 @@ pub enum Request {
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Encoder::new();
+        self.encode_into(&mut e);
+        e.into_bytes()
+    }
+
+    /// Encode into an existing [`Encoder`] — the streaming transport
+    /// ([`crate::proto::FrameWriter`]) appends straight into a reused
+    /// per-connection buffer, so payload bytes are copied exactly once.
+    pub fn encode_into(&self, e: &mut Encoder) {
         match self {
             Request::AuthHello { key_id } => {
                 e.u8(0).str(key_id);
@@ -522,7 +530,7 @@ impl Request {
             }
             Request::Apply { seq, op } => {
                 e.u8(5).u64(*seq);
-                op.encode_into(&mut e);
+                op.encode_into(e);
             }
             Request::RegisterCallback { root, client_id } => {
                 e.u8(6).str(root).u64(*client_id);
@@ -542,7 +550,7 @@ impl Request {
             Request::Compound { ops } => {
                 e.u8(13).varint(ops.len() as u64);
                 for op in ops {
-                    op.encode_into(&mut e);
+                    op.encode_into(e);
                 }
             }
             Request::Replicate { from, frames } => {
@@ -564,7 +572,6 @@ impl Request {
                 e.u8(18);
             }
         }
-        e.into_bytes()
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
@@ -690,6 +697,15 @@ pub enum Response {
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Encoder::new();
+        self.encode_into(&mut e);
+        e.into_bytes()
+    }
+
+    /// Encode into an existing [`Encoder`] — the streaming transport
+    /// ([`crate::proto::FrameWriter`]) appends straight into a reused
+    /// per-connection buffer, so block/chunk payload bytes are copied
+    /// exactly once (out of the server's store into the socket buffer).
+    pub fn encode_into(&self, e: &mut Encoder) {
         match self {
             Response::Challenge { nonce } => {
                 e.u8(0).bytes(nonce);
@@ -702,13 +718,13 @@ impl Response {
             }
             Response::Attr { attr } => {
                 e.u8(3);
-                attr.encode(&mut e);
+                attr.encode(e);
             }
             Response::Dir { entries } => {
                 e.u8(4).varint(entries.len() as u64);
                 for ent in entries {
                     e.str(&ent.name);
-                    ent.attr.encode(&mut e);
+                    ent.attr.encode(e);
                 }
             }
             Response::File { image } => {
@@ -764,7 +780,7 @@ impl Response {
             }
             Response::ReplicaNeed { digests } => {
                 e.u8(19);
-                encode_digest_list(&mut e, digests);
+                encode_digest_list(e, digests);
             }
             Response::ChunkAck { stored } => {
                 e.u8(20).u64(*stored);
@@ -773,7 +789,6 @@ impl Response {
                 e.u8(21).u64(*id);
             }
         }
-        e.into_bytes()
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {
@@ -872,6 +887,12 @@ pub enum NotifyEvent {
 impl NotifyEvent {
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Encoder::new();
+        self.encode_into(&mut e);
+        e.into_bytes()
+    }
+
+    /// Encode into an existing [`Encoder`] (reactor callback pump).
+    pub fn encode_into(&self, e: &mut Encoder) {
         match self {
             NotifyEvent::Invalidate { path, new_version } => {
                 e.u8(0).str(path).u64(*new_version);
@@ -883,7 +904,6 @@ impl NotifyEvent {
                 e.u8(2);
             }
         }
-        e.into_bytes()
     }
 
     pub fn decode(buf: &[u8]) -> Result<Self, ProtoError> {

@@ -10,7 +10,7 @@
 mod codec;
 mod messages;
 
-pub use codec::{Decoder, Encoder, ProtoError};
+pub use codec::{Decoder, Encoder, FrameDecoder, FrameWriter, ProtoError};
 pub use messages::{
     BlockExtent, CompoundOp, DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, RangeImage,
     ReplPayload, ReplRecord, Request, Response, WireAttr,
@@ -26,6 +26,13 @@ pub fn frame(body: &[u8]) -> Vec<u8> {
 
 /// Maximum accepted frame (64 MiB + slack): bounds a malicious peer.
 pub const MAX_FRAME: usize = 64 * 1024 * 1024 + 4096;
+
+/// [`Response::Err`] code for "over admission limits, retry later"
+/// (DESIGN.md §2.9): the reactor's typed busy signal for refused
+/// connections and excess pipelined requests. Distinct from 111 (server
+/// down) and 112 (wrong endpoint): the endpoint is right and healthy,
+/// the client should simply back off.
+pub const BUSY_CODE: u32 = 117;
 
 #[cfg(test)]
 mod tests {

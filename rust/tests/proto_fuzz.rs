@@ -15,8 +15,8 @@
 
 use xufs::chunkstore::Digest;
 use xufs::proto::{
-    BlockExtent, CompoundOp, DirEntry, FileImage, LockKind, MetaOp, NotifyEvent, ReplPayload,
-    ReplRecord, Request, Response, WireAttr,
+    BlockExtent, CompoundOp, DirEntry, FileImage, FrameDecoder, FrameWriter, LockKind, MetaOp,
+    NotifyEvent, ReplPayload, ReplRecord, Request, Response, WireAttr, MAX_FRAME,
 };
 use xufs::replica::{decode_frames, frame_records};
 use xufs::util::Rng;
@@ -360,6 +360,90 @@ fn random_corruptions_never_panic() {
         b[at] ^= (rng.below(255) + 1) as u8;
         if let Ok(op) = MetaOp::decode(&b) {
             assert_eq!(MetaOp::decode(&op.encode()).unwrap(), op);
+        }
+    }
+}
+
+/// The §2.9 streaming decoder must be arrival-pattern-independent: a
+/// frame sequence delivered in arbitrary seeded splits (1–7-byte pieces,
+/// the worst case a WAN path can produce) decodes to exactly the frames a
+/// one-shot delivery would, with every frame byte-identical.
+#[test]
+fn streaming_decoder_chunked_arrival_equals_one_shot() {
+    let mut rng = Rng::new(0xF422_0009);
+    for _ in 0..CASES {
+        let msgs: Vec<Request> = (0..rng.below(12) + 1).map(|_| rand_request(&mut rng)).collect();
+        // the sender side: every frame encoded through the reused writer
+        // buffer, drained into one contiguous byte stream
+        let mut w = FrameWriter::new();
+        let mut stream: Vec<u8> = Vec::new();
+        for m in &msgs {
+            w.frame(|e| m.encode_into(e));
+        }
+        assert!(w.flush_to(&mut stream).unwrap(), "Vec sink must drain fully");
+        // the receiver side: the same stream pushed in random small pieces
+        let mut dec = FrameDecoder::new(MAX_FRAME);
+        let mut got: Vec<Request> = Vec::new();
+        let mut at = 0usize;
+        while at < stream.len() {
+            let n = (rng.below(7) + 1) as usize;
+            let end = (at + n).min(stream.len());
+            dec.push(&stream[at..end]);
+            at = end;
+            while let Some(frame) = dec.next_frame().expect("chunked arrival broke framing") {
+                got.push(Request::decode(frame).expect("frame bytes differ from one-shot"));
+            }
+        }
+        assert_eq!(got, msgs, "chunked arrival decoded a different sequence");
+        assert_eq!(dec.buffered(), 0, "stream fully consumed");
+    }
+}
+
+/// Torn and tampered streams must never panic the streaming decoder: a
+/// truncated stream yields exactly the complete frames before the tear
+/// then waits for more bytes; a flipped byte either surfaces as a decode
+/// error (a length prefix above the cap, a payload that fails
+/// `Request::decode`) or decodes to a different valid message — the
+/// reactor maps the error to a typed code-71 reply, it never crashes.
+#[test]
+fn streaming_decoder_torn_and_tampered_never_panic() {
+    let mut rng = Rng::new(0xF422_000A);
+    for _ in 0..CASES {
+        let msgs: Vec<Request> = (0..rng.below(6) + 1).map(|_| rand_request(&mut rng)).collect();
+        let mut w = FrameWriter::new();
+        let mut stream: Vec<u8> = Vec::new();
+        for m in &msgs {
+            w.frame(|e| m.encode_into(e));
+        }
+        assert!(w.flush_to(&mut stream).unwrap());
+        // torn: any strict prefix yields only whole frames, then None
+        let cut = rng.below(stream.len() as u64) as usize;
+        let mut dec = FrameDecoder::new(MAX_FRAME);
+        dec.push(&stream[..cut]);
+        let mut whole = 0usize;
+        while let Some(frame) = dec.next_frame().expect("a torn stream is not a framing error") {
+            Request::decode(frame).expect("complete frames before the tear stay intact");
+            whole += 1;
+        }
+        assert!(whole <= msgs.len());
+        // tampered: one flipped byte anywhere — errors allowed, panics not
+        let mut bad = stream.clone();
+        let at = rng.below(bad.len() as u64) as usize;
+        bad[at] ^= (rng.below(255) + 1) as u8;
+        let mut dec = FrameDecoder::new(MAX_FRAME);
+        dec.push(&bad);
+        loop {
+            match dec.next_frame() {
+                Ok(Some(frame)) => {
+                    // may or may not decode; must not panic, and whatever
+                    // decodes re-encodes canonically
+                    if let Ok(r) = Request::decode(frame) {
+                        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+                    }
+                }
+                Ok(None) => break,
+                Err(_) => break, // oversized length prefix: framing lost, refused
+            }
         }
     }
 }

@@ -6,13 +6,13 @@ use std::sync::{Arc, Mutex};
 
 use xufs::auth::{self, Authenticator, KeyPair};
 use xufs::client::{OpenFlags, ServerLink, Vfs, XufsClient};
-use xufs::config::XufsConfig;
+use xufs::config::{ServerConfig, XufsConfig};
 use xufs::coordinator::net::{TcpLink, TcpServer};
 use xufs::homefs::FileStore;
 use xufs::metrics::Metrics;
-use xufs::proto::{Request, Response};
+use xufs::proto::{FrameDecoder, FrameWriter, Request, Response, BUSY_CODE, MAX_FRAME};
 use xufs::runtime::DigestEngine;
-use xufs::server::FileServer;
+use xufs::server::{FileServer, Role};
 use xufs::simnet::{RealClock, VirtualTime};
 use xufs::util::Rng;
 use xufs::vdisk::DiskModel;
@@ -27,6 +27,14 @@ struct Rig {
 }
 
 fn rig(files: &[(&str, Vec<u8>)]) -> Rig {
+    rig_with(files, None)
+}
+
+/// `scfg: Some(..)` pins an explicit `[server]` config through
+/// `TcpServer::spawn_with` (no env pin); `None` uses `TcpServer::spawn`,
+/// which serves with the reactor core by default and honors the one-release
+/// `XUFS_TCP_LEGACY=1` escape hatch.
+fn rig_with(files: &[(&str, Vec<u8>)], scfg: Option<&ServerConfig>) -> Rig {
     let metrics = Metrics::new();
     let engine = Arc::new(DigestEngine::native(metrics.clone()));
     let mut rng = Rng::new(1234);
@@ -49,8 +57,49 @@ fn rig(files: &[(&str, Vec<u8>)]) -> Rig {
         cfg.chunkstore.clone(),
     ));
     let auth = Arc::new(Mutex::new(Authenticator::new(pair.clone(), 77)));
-    let tcp = TcpServer::spawn(server.clone(), auth, metrics.clone()).expect("bind");
+    let tcp = match scfg {
+        Some(s) => TcpServer::spawn_with(server.clone(), auth, metrics.clone(), s).expect("bind"),
+        None => TcpServer::spawn(server.clone(), auth, metrics.clone()).expect("bind"),
+    };
     Rig { tcp, server, pair, cfg, engine, metrics }
+}
+
+/// Read framed responses off a raw blocking socket.
+fn next_response(stream: &mut std::net::TcpStream, dec: &mut FrameDecoder) -> Response {
+    loop {
+        if let Some(frame) = dec.next_frame().expect("framing") {
+            return Response::decode(frame).expect("response decode");
+        }
+        let n = dec.read_from(stream).expect("read from server");
+        assert!(n > 0, "server closed the connection");
+    }
+}
+
+/// A bare authenticated connection driven through the public codec — the
+/// tests' stand-in for a hand-rolled (possibly misbehaving) client.
+fn raw_handshake(
+    addr: std::net::SocketAddr,
+    pair: &KeyPair,
+) -> (std::net::TcpStream, FrameDecoder, FrameWriter) {
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    stream.set_nodelay(true).ok();
+    stream.set_read_timeout(Some(std::time::Duration::from_secs(10))).ok();
+    let mut dec = FrameDecoder::new(MAX_FRAME);
+    let mut w = FrameWriter::new();
+    w.frame(|e| Request::AuthHello { key_id: pair.key_id.clone() }.encode_into(e));
+    assert!(w.flush_to(&mut stream).unwrap());
+    let nonce = match next_response(&mut stream, &mut dec) {
+        Response::Challenge { nonce } => nonce,
+        r => panic!("expected challenge, got {r:?}"),
+    };
+    let proof = auth::prove(&pair.phrase, &pair.key_id, &nonce);
+    w.frame(|e| Request::AuthProof { key_id: pair.key_id.clone(), proof }.encode_into(e));
+    assert!(w.flush_to(&mut stream).unwrap());
+    match next_response(&mut stream, &mut dec) {
+        Response::AuthOk { .. } => {}
+        r => panic!("expected auth ok, got {r:?}"),
+    }
+    (stream, dec, w)
 }
 
 impl Rig {
@@ -229,6 +278,148 @@ fn torn_striped_fetch_detected_via_version() {
         VirtualTime::ZERO,
     );
     assert!(matches!(resp, Response::Err { code: 116, .. }), "{resp:?}");
+}
+
+/// The thread-per-connection ablation (one release of life left behind
+/// `reactor = false` / `XUFS_TCP_LEGACY=1`) must keep serving the full
+/// stack while it exists.
+#[test]
+fn legacy_core_ablation_still_serves() {
+    let mut scfg = XufsConfig::default().server;
+    scfg.reactor = false;
+    let r = rig_with(&[("/home/u/doc.txt", b"hello legacy".to_vec())], Some(&scfg));
+    let mut c = r.client(1);
+    assert_eq!(c.scan_file("/home/u/doc.txt", 4096).unwrap(), 12);
+    c.write_file("/home/u/from-legacy.txt", b"still alive", 4096).unwrap();
+    assert!(r.server.home().exists("/home/u/from-legacy.txt"));
+    assert!(r.metrics.counter(xufs::metrics::names::SERVER_ACCEPTS) > 0);
+}
+
+/// `TcpLink` endpoint rotation (SimLink parity, DESIGN.md §2.7): a
+/// standby endpoint's code-112 registration refusal rotates the connect
+/// to the primary, and a later demotion severs the control socket so the
+/// caller's reconnect rotates again — all over real sockets.
+#[test]
+fn endpoint_rotation_on_standby_and_demotion() {
+    // both rigs derive the same deterministic key pair, so one credential
+    // is valid at either endpoint (as with a real replicated deployment)
+    let ra = rig(&[]);
+    let rb = rig(&[]);
+    rb.server.set_role(Role::Secondary);
+    let metrics = Metrics::new();
+    // endpoint list leads with the standby: the connect must rotate past
+    let link = TcpLink::connect_endpoints(
+        vec![rb.tcp.addr, ra.tcp.addr],
+        ra.pair.clone(),
+        ra.cfg.clone(),
+        7,
+        "/home/u",
+        metrics.clone(),
+    )
+    .expect("rotation past the standby endpoint");
+    assert_eq!(link.active_endpoint(), ra.tcp.addr);
+    assert_eq!(metrics.counter(xufs::metrics::names::REPLICA_FAILOVERS), 1);
+    let mut c = XufsClient::new(
+        link,
+        ra.cfg.clone(),
+        ra.engine.clone(),
+        Arc::new(RealClock::new()),
+        "/home/u",
+        metrics.clone(),
+    );
+    c.write_file("/home/u/on-a.txt", b"primary", 4096).unwrap();
+    assert!(ra.server.home().exists("/home/u/on-a.txt"));
+    // failover: A retires, B is promoted. A's code-112 reply severs the
+    // control connection; the explicit reconnect rotates to B.
+    rb.server.set_role(Role::Primary);
+    ra.server.set_role(Role::Retired);
+    assert!(c.write_file("/home/u/stranded.txt", b"x", 4096).is_err());
+    c.link_mut().reconnect().expect("reconnect rotates to the new primary");
+    assert_eq!(c.link_mut().active_endpoint(), rb.tcp.addr);
+    assert!(metrics.counter(xufs::metrics::names::REPLICA_FAILOVERS) >= 2);
+    c.write_file("/home/u/on-b.txt", b"new primary", 4096).unwrap();
+    assert!(rb.server.home().exists("/home/u/on-b.txt"));
+}
+
+/// Directed stalled-client test (DESIGN.md §2.9 backpressure): a peer
+/// that pipelines more response bytes than the write high-water mark and
+/// refuses to read gets paused — it throttles only itself, other clients
+/// stay fast — and once it finally drains, every queued response arrives
+/// bit-exact (partial-write resumption never tears a frame).
+#[test]
+fn stalled_reader_throttles_only_itself_then_drains_intact() {
+    let mut rng = Rng::new(9);
+    let mut big = vec![0u8; 8 << 20];
+    rng.fill_bytes(&mut big);
+    let r = rig(&[("/home/u/big.bin", big.clone())]);
+    let (mut s, mut dec, mut w) = raw_handshake(r.tcp.addr, &r.pair);
+    w.frame(|e| Request::FetchMeta { path: "/home/u/big.bin".into() }.encode_into(e));
+    assert!(w.flush_to(&mut s).unwrap());
+    let version = match next_response(&mut s, &mut dec) {
+        Response::FileMeta { version, .. } => version,
+        resp => panic!("expected meta, got {resp:?}"),
+    };
+    // 24 x 384 KiB = 9 MiB of queued responses, past the 4 MiB high-water
+    // mark (and under the 32-request in-flight cap)
+    const RANGES: u64 = 24;
+    const LEN: u64 = 384 * 1024;
+    for i in 0..RANGES {
+        let offset = (i % 21) * LEN; // stay inside the 8 MiB file
+        w.frame(|e| {
+            Request::FetchRange { path: "/home/u/big.bin".into(), offset, len: LEN, expect_version: version }
+                .encode_into(e)
+        });
+    }
+    assert!(w.flush_to(&mut s).unwrap());
+    // stall: don't read. Give the server time to hit the high-water mark,
+    // then prove other clients are unaffected while this peer is paused.
+    std::thread::sleep(std::time::Duration::from_millis(300));
+    let mut b = r.client(2);
+    for i in 0..10 {
+        b.write_file(&format!("/home/u/fast{i}.txt"), b"not throttled", 4096).unwrap();
+    }
+    // now drain everything: all 24 responses, every block bit-exact
+    let bb = 64 * 1024usize;
+    let mut got = 0u64;
+    let mut bytes = 0u64;
+    while got < RANGES {
+        match next_response(&mut s, &mut dec) {
+            Response::FileBlocks { extents, .. } => {
+                assert!(!extents.is_empty());
+                for e in &extents {
+                    let at = e.index as usize * bb;
+                    assert_eq!(&e.data[..], &big[at..at + e.data.len()], "block {} torn", e.index);
+                    bytes += e.data.len() as u64;
+                }
+                got += 1;
+            }
+            resp => panic!("expected blocks, got {resp:?}"),
+        }
+    }
+    assert_eq!(bytes, RANGES * LEN, "every queued byte must arrive");
+}
+
+/// Admission control: past `[server] max_connections` a new peer gets the
+/// typed busy frame ([`xufs::proto::BUSY_CODE`]) and is dropped — and a
+/// freed slot is admitted again.
+#[test]
+fn admission_control_refuses_with_busy_code() {
+    let mut scfg = XufsConfig::default().server;
+    scfg.max_connections = 2;
+    let r = rig_with(&[], Some(&scfg));
+    let keep1 = raw_handshake(r.tcp.addr, &r.pair);
+    let _keep2 = raw_handshake(r.tcp.addr, &r.pair);
+    // third connection: refused before any handshake, with the busy frame
+    let mut s3 = std::net::TcpStream::connect(r.tcp.addr).expect("connect");
+    s3.set_read_timeout(Some(std::time::Duration::from_secs(10))).ok();
+    let mut dec = FrameDecoder::new(MAX_FRAME);
+    let resp = next_response(&mut s3, &mut dec);
+    assert!(matches!(resp, Response::Err { code: BUSY_CODE, .. }), "{resp:?}");
+    assert!(r.metrics.counter(xufs::metrics::names::SERVER_BACKPRESSURE_REJECTS) >= 1);
+    // a disconnect frees the slot; the next connect is admitted
+    drop(keep1);
+    std::thread::sleep(std::time::Duration::from_millis(200));
+    let _readmitted = raw_handshake(r.tcp.addr, &r.pair);
 }
 
 #[test]
