@@ -901,6 +901,95 @@ impl CacheSpace {
         cache
     }
 
+    /// Post-recover integrity pass (DESIGN.md §2.10): re-digest every
+    /// present CLEAN block of every recovered entry against the entry's
+    /// persisted digest vector, demoting mismatches to Absent (counted
+    /// in `cache.recover_demoted`) — recovery must not trust bytes that
+    /// rotted on the cache disk while the client was down; a demoted
+    /// block just re-faults from home on its next read. Dirty blocks
+    /// are exempt: they are the only copy of unshipped local writes,
+    /// and dropping them would turn detection into data loss (their rot
+    /// surfaces as a digest mismatch at the server instead). Returns
+    /// the number of blocks demoted.
+    ///
+    /// Call AFTER [`Self::set_paging`]: digests are per stripe block,
+    /// so the pass must use the configured block size, not the default
+    /// the raw recovery walk assumes.
+    pub fn verify_recovered(
+        &mut self,
+        engine: &crate::runtime::DigestEngine,
+        now: VirtualTime,
+        metrics: &Metrics,
+    ) -> u64 {
+        let bb = self.block_bytes.max(1);
+        let mut demoted_blocks = 0u64;
+        let paths: Vec<String> = self.entries.keys().cloned().collect();
+        let mut emptied: Vec<String> = Vec::new();
+        let mut touched: Vec<String> = Vec::new();
+        for p in paths {
+            if self.is_localized(&p) {
+                // localized content has no home version to re-fault
+                // from; nothing safe to demote to
+                continue;
+            }
+            let (size, nblocks, digests) = match self.entries.get(&p) {
+                Some(e) if e.attr.kind == NodeKind::File && !e.digests.is_empty() => {
+                    (e.attr.size, e.attr.size.div_ceil(bb) as usize, e.digests.clone())
+                }
+                _ => continue,
+            };
+            let mut bad: Vec<usize> = Vec::new();
+            for i in 0..nblocks {
+                let (present, dirty) = match self.entries.get(&p) {
+                    Some(e) => (e.residency.is_present(i), e.residency.is_dirty(i)),
+                    None => break,
+                };
+                if !present || dirty {
+                    continue;
+                }
+                let len = Residency::block_len(i, size, bb) as usize;
+                if len == 0 {
+                    continue;
+                }
+                let ok = match self.fs.read_at(&p, i as u64 * bb, len) {
+                    Ok(data) => {
+                        engine.digests(&data, bb as usize).first().copied()
+                            == digests.get(i).copied()
+                    }
+                    // an unreadable block cannot be trusted either
+                    Err(_) => false,
+                };
+                if !ok {
+                    bad.push(i);
+                }
+            }
+            if bad.is_empty() {
+                continue;
+            }
+            let Some(e) = self.entries.get_mut(&p) else { continue };
+            for i in bad {
+                e.residency.evict(i);
+                demoted_blocks += 1;
+                metrics.incr(names::CACHE_RECOVER_DEMOTED);
+            }
+            if e.residency.present_blocks() == 0 && e.state == EntryState::Clean {
+                // nothing trustworthy left: same demotion the budget
+                // evictor applies to fully-evicted clean entries
+                e.state = EntryState::AttrOnly;
+                e.digests.clear();
+                emptied.push(p.clone());
+            }
+            touched.push(p);
+        }
+        for p in emptied {
+            let _ = self.fs.truncate(&p, 0, now);
+        }
+        for p in touched {
+            let _ = self.sync_attr_file(&p, now);
+        }
+        demoted_blocks
+    }
+
     /// Readdir served from cache, hiding `.xufs.*` metadata.
     pub fn readdir(&self, dir: &str) -> Result<Vec<(String, WireAttr)>, FsError> {
         let dir_n = vpath::normalize(dir);

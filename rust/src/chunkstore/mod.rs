@@ -23,6 +23,16 @@
 //! replication record, staged replica push) owns exactly one refcount,
 //! so "GC never collects a referenced chunk" is an arithmetic property,
 //! not a scan.
+//!
+//! **Integrity plane (DESIGN.md §2.10).** Stored bytes are NOT trusted:
+//! every server-facing read goes through [`ChunkStore::get_verified`],
+//! which recomputes the digest and refuses bytes that no longer match it
+//! (bit rot, torn sectors) — never wrong data. Detected-corrupt chunks
+//! are *quarantined* by the scrub sweep ([`ChunkStore::scrub_slice`],
+//! driven on the server's op cadence): the rotted bytes stay resident
+//! for forensics but are never served again, until
+//! [`ChunkStore::repair`] re-installs a digest-verified replacement
+//! fetched from a replica.
 
 use std::collections::{HashMap, HashSet};
 
@@ -47,6 +57,17 @@ pub fn digest_hex(d: &Digest) -> String {
     d.iter().take(8).map(|b| format!("{b:02x}")).collect()
 }
 
+/// Why a verified chunk read failed (mapped to typed [`crate::homefs::FsError`]s
+/// by the namespace layer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkGetError {
+    /// The digest is not resident at all.
+    Missing,
+    /// The stored bytes no longer match their digest (or the chunk is
+    /// already quarantined): refused, never served.
+    Corrupt,
+}
+
 #[derive(Debug, Clone)]
 struct Chunk {
     bytes: Vec<u8>,
@@ -63,12 +84,17 @@ pub struct ChunkStore {
     /// Digests whose refcount hit zero: bytes retained until [`Self::gc`]
     /// sweeps them, so an interleaved `put`/`incref` resurrects for free.
     dead: HashSet<Digest>,
+    /// Digests detected corrupt (stored bytes no longer match): bytes
+    /// retained for forensics, never served, awaiting [`Self::repair`].
+    quarantined: HashSet<Digest>,
     /// Physical bytes currently held (including dead, until swept).
     stored: u64,
     dedup_hits: u64,
     dedup_saved: u64,
     gc_chunks: u64,
     gc_bytes: u64,
+    scrub_errors: u64,
+    repaired: u64,
     metrics: Metrics,
 }
 
@@ -104,10 +130,129 @@ impl ChunkStore {
         d
     }
 
-    /// Chunk bytes, if resident (dead-but-unswept chunks still resolve —
-    /// a reader holding a stale manifest never sees a torn read).
-    pub fn get(&self, d: &Digest) -> Option<&[u8]> {
+    /// UNCHECKED chunk bytes, if resident (dead-but-unswept chunks still
+    /// resolve — a reader holding a stale manifest never sees a torn
+    /// read). Crate-internal and test-only: every server-facing read
+    /// must go through [`Self::get_verified`] instead.
+    pub(crate) fn get(&self, d: &Digest) -> Option<&[u8]> {
         self.chunks.get(d).map(|c| c.bytes.as_slice())
+    }
+
+    /// VERIFIED chunk bytes: recompute the digest on the way out and
+    /// refuse a mismatch (bit rot between the original `put` and now).
+    /// Quarantined chunks refuse without rehashing. This is the read the
+    /// server, the replica fill path, and the scrubber all use — corrupt
+    /// bytes are never served, only detected.
+    pub fn get_verified(&self, d: &Digest) -> Result<&[u8], ChunkGetError> {
+        if self.quarantined.contains(d) {
+            return Err(ChunkGetError::Corrupt);
+        }
+        match self.chunks.get(d) {
+            None => Err(ChunkGetError::Missing),
+            Some(c) if chunk_digest(&c.bytes) == *d => Ok(c.bytes.as_slice()),
+            Some(_) => Err(ChunkGetError::Corrupt),
+        }
+    }
+
+    /// Scrub a bounded slice of the chunk table: verify up to `limit`
+    /// chunks starting at `cursor` (wrapping; the digests are walked in
+    /// sorted order so the sweep is deterministic), quarantining every
+    /// mismatch. Returns the next cursor and the digests newly
+    /// quarantined this slice. Repeated slices amortize a full-store
+    /// scrub across the op cadence (DESIGN.md §2.10).
+    pub fn scrub_slice(&mut self, cursor: usize, limit: usize) -> (usize, Vec<Digest>) {
+        let mut keys: Vec<Digest> = self.chunks.keys().copied().collect();
+        keys.sort_unstable();
+        let n = keys.len();
+        if n == 0 {
+            return (0, Vec::new());
+        }
+        let start = cursor % n;
+        let mut bad = Vec::new();
+        for i in 0..limit.min(n) {
+            let d = keys[(start + i) % n];
+            if self.quarantined.contains(&d) {
+                continue;
+            }
+            if chunk_digest(&self.chunks[&d].bytes) != d {
+                self.quarantined.insert(d);
+                self.scrub_errors += 1;
+                self.metrics.incr(names::CHUNK_SCRUB_ERRORS);
+                bad.push(d);
+            }
+        }
+        ((start + limit.min(n)) % n, bad)
+    }
+
+    /// Quarantine one digest directly (a read path detected the mismatch
+    /// before the scrub cursor reached it). Returns `true` if the chunk
+    /// is resident and was not already quarantined.
+    pub fn quarantine(&mut self, d: &Digest) -> bool {
+        if self.chunks.contains_key(d) && self.quarantined.insert(*d) {
+            self.scrub_errors += 1;
+            self.metrics.incr(names::CHUNK_SCRUB_ERRORS);
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Repair a quarantined chunk from replacement bytes (fetched from a
+    /// replica): the bytes are digest-verified HERE — a corrupt or
+    /// mismatched fill is refused — then swap in for the rotted copy,
+    /// refcounts intact. Returns the repaired digest, or `None` if the
+    /// bytes match no quarantined resident chunk.
+    pub fn repair(&mut self, bytes: &[u8]) -> Option<Digest> {
+        let d = chunk_digest(bytes);
+        if !self.quarantined.contains(&d) {
+            return None;
+        }
+        let c = self.chunks.get_mut(&d)?;
+        self.quarantined.remove(&d);
+        self.stored = self.stored - c.bytes.len() as u64 + bytes.len() as u64;
+        c.bytes = bytes.to_vec();
+        self.repaired += 1;
+        self.metrics.incr(names::CHUNK_REPAIRED);
+        Some(d)
+    }
+
+    /// Digests currently quarantined, sorted (the repair loop's work list).
+    pub fn quarantined(&self) -> Vec<Digest> {
+        let mut v: Vec<Digest> = self.quarantined.iter().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// All resident digests, sorted (scrub planning / fault injection).
+    pub fn digests(&self) -> Vec<Digest> {
+        let mut v: Vec<Digest> = self.chunks.keys().copied().collect();
+        v.sort_unstable();
+        v
+    }
+
+    /// Fault-injection surface (bit-rot modeling, DESIGN.md §2.10): flip
+    /// one bit of one stored chunk, both selected deterministically from
+    /// `sel`. Returns the digest of the chunk whose bytes were damaged.
+    pub fn corrupt_byte(&mut self, sel: u64) -> Option<Digest> {
+        let keys = self.digests();
+        if keys.is_empty() {
+            return None;
+        }
+        let d = keys[(sel % keys.len() as u64) as usize];
+        self.corrupt_chunk(&d, sel >> 16).then_some(d)
+    }
+
+    /// Directed fault injection: flip one bit inside a specific chunk's
+    /// stored bytes (`off` wraps). Returns `false` for unknown/empty chunks.
+    pub fn corrupt_chunk(&mut self, d: &Digest, off: u64) -> bool {
+        match self.chunks.get_mut(d) {
+            Some(c) if !c.bytes.is_empty() => {
+                let at = (off % c.bytes.len() as u64) as usize;
+                c.bytes[at] ^= 0x40;
+                true
+            }
+            _ => false,
+        }
     }
 
     pub fn contains(&self, d: &Digest) -> bool {
@@ -150,6 +295,9 @@ impl ChunkStore {
                     bytes += c.bytes.len() as u64;
                     n += 1;
                     self.chunks.remove(&d);
+                    // a swept chunk is gone, not corrupt — drop any pending
+                    // quarantine so `repair` can't resurrect freed digests
+                    self.quarantined.remove(&d);
                 }
                 _ => {} // resurrected (or already gone): not collectable
             }
@@ -186,6 +334,16 @@ impl ChunkStore {
 
     pub fn gc_collected(&self) -> (u64, u64) {
         (self.gc_chunks, self.gc_bytes)
+    }
+
+    /// Corrupt chunks detected (scrub or read-path refusal) since start.
+    pub fn scrub_errors(&self) -> u64 {
+        self.scrub_errors
+    }
+
+    /// Quarantined chunks healed from replica fills since start.
+    pub fn repaired(&self) -> u64 {
+        self.repaired
     }
 
     /// Current refcount of a chunk (tests / invariant checks).
@@ -270,6 +428,93 @@ mod tests {
         b.gc();
         assert!(!b.contains(&d));
         assert!(a.contains(&d), "clone must not share chunk state");
+    }
+
+    #[test]
+    fn verified_get_refuses_flipped_bits() {
+        let mut cs = ChunkStore::new();
+        let d = cs.put(b"precious bytes");
+        assert_eq!(cs.get_verified(&d).unwrap(), b"precious bytes");
+        assert!(cs.corrupt_chunk(&d, 3));
+        assert_eq!(cs.get_verified(&d), Err(ChunkGetError::Corrupt));
+        // the unchecked accessor still returns the rotted bytes (tests only)
+        assert_ne!(cs.get(&d).unwrap(), b"precious bytes");
+        let ghost = chunk_digest(b"never stored");
+        assert_eq!(cs.get_verified(&ghost), Err(ChunkGetError::Missing));
+    }
+
+    #[test]
+    fn scrub_quarantines_and_repair_heals() {
+        let mut cs = ChunkStore::new();
+        let good = cs.put(b"untouched");
+        let bad = cs.put(b"will rot");
+        assert!(cs.corrupt_chunk(&bad, 0));
+        // full sweep in one slice: exactly the rotted chunk is quarantined
+        let (_, found) = cs.scrub_slice(0, 16);
+        assert_eq!(found, vec![bad]);
+        assert_eq!(cs.scrub_errors(), 1);
+        assert_eq!(cs.quarantined(), vec![bad]);
+        assert_eq!(cs.get_verified(&bad), Err(ChunkGetError::Corrupt));
+        assert_eq!(cs.get_verified(&good).unwrap(), b"untouched");
+        // a second sweep finds nothing new (already quarantined)
+        let (_, again) = cs.scrub_slice(0, 16);
+        assert!(again.is_empty());
+        assert_eq!(cs.scrub_errors(), 1);
+        // a mismatched fill is refused; the true bytes heal the chunk
+        assert_eq!(cs.repair(b"wrong bytes"), None);
+        assert_eq!(cs.repair(b"will rot"), Some(bad));
+        assert_eq!(cs.get_verified(&bad).unwrap(), b"will rot");
+        assert_eq!(cs.repaired(), 1);
+        assert!(cs.quarantined().is_empty());
+        assert_eq!(cs.refs(&bad), 1, "repair preserves refcounts");
+    }
+
+    #[test]
+    fn scrub_slices_amortize_across_cursor() {
+        let mut cs = ChunkStore::new();
+        let mut ds: Vec<Digest> = (0..8u8).map(|i| cs.put(&[i; 64])).collect();
+        ds.sort_unstable();
+        for d in &ds {
+            assert!(cs.corrupt_chunk(d, 7));
+        }
+        // limit-2 slices: four ticks cover the whole table exactly once
+        let mut cursor = 0;
+        let mut found = Vec::new();
+        for _ in 0..4 {
+            let (next, bad) = cs.scrub_slice(cursor, 2);
+            assert_eq!(bad.len(), 2);
+            found.extend(bad);
+            cursor = next;
+        }
+        found.sort_unstable();
+        assert_eq!(found, ds);
+    }
+
+    #[test]
+    fn quarantine_direct_and_gc_clears_it() {
+        let mut cs = ChunkStore::new();
+        let d = cs.put(b"doomed");
+        assert!(cs.corrupt_chunk(&d, 1));
+        assert!(cs.quarantine(&d));
+        assert!(!cs.quarantine(&d), "idempotent");
+        cs.decref(&d);
+        cs.gc();
+        assert!(!cs.contains(&d));
+        assert!(cs.quarantined().is_empty(), "gc drops quarantine entries");
+        assert_eq!(cs.repair(b"doomed"), None, "freed digests cannot be re-filled");
+    }
+
+    #[test]
+    fn corrupt_byte_is_deterministic() {
+        let mut cs = ChunkStore::new();
+        cs.put(b"aaaa");
+        cs.put(b"bbbb");
+        let mut twin = cs.clone();
+        let d1 = cs.corrupt_byte(0x1234_5678).unwrap();
+        let d2 = twin.corrupt_byte(0x1234_5678).unwrap();
+        assert_eq!(d1, d2);
+        assert_eq!(cs.get(&d1), twin.get(&d2));
+        assert!(ChunkStore::new().corrupt_byte(7).is_none(), "empty store: no-op");
     }
 
     #[test]

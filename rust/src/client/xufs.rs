@@ -185,7 +185,14 @@ impl<L: ServerLink> XufsClient<L> {
             &metrics,
         );
         cache.set_paging(cfg.stripe.min_block, cfg.cache.budget_bytes);
+        // integrity pass (DESIGN.md §2.10): blocks that rotted on the
+        // cache disk while the client was down are demoted to Absent
+        // here — they re-fault from home instead of being served
+        cache.verify_recovered(&engine, now, &metrics);
         let (queue, corrupt) = MetaQueue::recover(cache.store());
+        // op-log records dropped for a bad HMAC or torn frame are
+        // corruption detections, not silent truncation
+        metrics.add(names::METAQ_CORRUPT_RECORDS, corrupt as u64);
         let mut c = Self::new(link, cfg, engine, clock, mount_root, metrics);
         c.cache = cache;
         c.queue = queue;
@@ -704,6 +711,9 @@ impl<L: ServerLink> XufsClient<L> {
             Ok(Response::Err { code: 2, msg }) => Err(FsError::NotFound(msg)),
             Ok(Response::Err { code: 21, msg }) => Err(FsError::IsADir(msg)),
             Ok(Response::Err { code: 111, .. }) => Err(FsError::Disconnected),
+            // 118: the server refused the digest pass over rotted bytes
+            // (DESIGN.md §2.10) — surface the typed refusal, never data
+            Ok(Response::Err { code: 118, msg }) => Err(FsError::Corrupted(msg)),
             Ok(r) => Err(FsError::Protocol(format!("unexpected fetch-meta response {r:?}"))),
             Err(e) => Err(e),
         }

@@ -158,6 +158,12 @@ pub struct FaultConfig {
     /// surfaced event). The crashed primary still restarts on schedule —
     /// fenced, so clients must fail over.
     pub promote_after_crash_p: f64,
+    /// Silent bit rot: one byte of one persisted artifact (chunk store,
+    /// cache files, or op log — the die also picks which) is flipped at
+    /// this interaction. The harness acts on the surfaced
+    /// `FaultEvent::CorruptByte`; the integrity plane (DESIGN.md §2.10)
+    /// must detect it — invariant I5: never wrong data, never a panic.
+    pub corrupt_p: f64,
 }
 
 impl Default for FaultConfig {
@@ -176,6 +182,7 @@ impl Default for FaultConfig {
             server_crash_max_steps: 24,
             client_crash_p: 0.0,
             promote_after_crash_p: 0.0,
+            corrupt_p: 0.0,
         }
     }
 }
@@ -236,6 +243,26 @@ impl Default for ChunkstoreConfig {
     }
 }
 
+/// Integrity-plane parameters (DESIGN.md §2.10).
+#[derive(Debug, Clone, PartialEq)]
+pub struct IntegrityConfig {
+    /// Run one background scrub slice (digest-verify a bounded chunk of
+    /// the chunk table, quarantine mismatches, and attempt repair from
+    /// the replica) every this many applied server ops — the same
+    /// cadence mechanism as `chunkstore.gc_interval_ops`. `0` disables
+    /// the background scrubber; verified reads still refuse rot.
+    pub scrub_interval_ops: u64,
+    /// Chunks verified per scrub tick (bounds per-tick latency; a full
+    /// store scrub amortizes across ticks via a wrapping cursor).
+    pub scrub_batch: usize,
+}
+
+impl Default for IntegrityConfig {
+    fn default() -> Self {
+        IntegrityConfig { scrub_interval_ops: 64, scrub_batch: 32 }
+    }
+}
+
 /// File-server concurrency parameters (DESIGN.md §2.6, §2.9).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ServerConfig {
@@ -245,11 +272,6 @@ pub struct ServerConfig {
     /// `1` reproduces the old single-lock server (the scale ablation
     /// baseline); the default 8 matches the paper's many-client claim.
     pub shards: usize,
-    /// Serve TCP with the readiness-driven reactor core (DESIGN.md
-    /// §2.9). `false` pins the legacy thread-per-connection path —
-    /// kept for one release as the connection-scale ablation, also
-    /// reachable via `XUFS_TCP_LEGACY=1`.
-    pub reactor: bool,
     /// Reactor thread count; `0` means one per available core.
     pub reactor_threads: usize,
     /// Admission control: connections beyond this are refused with the
@@ -264,7 +286,6 @@ impl Default for ServerConfig {
     fn default() -> Self {
         ServerConfig {
             shards: 8,
-            reactor: true,
             reactor_threads: 0,
             max_connections: 1024,
             max_inflight_per_conn: 32,
@@ -313,6 +334,7 @@ pub struct XufsConfig {
     pub server: ServerConfig,
     pub replica: ReplicaConfig,
     pub chunkstore: ChunkstoreConfig,
+    pub integrity: IntegrityConfig,
     /// Directory holding AOT HLO artifacts (empty => native digest engine).
     pub artifacts_dir: String,
     /// Deterministic seed for workloads / jitter.
@@ -371,8 +393,17 @@ impl XufsConfig {
                 "fault.promote_after_crash_p" => {
                     cfg.fault.promote_after_crash_p = value.as_f64()?
                 }
+                "fault.corrupt_p" => cfg.fault.corrupt_p = value.as_f64()?,
                 "server.shards" => cfg.server.shards = value.as_usize()?.max(1),
-                "server.reactor" => cfg.server.reactor = value.as_bool()?,
+                "server.reactor" => {
+                    return Err(TomlError::new(
+                        0,
+                        "`server.reactor` was removed: the thread-per-connection \
+                         path is gone and the reactor core (DESIGN.md §2.9) always \
+                         serves TCP — delete the key (tune `server.reactor_threads` \
+                         instead)",
+                    ));
+                }
                 "server.reactor_threads" => {
                     cfg.server.reactor_threads = value.as_usize()?
                 }
@@ -394,6 +425,12 @@ impl XufsConfig {
                 }
                 "chunkstore.snapshot_retention" => {
                     cfg.chunkstore.snapshot_retention = value.as_usize()?.max(1)
+                }
+                "integrity.scrub_interval_ops" => {
+                    cfg.integrity.scrub_interval_ops = value.as_u64()?
+                }
+                "integrity.scrub_batch" => {
+                    cfg.integrity.scrub_batch = value.as_usize()?.max(1)
                 }
                 "artifacts_dir" => cfg.artifacts_dir = value.as_str()?.to_string(),
                 "seed" => cfg.seed = value.as_u64()?,
@@ -475,10 +512,9 @@ localized_dirs = "/scratch/out:/scratch/tmp"
 
     #[test]
     fn parse_reactor_keys() {
-        let text = "[server]\nreactor = false\nreactor_threads = 2\n\
+        let text = "[server]\nreactor_threads = 2\n\
                     max_connections = 64\nmax_inflight_per_conn = 4\n";
         let c = XufsConfig::from_toml(text).unwrap();
-        assert!(!c.server.reactor);
         assert_eq!(c.server.reactor_threads, 2);
         assert_eq!(c.server.max_connections, 64);
         assert_eq!(c.server.max_inflight_per_conn, 4);
@@ -486,10 +522,21 @@ localized_dirs = "/scratch/out:/scratch/tmp"
         let c = XufsConfig::from_toml("[server]\nmax_connections = 0\n").unwrap();
         assert_eq!(c.server.max_connections, 1);
         let d = XufsConfig::default().server;
-        assert!(d.reactor, "reactor core is the default");
         assert_eq!(d.reactor_threads, 0, "0 = one per core");
         assert_eq!(d.max_connections, 1024);
         assert_eq!(d.max_inflight_per_conn, 32);
+    }
+
+    #[test]
+    fn removed_reactor_key_is_a_hard_error_with_pointer() {
+        // the legacy thread-per-connection path is gone; a config still
+        // pinning it must fail loudly, not silently flip to the reactor
+        for text in ["[server]\nreactor = false\n", "[server]\nreactor = true\n"] {
+            let err = XufsConfig::from_toml(text).unwrap_err();
+            let msg = format!("{err}");
+            assert!(msg.contains("`server.reactor` was removed"), "unhelpful error: {msg}");
+            assert!(msg.contains("reactor_threads"), "no pointer to the replacement: {msg}");
+        }
     }
 
     #[test]
@@ -502,6 +549,27 @@ localized_dirs = "/scratch/out:/scratch/tmp"
         // untouched fault knobs keep their (inert) defaults
         assert_eq!(c.fault.drop_request_p, 0.0);
         assert!(!XufsConfig::default().fault.enabled, "faults must be opt-in");
+        // bit-rot injection rides the fault section like the other dice
+        let c = XufsConfig::from_toml("[fault]\ncorrupt_p = 0.02\n").unwrap();
+        assert!((c.fault.corrupt_p - 0.02).abs() < 1e-12);
+        assert_eq!(XufsConfig::default().fault.corrupt_p, 0.0);
+    }
+
+    #[test]
+    fn parse_integrity_keys() {
+        let text = "[integrity]\nscrub_interval_ops = 16\nscrub_batch = 8\n";
+        let c = XufsConfig::from_toml(text).unwrap();
+        assert_eq!(c.integrity.scrub_interval_ops, 16);
+        assert_eq!(c.integrity.scrub_batch, 8);
+        // 0 disables the background scrubber (reads still verify)…
+        let c = XufsConfig::from_toml("[integrity]\nscrub_interval_ops = 0\n").unwrap();
+        assert_eq!(c.integrity.scrub_interval_ops, 0);
+        // …but an empty scrub slice would be a silent no-op: clamped
+        let c = XufsConfig::from_toml("[integrity]\nscrub_batch = 0\n").unwrap();
+        assert_eq!(c.integrity.scrub_batch, 1);
+        let d = XufsConfig::default().integrity;
+        assert_eq!(d.scrub_interval_ops, 64);
+        assert_eq!(d.scrub_batch, 32);
     }
 
     #[test]

@@ -10,9 +10,9 @@
 //!   challenge-response handshake, striped fetch connections and a
 //!   push-mode callback channel: integration tests and the e2e example
 //!   run the identical client/server logic over actual sockets. Serving
-//!   is readiness-driven (the `reactor` module, DESIGN.md §2.9); the
-//!   legacy thread-per-connection path survives one release behind
-//!   `XUFS_TCP_LEGACY=1` as the scale ablation.
+//!   is readiness-driven (the `reactor` module, DESIGN.md §2.9) — the
+//!   only serving core since the legacy thread-per-connection path was
+//!   removed at the end of its one-release grace period.
 
 pub mod net;
 mod reactor;

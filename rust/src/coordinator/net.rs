@@ -12,15 +12,14 @@
 //! shard a request routes to — concurrent clients on different
 //! subtrees are served genuinely in parallel.
 //!
-//! Serving is readiness-driven by default (the reactor core, DESIGN.md
-//! §2.9): a fixed pool of poll-loop threads owns every connection fd and
-//! streams frames through reused per-connection buffers. The legacy
-//! thread-per-connection path below survives one release behind
-//! `XUFS_TCP_LEGACY=1` (and `[server] reactor = false`) as the scale
-//! ablation.
+//! Serving is readiness-driven (the reactor core, DESIGN.md §2.9): a
+//! fixed pool of poll-loop threads owns every connection fd and streams
+//! frames through reused per-connection buffers. The legacy
+//! thread-per-connection core was removed after its one-release grace
+//! period (`[server] reactor` is now a hard config error).
 
 use std::io::{Read, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -36,7 +35,6 @@ use crate::proto::{
     self, BlockExtent, FileImage, MetaOp, NotifyEvent, RangeImage, Request, Response,
 };
 use crate::server::FileServer;
-use crate::simnet::{Clock, RealClock};
 use crate::transfer;
 
 // ---------------------------------------------------------------------
@@ -78,92 +76,25 @@ pub struct TcpServer {
 impl TcpServer {
     /// Bind on an ephemeral localhost port and serve until dropped, with
     /// the default server config: the readiness-driven reactor core
-    /// (DESIGN.md §2.9). `XUFS_TCP_LEGACY=1` pins the legacy
-    /// thread-per-connection path for one release (the scale ablation).
+    /// (DESIGN.md §2.9).
     pub fn spawn(
         server: Arc<FileServer>,
         authenticator: Arc<Mutex<Authenticator>>,
         metrics: Metrics,
     ) -> std::io::Result<TcpServer> {
-        let mut cfg = ServerConfig::default();
-        if std::env::var("XUFS_TCP_LEGACY").is_ok_and(|v| v == "1") {
-            cfg.reactor = false;
-        }
-        Self::spawn_with(server, authenticator, metrics, &cfg)
+        Self::spawn_with(server, authenticator, metrics, &ServerConfig::default())
     }
 
-    /// [`TcpServer::spawn`] with explicit `[server]` knobs. `cfg.reactor`
-    /// selects the serving core verbatim (no env pin) — the scale bench
-    /// runs both cores side by side through this.
+    /// [`TcpServer::spawn`] with explicit `[server]` knobs (reactor
+    /// thread count, admission limits).
     pub fn spawn_with(
         server: Arc<FileServer>,
         authenticator: Arc<Mutex<Authenticator>>,
         metrics: Metrics,
         cfg: &ServerConfig,
     ) -> std::io::Result<TcpServer> {
-        if cfg.reactor {
-            let h = super::reactor::spawn(server, authenticator, metrics, cfg)?;
-            Ok(TcpServer { addr: h.addr, stop: h.stop, threads: h.threads })
-        } else {
-            Self::spawn_legacy(server, authenticator, metrics)
-        }
-    }
-
-    /// The pre-reactor thread-per-connection core (one release of life
-    /// left): blocking connection threads plus a polling accept loop.
-    fn spawn_legacy(
-        server: Arc<FileServer>,
-        authenticator: Arc<Mutex<Authenticator>>,
-        metrics: Metrics,
-    ) -> std::io::Result<TcpServer> {
-        let listener = TcpListener::bind("127.0.0.1:0")?;
-        let addr = listener.local_addr()?;
-        listener.set_nonblocking(true)?;
-        let stop = Arc::new(AtomicBool::new(false));
-        let stop2 = stop.clone();
-        let accept_thread = std::thread::spawn(move || {
-            let clock = RealClock::new();
-            let mut conn_threads: Vec<JoinHandle<()>> = Vec::new();
-            // housekeeping: with per-shard lock tables, a conflicting
-            // acquire only sweeps its own shard — this periodic tick is
-            // what frees orphaned leases on otherwise-quiet shards (the
-            // sim deployment's `server_tick` equivalent; the paper runs
-            // it from the server's background thread)
-            let mut last_sweep = std::time::Instant::now();
-            while !stop2.load(Ordering::SeqCst) {
-                if last_sweep.elapsed() >= Duration::from_secs(1) {
-                    server.expire_leases(clock.now());
-                    last_sweep = std::time::Instant::now();
-                }
-                match listener.accept() {
-                    Ok((stream, _)) => {
-                        metrics.incr(names::SERVER_ACCEPTS);
-                        let server = server.clone();
-                        let authenticator = authenticator.clone();
-                        let metrics = metrics.clone();
-                        let clock = clock.clone();
-                        let stop3 = stop2.clone();
-                        conn_threads.push(std::thread::spawn(move || {
-                            let _ = serve_connection(stream, server, authenticator, metrics, clock, stop3);
-                        }));
-                    }
-                    Err(ref e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(2));
-                    }
-                    Err(_) => {
-                        // transient accept failures (ECONNABORTED, fd
-                        // pressure) must not silently kill the listener
-                        // forever — count, breathe, retry
-                        metrics.incr(names::SERVER_ACCEPT_ERRORS);
-                        std::thread::sleep(Duration::from_millis(10));
-                    }
-                }
-            }
-            for t in conn_threads {
-                let _ = t.join();
-            }
-        });
-        Ok(TcpServer { addr, stop, threads: vec![accept_thread] })
+        let h = super::reactor::spawn(server, authenticator, metrics, cfg)?;
+        Ok(TcpServer { addr: h.addr, stop: h.stop, threads: h.threads })
     }
 
     pub fn shutdown(&mut self) {
@@ -177,97 +108,6 @@ impl TcpServer {
 impl Drop for TcpServer {
     fn drop(&mut self) {
         self.shutdown();
-    }
-}
-
-/// Server side of the USSH challenge-response handshake; returns the
-/// authenticated session id.
-fn server_handshake(
-    stream: &mut TcpStream,
-    authenticator: &Arc<Mutex<Authenticator>>,
-    metrics: &Metrics,
-    clock: &RealClock,
-) -> std::io::Result<Option<u64>> {
-    let hello = read_frame(stream)?;
-    let Ok(Request::AuthHello { key_id }) = Request::decode(&hello) else {
-        return Ok(None);
-    };
-    let nonce = authenticator.lock().unwrap().challenge(&key_id);
-    write_frame(stream, &Response::Challenge { nonce }.encode())?;
-    let proof_msg = read_frame(stream)?;
-    let Ok(Request::AuthProof { key_id, proof }) = Request::decode(&proof_msg) else {
-        return Ok(None);
-    };
-    let session = authenticator.lock().unwrap().verify_proof(&key_id, &proof, clock.now());
-    match session {
-        Some(s) => {
-            write_frame(stream, &Response::AuthOk { session: s }.encode())?;
-            Ok(Some(s))
-        }
-        None => {
-            metrics.incr(names::AUTH_FAILURES);
-            write_frame(stream, &Response::AuthFail.encode())?;
-            Ok(None)
-        }
-    }
-}
-
-fn serve_connection(
-    mut stream: TcpStream,
-    server: Arc<FileServer>,
-    authenticator: Arc<Mutex<Authenticator>>,
-    metrics: Metrics,
-    clock: RealClock,
-    stop: Arc<AtomicBool>,
-) -> std::io::Result<()> {
-    stream.set_nodelay(true).ok();
-    let Some(session) = server_handshake(&mut stream, &authenticator, &metrics, &clock)? else {
-        return Ok(());
-    };
-    loop {
-        if stop.load(Ordering::SeqCst) {
-            return Ok(());
-        }
-        let body = match read_frame(&mut stream) {
-            Ok(b) => b,
-            Err(_) => return Ok(()), // peer went away
-        };
-        let req = match Request::decode(&body) {
-            Ok(r) => r,
-            Err(e) => {
-                write_frame(&mut stream, &Response::Err { code: 71, msg: e.to_string() }.encode())?;
-                continue;
-            }
-        };
-        // A RegisterCallback converts this connection into the push-mode
-        // callback channel: attach a fresh channel and pump events out.
-        if let Request::RegisterCallback { root, client_id } = &req {
-            let channel = NotifyChannel::new();
-            server.attach_channel(*client_id, channel.clone());
-            let resp = server.handle(
-                *client_id,
-                Request::RegisterCallback { root: root.clone(), client_id: *client_id },
-                clock.now(),
-            );
-            write_frame(&mut stream, &resp.encode())?;
-            // push mode until the peer hangs up
-            loop {
-                if stop.load(Ordering::SeqCst) || !channel.is_connected() {
-                    return Ok(());
-                }
-                for ev in channel.drain() {
-                    if write_frame(&mut stream, &ev.encode()).is_err() {
-                        channel.disconnect();
-                        return Ok(());
-                    }
-                }
-                std::thread::sleep(Duration::from_millis(2));
-            }
-        }
-        // no global server lock: the sharded core serializes internally,
-        // so connection threads for different subtrees run in parallel
-        let resp = server.handle(session, req, clock.now());
-        write_frame(&mut stream, &resp.encode())?;
     }
 }
 
@@ -503,6 +343,9 @@ fn response_to_fs_err(r: Response) -> FsError {
         // §2.7) — both mean "reconnect, possibly elsewhere"
         Response::Err { code: 111, .. } | Response::Err { code: 112, .. } => FsError::Disconnected,
         Response::Err { code: 116, msg } => FsError::Stale(msg),
+        // 118 = integrity refusal (DESIGN.md §2.10): the server detected
+        // rot and quarantined the bytes instead of serving them
+        Response::Err { code: 118, msg } => FsError::Corrupted(msg),
         r => FsError::Protocol(format!("unexpected response {r:?}")),
     }
 }

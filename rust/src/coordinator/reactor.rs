@@ -6,9 +6,10 @@
 //! response), and hands decoded requests straight to the sharded
 //! [`FileServer::handle`] — which is lock-free to dispatch into, so no
 //! queues or handoff threads sit between the socket and the server core.
-//! This replaces the thread-per-connection path (kept as an ablation,
-//! `XUFS_TCP_LEGACY=1`) whose 2 ms accept sleep and thousands of blocked
-//! threads were the wall in front of the paper's 9000-node claim.
+//! This replaced the thread-per-connection path — whose 2 ms accept
+//! sleep and thousands of blocked threads were the wall in front of the
+//! paper's 9000-node claim — and is the sole serving core now that the
+//! legacy path's one-release grace period has ended.
 //!
 //! I/O never blocks a reactor thread: reads go through the v2 streaming
 //! decoder ([`FrameDecoder`], one reused buffer per connection), writes
@@ -21,9 +22,9 @@
 //! ([`proto::BUSY_CODE`]) instead of queueing unboundedly.
 //!
 //! The poll timeout doubles as the reactor's timer tick: thread 0 runs
-//! the 1 s lease sweep (quiet servers still expire orphaned leases — the
-//! legacy path only swept between accepts), and every thread pumps
-//! callback channels and flushes its codec-reuse counters on the tick.
+//! the 1 s lease sweep (quiet servers still expire orphaned leases), and
+//! every thread pumps callback channels and flushes its codec-reuse
+//! counters on the tick.
 
 use std::io::Write;
 use std::net::{TcpListener, TcpStream};

@@ -8,10 +8,12 @@
 //! schedule can drop, duplicate, delay, tear, or partition any of them,
 //! and crash/restart the server process, deterministically from a seed.
 
+use std::collections::HashSet;
 use std::sync::{Arc, Mutex};
 
 use crate::auth::{self, Authenticator, KeyPair};
 use crate::callback::NotifyChannel;
+use crate::chunkstore::Digest;
 use crate::client::{ServerLink, XufsClient};
 use crate::config::XufsConfig;
 use crate::homefs::{FileStore, FsError};
@@ -84,7 +86,8 @@ impl SimWorld {
             cfg.server.shards,
             metrics.clone(),
             cfg.chunkstore.clone(),
-        );
+        )
+        .with_integrity(cfg.integrity.clone());
         SimWorld {
             clock,
             wan,
@@ -125,7 +128,8 @@ impl SimWorld {
             self.cfg.server.shards,
             self.metrics.clone(),
             self.cfg.chunkstore.clone(),
-        );
+        )
+        .with_integrity(self.cfg.integrity.clone());
         sec.set_role(Role::Secondary);
         sec.enable_replication();
         let sec = Arc::new(sec);
@@ -349,6 +353,59 @@ impl SimWorld {
             store.clone(),
             self.metrics.clone(),
         ))
+    }
+
+    /// Bit-rot injection for the fault explorer (DESIGN.md §2.10): flip
+    /// one byte of one chunk resident on BOTH nodes of the pair (sorted
+    /// digest intersection, picked by `sel`), rotting the PRIMARY's
+    /// copy. Choosing a shared chunk is what makes the fault
+    /// *recoverable*: the secondary's clean copy can heal it. Returns
+    /// the rotted digest, or `None` without a replica / shared chunks.
+    pub fn corrupt_shared_chunk(&self, sel: u64) -> Option<Digest> {
+        let sec = self.secondary.as_ref()?;
+        let shared: Vec<Digest> = {
+            let on_sec: HashSet<Digest> = sec.home().chunk_digests().into_iter().collect();
+            self.server
+                .home()
+                .chunk_digests()
+                .into_iter()
+                .filter(|d| on_sec.contains(d))
+                .collect()
+        };
+        if shared.is_empty() {
+            return None;
+        }
+        let d = shared[(sel % shared.len() as u64) as usize];
+        self.server.home_mut().corrupt_chunk_at(&d, sel >> 16).then_some(d)
+    }
+
+    /// One repair pass (DESIGN.md §2.10): scrub the primary's whole
+    /// chunk table, then heal everything quarantined from the
+    /// secondary's clean copies over the repair plane (`ChunkFetch` on
+    /// the shipper's link — it rides the WAN and the fault plane, so a
+    /// partitioned attempt just leaves the quarantine for the next
+    /// tick). Returns how many chunks remain quarantined.
+    pub fn repair_tick(&mut self) -> Result<u64, FsError> {
+        if self.promoted {
+            // post-failover the old primary is fenced; the promoted
+            // node's own rot (never injected by the explorer) would
+            // need a new standby to heal from
+            return Ok(self.authority().quarantined_chunks().len() as u64);
+        }
+        self.server.scrub_all_chunks();
+        let quarantined = self.server.quarantined_chunks();
+        if quarantined.is_empty() {
+            return Ok(0);
+        }
+        let Some(shipper) = self.shipper.as_mut() else {
+            return Ok(quarantined.len() as u64);
+        };
+        if !shipper.link().is_connected() && shipper.link_mut().reconnect().is_err() {
+            return Ok(quarantined.len() as u64);
+        }
+        let fills = shipper.fetch_chunks(&quarantined)?;
+        self.server.repair_chunks(&fills);
+        Ok(self.server.quarantined_chunks().len() as u64)
     }
 
     /// Simulate a server crash (process dies; home disk survives).
@@ -739,6 +796,9 @@ impl ServerLink for SimLink {
             Response::Err { code: 116, msg } => Err(FsError::Stale(msg)),
             Response::Err { code: 111, .. } => Err(FsError::Disconnected),
             Response::Err { code: 112, .. } => Err(self.wrong_endpoint()),
+            // integrity refusal (DESIGN.md §2.10): the server detected
+            // rot and will not serve the bytes
+            Response::Err { code: 118, msg } => Err(FsError::Corrupted(msg)),
             r => Err(FsError::Protocol(format!("unexpected range response {r:?}"))),
         }
     }

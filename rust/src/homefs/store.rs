@@ -24,7 +24,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::fmt;
 
-use crate::chunkstore::{digest_hex, ChunkStore, Digest};
+use crate::chunkstore::{chunk_digest, digest_hex, ChunkGetError, ChunkStore, Digest};
 use crate::metrics::Metrics;
 use crate::simnet::VirtualTime;
 use crate::util::path as vpath;
@@ -64,6 +64,11 @@ pub enum FsError {
     /// typed context `client::LinkError::Interrupted` carries across the
     /// `FsError` surface).
     Interrupted { resumed_from_block: u64 },
+    /// Stored bytes no longer match their recorded digest (bit rot,
+    /// torn sector). The read is REFUSED — detection surfaces as this
+    /// typed error (wire code 118), a repair, or a retry after repair;
+    /// never as silently wrong data (invariant I5, DESIGN.md §2.10).
+    Corrupted(String),
 }
 
 impl fmt::Display for FsError {
@@ -85,6 +90,7 @@ impl fmt::Display for FsError {
             FsError::Interrupted { resumed_from_block } => {
                 write!(f, "transfer interrupted (resumable from block {resumed_from_block})")
             }
+            FsError::Corrupted(m) => write!(f, "data integrity failure (refused): {m}"),
         }
     }
 }
@@ -192,6 +198,13 @@ pub struct FileStore {
     snapshots: BTreeMap<u64, Snapshot>,
     next_snapshot: u64,
     snapshot_retention: usize,
+    /// Content digests of dense files last written whole ([`Self::write`]):
+    /// the integrity plane's coverage for dense mode. Positional writes
+    /// and truncates invalidate the entry (append-heavy files like the
+    /// op log carry their own per-record MACs instead); whole-file reads
+    /// of a live file with a recorded sum re-verify it and refuse a
+    /// mismatch as [`FsError::Corrupted`]. Keyed by ino (never reused).
+    dense_sums: HashMap<Ino, Digest>,
 }
 
 pub const DEFAULT_FILE_MODE: u32 = 0o600;
@@ -256,6 +269,7 @@ impl FileStore {
             snapshots: BTreeMap::new(),
             next_snapshot: 1,
             snapshot_retention: 8,
+            dense_sums: HashMap::new(),
         }
     }
 
@@ -278,6 +292,8 @@ impl FileStore {
             }
         }
         self.chunks = Some(cs);
+        // chunked content is verified per-chunk; the dense side table retires
+        self.dense_sums.clear();
     }
 
     pub fn is_chunked(&self) -> bool {
@@ -489,6 +505,21 @@ impl FileStore {
         Ok(entries.iter().map(|(n, &i)| (n.clone(), Self::stat_ino_in(inodes, i))).collect())
     }
 
+    /// One VERIFIED chunk read (integrity plane): the digest is
+    /// recomputed on the way out, so rotted bytes surface as a typed
+    /// [`FsError::Corrupted`] refusal — never as wrong data.
+    fn chunk_read<'a>(cs: &'a ChunkStore, d: &Digest, what: &str) -> Result<&'a [u8], FsError> {
+        match cs.get_verified(d) {
+            Ok(b) => Ok(b),
+            Err(ChunkGetError::Missing) => {
+                Err(FsError::Protocol(format!("missing chunk {} for {what}", digest_hex(d))))
+            }
+            Err(ChunkGetError::Corrupt) => {
+                Err(FsError::Corrupted(format!("chunk {} for {what}", digest_hex(d))))
+            }
+        }
+    }
+
     /// Assemble a file node's full content.
     fn file_bytes(&self, data: &FileData, path: &str) -> Result<Vec<u8>, FsError> {
         match data {
@@ -500,9 +531,7 @@ impl FileStore {
                     .ok_or_else(|| FsError::Protocol(format!("chunked node, no chunk store: {path}")))?;
                 let mut out = Vec::with_capacity(*size as usize);
                 for d in chunks {
-                    out.extend_from_slice(cs.get(d).ok_or_else(|| {
-                        FsError::Protocol(format!("missing chunk {} for {path}", digest_hex(d)))
-                    })?);
+                    out.extend_from_slice(Self::chunk_read(cs, d, path)?);
                 }
                 Ok(out)
             }
@@ -514,7 +543,21 @@ impl FileStore {
         let (inodes, root, p) = self.view(path);
         let ino = Self::resolve_in(inodes, root, &p)?;
         match &inodes[&ino].node {
-            Node::File { data } => self.file_bytes(data, path),
+            Node::File { data } => {
+                let bytes = self.file_bytes(data, path)?;
+                // dense integrity: live files last written whole carry a
+                // recorded content sum — refuse silently flipped bits
+                // (snapshot views share inos with live state only in
+                // chunked mode, where dense_sums is empty)
+                if matches!(data, FileData::Dense(_)) && std::ptr::eq(inodes, &self.inodes) {
+                    if let Some(sum) = self.dense_sums.get(&ino) {
+                        if chunk_digest(&bytes) != *sum {
+                            return Err(FsError::Corrupted(format!("dense file {path}")));
+                        }
+                    }
+                }
+                Ok(bytes)
+            }
             Node::Dir { .. } => Err(FsError::IsADir(path.to_string())),
         }
     }
@@ -547,12 +590,7 @@ impl FileStore {
                     .ok_or_else(|| FsError::Protocol(format!("chunked node, no chunk store: {path}")))?;
                 let mut out = Vec::with_capacity((end - start) as usize);
                 for ci in start / cb..end.div_ceil(cb) {
-                    let bytes = cs.get(&chunks[ci as usize]).ok_or_else(|| {
-                        FsError::Protocol(format!(
-                            "missing chunk {} for {path}",
-                            digest_hex(&chunks[ci as usize])
-                        ))
-                    })?;
+                    let bytes = Self::chunk_read(cs, &chunks[ci as usize], path)?;
                     let cstart = ci * cb;
                     let s = start.saturating_sub(cstart) as usize;
                     let e = ((end - cstart) as usize).min(bytes.len());
@@ -582,7 +620,10 @@ impl FileStore {
                     content.chunks(self.chunk_size).map(|c| cs.put(c)).collect();
                 FileData::Chunked { size: new, chunks: digests }
             }
-            None => FileData::Dense(content.to_vec()),
+            None => {
+                self.dense_sums.insert(ino, chunk_digest(content));
+                FileData::Dense(content.to_vec())
+            }
         };
         let inode = self.inodes.get_mut(&ino).unwrap();
         let old_data = match &mut inode.node {
@@ -618,6 +659,8 @@ impl FileStore {
         if self.chunks.is_some() {
             return self.write_at_chunked(ino, offset, buf, now, old, new);
         }
+        // positional mutation: the whole-file sum (if any) no longer applies
+        self.dense_sums.remove(&ino);
         let inode = self.inodes.get_mut(&ino).unwrap();
         match &mut inode.node {
             Node::File { data: FileData::Dense(data) } => {
@@ -665,12 +708,12 @@ impl FileStore {
         // materialize the affected byte range [lo*cb, hi's end)
         let mut patch = Vec::new();
         {
+            // VERIFIED reads: a rotted neighboring chunk must refuse the
+            // write, not launder its bad bytes into fresh digests
             let cs = self.chunks.as_ref().expect("chunked mode");
             for ci in lo..hi {
-                let d = &old_chunks[ci as usize];
-                patch.extend_from_slice(cs.get(d).ok_or_else(|| {
-                    FsError::Protocol(format!("missing chunk {} for ino {ino}", digest_hex(d)))
-                })?);
+                let what = format!("ino {ino}");
+                patch.extend_from_slice(Self::chunk_read(cs, &old_chunks[ci as usize], &what)?);
             }
         }
         if grows {
@@ -711,6 +754,7 @@ impl FileStore {
         let old = self.inodes[&ino].size();
         self.charge(old, size)?;
         if self.chunks.is_none() {
+            self.dense_sums.remove(&ino);
             let inode = self.inodes.get_mut(&ino).unwrap();
             if let Node::File { data: FileData::Dense(data) } = &mut inode.node {
                 data.resize(size as usize, 0);
@@ -735,10 +779,7 @@ impl FileStore {
         if tail != 0 {
             let trimmed = {
                 let cs = self.chunks.as_ref().expect("chunked mode");
-                let d = &old_chunks[keep - 1];
-                let bytes = cs.get(d).ok_or_else(|| {
-                    FsError::Protocol(format!("missing chunk {} for {path}", digest_hex(d)))
-                })?;
+                let bytes = Self::chunk_read(cs, &old_chunks[keep - 1], path)?;
                 bytes[..tail as usize].to_vec()
             };
             let cs = self.chunks.as_mut().expect("chunked mode");
@@ -795,6 +836,7 @@ impl FileStore {
         p.mtime = now;
         p.version += 1;
         let removed = self.inodes.remove(&ino);
+        self.dense_sums.remove(&ino);
         if let (Some(cs), Some(Inode { node: Node::File { data: FileData::Chunked { chunks, .. } }, .. })) =
             (self.chunks.as_mut(), &removed)
         {
@@ -910,9 +952,12 @@ impl FileStore {
         self.chunks.as_ref().map(|cs| cs.contains(d)).unwrap_or(false)
     }
 
-    /// Raw chunk bytes (replication shipping reads chunks directly).
+    /// Chunk bytes for replication shipping / repair fills — VERIFIED:
+    /// a chunk whose stored bytes have rotted is as good as absent here
+    /// (shipping it would launder the rot onto the peer; the receiver's
+    /// digest check would refuse it anyway).
     pub fn chunk_data(&self, d: &Digest) -> Option<Vec<u8>> {
-        self.chunks.as_ref().and_then(|cs| cs.get(d).map(|b| b.to_vec()))
+        self.chunks.as_ref().and_then(|cs| cs.get_verified(d).ok().map(|b| b.to_vec()))
     }
 
     /// Insert a chunk delivered out of band (replica `ChunkPush`); the
@@ -943,6 +988,98 @@ impl FileStore {
             Some(cs) => cs.gc(),
             None => (0, 0),
         }
+    }
+
+    // ---- integrity plane (DESIGN.md §2.10) ----
+
+    /// Scrub a bounded slice of the chunk table (server op cadence):
+    /// returns the next cursor and the digests newly quarantined. Dense
+    /// stores have nothing to scrub here (their rot surfaces on read).
+    pub fn scrub_chunks(&mut self, cursor: usize, limit: usize) -> (usize, Vec<Digest>) {
+        match self.chunks.as_mut() {
+            Some(cs) => cs.scrub_slice(cursor, limit),
+            None => (0, Vec::new()),
+        }
+    }
+
+    /// Quarantine a chunk a read path just refused (so the repair loop
+    /// picks it up without waiting for the scrub cursor).
+    pub fn quarantine_chunk(&mut self, d: &Digest) -> bool {
+        self.chunks.as_mut().map(|cs| cs.quarantine(d)).unwrap_or(false)
+    }
+
+    /// Heal a quarantined chunk from replica-fetched bytes (digest
+    /// re-verified inside). Returns the repaired digest on success.
+    pub fn repair_chunk(&mut self, bytes: &[u8]) -> Option<Digest> {
+        self.chunks.as_mut().and_then(|cs| cs.repair(bytes))
+    }
+
+    /// Digests awaiting repair, sorted.
+    pub fn quarantined_chunks(&self) -> Vec<Digest> {
+        self.chunks.as_ref().map(|cs| cs.quarantined()).unwrap_or_default()
+    }
+
+    /// All resident chunk digests, sorted (scrub drivers and the fault
+    /// explorer's pick-a-shared-chunk logic).
+    pub fn chunk_digests(&self) -> Vec<Digest> {
+        self.chunks.as_ref().map(|cs| cs.digests()).unwrap_or_default()
+    }
+
+    /// Fault injection (bit-rot modeling): flip one byte of one stored
+    /// chunk, selected deterministically from `sel`.
+    pub fn corrupt_chunk_byte(&mut self, sel: u64) -> Option<Digest> {
+        self.chunks.as_mut().and_then(|cs| cs.corrupt_byte(sel))
+    }
+
+    /// Directed fault injection on a specific chunk.
+    pub fn corrupt_chunk_at(&mut self, d: &Digest, off: u64) -> bool {
+        self.chunks.as_mut().map(|cs| cs.corrupt_chunk(d, off)).unwrap_or(false)
+    }
+
+    /// Fault injection for dense stores (client cache disks, op-log
+    /// backing stores): flip one byte of one non-empty dense file,
+    /// file and offset both selected deterministically from `sel`.
+    /// Silent — no version/mtime bump, exactly like real bit rot.
+    pub fn corrupt_dense_byte(&mut self, sel: u64) -> Option<Ino> {
+        let mut files: Vec<Ino> = self
+            .inodes
+            .iter()
+            .filter(|(_, i)| matches!(&i.node, Node::File { data: FileData::Dense(d) } if !d.is_empty()))
+            .map(|(&ino, _)| ino)
+            .collect();
+        files.sort_unstable();
+        if files.is_empty() {
+            return None;
+        }
+        let ino = files[(sel % files.len() as u64) as usize];
+        if let Some(Inode { node: Node::File { data: FileData::Dense(d) }, .. }) =
+            self.inodes.get_mut(&ino)
+        {
+            let at = ((sel >> 16) % d.len() as u64) as usize;
+            d[at] ^= 0x40;
+        }
+        Some(ino)
+    }
+
+    /// Directed fault injection on one file's stored bytes (`off` wraps):
+    /// dense bytes are flipped in place; a chunked file rots the chunk
+    /// covering the offset. Returns `false` for missing/empty files.
+    pub fn corrupt_file_byte(&mut self, path: &str, off: u64) -> bool {
+        let Ok(ino) = self.resolve(path) else { return false };
+        let chunk = match self.inodes.get_mut(&ino) {
+            Some(Inode { node: Node::File { data: FileData::Dense(d) }, .. }) if !d.is_empty() => {
+                let at = (off % d.len() as u64) as usize;
+                d[at] ^= 0x40;
+                return true;
+            }
+            Some(Inode { node: Node::File { data: FileData::Chunked { size, chunks } }, .. })
+                if *size > 0 =>
+            {
+                chunks[((off % *size) / self.chunk_size as u64) as usize]
+            }
+            _ => return false,
+        };
+        self.corrupt_chunk_at(&chunk, off)
     }
 
     // ---- snapshots ----

@@ -31,10 +31,9 @@
 //! fronted by a **readiness-driven reactor** (DESIGN.md §2.9): a
 //! `poll(2)` thread pool, per-connection streaming codec buffers,
 //! explicit backpressure and typed-busy admission control — no thread
-//! per connection. `cargo bench --bench scale` measures both wins —
-//! sharding over the `shards = 1` ablation, and the reactor over the
-//! thread-per-connection ablation at up to 1024 live connections
-//! (`BENCH_scale.json`).
+//! per connection. `cargo bench --bench scale` measures both —
+//! sharding over the `shards = 1` ablation, and the reactor's flat
+//! throughput at up to 1024 live connections (`BENCH_scale.json`).
 
 pub mod auth;
 pub mod baselines;

@@ -312,7 +312,6 @@ digest_cpu_mibps = 300
 
 [server]
 shards = 8
-reactor = true
 reactor_threads = 0
 max_connections = 1024
 max_inflight_per_conn = 32
@@ -328,6 +327,10 @@ chunk_kib = 64
 gc_interval_ops = 128
 snapshot_retention = 8
 
+[integrity]
+scrub_interval_ops = 64
+scrub_batch = 32
+
 [fault]
 enabled = false
 drop_request_p = 0.0
@@ -341,6 +344,7 @@ partition_max_steps = 16
 server_crash_p = 0.0
 server_crash_max_steps = 24
 client_crash_p = 0.0
-promote_after_crash_p = 0.0"
+promote_after_crash_p = 0.0
+corrupt_p = 0.0"
     );
 }

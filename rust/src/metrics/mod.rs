@@ -193,6 +193,15 @@ pub mod names {
     pub const CHUNK_GC_COLLECTED: &str = "chunkstore.gc_collected";
     /// CoW snapshots taken of the home namespace.
     pub const CHUNK_SNAPSHOTS: &str = "chunkstore.snapshots";
+    /// Chunks whose stored bytes no longer matched their digest (scrub
+    /// sweep or verified-read refusal) — quarantined, never served.
+    pub const CHUNK_SCRUB_ERRORS: &str = "chunkstore.scrub_errors";
+    /// Quarantined chunks healed from a digest-verified replica fill.
+    pub const CHUNK_REPAIRED: &str = "chunkstore.repaired";
+    /// Background scrub slices run on the server op cadence.
+    pub const INTEGRITY_SCRUB_TICKS: &str = "integrity.scrub_ticks";
+    /// Op-log records dropped at recovery for a bad HMAC or torn frame.
+    pub const METAQ_CORRUPT_RECORDS: &str = "metaq.corrupt_records";
     pub const OP_LATENCY: &str = "vfs.op_latency";
 
     /// Every metric the system emits, with a one-line meaning. This is
@@ -247,6 +256,10 @@ pub mod names {
         (CHUNK_DEDUP_BYTES_SAVED, "Bytes dedup avoided storing (logical bytes of deduped chunks)."),
         (CHUNK_GC_COLLECTED, "Dead chunks the deferred GC sweep actually freed."),
         (CHUNK_SNAPSHOTS, "CoW snapshots taken of the home namespace."),
+        (CHUNK_SCRUB_ERRORS, "Chunks detected corrupt (scrub or verified read) and quarantined."),
+        (CHUNK_REPAIRED, "Quarantined chunks healed from a digest-verified replica fill."),
+        (INTEGRITY_SCRUB_TICKS, "Background scrub slices run on the server op cadence."),
+        (METAQ_CORRUPT_RECORDS, "Op-log records dropped at recovery for a bad HMAC or torn frame."),
         (OP_LATENCY, "Histogram of per-VFS-op latency, seconds."),
     ];
 

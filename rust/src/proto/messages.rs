@@ -493,6 +493,13 @@ pub enum Request {
     /// [`Response::SnapshotCreated`] with the id readable through
     /// `@v<id>` paths. Primary-only; requires the chunk substrate.
     SnapshotCreate,
+    /// Repair-from-replica (DESIGN.md §2.10): the `ReplicaNeed`/
+    /// `ChunkPush` machinery in reverse — a primary that quarantined
+    /// rotted chunks asks its secondary for their bytes. Answered by
+    /// [`Response::ChunkFill`]; the requester digest-verifies every fill
+    /// before re-installing it. Served by secondaries (and primaries,
+    /// so a stale topology view still heals).
+    ChunkFetch { digests: Vec<Digest> },
 }
 
 impl Request {
@@ -571,6 +578,10 @@ impl Request {
             Request::SnapshotCreate => {
                 e.u8(18);
             }
+            Request::ChunkFetch { digests } => {
+                e.u8(19);
+                encode_digest_list(e, digests);
+            }
         }
     }
 
@@ -619,6 +630,7 @@ impl Request {
                 Request::ChunkPush { chunks }
             }
             18 => Request::SnapshotCreate,
+            19 => Request::ChunkFetch { digests: decode_digest_list(&mut d)? },
             t => return Err(ProtoError(format!("bad Request tag {t}"))),
         };
         d.expect_end()?;
@@ -692,6 +704,11 @@ pub enum Response {
     ChunkAck { stored: u64 },
     /// Answer to [`Request::SnapshotCreate`]: the new snapshot's id.
     SnapshotCreated { id: u64 },
+    /// Answer to [`Request::ChunkFetch`]: the raw bytes of every
+    /// requested chunk the responder holds AND could digest-verify
+    /// (rotted or missing chunks are simply omitted — the requester
+    /// matches fills to requests by recomputing digests).
+    ChunkFill { chunks: Vec<Vec<u8>> },
 }
 
 impl Response {
@@ -788,6 +805,12 @@ impl Response {
             Response::SnapshotCreated { id } => {
                 e.u8(21).u64(*id);
             }
+            Response::ChunkFill { chunks } => {
+                e.u8(22).varint(chunks.len() as u64);
+                for c in chunks {
+                    e.bytes(c);
+                }
+            }
         }
     }
 
@@ -861,6 +884,14 @@ impl Response {
             19 => Response::ReplicaNeed { digests: decode_digest_list(&mut d)? },
             20 => Response::ChunkAck { stored: d.u64()? },
             21 => Response::SnapshotCreated { id: d.u64()? },
+            22 => {
+                let n = d.varint()? as usize;
+                let mut chunks = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    chunks.push(d.bytes()?.to_vec());
+                }
+                Response::ChunkFill { chunks }
+            }
             t => return Err(ProtoError(format!("bad Response tag {t}"))),
         };
         d.expect_end()?;
@@ -961,6 +992,8 @@ mod tests {
             Request::ChunkPush { chunks: vec![] },
             Request::ChunkPush { chunks: vec![vec![1; 64], vec![], vec![2; 7]] },
             Request::SnapshotCreate,
+            Request::ChunkFetch { digests: vec![] },
+            Request::ChunkFetch { digests: vec![[0x5A; 32], [0xC3; 32]] },
         ];
         for r in reqs {
             let b = r.encode();
@@ -1021,6 +1054,8 @@ mod tests {
             Response::ReplicaNeed { digests: vec![[0xAB; 32], [0x01; 32]] },
             Response::ChunkAck { stored: 12 },
             Response::SnapshotCreated { id: 42 },
+            Response::ChunkFill { chunks: vec![] },
+            Response::ChunkFill { chunks: vec![vec![9; 48], vec![], vec![7; 3]] },
         ];
         for r in resps {
             let b = r.encode();

@@ -251,6 +251,27 @@ impl<L: ServerLink> Shipper<L> {
         Ok(())
     }
 
+    /// The repair plane's fetch side (DESIGN.md §2.10): ask the peer
+    /// for chunk payloads by digest. The peer only ships bytes that
+    /// verify against its own copy (rotted/missing chunks are omitted),
+    /// and the caller re-verifies each fill before installing it
+    /// ([`FileServer::repair_chunks`]) — so a fill that rots in flight
+    /// is dropped, never served. Returns however many fills arrived;
+    /// fewer than asked just means the peer could not vouch for the
+    /// rest (retry later or against another peer).
+    pub fn fetch_chunks(&mut self, digests: &[crate::chunkstore::Digest]) -> Result<Vec<Vec<u8>>, FsError> {
+        if digests.is_empty() {
+            return Ok(Vec::new());
+        }
+        match self.link.rpc(Request::ChunkFetch { digests: digests.to_vec() })? {
+            Response::ChunkFill { chunks } => Ok(chunks),
+            Response::Err { code: 111, .. } | Response::Err { code: 112, .. } => {
+                Err(FsError::Disconnected)
+            }
+            r => Err(FsError::Protocol(format!("unexpected chunk-fetch reply {r:?}"))),
+        }
+    }
+
     /// The explicit promotion step: the secondary (already caught up —
     /// call [`Self::ship`] to lag 0 first) takes over as primary.
     /// Returns the log position it took over at.

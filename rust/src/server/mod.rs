@@ -58,7 +58,7 @@ use std::time::Duration;
 
 use crate::callback::NotifyChannel;
 use crate::chunkstore::{digest_hex, Digest};
-use crate::config::ChunkstoreConfig;
+use crate::config::{ChunkstoreConfig, IntegrityConfig};
 use crate::homefs::{FileStore, FsError, NodeKind};
 use crate::lease::{Acquire, LockTable};
 use crate::metrics::{names, Metrics};
@@ -253,6 +253,16 @@ pub struct FileServer {
     /// Mutations since the last dead-chunk sweep (the deferred-GC
     /// cadence: sweep every `chunkstore.gc_interval_ops` applied ops).
     ops_since_gc: AtomicU64,
+    /// `[integrity]` knobs (DESIGN.md §2.10): cadence and slice width
+    /// of the background digest scrub over the chunk table.
+    integrity: IntegrityConfig,
+    /// Requests handled since the last scrub slice (cadence counter,
+    /// same shape as the GC's).
+    ops_since_scrub: AtomicU64,
+    /// Resume point of the scrub walk over the sorted chunk table.
+    /// The table mutates between slices — the walk is amortized
+    /// coverage, not an exact iteration, and wraps at the end.
+    scrub_cursor: AtomicU64,
     /// Transfer pins held by `ChunkPush` (secondary only): one entry per
     /// pushed chunk, released wholesale once a `Replicate` batch lands
     /// (by then file/snapshot/log residency owns its own refs). Leaf
@@ -279,6 +289,9 @@ fn err_resp(e: &FsError) -> Response {
         FsError::NotEmpty(_) => 39,
         FsError::NoSpace => 28,
         FsError::Stale(_) => 116,
+        // integrity refusal (DESIGN.md §2.10): the bytes on disk no
+        // longer match their recorded digest and are NOT served
+        FsError::Corrupted(_) => 118,
         _ => 5,
     };
     Response::Err { code, msg: e.to_string() }
@@ -347,6 +360,9 @@ impl FileServer {
             repl_ingest: Mutex::new(()),
             chunk_cfg,
             ops_since_gc: AtomicU64::new(0),
+            integrity: IntegrityConfig::default(),
+            ops_since_scrub: AtomicU64::new(0),
+            scrub_cursor: AtomicU64::new(0),
             staged_chunks: Mutex::new(Vec::new()),
             metrics,
         }
@@ -587,6 +603,66 @@ impl FileServer {
         if self.chunk_cfg.enabled && n % interval == 0 {
             self.fs.write().unwrap().gc();
         }
+    }
+
+    // ---------------------------------------------------------------
+    // integrity plane (DESIGN.md §2.10)
+    // ---------------------------------------------------------------
+
+    /// Configure the background integrity scrub (`[integrity]` in
+    /// `xufs.toml`). Builder-style, applied before the server is
+    /// shared; the default cadence is [`IntegrityConfig::default`].
+    pub fn with_integrity(mut self, cfg: IntegrityConfig) -> Self {
+        self.integrity = cfg;
+        self
+    }
+
+    /// Background digest scrub: every `integrity.scrub_interval_ops`
+    /// handled requests, re-digest a bounded slice of the chunk table
+    /// (`integrity.scrub_batch` entries) and quarantine mismatches —
+    /// so bit rot is found proactively, not only when a client reads
+    /// the rotted chunk. `scrub_interval_ops = 0` disables the walk.
+    fn maybe_scrub(&self) {
+        let interval = self.integrity.scrub_interval_ops;
+        if !self.chunk_cfg.enabled || interval == 0 {
+            return;
+        }
+        let n = self.ops_since_scrub.fetch_add(1, Ordering::Relaxed) + 1;
+        if n % interval != 0 {
+            return;
+        }
+        let cursor = self.scrub_cursor.load(Ordering::Relaxed) as usize;
+        let batch = self.integrity.scrub_batch.max(1);
+        let (next, _bad) = self.fs.write().unwrap().scrub_chunks(cursor, batch);
+        self.scrub_cursor.store(next as u64, Ordering::Relaxed);
+        self.metrics.incr(names::INTEGRITY_SCRUB_TICKS);
+    }
+
+    /// Walk the ENTIRE chunk table once, quarantining every mismatch.
+    /// Returns the digests quarantined by this pass (repair drivers and
+    /// the fault explorer call this; the op-cadence scrub covers the
+    /// same ground a slice at a time).
+    pub fn scrub_all_chunks(&self) -> Vec<Digest> {
+        let mut fs = self.fs.write().unwrap();
+        let n = fs.chunk_digests().len();
+        let (_, bad) = fs.scrub_chunks(0, n.max(1));
+        bad
+    }
+
+    /// Digests currently quarantined (detected corrupt, refused on
+    /// reads, awaiting a replica fill).
+    pub fn quarantined_chunks(&self) -> Vec<Digest> {
+        self.fs.read().unwrap().quarantined_chunks()
+    }
+
+    /// Heal quarantined chunks from digest-verified replica fills (the
+    /// bytes a [`Request::ChunkFetch`] round trip produced). Each fill
+    /// is re-digested locally; bytes that do not match a quarantined
+    /// digest are dropped — a rotted or forged fill cannot land.
+    /// Returns how many chunks were repaired.
+    pub fn repair_chunks(&self, fills: &[Vec<u8>]) -> u64 {
+        let mut fs = self.fs.write().unwrap();
+        fills.iter().filter(|b| fs.repair_chunk(b).is_some()).count() as u64
     }
 
     /// Ingest one shipped record on the secondary: strict gapless order
@@ -950,7 +1026,14 @@ impl FileServer {
         let (a, data) = {
             let fs = self.fs.read().unwrap();
             let a = fs.stat(key)?;
-            let data = fs.read(key).map(|d| d.to_vec()).unwrap_or_default();
+            // an unreadable file digests as empty (directories etc.) —
+            // EXCEPT integrity refusals, which must propagate: digesting
+            // rot as "empty at version v" would be silent corruption
+            let data = match fs.read(key) {
+                Ok(d) => d,
+                Err(e @ FsError::Corrupted(_)) => return Err(e),
+                Err(_) => Vec::new(),
+            };
             (a, data)
         };
         let digests = self.engine.digests(&data, self.block_bytes);
@@ -965,6 +1048,9 @@ impl FileServer {
         if !self.is_up() {
             return Response::Err { code: 111, msg: "connection refused (server down)".into() };
         }
+        // background integrity scrub rides the op cadence (DESIGN.md
+        // §2.10), exactly like the deferred GC rides the apply cadence
+        self.maybe_scrub();
         // replica-pair role gate (DESIGN.md §2.7): a standby serves only
         // the replication plane until promoted; a fenced ex-primary
         // serves nothing mutable ever again. Code 112 is the links'
@@ -991,6 +1077,7 @@ impl FileServer {
                     Request::Ping
                         | Request::Replicate { .. }
                         | Request::ChunkPush { .. }
+                        | Request::ChunkFetch { .. }
                         | Request::WatermarkQuery { .. }
                         | Request::Promote
                 );
@@ -1054,9 +1141,14 @@ impl FileServer {
                 let snap = {
                     let fs = self.fs.read().unwrap();
                     match fs.stat(&key) {
-                        Ok(a) => {
-                            Ok((a.version, fs.read(&key).map(|d| d.to_vec()).unwrap_or_default()))
-                        }
+                        // an unreadable file serves as empty (directories
+                        // etc.) — EXCEPT integrity refusals, which must
+                        // propagate rather than serve rot as "empty"
+                        Ok(a) => match fs.read(&key) {
+                            Ok(d) => Ok((a.version, d)),
+                            Err(e @ FsError::Corrupted(_)) => Err(e),
+                            Err(_) => Ok((a.version, Vec::new())),
+                        },
                         Err(e) => Err(e),
                     }
                 };
@@ -1378,6 +1470,14 @@ impl FileServer {
                     }
                     Err(e) => err_resp(&e),
                 }
+            }
+            Request::ChunkFetch { digests } => {
+                // repair plane (DESIGN.md §2.10): serve digest-verified
+                // chunk bytes so a peer can heal its quarantined copy.
+                // Rotted or missing chunks are silently omitted — this
+                // node never ships bytes it cannot vouch for, and the
+                // requester matches fills by recomputing digests anyway.
+                Response::ChunkFill { chunks: self.read_chunks(&digests) }
             }
             Request::WatermarkQuery { shard } => {
                 Response::Watermark { shard, watermark: self.repl_watermark(shard as usize) }

@@ -37,6 +37,17 @@ pub enum FaultAction {
     Interrupt,
 }
 
+/// Which durable artifact a [`FaultEvent::CorruptByte`] rots
+/// (DESIGN.md §2.10). The harness maps each onto its topology: `Chunk`
+/// targets the primary's chunk store, `Cache` a client's cache-space
+/// files, `Oplog` a client's durable meta-op log.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CorruptArtifact {
+    Chunk,
+    Cache,
+    Oplog,
+}
+
 /// Control-plane events the harness (not the link) must act on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum FaultEvent {
@@ -48,6 +59,12 @@ pub enum FaultEvent {
     /// (DESIGN.md §2.7). Ignored by unreplicated topologies. The
     /// crashed primary still restarts on schedule — fenced.
     PromoteSecondary,
+    /// Bit rot (DESIGN.md §2.10): flip one byte of one durable
+    /// artifact, selected deterministically from `sel` (which byte of
+    /// which chunk/file/record is the harness's mapping). The integrity
+    /// invariant I5 demands the rot is DETECTED — surfaced as a repair,
+    /// a typed `Corrupted` refusal, or a re-fetch — never served.
+    CorruptByte { artifact: CorruptArtifact, sel: u64 },
 }
 
 /// The plan's verdict for one interaction step.
@@ -192,6 +209,20 @@ impl FaultPlan {
             self.injected += 1;
             // the interaction itself still proceeds normally
         }
+        if self.cfg.corrupt_p > 0.0 && self.rng.chance(self.cfg.corrupt_p) {
+            // bit rot in a durable artifact (DESIGN.md §2.10). With
+            // `corrupt_p = 0` (the default) no die is rolled, so
+            // pre-integrity schedules reproduce byte-identically.
+            let artifact = match self.rng.below(3) {
+                0 => CorruptArtifact::Chunk,
+                1 => CorruptArtifact::Cache,
+                _ => CorruptArtifact::Oplog,
+            };
+            let sel = self.rng.next_u64();
+            self.events.push(FaultEvent::CorruptByte { artifact, sel });
+            self.injected += 1;
+            // the interaction itself still proceeds normally
+        }
         let action = if self.rng.chance(self.cfg.drop_request_p) {
             Some(FaultAction::DropRequest)
         } else if self.rng.chance(self.cfg.drop_reply_p) {
@@ -234,6 +265,7 @@ mod tests {
             server_crash_max_steps: 20,
             client_crash_p: 0.01,
             promote_after_crash_p: 0.25,
+            corrupt_p: 0.02,
         }
     }
 

@@ -23,7 +23,7 @@ mod fault;
 mod wan;
 
 pub use clock::{Clock, RealClock, SimClock, VirtualTime};
-pub use fault::{FaultAction, FaultEvent, FaultPlan, StepOutcome};
+pub use fault::{CorruptArtifact, FaultAction, FaultEvent, FaultPlan, StepOutcome};
 pub use wan::{TransferKind, Wan, WanStats};
 
 #[cfg(test)]

@@ -6,7 +6,8 @@
 //! primary-crash/promote schedule events — through hundreds of seeded
 //! fault schedules (dropped/duplicated/delayed packets, torn transfers,
 //! multi-step partitions, server crash/restart, client crash/recovery,
-//! failover) and checks the convergence invariants after a quiesce:
+//! failover, bit-rot byte flips in durable artifacts) and checks the
+//! convergence invariants after a quiesce:
 //!
 //!   I1  no dirty block is ever lost: every surviving successful close is
 //!       byte-identical at the authoritative home space (last close wins
@@ -21,7 +22,13 @@
 //!   I4  the secondary never serves state ahead of its replication
 //!       watermark: for every path its shipped log governs, its version
 //!       is exactly what the log prescribes at the watermark, and paths
-//!       first created beyond the watermark are absent.
+//!       first created beyond the watermark are absent;
+//!   I5  no client ever observes bytes whose digest mismatches the
+//!       version it was told it read: every injected byte flip is
+//!       DETECTED — surfaced as a repair-from-replica, a cache-block
+//!       demotion, a dropped op-log record, or a typed `Corrupted`
+//!       refusal — never served as data, never a panic (DESIGN.md
+//!       §2.10; the byte-exact I1/I3 sweeps are what catch a leak).
 //!
 //! A failing schedule reproduces deterministically from its printed seed:
 //!
@@ -38,7 +45,7 @@ use xufs::coordinator::{SimLink, SimWorld};
 use xufs::homefs::FsError;
 use xufs::metrics::names;
 use xufs::proto::{LockKind, MetaOp, ReplPayload};
-use xufs::simnet::{FaultEvent, FaultPlan, VirtualTime};
+use xufs::simnet::{CorruptArtifact, FaultEvent, FaultPlan, VirtualTime};
 use xufs::util::Rng;
 
 fn t(s: f64) -> VirtualTime {
@@ -64,6 +71,10 @@ fn chaos_profile() -> FaultConfig {
         // 0 keeps pre-replica schedules byte-identical per seed (no
         // extra die is rolled); the replicated explorer turns it up
         promote_after_crash_p: 0.0,
+        // bit rot in durable artifacts (DESIGN.md §2.10): a 60-op
+        // schedule flips a byte somewhere a handful of times, and I5
+        // demands every flip is detected, never served
+        corrupt_p: 0.02,
     }
 }
 
@@ -391,6 +402,100 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
                         return Err("promote could not complete".into());
                     }
                 }
+                FaultEvent::CorruptByte { artifact, sel } => {
+                    // Bit rot (DESIGN.md §2.10). Chunk rot is only
+                    // injected where the repair plane can heal it: the
+                    // primary's copy of a chunk the secondary also
+                    // holds. Unreplicated runs — and post-failover
+                    // worlds, where the surviving pair member IS the
+                    // authority — retarget the flip at a client's
+                    // cache disk instead.
+                    let artifact = if matches!(artifact, CorruptArtifact::Chunk)
+                        && (!replica || world.is_promoted())
+                    {
+                        CorruptArtifact::Cache
+                    } else {
+                        artifact
+                    };
+                    match artifact {
+                        CorruptArtifact::Chunk => {
+                            if world.corrupt_shared_chunk(sel).is_some() {
+                                // heal inline: the scrub quarantines the
+                                // rotted copy and the repair plane
+                                // refetches it from the secondary; every
+                                // failed round (partition, severed link)
+                                // advances the schedule
+                                let mut healed = false;
+                                for _ in 0..5000 {
+                                    if matches!(world.repair_tick(), Ok(0)) {
+                                        healed = true;
+                                        break;
+                                    }
+                                }
+                                if !healed {
+                                    return Err("chunk repair could not complete".into());
+                                }
+                            }
+                        }
+                        CorruptArtifact::Cache | CorruptArtifact::Oplog => {
+                            // rot on a client disk. Drain the victim's
+                            // queue first: a dirty block or unacked
+                            // op-log record is the ONLY copy of that
+                            // data — integrity detection protects
+                            // durable REDUNDANT state, it cannot
+                            // resurrect bytes that never reached the
+                            // home space. A world too broken to drain
+                            // right now means the flip misses.
+                            let idx = (sel % clients.len() as u64) as usize;
+                            let mut drained = false;
+                            for _ in 0..200 {
+                                if !clients[idx].link().is_connected()
+                                    && clients[idx].link_mut().reconnect().is_err()
+                                {
+                                    continue;
+                                }
+                                if clients[idx].fsync().is_ok() && clients[idx].queue_len() == 0 {
+                                    drained = true;
+                                    break;
+                                }
+                                let _ = clients[idx].link_mut().reconnect();
+                            }
+                            if !drained {
+                                continue;
+                            }
+                            let mut snap = clients[idx].cache_store_snapshot();
+                            let hit = match artifact {
+                                CorruptArtifact::Oplog => {
+                                    snap.corrupt_file_byte(xufs::metaq::OPLOG_PATH, sel >> 16)
+                                }
+                                _ => snap.corrupt_dense_byte(sel).is_some(),
+                            };
+                            if !hit {
+                                continue;
+                            }
+                            // crash + recover on the rotted disk: the
+                            // recovery pass must DETECT the flip (demote
+                            // the block, drop the record) and never
+                            // panic; the final I1–I3 sweeps prove the
+                            // client re-faulted truth instead of
+                            // serving rot (I5)
+                            let id = clients[idx].link().client_id();
+                            let mut back = None;
+                            for _ in 0..5000 {
+                                if let Ok((c2, _)) = world.mount_recovered("/home/u", &snap, id) {
+                                    back = Some(c2);
+                                    break;
+                                }
+                            }
+                            let Some(mut c2) = back else {
+                                return Err("rotted client could not re-mount".into());
+                            };
+                            c2.writeback = WritebackMode::Async;
+                            c2.async_flush_threshold = 3;
+                            clients[idx] = c2;
+                        }
+                    }
+                }
             }
         }
         // steady-state log shipping (bounded lag): rides the WAN and the
@@ -510,6 +615,14 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
                 }
             }
         }
+    }
+    // I5: no undetected rot survives the schedule — a full scrub of the
+    // authority's chunk table quarantines nothing (every injected flip
+    // was healed or refused before quiesce), and the byte-exact I1/I3
+    // sweeps above already proved no client ever read rotted data
+    let bad = authority.scrub_all_chunks();
+    if !bad.is_empty() {
+        return Err(format!("I5: {} chunk(s) still rotted after quiesce", bad.len()));
     }
     Ok(())
 }

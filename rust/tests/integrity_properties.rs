@@ -1,0 +1,259 @@
+//! End-to-end integrity plane (DESIGN.md §2.10): seeded bit-rot fuzz
+//! and directed repair tests across every durable artifact — the
+//! server's content-addressed chunk store, dense home files, client
+//! cache disks, and the durable op log. The contract under test is
+//! invariant I5: rot is always DETECTED (quarantine + repair, block
+//! demotion, dropped record, or a typed `FsError::Corrupted` refusal)
+//! and never served as data, never a panic.
+
+use xufs::client::{OpenFlags, ServerLink, Vfs, WritebackMode, XufsClient};
+use xufs::config::XufsConfig;
+use xufs::coordinator::{SimLink, SimWorld};
+use xufs::homefs::FsError;
+use xufs::metaq::OPLOG_PATH;
+use xufs::metrics::names;
+use xufs::simnet::VirtualTime;
+use xufs::util::Rng;
+
+fn t(s: f64) -> VirtualTime {
+    VirtualTime::from_secs(s)
+}
+
+fn read_all(c: &mut XufsClient<SimLink>, path: &str) -> Result<Vec<u8>, FsError> {
+    let fd = c.open(path, OpenFlags::rdonly())?;
+    let mut out = Vec::new();
+    let mut buf = vec![0u8; 8192];
+    loop {
+        match c.read(fd, &mut buf) {
+            Ok(0) => break,
+            Ok(n) => out.extend_from_slice(&buf[..n]),
+            Err(e) => {
+                let _ = c.close(fd);
+                return Err(e);
+            }
+        }
+    }
+    c.close(fd)?;
+    Ok(out)
+}
+
+/// Seeded fuzz over the chunk store: a flipped byte anywhere in the
+/// table is refused by every read that touches it (pristine bytes or a
+/// typed `Corrupted` — never rotted data), the scrub quarantines
+/// exactly the rotted chunk, a fill that fails its digest is rejected,
+/// and the pristine fill heals it back to byte-exact service.
+#[test]
+fn chunk_bitflip_fuzz_detected_never_served_and_repairable() {
+    for seed in 0..20u64 {
+        let mut world = SimWorld::new(XufsConfig::default());
+        let mut rng = Rng::new(0x0B17_F11F ^ seed);
+        world.home(|s| s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap());
+        let mut files: Vec<(String, Vec<u8>)> = Vec::new();
+        for i in 0..3usize {
+            let mut data = vec![0u8; 100_000 + 30_000 * i];
+            rng.fill_bytes(&mut data);
+            let path = format!("/home/u/f{i}");
+            world.home(|s| s.home_mut().write(&path, &data, t(0.0)).unwrap());
+            files.push((path, data));
+        }
+        // capture pristine chunk bytes up front (the repair fills below)
+        let pristine: Vec<Vec<u8>> = world.home(|s| {
+            let g = s.home();
+            g.chunk_digests().iter().map(|d| g.chunk_data(d).unwrap()).collect()
+        });
+        let d = world
+            .home(|s| s.home_mut().corrupt_chunk_byte(rng.next_u64()))
+            .expect("a stored chunk to rot");
+        let mut refused = 0;
+        for (path, want) in &files {
+            match world.home(|s| s.home().read(path)) {
+                Ok(got) => assert_eq!(&got, want, "seed {seed}: {path} served wrong bytes"),
+                Err(FsError::Corrupted(_)) => refused += 1,
+                Err(e) => panic!("seed {seed}: {path}: unexpected error {e}"),
+            }
+        }
+        assert_eq!(refused, 1, "seed {seed}: exactly one file holds the rotted chunk");
+        // the scrub quarantines exactly the rotted chunk
+        let bad = world.server.scrub_all_chunks();
+        assert_eq!(bad, vec![d], "seed {seed}");
+        assert_eq!(world.server.quarantined_chunks(), vec![d], "seed {seed}");
+        assert!(world.metrics.counter(names::CHUNK_SCRUB_ERRORS) >= 1);
+        // a forged fill is dropped on its own digest check...
+        assert_eq!(world.server.repair_chunks(&[b"not the chunk".to_vec()]), 0, "seed {seed}");
+        assert_eq!(world.server.quarantined_chunks(), vec![d], "seed {seed}");
+        // ...the pristine fill heals (only the quarantined digest takes)
+        assert_eq!(world.server.repair_chunks(&pristine), 1, "seed {seed}");
+        assert!(world.server.quarantined_chunks().is_empty(), "seed {seed}");
+        assert!(world.metrics.counter(names::CHUNK_REPAIRED) >= 1);
+        for (path, want) in &files {
+            let got = world.home(|s| s.home().read(path).unwrap());
+            assert_eq!(&got, want, "seed {seed}: {path} after repair");
+        }
+    }
+}
+
+/// The directed repair-from-replica acceptance case: the primary
+/// detects a rotted chunk, quarantines it, fetches the digest-verified
+/// bytes from the secondary over `ChunkFetch`/`ChunkFill`, re-verifies,
+/// re-pins, and serves — pristine end to end, surfaced in metrics.
+#[test]
+fn primary_repairs_rotted_chunk_from_secondary() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    world.home(|s| s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap());
+    world.enable_replica();
+    let mut c = world.mount("/home/u").unwrap();
+    let mut data = vec![0u8; 256 * 1024];
+    let mut rng = Rng::new(0x4EA1_12E5);
+    rng.fill_bytes(&mut data);
+    c.write_file("/home/u/tool.bin", &data, 65536).unwrap();
+    c.fsync().unwrap();
+    assert_eq!(world.replica_tick(true), 0, "chunks shipped to the standby");
+    // rot the primary's copy of a chunk the secondary also holds
+    world.corrupt_shared_chunk(0xC0FF_EE00_0000_0002).expect("a shared chunk exists");
+    // the primary refuses the file rather than serving rot...
+    assert!(matches!(
+        world.home(|s| s.home().read("/home/u/tool.bin")),
+        Err(FsError::Corrupted(_))
+    ));
+    // ...until the repair plane heals it from the secondary
+    assert_eq!(world.repair_tick().unwrap(), 0, "every quarantined chunk healed");
+    assert!(world.server.quarantined_chunks().is_empty());
+    assert!(world.metrics.counter(names::CHUNK_SCRUB_ERRORS) >= 1, "detection surfaced");
+    assert!(world.metrics.counter(names::CHUNK_REPAIRED) >= 1, "repair surfaced");
+    assert_eq!(world.home(|s| s.home().read("/home/u/tool.bin").unwrap()), data);
+    // a fresh client faults the file through the healed primary
+    let mut c2 = world.mount("/home/u").unwrap();
+    assert_eq!(read_all(&mut c2, "/home/u/tool.bin").unwrap(), data);
+}
+
+/// The background scrub rides the op cadence exactly like deferred GC:
+/// request traffic alone walks the chunk table and quarantines rot,
+/// with the ticks surfaced in metrics.
+#[test]
+fn background_scrub_rides_op_cadence_and_quarantines_rot() {
+    let mut cfg = XufsConfig::default();
+    cfg.integrity.scrub_interval_ops = 8;
+    cfg.integrity.scrub_batch = 1024;
+    let mut world = SimWorld::new(cfg);
+    world.home(|s| s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap());
+    let mut c = world.mount("/home/u").unwrap();
+    let mut data = vec![0u8; 128 * 1024];
+    let mut rng = Rng::new(0x5C0B_0005);
+    rng.fill_bytes(&mut data);
+    c.write_file("/home/u/a.bin", &data, 65536).unwrap();
+    c.fsync().unwrap();
+    world.home(|s| assert!(s.home_mut().corrupt_chunk_byte(3).is_some()));
+    assert!(world.server.quarantined_chunks().is_empty(), "rot is silent until scrubbed");
+    // ordinary op traffic drives the deferred scrub
+    for i in 0..24 {
+        c.write_file(&format!("/home/u/t{i}"), b"tick", 1024).unwrap();
+        c.fsync().unwrap();
+    }
+    assert!(world.metrics.counter(names::INTEGRITY_SCRUB_TICKS) >= 1);
+    assert!(world.metrics.counter(names::CHUNK_SCRUB_ERRORS) >= 1);
+    assert!(!world.server.quarantined_chunks().is_empty(), "the scrub found the rot");
+}
+
+/// Cache-disk rot while a client is down: recovery's verify pass
+/// demotes exactly the rotted block to Absent (counted), and the next
+/// read re-faults pristine bytes from home instead of serving rot.
+#[test]
+fn cache_rot_demotes_on_recover_and_refaults_from_home() {
+    let mut world = SimWorld::new(XufsConfig::default());
+    let mut data = vec![0u8; 200 * 1024];
+    let mut rng = Rng::new(0xCAC4_E007);
+    rng.fill_bytes(&mut data);
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/big.bin", &data, t(0.0)).unwrap();
+    });
+    let mut c = world.mount("/home/u").unwrap();
+    c.scan_file("/home/u/big.bin", 65536).unwrap();
+    let id = c.link().client_id();
+    let mut snap = c.cache_store_snapshot();
+    drop(c);
+    // rot one byte of the cached content while the process is down
+    assert!(snap.corrupt_file_byte("/home/u/big.bin", 77_777));
+    let before = world.metrics.counter(names::CACHE_RECOVER_DEMOTED);
+    let (mut c2, corrupt) = world.mount_recovered("/home/u", &snap, id).unwrap();
+    assert_eq!(corrupt, 0, "the op log itself is intact");
+    assert!(
+        world.metrics.counter(names::CACHE_RECOVER_DEMOTED) > before,
+        "the rotted block demoted instead of surviving recovery"
+    );
+    assert_eq!(read_all(&mut c2, "/home/u/big.bin").unwrap(), data, "re-faulted, not served");
+}
+
+/// Seeded fuzz over the durable op log: a flipped byte anywhere in the
+/// log is caught by the per-record HMAC — the damaged suffix is dropped
+/// and counted, recovery replays what survived, and nothing wrong ever
+/// reaches the home space. Never a panic.
+#[test]
+fn oplog_bitflip_fuzz_drops_records_and_counts_them() {
+    for seed in 0..10u64 {
+        let mut world = SimWorld::new(XufsConfig::default());
+        world.home(|s| s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap());
+        let mut c = world.mount("/home/u").unwrap();
+        c.writeback = WritebackMode::Async;
+        c.async_flush_threshold = usize::MAX;
+        let mut rng = Rng::new(0x106_0106 ^ seed);
+        let mut datas: Vec<Vec<u8>> = Vec::new();
+        for i in 0..4usize {
+            let mut d = vec![0u8; 2048];
+            rng.fill_bytes(&mut d);
+            c.write_file(&format!("/home/u/q{i}"), &d, 1024).unwrap();
+            datas.push(d);
+        }
+        assert!(c.queue_len() > 0, "seed {seed}: the durable log is non-empty");
+        let id = c.link().client_id();
+        let mut snap = c.cache_store_snapshot();
+        drop(c);
+        assert!(snap.corrupt_file_byte(OPLOG_PATH, rng.next_u64()), "seed {seed}");
+        let before = world.metrics.counter(names::METAQ_CORRUPT_RECORDS);
+        let (c2, corrupt) = world.mount_recovered("/home/u", &snap, id).unwrap();
+        assert!(corrupt >= 1, "seed {seed}: the flip is detected, not replayed");
+        assert_eq!(
+            world.metrics.counter(names::METAQ_CORRUPT_RECORDS) - before,
+            corrupt as u64,
+            "seed {seed}: detections surface in metrics"
+        );
+        assert_eq!(c2.queue_len(), 0, "seed {seed}: the surviving prefix replays and drains");
+        // dropped ops are LOST, never resurrected wrong: whatever did
+        // reach home is byte-exact
+        for (i, want) in datas.iter().enumerate() {
+            let p = format!("/home/u/q{i}");
+            world.home(|s| {
+                if s.home().exists(&p) {
+                    assert_eq!(&s.home().read(&p).unwrap(), want, "seed {seed}: {p}");
+                }
+            });
+        }
+    }
+}
+
+/// Dense-substrate rot (the chunkstore ablation): the whole-file sum
+/// recorded at write time refuses a rotted read with the typed error,
+/// and the refusal travels the wire to the client as `Corrupted` — the
+/// client never receives the rotted bytes.
+#[test]
+fn dense_file_rot_refuses_with_typed_error_end_to_end() {
+    let mut cfg = XufsConfig::default();
+    cfg.chunkstore.enabled = false;
+    let mut world = SimWorld::new(cfg);
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut()
+            .write("/home/u/doc", b"dense bytes guarded by a whole-file sum", t(0.0))
+            .unwrap();
+    });
+    assert!(world.home(|s| s.home_mut().corrupt_dense_byte(7)).is_some());
+    assert!(matches!(
+        world.home(|s| s.home().read("/home/u/doc")),
+        Err(FsError::Corrupted(_))
+    ));
+    let mut c = world.mount("/home/u").unwrap();
+    match read_all(&mut c, "/home/u/doc") {
+        Err(FsError::Corrupted(_)) => {}
+        r => panic!("client must see the typed integrity refusal, got {r:?}"),
+    }
+}

@@ -113,7 +113,7 @@ fn rand_repl_record(rng: &mut Rng) -> ReplRecord {
 }
 
 fn rand_request(rng: &mut Rng) -> Request {
-    match rng.below(19) {
+    match rng.below(20) {
         0 => Request::AuthHello { key_id: rand_string(rng) },
         1 => Request::AuthProof { key_id: rand_string(rng), proof: rand_bytes(rng, 48) },
         2 => Request::Stat { path: rand_string(rng) },
@@ -153,14 +153,15 @@ fn rand_request(rng: &mut Rng) -> Request {
         17 => Request::ChunkPush {
             chunks: (0..rng.below(4)).map(|_| rand_bytes(rng, 48)).collect(),
         },
-        _ => Request::SnapshotCreate,
+        18 => Request::SnapshotCreate,
+        _ => Request::ChunkFetch { digests: rand_chunk_digests(rng) },
     }
 }
 
 fn rand_response(rng: &mut Rng, nested: bool) -> Response {
     // CompoundReply never nests (the codec rejects it); the generator
     // respects that so every generated frame is valid
-    let top = if nested { 21 } else { 22 };
+    let top = if nested { 22 } else { 23 };
     match rng.below(top) {
         0 => Response::Challenge { nonce: rand_bytes(rng, 32) },
         1 => Response::AuthOk { session: rng.next_u64() },
@@ -207,6 +208,9 @@ fn rand_response(rng: &mut Rng, nested: bool) -> Response {
         18 => Response::ReplicaNeed { digests: rand_chunk_digests(rng) },
         19 => Response::ChunkAck { stored: rng.below(1 << 40) },
         20 => Response::SnapshotCreated { id: rng.below(1 << 40) },
+        21 => Response::ChunkFill {
+            chunks: (0..rng.below(4)).map(|_| rand_bytes(rng, 48)).collect(),
+        },
         _ => Response::CompoundReply {
             replies: (0..rng.below(4)).map(|_| rand_response(rng, true)).collect(),
         },

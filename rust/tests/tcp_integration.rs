@@ -31,9 +31,9 @@ fn rig(files: &[(&str, Vec<u8>)]) -> Rig {
 }
 
 /// `scfg: Some(..)` pins an explicit `[server]` config through
-/// `TcpServer::spawn_with` (no env pin); `None` uses `TcpServer::spawn`,
-/// which serves with the reactor core by default and honors the one-release
-/// `XUFS_TCP_LEGACY=1` escape hatch.
+/// `TcpServer::spawn_with`; `None` uses `TcpServer::spawn`. Both serve
+/// with the reactor core — the only serving core since the
+/// thread-per-connection path was removed.
 fn rig_with(files: &[(&str, Vec<u8>)], scfg: Option<&ServerConfig>) -> Rig {
     let metrics = Metrics::new();
     let engine = Arc::new(DigestEngine::native(metrics.clone()));
@@ -278,21 +278,6 @@ fn torn_striped_fetch_detected_via_version() {
         VirtualTime::ZERO,
     );
     assert!(matches!(resp, Response::Err { code: 116, .. }), "{resp:?}");
-}
-
-/// The thread-per-connection ablation (one release of life left behind
-/// `reactor = false` / `XUFS_TCP_LEGACY=1`) must keep serving the full
-/// stack while it exists.
-#[test]
-fn legacy_core_ablation_still_serves() {
-    let mut scfg = XufsConfig::default().server;
-    scfg.reactor = false;
-    let r = rig_with(&[("/home/u/doc.txt", b"hello legacy".to_vec())], Some(&scfg));
-    let mut c = r.client(1);
-    assert_eq!(c.scan_file("/home/u/doc.txt", 4096).unwrap(), 12);
-    c.write_file("/home/u/from-legacy.txt", b"still alive", 4096).unwrap();
-    assert!(r.server.home().exists("/home/u/from-legacy.txt"));
-    assert!(r.metrics.counter(xufs::metrics::names::SERVER_ACCEPTS) > 0);
 }
 
 /// `TcpLink` endpoint rotation (SimLink parity, DESIGN.md §2.7): a
