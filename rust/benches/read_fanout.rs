@@ -1,0 +1,26 @@
+//! Read-fanout bench runner: prints the read-scaling table (3 WAN sites
+//! vs 0/1/2/3 serving secondaries), regenerates `BENCH_fanout.json` at
+//! the repo root, and ENFORCES the acceptance criterion (>= 1.8x
+//! aggregate cold-read throughput at 3 serving replicas). Deterministic
+//! virtual-clock model — a single iteration IS the run (the nightly CI
+//! smoke invokes exactly this binary).
+
+use xufs::bench::read_fanout::speedups;
+use xufs::bench::run_read_fanout;
+use xufs::config::XufsConfig;
+
+fn main() {
+    let cfg = XufsConfig::default();
+    let t = run_read_fanout(&cfg);
+    t.print();
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_fanout.json");
+    std::fs::write(&path, format!("{}\n", t.to_json())).expect("write BENCH_fanout.json");
+    println!("wrote {}", path.display());
+    let s = speedups(&t).expect("table parses");
+    let at3 = *s.last().expect("3-replica row");
+    assert!(
+        at3 >= 1.8,
+        "read fan-out must deliver >= 1.8x aggregate throughput at 3 serving replicas, got {at3}x"
+    );
+    println!("acceptance: {at3}x >= 1.8x at 3 serving replicas OK");
+}

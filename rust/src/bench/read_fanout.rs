@@ -1,0 +1,144 @@
+//! Read-fanout bench (DESIGN.md §2.11): aggregate cold-read throughput
+//! for 3 WAN sites against 0/1/2/3 SERVING secondaries versus the
+//! primary alone, over heterogeneous RTTs (8 ms to a site's local
+//! replica, 48 ms cross-site, 96 ms to the far primary). Every read is
+//! charged to the virtual clock over the site's own WAN path, so the
+//! table reproduces bit-identically on any machine.
+//! `BENCH_fanout.json` at the repo root records it (regenerate:
+//! `cargo bench --bench read_fanout`).
+
+use crate::client::Vfs;
+use crate::config::XufsConfig;
+use crate::coordinator::SimWorld;
+use crate::simnet::VirtualTime;
+
+use super::report::{rate, Table};
+
+/// WAN sites issuing reads (one client per site).
+const SITES: usize = 3;
+/// Cold files read per site per run.
+const FILES_PER_SITE: usize = 40;
+/// Bytes per file — small enough that round trips dominate, the regime
+/// read fan-out exists for.
+const FILE_BYTES: usize = 16 * 1024;
+/// RTT from a site to its OWN replica (same metro).
+const RTT_LOCAL_S: f64 = 0.008;
+/// RTT from a site to another site's replica.
+const RTT_CROSS_S: f64 = 0.048;
+/// RTT from every site to the far primary.
+const RTT_PRIMARY_S: f64 = 0.096;
+
+/// One throughput row.
+pub struct FanoutPoint {
+    pub label: String,
+    /// Secondaries admitted to serve reads (0 = primary-only baseline).
+    pub serving: usize,
+    pub ops_per_s: f64,
+    pub speedup: f64,
+}
+
+/// Aggregate cold-read ops/s with `serving` read replicas (0 disables
+/// fan-out entirely: the paper's primary-bound reads).
+fn run_point(base: &XufsConfig, serving: usize) -> f64 {
+    let mut cfg = base.clone();
+    cfg.wan.rtt_s = RTT_PRIMARY_S;
+    cfg.replica.secondaries = serving.max(1);
+    cfg.replica.read_fanout = serving > 0;
+    cfg.replica.staleness_ops = 64;
+    let mut world = SimWorld::new(cfg);
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u/data", VirtualTime::ZERO).unwrap();
+        for site in 0..SITES {
+            for k in 0..FILES_PER_SITE {
+                let body = vec![(site * 31 + k) as u8; FILE_BYTES];
+                s.home_mut()
+                    .write(&format!("/home/u/data/s{site}_{k}"), &body, VirtualTime::ZERO)
+                    .unwrap();
+            }
+        }
+    });
+    // secondaries come up from the snapshot: fully caught up, serving
+    world.enable_replica();
+    let mut clients = Vec::new();
+    for site in 0..SITES {
+        let rtts: Vec<f64> = (0..serving.max(1))
+            .map(|j| if j == site { RTT_LOCAL_S } else { RTT_CROSS_S })
+            .collect();
+        clients.push(world.mount_at("/home/u", &rtts).unwrap());
+    }
+    let t0 = clients[0].now();
+    for k in 0..FILES_PER_SITE {
+        for site in 0..SITES {
+            clients[site]
+                .scan_file(&format!("/home/u/data/s{site}_{k}"), FILE_BYTES)
+                .expect("bench read");
+        }
+    }
+    let elapsed = clients[0].now().saturating_sub(t0).as_secs();
+    (SITES * FILES_PER_SITE) as f64 / elapsed.max(1e-9)
+}
+
+/// The per-row speedups over the primary-only baseline, in row order
+/// (baseline first, so its entry is 1.0).
+pub fn speedups(t: &Table) -> Option<Vec<f64>> {
+    t.rows.iter().map(|r| r.last()?.strip_suffix('x')?.parse::<f64>().ok()).collect()
+}
+
+/// The read-scaling table (`cargo bench --bench read_fanout`).
+pub fn run_read_fanout(cfg: &XufsConfig) -> Table {
+    let mut t = Table::new(
+        "Read fan-out — aggregate cold-read throughput, 3 WAN sites vs serving secondaries \
+         (bounded-staleness reads, DESIGN.md §2.11)",
+        &["serving replicas", "read ops/s", "speedup"],
+    );
+    let base = run_point(cfg, 0);
+    let mut points = Vec::new();
+    for serving in 0..=SITES {
+        let ops = run_point(cfg, serving);
+        points.push(FanoutPoint {
+            label: if serving == 0 { "primary-only".into() } else { format!("{serving}") },
+            serving,
+            ops_per_s: ops,
+            speedup: ops / base.max(1e-9),
+        });
+    }
+    for p in &points {
+        t.row(vec![p.label.clone(), rate(p.ops_per_s), format!("{:.2}x", p.speedup)]);
+    }
+    t.note(format!(
+        "{SITES} sites x {FILES_PER_SITE} cold {}-KiB reads; RTTs: {:.0} ms site-local replica, \
+         {:.0} ms cross-site, {:.0} ms primary — each site's link picks its lowest-RTT serving \
+         replica, lagging replicas answer code 119 and fall back",
+        FILE_BYTES / 1024,
+        RTT_LOCAL_S * 1e3,
+        RTT_CROSS_S * 1e3,
+        RTT_PRIMARY_S * 1e3,
+    ));
+    t.note(
+        "acceptance: >= 1.8x aggregate read throughput at 3 serving replicas \
+         (benches/read_fanout.rs enforces)"
+            .to_string(),
+    );
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The nightly smoke in miniature: one deterministic run, read
+    /// throughput must scale with serving replicas and clear the 1.8x
+    /// acceptance bar at 3.
+    #[test]
+    fn fanout_scales_reads_past_acceptance_bar() {
+        let t = run_read_fanout(&XufsConfig::default());
+        let s = speedups(&t).expect("parse speedups");
+        assert_eq!(s.len(), SITES + 1);
+        assert!((s[0] - 1.0).abs() < 0.05, "baseline row is 1.0x, got {}", s[0]);
+        for w in s.windows(2) {
+            assert!(w[1] >= w[0] * 0.95, "throughput must not regress as replicas join: {s:?}");
+        }
+        assert!(s[1] > 1.2, "one serving replica already beats primary-only: {s:?}");
+        assert!(s[SITES] >= 1.8, "3 serving replicas must clear 1.8x, got {}", s[SITES]);
+    }
+}

@@ -109,7 +109,7 @@ fn client_loop(
     let big = format!("/bench/c{c}/data/big.bin");
     let big_version = match server.handle(
         client_id,
-        Request::FetchMeta { path: big.clone() },
+        Request::FetchMeta { path: big.clone(), min_version: 0 },
         VirtualTime::ZERO,
     ) {
         Response::FileMeta { version, .. } => version,
@@ -432,7 +432,7 @@ pub fn run_conn_point(cfg: &XufsConfig, clients: usize, window: f64) -> ConnPoin
         (0..CONN_FILES)
             .map(|j| match server.handle(
                 u64::MAX,
-                Request::FetchMeta { path: format!("/conn/f{j}") },
+                Request::FetchMeta { path: format!("/conn/f{j}"), min_version: 0 },
                 VirtualTime::ZERO,
             ) {
                 Response::FileMeta { version, .. } => version,

@@ -109,6 +109,15 @@ pub struct XufsClient<L: ServerLink> {
     mount_root: String,
     metrics: Metrics,
     last_gen: u64,
+    /// Per-path observed-version floors (DESIGN.md §2.11): the highest
+    /// version this session has seen for each path, from flush acks,
+    /// metadata fetches, and invalidation callbacks. Sent as the
+    /// bounded-staleness token (`min_version`) with replica-eligible
+    /// reads so a lagging secondary can never serve this client a
+    /// version regression. Session-scoped on purpose: monotonic reads
+    /// are a session property, and versions restart at 1 when a path is
+    /// unlinked and recreated, so known removals clear the entry.
+    observed_floor: HashMap<String, u64>,
     pub writeback: WritebackMode,
     /// Async mode ships the queue once this many ops accumulate.
     pub async_flush_threshold: usize,
@@ -156,6 +165,7 @@ impl<L: ServerLink> XufsClient<L> {
             mount_root: root,
             metrics,
             last_gen: gen,
+            observed_floor: HashMap::new(),
             writeback: WritebackMode::SyncOnClose,
             async_flush_threshold: 64,
             compound: true,
@@ -236,6 +246,43 @@ impl<L: ServerLink> XufsClient<L> {
         vpath::join(&self.cwd, path)
     }
 
+    /// The bounded-staleness token for `path` (DESIGN.md §2.11): the
+    /// highest version this session has observed, 0 if none.
+    pub fn observed_floor(&self, path: &str) -> u64 {
+        self.observed_floor.get(path).copied().unwrap_or(0)
+    }
+
+    fn observe_version(&mut self, path: &str, version: u64) {
+        let e = self.observed_floor.entry(path.to_string()).or_insert(0);
+        if version > *e {
+            *e = version;
+        }
+    }
+
+    /// Settle the floor map after the server applied one of OUR
+    /// mutations: writes raise the target's floor to the acked version;
+    /// removals CLEAR it (a recreated path restarts at version 1, and a
+    /// floor surviving its file would wrongly refuse every replica until
+    /// the recreation outran the old version).
+    fn note_floor_applied(&mut self, op: &MetaOp, new_version: u64) {
+        match op {
+            MetaOp::Unlink { path } | MetaOp::Rmdir { path } => {
+                self.observed_floor.remove(path);
+            }
+            MetaOp::Rename { from, to } => {
+                self.observed_floor.remove(from);
+                self.observe_version(to, new_version);
+            }
+            MetaOp::Mkdir { path }
+            | MetaOp::Create { path }
+            | MetaOp::Truncate { path, .. }
+            | MetaOp::SetMode { path, .. }
+            | MetaOp::WriteFull { path, .. }
+            | MetaOp::WriteDelta { path, .. }
+            | MetaOp::WriteRef { path, .. } => self.observe_version(path, new_version),
+        }
+    }
+
     // ---------------------------------------------------------------
     // consistency: notifications, reconnect, lease housekeeping
     // ---------------------------------------------------------------
@@ -308,6 +355,10 @@ impl<L: ServerLink> XufsClient<L> {
         for ev in self.link.drain_notifications() {
             match ev {
                 NotifyEvent::Invalidate { path, new_version } => {
+                    // the callback is an observation: raise the
+                    // staleness floor so no replica read can regress
+                    // behind what the server just announced
+                    self.observe_version(&path, new_version);
                     let stale = self
                         .cache
                         .entry(&path)
@@ -318,6 +369,8 @@ impl<L: ServerLink> XufsClient<L> {
                     }
                 }
                 NotifyEvent::Removed { path } => {
+                    // versions restart at 1 on recreate: clear the floor
+                    self.observed_floor.remove(&path);
                     self.cache.remove(&path, now);
                     self.metrics.incr(names::CACHE_INVALIDATIONS);
                 }
@@ -444,6 +497,7 @@ impl<L: ServerLink> XufsClient<L> {
                     self.metrics.incr(names::WRITEBACK_FILES);
                     self.metrics.add(names::WRITEBACK_BYTES, op.wire_bytes());
                 }
+                self.note_floor_applied(op, new_version);
                 self.queue.ack(self.cache.store_mut(), seq, now)?;
                 Ok(Settle::Acked)
             }
@@ -519,6 +573,7 @@ impl<L: ServerLink> XufsClient<L> {
                         self.metrics.incr(names::WRITEBACK_FILES);
                         self.metrics.add(names::WRITEBACK_BYTES, op.wire_bytes());
                     }
+                    self.note_floor_applied(&op, new_version);
                     self.queue.ack(self.cache.store_mut(), seq, now)?;
                     shipped += 1;
                 }
@@ -702,15 +757,25 @@ impl<L: ServerLink> XufsClient<L> {
     /// (re)initialize the entry's block grid. Resident blocks survive
     /// when the version is unchanged (revalidation).
     fn refresh_meta(&mut self, path: &str) -> Result<(), FsError> {
-        match self.link.rpc(Request::FetchMeta { path: path.to_string() }) {
+        // the bounded-staleness token rides every metadata fetch: a
+        // read-serving replica behind this floor answers 119 and the
+        // link retries toward the primary (DESIGN.md §2.11)
+        let min_version = self.observed_floor(path);
+        match self.link.rpc(Request::FetchMeta { path: path.to_string(), min_version }) {
             Ok(Response::FileMeta { version, size, digests }) => {
                 let now = self.clock.now();
+                self.observe_version(path, version);
                 self.cache.begin_paged(path, version, size, digests, now)?;
                 Ok(())
             }
             Ok(Response::Err { code: 2, msg }) => Err(FsError::NotFound(msg)),
             Ok(Response::Err { code: 21, msg }) => Err(FsError::IsADir(msg)),
             Ok(Response::Err { code: 111, .. }) => Err(FsError::Disconnected),
+            // 119: every replica in reach (and the fallback) refused the
+            // staleness floor — transient by construction (shipping
+            // catches the replica up); surface as a disconnect so the
+            // op-boundary retry loop re-runs the fetch
+            Ok(Response::Err { code: 119, .. }) => Err(FsError::Disconnected),
             // 118: the server refused the digest pass over rotted bytes
             // (DESIGN.md §2.10) — surface the typed refusal, never data
             Ok(Response::Err { code: 118, msg }) => Err(FsError::Corrupted(msg)),

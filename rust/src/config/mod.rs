@@ -203,11 +203,31 @@ pub struct ReplicaConfig {
     /// many applied ops (quiesce/promote always drain fully). Smaller =
     /// tighter lag = less promote-time catch-up.
     pub max_lag_ops: u64,
+    /// How many secondaries to stand up (DESIGN.md §2.11). The first is
+    /// the promotion target; all of them ingest the same shipped log.
+    pub secondaries: usize,
+    /// Read fan-out switch: when on, secondaries serve read-only traffic
+    /// (`Stat`/`ReadDir`/`Fetch`/`FetchMeta`/`FetchRange`) at their
+    /// replication watermark and clients route reads to the
+    /// lowest-RTT replica, falling back to the primary on `TooStale`.
+    pub read_fanout: bool,
+    /// Bounded-staleness window for serving secondaries: a replica whose
+    /// replication watermark trails the primary's last-announced log
+    /// head by more than this many applied ops refuses reads with code
+    /// 119 `TooStale` until shipping catches it back up.
+    pub staleness_ops: u64,
 }
 
 impl Default for ReplicaConfig {
     fn default() -> Self {
-        ReplicaConfig { enabled: false, ship_batch: 64, max_lag_ops: 8 }
+        ReplicaConfig {
+            enabled: false,
+            ship_batch: 64,
+            max_lag_ops: 8,
+            secondaries: 1,
+            read_fanout: false,
+            staleness_ops: 64,
+        }
     }
 }
 
@@ -416,6 +436,11 @@ impl XufsConfig {
                 "replica.enabled" => cfg.replica.enabled = value.as_bool()?,
                 "replica.ship_batch" => cfg.replica.ship_batch = value.as_usize()?.max(1),
                 "replica.max_lag_ops" => cfg.replica.max_lag_ops = value.as_u64()?,
+                "replica.secondaries" => {
+                    cfg.replica.secondaries = value.as_usize()?.max(1)
+                }
+                "replica.read_fanout" => cfg.replica.read_fanout = value.as_bool()?,
+                "replica.staleness_ops" => cfg.replica.staleness_ops = value.as_u64()?,
                 "chunkstore.enabled" => cfg.chunkstore.enabled = value.as_bool()?,
                 "chunkstore.chunk_kib" => {
                     cfg.chunkstore.chunk_kib = value.as_usize()?.max(1)
@@ -574,18 +599,29 @@ localized_dirs = "/scratch/out:/scratch/tmp"
 
     #[test]
     fn parse_replica_keys() {
-        let text = "[replica]\nenabled = true\nship_batch = 16\nmax_lag_ops = 4\n";
+        let text = "[replica]\nenabled = true\nship_batch = 16\nmax_lag_ops = 4\n\
+                    secondaries = 3\nread_fanout = true\nstaleness_ops = 12\n";
         let c = XufsConfig::from_toml(text).unwrap();
         assert!(c.replica.enabled);
         assert_eq!(c.replica.ship_batch, 16);
         assert_eq!(c.replica.max_lag_ops, 4);
+        assert_eq!(c.replica.secondaries, 3);
+        assert!(c.replica.read_fanout);
+        assert_eq!(c.replica.staleness_ops, 12);
         // replication must be opt-in (the applied-op log costs memory)
         let d = XufsConfig::default();
         assert!(!d.replica.enabled);
         assert_eq!(d.replica.ship_batch, 64);
+        // read fan-out is likewise opt-in; one warm standby by default
+        assert_eq!(d.replica.secondaries, 1);
+        assert!(!d.replica.read_fanout);
+        assert_eq!(d.replica.staleness_ops, 64);
         // a zero batch would never make shipping progress: clamped
         let c = XufsConfig::from_toml("[replica]\nship_batch = 0\n").unwrap();
         assert_eq!(c.replica.ship_batch, 1);
+        // a replica topology needs at least one secondary: clamped
+        let c = XufsConfig::from_toml("[replica]\nsecondaries = 0\n").unwrap();
+        assert_eq!(c.replica.secondaries, 1);
         // the promote dice ride the fault section
         let c = XufsConfig::from_toml("[fault]\npromote_after_crash_p = 0.5\n").unwrap();
         assert!((c.fault.promote_after_crash_p - 0.5).abs() < 1e-12);

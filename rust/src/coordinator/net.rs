@@ -164,6 +164,11 @@ pub struct TcpLink {
     client_id: u64,
     root: String,
     metrics: Metrics,
+    /// Replication-plane link (shipper → secondary): control connection
+    /// only, no callback registration — a secondary refuses registration
+    /// with code 112, which is exactly right for CLIENTS rotating past
+    /// it but would strand the shipper that needs to talk to it.
+    replication: bool,
 }
 
 impl TcpLink {
@@ -205,6 +210,35 @@ impl TcpLink {
             client_id,
             root: root.to_string(),
             metrics,
+            replication: false,
+        };
+        link.establish()?;
+        Ok(link)
+    }
+
+    /// Dial and authenticate a replication-plane link to a secondary:
+    /// the [`crate::replica::Shipper`]'s transport. Skips callback
+    /// registration (a secondary refuses it with code 112) — the
+    /// replication plane has no cache to invalidate.
+    pub fn connect_replication(
+        addr: std::net::SocketAddr,
+        pair: KeyPair,
+        cfg: XufsConfig,
+        metrics: Metrics,
+    ) -> Result<TcpLink, FsError> {
+        let mut link = TcpLink {
+            addrs: vec![addr],
+            active: 0,
+            pair,
+            cfg,
+            control: None,
+            channel: NotifyChannel::new(),
+            callback_thread: None,
+            callback_stop: Arc::new(AtomicBool::new(false)),
+            client_id: 0,
+            root: "/".to_string(),
+            metrics,
+            replication: true,
         };
         link.establish()?;
         Ok(link)
@@ -245,6 +279,11 @@ impl TcpLink {
 
     fn establish_at(&mut self, addr: std::net::SocketAddr) -> Result<(), FsError> {
         let control = dial(addr, &self.pair)?;
+        if self.replication {
+            // replication plane: the control connection is the whole link
+            self.control = Some(control);
+            return Ok(());
+        }
         // callback connection: authenticate, register, then read pushes
         let mut cb = dial(addr, &self.pair)?;
         write_frame(
@@ -346,6 +385,10 @@ fn response_to_fs_err(r: Response) -> FsError {
         // 118 = integrity refusal (DESIGN.md §2.10): the server detected
         // rot and quarantined the bytes instead of serving them
         Response::Err { code: 118, msg } => FsError::Corrupted(msg),
+        // 119 = bounded-staleness refusal (DESIGN.md §2.11): a read
+        // replica is lagging behind the client's observed version —
+        // retry against a fresher node (the primary always qualifies)
+        Response::Err { code: 119, msg } => FsError::Stale(msg),
         r => FsError::Protocol(format!("unexpected response {r:?}")),
     }
 }
@@ -533,7 +576,7 @@ impl ServerLink for TcpLink {
                 loop {
                     let item = work.lock().unwrap().pop();
                     let Some((path, _size)) = item else { return };
-                    let req = Request::FetchMeta { path: path.clone() };
+                    let req = Request::FetchMeta { path: path.clone(), min_version: 0 };
                     if write_frame(&mut conn, &req.encode()).is_err() {
                         return;
                     }
@@ -603,7 +646,7 @@ impl ServerLink for TcpLink {
     }
 
     fn is_connected(&self) -> bool {
-        self.control.is_some() && self.channel.is_connected()
+        self.control.is_some() && (self.replication || self.channel.is_connected())
     }
 
     fn reconnect(&mut self) -> Result<u64, FsError> {

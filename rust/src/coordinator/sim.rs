@@ -45,15 +45,17 @@ pub struct SimWorld {
     next_client: u64,
     /// Optional seeded fault plane shared by every link of this world.
     faults: Option<Arc<Mutex<FaultPlan>>>,
-    /// Warm standby home server (DESIGN.md §2.7), stood up by
-    /// [`Self::enable_replica`]. Clients mounted afterwards get both
-    /// endpoints and fail over to it once promoted.
-    secondary: Option<Arc<FileServer>>,
-    /// The log-shipping sidecar streaming the primary's applied-op log
-    /// to the secondary (its link rides the same WAN + fault plane).
-    shipper: Option<Shipper<SimLink>>,
-    /// Set once [`Self::promote_secondary`] succeeded: the secondary is
-    /// the serving primary and the old primary is fenced.
+    /// Standby home servers (DESIGN.md §2.7/§2.11), stood up by
+    /// [`Self::enable_replica`] — `replica.secondaries` of them. The
+    /// first is the promotion target; with `replica.read_fanout` they
+    /// all serve bounded-staleness reads. Clients mounted afterwards
+    /// get every endpoint and fail over on reconnect.
+    secondaries: Vec<Arc<FileServer>>,
+    /// One log-shipping sidecar per secondary, streaming the primary's
+    /// applied-op log (each link rides the WAN + fault plane).
+    shippers: Vec<Shipper<SimLink>>,
+    /// Set once [`Self::promote_secondary`] succeeded: the first
+    /// secondary is the serving primary and the old primary is fenced.
     promoted: bool,
 }
 
@@ -99,67 +101,84 @@ impl SimWorld {
             pair,
             next_client: 1,
             faults: None,
-            secondary: None,
-            shipper: None,
+            secondaries: Vec::new(),
+            shippers: Vec::new(),
             promoted: false,
         }
     }
 
-    /// Stand up the warm secondary (DESIGN.md §2.7): a second
-    /// [`FileServer`] seeded from a snapshot of the primary's CURRENT
-    /// home space (the initial full sync), plus the log shipper that
-    /// keeps it within `replica.max_lag_ops` of the primary's applied-op
-    /// log. Call AFTER pre-populating the home space and BEFORE
-    /// mounting clients (mounted links learn both endpoints). Idempotent.
+    /// Stand up the standby fleet (DESIGN.md §2.7/§2.11):
+    /// `replica.secondaries` [`FileServer`]s, each seeded from a
+    /// snapshot of the primary's CURRENT home space (the initial full
+    /// sync) and driven by its own log shipper that keeps it within
+    /// `replica.max_lag_ops` of the primary's applied-op log. With
+    /// `replica.read_fanout` every standby also serves bounded-staleness
+    /// reads. Call AFTER pre-populating the home space and BEFORE
+    /// mounting clients (mounted links learn every endpoint). Idempotent.
     pub fn enable_replica(&mut self) {
-        if self.secondary.is_some() {
+        if !self.secondaries.is_empty() {
             return;
         }
         self.cfg.replica.enabled = true;
         self.server.enable_replication();
-        let snap = self.server.home().clone();
-        let home_disk = DiskModel::new(self.cfg.disk.home_bps, self.cfg.disk.home_op_s);
-        let sec = FileServer::new(
-            snap,
-            home_disk,
-            self.engine.clone(),
-            self.cfg.stripe.min_block as usize,
-            self.cfg.lease.duration_s,
-            self.cfg.server.shards,
-            self.metrics.clone(),
-            self.cfg.chunkstore.clone(),
-        )
-        .with_integrity(self.cfg.integrity.clone());
-        sec.set_role(Role::Secondary);
-        sec.enable_replication();
-        let sec = Arc::new(sec);
-        self.secondary = Some(sec.clone());
-        // the shipper's WAN link targets the secondary; client id 0 is
-        // reserved for the replication daemon
-        let link = SimLink {
-            servers: vec![sec],
-            active: 0,
-            crash_target: self.server.clone(),
-            auth: self.auth.clone(),
-            wan: self.wan.clone(),
-            clock: self.clock.clone(),
-            channel: NotifyChannel::new(),
-            cfg: self.cfg.clone(),
-            metrics: self.metrics.clone(),
-            pair: self.pair.clone(),
-            client_id: 0,
-            net_up: true,
-            session: None,
-            root: "/".to_string(),
-            data_conns_warm: false,
-            faults: self.faults.clone(),
-            replication_link: true,
-        };
-        self.shipper = Some(Shipper::new(link, self.cfg.replica.ship_batch));
+        for _ in 0..self.cfg.replica.secondaries.max(1) {
+            let snap = self.server.home().clone();
+            let home_disk = DiskModel::new(self.cfg.disk.home_bps, self.cfg.disk.home_op_s);
+            let sec = FileServer::new(
+                snap,
+                home_disk,
+                self.engine.clone(),
+                self.cfg.stripe.min_block as usize,
+                self.cfg.lease.duration_s,
+                self.cfg.server.shards,
+                self.metrics.clone(),
+                self.cfg.chunkstore.clone(),
+            )
+            .with_integrity(self.cfg.integrity.clone());
+            sec.set_role(Role::Secondary);
+            sec.enable_replication();
+            if self.cfg.replica.read_fanout {
+                sec.enable_read_serving(self.cfg.replica.staleness_ops);
+            }
+            let sec = Arc::new(sec);
+            self.secondaries.push(sec.clone());
+            // each shipper's WAN link targets its own secondary; client
+            // id 0 is reserved for the replication daemons
+            let link = SimLink {
+                servers: vec![sec],
+                active: 0,
+                crash_target: self.server.clone(),
+                auth: self.auth.clone(),
+                wan: self.wan.clone(),
+                wans: Vec::new(),
+                clock: self.clock.clone(),
+                channel: NotifyChannel::new(),
+                cfg: self.cfg.clone(),
+                metrics: self.metrics.clone(),
+                pair: self.pair.clone(),
+                client_id: 0,
+                net_up: true,
+                session: None,
+                root: "/".to_string(),
+                data_conns_warm: false,
+                faults: self.faults.clone(),
+                replication_link: true,
+                read_pref: None,
+            };
+            self.shippers.push(Shipper::new(link, self.cfg.replica.ship_batch));
+        }
     }
 
+    /// The first standby — the promotion target (kept for the
+    /// single-replica tests; fan-out tests use [`Self::secondaries`]).
     pub fn secondary(&self) -> Option<Arc<FileServer>> {
-        self.secondary.clone()
+        self.secondaries.first().cloned()
+    }
+
+    /// Every standby, in endpoint order (endpoint `i + 1` in the
+    /// clients' lists).
+    pub fn secondaries(&self) -> &[Arc<FileServer>] {
+        &self.secondaries
     }
 
     /// Has [`Self::promote_secondary`] completed?
@@ -172,46 +191,53 @@ impl SimWorld {
     /// checks compare against THIS node's home space.
     pub fn authority(&self) -> Arc<FileServer> {
         if self.promoted {
-            self.secondary.clone().expect("promoted implies a secondary")
+            self.secondaries.first().cloned().expect("promoted implies a secondary")
         } else {
             self.server.clone()
         }
     }
 
-    /// One replication housekeeping step: ship the applied-op log when
-    /// the secondary trails by at least `replica.max_lag_ops` (`force`
+    /// One replication housekeeping step: ship the applied-op log to
+    /// every standby trailing by at least `replica.max_lag_ops` (`force`
     /// drains unconditionally — quiesce and promotion use that).
-    /// Returns the remaining lag; shipping rides the WAN and the fault
-    /// plane, so a partitioned/refused attempt just leaves lag behind
-    /// for the next tick.
+    /// Returns the WORST remaining lag across the fleet; shipping rides
+    /// the WAN and the fault plane, so a partitioned/refused attempt
+    /// just leaves that standby's lag behind for the next tick.
     pub fn replica_tick(&mut self, force: bool) -> u64 {
-        if self.promoted {
+        if self.promoted || self.shippers.is_empty() {
             return 0;
         }
         let max_lag = self.cfg.replica.max_lag_ops;
-        let Some(shipper) = self.shipper.as_mut() else { return 0 };
-        let lag = shipper.lag(&self.server);
-        if lag == 0 || (!force && lag < max_lag.max(1)) {
-            return lag;
-        }
-        if !shipper.link().is_connected() {
-            if shipper.link_mut().reconnect().is_err() {
-                return lag;
+        let mut worst = 0u64;
+        for shipper in self.shippers.iter_mut() {
+            let lag = shipper.lag(&self.server);
+            if lag == 0 || (!force && lag < max_lag.max(1)) {
+                worst = worst.max(lag);
+                continue;
             }
-            if shipper.resync().is_err() {
-                return lag;
+            if !shipper.link().is_connected() {
+                if shipper.link_mut().reconnect().is_err() {
+                    worst = worst.max(lag);
+                    continue;
+                }
+                if shipper.resync().is_err() {
+                    worst = worst.max(lag);
+                    continue;
+                }
+            }
+            match shipper.ship(&self.server, &self.metrics) {
+                Ok(left) => worst = worst.max(left),
+                Err(_) => worst = worst.max(shipper.lag(&self.server)),
             }
         }
-        match shipper.ship(&self.server, &self.metrics) {
-            Ok(left) => {
-                // the acked prefix is durable on the secondary: drop it
-                // from the primary's log (DESIGN.md §2.8 retention —
-                // chunk pins released, I4 summary folded)
-                self.server.repl_truncate_acked(shipper.watermark());
-                left
-            }
-            Err(_) => shipper.lag(&self.server),
+        // only the prefix EVERY standby acked is durable fleet-wide:
+        // truncate the primary's log at the SLOWEST watermark (DESIGN.md
+        // §2.8 retention — chunk pins released, I4 summary folded). A
+        // lagging replica still needs everything past it.
+        if let Some(min_wm) = self.shippers.iter().map(|s| s.watermark()).min() {
+            self.server.repl_truncate_acked(min_wm);
         }
+        worst
     }
 
     /// The explicit failover step (DESIGN.md §2.7): catch the secondary
@@ -224,7 +250,7 @@ impl SimWorld {
         if self.promoted {
             return Ok(());
         }
-        let Some(shipper) = self.shipper.as_mut() else {
+        let Some(shipper) = self.shippers.first_mut() else {
             return Err(FsError::Invalid("promote: no replica configured".into()));
         };
         if !shipper.link().is_connected() {
@@ -247,8 +273,8 @@ impl SimWorld {
     /// any) is re-armed too — log shipping is WAN traffic like any other.
     pub fn set_fault_plan(&mut self, plan: Arc<Mutex<FaultPlan>>) {
         self.faults = Some(plan.clone());
-        if let Some(shipper) = self.shipper.as_mut() {
-            shipper.link_mut().set_faults(plan);
+        for shipper in self.shippers.iter_mut() {
+            shipper.link_mut().set_faults(plan.clone());
         }
     }
 
@@ -264,18 +290,43 @@ impl SimWorld {
     }
 
     /// The endpoint list a freshly mounted client learns from config:
-    /// the primary first, then the secondary when one is configured.
+    /// the primary first, then every secondary in fleet order.
     fn endpoints(&self) -> Vec<Arc<FileServer>> {
         let mut servers = vec![self.server.clone()];
-        if let Some(sec) = &self.secondary {
-            servers.push(sec.clone());
-        }
+        servers.extend(self.secondaries.iter().cloned());
         servers
+    }
+
+    /// Per-endpoint WAN paths for one mounted site: entry 0 is the
+    /// world's shared primary path (its stats feed the existing
+    /// WAN-accounting tests); each secondary gets its own path whose
+    /// RTT comes from `replica_rtts` (falling back to the primary's).
+    /// Heterogeneous RTTs are the read-fanout win: a site reads from
+    /// its NEAREST serving replica.
+    fn site_wans(&self, replica_rtts: &[f64]) -> Vec<Arc<Wan>> {
+        let mut wans = vec![self.wan.clone()];
+        for j in 0..self.secondaries.len() {
+            let mut wcfg = self.cfg.wan.clone();
+            wcfg.rtt_s = replica_rtts.get(j).copied().unwrap_or(wcfg.rtt_s);
+            wans.push(Arc::new(Wan::new(wcfg, self.clock.clone())));
+        }
+        wans
     }
 
     /// USSH login + mount: authenticate, open the control + callback
     /// channels, register the callback, return a mounted client.
     pub fn mount(&mut self, root: &str) -> Result<XufsClient<SimLink>, FsError> {
+        self.mount_at(root, &[])
+    }
+
+    /// [`Self::mount`] from a site with its own replica RTT vector
+    /// (`replica_rtts[j]` = seconds to secondary `j`; missing entries
+    /// use the primary RTT).
+    pub fn mount_at(
+        &mut self,
+        root: &str,
+        replica_rtts: &[f64],
+    ) -> Result<XufsClient<SimLink>, FsError> {
         let client_id = self.next_client;
         self.next_client += 1;
         let mut link = SimLink {
@@ -284,6 +335,7 @@ impl SimWorld {
             crash_target: self.server.clone(),
             auth: self.auth.clone(),
             wan: self.wan.clone(),
+            wans: self.site_wans(replica_rtts),
             clock: self.clock.clone(),
             channel: NotifyChannel::new(),
             cfg: self.cfg.clone(),
@@ -296,6 +348,7 @@ impl SimWorld {
             data_conns_warm: false,
             faults: self.faults.clone(),
             replication_link: false,
+            read_pref: None,
         };
         link.connect()?;
         Ok(XufsClient::new(
@@ -327,6 +380,7 @@ impl SimWorld {
             crash_target: self.server.clone(),
             auth: self.auth.clone(),
             wan: self.wan.clone(),
+            wans: self.site_wans(&[]),
             clock: self.clock.clone(),
             channel: NotifyChannel::new(),
             cfg: self.cfg.clone(),
@@ -339,6 +393,7 @@ impl SimWorld {
             data_conns_warm: false,
             faults: self.faults.clone(),
             replication_link: false,
+            read_pref: None,
         };
         link.connect()?;
         // the store is cloned only once the login succeeded — retrying
@@ -362,7 +417,7 @@ impl SimWorld {
     /// *recoverable*: the secondary's clean copy can heal it. Returns
     /// the rotted digest, or `None` without a replica / shared chunks.
     pub fn corrupt_shared_chunk(&self, sel: u64) -> Option<Digest> {
-        let sec = self.secondary.as_ref()?;
+        let sec = self.secondaries.first()?;
         let shared: Vec<Digest> = {
             let on_sec: HashSet<Digest> = sec.home().chunk_digests().into_iter().collect();
             self.server
@@ -377,6 +432,22 @@ impl SimWorld {
         }
         let d = shared[(sel % shared.len() as u64) as usize];
         self.server.home_mut().corrupt_chunk_at(&d, sel >> 16).then_some(d)
+    }
+
+    /// Rot one chunk on a READ replica (DESIGN.md §2.11): flip a byte of
+    /// a chunk resident on secondary `replica`. The replica's scrub
+    /// quarantines it, reads of it refuse with code 118 (clients fall
+    /// back to the primary), and [`Self::repair_tick`] heals it from the
+    /// primary's clean copy. Returns the rotted digest, or `None` when
+    /// that replica holds no chunks.
+    pub fn corrupt_replica_chunk(&self, replica: usize, sel: u64) -> Option<Digest> {
+        let sec = self.secondaries.get(replica)?;
+        let digests = sec.home().chunk_digests();
+        if digests.is_empty() {
+            return None;
+        }
+        let d = digests[(sel % digests.len() as u64) as usize];
+        sec.home_mut().corrupt_chunk_at(&d, sel >> 16).then_some(d)
     }
 
     /// One repair pass (DESIGN.md §2.10): scrub the primary's whole
@@ -394,18 +465,34 @@ impl SimWorld {
         }
         self.server.scrub_all_chunks();
         let quarantined = self.server.quarantined_chunks();
-        if quarantined.is_empty() {
-            return Ok(0);
+        if !quarantined.is_empty() {
+            if let Some(shipper) = self.shippers.first_mut() {
+                if shipper.link().is_connected() || shipper.link_mut().reconnect().is_ok() {
+                    let fills = shipper.fetch_chunks(&quarantined)?;
+                    self.server.repair_chunks(&fills);
+                }
+            }
         }
-        let Some(shipper) = self.shipper.as_mut() else {
-            return Ok(quarantined.len() as u64);
-        };
-        if !shipper.link().is_connected() && shipper.link_mut().reconnect().is_err() {
-            return Ok(quarantined.len() as u64);
+        let mut remaining = self.server.quarantined_chunks().len() as u64;
+        // the standbys scrub too, healing the REVERSE direction — from
+        // the primary's clean copies (DESIGN.md §2.11): a read replica
+        // with a quarantined chunk refuses reads of it (code 118, the
+        // client falls back to the primary) until this heal lands
+        for sec in &self.secondaries {
+            sec.scrub_all_chunks();
+            let q = sec.quarantined_chunks();
+            if !q.is_empty() {
+                let resp =
+                    self.server.handle(0, Request::ChunkFetch { digests: q }, self.clock.now());
+                if let Response::ChunkFill { chunks } = resp {
+                    let bytes: u64 = chunks.iter().map(|c| c.len() as u64).sum();
+                    self.wan.rpc(&self.clock, 64, bytes + 64);
+                    sec.repair_chunks(&chunks);
+                }
+            }
+            remaining += sec.quarantined_chunks().len() as u64;
         }
-        let fills = shipper.fetch_chunks(&quarantined)?;
-        self.server.repair_chunks(&fills);
-        Ok(self.server.quarantined_chunks().len() as u64)
+        Ok(remaining)
     }
 
     /// Simulate a server crash (process dies; home disk survives).
@@ -423,7 +510,7 @@ impl SimWorld {
     pub fn server_tick(&self) {
         let now = self.clock.now();
         self.server.expire_leases(now);
-        if let Some(sec) = &self.secondary {
+        for sec in &self.secondaries {
             sec.expire_leases(now);
         }
     }
@@ -451,6 +538,11 @@ pub struct SimLink {
     crash_target: Arc<FileServer>,
     auth: Arc<Mutex<Authenticator>>,
     wan: Arc<Wan>,
+    /// Per-endpoint WAN paths, index-aligned with `servers`. Entry 0 is
+    /// the world's shared primary path; read replicas get their own
+    /// (possibly closer) paths — the latency half of the fan-out win.
+    /// Empty on replication links (they only ever talk to entry 0).
+    wans: Vec<Arc<Wan>>,
     clock: SimClock,
     channel: NotifyChannel,
     cfg: XufsConfig,
@@ -473,6 +565,10 @@ pub struct SimLink {
     /// CLIENT link treats that refusal as "wrong endpoint, keep
     /// rotating" so it can never wedge on a node that serves nothing.
     replication_link: bool,
+    /// Test hook: pin bounded-staleness reads to one endpoint index
+    /// (the fault explorer randomizes this per op to cover every
+    /// replica). `None` = route to the lowest-RTT serving replica.
+    read_pref: Option<usize>,
 }
 
 impl SimLink {
@@ -490,6 +586,49 @@ impl SimLink {
     /// failover tests read this.
     pub fn active_endpoint(&self) -> usize {
         self.active
+    }
+
+    /// Pin bounded-staleness reads to endpoint `pref` (1-based into the
+    /// endpoint list: 1 = first secondary), or `None` to route to the
+    /// lowest-RTT serving replica again. A pinned endpoint that is down
+    /// or not serving falls back to the primary like any other refusal.
+    pub fn set_read_preference(&mut self, pref: Option<usize>) {
+        self.read_pref = pref;
+    }
+
+    /// The WAN path to endpoint `idx` (the shared primary path when the
+    /// link predates the replica fleet).
+    fn link_wan(&self, idx: usize) -> Arc<Wan> {
+        self.wans.get(idx).cloned().unwrap_or_else(|| self.wan.clone())
+    }
+
+    /// The replica a bounded-staleness read should try first, or `None`
+    /// to go straight to the primary. Fan-out applies only to CLIENT
+    /// links still bound to the primary (after a failover the promoted
+    /// node IS the active endpoint) with read fan-out configured and at
+    /// least one serving, reachable replica.
+    fn fanout_replica(&self) -> Option<usize> {
+        if self.replication_link || !self.cfg.replica.read_fanout || self.active != 0 {
+            return None;
+        }
+        if let Some(p) = self.read_pref {
+            let ok = p >= 1
+                && p < self.servers.len()
+                && self.servers[p].is_up()
+                && self.servers[p].read_serving();
+            return ok.then_some(p);
+        }
+        let mut best: Option<(usize, f64)> = None;
+        for i in 1..self.servers.len() {
+            if !self.servers[i].is_up() || !self.servers[i].read_serving() {
+                continue;
+            }
+            let rtt = self.link_wan(i).config().rtt_s;
+            if best.map_or(true, |(_, b)| rtt < b) {
+                best = Some((i, rtt));
+            }
+        }
+        best.map(|(i, _)| i)
     }
 
     /// Advance the fault plane one interaction and apply its control
@@ -706,6 +845,26 @@ impl ServerLink for SimLink {
             // a torn bulk transfer does not apply to small control RPCs
             Some(FaultAction::Interrupt) | Some(FaultAction::Delay { .. }) | None => {}
         }
+        // bounded-staleness read fan-out (DESIGN.md §2.11): whole-file
+        // and attribute reads try the closest serving replica first;
+        // every refusal — 119 too-stale, 112 fenced, 118 integrity,
+        // 111 down — falls back to the primary transparently, without
+        // touching the primary session
+        if matches!(req, Request::Fetch { .. } | Request::FetchMeta { .. }) {
+            if let Some(ridx) = self.fanout_replica() {
+                let replica = self.servers[ridx].clone();
+                replica.disk.op(&self.clock);
+                let resp = replica.handle(self.client_id, req.clone(), self.clock.now());
+                self.link_wan(ridx).rpc(&self.clock, req_bytes, resp.wire_bytes());
+                self.metrics.add(names::WAN_RPCS, 1);
+                match &resp {
+                    Response::Err { code: 111 | 112 | 118 | 119, .. } => {
+                        self.metrics.incr(names::REPLICA_READ_REDIRECTS);
+                    }
+                    _ => return Ok(resp),
+                }
+            }
+        }
         // server-side disk op for metadata service
         self.server().disk.op(&self.clock);
         let resp = self.server().handle(self.client_id, req, self.clock.now());
@@ -737,16 +896,38 @@ impl ServerLink for SimLink {
             self.wan.rpc(&self.clock, 128, 0);
             return Err(FsError::Disconnected);
         }
+        let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
+        // bounded-staleness fan-out (DESIGN.md §2.11): paged reads try
+        // the closest serving replica; a refusal — 119 lagging, 118
+        // quarantined copy, 112 fenced, 111 down — costs one small
+        // round on the replica path and falls back to the primary
+        let mut widx = self.active;
         let resp = {
-            let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
-            let r = self.server().handle(self.client_id, req, self.clock.now());
+            let r = match self.fanout_replica() {
+                Some(ridx) => {
+                    let r = self.servers[ridx].handle(self.client_id, req.clone(), self.clock.now());
+                    match &r {
+                        Response::Err { code: 111 | 112 | 118 | 119, .. } => {
+                            self.link_wan(ridx).rpc(&self.clock, 128, 64);
+                            self.metrics.incr(names::REPLICA_READ_REDIRECTS);
+                            self.server().handle(self.client_id, req, self.clock.now())
+                        }
+                        _ => {
+                            widx = ridx;
+                            r
+                        }
+                    }
+                }
+                None => self.server().handle(self.client_id, req, self.clock.now()),
+            };
             if let Response::FileBlocks { extents, .. } = &r {
-                // server reads the blocks off its disk
+                // the serving node reads the blocks off its disk
                 let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();
-                self.server().disk.io(&self.clock, bytes);
+                self.servers[widx].disk.io(&self.clock, bytes);
             }
             r
         };
+        let wan = self.link_wan(widx);
         match resp {
             Response::FileBlocks { version, extents } => {
                 let image = RangeImage { version, extents };
@@ -767,7 +948,7 @@ impl ServerLink for SimLink {
                         // nothing landed before the tear: surface the
                         // typed interruption with the resume block
                         let first = image.extents[0].index as u64;
-                        self.wan.rpc(&self.clock, 128, 0);
+                        wan.rpc(&self.clock, 128, 0);
                         return Err(FsError::Interrupted { resumed_from_block: first });
                     }
                     // the landed prefix crossed the WAN once; the link
@@ -775,17 +956,12 @@ impl ServerLink for SimLink {
                     // resumable-fetch path real WAN hiccups also take)
                     let torn_bytes: u64 =
                         image.extents[..torn_at].iter().map(|x| x.data.len() as u64).sum();
-                    self.wan.transfer(&self.clock, torn_bytes.max(1), stripes, kind);
+                    wan.transfer(&self.clock, torn_bytes.max(1), stripes, kind);
                     let rest = payload - torn_bytes.min(payload);
-                    self.wan.transfer(
-                        &self.clock,
-                        rest.max(1),
-                        stripes,
-                        TransferKind::NewConnections,
-                    );
+                    wan.transfer(&self.clock, rest.max(1), stripes, TransferKind::NewConnections);
                     self.metrics.incr(names::RESUMED_FETCHES);
                 } else {
-                    self.wan.transfer(&self.clock, payload, stripes, kind);
+                    wan.transfer(&self.clock, payload, stripes, kind);
                 }
                 self.metrics.add(names::WAN_BYTES_RX, image.bytes());
                 self.metrics.incr(names::RANGE_FETCHES);
@@ -793,7 +969,9 @@ impl ServerLink for SimLink {
             }
             Response::Err { code: 2, msg } => Err(FsError::NotFound(msg)),
             Response::Err { code: 21, msg } => Err(FsError::IsADir(msg)),
-            Response::Err { code: 116, msg } => Err(FsError::Stale(msg)),
+            Response::Err { code: 116, msg } | Response::Err { code: 119, msg } => {
+                Err(FsError::Stale(msg))
+            }
             Response::Err { code: 111, .. } => Err(FsError::Disconnected),
             Response::Err { code: 112, .. } => Err(self.wrong_endpoint()),
             // integrity refusal (DESIGN.md §2.10): the server detected
@@ -828,7 +1006,7 @@ impl ServerLink for SimLink {
         for (path, _size) in files {
             if let Response::File { image } = self.server().handle(
                 self.client_id,
-                Request::Fetch { path: path.clone() },
+                Request::Fetch { path: path.clone(), min_version: 0 },
                 self.clock.now(),
             ) {
                 sizes.push(image.data.len() as u64 + 256);

@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! xufs selftest                      quick end-to-end smoke (sim world)
-//! xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|dedup|ablations|all
+//! xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|dedup|fanout|ablations|all
 //! xufs census [--seed N]             regenerate Table 1
 //! xufs serve [--config xufs.toml]    real TCP file server (demo home space)
 //! xufs config                        print the default config as TOML keys
@@ -80,7 +80,7 @@ xufs — wide-area distributed file system (XUFS reproduction)
 
 USAGE:
   xufs selftest                      end-to-end smoke test (sim world)
-  xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|dedup|ablations|all
+  xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|dedup|fanout|ablations|all
   xufs census [--seed N]             regenerate the Table 1 census
   xufs serve [--config xufs.toml]    run the TCP file server (demo home)
   xufs perf                          hot-path microbenchmarks (wall-clock)
@@ -132,6 +132,7 @@ fn run_bench(cfg: XufsConfig, which: &str, quick: bool) {
         "fig4" => bench::run_fig4(&cfg, 5).print(),
         "failover" => bench::run_failover(&cfg).print(),
         "dedup" => bench::run_dedup(&cfg).print(),
+        "fanout" => bench::run_read_fanout(&cfg).print(),
         "fig5" | "table2" => {
             let gib = if quick { 256 << 20 } else { 1u64 << 30 };
             let (f, t) = bench::run_fig5_table2(&cfg, 5, gib);
@@ -320,6 +321,9 @@ max_inflight_per_conn = 32
 enabled = false
 ship_batch = 64
 max_lag_ops = 8
+secondaries = 1
+read_fanout = false
+staleness_ops = 8
 
 [chunkstore]
 enabled = true

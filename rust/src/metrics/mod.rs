@@ -185,6 +185,15 @@ pub mod names {
     pub const REPLICA_LOG_TRUNCATED: &str = "replica.log_truncated";
     /// Chunks pushed to the secondary to fill ref-shipping gaps.
     pub const REPLICA_CHUNK_PUSHES: &str = "replica.chunk_pushes";
+    /// Read requests a serving secondary admitted past its bounded-
+    /// staleness gate (read fan-out, DESIGN.md §2.11).
+    pub const REPLICA_READ_HITS: &str = "replica.read_hits";
+    /// Reads a secondary refused with code 119 `TooStale` (behind the
+    /// staleness bound or the client's observed-version floor).
+    pub const REPLICA_TOO_STALE: &str = "replica.too_stale";
+    /// Replica reads the client transparently re-ran against the
+    /// primary after a `TooStale`/unavailable answer.
+    pub const REPLICA_READ_REDIRECTS: &str = "replica.redirects";
     /// Chunk writes that found an identical chunk already stored.
     pub const CHUNK_DEDUP_HITS: &str = "chunkstore.dedup_hits";
     /// Bytes dedup avoided storing (logical bytes of deduped chunks).
@@ -252,6 +261,9 @@ pub mod names {
         (REPLICA_SHIP_BATCHES, "`Replicate` frames the log shipper successfully delivered."),
         (REPLICA_LOG_TRUNCATED, "Applied-op log records dropped by acked-prefix truncation."),
         (REPLICA_CHUNK_PUSHES, "Chunks pushed to the secondary to fill ref-shipping gaps."),
+        (REPLICA_READ_HITS, "Read requests a serving secondary admitted past its staleness gate."),
+        (REPLICA_TOO_STALE, "Reads a secondary refused with code 119 `TooStale`."),
+        (REPLICA_READ_REDIRECTS, "Replica reads transparently re-run against the primary."),
         (CHUNK_DEDUP_HITS, "Chunk writes that found an identical chunk already stored."),
         (CHUNK_DEDUP_BYTES_SAVED, "Bytes dedup avoided storing (logical bytes of deduped chunks)."),
         (CHUNK_GC_COLLECTED, "Dead chunks the deferred GC sweep actually freed."),

@@ -447,10 +447,17 @@ pub enum Request {
     Stat { path: String },
     ReadDir { path: String },
     /// Whole-file fetch; the transfer engine stripes >64 KiB payloads.
-    Fetch { path: String },
+    /// `min_version` is the bounded-staleness floor (DESIGN.md §2.11):
+    /// a read-serving secondary whose copy is older than the highest
+    /// version this client has observed answers code 119 `TooStale`
+    /// instead of serving a regression. 0 means no floor (primary reads
+    /// always serve regardless — the primary IS the freshest copy).
+    Fetch { path: String, min_version: u64 },
     /// Fetch metadata + per-block digests (first step of a real striped
     /// fetch over TCP: stripes then pull ranges with `FetchRange`).
-    FetchMeta { path: String },
+    /// Carries the same bounded-staleness `min_version` floor as
+    /// [`Request::Fetch`].
+    FetchMeta { path: String, min_version: u64 },
     /// Fetch a byte range; fails with a stale error if the file's version
     /// no longer matches `expect_version` (torn-fetch protection).
     FetchRange { path: String, offset: u64, len: u64, expect_version: u64 },
@@ -473,7 +480,11 @@ pub enum Request {
     /// [`Response::ReplicaAck`] with the secondary's new global
     /// replication watermark; records at or below the watermark are
     /// skipped (idempotent re-ship after a lost ack), a gap is refused.
-    Replicate { from: u64, frames: Vec<u8> },
+    /// `head` is the primary's log head (`repl_ship_seq`) at ship time —
+    /// a read-serving secondary uses it to bound how far behind the
+    /// primary it is allowed to drift before refusing reads
+    /// (`replica.staleness_ops`, DESIGN.md §2.11).
+    Replicate { from: u64, frames: Vec<u8>, head: u64 },
     /// Ask a replica (or the primary) for its replication watermark:
     /// `shard < shard_count` reads that shard's watermark, anything
     /// else (use `u32::MAX`) the global one.
@@ -526,11 +537,11 @@ impl Request {
             Request::ReadDir { path } => {
                 e.u8(3).str(path);
             }
-            Request::Fetch { path } => {
-                e.u8(4).str(path);
+            Request::Fetch { path, min_version } => {
+                e.u8(4).str(path).u64(*min_version);
             }
-            Request::FetchMeta { path } => {
-                e.u8(11).str(path);
+            Request::FetchMeta { path, min_version } => {
+                e.u8(11).str(path).u64(*min_version);
             }
             Request::FetchRange { path, offset, len, expect_version } => {
                 e.u8(12).str(path).u64(*offset).u64(*len).u64(*expect_version);
@@ -560,8 +571,8 @@ impl Request {
                     op.encode_into(e);
                 }
             }
-            Request::Replicate { from, frames } => {
-                e.u8(14).u64(*from).bytes(frames);
+            Request::Replicate { from, frames, head } => {
+                e.u8(14).u64(*from).bytes(frames).u64(*head);
             }
             Request::WatermarkQuery { shard } => {
                 e.u8(15).u32(*shard);
@@ -592,7 +603,7 @@ impl Request {
             1 => Request::AuthProof { key_id: d.str()?, proof: d.bytes()?.to_vec() },
             2 => Request::Stat { path: d.str()? },
             3 => Request::ReadDir { path: d.str()? },
-            4 => Request::Fetch { path: d.str()? },
+            4 => Request::Fetch { path: d.str()?, min_version: d.u64()? },
             5 => Request::Apply { seq: d.u64()?, op: MetaOp::decode_from(&mut d)? },
             6 => Request::RegisterCallback { root: d.str()?, client_id: d.u64()? },
             7 => Request::LockAcquire {
@@ -603,7 +614,7 @@ impl Request {
             8 => Request::LockRenew { token: d.u64()?, owner: d.u64()? },
             9 => Request::LockRelease { token: d.u64()?, owner: d.u64()? },
             10 => Request::Ping,
-            11 => Request::FetchMeta { path: d.str()? },
+            11 => Request::FetchMeta { path: d.str()?, min_version: d.u64()? },
             12 => Request::FetchRange {
                 path: d.str()?,
                 offset: d.u64()?,
@@ -618,7 +629,7 @@ impl Request {
                 }
                 Request::Compound { ops }
             }
-            14 => Request::Replicate { from: d.u64()?, frames: d.bytes()?.to_vec() },
+            14 => Request::Replicate { from: d.u64()?, frames: d.bytes()?.to_vec(), head: d.u64()? },
             15 => Request::WatermarkQuery { shard: d.u32()? },
             16 => Request::Promote,
             17 => {
@@ -965,14 +976,16 @@ mod tests {
             Request::AuthProof { key_id: "k1".into(), proof: vec![1, 2, 3] },
             Request::Stat { path: "/a/b".into() },
             Request::ReadDir { path: "/a".into() },
-            Request::Fetch { path: "/a/big.dat".into() },
+            Request::Fetch { path: "/a/big.dat".into(), min_version: 0 },
+            Request::Fetch { path: "/a/big.dat".into(), min_version: 42 },
             Request::Apply { seq: 9, op: MetaOp::Mkdir { path: "/x".into() } },
             Request::RegisterCallback { root: "/a".into(), client_id: 3 },
             Request::LockAcquire { path: "/f".into(), kind: LockKind::Exclusive, owner: 5 },
             Request::LockRenew { token: 11, owner: 5 },
             Request::LockRelease { token: 11, owner: 5 },
             Request::Ping,
-            Request::FetchMeta { path: "/a/big.dat".into() },
+            Request::FetchMeta { path: "/a/big.dat".into(), min_version: 0 },
+            Request::FetchMeta { path: "/a/big.dat".into(), min_version: 9 },
             Request::FetchRange { path: "/a/big.dat".into(), offset: 65536, len: 65536, expect_version: 4 },
             Request::Compound { ops: vec![] },
             Request::Compound {
@@ -985,7 +998,7 @@ mod tests {
                     CompoundOp::Stat { path: "/f".into() },
                 ],
             },
-            Request::Replicate { from: 7, frames: vec![0xAB; 48] },
+            Request::Replicate { from: 7, frames: vec![0xAB; 48], head: 55 },
             Request::WatermarkQuery { shard: 3 },
             Request::WatermarkQuery { shard: u32::MAX },
             Request::Promote,

@@ -190,7 +190,11 @@ impl<L: ServerLink> Shipper<L> {
             }
             let from = records[0].ship_seq;
             let frames = frame_records(&records);
-            match self.link.rpc(Request::Replicate { from, frames })? {
+            // announce the primary's CURRENT log head with every batch:
+            // it is how a read-serving secondary learns it has drifted
+            // past the staleness bound (DESIGN.md §2.11)
+            let head = primary.repl_ship_seq();
+            match self.link.rpc(Request::Replicate { from, frames, head })? {
                 Response::ReplicaAck { watermark } => {
                     if watermark <= self.cursor {
                         // the secondary refused to advance (gap or

@@ -239,6 +239,17 @@ pub struct FileServer {
     /// Applied-op logging is opt-in (`[replica] enabled`): an
     /// unreplicated deployment must not accumulate write payloads.
     repl_enabled: AtomicBool,
+    /// Read fan-out (DESIGN.md §2.11): when set, a `Secondary` serves
+    /// read-only traffic at its replication watermark instead of
+    /// refusing everything outside the replication plane.
+    read_serving: AtomicBool,
+    /// Bounded-staleness window for a serving secondary
+    /// (`replica.staleness_ops`): reads are refused with code 119 when
+    /// this node's watermark trails [`Self::known_repl_head`] by more.
+    staleness_limit: AtomicU64,
+    /// The primary's log head as last announced by a `Replicate` batch
+    /// — the serving secondary's only view of how far behind it is.
+    known_head: AtomicU64,
     /// The applied-op log. Lock ordering: a shard guard may be held when
     /// this is taken (apply-time append), never the reverse.
     repl: Mutex<ReplLog>,
@@ -353,6 +364,9 @@ impl FileServer {
             modeled_waits: AtomicBool::new(false),
             role: AtomicU8::new(ROLE_PRIMARY),
             repl_enabled: AtomicBool::new(false),
+            read_serving: AtomicBool::new(false),
+            staleness_limit: AtomicU64::new(64),
+            known_head: AtomicU64::new(0),
             repl: Mutex::new(ReplLog {
                 shard_watermarks: vec![0; n],
                 ..ReplLog::default()
@@ -404,6 +418,35 @@ impl FileServer {
 
     pub fn replication_enabled(&self) -> bool {
         self.repl_enabled.load(Ordering::SeqCst)
+    }
+
+    /// Turn on read fan-out for this node when it is a `Secondary`
+    /// (`replica.read_fanout`, DESIGN.md §2.11): read-only requests are
+    /// served at the replication watermark, gated by the bounded-
+    /// staleness window `staleness_ops` and per-request version floors.
+    /// A later promotion simply stops consulting either gate (the
+    /// primary is always the freshest copy).
+    pub fn enable_read_serving(&self, staleness_ops: u64) {
+        self.staleness_limit.store(staleness_ops, Ordering::SeqCst);
+        self.read_serving.store(true, Ordering::SeqCst);
+    }
+
+    pub fn read_serving(&self) -> bool {
+        self.read_serving.load(Ordering::SeqCst)
+    }
+
+    /// The primary's log head as last announced over the replication
+    /// plane (max across `Replicate` batches; 0 until the first one).
+    pub fn known_repl_head(&self) -> u64 {
+        self.known_head.load(Ordering::SeqCst)
+    }
+
+    /// Code-119 `TooStale` refusal (DESIGN.md §2.11) — the read-fan-out
+    /// sibling of code 112: "this replica cannot serve THIS read yet;
+    /// fall back toward the primary, don't sever the session".
+    fn too_stale(&self, msg: String) -> Response {
+        self.metrics.incr(names::REPLICA_TOO_STALE);
+        Response::Err { code: 119, msg }
     }
 
     /// Global position of the applied-op log (ship-seq of its last
@@ -1065,13 +1108,15 @@ impl FileServer {
                 }
             }
             Role::Secondary => {
-                // ONLY the replication plane. RegisterCallback is
-                // refused too: a client that could complete its mount
-                // handshake here would bind to a node that serves
-                // nothing (and every ingested record would queue an
-                // invalidation for it) — the 112 makes its connect
+                // The replication plane always; read-only traffic too
+                // once read fan-out is on (DESIGN.md §2.11).
+                // RegisterCallback stays refused either way: a client
+                // that could complete its mount handshake here would
+                // bind its callback promise to a node that never
+                // originates invalidations — the 112 makes its connect
                 // attempt fail so endpoint rotation keeps looking for
-                // the serving node.
+                // the serving node. Mutations are likewise refused: the
+                // secondary's store only moves by ingesting the log.
                 let allowed = matches!(
                     req,
                     Request::Ping
@@ -1081,7 +1126,33 @@ impl FileServer {
                         | Request::WatermarkQuery { .. }
                         | Request::Promote
                 );
-                if !allowed {
+                let read = self.read_serving()
+                    && matches!(
+                        req,
+                        Request::Stat { .. }
+                            | Request::ReadDir { .. }
+                            | Request::Fetch { .. }
+                            | Request::FetchMeta { .. }
+                            | Request::FetchRange { .. }
+                    );
+                if read {
+                    // bounded-staleness gate: a replica that has drifted
+                    // more than `staleness_ops` applied ops behind the
+                    // primary's last-announced log head serves NOTHING
+                    // until shipping catches it back up — the blanket
+                    // bound the per-path version floors ride on top of.
+                    let head = self.known_repl_head();
+                    let lag = head.saturating_sub(self.repl_ship_seq());
+                    let bound = self.staleness_limit.load(Ordering::SeqCst);
+                    if lag > bound {
+                        return self.too_stale(format!(
+                            "replica is {lag} ops behind the primary's log head \
+                             (staleness bound {bound}): fall back to the primary"
+                        ));
+                    }
+                    self.metrics.incr(names::REPLICA_READ_HITS);
+                }
+                if !allowed && !read {
                     return Response::Err {
                         code: 112,
                         msg: "not primary (standby replica): fail over".into(),
@@ -1124,9 +1195,15 @@ impl FileServer {
                     Err(e) => err_resp(&e),
                 }
             }
-            Request::Fetch { path } => {
+            Request::Fetch { path, min_version } => {
                 let key = vpath::normalize(&path);
                 let idx = self.shard_of(&key);
+                // per-path staleness floor (DESIGN.md §2.11): on a
+                // serving secondary, a copy older than the highest
+                // version this client has observed is a monotonicity
+                // violation waiting to happen — refuse it. The primary
+                // ignores the floor: it IS the freshest copy.
+                let enforce_floor = min_version > 0 && self.role() == Role::Secondary;
                 // admission: the namespace op serializes on its shard...
                 {
                     let _g = self.lock_shard(idx);
@@ -1153,6 +1230,14 @@ impl FileServer {
                     }
                 };
                 match snap {
+                    Ok((version, _)) if enforce_floor && version < min_version => self
+                        .too_stale(format!(
+                            "{key} is at v{version} on this replica, below the client's \
+                             observed floor v{min_version}"
+                        )),
+                    Err(FsError::NotFound(_)) if enforce_floor => self.too_stale(format!(
+                        "{key} not yet replicated here (client observed v{min_version})"
+                    )),
                     Ok((version, data)) => {
                         self.io_wait(data.len() as u64);
                         let digests = match self.cached_digests_at(idx, &key, version, epoch) {
@@ -1168,15 +1253,24 @@ impl FileServer {
                     Err(e) => err_resp(&e),
                 }
             }
-            Request::FetchMeta { path } => {
+            Request::FetchMeta { path, min_version } => {
                 let key = vpath::normalize(&path);
                 let idx = self.shard_of(&key);
+                let enforce_floor = min_version > 0 && self.role() == Role::Secondary;
                 {
                     let _g = self.lock_shard(idx);
                     self.op_wait();
                 }
                 match self.file_meta(idx, &key) {
+                    Ok((version, _, _)) if enforce_floor && version < min_version => self
+                        .too_stale(format!(
+                            "{key} is at v{version} on this replica, below the client's \
+                             observed floor v{min_version}"
+                        )),
                     Ok((version, size, digests)) => Response::FileMeta { version, size, digests },
+                    Err(FsError::NotFound(_)) if enforce_floor => self.too_stale(format!(
+                        "{key} not yet replicated here (client observed v{min_version})"
+                    )),
                     Err(e) => err_resp(&e),
                 }
             }
@@ -1188,10 +1282,34 @@ impl FileServer {
                     let _g = self.lock_shard(idx);
                     self.op_wait();
                 }
+                // `expect_version` is an exact pin, so it doubles as the
+                // staleness floor on a serving secondary (DESIGN.md
+                // §2.11): a replica copy BELOW the pin is the replica
+                // lagging (119: retry toward the primary), a copy ABOVE
+                // it means the file really changed under the fetch
+                // (116: refresh and refetch) — the same split a missing
+                // path takes (not yet replicated vs truly gone).
+                let on_secondary = self.role() == Role::Secondary;
                 let stale = |v: u64| {
-                    err_resp(&FsError::Stale(format!(
-                        "{path} changed during striped fetch (v{v} != v{expect_version})"
-                    )))
+                    if on_secondary && v < expect_version {
+                        self.too_stale(format!(
+                            "{path} is at v{v} on this replica, behind the pinned \
+                             fetch version v{expect_version}"
+                        ))
+                    } else {
+                        err_resp(&FsError::Stale(format!(
+                            "{path} changed during striped fetch (v{v} != v{expect_version})"
+                        )))
+                    }
+                };
+                let missing = |e: &FsError| {
+                    if on_secondary && matches!(e, FsError::NotFound(_)) {
+                        self.too_stale(format!(
+                            "{path} not yet replicated here (pinned fetch v{expect_version})"
+                        ))
+                    } else {
+                        err_resp(e)
+                    }
                 };
                 // Digest resolution and the block copy are separate
                 // lock-free(ish) sections; the purge epoch brackets the
@@ -1207,7 +1325,7 @@ impl FileServer {
                     match self.fs.read().unwrap().stat(&key) {
                         Ok(a) if a.version != expect_version => return stale(a.version),
                         Ok(_) => {}
-                        Err(e) => return err_resp(&e),
+                        Err(e) => return missing(&e),
                     }
                     // digests from the cache, or a whole-file digest
                     // pass — either way outside any shard lock
@@ -1217,7 +1335,7 @@ impl FileServer {
                             None => match self.file_meta(idx, &key) {
                                 Ok((v, _, d)) if v == expect_version => d,
                                 Ok((v, _, _)) => return stale(v),
-                                Err(e) => return err_resp(&e),
+                                Err(e) => return missing(&e),
                             },
                         };
                     // copy the covering blocks in ONE store read
@@ -1229,7 +1347,7 @@ impl FileServer {
                         let fs = self.fs.read().unwrap();
                         let a = match fs.stat(&key) {
                             Ok(a) => a,
-                            Err(e) => return err_resp(&e),
+                            Err(e) => return missing(&e),
                         };
                         if a.version != expect_version {
                             return stale(a.version);
@@ -1362,8 +1480,14 @@ impl FileServer {
                     Response::Err { code: 77, msg: "no such lock".into() }
                 }
             }
-            Request::Replicate { from, frames } => {
+            Request::Replicate { from, frames, head } => {
                 // reachable only on a Secondary (role gate above)
+                //
+                // record the primary's announced log head FIRST — even a
+                // batch that then stalls on missing chunks must tighten
+                // the staleness gate (the announcement is what tells a
+                // serving replica it has fallen behind)
+                self.known_head.fetch_max(head, Ordering::SeqCst);
                 let records = match crate::replica::decode_frames(&frames) {
                     Ok(r) => r,
                     Err(e) => {
@@ -1952,7 +2076,7 @@ mod tests {
     #[test]
     fn fetch_includes_verifiable_digests() {
         let s = server();
-        match s.handle(1, Request::Fetch { path: "/home/user/b.dat".into() }, t(1.0)) {
+        match s.handle(1, Request::Fetch { path: "/home/user/b.dat".into(), min_version: 0 }, t(1.0)) {
             Response::File { image } => {
                 assert_eq!(image.data.len(), 200_000);
                 assert_eq!(image.digests.len(), 4); // ceil(200000/65536)
@@ -1966,15 +2090,15 @@ mod tests {
     #[test]
     fn digest_cache_reused_until_version_changes() {
         let mut s = server();
-        s.handle(1, Request::Fetch { path: "/home/user/a.txt".into() }, t(1.0));
+        s.handle(1, Request::Fetch { path: "/home/user/a.txt".into(), min_version: 0 }, t(1.0));
         let m = Metrics::new();
         let e = Arc::new(DigestEngine::native(m.clone()));
         s.engine = e;
         // same version: cache hit, engine not consulted
-        s.handle(1, Request::Fetch { path: "/home/user/a.txt".into() }, t(2.0));
+        s.handle(1, Request::Fetch { path: "/home/user/a.txt".into(), min_version: 0 }, t(2.0));
         assert_eq!(m.counter(names::DIGEST_CALLS), 0);
         s.local_write("/home/user/a.txt", b"changed", t(3.0)).unwrap();
-        s.handle(1, Request::Fetch { path: "/home/user/a.txt".into() }, t(4.0));
+        s.handle(1, Request::Fetch { path: "/home/user/a.txt".into(), min_version: 0 }, t(4.0));
         assert_eq!(m.counter(names::DIGEST_CALLS), 1);
     }
 
@@ -1982,7 +2106,7 @@ mod tests {
     fn fetch_range_serves_block_extents_with_digests() {
         let s = server();
         // whole-file digests (fills the digest cache)
-        let whole = match s.handle(1, Request::Fetch { path: "/home/user/b.dat".into() }, t(1.0)) {
+        let whole = match s.handle(1, Request::Fetch { path: "/home/user/b.dat".into(), min_version: 0 }, t(1.0)) {
             Response::File { image } => image,
             r => panic!("{r:?}"),
         };
@@ -2389,7 +2513,7 @@ mod tests {
         let v_cached = s.home().stat(&to).unwrap().version;
         // cache the target's digests at its current version
         assert!(matches!(
-            s.handle(1, Request::FetchMeta { path: to.clone() }, t(1.0)),
+            s.handle(1, Request::FetchMeta { path: to.clone(), min_version: 0 }, t(1.0)),
             Response::FileMeta { .. }
         ));
         // rename over it: the moved inode KEEPS its version, which here
@@ -2405,7 +2529,7 @@ mod tests {
         assert_eq!(s.home().stat(&to).unwrap().version, v_cached);
         // the re-fetch must serve digests of the NEW content, not the
         // stale cached vector
-        let r = s.handle(1, Request::FetchMeta { path: to.clone() }, t(3.0));
+        let r = s.handle(1, Request::FetchMeta { path: to.clone(), min_version: 0 }, t(3.0));
         let Response::FileMeta { digests, .. } = r else { panic!("{r:?}") };
         let engine = DigestEngine::native(Metrics::new());
         assert_eq!(digests, engine.digests(b"new content", 65536));
@@ -2418,7 +2542,7 @@ mod tests {
         s.home_mut().write("/home/user/dir/f", b"old content", t(0.0)).unwrap();
         // cache the child's digests (keyed by its current version)
         assert!(matches!(
-            s.handle(1, Request::FetchMeta { path: "/home/user/dir/f".into() }, t(1.0)),
+            s.handle(1, Request::FetchMeta { path: "/home/user/dir/f".into(), min_version: 0 }, t(1.0)),
             Response::FileMeta { .. }
         ));
         // move the whole directory, then recreate the old path: the new
@@ -2454,7 +2578,7 @@ mod tests {
         assert!(matches!(r, Response::Applied { .. }), "{r:?}");
         // the dir-rename sweep must have dropped the stale child entry:
         // this serves digests of the NEW content despite the collision
-        let r = s.handle(1, Request::FetchMeta { path: "/home/user/dir/f".into() }, t(5.0));
+        let r = s.handle(1, Request::FetchMeta { path: "/home/user/dir/f".into(), min_version: 0 }, t(5.0));
         let Response::FileMeta { digests, .. } = r else { panic!("{r:?}") };
         let engine = DigestEngine::native(Metrics::new());
         assert_eq!(digests, engine.digests(b"new content", 65536));
@@ -2559,13 +2683,13 @@ mod tests {
         let recs = primary.repl_records_after(from, usize::MAX);
         let frames = crate::replica::frame_records(&recs);
         let mut r =
-            sec.handle(0, Request::Replicate { from: from + 1, frames: frames.clone() }, t(1.0));
+            sec.handle(0, Request::Replicate { from: from + 1, frames: frames.clone(), head: 0 }, t(1.0));
         if let Response::ReplicaNeed { digests } = &r {
             let chunks = primary.read_chunks(digests);
             assert_eq!(chunks.len(), digests.len(), "primary must hold every pinned chunk");
             let pr = sec.handle(0, Request::ChunkPush { chunks }, t(1.0));
             assert!(matches!(pr, Response::ChunkAck { .. }), "{pr:?}");
-            r = sec.handle(0, Request::Replicate { from: from + 1, frames }, t(1.0));
+            r = sec.handle(0, Request::Replicate { from: from + 1, frames, head: 0 }, t(1.0));
         }
         assert!(matches!(r, Response::ReplicaAck { .. }), "{r:?}");
     }
@@ -2708,7 +2832,7 @@ mod tests {
         let frames = crate::replica::frame_records(&recs);
         // the writes shipped by reference: the first delivery names
         // chunks the secondary does not hold yet — NOTHING applies...
-        let r = sec.handle(0, Request::Replicate { from: 1, frames: frames.clone() }, t(4.5));
+        let r = sec.handle(0, Request::Replicate { from: 1, frames: frames.clone(), head: 0 }, t(4.5));
         let Response::ReplicaNeed { digests } = r else { panic!("{r:?}") };
         assert!(!digests.is_empty());
         assert_eq!(sec.repl_ship_seq(), 0, "a needy batch must not partially apply");
@@ -2716,11 +2840,11 @@ mod tests {
         let chunks = s.read_chunks(&digests);
         let r = sec.handle(0, Request::ChunkPush { chunks }, t(4.6));
         assert!(matches!(r, Response::ChunkAck { .. }), "{r:?}");
-        let r = sec.handle(0, Request::Replicate { from: 1, frames: frames.clone() }, t(5.0));
+        let r = sec.handle(0, Request::Replicate { from: 1, frames: frames.clone(), head: 0 }, t(5.0));
         assert!(matches!(r, Response::ReplicaAck { watermark: 3 }), "{r:?}");
         let v = sec.home().stat("/home/user/f1").unwrap().version;
         // ...a duplicate delivery (lost ack) is skipped wholesale
-        let r = sec.handle(0, Request::Replicate { from: 1, frames }, t(6.0));
+        let r = sec.handle(0, Request::Replicate { from: 1, frames, head: 0 }, t(6.0));
         assert!(matches!(r, Response::ReplicaAck { watermark: 3 }), "{r:?}");
         assert_eq!(sec.home().stat("/home/user/f1").unwrap().version, v, "no double-apply");
         // a gapped batch is refused, watermark unmoved
@@ -2729,14 +2853,14 @@ mod tests {
             shard: 0,
             payload: ReplPayload::Local { op: MetaOp::Unlink { path: "/home/user/f1".into() } },
         }]);
-        let r = sec.handle(0, Request::Replicate { from: 9, frames: gap }, t(7.0));
+        let r = sec.handle(0, Request::Replicate { from: 9, frames: gap, head: 0 }, t(7.0));
         assert!(matches!(r, Response::Err { .. }), "{r:?}");
         assert_eq!(sec.repl_ship_seq(), 3);
         // a tampered batch is refused before anything applies
         let mut bad = crate::replica::frame_records(&s.repl_records_after(0, 1));
         let n = bad.len();
         bad[n - 1] ^= 0xFF;
-        let r = sec.handle(0, Request::Replicate { from: 1, frames: bad }, t(8.0));
+        let r = sec.handle(0, Request::Replicate { from: 1, frames: bad, head: 0 }, t(8.0));
         assert!(matches!(r, Response::Err { code: 74, .. }), "{r:?}");
     }
 
@@ -2839,11 +2963,11 @@ mod tests {
             Response::Attr { attr } => assert_eq!(attr.size, 11),
             r => panic!("{r:?}"),
         }
-        match s.handle(1, Request::Fetch { path: snap_path.clone() }, t(3.0)) {
+        match s.handle(1, Request::Fetch { path: snap_path.clone(), min_version: 0 }, t(3.0)) {
             Response::File { image } => assert_eq!(image.data, b"hello world"),
             r => panic!("{r:?}"),
         }
-        match s.handle(1, Request::Fetch { path: "/home/user/a.txt".into() }, t(3.0)) {
+        match s.handle(1, Request::Fetch { path: "/home/user/a.txt".into(), min_version: 0 }, t(3.0)) {
             Response::File { image } => assert_eq!(image.data, b"rewritten since the snapshot"),
             r => panic!("{r:?}"),
         }

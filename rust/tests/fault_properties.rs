@@ -2,8 +2,10 @@
 //! explorer plus directed failure-plane tests (DESIGN.md §2.5, §2.7).
 //!
 //! The explorer drives 2 clients + 1 server — or, on the replicated
-//! topology, 2 clients + a primary/secondary pair with log shipping and
-//! primary-crash/promote schedule events — through hundreds of seeded
+//! topology, 2 clients + a primary with 2–3 SERVING secondaries
+//! (DESIGN.md §2.11: per-seed fleet size, log shipping to every one,
+//! bounded-staleness reads routed to a random replica per op, and
+//! primary-crash/promote schedule events) — through hundreds of seeded
 //! fault schedules (dropped/duplicated/delayed packets, torn transfers,
 //! multi-step partitions, server crash/restart, client crash/recovery,
 //! failover, bit-rot byte flips in durable artifacts) and checks the
@@ -16,10 +18,10 @@
 //!       directory holds exactly the files the model predicts, with no
 //!       spurious conflict files — across crash, replay AND failover;
 //!   I3  all replicas converge: after quiesce, every client reads every
-//!       file byte-identical to the authority, and (un-promoted pairs)
-//!       the secondary's store mirrors the primary's byte- and
+//!       file byte-identical to the authority, and (un-promoted fleets)
+//!       EVERY secondary's store mirrors the primary's byte- and
 //!       version-identically once shipping drains;
-//!   I4  the secondary never serves state ahead of its replication
+//!   I4  no secondary ever serves state ahead of its replication
 //!       watermark: for every path its shipped log governs, its version
 //!       is exactly what the log prescribes at the watermark, and paths
 //!       first created beyond the watermark are absent;
@@ -28,7 +30,16 @@
 //!       DETECTED — surfaced as a repair-from-replica, a cache-block
 //!       demotion, a dropped op-log record, or a typed `Corrupted`
 //!       refusal — never served as data, never a panic (DESIGN.md
-//!       §2.10; the byte-exact I1/I3 sweeps are what catch a leak).
+//!       §2.10; the byte-exact I1/I3 sweeps are what catch a leak);
+//!   I6  no client ever observes a path's version moving BACKWARDS
+//!       (DESIGN.md §2.11): across replica switches, too-stale
+//!       fallbacks and promotions, each client session's per-path
+//!       high-water version only grows — the bounded-staleness floor
+//!       (`min_version` on the read RPCs) is what enforces it. The
+//!       oracle resets per path on that client's own unlink/rename and
+//!       wholesale on client crash-recovery (monotonic reads are a
+//!       SESSION property; versions legitimately restart at 1 on
+//!       unlink+recreate).
 //!
 //! A failing schedule reproduces deterministically from its printed seed:
 //!
@@ -118,6 +129,30 @@ fn read_all(c: &mut XufsClient<SimLink>, path: &str) -> Result<Vec<u8>, FsError>
     Ok(out)
 }
 
+/// I6 oracle: after a SUCCESSFUL read of `path` by client `i`, the
+/// version its cache now holds must be at least the highest version
+/// that session ever observed for the path. The per-path entry resets
+/// when the client itself unlinks/renames the path (versions restart at
+/// 1 on recreate) and the whole map resets on crash-recovery (monotonic
+/// reads are a session property).
+fn observe_read(
+    c: &XufsClient<SimLink>,
+    hw: &mut BTreeMap<String, u64>,
+    i: usize,
+    path: &str,
+) -> Result<(), String> {
+    let Some(v) = c.cache().entry(path).map(|e| e.version) else { return Ok(()) };
+    if let Some(prev) = hw.get(path) {
+        if v < *prev {
+            return Err(format!(
+                "I6: client {i} observed {path} moving backwards: v{v} after v{prev}"
+            ));
+        }
+    }
+    hw.insert(path.to_string(), v);
+    Ok(())
+}
+
 /// I4 (replicated topology, un-promoted): the secondary never serves
 /// state ahead of its replication watermark. For every path governed by
 /// a shipped `Op` record, the secondary's version must be exactly what
@@ -126,10 +161,22 @@ fn read_all(c: &mut XufsClient<SimLink>, path: &str) -> Result<Vec<u8>, FsError>
 /// absent. Paths touched by `Local` records are skipped (those carry no
 /// version), as are conflict side-writes (not in the log at all).
 fn check_i4(world: &SimWorld, initial_paths: &BTreeSet<String>) -> Result<(), String> {
-    let Some(sec) = world.secondary() else { return Ok(()) };
     if world.is_promoted() {
         return Ok(());
     }
+    for sec in world.secondaries() {
+        check_i4_on(world, sec, initial_paths)?;
+    }
+    Ok(())
+}
+
+/// [`check_i4`] against ONE secondary, at whatever watermark its own
+/// shipper reached (the fleet's replicas lag independently).
+fn check_i4_on(
+    world: &SimWorld,
+    sec: &xufs::server::FileServer,
+    initial_paths: &BTreeSet<String>,
+) -> Result<(), String> {
     let w = sec.repl_ship_seq();
     // Seed the per-path fold with the effects retained from the
     // truncated acked prefix (DESIGN.md §2.8): those records were by
@@ -201,11 +248,11 @@ fn check_i4(world: &SimWorld, initial_paths: &BTreeSet<String>) -> Result<(), St
     Ok(())
 }
 
-/// Un-promoted replicated quiesce: once shipping drains, the secondary's
-/// store must mirror the primary's — same paths, kinds, sizes, versions
-/// and bytes (mtimes differ: the mirror applies at ship time).
+/// Un-promoted replicated quiesce: once shipping drains, EVERY
+/// secondary's store must mirror the primary's — same paths, kinds,
+/// sizes, versions and bytes (mtimes differ: the mirror applies at ship
+/// time).
 fn check_replica_mirror(world: &SimWorld) -> Result<(), String> {
-    let Some(sec) = world.secondary() else { return Ok(()) };
     if world.is_promoted() {
         return Ok(());
     }
@@ -230,11 +277,16 @@ fn check_replica_mirror(world: &SimWorld) -> Result<(), String> {
         Ok(out)
     };
     let a = fingerprint(&world.server)?;
-    let b = fingerprint(&sec)?;
-    if a != b {
-        let diff: Vec<&String> =
-            a.iter().filter(|x| !b.contains(x)).chain(b.iter().filter(|x| !a.contains(x))).collect();
-        return Err(format!("I3: secondary mirror diverges from primary: {diff:?}"));
+    for (j, sec) in world.secondaries().iter().enumerate() {
+        let b = fingerprint(sec)?;
+        if a != b {
+            let diff: Vec<&String> = a
+                .iter()
+                .filter(|x| !b.contains(x))
+                .chain(b.iter().filter(|x| !a.contains(x)))
+                .collect();
+            return Err(format!("I3: secondary {j} mirror diverges from primary: {diff:?}"));
+        }
     }
     Ok(())
 }
@@ -243,14 +295,22 @@ fn check_replica_mirror(world: &SimWorld) -> Result<(), String> {
 /// plane, then quiesce and check the convergence invariants. `shards`
 /// pins the server's namespace shard count (DESIGN.md §2.6) so the same
 /// invariants are model-checked against both the sharded core and the
-/// single-lock ablation; `replica` stands up the primary/secondary pair
-/// with log shipping and primary-crash/promote schedule events
-/// (DESIGN.md §2.7).
+/// single-lock ablation; `replica` stands up a primary plus 2–3 SERVING
+/// secondaries (per-seed fleet size) with log shipping to every one,
+/// bounded-staleness read fan-out, and primary-crash/promote schedule
+/// events (DESIGN.md §2.7/§2.11).
 fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(), String> {
     let mut cfg = XufsConfig::default();
     cfg.seed = seed;
     cfg.fault = if replica { replica_chaos_profile() } else { chaos_profile() };
     cfg.server.shards = shards;
+    if replica {
+        // 2 or 3 serving secondaries per seed; a tight staleness bound
+        // so the server-side gate (code 119 on lag) actually bites
+        cfg.replica.secondaries = 2 + (seed % 2) as usize;
+        cfg.replica.read_fanout = true;
+        cfg.replica.staleness_ops = 8;
+    }
     let mut world = SimWorld::new(cfg.clone());
     world.home(|s| {
         let now = VirtualTime::ZERO;
@@ -290,6 +350,8 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
     // local operation (each client writes a disjoint subtree, so the
     // final home state is exactly the per-client last-close truth)
     let mut model: Vec<BTreeMap<String, Vec<u8>>> = vec![BTreeMap::new(), BTreeMap::new()];
+    // I6 oracle: per-client per-path high-water version (see observe_read)
+    let mut high_water: Vec<BTreeMap<String, u64>> = vec![BTreeMap::new(), BTreeMap::new()];
     let mut rng = Rng::new(seed ^ 0x5EED_CAFE);
 
     for op_no in 0..ops as u64 {
@@ -298,6 +360,18 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
         // advances the schedule, so partitions and crashes always end
         if !clients[i].link().is_connected() {
             let _ = clients[i].link_mut().reconnect();
+        }
+        if replica {
+            // route this op's reads at a random endpoint: 0 = the
+            // default lowest-RTT replica, k = replica k pinned — so
+            // every seed exercises every serving secondary AND the
+            // too-stale/fenced/down fallbacks from each of them
+            let n = world.secondaries().len() as u64;
+            let pref = match rng.below(n + 1) {
+                0 => None,
+                k => Some(k as usize),
+            };
+            clients[i].link_mut().set_read_preference(pref);
         }
         let file = format!("/home/u/c{i}/f{}", rng.below(4));
         match rng.below(20) {
@@ -314,10 +388,15 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
                 model[i].insert(file.clone(), data);
             }
             8..=9 => {
-                let _ = clients[i].scan_file(&file, 4096);
+                if clients[i].scan_file(&file, 4096).is_ok() {
+                    observe_read(&clients[i], &mut high_water[i], i, &file)?;
+                }
             }
             10..=11 => {
-                let _ = clients[i].scan_file(&format!("/home/u/shared{}", rng.below(2)), 8192);
+                let shared = format!("/home/u/shared{}", rng.below(2));
+                if clients[i].scan_file(&shared, 8192).is_ok() {
+                    observe_read(&clients[i], &mut high_water[i], i, &shared)?;
+                }
             }
             12..=13 => {
                 if model[i].contains_key(&file) {
@@ -325,6 +404,9 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
                         c.unlink(&file)
                     })?;
                     model[i].remove(&file);
+                    // the client removed the path itself: a recreate
+                    // legitimately restarts versions at 1
+                    high_water[i].remove(&file);
                 }
             }
             14 => {
@@ -335,6 +417,7 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
                     })?;
                     let data = model[i].remove(&file).unwrap();
                     model[i].insert(to, data);
+                    high_water[i].remove(&file);
                 }
             }
             15 => {
@@ -382,6 +465,8 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
                     c2.writeback = WritebackMode::Async;
                     c2.async_flush_threshold = 3;
                     clients[idx] = c2;
+                    // a fresh session: monotonic-read state resets (I6)
+                    high_water[idx].clear();
                 }
                 FaultEvent::PromoteSecondary => {
                     if !replica {
@@ -493,6 +578,7 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
                             c2.writeback = WritebackMode::Async;
                             c2.async_flush_threshold = 3;
                             clients[idx] = c2;
+                            high_water[idx].clear();
                         }
                     }
                 }
@@ -604,7 +690,9 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
             ));
         }
     }
-    // I3: every replica reads every file byte-identical to home
+    // I3: every replica reads every file byte-identical to home (the
+    // reads still fan out under each client's last pinned preference,
+    // so the I6 oracle also crosses the drained replicas here)
     for ci in 0..clients.len() {
         for m in &model {
             for (path, want) in m {
@@ -613,6 +701,7 @@ fn run_schedule(seed: u64, ops: usize, shards: usize, replica: bool) -> Result<(
                 if &got != want {
                     return Err(format!("I3: client {ci} reads stale/divergent {path}"));
                 }
+                observe_read(&clients[ci], &mut high_water[ci], ci, path)?;
             }
         }
     }
@@ -695,14 +784,18 @@ fn fault_schedule_explorer_single_shard_ablation() {
     explore_with_shards(0xFA17_4000..0xFA17_4000 + 50, 60, 1);
 }
 
-/// The REPLICATED fault matrix (DESIGN.md §2.7): 220 seeded schedules on
-/// the 2-clients + primary + secondary topology — log shipping rides the
-/// same WAN faults, primary crashes escalate to a promote decision half
-/// the time, clients fail over with full replay of their unacked op
-/// logs. Invariants I1–I3 are re-proven against whichever node ends up
-/// authoritative, plus I4 (the secondary never serves state ahead of its
-/// replication watermark). CI's `failover-matrix` job runs exactly this;
-/// a failing schedule reproduces with
+/// The REPLICATED fault matrix (DESIGN.md §2.7/§2.11): 220 seeded
+/// schedules on the 2-clients + primary + 2–3 SERVING secondaries
+/// topology — log shipping to every replica rides the same WAN faults,
+/// bounded-staleness reads route to a random replica per op (falling
+/// back on too-stale/fenced/down refusals), primary crashes escalate to
+/// a promote decision half the time, clients fail over with full replay
+/// of their unacked op logs. Invariants I1–I3 are re-proven against
+/// whichever node ends up authoritative, plus I4 (no secondary serves
+/// ahead of its watermark), I5 and I6 (no client session ever observes
+/// a version move backwards — across replica switches AND promotions).
+/// CI's `failover-matrix` job runs exactly this; a failing schedule
+/// reproduces with
 /// `FAULT_SEED=<seed> cargo test --test fault_properties fault_schedule_explorer_replicated`.
 #[test]
 fn fault_schedule_explorer_replicated() {
@@ -1390,4 +1483,165 @@ fn promote_after_truncation_ships_missing_chunks_and_serves() {
     assert_eq!(c.link().active_endpoint(), 1);
     let got = read_all(&mut c, "/home/u/late.bin").unwrap();
     assert_eq!(got, &big[..96 * 1024]);
+}
+
+// ---------------------------------------------------------------------
+// directed read-fanout tests (DESIGN.md §2.11)
+// ---------------------------------------------------------------------
+
+/// A config with `n` serving read replicas and shipping only on demand
+/// (`max_lag_ops` far above anything a directed test queues).
+fn fanout_cfg(n: usize) -> XufsConfig {
+    let mut cfg = XufsConfig::default();
+    cfg.replica.secondaries = n;
+    cfg.replica.read_fanout = true;
+    cfg.replica.max_lag_ops = 1000;
+    cfg
+}
+
+/// Bounded-staleness gate, both halves: a replica lagging behind the
+/// client's observed version answers code 119 `TooStale` and the read
+/// transparently falls back to the primary (never serving the old
+/// bytes); once shipping catches the fleet up, the SAME replica serves
+/// the read itself.
+#[test]
+fn read_replica_answers_too_stale_then_serves_after_catch_up() {
+    let mut world = SimWorld::new(fanout_cfg(2));
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/doc", b"v1 in the initial snapshot", t(0.0)).unwrap();
+    });
+    world.enable_replica();
+    let mut a = world.mount("/home/u").unwrap();
+    let mut b = world.mount("/home/u").unwrap();
+    // a caches v1; b then advances the file past the fleet's watermark
+    a.scan_file("/home/u/doc", 1024).unwrap();
+    b.write_file("/home/u/doc", b"v2 far ahead of the fleet", 1024).unwrap();
+    // the invalidation callback taught a the new version — its
+    // bounded-staleness floor. Its next read, pinned at the lagging
+    // replica, must surface v2 via the fallback, never v1.
+    a.link_mut().set_read_preference(Some(1));
+    let stale0 = world.metrics.counter(names::REPLICA_TOO_STALE);
+    let redirect0 = world.metrics.counter(names::REPLICA_READ_REDIRECTS);
+    assert_eq!(read_all(&mut a, "/home/u/doc").unwrap(), b"v2 far ahead of the fleet");
+    assert!(world.metrics.counter(names::REPLICA_TOO_STALE) > stale0, "replica refused as 119");
+    assert!(world.metrics.counter(names::REPLICA_READ_REDIRECTS) > redirect0);
+    // the fleet catches up; the same replica now serves a fresh session
+    assert_eq!(world.replica_tick(true), 0);
+    let mut f = world.mount("/home/u").unwrap();
+    f.link_mut().set_read_preference(Some(1));
+    let hits0 = world.metrics.counter(names::REPLICA_READ_HITS);
+    assert_eq!(read_all(&mut f, "/home/u/doc").unwrap(), b"v2 far ahead of the fleet");
+    assert!(
+        world.metrics.counter(names::REPLICA_READ_HITS) > hits0,
+        "the caught-up replica serves the read itself"
+    );
+}
+
+/// The I6 edge: a session that read from a replica keeps observing
+/// non-decreasing versions through a primary-only write (too-stale
+/// fallback) AND through a crash + promotion (the promote drain catches
+/// the new primary up before it serves).
+#[test]
+fn reads_never_observe_version_regress_across_promotion() {
+    let mut world = SimWorld::new(fanout_cfg(2));
+    world.home(|s| {
+        s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        s.home_mut().write("/home/u/doc", b"v1", t(0.0)).unwrap();
+    });
+    world.enable_replica();
+    let mut w = world.mount("/home/u").unwrap();
+    let mut r = world.mount("/home/u").unwrap();
+    w.write_file("/home/u/doc", b"v2 on the whole fleet", 1024).unwrap();
+    assert_eq!(world.replica_tick(true), 0);
+    // the reader observes v2 from replica 2...
+    r.link_mut().set_read_preference(Some(2));
+    assert_eq!(read_all(&mut r, "/home/u/doc").unwrap(), b"v2 on the whole fleet");
+    let v2 = r.cache().entry("/home/u/doc").unwrap().version;
+    // ...the writer advances the primary past the fleet...
+    w.write_file("/home/u/doc", b"v3 only on the primary", 1024).unwrap();
+    // ...and the reader, still pinned at the now-lagging replica, must
+    // see v3 via the fallback — the version only grows
+    assert_eq!(read_all(&mut r, "/home/u/doc").unwrap(), b"v3 only on the primary");
+    let v3 = r.cache().entry("/home/u/doc").unwrap().version;
+    assert!(v3 > v2, "observed versions grow: v{v2} then v{v3}");
+    // the primary dies; the promote drain catches the new primary up to
+    // v3 BEFORE it serves, so the failed-over reader never regresses
+    world.server_crash();
+    world.promote_secondary().unwrap();
+    r.link_mut().reconnect().unwrap();
+    assert_eq!(r.link().active_endpoint(), 1);
+    assert_eq!(read_all(&mut r, "/home/u/doc").unwrap(), b"v3 only on the primary");
+    let v_post = r.cache().entry("/home/u/doc").unwrap().version;
+    assert!(v_post >= v3, "promotion never rewinds observed versions: v{v3} then v{v_post}");
+}
+
+/// A path FIRST created inside the acked-and-truncated repl-log prefix
+/// (DESIGN.md §2.8 retention) must still serve from every read replica:
+/// the replicas materialized it before the primary dropped the records.
+#[test]
+fn fanout_read_serves_path_born_inside_truncated_log_prefix() {
+    let mut cfg = fanout_cfg(2);
+    cfg.replica.max_lag_ops = XufsConfig::default().replica.max_lag_ops;
+    let mut world = SimWorld::new(cfg);
+    world.home(|s| s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap());
+    world.enable_replica();
+    let mut c = world.mount("/home/u").unwrap();
+    c.write_file("/home/u/born.txt", b"born after the snapshot", 1024).unwrap();
+    c.fsync().unwrap();
+    assert_eq!(world.replica_tick(true), 0);
+    assert!(world.server.repl_base() > 0, "the acked prefix truncated");
+    for k in 1..=2usize {
+        let mut r = world.mount("/home/u").unwrap();
+        r.link_mut().set_read_preference(Some(k));
+        let hits0 = world.metrics.counter(names::REPLICA_READ_HITS);
+        assert_eq!(read_all(&mut r, "/home/u/born.txt").unwrap(), b"born after the snapshot");
+        assert!(
+            world.metrics.counter(names::REPLICA_READ_HITS) > hits0,
+            "replica {k} serves the truncated-prefix birth"
+        );
+    }
+}
+
+/// Integrity on the read plane (DESIGN.md §2.10 meets §2.11): a rotted
+/// chunk on a read replica is REFUSED (code 118 → primary fallback,
+/// byte-exact data), healed from the primary's clean copy by the repair
+/// tick, and only then served by the replica again.
+#[test]
+fn rotted_replica_chunk_falls_back_then_heals_then_serves() {
+    let mut world = SimWorld::new(fanout_cfg(2));
+    world.home(|s| s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap());
+    world.enable_replica();
+    let mut c = world.mount("/home/u").unwrap();
+    let mut big = vec![0u8; 300 * 1024];
+    let mut rng = Rng::new(0x2B11);
+    rng.fill_bytes(&mut big);
+    c.write_file("/home/u/data.bin", &big, 65536).unwrap();
+    c.fsync().unwrap();
+    assert_eq!(world.replica_tick(true), 0, "chunks shipped to the fleet");
+    // rot one byte of one chunk on replica 0 (= endpoint 1)
+    world.corrupt_replica_chunk(0, 7).expect("the replica holds chunks");
+    let redirect0 = world.metrics.counter(names::REPLICA_READ_REDIRECTS);
+    let mut r = world.mount("/home/u").unwrap();
+    r.link_mut().set_read_preference(Some(1));
+    assert_eq!(read_all(&mut r, "/home/u/data.bin").unwrap(), big, "never rotted bytes");
+    assert!(
+        world.metrics.counter(names::REPLICA_READ_REDIRECTS) > redirect0,
+        "the rotted page was refused by the replica and re-read from the primary"
+    );
+    // the repair tick scrubs the replica and heals it from the primary
+    assert_eq!(world.repair_tick().unwrap(), 0, "quarantine drained");
+    assert!(world.secondary().unwrap().quarantined_chunks().is_empty());
+    // a fresh session now reads the whole file from the healed replica
+    let mut r2 = world.mount("/home/u").unwrap();
+    r2.link_mut().set_read_preference(Some(1));
+    let hits0 = world.metrics.counter(names::REPLICA_READ_HITS);
+    let redirect1 = world.metrics.counter(names::REPLICA_READ_REDIRECTS);
+    assert_eq!(read_all(&mut r2, "/home/u/data.bin").unwrap(), big);
+    assert!(world.metrics.counter(names::REPLICA_READ_HITS) > hits0);
+    assert_eq!(
+        world.metrics.counter(names::REPLICA_READ_REDIRECTS),
+        redirect1,
+        "no fallback needed after the heal"
+    );
 }

@@ -118,8 +118,8 @@ fn rand_request(rng: &mut Rng) -> Request {
         1 => Request::AuthProof { key_id: rand_string(rng), proof: rand_bytes(rng, 48) },
         2 => Request::Stat { path: rand_string(rng) },
         3 => Request::ReadDir { path: rand_string(rng) },
-        4 => Request::Fetch { path: rand_string(rng) },
-        5 => Request::FetchMeta { path: rand_string(rng) },
+        4 => Request::Fetch { path: rand_string(rng), min_version: rng.below(1 << 30) },
+        5 => Request::FetchMeta { path: rand_string(rng), min_version: rng.below(1 << 30) },
         6 => Request::FetchRange {
             path: rand_string(rng),
             offset: rng.next_u64() >> 20,
@@ -147,7 +147,11 @@ fn rand_request(rng: &mut Rng) -> Request {
                 })
                 .collect(),
         },
-        14 => Request::Replicate { from: rng.below(1 << 40), frames: rand_bytes(rng, 64) },
+        14 => Request::Replicate {
+            from: rng.below(1 << 40),
+            frames: rand_bytes(rng, 64),
+            head: rng.below(1 << 40),
+        },
         15 => Request::WatermarkQuery { shard: rng.next_u32() },
         16 => Request::Promote,
         17 => Request::ChunkPush {

@@ -338,7 +338,7 @@ fn stalled_reader_throttles_only_itself_then_drains_intact() {
     rng.fill_bytes(&mut big);
     let r = rig(&[("/home/u/big.bin", big.clone())]);
     let (mut s, mut dec, mut w) = raw_handshake(r.tcp.addr, &r.pair);
-    w.frame(|e| Request::FetchMeta { path: "/home/u/big.bin".into() }.encode_into(e));
+    w.frame(|e| Request::FetchMeta { path: "/home/u/big.bin".into(), min_version: 0 }.encode_into(e));
     assert!(w.flush_to(&mut s).unwrap());
     let version = match next_response(&mut s, &mut dec) {
         Response::FileMeta { version, .. } => version,
@@ -405,6 +405,147 @@ fn admission_control_refuses_with_busy_code() {
     drop(keep1);
     std::thread::sleep(std::time::Duration::from_millis(200));
     let _readmitted = raw_handshake(r.tcp.addr, &r.pair);
+}
+
+/// The full replicated stack over real sockets (DESIGN.md §2.7/§2.11):
+/// a primary and a secondary rig, a background shipper daemon streaming
+/// the primary's log over a replication-plane `TcpLink`, two clients
+/// hammering ~10k mixed ops — with the primary killed and restarted
+/// mid-run — and at quiesce the secondary's store is byte-exact with
+/// the primary's.
+#[test]
+fn replicated_soak_over_tcp_converges_byte_exact() {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    use xufs::replica::Shipper;
+
+    let ra = rig(&[]);
+    let rb = rig(&[]);
+    rb.server.set_role(Role::Secondary);
+    rb.server.enable_replication();
+    ra.server.enable_replication();
+
+    // shipper daemon: drains the primary's durable log to the secondary
+    // every few milliseconds, riding through errors with a reconnect
+    let stop = Arc::new(AtomicBool::new(false));
+    let daemon = {
+        let primary = ra.server.clone();
+        let stop = stop.clone();
+        let metrics = ra.metrics.clone();
+        let link = TcpLink::connect_replication(
+            rb.tcp.addr,
+            ra.pair.clone(),
+            ra.cfg.clone(),
+            Metrics::new(),
+        )
+        .expect("replication link to the secondary");
+        std::thread::spawn(move || {
+            let mut sh = Shipper::new(link, 64);
+            while !stop.load(Ordering::SeqCst) {
+                if sh.ship(&primary, &metrics).is_err() {
+                    let _ = sh.link_mut().reconnect();
+                    let _ = sh.resync();
+                }
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            sh
+        })
+    };
+
+    let mut clients = vec![ra.client(1), ra.client(2)];
+    let mut rng = Rng::new(0x50AC_2026);
+    const STEPS: usize = 10_000;
+    for step in 0..STEPS {
+        // mid-run primary kill: ops fail while it is down, the shipper
+        // keeps draining the durable log, clients reconnect after the
+        // restart and replay their queues (server-side seq dedup makes
+        // the replay exactly-once, so the mirror stays exact)
+        if step == 6_000 {
+            ra.server.crash();
+        }
+        if step == 6_150 {
+            ra.server.restart();
+            for c in clients.iter_mut() {
+                while c.link_mut().reconnect().is_err() {
+                    std::thread::sleep(std::time::Duration::from_millis(5));
+                }
+            }
+        }
+        let i = (rng.below(2)) as usize;
+        let f = format!("/home/u/f{}", rng.below(48));
+        match rng.below(10) {
+            0..=5 => {
+                let mut data = vec![0u8; (1 + rng.below(2048)) as usize];
+                rng.fill_bytes(&mut data);
+                let _ = clients[i].write_file(&f, &data, 1024);
+            }
+            6..=7 => {
+                let _ = clients[i].scan_file(&f, 4096);
+            }
+            8 => {
+                let _ = clients[i].unlink(&f);
+            }
+            _ => {
+                let _ = clients[i].fsync();
+            }
+        }
+    }
+    // quiesce: every client queue drained at the primary
+    for c in clients.iter_mut() {
+        for _ in 0..100 {
+            if c.fsync().is_ok() && c.queue_len() == 0 {
+                break;
+            }
+            let _ = c.link_mut().reconnect();
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        assert_eq!(c.queue_len(), 0, "client queue must drain at quiesce");
+    }
+    stop.store(true, Ordering::SeqCst);
+    let mut sh = daemon.join().expect("shipper daemon");
+    // final drain: nothing the clients applied may be missing
+    for _ in 0..100 {
+        match sh.ship(&ra.server, &ra.metrics) {
+            Ok(0) => break,
+            Ok(_) => {}
+            Err(_) => {
+                let _ = sh.link_mut().reconnect();
+                let _ = sh.resync();
+            }
+        }
+    }
+    assert_eq!(sh.lag(&ra.server), 0, "secondary fully caught up");
+
+    // byte-exact convergence: same paths, kinds, sizes, versions, bytes
+    // (mtimes differ by design — the mirror applies at ship time)
+    let fingerprint = |s: &FileServer| -> Vec<String> {
+        let guard = s.home();
+        let mut out = Vec::new();
+        for (path, attr) in guard.walk("/").expect("walk") {
+            let content = match attr.kind {
+                xufs::homefs::NodeKind::File => {
+                    let data = guard.read(&path).expect("read");
+                    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+                    for b in &data {
+                        h ^= *b as u64;
+                        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+                    }
+                    format!("{} bytes, fnv {h:016x}", data.len())
+                }
+                xufs::homefs::NodeKind::Dir => "dir".to_string(),
+            };
+            out.push(format!("{path} v{} {:?} {} [{content}]", attr.version, attr.kind, attr.size));
+        }
+        out
+    };
+    let a = fingerprint(&ra.server);
+    let b = fingerprint(&rb.server);
+    assert!(a.len() > 2, "the soak must have created files");
+    let diff: Vec<&String> = a
+        .iter()
+        .filter(|x| !b.contains(x))
+        .chain(b.iter().filter(|x| !a.contains(x)))
+        .collect();
+    assert!(diff.is_empty(), "secondary mirror diverges: {diff:?}");
 }
 
 #[test]
