@@ -1,0 +1,32 @@
+//! WAN transport v2 bench runner: prints the 4-profile x 4-mode sweep
+//! (static/adaptive striping x fault-on-miss/pipelined readahead),
+//! regenerates `BENCH_transport.json` at the repo root, and ENFORCES
+//! the acceptance criterion (adaptive+pipelined >= 1.3x the static
+//! fault-on-miss goodput on the lossy AND asymmetric profiles, with
+//! nonzero sub-second op-latency quantiles). Deterministic
+//! virtual-clock model — a single iteration IS the run (the nightly CI
+//! smoke invokes exactly this binary).
+
+use xufs::bench::run_transport;
+use xufs::bench::transport::{speedup, worst_op_p99};
+use xufs::config::XufsConfig;
+
+fn main() {
+    let cfg = XufsConfig::default();
+    let t = run_transport(&cfg);
+    t.print();
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("../BENCH_transport.json");
+    std::fs::write(&path, format!("{}\n", t.to_json())).expect("write BENCH_transport.json");
+    println!("wrote {}", path.display());
+    for profile in ["lossy", "asymmetric"] {
+        let s = speedup(&t, profile).expect("adaptive+pipelined row");
+        assert!(
+            s >= 1.3,
+            "{profile}: adaptive+pipelined must reach 1.3x static fault-on-miss, got {s}x"
+        );
+        println!("acceptance: {profile} {s}x >= 1.3x OK");
+    }
+    let p99 = worst_op_p99(&t).expect("op-latency column");
+    assert!(p99 > 0.0 && p99 < 1.0, "op latency must be nonzero sub-second, p99={p99}");
+    println!("acceptance: op-latency p99 {p99}s nonzero sub-second OK");
+}

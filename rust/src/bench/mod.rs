@@ -10,10 +10,12 @@ pub mod figures;
 pub mod read_fanout;
 pub mod report;
 pub mod scale;
+pub mod transport;
 
 pub use dedup::run_dedup;
 pub use failover::run_failover;
 pub use read_fanout::run_read_fanout;
+pub use transport::run_transport;
 pub use figures::{
     run_ablation_compound, run_ablation_consistency, run_ablation_delta, run_ablation_paging,
     run_ablation_prefetch, run_ablation_stripes, run_ablation_writeback, run_fig2_fig3, run_fig4,

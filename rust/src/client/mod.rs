@@ -65,6 +65,17 @@ pub trait ServerLink {
         expect_version: u64,
     ) -> Result<RangeImage, FsError>;
 
+    /// Advisory pipelined-readahead hint (transport v2, DESIGN.md
+    /// §2.12): the client expects to `fetch_range` these exact
+    /// coordinates soon, so the link may start the transfer now and
+    /// overlap it with the application's compute. Purely an
+    /// optimization — links are free to ignore it (the default), and a
+    /// later `fetch_range` must return identical bytes whether or not a
+    /// hint preceded it.
+    fn pipeline_hint(&mut self, path: &str, offset: u64, len: u64, expect_version: u64) {
+        let _ = (path, offset, len, expect_version);
+    }
+
     /// Parallel pre-fetch of small files (paths + sizes). Accounts the
     /// batched transfer time; files that failed are simply absent.
     fn prefetch(&mut self, files: &[(String, u64)]) -> Vec<FileImage>;

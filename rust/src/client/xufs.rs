@@ -851,6 +851,19 @@ impl<L: ServerLink> XufsClient<L> {
                             let now = self.clock.now();
                             self.cache.install_blocks(path, &image.extents, now)?;
                             self.metrics.add(names::FETCH_BYTES, bytes);
+                            // transport v2 (DESIGN.md §2.12): a sequential
+                            // scan will fault the NEXT same-sized extent
+                            // next — let the link start that transfer now
+                            // and overlap it with the app's compute. Pure
+                            // advisory: a wrong guess is dropped by the
+                            // link and the demand fault re-fetches.
+                            if self.cfg.transfer.pipeline {
+                                let next = foff + flen;
+                                let hlen = flen.min(size.saturating_sub(next));
+                                if hlen > 0 {
+                                    self.link.pipeline_hint(path, next, hlen, version);
+                                }
+                            }
                             break;
                         }
                         Err(FsError::Stale(_)) => {
@@ -1038,13 +1051,16 @@ impl<L: ServerLink> XufsClient<L> {
                 blocks.push((b as u32, data));
             }
             self.metrics.add(names::WRITEBACK_BYTES_SAVED, new_size.saturating_sub(dirty_bytes));
-            let op = MetaOp::WriteDelta {
+            let mut op = MetaOp::WriteDelta {
                 path: path.to_string(),
                 total_size: new_size,
                 base_version,
                 blocks,
                 digests: digests.clone(),
             };
+            if self.cfg.transfer.compress {
+                transfer::compress::compress_delta_op(&mut op, &self.metrics);
+            }
             (op, digests)
         } else {
             // full write: fault the undirtied base blocks in, then digest
@@ -1126,13 +1142,17 @@ impl<L: ServerLink> XufsClient<L> {
         if blocks.is_empty() {
             return Ok(());
         }
-        self.enqueue(MetaOp::WriteDelta {
+        let mut op = MetaOp::WriteDelta {
             path: t.to_string(),
             total_size: size,
             base_version: e.version,
             blocks,
             digests: e.digests.clone(),
-        })
+        };
+        if self.cfg.transfer.compress {
+            transfer::compress::compress_delta_op(&mut op, &self.metrics);
+        }
+        self.enqueue(op)
     }
 
     /// Is the cached copy usable for an open right now?
@@ -1373,7 +1393,7 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
         self.next_fd += 1;
         let pos = if flags.is_append() { self.logical_size(&p) } else { 0 };
         self.fds.insert(fd, OpenFile { path: p, pos, flags, shadow, wrote: false, localized });
-        self.metrics.observe(names::OP_LATENCY, self.clock.now().saturating_sub(t0).as_secs());
+        self.metrics.observe(names::OP_LATENCY, self.clock.now().saturating_sub(t0).as_secs_f64());
         Ok(Fd(fd))
     }
 
@@ -1529,7 +1549,7 @@ impl<L: ServerLink> Vfs for XufsClient<L> {
             let now = self.clock.now();
             let _ = self.cache.store_mut().unlink(&sh.path, now);
         }
-        self.metrics.observe(names::OP_LATENCY, self.clock.now().saturating_sub(t0).as_secs());
+        self.metrics.observe(names::OP_LATENCY, self.clock.now().saturating_sub(t0).as_secs_f64());
         Ok(())
     }
 

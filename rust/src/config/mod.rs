@@ -74,6 +74,51 @@ impl Default for StripeConfig {
     }
 }
 
+/// How the data plane picks its stripe count (transport v2,
+/// DESIGN.md §2.12).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum StripesMode {
+    /// The size-based static plan: `transfer::stripes_for` splits the
+    /// payload into `[stripe]`-sized shares up to `max_stripes`.
+    #[default]
+    Planned,
+    /// Force exactly this many stripes for every striped transfer
+    /// (clamped to `[1, stripe.max_stripes]`).
+    Fixed(usize),
+    /// Adaptive: a per-mount `transfer::AutoTuner` grows/shrinks the
+    /// count between extents from observed per-stream goodput.
+    Auto,
+}
+
+/// Transport-v2 knobs (`[transfer]`, DESIGN.md §2.12). All three
+/// features default off/static: the v1 data plane stays bit- and
+/// timing-identical unless a deployment opts in.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransferConfig {
+    /// Stripe-count policy (`stripes = auto` or an integer; absent =
+    /// the static size-based plan).
+    pub stripes: StripesMode,
+    /// Pipelined readahead: speculatively issue the next readahead
+    /// extent before the application blocks on it.
+    pub pipeline: bool,
+    /// Maximum speculative fetches in flight per mount.
+    pub pipeline_window: usize,
+    /// Delta-compress `WriteDelta` block payloads (RLE + rolling-hash
+    /// LZ; incompressible blocks ship in the legacy raw form).
+    pub compress: bool,
+}
+
+impl Default for TransferConfig {
+    fn default() -> Self {
+        TransferConfig {
+            stripes: StripesMode::Planned,
+            pipeline: false,
+            pipeline_window: 1,
+            compress: false,
+        }
+    }
+}
+
 /// Client cache-space parameters.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CacheConfig {
@@ -355,6 +400,7 @@ pub struct XufsConfig {
     pub replica: ReplicaConfig,
     pub chunkstore: ChunkstoreConfig,
     pub integrity: IntegrityConfig,
+    pub transfer: TransferConfig,
     /// Directory holding AOT HLO artifacts (empty => native digest engine).
     pub artifacts_dir: String,
     /// Deterministic seed for workloads / jitter.
@@ -457,6 +503,27 @@ impl XufsConfig {
                 "integrity.scrub_batch" => {
                     cfg.integrity.scrub_batch = value.as_usize()?.max(1)
                 }
+                "transfer.stripes" => {
+                    cfg.transfer.stripes = match value {
+                        TomlValue::Str(s) if s == "auto" => StripesMode::Auto,
+                        TomlValue::Str(s) => {
+                            return Err(TomlError::new(
+                                0,
+                                &format!(
+                                    "transfer.stripes takes an integer or \"auto\", got \"{s}\""
+                                ),
+                            ));
+                        }
+                        // a fixed count of 0 stripes cannot move bytes: clamped
+                        other => StripesMode::Fixed(other.as_usize()?.max(1)),
+                    }
+                }
+                "transfer.pipeline" => cfg.transfer.pipeline = value.as_bool()?,
+                "transfer.pipeline_window" => {
+                    // a zero window would silently disable pipelining: clamped
+                    cfg.transfer.pipeline_window = value.as_usize()?.max(1)
+                }
+                "transfer.compress" => cfg.transfer.compress = value.as_bool()?,
                 "artifacts_dir" => cfg.artifacts_dir = value.as_str()?.to_string(),
                 "seed" => cfg.seed = value.as_u64()?,
                 other => {
@@ -644,6 +711,32 @@ localized_dirs = "/scratch/out:/scratch/tmp"
         let c = XufsConfig::from_toml("[chunkstore]\nchunk_kib = 0\ngc_interval_ops = 0\n").unwrap();
         assert_eq!(c.chunkstore.chunk_kib, 1);
         assert_eq!(c.chunkstore.gc_interval_ops, 1);
+    }
+
+    #[test]
+    fn parse_transfer_keys() {
+        let text = "[transfer]\nstripes = \"auto\"\npipeline = true\n\
+                    pipeline_window = 3\ncompress = true\n";
+        let c = XufsConfig::from_toml(text).unwrap();
+        assert_eq!(c.transfer.stripes, StripesMode::Auto);
+        assert!(c.transfer.pipeline);
+        assert_eq!(c.transfer.pipeline_window, 3);
+        assert!(c.transfer.compress);
+        // static integer counts are still honored (clamped away from 0)
+        let c = XufsConfig::from_toml("[transfer]\nstripes = 6\n").unwrap();
+        assert_eq!(c.transfer.stripes, StripesMode::Fixed(6));
+        let c = XufsConfig::from_toml("[transfer]\nstripes = 0\n").unwrap();
+        assert_eq!(c.transfer.stripes, StripesMode::Fixed(1));
+        let c = XufsConfig::from_toml("[transfer]\npipeline_window = 0\n").unwrap();
+        assert_eq!(c.transfer.pipeline_window, 1);
+        // any other string is a typo, not a silent fallback
+        let err = XufsConfig::from_toml("[transfer]\nstripes = \"adaptive\"\n").unwrap_err();
+        assert!(format!("{err}").contains("\"auto\""));
+        // transport v2 is opt-in: the v1 data plane is the default
+        let d = XufsConfig::default().transfer;
+        assert_eq!(d.stripes, StripesMode::Planned);
+        assert!(!d.pipeline && !d.compress);
+        assert_eq!(d.pipeline_window, 1);
     }
 
     #[test]

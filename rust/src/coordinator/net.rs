@@ -28,7 +28,7 @@ use std::time::Duration;
 use crate::auth::{self, Authenticator, KeyPair};
 use crate::callback::NotifyChannel;
 use crate::client::{LinkError, ServerLink};
-use crate::config::{ServerConfig, XufsConfig};
+use crate::config::{ServerConfig, StripesMode, XufsConfig};
 use crate::homefs::FsError;
 use crate::metrics::{names, Metrics};
 use crate::proto::{
@@ -169,6 +169,25 @@ pub struct TcpLink {
     /// with code 112, which is exactly right for CLIENTS rotating past
     /// it but would strand the shipper that needs to talk to it.
     replication: bool,
+    /// Adaptive stripe tuner (transport v2, DESIGN.md §2.12), created
+    /// lazily on the first range fetch when `transfer.stripes = "auto"`.
+    tuner: Option<transfer::AutoTuner>,
+    /// Speculative pipelined-readahead fetches in flight (§2.12),
+    /// oldest first, bounded by `transfer.pipeline_window`.
+    hints: Vec<PipelinedHint>,
+}
+
+/// One speculative fetch started by a [`ServerLink::pipeline_hint`]
+/// (DESIGN.md §2.12): a worker thread pulling the hinted range over its
+/// own authenticated connection, concurrently with the application's
+/// compute. The matching demand fetch joins it; dropping the handle
+/// detaches the worker (its bytes arrive and go unused).
+struct PipelinedHint {
+    path: String,
+    offset: u64,
+    len: u64,
+    expect_version: u64,
+    handle: JoinHandle<Result<Vec<BlockExtent>, LinkError>>,
 }
 
 impl TcpLink {
@@ -211,6 +230,8 @@ impl TcpLink {
             root: root.to_string(),
             metrics,
             replication: false,
+            tuner: None,
+            hints: Vec::new(),
         };
         link.establish()?;
         Ok(link)
@@ -239,6 +260,8 @@ impl TcpLink {
             root: "/".to_string(),
             metrics,
             replication: true,
+            tuner: None,
+            hints: Vec::new(),
         };
         link.establish()?;
         Ok(link)
@@ -259,6 +282,7 @@ impl TcpLink {
     fn establish(&mut self) -> Result<(), FsError> {
         self.teardown_callback();
         self.control = None;
+        self.drop_hints();
         let n = self.addrs.len();
         let mut last = FsError::Disconnected;
         for k in 0..n {
@@ -331,6 +355,15 @@ impl TcpLink {
         self.callback_stop.store(true, Ordering::SeqCst);
         if let Some(t) = self.callback_thread.take() {
             let _ = t.join();
+        }
+    }
+
+    /// Abandon every speculative fetch in flight (reconnects, window
+    /// eviction): dropping the handles detaches the workers, and their
+    /// requested bytes are exactly what the waste metric counts.
+    fn drop_hints(&mut self) {
+        for h in self.hints.drain(..) {
+            self.metrics.add(names::PIPELINE_WASTED_BYTES, h.len);
         }
     }
 
@@ -477,13 +510,51 @@ impl ServerLink for TcpLink {
         len: u64,
         expect_version: u64,
     ) -> Result<RangeImage, FsError> {
+        // transport v2 (DESIGN.md §2.12): a speculative fetch already in
+        // flight for exactly these coordinates is joined instead of
+        // re-requested — the worker pulled the same pinned-version range
+        // over its own connection while the application computed
+        if let Some(i) = self.hints.iter().position(|h| {
+            h.path == path
+                && h.offset == offset
+                && h.len == len
+                && h.expect_version == expect_version
+        }) {
+            let hint = self.hints.remove(i);
+            if let Ok(Ok(mut extents)) = hint.handle.join() {
+                extents.sort_by_key(|x| x.index);
+                let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();
+                self.metrics.add(names::WAN_BYTES_RX, bytes);
+                self.metrics.incr(names::RANGE_FETCHES);
+                self.metrics.incr(names::PIPELINED_HITS);
+                return Ok(RangeImage { version: expect_version, extents });
+            }
+            // a failed speculation falls through to the demand fetch
+        }
+        // a hint for the same spot that does NOT match (the scan went
+        // elsewhere, or the version moved) is dead weight: count it
+        if let Some(i) = self.hints.iter().position(|h| h.path == path && h.offset == offset) {
+            let dead = self.hints.remove(i);
+            self.metrics.add(names::PIPELINE_WASTED_BYTES, dead.len);
+        }
         // block-align the range and stripe it exactly like a whole file
-        let plan = transfer::plan_range(offset, len, offset.saturating_add(len), &self.cfg.stripe);
+        let mut plan =
+            transfer::plan_range(offset, len, offset.saturating_add(len), &self.cfg.stripe);
+        match self.cfg.transfer.stripes {
+            StripesMode::Planned => {}
+            StripesMode::Fixed(n) => plan.stripes = n.clamp(1, self.cfg.stripe.max_stripes.max(1)),
+            StripesMode::Auto => {
+                let max = self.cfg.stripe.max_stripes.max(1);
+                plan.stripes =
+                    self.tuner.get_or_insert_with(|| transfer::AutoTuner::new(1, max)).stripes();
+            }
+        }
         let bb = self.cfg.stripe.min_block.max(1);
         self.metrics.incr(names::RANGE_FETCHES);
         if plan.len == 0 {
             return Ok(RangeImage { version: expect_version, extents: Vec::new() });
         }
+        let t0 = std::time::Instant::now();
         let shares = if plan.stripes <= 1 {
             vec![(plan.offset, plan.len)]
         } else {
@@ -554,8 +625,39 @@ impl ServerLink for TcpLink {
         }
         extents.sort_by_key(|x| x.index);
         let bytes: u64 = extents.iter().map(|x| x.data.len() as u64).sum();
+        // the tuner learns from real wall-clock goodput on this link
+        if let Some(t) = self.tuner.as_mut() {
+            t.observe(bytes, t0.elapsed().as_secs_f64(), &self.metrics);
+        }
         self.metrics.add(names::WAN_BYTES_RX, bytes);
         Ok(RangeImage { version: expect_version, extents })
+    }
+
+    fn pipeline_hint(&mut self, path: &str, offset: u64, len: u64, expect_version: u64) {
+        if !self.cfg.transfer.pipeline || len == 0 || self.control.is_none() {
+            return;
+        }
+        while self.hints.len() >= self.cfg.transfer.pipeline_window.max(1) {
+            let evicted = self.hints.remove(0);
+            self.metrics.add(names::PIPELINE_WASTED_BYTES, evicted.len);
+        }
+        // one connection, one stripe: the speculation's value is the
+        // overlap with application compute, not stripe parallelism — and
+        // a wrong guess then wasted only a single connection's work
+        let addr = self.addr();
+        let pair = self.pair.clone();
+        let p = path.to_string();
+        let bb = self.cfg.stripe.min_block.max(1);
+        let handle = std::thread::spawn(move || {
+            fetch_blocks_conn(addr, &pair, &p, offset, len, expect_version, bb)
+        });
+        self.hints.push(PipelinedHint {
+            path: path.to_string(),
+            offset,
+            len,
+            expect_version,
+            handle,
+        });
     }
 
     fn prefetch(&mut self, files: &[(String, u64)]) -> Vec<FileImage> {

@@ -15,14 +15,16 @@ use crate::auth::{self, Authenticator, KeyPair};
 use crate::callback::NotifyChannel;
 use crate::chunkstore::Digest;
 use crate::client::{ServerLink, XufsClient};
-use crate::config::XufsConfig;
+use crate::config::{StripesMode, XufsConfig};
 use crate::homefs::{FileStore, FsError};
 use crate::metrics::{names, Metrics};
 use crate::proto::{CompoundOp, FileImage, MetaOp, NotifyEvent, RangeImage, Request, Response};
 use crate::replica::Shipper;
 use crate::runtime::DigestEngine;
 use crate::server::{FileServer, Role};
-use crate::simnet::{Clock, FaultAction, FaultPlan, SimClock, StepOutcome, TransferKind, Wan};
+use crate::simnet::{
+    Clock, FaultAction, FaultPlan, SimClock, StepOutcome, TransferKind, VirtualTime, Wan,
+};
 use crate::transfer;
 use crate::vdisk::DiskModel;
 
@@ -68,6 +70,17 @@ impl SimWorld {
         // the fault matrix can run both substrates from one config.
         if let Ok(v) = std::env::var("XUFS_CHUNKSTORE") {
             cfg.chunkstore.enabled = !matches!(v.trim(), "0" | "false" | "off");
+        }
+        // CI pin (same pattern): XUFS_STRIPES=auto / <n> forces the
+        // transport's stripe mode, so the fault matrix can run the
+        // adaptive tuner (DESIGN.md §2.12) from an unchanged config.
+        if let Ok(v) = std::env::var("XUFS_STRIPES") {
+            let v = v.trim();
+            if v.eq_ignore_ascii_case("auto") {
+                cfg.transfer.stripes = StripesMode::Auto;
+            } else if let Ok(n) = v.parse::<usize>() {
+                cfg.transfer.stripes = StripesMode::Fixed(n.max(1));
+            }
         }
         let clock = SimClock::new();
         let metrics = Metrics::new();
@@ -164,6 +177,8 @@ impl SimWorld {
                 faults: self.faults.clone(),
                 replication_link: true,
                 read_pref: None,
+                tuner: None,
+                pipeline: Vec::new(),
             };
             self.shippers.push(Shipper::new(link, self.cfg.replica.ship_batch));
         }
@@ -349,6 +364,8 @@ impl SimWorld {
             faults: self.faults.clone(),
             replication_link: false,
             read_pref: None,
+            tuner: None,
+            pipeline: Vec::new(),
         };
         link.connect()?;
         Ok(XufsClient::new(
@@ -394,6 +411,8 @@ impl SimWorld {
             faults: self.faults.clone(),
             replication_link: false,
             read_pref: None,
+            tuner: None,
+            pipeline: Vec::new(),
         };
         link.connect()?;
         // the store is cloned only once the login succeeded — retrying
@@ -569,6 +588,32 @@ pub struct SimLink {
     /// (the fault explorer randomizes this per op to cover every
     /// replica). `None` = route to the lowest-RTT serving replica.
     read_pref: Option<usize>,
+    /// Adaptive stripe tuner (transport v2, DESIGN.md §2.12), created
+    /// lazily on the first transfer when `transfer.stripes = "auto"`.
+    tuner: Option<transfer::AutoTuner>,
+    /// Speculative pipelined-readahead transfers in flight (§2.12),
+    /// oldest first, bounded by `transfer.pipeline_window`.
+    pipeline: Vec<PipelinedFetch>,
+}
+
+/// One speculative transfer started by a [`ServerLink::pipeline_hint`]
+/// (DESIGN.md §2.12): the modeled WAN work starts at hint time without
+/// advancing the clock, so the matching demand fetch pays only the
+/// not-yet-elapsed tail — the analytic form of compute/transfer overlap.
+struct PipelinedFetch {
+    path: String,
+    offset: u64,
+    len: u64,
+    version: u64,
+    image: RangeImage,
+    payload: u64,
+    stripes: usize,
+    kind: TransferKind,
+    /// Modeled transfer duration — the tuner's goodput sample (a hit
+    /// never runs `Wan::transfer`, but the speculative transfer still
+    /// took this long at this stripe count).
+    secs: f64,
+    ready_at: VirtualTime,
 }
 
 impl SimLink {
@@ -664,6 +709,30 @@ impl SimLink {
         self.channel.disconnect();
         self.session = None;
         self.data_conns_warm = false;
+        self.drop_pipeline();
+    }
+
+    /// Stripe count for one transfer under `transfer.stripes`
+    /// (DESIGN.md §2.12): the static size-based plan, a fixed override,
+    /// or the adaptive tuner's current working count.
+    fn stripe_plan(&mut self, payload: u64) -> usize {
+        match self.cfg.transfer.stripes {
+            StripesMode::Planned => transfer::stripes_for(payload, &self.cfg.stripe),
+            StripesMode::Fixed(n) => n.clamp(1, self.cfg.stripe.max_stripes.max(1)),
+            StripesMode::Auto => {
+                let max = self.cfg.stripe.max_stripes.max(1);
+                self.tuner.get_or_insert_with(|| transfer::AutoTuner::new(1, max)).stripes()
+            }
+        }
+    }
+
+    /// Abandon every speculative transfer in flight (connection loss,
+    /// window eviction at the call sites): the bytes crossed the WAN for
+    /// nothing, which is exactly what the waste metric counts.
+    fn drop_pipeline(&mut self) {
+        for p in self.pipeline.drain(..) {
+            self.metrics.add(names::PIPELINE_WASTED_BYTES, p.image.bytes());
+        }
     }
 
     /// A code-112 "wrong endpoint" answer (standby/fenced node,
@@ -770,6 +839,7 @@ impl SimLink {
             self.channel.disconnect();
             self.session = None;
             self.data_conns_warm = false;
+            self.drop_pipeline();
         }
     }
 
@@ -896,6 +966,41 @@ impl ServerLink for SimLink {
             self.wan.rpc(&self.clock, 128, 0);
             return Err(FsError::Disconnected);
         }
+        // transport v2 (DESIGN.md §2.12): a speculative transfer already
+        // in flight for exactly these coordinates satisfies the fault
+        // directly — the client waits only for the not-yet-elapsed tail
+        // of the modeled transfer instead of paying it whole. The bytes
+        // are the same ones a demand fetch would have returned (the hint
+        // ran the same server handler at the same pinned version).
+        if let Some(i) = self.pipeline.iter().position(|p| {
+            p.path == path && p.offset == offset && p.len == len && p.version == expect_version
+        }) {
+            let hit = self.pipeline.remove(i);
+            // the serving node's disk read overlaps the transfer tail:
+            // charge it first, then join the transfer's completion
+            // instant (advance_to keeps whichever is later)
+            self.server().disk.io(&self.clock, hit.image.bytes());
+            self.clock.advance_to(hit.ready_at);
+            self.link_wan(self.active).account_transfer(hit.payload, hit.stripes, hit.kind);
+            // the speculative transfer is a goodput sample like any
+            // other — without it the tuner would go deaf the moment the
+            // pipeline starts covering every fault
+            if let Some(t) = self.tuner.as_mut() {
+                t.observe(hit.payload, hit.secs, &self.metrics);
+            }
+            self.metrics.add(names::WAN_BYTES_RX, hit.image.bytes());
+            self.metrics.incr(names::RANGE_FETCHES);
+            self.metrics.incr(names::PIPELINED_HITS);
+            return Ok(hit.image);
+        }
+        // a hint for the same spot that does NOT match (the scan went
+        // elsewhere, or the version moved) is dead weight: count it
+        if let Some(i) =
+            self.pipeline.iter().position(|p| p.path == path && p.offset == offset)
+        {
+            let dead = self.pipeline.remove(i);
+            self.metrics.add(names::PIPELINE_WASTED_BYTES, dead.image.bytes());
+        }
         let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
         // bounded-staleness fan-out (DESIGN.md §2.11): paged reads try
         // the closest serving replica; a refusal — 119 lagging, 118
@@ -932,7 +1037,7 @@ impl ServerLink for SimLink {
             Response::FileBlocks { version, extents } => {
                 let image = RangeImage { version, extents };
                 let payload = image.bytes() + 16 * image.extents.len() as u64 + 64;
-                let stripes = transfer::stripes_for(payload, &self.cfg.stripe);
+                let stripes = self.stripe_plan(payload);
                 let kind = if self.data_conns_warm {
                     TransferKind::WarmConnections
                 } else {
@@ -961,7 +1066,12 @@ impl ServerLink for SimLink {
                     wan.transfer(&self.clock, rest.max(1), stripes, TransferKind::NewConnections);
                     self.metrics.incr(names::RESUMED_FETCHES);
                 } else {
-                    wan.transfer(&self.clock, payload, stripes, kind);
+                    let dt = wan.transfer(&self.clock, payload, stripes, kind);
+                    // the tuner learns from clean transfers only — a torn
+                    // one's duration says nothing about the stripe count
+                    if let Some(t) = self.tuner.as_mut() {
+                        t.observe(payload, dt, &self.metrics);
+                    }
                 }
                 self.metrics.add(names::WAN_BYTES_RX, image.bytes());
                 self.metrics.incr(names::RANGE_FETCHES);
@@ -979,6 +1089,49 @@ impl ServerLink for SimLink {
             Response::Err { code: 118, msg } => Err(FsError::Corrupted(msg)),
             r => Err(FsError::Protocol(format!("unexpected range response {r:?}"))),
         }
+    }
+
+    fn pipeline_hint(&mut self, path: &str, offset: u64, len: u64, expect_version: u64) {
+        if !self.cfg.transfer.pipeline || len == 0 {
+            return;
+        }
+        // purely advisory — no fault-plane step, no clock advance: an
+        // unreachable server just means no speculation happens, and the
+        // later demand fault pays full price (and takes the fault step).
+        // Keeping the fault schedule untouched is what lets the 220-seed
+        // explorer run identically with the pipeline on or off.
+        if self.check_up().is_err() {
+            return;
+        }
+        let req = Request::FetchRange { path: path.to_string(), offset, len, expect_version };
+        let resp = self.server().handle(self.client_id, req, self.clock.now());
+        let Response::FileBlocks { version, extents } = resp else { return };
+        let image = RangeImage { version, extents };
+        let payload = image.bytes() + 16 * image.extents.len() as u64 + 64;
+        let stripes = self.stripe_plan(payload);
+        let kind = if self.data_conns_warm {
+            TransferKind::WarmConnections
+        } else {
+            TransferKind::NewConnections
+        };
+        self.data_conns_warm = true;
+        let t = self.link_wan(self.active).transfer_secs(payload, stripes, kind);
+        while self.pipeline.len() >= self.cfg.transfer.pipeline_window.max(1) {
+            let evicted = self.pipeline.remove(0);
+            self.metrics.add(names::PIPELINE_WASTED_BYTES, evicted.image.bytes());
+        }
+        self.pipeline.push(PipelinedFetch {
+            path: path.to_string(),
+            offset,
+            len,
+            version: expect_version,
+            image,
+            payload,
+            stripes,
+            kind,
+            secs: t,
+            ready_at: self.clock.now().add_secs(t),
+        });
     }
 
     fn prefetch(&mut self, files: &[(String, u64)]) -> Vec<FileImage> {
@@ -1343,6 +1496,95 @@ mod tests {
         // negative lookups from a complete listing are also local
         assert!(matches!(c.stat("/home/u/proj/nope"), Err(FsError::NotFound(_))));
         assert_eq!(w.wan.stats().rpcs, rpcs_before);
+    }
+
+    #[test]
+    fn op_latency_histogram_sees_sub_second_wan_ops() {
+        // regression for the zeroed-histogram bug: over a ~50 ms-RTT
+        // link an open costs a fractional second, and an integer-second
+        // latency reading records every such op as 0.0 — the histogram
+        // must land them in nonzero sub-second buckets instead
+        let mut cfg = XufsConfig::default();
+        cfg.wan.rtt_s = 0.05;
+        let mut w = SimWorld::new(cfg);
+        w.home(|s| {
+            s.home_mut().mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+            s.home_mut().write("/home/u/f.dat", &vec![3u8; 200_000], VirtualTime::ZERO).unwrap();
+        });
+        let mut c = w.mount("/home/u").unwrap();
+        c.scan_file("/home/u/f.dat", 4096).unwrap();
+        let m = c.metrics().clone();
+        assert!(m.histogram_count(names::OP_LATENCY) >= 2, "open + close both observe");
+        let mean = m.histogram_mean(names::OP_LATENCY).unwrap();
+        let p50 = m.histogram_quantile(names::OP_LATENCY, 0.5).unwrap();
+        let p99 = m.histogram_quantile(names::OP_LATENCY, 0.99).unwrap();
+        assert!(mean > 0.0 && mean < 1.0, "mean={mean}");
+        assert!(p50 > 0.0 && p50 < 1.0, "p50={p50}");
+        assert!(p99 > 0.0 && p99 < 1.0, "p99={p99}");
+    }
+
+    #[test]
+    fn pipelined_readahead_is_byte_identical_and_hits() {
+        // the speculative window is a pure latency optimization: a
+        // paged scan must return the same bytes with it on or off, and
+        // on a steady sequential scan most faults should be hits
+        let payload: Vec<u8> = (0..2_000_000u32).map(|i| (i * 31 % 251) as u8).collect();
+        let scan = |pipeline: bool| {
+            let mut cfg = XufsConfig::default();
+            // no readahead: every 64 KiB pread is its own demand fault,
+            // so the sequential scan exercises the hint/hit machinery
+            cfg.cache.readahead_blocks = 0;
+            cfg.transfer.pipeline = pipeline;
+            cfg.transfer.pipeline_window = 2;
+            let mut w = SimWorld::new(cfg);
+            w.home(|s| {
+                s.home_mut().mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+                s.home_mut().write("/home/u/seq.dat", &payload, VirtualTime::ZERO).unwrap();
+            });
+            let mut c = w.mount("/home/u").unwrap();
+            let fd = c.open("/home/u/seq.dat", OpenFlags::rdonly()).unwrap();
+            let mut got = Vec::new();
+            let mut buf = vec![0u8; 64 << 10];
+            let mut off = 0u64;
+            loop {
+                let n = c.pread(fd, &mut buf, off).unwrap();
+                if n == 0 {
+                    break;
+                }
+                got.extend_from_slice(&buf[..n]);
+                off += n as u64;
+            }
+            c.close(fd).unwrap();
+            let hits = c.metrics().counter(names::PIPELINED_HITS);
+            (got, hits)
+        };
+        let (plain, plain_hits) = scan(false);
+        let (piped, piped_hits) = scan(true);
+        assert_eq!(plain, payload);
+        assert_eq!(piped, payload, "pipelined scan must be byte-identical");
+        assert_eq!(plain_hits, 0);
+        assert!(piped_hits > 0, "sequential scan should consume its hints");
+    }
+
+    #[test]
+    fn auto_stripes_adapts_and_stays_correct() {
+        // stripes = auto only changes modeled transfer time, never the
+        // bytes: a large scan stays correct while the tuner makes at
+        // least one adjustment away from its 1-stripe starting point
+        let mut cfg = XufsConfig::default();
+        cfg.transfer.stripes = StripesMode::Auto;
+        let mut w = SimWorld::new(cfg);
+        w.home(|s| {
+            s.home_mut().mkdir_p("/home/u", VirtualTime::ZERO).unwrap();
+            s.home_mut().write("/home/u/big.dat", &vec![9u8; 20 << 20], VirtualTime::ZERO).unwrap();
+        });
+        let mut c = w.mount("/home/u").unwrap();
+        let n = c.scan_file("/home/u/big.dat", 1 << 20).unwrap();
+        assert_eq!(n, 20 << 20);
+        assert!(
+            c.metrics().counter(names::STRIPE_ADJUSTMENTS) > 0,
+            "the tuner should move off its initial stripe count"
+        );
     }
 
     #[test]

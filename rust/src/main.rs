@@ -3,7 +3,7 @@
 //!
 //! ```text
 //! xufs selftest                      quick end-to-end smoke (sim world)
-//! xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|dedup|fanout|ablations|all
+//! xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|dedup|fanout|transport|ablations|all
 //! xufs census [--seed N]             regenerate Table 1
 //! xufs serve [--config xufs.toml]    real TCP file server (demo home space)
 //! xufs config                        print the default config as TOML keys
@@ -80,7 +80,7 @@ xufs — wide-area distributed file system (XUFS reproduction)
 
 USAGE:
   xufs selftest                      end-to-end smoke test (sim world)
-  xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|dedup|fanout|ablations|all
+  xufs bench <exp> [--quick]         table1|fig2|fig3|fig4|fig5|table2|failover|dedup|fanout|transport|ablations|all
   xufs census [--seed N]             regenerate the Table 1 census
   xufs serve [--config xufs.toml]    run the TCP file server (demo home)
   xufs perf                          hot-path microbenchmarks (wall-clock)
@@ -133,6 +133,7 @@ fn run_bench(cfg: XufsConfig, which: &str, quick: bool) {
         "failover" => bench::run_failover(&cfg).print(),
         "dedup" => bench::run_dedup(&cfg).print(),
         "fanout" => bench::run_read_fanout(&cfg).print(),
+        "transport" => bench::run_transport(&cfg).print(),
         "fig5" | "table2" => {
             let gib = if quick { 256 << 20 } else { 1u64 << 30 };
             let (f, t) = bench::run_fig5_table2(&cfg, 5, gib);
@@ -293,6 +294,14 @@ prefetch_threads = 12
 prefetch_max_size_kib = 64
 prefetch_enabled = true
 delta_writeback = true
+
+[transfer]
+# stripes: \"auto\" = adaptive striping (goodput EWMA tuner), an integer
+# forces that many stripes, omitted = the size-based static plan
+# stripes = \"auto\"
+pipeline = false
+pipeline_window = 1
+compress = false
 
 [cache]
 capacity_gib = 1024

@@ -67,6 +67,10 @@ impl Metrics {
         self.inner.lock().unwrap().histograms.get(name).map(|h| h.count()).unwrap_or(0)
     }
 
+    pub fn histogram_quantile(&self, name: &str, q: f64) -> Option<f64> {
+        self.inner.lock().unwrap().histograms.get(name).map(|h| h.quantile(q))
+    }
+
     /// Reset everything (between bench runs).
     pub fn reset(&self) {
         let mut g = self.inner.lock().unwrap();
@@ -212,6 +216,20 @@ pub mod names {
     /// Op-log records dropped at recovery for a bad HMAC or torn frame.
     pub const METAQ_CORRUPT_RECORDS: &str = "metaq.corrupt_records";
     pub const OP_LATENCY: &str = "vfs.op_latency";
+    /// Fault-ins fully or partially covered by a speculative pipelined
+    /// readahead already in flight (transport v2, DESIGN.md §2.12).
+    pub const PIPELINED_HITS: &str = "transfer.pipelined_hits";
+    /// Bytes fetched speculatively by the readahead pipeline that no
+    /// demand fault ever consumed (dropped stale/mismatched hints).
+    pub const PIPELINE_WASTED_BYTES: &str = "transfer.pipeline_wasted_bytes";
+    /// Stripe-count changes made by the adaptive transfer tuner.
+    pub const STRIPE_ADJUSTMENTS: &str = "transfer.stripe_adjustments";
+    /// Range replies refused by client-side verification (digest
+    /// mismatch, or a digestless image for non-empty data).
+    pub const INTEGRITY_FAILURES: &str = "transfer.integrity_failures";
+    /// Bytes delta compression kept off the WAN (raw minus encoded,
+    /// summed over compressed `WriteDelta` blocks).
+    pub const COMPRESSED_BYTES_SAVED: &str = "writeback.compressed_bytes_saved";
 
     /// Every metric the system emits, with a one-line meaning. This is
     /// the source of truth behind `METRICS.md` (see [`metrics_md`]); a
@@ -273,6 +291,11 @@ pub mod names {
         (INTEGRITY_SCRUB_TICKS, "Background scrub slices run on the server op cadence."),
         (METAQ_CORRUPT_RECORDS, "Op-log records dropped at recovery for a bad HMAC or torn frame."),
         (OP_LATENCY, "Histogram of per-VFS-op latency, seconds."),
+        (PIPELINED_HITS, "Fault-ins covered by a speculative pipelined readahead already in flight."),
+        (PIPELINE_WASTED_BYTES, "Speculatively fetched bytes no demand fault ever consumed."),
+        (STRIPE_ADJUSTMENTS, "Stripe-count changes made by the adaptive transfer tuner."),
+        (INTEGRITY_FAILURES, "Range replies refused by client-side verification (bad or missing digests)."),
+        (COMPRESSED_BYTES_SAVED, "Bytes delta compression kept off the WAN (raw minus encoded payloads)."),
     ];
 
     /// Render [`ALL`] as the `METRICS.md` table body. `xufs metrics-md`

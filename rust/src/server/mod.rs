@@ -68,6 +68,7 @@ use crate::proto::{
 };
 use crate::runtime::DigestEngine;
 use crate::simnet::VirtualTime;
+use crate::transfer;
 use crate::util::path as vpath;
 use crate::vdisk::DiskModel;
 
@@ -2008,8 +2009,19 @@ impl FileServer {
             fs.read(path)?.to_vec()
         };
         data.resize(total_size as usize, 0);
-        for (idx, payload) in blocks {
-            let start = *idx as usize * self.block_bytes;
+        for (raw_idx, raw_payload) in blocks {
+            // transport v2 (DESIGN.md §2.12): a block index carrying the
+            // compression bit holds a flag-byte-framed payload; legacy
+            // raw blocks pass through decode_block untouched, so old and
+            // new clients share this one path
+            let Some((idx, payload)) =
+                transfer::compress::decode_block(*raw_idx, raw_payload, self.block_bytes)
+            else {
+                return Err(FsError::Invalid(format!(
+                    "delta block {raw_idx:#x} carries an undecodable compressed payload"
+                )));
+            };
+            let start = idx as usize * self.block_bytes;
             let end = (start + payload.len()).min(data.len());
             if start > data.len() {
                 return Err(FsError::Invalid(format!("delta block {idx} beyond file size")));
@@ -2368,6 +2380,43 @@ mod tests {
             t(2.0),
         );
         assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        assert_eq!(s.home().read("/home/user/b.dat").unwrap(), &expect[..]);
+    }
+
+    #[test]
+    fn compressed_delta_applies_byte_identically() {
+        let s = server();
+        let base = s.home().stat("/home/user/b.dat").unwrap().version;
+        let mut expect = s.home().read("/home/user/b.dat").unwrap().to_vec();
+        let blk = vec![0xCDu8; 65536];
+        expect[65536..131072].copy_from_slice(&blk);
+        let mut op = MetaOp::WriteDelta {
+            path: "/home/user/b.dat".into(),
+            total_size: 200_000,
+            base_version: base,
+            blocks: vec![(1, blk)],
+            digests: vec![],
+        };
+        transfer::compress::compress_delta_op(&mut op, &Metrics::new());
+        // the run block really was framed, so apply exercises the decoder
+        if let MetaOp::WriteDelta { blocks, .. } = &op {
+            assert_ne!(blocks[0].0 & transfer::compress::COMPRESSED_IDX_BIT, 0);
+            assert!(blocks[0].1.len() < 1000, "framed to {} bytes", blocks[0].1.len());
+        }
+        let r = s.handle(1, Request::Apply { seq: 1, op }, t(2.0));
+        assert!(matches!(r, Response::Applied { .. }), "{r:?}");
+        assert_eq!(s.home().read("/home/user/b.dat").unwrap(), &expect[..]);
+        // an undecodable compressed frame is refused, never applied
+        let v = s.home().stat("/home/user/b.dat").unwrap().version;
+        let bad = MetaOp::WriteDelta {
+            path: "/home/user/b.dat".into(),
+            total_size: 200_000,
+            base_version: v,
+            blocks: vec![(transfer::compress::COMPRESSED_IDX_BIT | 1, vec![99, 1, 2])],
+            digests: vec![],
+        };
+        let r = s.handle(1, Request::Apply { seq: 2, op: bad }, t(3.0));
+        assert!(matches!(r, Response::Err { .. }), "{r:?}");
         assert_eq!(s.home().read("/home/user/b.dat").unwrap(), &expect[..]);
     }
 

@@ -24,6 +24,14 @@ impl VirtualTime {
         self.0 as f64 / 1e9
     }
 
+    /// Fractional seconds, named like `Duration::as_secs_f64` so latency
+    /// call sites can't be confused with an integer-truncating getter
+    /// (the `vfs.op_latency` histogram takes fractional seconds — a
+    /// whole-second reading records every sub-second op as 0.0).
+    pub fn as_secs_f64(self) -> f64 {
+        self.as_secs()
+    }
+
     pub fn saturating_sub(self, other: VirtualTime) -> VirtualTime {
         VirtualTime(self.0.saturating_sub(other.0))
     }

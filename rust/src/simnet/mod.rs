@@ -24,7 +24,7 @@ mod wan;
 
 pub use clock::{Clock, RealClock, SimClock, VirtualTime};
 pub use fault::{CorruptArtifact, FaultAction, FaultEvent, FaultPlan, StepOutcome};
-pub use wan::{TransferKind, Wan, WanStats};
+pub use wan::{profile as wan_profile, TransferKind, Wan, WanStats, PROFILES as WAN_PROFILES};
 
 #[cfg(test)]
 mod tests {

@@ -5,6 +5,56 @@ use std::sync::Mutex;
 use crate::config::WanConfig;
 use crate::simnet::clock::{Clock, SimClock};
 
+/// The named heterogeneous link profiles (transport v2, DESIGN.md
+/// §2.12) — the transport bench sweeps all of them.
+pub const PROFILES: &[&str] = &["fat", "thin", "lossy", "asymmetric"];
+
+/// A named WAN profile as a full [`WanConfig`]:
+///
+/// - `fat`: metro-area fat pipe — short RTT, fast per-stream windows;
+///   striping barely matters, a sanity floor for the tuner.
+/// - `thin`: long-haul thin pipe — high RTT, modest per-stream rate
+///   under an ample aggregate (the paper's 2005 WAN, stretched).
+/// - `lossy`: loss-limited streams — tiny per-stream goodput (loss
+///   caps the congestion window) under a huge aggregate, slow-start
+///   heavy; parallel streams are the only lever (the GridFTP case).
+/// - `asymmetric`: decent per-stream rate but the aggregate binds at a
+///   handful of streams — over-striping buys nothing, overlap does.
+pub fn profile(name: &str) -> Option<WanConfig> {
+    let mib = 1024.0 * 1024.0;
+    match name {
+        "fat" => Some(WanConfig {
+            rtt_s: 0.004,
+            per_stream_bps: 40.0 * mib,
+            agg_bps: 10.0e9 / 8.0,
+            setup_rtts: 3.0,
+            slow_start_rtts: 2.0,
+        }),
+        "thin" => Some(WanConfig {
+            rtt_s: 0.120,
+            per_stream_bps: 1.0 * mib,
+            agg_bps: 1.0e9 / 8.0,
+            setup_rtts: 3.0,
+            slow_start_rtts: 4.0,
+        }),
+        "lossy" => Some(WanConfig {
+            rtt_s: 0.120,
+            per_stream_bps: 0.5 * mib,
+            agg_bps: 1.0e9 / 8.0,
+            setup_rtts: 3.0,
+            slow_start_rtts: 8.0,
+        }),
+        "asymmetric" => Some(WanConfig {
+            rtt_s: 0.060,
+            per_stream_bps: 4.0 * mib,
+            agg_bps: 16.0 * mib,
+            setup_rtts: 3.0,
+            slow_start_rtts: 4.0,
+        }),
+        _ => None,
+    }
+}
+
 /// Whether a transfer rides existing warm connections or must set up new
 /// ones (connection setup + slow-start RTTs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -94,6 +144,18 @@ impl Wan {
         }
         clock.advance_secs(t);
         t
+    }
+
+    /// Account a striped transfer WITHOUT advancing the clock: the
+    /// pipelined-readahead path (DESIGN.md §2.12) charges wall time
+    /// when the hint is issued/consumed, but the bytes still crossed
+    /// the link and belong in the stats.
+    pub fn account_transfer(&self, bytes: u64, streams: usize, kind: TransferKind) {
+        let mut s = self.stats.lock().unwrap();
+        s.bytes += bytes;
+        if kind == TransferKind::NewConnections {
+            s.connects += streams as u64;
+        }
     }
 
     /// A request/response RPC over a warm control connection: one RTT plus
@@ -214,6 +276,39 @@ mod tests {
         assert_eq!(s.connects, 2);
         w.reset_stats();
         assert_eq!(w.stats(), WanStats::default());
+    }
+
+    #[test]
+    fn named_profiles_cover_the_transport_matrix() {
+        for name in PROFILES {
+            let cfg = profile(name).expect(name);
+            assert!(cfg.rtt_s > 0.0 && cfg.per_stream_bps > 0.0 && cfg.agg_bps > 0.0);
+            // every profile admits at least one stripe at full rate
+            let w = Wan::new(cfg, SimClock::new());
+            assert!(w.stream_rate(1) > 0.0);
+        }
+        assert!(profile("dialup").is_none());
+        // the profiles are genuinely heterogeneous: striping 12-wide pays
+        // off big on lossy, barely on asymmetric (the aggregate binds)
+        let lossy = Wan::new(profile("lossy").unwrap(), SimClock::new());
+        let asym = Wan::new(profile("asymmetric").unwrap(), SimClock::new());
+        let gain = |w: &Wan| {
+            w.transfer_secs(8 << 20, 1, TransferKind::WarmConnections)
+                / w.transfer_secs(8 << 20, 12, TransferKind::WarmConnections)
+        };
+        assert!(gain(&lossy) > 8.0, "lossy gain {}", gain(&lossy));
+        assert!(gain(&asym) < 6.0, "asymmetric gain {}", gain(&asym));
+    }
+
+    #[test]
+    fn account_transfer_books_bytes_without_time() {
+        let (c, w) = wan();
+        let before = c.now();
+        w.account_transfer(4096, 3, TransferKind::NewConnections);
+        assert_eq!(c.now(), before, "accounting must not advance the clock");
+        let s = w.stats();
+        assert_eq!(s.bytes, 4096);
+        assert_eq!(s.connects, 3);
     }
 
     #[test]

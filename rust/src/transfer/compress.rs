@@ -1,0 +1,367 @@
+//! Delta-writeback payload compression (transport v2, DESIGN.md §2.12).
+//!
+//! `WriteDelta` block payloads are the WAN's hottest writeback bytes, and
+//! HPC outputs (logs, zero-padded records, append-mostly tables) compress
+//! well with two cheap in-tree codecs: byte run-length encoding and a
+//! rolling-hash LZ (greedy LZ77 over a 4-byte hash window). The wire
+//! framing is self-describing and backward compatible:
+//!
+//! - A block whose index has [`COMPRESSED_IDX_BIT`] clear carries raw
+//!   bytes — exactly the legacy frame, byte for byte.
+//! - A block whose index has the bit set carries `[flag, body…]` where
+//!   `flag` is [`FLAG_RAW`], [`FLAG_RLE`] or [`FLAG_LZ`].
+//!
+//! The compressor only frames a block when the framed form is strictly
+//! smaller than the raw payload, so incompressible (e.g. random) blocks
+//! ship in the legacy form with zero overhead and old decoders keep
+//! working on everything an old client sends. The decoder is bounded
+//! (`max_out`) and total: malformed input yields `None`, never a panic.
+
+use crate::metrics::{names, Metrics};
+use crate::proto::MetaOp;
+
+/// Set in a `WriteDelta` block index when the payload is compression-
+/// framed. Block indices are block numbers within a file (≤ file size /
+/// 64 KiB), so bit 31 is free by a wide margin.
+pub const COMPRESSED_IDX_BIT: u32 = 1 << 31;
+
+/// Framed payload is the raw bytes (used only by foreign encoders; our
+/// compressor never frames a block it couldn't shrink).
+pub const FLAG_RAW: u8 = 0;
+/// Framed payload is `(count, byte)` run pairs.
+pub const FLAG_RLE: u8 = 1;
+/// Framed payload is the rolling-hash LZ stream.
+pub const FLAG_LZ: u8 = 2;
+
+const MIN_MATCH: usize = 4;
+const HASH_BITS: u32 = 12;
+
+/// Compress `data`, returning the self-describing framed payload
+/// (`[flag, body…]`) only when it is strictly smaller than the raw
+/// bytes; `None` means "ship raw".
+pub fn compress(data: &[u8]) -> Option<Vec<u8>> {
+    if data.len() < 2 {
+        return None;
+    }
+    let rle = rle_encode(data);
+    let lz = lz_encode(data);
+    let (flag, body) = if rle.len() <= lz.len() { (FLAG_RLE, rle) } else { (FLAG_LZ, lz) };
+    if body.len() + 1 >= data.len() {
+        return None;
+    }
+    let mut framed = Vec::with_capacity(body.len() + 1);
+    framed.push(flag);
+    framed.extend_from_slice(&body);
+    Some(framed)
+}
+
+/// Decode a framed payload back to raw bytes. Total and bounded: any
+/// malformed frame, unknown flag, or output past `max_out` is `None`.
+pub fn decompress(framed: &[u8], max_out: usize) -> Option<Vec<u8>> {
+    let (&flag, body) = framed.split_first()?;
+    match flag {
+        FLAG_RAW => (body.len() <= max_out).then(|| body.to_vec()),
+        FLAG_RLE => rle_decode(body, max_out),
+        FLAG_LZ => lz_decode(body, max_out),
+        _ => None,
+    }
+}
+
+/// Compress the block payloads of a `WriteDelta` in place (no-op for
+/// every other op). Blocks that shrink get the framed payload and their
+/// index bit; the rest keep the legacy raw form.
+pub fn compress_delta_op(op: &mut MetaOp, metrics: &Metrics) {
+    let MetaOp::WriteDelta { blocks, .. } = op else {
+        return;
+    };
+    let mut saved = 0u64;
+    for (idx, payload) in blocks.iter_mut() {
+        if *idx & COMPRESSED_IDX_BIT != 0 {
+            continue; // already framed
+        }
+        if let Some(framed) = compress(payload) {
+            saved += (payload.len() - framed.len()) as u64;
+            *idx |= COMPRESSED_IDX_BIT;
+            *payload = framed;
+        }
+    }
+    if saved > 0 {
+        metrics.add(names::COMPRESSED_BYTES_SAVED, saved);
+    }
+}
+
+/// Decode one possibly-compressed `WriteDelta` block to its raw index
+/// and bytes. Uncompressed blocks borrow; framed ones decode (bounded by
+/// `max_block`). `None` means an undecodable frame — refuse the delta.
+pub fn decode_block<'a>(
+    idx: u32,
+    payload: &'a [u8],
+    max_block: usize,
+) -> Option<(u32, std::borrow::Cow<'a, [u8]>)> {
+    if idx & COMPRESSED_IDX_BIT == 0 {
+        return Some((idx, std::borrow::Cow::Borrowed(payload)));
+    }
+    let raw = decompress(payload, max_block)?;
+    Some((idx & !COMPRESSED_IDX_BIT, std::borrow::Cow::Owned(raw)))
+}
+
+// ---------------------------------------------------------------------
+// RLE: (count, byte) pairs, count 1..=255
+// ---------------------------------------------------------------------
+
+fn rle_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut i = 0;
+    while i < data.len() {
+        let b = data[i];
+        let mut run = 1usize;
+        while run < 255 && i + run < data.len() && data[i + run] == b {
+            run += 1;
+        }
+        out.push(run as u8);
+        out.push(b);
+        i += run;
+    }
+    out
+}
+
+fn rle_decode(body: &[u8], max_out: usize) -> Option<Vec<u8>> {
+    if body.len() % 2 != 0 {
+        return None;
+    }
+    let mut out = Vec::new();
+    for pair in body.chunks_exact(2) {
+        let (count, byte) = (pair[0] as usize, pair[1]);
+        if count == 0 || out.len() + count > max_out {
+            return None;
+        }
+        out.resize(out.len() + count, byte);
+    }
+    Some(out)
+}
+
+// ---------------------------------------------------------------------
+// Rolling-hash LZ: greedy LZ77, 4-byte hash window, 64 KiB distances.
+//
+// Command stream: a byte `c < 0x80` is a literal run of `c + 1` bytes
+// (which follow); `c >= 0x80` is a match of `(c & 0x7f) + MIN_MATCH`
+// bytes at the 2-byte little-endian distance that follows (1-based,
+// may overlap the output for repeated patterns). Long matches emit
+// consecutive match commands.
+// ---------------------------------------------------------------------
+
+fn hash4(data: &[u8], i: usize) -> usize {
+    let v = u32::from_le_bytes([data[i], data[i + 1], data[i + 2], data[i + 3]]);
+    (v.wrapping_mul(2654435761) >> (32 - HASH_BITS)) as usize
+}
+
+fn lz_encode(data: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut lit_start = 0usize;
+    let mut i = 0usize;
+    while i < data.len() {
+        let mut matched = 0usize;
+        let mut dist = 0usize;
+        if i + MIN_MATCH <= data.len() {
+            let h = hash4(data, i);
+            let cand = table[h];
+            table[h] = i;
+            if cand != usize::MAX && i - cand <= u16::MAX as usize {
+                let mut l = 0usize;
+                while i + l < data.len() && data[cand + l] == data[i + l] {
+                    l += 1;
+                }
+                if l >= MIN_MATCH {
+                    matched = l;
+                    dist = i - cand;
+                }
+            }
+        }
+        if matched == 0 {
+            i += 1;
+            continue;
+        }
+        flush_literals(&mut out, &data[lit_start..i]);
+        let mut rest = matched;
+        while rest >= MIN_MATCH {
+            let take = rest.min(0x7f + MIN_MATCH);
+            out.push(0x80 | (take - MIN_MATCH) as u8);
+            out.extend_from_slice(&(dist as u16).to_le_bytes());
+            rest -= take;
+        }
+        i += matched - rest;
+        lit_start = i;
+        // the match tail rejoins the literal run if too short to encode
+        i += rest;
+    }
+    flush_literals(&mut out, &data[lit_start..]);
+    out
+}
+
+fn flush_literals(out: &mut Vec<u8>, mut lits: &[u8]) {
+    while !lits.is_empty() {
+        let take = lits.len().min(0x80);
+        out.push((take - 1) as u8);
+        out.extend_from_slice(&lits[..take]);
+        lits = &lits[take..];
+    }
+}
+
+fn lz_decode(body: &[u8], max_out: usize) -> Option<Vec<u8>> {
+    let mut out = Vec::new();
+    let mut i = 0usize;
+    while i < body.len() {
+        let c = body[i];
+        i += 1;
+        if c < 0x80 {
+            let n = c as usize + 1;
+            if i + n > body.len() || out.len() + n > max_out {
+                return None;
+            }
+            out.extend_from_slice(&body[i..i + n]);
+            i += n;
+        } else {
+            let n = (c & 0x7f) as usize + MIN_MATCH;
+            if i + 2 > body.len() {
+                return None;
+            }
+            let dist = u16::from_le_bytes([body[i], body[i + 1]]) as usize;
+            i += 2;
+            if dist == 0 || dist > out.len() || out.len() + n > max_out {
+                return None;
+            }
+            // byte-wise copy: overlapping matches replicate the pattern
+            let start = out.len() - dist;
+            for k in 0..n {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+    }
+    Some(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::Rng;
+
+    #[test]
+    fn runs_compress_via_rle() {
+        let data = vec![0u8; 65536];
+        let framed = compress(&data).expect("a zero block must compress");
+        assert!(framed.len() < 600, "65536 zeros should RLE to ~515 bytes, got {}", framed.len());
+        assert_eq!(decompress(&framed, 65536).unwrap(), data);
+    }
+
+    #[test]
+    fn patterns_compress_via_lz() {
+        let pattern = b"xufs-record:0000000000|";
+        let mut data = Vec::new();
+        while data.len() < 48_000 {
+            data.extend_from_slice(pattern);
+        }
+        let framed = compress(&data).expect("repeated records must compress");
+        assert!(framed.len() * 4 < data.len(), "framed {} vs raw {}", framed.len(), data.len());
+        assert_eq!(decompress(&framed, 65536).unwrap(), data);
+    }
+
+    #[test]
+    fn random_data_ships_raw() {
+        let mut rng = Rng::new(0xC0);
+        let data: Vec<u8> = (0..65536).map(|_| rng.below(256) as u8).collect();
+        assert!(compress(&data).is_none(), "incompressible blocks keep the legacy frame");
+    }
+
+    #[test]
+    fn roundtrip_mixed_payloads() {
+        let mut rng = Rng::new(0xC1);
+        for case in 0..64 {
+            let len = 1 + rng.below(4096) as usize;
+            let data: Vec<u8> = match case % 4 {
+                0 => vec![case as u8; len],
+                1 => (0..len).map(|i| (i % 7) as u8).collect(),
+                2 => (0..len).map(|_| rng.below(4) as u8).collect(),
+                _ => (0..len).map(|_| rng.below(256) as u8).collect(),
+            };
+            if let Some(framed) = compress(&data) {
+                assert!(framed.len() < data.len(), "framed form must be strictly smaller");
+                assert_eq!(decompress(&framed, data.len()).unwrap(), data, "case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn decoder_is_total_and_bounded() {
+        let mut rng = Rng::new(0xC2);
+        for _ in 0..512 {
+            let len = rng.below(64) as usize;
+            let junk: Vec<u8> = (0..len).map(|_| rng.below(256) as u8).collect();
+            // never panics, and any accepted output respects the bound
+            if let Some(out) = decompress(&junk, 256) {
+                assert!(out.len() <= 256);
+            }
+        }
+        // a frame that decodes past the bound is refused, not truncated
+        let framed = compress(&vec![7u8; 1024]).unwrap();
+        assert!(decompress(&framed, 1023).is_none());
+        assert_eq!(decompress(&framed, 1024).unwrap().len(), 1024);
+    }
+
+    #[test]
+    fn tampered_frames_never_panic() {
+        let mut data = Vec::new();
+        for i in 0..2048u32 {
+            data.extend_from_slice(&(i / 3).to_le_bytes());
+        }
+        let framed = compress(&data).unwrap();
+        let mut rng = Rng::new(0xC3);
+        for _ in 0..256 {
+            let mut t = framed.clone();
+            let at = rng.below(t.len() as u64) as usize;
+            t[at] ^= 1 + rng.below(255) as u8;
+            let _ = decompress(&t, data.len()); // must not panic
+        }
+        for cut in 0..framed.len().min(32) {
+            let _ = decompress(&framed[..cut], data.len());
+        }
+    }
+
+    #[test]
+    fn delta_op_compression_is_selective_and_reversible() {
+        let m = Metrics::new();
+        let mut rng = Rng::new(0xC4);
+        let raw_runs = vec![3u8; 65536];
+        let raw_rand: Vec<u8> = (0..65536).map(|_| rng.below(256) as u8).collect();
+        let mut op = MetaOp::WriteDelta {
+            path: "/f".into(),
+            total_size: 131072,
+            base_version: 5,
+            blocks: vec![(0, raw_runs.clone()), (1, raw_rand.clone())],
+            digests: vec![1, 2],
+        };
+        compress_delta_op(&mut op, &m);
+        let MetaOp::WriteDelta { blocks, .. } = &op else { panic!() };
+        assert_eq!(blocks[0].0, COMPRESSED_IDX_BIT, "runs block framed");
+        assert_eq!(blocks[1].0, 1, "random block keeps the legacy frame");
+        assert_eq!(blocks[1].1, raw_rand);
+        assert!(m.counter(names::COMPRESSED_BYTES_SAVED) > 60_000);
+        let (idx, bytes) = decode_block(blocks[0].0, &blocks[0].1, 65536).unwrap();
+        assert_eq!(idx, 0);
+        assert_eq!(&bytes[..], &raw_runs[..]);
+        let (idx, bytes) = decode_block(blocks[1].0, &blocks[1].1, 65536).unwrap();
+        assert_eq!((idx, &bytes[..]), (1, &raw_rand[..]));
+        // wire accounting shrinks with the payload (that's the WAN win)
+        assert!(op.wire_bytes() < 66_000, "wire bytes {}", op.wire_bytes());
+    }
+
+    #[test]
+    fn decode_block_refuses_undecodable_frames() {
+        assert!(decode_block(COMPRESSED_IDX_BIT | 2, &[9, 1, 2, 3], 65536).is_none());
+        assert!(decode_block(COMPRESSED_IDX_BIT, &[], 65536).is_none());
+        // legacy raw block passes through untouched
+        let (idx, bytes) = decode_block(7, &[1, 2, 3], 65536).unwrap();
+        assert_eq!((idx, &bytes[..]), (7, &[1u8, 2, 3][..]));
+    }
+}

@@ -10,6 +10,11 @@
 //! per-block digests (via the AOT digest engine), and construction of the
 //! writeback op (full vs digest-delta) from a [`TransferPlan`].
 
+pub mod compress;
+mod tuner;
+
+pub use tuner::AutoTuner;
+
 use std::sync::Arc;
 
 use crate::config::StripeConfig;
@@ -71,7 +76,7 @@ pub fn verify_extents(
     for x in extents {
         let got = engine.digests(&x.data, block_bytes);
         if x.data.is_empty() || x.data.len() > block_bytes || got != [x.digest] {
-            metrics.incr("transfer.integrity_failures");
+            metrics.incr(names::INTEGRITY_FAILURES);
             return Err(FsError::Protocol(format!(
                 "integrity check failed for {path} block {} ({} bytes)",
                 x.index,
@@ -92,13 +97,24 @@ pub fn verify_image(
     metrics: &Metrics,
 ) -> Result<(), FsError> {
     if image.digests.is_empty() {
-        // server sent no digests (shouldn't happen with our server, but a
-        // foreign server could) — nothing to verify against
-        return Ok(());
+        if image.data.is_empty() {
+            // an empty file legitimately has no block digests
+            return Ok(());
+        }
+        // Our server always digests non-empty content, so a digestless
+        // image for real bytes is integrity laundering: a tampered reply
+        // that strips the digest vector must not skip verification
+        // (DESIGN.md §2.10 — same refusal class as the server's code 118).
+        metrics.incr(names::INTEGRITY_FAILURES);
+        return Err(FsError::Corrupted(format!(
+            "{} arrived without digests for {} bytes — refusing unverifiable content",
+            image.path,
+            image.data.len()
+        )));
     }
     let got = engine.digests(&image.data, block_bytes);
     if got != image.digests {
-        metrics.incr("transfer.integrity_failures");
+        metrics.incr(names::INTEGRITY_FAILURES);
         return Err(FsError::Protocol(format!(
             "integrity check failed for {} ({} blocks, {} mismatched)",
             image.path,
@@ -305,10 +321,19 @@ mod tests {
     }
 
     #[test]
-    fn verify_skips_digestless_images() {
+    fn verify_refuses_digestless_nonempty_images() {
+        // stripping the digest vector must not launder tampered bytes
+        // past verification: typed Corrupted refusal, counted
         let e = engine();
+        let m = Metrics::new();
         let image = FileImage { path: "/f".into(), version: 1, data: vec![1, 2, 3], digests: vec![] };
-        verify_image(&e, &image, 65536, &Metrics::new()).unwrap();
+        let err = verify_image(&e, &image, 65536, &m).unwrap_err();
+        assert!(matches!(err, FsError::Corrupted(_)), "{err:?}");
+        assert_eq!(m.counter(names::INTEGRITY_FAILURES), 1);
+        // an empty file legitimately has no digests
+        let empty = FileImage { path: "/e".into(), version: 1, data: vec![], digests: vec![] };
+        verify_image(&e, &empty, 65536, &m).unwrap();
+        assert_eq!(m.counter(names::INTEGRITY_FAILURES), 1);
     }
 
     #[test]

@@ -1,0 +1,178 @@
+//! Adaptive stripe-count tuner (transport v2, DESIGN.md §2.12).
+//!
+//! The paper stripes every large transfer across a static 12 TCP
+//! connections (§3.3); the GridFTP line shows the right parallel-stream
+//! count is a property of the path, not the config file. [`AutoTuner`]
+//! hill-climbs it per mount: each completed extent reports its payload
+//! and transfer time, the tuner folds the implied goodput into an EWMA,
+//! and the stripe count for the NEXT extent steps by one in whichever
+//! direction the last step helped — growing past a static plan on
+//! paths where per-stream throughput is the bottleneck (thin/lossy
+//! links) and backing off where aggregate capacity binds.
+
+use crate::metrics::{names, Metrics};
+
+/// Per-mount adaptive stripe-count controller. One-step hill climb with
+/// a deadband: goodput clearly up → keep stepping the same way; clearly
+/// down → reverse; flat → hold (converged).
+#[derive(Debug)]
+pub struct AutoTuner {
+    stripes: usize,
+    max_stripes: usize,
+    /// Goodput (bytes/sec) observed at the previous extent; 0 until the
+    /// first observation lands.
+    last_goodput: f64,
+    /// Smoothed goodput, reported for diagnostics.
+    ewma_goodput: f64,
+    dir: i8,
+    adjustments: u64,
+}
+
+/// Relative goodput change below which the tuner holds its count.
+const DEADBAND: f64 = 0.05;
+/// EWMA weight of the newest observation.
+const ALPHA: f64 = 0.5;
+
+impl AutoTuner {
+    pub fn new(initial: usize, max_stripes: usize) -> Self {
+        let max_stripes = max_stripes.max(1);
+        AutoTuner {
+            stripes: initial.clamp(1, max_stripes),
+            max_stripes,
+            last_goodput: 0.0,
+            ewma_goodput: 0.0,
+            dir: 1,
+            adjustments: 0,
+        }
+    }
+
+    /// The stripe count the next extent should use.
+    pub fn stripes(&self) -> usize {
+        self.stripes
+    }
+
+    /// Stripe-count changes made so far.
+    pub fn adjustments(&self) -> u64 {
+        self.adjustments
+    }
+
+    /// Smoothed goodput estimate, bytes/sec (0 before any observation).
+    pub fn goodput(&self) -> f64 {
+        self.ewma_goodput
+    }
+
+    /// Feed one completed extent: `bytes` moved in `secs` at the current
+    /// stripe count. Decides the count for the next extent.
+    pub fn observe(&mut self, bytes: u64, secs: f64, metrics: &Metrics) {
+        if bytes == 0 || secs <= 0.0 {
+            return;
+        }
+        let goodput = bytes as f64 / secs;
+        self.ewma_goodput = if self.ewma_goodput == 0.0 {
+            goodput
+        } else {
+            ALPHA * goodput + (1.0 - ALPHA) * self.ewma_goodput
+        };
+        let prev = self.last_goodput;
+        self.last_goodput = goodput;
+        if prev > 0.0 {
+            if goodput > prev * (1.0 + DEADBAND) {
+                // clearly better since the last step: keep climbing
+            } else if goodput < prev * (1.0 - DEADBAND) {
+                self.dir = -self.dir;
+            } else {
+                return; // flat: converged, hold the count
+            }
+        }
+        // first observation falls through: probe upward once so a flat
+        // link still gets explored
+        let next = (self.stripes as i64 + self.dir as i64).clamp(1, self.max_stripes as i64);
+        if next as usize != self.stripes {
+            self.stripes = next as usize;
+            self.adjustments += 1;
+            metrics.incr(names::STRIPE_ADJUSTMENTS);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::WanConfig;
+    use crate::simnet::{SimClock, TransferKind, Wan};
+
+    /// Drive the tuner against the analytic WAN model: each iteration
+    /// transfers one extent at the tuner's current count and feeds the
+    /// modeled duration back.
+    fn converge(wan: &Wan, extent: u64, iters: usize) -> AutoTuner {
+        let m = Metrics::new();
+        let mut t = AutoTuner::new(1, 12);
+        for _ in 0..iters {
+            let secs = wan.transfer_secs(extent, t.stripes(), TransferKind::WarmConnections);
+            t.observe(extent, secs, &m);
+        }
+        assert_eq!(t.adjustments(), m.counter(names::STRIPE_ADJUSTMENTS));
+        t
+    }
+
+    #[test]
+    fn converges_near_static_optimal_on_steady_symmetric_link() {
+        // aggregate = 4 per-stream shares: every count >= 4 moves the
+        // extent in the same time, so 4 is the static-optimal plan
+        let cfg = WanConfig {
+            rtt_s: 0.032,
+            per_stream_bps: 2.0 * 1024.0 * 1024.0,
+            agg_bps: 8.0 * 1024.0 * 1024.0,
+            setup_rtts: 3.0,
+            slow_start_rtts: 4.0,
+        };
+        let wan = Wan::new(cfg, SimClock::new());
+        let t = converge(&wan, 4 << 20, 32);
+        let optimal = 4i64;
+        assert!(
+            (t.stripes() as i64 - optimal).abs() <= 1,
+            "converged to {} stripes, static-optimal is {optimal}",
+            t.stripes()
+        );
+        assert!(t.goodput() > 0.0);
+    }
+
+    #[test]
+    fn grows_to_the_cap_when_per_stream_binds() {
+        // thin per-stream pipes, huge aggregate: more stripes always help
+        let cfg = WanConfig {
+            rtt_s: 0.032,
+            per_stream_bps: 512.0 * 1024.0,
+            agg_bps: 1e9,
+            setup_rtts: 3.0,
+            slow_start_rtts: 4.0,
+        };
+        let wan = Wan::new(cfg, SimClock::new());
+        let t = converge(&wan, 8 << 20, 32);
+        assert!(t.stripes() >= 11, "got {}", t.stripes());
+    }
+
+    #[test]
+    fn holds_inside_the_deadband_and_clamps() {
+        let m = Metrics::new();
+        let mut t = AutoTuner::new(6, 8);
+        assert_eq!(t.stripes(), 6);
+        t.observe(1 << 20, 1.0, &m); // first probe steps up
+        assert_eq!(t.stripes(), 7);
+        t.observe(1 << 20, 1.0, &m); // flat: hold
+        t.observe(1 << 20, 1.0, &m);
+        assert_eq!(t.stripes(), 7);
+        assert_eq!(t.adjustments(), 1);
+        // degenerate inputs are ignored
+        t.observe(0, 1.0, &m);
+        t.observe(1 << 20, 0.0, &m);
+        assert_eq!(t.stripes(), 7);
+        // a clear degradation reverses direction
+        t.observe(1 << 20, 2.0, &m);
+        assert_eq!(t.stripes(), 6);
+        // initial count clamps into [1, max]
+        assert_eq!(AutoTuner::new(0, 4).stripes(), 1);
+        assert_eq!(AutoTuner::new(99, 4).stripes(), 4);
+        assert_eq!(AutoTuner::new(3, 0).stripes(), 1, "max clamps to at least 1");
+    }
+}

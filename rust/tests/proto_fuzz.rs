@@ -456,6 +456,79 @@ fn streaming_decoder_torn_and_tampered_never_panic() {
     }
 }
 
+/// Compressed `WriteDelta` frames (DESIGN.md §2.12 delta-compressed
+/// writebacks): the in-place compressor must leave a fully canonical
+/// wire frame — roundtrip, strict-prefix rejection and re-encode all
+/// hold on the COMPRESSED form — and `decode_block` must recover the
+/// exact pre-compression bytes through the self-describing flag bit.
+/// Single-byte flips (the flag byte included) may be refused or decode
+/// to a different valid frame, but must never panic.
+#[test]
+fn compressed_write_deltas_roundtrip_decode_and_never_panic() {
+    use xufs::metrics::Metrics;
+    use xufs::transfer::compress::{compress_delta_op, decode_block};
+
+    let mut rng = Rng::new(0xF422_000B);
+    let metrics = Metrics::new();
+    for _ in 0..CASES {
+        // block shapes biased towards compressible payloads so the
+        // framed path is actually exercised (pure-random never shrinks);
+        // runs hit the RLE arm, repeated units the LZ arm
+        let blocks: Vec<(u32, Vec<u8>)> = (0..rng.below(4) + 1)
+            .map(|i| {
+                let data = match rng.below(3) {
+                    0 => vec![rng.below(256) as u8; (rng.below(64) + 8) as usize],
+                    1 => {
+                        let mut unit = rand_bytes(&mut rng, 6);
+                        unit.push(rng.below(256) as u8);
+                        let mut v = Vec::new();
+                        while v.len() < 48 {
+                            v.extend_from_slice(&unit);
+                        }
+                        v
+                    }
+                    _ => rand_bytes(&mut rng, 48),
+                };
+                (i as u32, data)
+            })
+            .collect();
+        let originals = blocks.clone();
+        let mut op = MetaOp::WriteDelta {
+            path: rand_string(&mut rng),
+            total_size: rng.below(1 << 30),
+            base_version: rng.below(1 << 20),
+            blocks,
+            digests: rand_digests(&mut rng),
+        };
+        compress_delta_op(&mut op, &metrics);
+        let b = op.encode();
+        assert_frame_properties(&op, &b, MetaOp::decode);
+        assert_eq!(MetaOp::decode(&b).unwrap().encode(), b, "re-encode must be byte-identical");
+        // every block — legacy raw and flag-bit framed alike — decodes
+        // back to exactly the pre-compression index and bytes
+        let MetaOp::WriteDelta { blocks, .. } = &op else { unreachable!() };
+        for ((idx, payload), (oidx, odata)) in blocks.iter().zip(&originals) {
+            let (di, dd) =
+                decode_block(*idx, payload, 1 << 20).expect("self-framed block decodes");
+            assert_eq!(di, *oidx, "flag bit must strip back to the plain index");
+            assert_eq!(dd.as_ref(), &odata[..], "decoded bytes differ from pre-compression");
+        }
+        // tampered: one flipped byte anywhere in the wire frame
+        let mut bad = b.clone();
+        let at = rng.below(bad.len() as u64) as usize;
+        bad[at] ^= (rng.below(255) + 1) as u8;
+        if let Ok(back) = MetaOp::decode(&bad) {
+            assert_eq!(MetaOp::decode(&back.encode()).unwrap(), back);
+            if let MetaOp::WriteDelta { blocks, .. } = &back {
+                for (idx, payload) in blocks {
+                    // may refuse (None) — must never panic
+                    let _ = decode_block(*idx, payload, 1 << 20);
+                }
+            }
+        }
+    }
+}
+
 /// Directed corruption of the §2.8 chunk-reference blob: a `WriteRef`
 /// whose digest blob is not a whole number of 32-byte digests must be
 /// REJECTED (never panic, never round down), and single-byte flips

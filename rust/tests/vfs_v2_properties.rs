@@ -208,6 +208,62 @@ fn prop_paged_pread_equals_whole_file_scan() {
     });
 }
 
+/// Pipelined readahead (DESIGN.md §2.12) must be invisible to the data
+/// plane: a client with speculative pipelining enabled — whatever
+/// block/readahead geometry and whatever hint hit/eviction/dead-hint
+/// pattern the run produces — returns byte-identical content for random
+/// positional reads and a full sequential scan.
+#[test]
+fn prop_pipelined_readahead_is_byte_identical() {
+    prop::check(15, |rng, size| {
+        let mut cfg = XufsConfig::default();
+        cfg.cache.readahead_blocks = rng.below(3);
+        cfg.transfer.pipeline = true;
+        cfg.transfer.pipeline_window = (rng.below(3) + 1) as usize;
+        let mut world = SimWorld::new(cfg);
+        world.home(|s| {
+            s.home_mut().mkdir_p("/home/u", t(0.0)).unwrap();
+        });
+        let len = 3 * 64 * 1024 + rng.below((size as u64 + 1) * 4096).min(5 * 64 * 1024) + 17;
+        let mut content = vec![0u8; len as usize];
+        rng.fill_bytes(&mut content);
+        world.home(|s| s.home_mut().write("/home/u/blob", &content, t(0.0)).unwrap());
+
+        let mut c = world.mount("/home/u").map_err(|e| e.to_string())?;
+        let fd = c.open("/home/u/blob", OpenFlags::rdonly()).map_err(|e| e.to_string())?;
+        for _ in 0..6 {
+            let off = rng.below(len + 8192);
+            let want = rng.range(1, 3 * 64 * 1024) as usize;
+            let mut buf = vec![0u8; want];
+            let n = c.pread(fd, &mut buf, off).map_err(|e| e.to_string())?;
+            let expect: &[u8] = if (off as usize) < content.len() {
+                &content[off as usize..(off as usize + want).min(content.len())]
+            } else {
+                &[]
+            };
+            prop_assert_eq!(n, expect.len());
+            prop_assert!(&buf[..n] == expect, "pipelined pread mismatch at {off}");
+        }
+        let mut scanned = Vec::new();
+        let mut chunk = vec![0u8; 50_000];
+        loop {
+            let n = c.read(fd, &mut chunk).map_err(|e| e.to_string())?;
+            if n == 0 {
+                break;
+            }
+            scanned.extend_from_slice(&chunk[..n]);
+        }
+        c.close(fd).map_err(|e| e.to_string())?;
+        prop_assert_eq!(scanned.len(), content.len());
+        prop_assert!(scanned == content, "pipelined scan does not match home content");
+        prop_assert!(
+            c.metrics().counter(names::RANGE_FETCHES) > 0,
+            "pipelined client must still use range fetches"
+        );
+        Ok(())
+    });
+}
+
 #[test]
 fn pread_leaves_cursor_for_sequential_read() {
     let mut l = local();
